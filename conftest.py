@@ -1,0 +1,11 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from here.
+
+The python package root is `python/` (build-time only); running pytest
+from the repository root needs it on sys.path so `compile.*` and
+`tests.*` resolve.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

@@ -1,0 +1,18 @@
+use immsched::report::figures::*;
+use immsched::accel::PlatformKind;
+use immsched::scheduler::*;
+use immsched::workload::WorkloadClass;
+fn main() {
+    let params = FigureParams::default();
+    for (fw, class) in [(FrameworkKind::Prema, WorkloadClass::Simple), (FrameworkKind::ImmSched, WorkloadClass::Complex)] {
+        let res = run_cell(PlatformKind::Edge, class, fw, 100.0, &params);
+        println!("=== {:?} {:?}: {} records", fw, class, res.records.len());
+        for r in res.urgent() {
+            println!("  urgent id={} model={:?} arr={:.4} sched={:.6} start={:?} done={:?} dl={:?} met={}",
+                r.id, r.model, r.arrival, r.sched_seconds, r.started.map(|x| (x*1e3).round()/1e3), r.completed.map(|x| (x*1e3).round()/1e3), r.deadline.map(|x| (x*1e3).round()/1e3), r.deadline_met());
+        }
+        let bg_done = res.records.iter().filter(|r| r.priority==Priority::Background && r.completed.is_some()).count();
+        let bg = res.records.iter().filter(|r| r.priority==Priority::Background).count();
+        println!("  background {}/{} completed", bg_done, bg);
+    }
+}

@@ -1,0 +1,41 @@
+//! Regenerate every table and figure of the paper's evaluation in one
+//! run (Tables 1-2, Figs. 2a, 2b, 6, 7, 8), writing CSVs to `reports/`.
+//!
+//! Run: `cargo run --release --example paper_figures`
+//! (the per-figure `cargo bench` harnesses add timing around the same
+//! code paths; see rust/benches/.)
+
+use immsched::report::{self, figures};
+
+fn main() -> anyhow::Result<()> {
+    let params = figures::FigureParams::default();
+
+    println!(">>> Table 1/2");
+    report::emit(&figures::table1(), "table1_capabilities")?;
+    report::emit(&figures::table2(), "table2_platforms")?;
+
+    println!(">>> Fig 2a (CPU-serial scheduling overhead)");
+    report::emit(&figures::fig2a(&params), "fig2a_profiling")?;
+
+    println!(">>> Fig 2b (continuous-relaxation stability)");
+    let (t2b, xs, series) = figures::fig2b(&params);
+    report::emit(&t2b, "fig2b_stability")?;
+    report::emit_series(
+        "fig2b_traces",
+        "step",
+        &["relaxed", "discrete"],
+        &xs,
+        &series,
+    )?;
+
+    println!(">>> Figs 6+8 grid (36 simulations)");
+    let grid = figures::run_grid(&params);
+    report::emit(&figures::fig6(&grid), "fig6_speedup")?;
+    report::emit(&figures::fig8(&grid), "fig8_energy")?;
+
+    println!(">>> Fig 7 (LBT sweep — the slow one)");
+    report::emit(&figures::fig7(&params), "fig7_lbt")?;
+
+    println!("all figures regenerated under reports/");
+    Ok(())
+}

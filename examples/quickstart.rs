@@ -1,0 +1,79 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. build a DNN workload and tile it (Layer Concatenate-and-Split),
+//! 2. extract the preemptible target graph of the Edge platform,
+//! 3. serve one urgent-task interrupt through the coordinator (PJRT
+//!    epoch artifact if built, native quantized matcher otherwise),
+//! 4. run a short open-ended simulation and print the summary.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use immsched::accel::{build_target_graph, Platform};
+use immsched::coordinator::CoordinatorHandle;
+use immsched::matcher::{build_mask, PsoConfig};
+use immsched::scheduler::{build_trace, metrics, SimConfig, Simulator, TraceConfig};
+use immsched::util::table::fmt_time;
+use immsched::workload::{build_model, tile_layer_graph, ModelId, TilingConfig};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. workload -> tile DAG (the matcher's query graph) ------------
+    let model = ModelId::MobileNetV2;
+    let graph = build_model(model);
+    let tiles = tile_layer_graph(&graph, TilingConfig::default());
+    println!(
+        "{}: {} layers, {:.2} GMACs -> {} tiles in {} segments",
+        model.name(),
+        graph.len(),
+        graph.total_macs() as f64 / 1e9,
+        tiles.len(),
+        tiles.num_segments
+    );
+
+    // --- 2. platform -> preemptible target graph ------------------------
+    let platform = Platform::edge();
+    let preemptible = vec![true; platform.engines]; // everything idle
+    let (target, vertex_engine) = build_target_graph(&platform, &preemptible);
+    println!(
+        "{}: {} engines, target graph {} vertices / {} edges",
+        platform.kind.name(),
+        platform.engines,
+        target.len(),
+        target.edge_count()
+    );
+
+    // --- 3. one interrupt through the coordinator -----------------------
+    let mask = build_mask(&tiles.dag, &target);
+    let coordinator = CoordinatorHandle::spawn(PsoConfig::default())?;
+    let t0 = std::time::Instant::now();
+    let resp = coordinator.match_blocking(mask, tiles.dag.adjacency(), target.adjacency())?;
+    println!(
+        "interrupt served in {} via {}: {} feasible mapping(s), best fitness {:.3}",
+        fmt_time(t0.elapsed().as_secs_f64()),
+        if resp.used_pjrt { "PJRT artifact" } else { "native fallback" },
+        resp.mappings.len(),
+        resp.best_fitness
+    );
+    if let Some(mapping) = resp.mappings.first() {
+        let pairs: Vec<String> = mapping
+            .iter()
+            .enumerate()
+            .filter_map(|(tile, &v)| v.map(|v| format!("t{tile}→e{}", vertex_engine[v])))
+            .collect();
+        println!("mapping: {}", pairs.join(" "));
+    }
+
+    // --- 4. a short open-ended simulation --------------------------------
+    let trace_cfg = TraceConfig { horizon: 0.02, arrival_rate: 100.0, ..Default::default() };
+    let tasks = build_trace(&trace_cfg, &platform);
+    let mut sim = Simulator::new(SimConfig::default());
+    let res = sim.run(tasks, trace_cfg.horizon);
+    let s = metrics::summarize(&res);
+    println!(
+        "simulated {} tasks: {} completed, urgent deadline rate {:.0}%, {:.2} mJ total",
+        res.records.len(),
+        s.completed,
+        s.deadline_rate * 100.0,
+        s.energy_j * 1e3
+    );
+    Ok(())
+}

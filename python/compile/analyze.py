@@ -1,0 +1,101 @@
+"""L2 profiling: HLO cost analysis + VMEM/MXU estimates per size class.
+
+The performance deliverable for L1/L2 (DESIGN.md §8): interpret-mode
+wallclock is CPU-numpy and NOT a TPU proxy, so the optimization loop
+works on *structural* metrics:
+
+  * XLA's HLO cost analysis (flops / bytes accessed / peak memory) of
+    the lowered epoch — catches redundant recomputation and fusion
+    regressions between edits;
+  * the analytic VMEM footprint of one particle-step working set — must
+    stay under a TPU core's ~16 MiB;
+  * the MXU utilization bound: fitness matmul FLOPs over total FLOPs
+    (the fraction of the epoch that can run on the systolic array).
+
+Usage:  cd python && python -m compile.analyze [--classes small ...]
+Writes reports/l2_cost_analysis.csv and prints the table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from .model import SIZE_CLASSES, epoch_fn
+
+
+def cost_analysis(n, m, particles, k_steps):
+    """Compile the epoch and pull XLA's cost analysis."""
+    fn, args = epoch_fn(n, m, particles, k_steps)
+    compiled = jax.jit(fn).lower(*args).compile()
+    # jax >= 0.4 returns a dict (or list of dicts) of named costs
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca or {}
+
+
+def vmem_footprint_bytes(n, m):
+    """One particle-step working set (DESIGN.md §8), f32."""
+    per_particle = 3 * n * m  # S, V, S_local
+    shared = 3 * n * m + n * n + m * m  # S*, S̄, Mask, Q, G
+    randoms = 3 * n * m
+    return 4 * (per_particle + shared + randoms)
+
+
+def mxu_fraction(n, m, particles, k_steps):
+    """FLOPs on the MXU (fitness matmuls) / total epoch FLOPs."""
+    matmul = 2 * (n * m * m + n * n * m)  # S·G and (SG)·Sᵀ, 2 flops/MAC
+    eltwise = 14 * n * m  # velocity(8) + position/clip(2) + mask(1) + renorm(3)
+    total = matmul + eltwise
+    return matmul / total, particles * k_steps * total
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--classes", nargs="*", default=list(SIZE_CLASSES))
+    parser.add_argument("--out", default="../reports/l2_cost_analysis.csv")
+    ns = parser.parse_args()
+
+    rows = []
+    for name in ns.classes:
+        n, m, particles, k_steps = SIZE_CLASSES[name]
+        ca = cost_analysis(n, m, particles, k_steps)
+        flops = ca.get("flops", float("nan"))
+        bytes_accessed = ca.get("bytes accessed", float("nan"))
+        vmem = vmem_footprint_bytes(n, m)
+        frac, analytic_flops = mxu_fraction(n, m, particles, k_steps)
+        rows.append(
+            {
+                "class": name,
+                "n": n,
+                "m": m,
+                "particles": particles,
+                "k": k_steps,
+                "xla_flops": flops,
+                "xla_bytes": bytes_accessed,
+                "analytic_flops": analytic_flops,
+                "vmem_step_bytes": vmem,
+                "vmem_frac_of_16MiB": vmem / (16 * 1024 * 1024),
+                "mxu_flop_fraction": frac,
+            }
+        )
+        print(
+            f"{name:8s} n={n:3d} m={m:3d}  xla_flops={flops:.3e}  "
+            f"vmem/step={vmem / 1024:.1f} KiB ({vmem / (16 * 2**20) * 100:.2f}% of 16 MiB)  "
+            f"mxu_frac={frac:.3f}"
+        )
+
+    os.makedirs(os.path.dirname(ns.out), exist_ok=True)
+    with open(ns.out, "w") as f:
+        cols = list(rows[0].keys())
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in cols) + "\n")
+    print(f"wrote {ns.out}")
+
+
+if __name__ == "__main__":
+    main()

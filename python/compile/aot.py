@@ -1,0 +1,72 @@
+"""AOT: lower the L2 epoch to HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile()``/``.serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md and gen_hlo.py.
+
+Outputs (per size class in model.SIZE_CLASSES):
+    artifacts/pso_epoch_<name>.hlo.txt
+plus a manifest the rust artifact registry parses:
+    artifacts/manifest.txt   lines: "<name> <n> <m> <particles> <k_steps>"
+
+Run via ``make artifacts`` (no-op when inputs unchanged).  Python never
+runs after this point; the rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import SIZE_CLASSES, epoch_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_size_class(name: str, n: int, m: int, particles: int, k_steps: int) -> str:
+    fn, args = epoch_fn(n, m, particles, k_steps)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--classes",
+        nargs="*",
+        default=list(SIZE_CLASSES),
+        help="size classes to lower (default: all)",
+    )
+    ns = parser.parse_args()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    manifest_lines = []
+    for name in ns.classes:
+        n, m, particles, k_steps = SIZE_CLASSES[name]
+        text = lower_size_class(name, n, m, particles, k_steps)
+        path = os.path.join(ns.out_dir, f"pso_epoch_{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {n} {m} {particles} {k_steps}")
+        print(f"wrote {path} ({len(text)} chars)  n={n} m={m} N={particles} K={k_steps}")
+
+    with open(os.path.join(ns.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {ns.out_dir}/manifest.txt ({len(manifest_lines)} classes)")
+
+
+if __name__ == "__main__":
+    main()

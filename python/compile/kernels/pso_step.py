@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: fused PSO step for parallel subgraph matching.
+
+One grid step = one particle = one accelerator "engine" (paper §3.3: the
+multi-particle optimizer maps particles onto distinct engines).  Each grid
+step pulls its particle's working set — S, V, S_local plus the shared
+S*, S̄, Mask, Q, G and the per-step randoms — into VMEM via BlockSpec,
+then fuses the whole Algorithm-1 inner body:
+
+    velocity  → position(clip) → mask ⊙ → row-renorm (reciprocal-mult)
+    → edge-preserving fitness  −‖Q − S G Sᵀ‖²
+
+into a single kernel so nothing round-trips to HBM between sub-steps.
+
+TPU adaptation notes (DESIGN.md §3):
+  * the particle axis is the Pallas *grid*, the analogue of the paper's
+    engine-parallel dispatch;
+  * both matmuls (S·G and (SG)·Sᵀ) hit the MXU with m as the lane
+    dimension — for the "large" size class m = 128, MXU-native;
+  * row normalization is reciprocal-multiply, matching the paper's
+    divider-free PE modification (§3.4).
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against kernels/ref.py and the
+real-TPU performance story is estimated analytically (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ROW_EPS
+
+
+def _pso_step_kernel(
+    # per-particle blocks (1, n, m)
+    s_ref,
+    v_ref,
+    s_local_ref,
+    r1_ref,
+    r2_ref,
+    r3_ref,
+    # shared blocks
+    s_star_ref,  # (n, m)
+    s_bar_ref,  # (n, m)
+    mask_ref,  # (n, m)
+    q_ref,  # (n, n)
+    g_ref,  # (m, m)
+    coef_ref,  # (4,) = [w, c1, c2, c3]
+    # outputs
+    s_out_ref,  # (1, n, m)
+    v_out_ref,  # (1, n, m)
+    f_out_ref,  # (1,)
+):
+    """Fused Algorithm-1 inner body for a single particle."""
+    s = s_ref[0]
+    v = v_ref[0]
+    s_local = s_local_ref[0]
+    r1, r2, r3 = r1_ref[0], r2_ref[0], r3_ref[0]
+    s_star = s_star_ref[...]
+    s_bar = s_bar_ref[...]
+    mask = mask_ref[...]
+    q = q_ref[...]
+    g = g_ref[...]
+    w = coef_ref[0]
+    c1 = coef_ref[1]
+    c2 = coef_ref[2]
+    c3 = coef_ref[3]
+
+    # -- velocity (line 8) ---------------------------------------------------
+    v_new = (
+        w * v
+        + c1 * r1 * (s_local - s)
+        + c2 * r2 * (s_star - s)
+        + c3 * r3 * (s_bar - s)
+    )
+
+    # -- position + clip (line 9) --------------------------------------------
+    s_new = jnp.clip(s + v_new, 0.0, 1.0)
+
+    # -- compatibility mask (line 10) ----------------------------------------
+    s_new = s_new * mask
+
+    # -- row renormalization via reciprocal multiply (line 11, §3.4) ---------
+    row_sum = jnp.sum(s_new, axis=-1, keepdims=True)
+    recip = jnp.where(row_sum > ROW_EPS, 1.0 / (row_sum + ROW_EPS), 0.0)
+    s_new = s_new * recip
+
+    # -- edge-preserving fitness (line 21): both matmuls on the MXU ----------
+    sg = jnp.dot(s_new, g, preferred_element_type=jnp.float32)  # (n, m)
+    sgst = jnp.dot(sg, s_new.T, preferred_element_type=jnp.float32)  # (n, n)
+    err = q - sgst
+    fit = -jnp.sum(err * err)
+
+    s_out_ref[0] = s_new
+    v_out_ref[0] = v_new
+    f_out_ref[0] = fit
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pso_step(s, v, s_local, s_star, s_bar, mask, q, g, r1, r2, r3, coefs):
+    """Run the fused PSO step for all particles.
+
+    Args:
+      s, v, s_local, r1, r2, r3: (N, n, m) f32.
+      s_star, s_bar, mask: (n, m) f32.
+      q: (n, n) f32 binary.  g: (m, m) f32 binary.
+      coefs: (4,) f32 = [w, c1, c2, c3].
+
+    Returns:
+      (s', v', f') with shapes ((N,n,m), (N,n,m), (N,)).
+    """
+    n_particles, n, m = s.shape
+    per_particle = pl.BlockSpec((1, n, m), lambda p: (p, 0, 0))
+    shared_nm = pl.BlockSpec((n, m), lambda p: (0, 0))
+    shared_nn = pl.BlockSpec((n, n), lambda p: (0, 0))
+    shared_mm = pl.BlockSpec((m, m), lambda p: (0, 0))
+    shared_c = pl.BlockSpec((4,), lambda p: (0,))
+
+    return pl.pallas_call(
+        _pso_step_kernel,
+        grid=(n_particles,),
+        in_specs=[
+            per_particle,  # s
+            per_particle,  # v
+            per_particle,  # s_local
+            per_particle,  # r1
+            per_particle,  # r2
+            per_particle,  # r3
+            shared_nm,  # s_star
+            shared_nm,  # s_bar
+            shared_nm,  # mask
+            shared_nn,  # q
+            shared_mm,  # g
+            shared_c,  # coefs
+        ],
+        out_specs=[
+            per_particle,
+            per_particle,
+            pl.BlockSpec((1,), lambda p: (p,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_particles, n, m), jnp.float32),
+            jax.ShapeDtypeStruct((n_particles, n, m), jnp.float32),
+            jax.ShapeDtypeStruct((n_particles,), jnp.float32),
+        ],
+        interpret=True,
+    )(s, v, s_local, r1, r2, r3, s_star, s_bar, mask, q, g, coefs)

@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: quantization-aware fused PSO step (u8 / i32 datapath).
+
+Models the paper's §3.4 hardware mapping exactly:
+
+  * the relaxed mapping S lives on the uniform u8 grid (0..255 ↔ 0..1);
+  * the two fitness matmuls (S·G, (SG)·Sᵀ) consume integer operands and
+    accumulate in i32 — the accelerator's int8 MAC + i32 accumulator;
+  * row renormalization is reciprocal-multiply (no divider in the PEs);
+  * velocities stay in f32, matching the lightweight global controller
+    that runs the scalar part of the algorithm.
+
+The kernel must agree with kernels/ref.py::pso_step_q8 bit-exactly on the
+u8 outputs (quantization is deterministic) and to float tolerance on the
+fitness; python/tests/test_kernel.py enforces both.
+
+interpret=True for the same reason as pso_step.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ROW_EPS, Q8_SCALE
+
+
+def _pso_step_q8_kernel(
+    s_ref,  # (1, n, m) u8
+    v_ref,  # (1, n, m) f32
+    s_local_ref,  # (1, n, m) u8
+    r1_ref,
+    r2_ref,
+    r3_ref,  # (1, n, m) f32
+    s_star_ref,  # (n, m) u8
+    s_bar_ref,  # (n, m) u8
+    mask_ref,  # (n, m) f32 (binary)
+    q_ref,  # (n, n) i32 (binary)
+    g_ref,  # (m, m) i32 (binary)
+    coef_ref,  # (4,) f32
+    s_out_ref,  # (1, n, m) u8
+    v_out_ref,  # (1, n, m) f32
+    f_out_ref,  # (1,) f32
+):
+    inv_scale = 1.0 / Q8_SCALE
+    s = s_ref[0].astype(jnp.float32) * inv_scale
+    s_local = s_local_ref[0].astype(jnp.float32) * inv_scale
+    s_star = s_star_ref[...].astype(jnp.float32) * inv_scale
+    s_bar = s_bar_ref[...].astype(jnp.float32) * inv_scale
+    v = v_ref[0]
+    r1, r2, r3 = r1_ref[0], r2_ref[0], r3_ref[0]
+    mask = mask_ref[...]
+    w, c1, c2, c3 = coef_ref[0], coef_ref[1], coef_ref[2], coef_ref[3]
+
+    # Controller-side (f32) part: velocity + position + mask + renorm.
+    v_new = (
+        w * v
+        + c1 * r1 * (s_local - s)
+        + c2 * r2 * (s_star - s)
+        + c3 * r3 * (s_bar - s)
+    )
+    s_new = jnp.clip(s + v_new, 0.0, 1.0) * mask
+    row_sum = jnp.sum(s_new, axis=-1, keepdims=True)
+    recip = jnp.where(row_sum > ROW_EPS, 1.0 / (row_sum + ROW_EPS), 0.0)
+    s_new = s_new * recip
+
+    # Re-quantize onto the u8 grid the MAC array consumes.
+    s_q = jnp.clip(jnp.round(s_new * Q8_SCALE), 0.0, 255.0).astype(jnp.uint8)
+
+    # MAC-array-side (integer) part: S G S^T with i32 accumulation.
+    s_i = s_q.astype(jnp.int32)
+    g_i = g_ref[...]
+    q_i = q_ref[...]
+    sg = jnp.dot(s_i, g_i, preferred_element_type=jnp.int32)  # (n, m) i32
+    sgst = jnp.dot(sg, s_i.T, preferred_element_type=jnp.int32)  # (n, n) i32
+    err = q_i.astype(jnp.float32) - sgst.astype(jnp.float32) * (
+        inv_scale * inv_scale
+    )
+    fit = -jnp.sum(err * err)
+
+    s_out_ref[0] = s_q
+    v_out_ref[0] = v_new
+    f_out_ref[0] = fit
+
+
+def pso_step_q8(s_q, v, s_local_q, s_star_q, s_bar_q, mask, q, g, r1, r2, r3, coefs):
+    """Quantized fused PSO step over all particles.
+
+    Args:
+      s_q, s_local_q: (N, n, m) u8.   v, r1, r2, r3: (N, n, m) f32.
+      s_star_q, s_bar_q: (n, m) u8.   mask: (n, m) f32 binary.
+      q: (n, n) i32 binary.  g: (m, m) i32 binary.  coefs: (4,) f32.
+
+    Returns:
+      (s_q', v', f') with dtypes (u8, f32, f32).
+    """
+    n_particles, n, m = s_q.shape
+    per_particle = pl.BlockSpec((1, n, m), lambda p: (p, 0, 0))
+    shared_nm = pl.BlockSpec((n, m), lambda p: (0, 0))
+    shared_nn = pl.BlockSpec((n, n), lambda p: (0, 0))
+    shared_mm = pl.BlockSpec((m, m), lambda p: (0, 0))
+    shared_c = pl.BlockSpec((4,), lambda p: (0,))
+
+    return pl.pallas_call(
+        _pso_step_q8_kernel,
+        grid=(n_particles,),
+        in_specs=[
+            per_particle,  # s_q
+            per_particle,  # v
+            per_particle,  # s_local_q
+            per_particle,  # r1
+            per_particle,  # r2
+            per_particle,  # r3
+            shared_nm,  # s_star_q
+            shared_nm,  # s_bar_q
+            shared_nm,  # mask
+            shared_nn,  # q
+            shared_mm,  # g
+            shared_c,  # coefs
+        ],
+        out_specs=[
+            per_particle,
+            per_particle,
+            pl.BlockSpec((1,), lambda p: (p,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_particles, n, m), jnp.uint8),
+            jax.ShapeDtypeStruct((n_particles, n, m), jnp.float32),
+            jax.ShapeDtypeStruct((n_particles,), jnp.float32),
+        ],
+        interpret=True,
+    )(s_q, v, s_local_q, r1, r2, r3, s_star_q, s_bar_q, mask, q, g, coefs)

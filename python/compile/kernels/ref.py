@@ -1,0 +1,150 @@
+"""Pure-jnp reference oracle for the IMMSched PSO-step kernels.
+
+This file is the *specification*: the Pallas kernels in pso_step.py /
+pso_step_q8.py must agree with these functions to numerical tolerance
+(pytest + hypothesis enforce it).  Everything here is plain jax.numpy —
+no Pallas, no custom calls — so it runs anywhere and is trivially
+auditable against Algorithm 1 of the paper.
+
+Shapes
+------
+  S, V, S_local, r1, r2, r3 : (N, n, m)   particle-batched relaxed mappings
+  S_star, S_bar, mask       : (n, m)      global best / consensus / mask
+  Q                         : (n, n)      query adjacency (0/1 floats)
+  G                         : (m, m)      target adjacency (0/1 floats)
+
+Conventions
+-----------
+* A row of S is the probability distribution of one query vertex over
+  target vertices; rows are renormalized after every position update
+  (paper §3.2: "each row of S sums to 1").
+* Rows whose mask is all-zero stay all-zero (the query vertex has no
+  compatible target vertex; the mapping is infeasible and the fitness
+  will reflect it).
+* Row normalization uses multiply-by-reciprocal, mirroring the paper's
+  divider-free hardware datapath (§3.4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Small epsilon used by the reciprocal row normalization.  Kept as a
+# module constant so the Pallas kernels and the oracle share one value.
+ROW_EPS = 1e-9
+
+
+def velocity(v, s, s_local, s_star, s_bar, r1, r2, r3, w, c1, c2, c3):
+    """PSO velocity update with the consensus term (Algorithm 1, line 8).
+
+    v' = w*v + c1*r1*(S_local - S) + c2*r2*(S* - S) + c3*r3*(S_bar - S)
+
+    ``s_star`` / ``s_bar`` broadcast over the particle axis.
+    """
+    return (
+        w * v
+        + c1 * r1 * (s_local - s)
+        + c2 * r2 * (s_star[None, :, :] - s)
+        + c3 * r3 * (s_bar[None, :, :] - s)
+    )
+
+
+def position(s, v):
+    """Position update, clipped to the relaxed domain [0, 1] (line 9)."""
+    return jnp.clip(s + v, 0.0, 1.0)
+
+
+def apply_mask(s, mask):
+    """Zero out incompatible (tile, PE) pairs (line 10)."""
+    return s * mask[None, :, :]
+
+
+def row_normalize(s):
+    """Renormalize every row to sum 1 via reciprocal multiply (line 11).
+
+    All-zero rows remain all-zero rather than producing NaNs.
+    """
+    row_sum = jnp.sum(s, axis=-1, keepdims=True)
+    recip = jnp.where(row_sum > ROW_EPS, 1.0 / (row_sum + ROW_EPS), 0.0)
+    return s * recip
+
+
+def fitness(s, q, g):
+    """Edge-preserving fitness  f = -|| Q - S G S^T ||_F^2  (§3.3).
+
+    Higher is better; 0 is a perfect relaxed embedding.
+    Batched over the leading particle axis of ``s``.
+    """
+    sg = jnp.einsum("pnm,mk->pnk", s, g)  # (N, n, m)
+    sgst = jnp.einsum("pnk,pmk->pnm", sg, s)  # (N, n, n)
+    err = q[None, :, :] - sgst
+    return -jnp.sum(err * err, axis=(-2, -1))
+
+
+def pso_step(s, v, s_local, s_star, s_bar, mask, q, g, r1, r2, r3, w, c1, c2, c3):
+    """One full fused PSO step — the contract of the Pallas kernel.
+
+    Returns (s', v', f') where f' is the fitness of the *new* position.
+    """
+    v_new = velocity(v, s, s_local, s_star, s_bar, r1, r2, r3, w, c1, c2, c3)
+    s_new = position(s, v_new)
+    s_new = apply_mask(s_new, mask)
+    s_new = row_normalize(s_new)
+    f_new = fitness(s_new, q, g)
+    return s_new, v_new, f_new
+
+
+# ---------------------------------------------------------------------------
+# Quantized (u8 / i32) reference — mirrors the paper's §3.4 datapath.
+# ---------------------------------------------------------------------------
+
+Q8_SCALE = 255.0  # S is uniformly quantized onto [0, 255] <-> [0.0, 1.0]
+
+
+def quantize_u8(s):
+    """Uniform quantization of a [0,1] relaxed mapping to u8 codes."""
+    return jnp.clip(jnp.round(s * Q8_SCALE), 0.0, 255.0).astype(jnp.uint8)
+
+
+def dequantize_u8(s_q):
+    """Inverse of :func:`quantize_u8` (exact on the code grid)."""
+    return s_q.astype(jnp.float32) / Q8_SCALE
+
+
+def fitness_q8(s_q, q, g):
+    """Fitness evaluated on the int8 MAC datapath model.
+
+    The accelerator computes S G S^T with u8 inputs and i32 accumulation;
+    the error against the binary Q is formed after rescaling by 1/255 per
+    S factor.  We model this exactly: integer matmuls in i32, one final
+    float rescale.  ``q``/``g`` are 0/1 and stay integral.
+    """
+    s_i = s_q.astype(jnp.int32)  # (N, n, m)
+    g_i = g.astype(jnp.int32)  # (m, m)
+    q_i = q.astype(jnp.int32)  # (n, n)
+    sg = jnp.einsum("pnm,mk->pnk", s_i, g_i)  # i32, exact
+    sgst = jnp.einsum("pnk,pmk->pnm", sg, s_i)  # i32, exact (fits: 255^2*m)
+    err = q_i[None].astype(jnp.float32) - sgst.astype(jnp.float32) / (
+        Q8_SCALE * Q8_SCALE
+    )
+    return -jnp.sum(err * err, axis=(-2, -1))
+
+
+def pso_step_q8(
+    s_q, v, s_local_q, s_star_q, s_bar_q, mask, q, g, r1, r2, r3, w, c1, c2, c3
+):
+    """Quantized fused step: positions live on the u8 grid, velocity in f32.
+
+    Matches the hardware model where the MAC array consumes u8 S while the
+    lightweight controller keeps velocities in a wider format.  Returns
+    (s_q', v', f') with f' computed by :func:`fitness_q8`.
+    """
+    s = dequantize_u8(s_q)
+    s_local = dequantize_u8(s_local_q)
+    s_star = dequantize_u8(s_star_q)
+    s_bar = dequantize_u8(s_bar_q)
+    v_new = velocity(v, s, s_local, s_star, s_bar, r1, r2, r3, w, c1, c2, c3)
+    s_new = row_normalize(apply_mask(position(s, v_new), mask))
+    s_new_q = quantize_u8(s_new)
+    f_new = fitness_q8(s_new_q, q, g)
+    return s_new_q, v_new, f_new

@@ -1,0 +1,127 @@
+"""L2 JAX model: one IMMSched PSO *epoch* over all particles.
+
+The AOT unit is exactly one epoch of Algorithm 1 — K fused inner steps
+(L1 Pallas kernel) for all N particles, with per-particle local-best
+tracking — because that is the part of the algorithm with *no*
+cross-particle data dependency.  Everything that couples particles
+(global best S*, elite consensus S̄, the feasible-mapping set M, the
+projection + Ullmann refinement) belongs to the global controller, which
+lives in the rust coordinator (L3) exactly as the paper puts it in the
+lightweight on-chip controller.
+
+The epoch is a pure function:
+
+    (S, V, S_local, f_local, S*, S̄, Mask, Q, G, seed, coefs)
+        → (S', V', S_local', f_local', f_last)
+
+* randoms are generated **in-graph** (threefry, folded per step) so the
+  host never ships per-step random tensors across the PJRT boundary;
+* the K-step loop is a `lax.scan`, keeping the lowered HLO small and
+  compile times flat in K;
+* S*/S̄ are *frozen inputs* for the epoch — the rust controller updates
+  them between epochs from the returned bests (consensus-guided
+  exploration, paper §3.4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.pso_step import pso_step
+
+
+def _epoch(step_fn, k_steps, s, v, s_local, f_local, s_star, s_bar, mask, q, g, seed, coefs):
+    """Shared epoch driver, parameterized by the fused-step implementation."""
+    key = jax.random.PRNGKey(seed)
+    n_particles, n, m = s.shape
+
+    def body(carry, k):
+        s, v, s_local, f_local = carry
+        sub = jax.random.fold_in(key, k)
+        r = jax.random.uniform(sub, (3, n_particles, n, m), dtype=jnp.float32)
+        s_new, v_new, f = step_fn(
+            s, v, s_local, s_star, s_bar, mask, q, g, r[0], r[1], r[2], coefs
+        )
+        better = f > f_local
+        s_local_new = jnp.where(better[:, None, None], s_new, s_local)
+        f_local_new = jnp.where(better, f, f_local)
+        return (s_new, v_new, s_local_new, f_local_new), f
+
+    (s, v, s_local, f_local), f_hist = jax.lax.scan(
+        body, (s, v, s_local, f_local), jnp.arange(k_steps, dtype=jnp.uint32)
+    )
+    # f_last: fitness of the *final* positions, used by the controller for
+    # elite-consensus weighting; f_hist's last row is exactly that.
+    return s, v, s_local, f_local, f_hist[-1]
+
+
+def pso_epoch(s, v, s_local, f_local, s_star, s_bar, mask, q, g, seed, coefs, *, k_steps):
+    """One epoch using the Pallas fused step (the production path)."""
+    return _epoch(
+        pso_step, k_steps, s, v, s_local, f_local, s_star, s_bar, mask, q, g, seed, coefs
+    )
+
+
+def pso_epoch_reference(
+    s, v, s_local, f_local, s_star, s_bar, mask, q, g, seed, coefs, *, k_steps
+):
+    """Same epoch on the pure-jnp oracle — the test-time twin of pso_epoch."""
+
+    def step_fn(s, v, s_local, s_star, s_bar, mask, q, g, r1, r2, r3, coefs):
+        return ref.pso_step(
+            s, v, s_local, s_star, s_bar, mask, q, g, r1, r2, r3,
+            coefs[0], coefs[1], coefs[2], coefs[3],
+        )
+
+    return _epoch(
+        step_fn, k_steps, s, v, s_local, f_local, s_star, s_bar, mask, q, g, seed, coefs
+    )
+
+
+def epoch_fn(n, m, num_particles, k_steps, *, reference=False):
+    """Build the jit-able epoch closure for a fixed size class.
+
+    Returns ``(fn, example_args)`` where ``example_args`` are
+    ShapeDtypeStructs suitable for ``jax.jit(fn).lower(*example_args)``.
+    Argument order is the PJRT calling convention the rust runtime uses —
+    keep in sync with rust/src/runtime/matcher_exec.rs.
+    """
+    base = functools.partial(
+        pso_epoch_reference if reference else pso_epoch, k_steps=k_steps
+    )
+
+    def fn(s, v, s_local, f_local, s_star, s_bar, mask, q, g, seed, coefs):
+        return base(s, v, s_local, f_local, s_star, s_bar, mask, q, g, seed, coefs)
+
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((num_particles, n, m), f32),  # s
+        jax.ShapeDtypeStruct((num_particles, n, m), f32),  # v
+        jax.ShapeDtypeStruct((num_particles, n, m), f32),  # s_local
+        jax.ShapeDtypeStruct((num_particles,), f32),  # f_local
+        jax.ShapeDtypeStruct((n, m), f32),  # s_star
+        jax.ShapeDtypeStruct((n, m), f32),  # s_bar
+        jax.ShapeDtypeStruct((n, m), f32),  # mask
+        jax.ShapeDtypeStruct((n, n), f32),  # q
+        jax.ShapeDtypeStruct((m, m), f32),  # g
+        jax.ShapeDtypeStruct((), jnp.uint32),  # seed
+        jax.ShapeDtypeStruct((4,), f32),  # coefs [w, c1, c2, c3]
+    )
+    return fn, args
+
+
+# Size classes lowered by aot.py.  Names + dims must stay in sync with the
+# rust artifact registry (rust/src/runtime/artifact.rs) and the Makefile.
+# (n, m) are padded powers of two chosen so the "large" class puts m at the
+# MXU-native lane width 128.
+SIZE_CLASSES = {
+    # name: (n, m, num_particles, k_steps)
+    "small": (8, 16, 8, 8),
+    "medium": (16, 32, 16, 8),
+    "large": (32, 64, 16, 8),
+    "xlarge": (64, 128, 16, 8),
+}

@@ -1,0 +1,49 @@
+"""L2 profiling-tool invariants (compile/analyze.py)."""
+
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from compile.analyze import cost_analysis, mxu_fraction, vmem_footprint_bytes
+from compile.model import SIZE_CLASSES
+
+
+def test_vmem_footprint_formula():
+    # 9*n*m + n^2 + m^2 floats, 4 bytes each
+    n, m = 8, 16
+    assert vmem_footprint_bytes(n, m) == 4 * (9 * n * m + n * n + m * m)
+
+
+def test_vmem_fits_tpu_core_for_all_classes():
+    for name, (n, m, _, _) in SIZE_CLASSES.items():
+        vmem = vmem_footprint_bytes(n, m)
+        assert vmem < 16 * 2**20 * 0.1, f"{name}: {vmem} bytes won't double-buffer"
+
+
+def test_mxu_fraction_grows_with_size():
+    fracs = []
+    for n, m, p, k in SIZE_CLASSES.values():
+        frac, total = mxu_fraction(n, m, p, k)
+        assert 0.5 < frac < 1.0
+        assert total > 0
+        fracs.append(frac)
+    # matmul share dominates more as m grows
+    assert fracs == sorted(fracs)
+
+
+def test_cost_analysis_reports_flops():
+    n, m, p, k = SIZE_CLASSES["small"]
+    ca = cost_analysis(n, m, p, k)
+    flops = ca.get("flops", float("nan"))
+    assert not math.isnan(flops) and flops > 0
+    # XLA's count must be within 10x of the analytic step count (same
+    # order — it also counts RNG + bookkeeping)
+    _, analytic = mxu_fraction(n, m, p, k)
+    assert flops > analytic * 0.1
+    assert flops < analytic * 100
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,77 @@
+"""AOT round-trip: lowered HLO text re-executes and matches direct eval.
+
+This is the python half of the interchange contract; the rust half is
+rust/src/runtime (tests there execute the same artifacts via PJRT-rs).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile.aot import lower_size_class, to_hlo_text
+from compile.model import SIZE_CLASSES, epoch_fn, pso_epoch
+from tests.test_kernel import COEFS
+from tests.test_model import epoch_inputs
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_parses_back():
+    """Lower 'small' and re-parse the text with XLA's HLO parser.
+
+    The *numeric* round-trip (text -> HloModuleProto -> PJRT compile ->
+    execute) is exercised on the rust side (rust/src/runtime tests +
+    `immsched selftest`), which is the consumer of this contract; jaxlib
+    0.8 no longer accepts HLO protos through its public compile API.
+    """
+    n, m, p, k = SIZE_CLASSES["small"]
+    text = lower_size_class("small", n, m, p, k)
+    assert "ENTRY" in text and "HloModule" in text
+    mod = xc._xla.hlo_module_from_text(text)
+    # Parameter count must match the rust calling convention (11 inputs).
+    prog = mod.to_string()
+    assert prog.count("parameter(") >= 11
+
+
+def test_epoch_io_contract():
+    """The artifact signature the rust runtime hard-codes: 11 in, 5 out."""
+    n, m, p, k = SIZE_CLASSES["small"]
+    rng = np.random.default_rng(21)
+    s, v, sl, f_local, ss, sb, mask, q, g = epoch_inputs(rng, p, n, m)
+    out = pso_epoch(s, v, sl, f_local, ss, sb, mask, q, g, np.uint32(5), COEFS, k_steps=k)
+    shapes = [np.asarray(o).shape for o in out]
+    assert shapes == [(p, n, m), (p, n, m), (p, n, m), (p,), (p,)]
+
+
+def test_artifacts_exist_and_match_manifest():
+    """make artifacts must have produced one file per size class."""
+    manifest = os.path.join(ARTIFACT_DIR, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(manifest) as f:
+        lines = [l.split() for l in f.read().strip().splitlines()]
+    names = {l[0] for l in lines}
+    assert names == set(SIZE_CLASSES), f"manifest {names} != {set(SIZE_CLASSES)}"
+    for name, n, m, p, k in lines:
+        assert (int(n), int(m), int(p), int(k)) == SIZE_CLASSES[name]
+        path = os.path.join(ARTIFACT_DIR, f"pso_epoch_{name}.hlo.txt")
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{path} does not look like HLO text"
+
+
+def test_hlo_text_is_stable():
+    """Same size class lowers to identical text (reproducible builds)."""
+    n, m, p, k = SIZE_CLASSES["small"]
+    a = lower_size_class("small", n, m, p, k)
+    b = lower_size_class("small", n, m, p, k)
+    assert a == b
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,180 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas fused step (float and q8) must reproduce the pure-jnp oracle in
+kernels/ref.py across swept shapes — hypothesis drives (N, n, m), the
+mask/graph densities and the PSO coefficients.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pso_step import pso_step
+from compile.kernels.pso_step_q8 import pso_step_q8
+
+
+def make_inputs(rng, n_particles, n, m, mask_density=0.7, q_density=0.3, g_density=0.5):
+    """Random, well-formed kernel inputs (row-stochastic S, binary graphs)."""
+    s = rng.random((n_particles, n, m), dtype=np.float32) + 1e-3
+    mask = (rng.random((n, m)) < mask_density).astype(np.float32)
+    # Guarantee at least one compatible target per query vertex so S has
+    # support (the all-zero-row case is tested separately).
+    mask[np.arange(n), rng.integers(0, m, size=n)] = 1.0
+    s = s * mask[None]
+    s /= s.sum(-1, keepdims=True)
+    v = (rng.random((n_particles, n, m), dtype=np.float32) - 0.5) * 0.2
+    s_local = s.copy()
+    s_star = s[0]
+    s_bar = s.mean(0)
+    q = (rng.random((n, n)) < q_density).astype(np.float32)
+    np.fill_diagonal(q, 0.0)
+    g = (rng.random((m, m)) < g_density).astype(np.float32)
+    np.fill_diagonal(g, 0.0)
+    r = rng.random((3, n_particles, n, m), dtype=np.float32)
+    return s, v, s_local, s_star, s_bar, mask, q, g, r
+
+
+COEFS = np.array([0.72, 1.49, 1.49, 0.6], dtype=np.float32)
+
+
+class TestFloatKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n_particles=st.integers(1, 6),
+        n=st.integers(2, 12),
+        m=st.integers(2, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, n_particles, n, m, seed):
+        rng = np.random.default_rng(seed)
+        s, v, sl, ss, sb, mask, q, g, r = make_inputs(rng, n_particles, n, m)
+        got_s, got_v, got_f = pso_step(
+            s, v, sl, ss, sb, mask, q, g, r[0], r[1], r[2], COEFS
+        )
+        exp_s, exp_v, exp_f = ref.pso_step(
+            s, v, sl, ss, sb, mask, q, g, r[0], r[1], r[2], *COEFS
+        )
+        np.testing.assert_allclose(got_v, exp_v, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got_s, exp_s, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got_f, exp_f, rtol=1e-4, atol=1e-4)
+
+    def test_rows_stochastic_after_step(self):
+        rng = np.random.default_rng(7)
+        s, v, sl, ss, sb, mask, q, g, r = make_inputs(rng, 4, 8, 16)
+        got_s, _, _ = pso_step(s, v, sl, ss, sb, mask, q, g, r[0], r[1], r[2], COEFS)
+        sums = np.asarray(got_s).sum(-1)
+        np.testing.assert_allclose(sums, np.ones_like(sums), atol=1e-5)
+
+    def test_mask_respected(self):
+        rng = np.random.default_rng(8)
+        s, v, sl, ss, sb, mask, q, g, r = make_inputs(rng, 4, 8, 16, mask_density=0.4)
+        got_s, _, _ = pso_step(s, v, sl, ss, sb, mask, q, g, r[0], r[1], r[2], COEFS)
+        assert np.all(np.asarray(got_s)[:, mask == 0.0] == 0.0)
+
+    def test_all_zero_mask_row_stays_zero(self):
+        """A query vertex with no compatible PE must not produce NaNs."""
+        rng = np.random.default_rng(9)
+        s, v, sl, ss, sb, mask, q, g, r = make_inputs(rng, 2, 6, 12)
+        mask[3, :] = 0.0
+        got_s, got_v, got_f = pso_step(
+            s, v, sl, ss, sb, mask, q, g, r[0], r[1], r[2], COEFS
+        )
+        assert np.all(np.asarray(got_s)[:, 3, :] == 0.0)
+        assert np.all(np.isfinite(np.asarray(got_f)))
+        assert np.all(np.isfinite(np.asarray(got_v)))
+
+    def test_perfect_embedding_has_zero_fitness(self):
+        """If S is an exact subgraph embedding, -||Q - SGS^T||^2 == 0."""
+        n, m = 4, 8
+        # Query = path 0->1->2->3 embedded at target vertices 2,3,4,5.
+        q = np.zeros((n, n), np.float32)
+        for i in range(n - 1):
+            q[i, i + 1] = 1.0
+        g = np.zeros((m, m), np.float32)
+        for j in range(m - 1):
+            g[j, j + 1] = 1.0
+        # One-hot S mapping i -> i+2; G restricted to that path reproduces Q.
+        s = np.zeros((1, n, m), np.float32)
+        for i in range(n):
+            s[0, i, i + 2] = 1.0
+        # Zero velocity/randoms => position unchanged.
+        zeros = np.zeros_like(s)
+        mask = np.ones((n, m), np.float32)
+        coefs = np.array([0.0, 0.0, 0.0, 0.0], np.float32)
+        got_s, _, got_f = pso_step(
+            s, zeros, s, s[0], s[0], mask, q, g, zeros, zeros, zeros, coefs
+        )
+        # But SGS^T counts *all* G edges reachable through S's support; with
+        # one-hot rows only the embedded edges survive, so fitness is 0 minus
+        # the Q edges not covered... here the embedding is exact:
+        np.testing.assert_allclose(np.asarray(got_f), [0.0], atol=1e-5)
+
+
+class TestQuantizedKernel:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n_particles=st.integers(1, 4),
+        n=st.integers(2, 10),
+        m=st.integers(2, 20),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, n_particles, n, m, seed):
+        rng = np.random.default_rng(seed)
+        s, v, sl, ss, sb, mask, q, g, r = make_inputs(rng, n_particles, n, m)
+        s_q = np.asarray(ref.quantize_u8(s))
+        sl_q = np.asarray(ref.quantize_u8(sl))
+        ss_q = np.asarray(ref.quantize_u8(ss))
+        sb_q = np.asarray(ref.quantize_u8(sb))
+        q_i = q.astype(np.int32)
+        g_i = g.astype(np.int32)
+        got_s, got_v, got_f = pso_step_q8(
+            s_q, v, sl_q, ss_q, sb_q, mask, q_i, g_i, r[0], r[1], r[2], COEFS
+        )
+        exp_s, exp_v, exp_f = ref.pso_step_q8(
+            s_q, v, sl_q, ss_q, sb_q, mask, q, g, r[0], r[1], r[2], *COEFS
+        )
+        # u8 positions must agree bit-exactly modulo borderline rounding of
+        # values exactly at .5 code boundaries — allow 1 code of slack.
+        diff = np.abs(np.asarray(got_s).astype(np.int32) - np.asarray(exp_s).astype(np.int32))
+        assert diff.max() <= 1, f"u8 codes diverged by {diff.max()}"
+        np.testing.assert_allclose(got_v, exp_v, rtol=1e-5, atol=1e-6)
+        # Fitness tolerance reflects possible ±1-code position differences.
+        np.testing.assert_allclose(got_f, exp_f, rtol=5e-2, atol=5e-2)
+
+    def test_q8_tracks_float_kernel(self):
+        """Quantized fitness ≈ float fitness within quantization error."""
+        rng = np.random.default_rng(11)
+        s, v, sl, ss, sb, mask, q, g, r = make_inputs(rng, 4, 8, 16)
+        _, _, f_float = pso_step(s, v, sl, ss, sb, mask, q, g, r[0], r[1], r[2], COEFS)
+        s_q = np.asarray(ref.quantize_u8(s))
+        got_s, _, f_q8 = pso_step_q8(
+            np.asarray(s_q),
+            v,
+            np.asarray(ref.quantize_u8(sl)),
+            np.asarray(ref.quantize_u8(ss)),
+            np.asarray(ref.quantize_u8(sb)),
+            mask,
+            q.astype(np.int32),
+            g.astype(np.int32),
+            r[0],
+            r[1],
+            r[2],
+            COEFS,
+        )
+        f_float = np.asarray(f_float)
+        f_q8 = np.asarray(f_q8)
+        # Relative agreement: quantization error on S is <= 1/255 per entry.
+        rel = np.abs(f_q8 - f_float) / (np.abs(f_float) + 1.0)
+        assert rel.max() < 0.1, f"q8 fitness drifted: {rel.max():.3f}"
+
+    def test_quantize_roundtrip_on_grid(self):
+        codes = np.arange(256, dtype=np.uint8).reshape(1, 16, 16)
+        back = ref.quantize_u8(ref.dequantize_u8(codes))
+        np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,77 @@
+"""L2 epoch invariants: Pallas epoch == reference epoch, bests monotone."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from compile.model import SIZE_CLASSES, epoch_fn, pso_epoch, pso_epoch_reference
+from tests.test_kernel import COEFS, make_inputs
+
+
+def epoch_inputs(rng, n_particles, n, m):
+    s, v, sl, ss, sb, mask, q, g, _ = make_inputs(rng, n_particles, n, m)
+    f_local = np.full((n_particles,), -np.inf, dtype=np.float32)
+    return s, v, sl, f_local, ss, sb, mask, q, g
+
+
+@pytest.mark.parametrize("n_particles,n,m,k", [(4, 8, 16, 4), (8, 6, 10, 6)])
+def test_epoch_matches_reference(n_particles, n, m, k):
+    rng = np.random.default_rng(3)
+    args = epoch_inputs(rng, n_particles, n, m)
+    seed = np.uint32(1234)
+    got = pso_epoch(*args, seed, COEFS, k_steps=k)
+    exp = pso_epoch_reference(*args, seed, COEFS, k_steps=k)
+    names = ["s", "v", "s_local", "f_local", "f_last"]
+    for g_, e_, name in zip(got, exp, names):
+        np.testing.assert_allclose(
+            np.asarray(g_), np.asarray(e_), rtol=1e-4, atol=1e-4, err_msg=name
+        )
+
+
+def test_local_best_monotone():
+    """f_local never decreases across an epoch (Algorithm 1 lines 12-13)."""
+    rng = np.random.default_rng(5)
+    args = epoch_inputs(rng, 6, 8, 16)
+    f0 = np.full((6,), -1e30, dtype=np.float32)
+    args = args[:3] + (f0,) + args[4:]
+    out = pso_epoch(*args, np.uint32(7), COEFS, k_steps=8)
+    f_local = np.asarray(out[3])
+    f_last = np.asarray(out[4])
+    assert np.all(f_local >= f_last - 1e-4), "local best must dominate last fitness"
+
+
+def test_epoch_improves_fitness_on_average():
+    """Optimization sanity: epochs should (statistically) improve fitness."""
+    rng = np.random.default_rng(9)
+    s, v, sl, f_local, ss, sb, mask, q, g = epoch_inputs(rng, 8, 8, 16)
+    from compile.kernels import ref
+
+    f_init = np.asarray(ref.fitness(s, q, g))
+    out = pso_epoch(s, v, sl, f_local, ss, sb, mask, q, g, np.uint32(11), COEFS, k_steps=8)
+    f_best = np.asarray(out[3])
+    assert f_best.max() >= f_init.max() - 1e-5
+
+
+def test_epoch_deterministic_given_seed():
+    rng = np.random.default_rng(13)
+    args = epoch_inputs(rng, 4, 8, 16)
+    a = pso_epoch(*args, np.uint32(99), COEFS, k_steps=4)
+    b = pso_epoch(*args, np.uint32(99), COEFS, k_steps=4)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = pso_epoch(*args, np.uint32(100), COEFS, k_steps=4)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+def test_size_classes_lower():
+    """Every registered size class must trace + lower without error."""
+    for name, (n, m, p, k) in SIZE_CLASSES.items():
+        fn, args = epoch_fn(n, m, p, k)
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered is not None, name
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

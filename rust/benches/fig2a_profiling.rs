@@ -1,0 +1,19 @@
+//! Bench: paper Fig. 2a — scheduling time vs execution time for the
+//! CPU-serial preemptive baseline on the Cloud platform (Scenario A =
+//! UNet, Scenario B = Qwen), plus IMMSched's on-accelerator episode for
+//! the same interrupts.
+//!
+//! Expected shape: sched/exec ≫ 1 for the serial baseline (the paper
+//! reports orders of magnitude), while IMMSched's episode is far below
+//! the execution time.
+
+use immsched::report::{self, figures};
+
+fn main() -> anyhow::Result<()> {
+    let params = figures::FigureParams::default();
+    let t0 = std::time::Instant::now();
+    let table = figures::fig2a(&params);
+    report::emit(&table, "fig2a_profiling")?;
+    println!("[bench] fig2a regenerated in {:?}", t0.elapsed());
+    Ok(())
+}

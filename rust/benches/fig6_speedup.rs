@@ -1,0 +1,19 @@
+//! Bench: paper Fig. 6 — normalized Speedup across platforms (Edge,
+//! Cloud) and workload classes (Simple, Middle, Complex) for all six
+//! frameworks.
+//!
+//! Paper means: ×34.4 / ×51.4 / ×81.4 / ×27.9 vs PREMA / CD-MSA /
+//! Planaria / MoCA, ×1.6 vs IsoSched.  The reproduction target is the
+//! *shape*: every LTS gap is 1-2 orders of magnitude and grows with
+//! workload complexity; the IsoSched gap is a small-integer factor.
+
+use immsched::report::{self, figures};
+
+fn main() -> anyhow::Result<()> {
+    let params = figures::FigureParams::default();
+    let t0 = std::time::Instant::now();
+    let grid = figures::run_grid(&params);
+    report::emit(&figures::fig6(&grid), "fig6_speedup")?;
+    println!("[bench] fig6 regenerated in {:?} (36 simulations)", t0.elapsed());
+    Ok(())
+}

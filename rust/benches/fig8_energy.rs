@@ -1,0 +1,19 @@
+//! Bench: paper Fig. 8 — normalized energy efficiency (throughput per
+//! joule) across platforms and workload classes.
+//!
+//! Paper means: ×918.6 / ×927.9 / ×2722.2 / ×2092.7 vs PREMA / CD-MSA /
+//! Planaria / MoCA, ×3.43 vs IsoSched.  Expected shape: the TSS-vs-LTS
+//! gap is the dominant term (DRAM round-trips vs on-chip links) and
+//! grows with workload complexity; IMMSched beats IsoSched by a small
+//! factor (cheaper scheduling energy + fewer missed-task retries).
+
+use immsched::report::{self, figures};
+
+fn main() -> anyhow::Result<()> {
+    let params = figures::FigureParams::default();
+    let t0 = std::time::Instant::now();
+    let grid = figures::run_grid(&params);
+    report::emit(&figures::fig8(&grid), "fig8_energy")?;
+    println!("[bench] fig8 regenerated in {:?} (36 simulations)", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Table 1 (framework capability matrix) and
+//! Table 2 (platforms).  Trivially fast; exists so `cargo bench` covers
+//! every table and figure of the evaluation.
+
+use immsched::report::{self, figures};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    report::emit(&figures::table1(), "table1_capabilities")?;
+    report::emit(&figures::table2(), "table2_platforms")?;
+    println!("[bench] table1+table2 regenerated in {:?}", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! DRAM channel model: bandwidth sharing + row-buffer locality — the
+//! off-chip substrate whose avoidance is the TSS paradigm's whole point
+//! (paper Fig. 3).
+//!
+//! LPDDR4-class edge memory: one channel, shared by every LTS layer
+//! round-trip.  The model answers (a) effective bandwidth under a given
+//! access pattern (row hits stream at full rate, misses pay
+//! activate+precharge), and (b) service time for a set of concurrent
+//! streams (fair-share with a contention penalty — the effect MoCA's
+//! policy manages).
+
+/// Channel parameters (LPDDR4-3200 x32, 45 nm-era edge SoC).
+#[derive(Clone, Copy, Debug)]
+pub struct DramChannel {
+    /// Peak bandwidth (bytes/s).
+    pub peak_bw: f64,
+    /// Row-buffer (page) size in bytes.
+    pub row_bytes: u64,
+    /// Row activate+precharge overhead, expressed as equivalent bytes of
+    /// lost transfer time per row miss.
+    pub miss_penalty_bytes: u64,
+    /// Per-access energy (J/byte) for streaming transfers.
+    pub energy_per_byte: f64,
+}
+
+impl Default for DramChannel {
+    fn default() -> Self {
+        Self {
+            peak_bw: 25.6e9,
+            row_bytes: 2048,
+            miss_penalty_bytes: 256,
+            energy_per_byte: 160.0e-12,
+        }
+    }
+}
+
+impl DramChannel {
+    /// Effective bandwidth for an access pattern with `row_hit_rate` ∈
+    /// [0, 1]: every miss wastes `miss_penalty_bytes` of transfer slots.
+    pub fn effective_bw(&self, row_hit_rate: f64) -> f64 {
+        let hit = row_hit_rate.clamp(0.0, 1.0);
+        // per row_bytes transferred, (1-hit) misses each waste penalty
+        let useful = self.row_bytes as f64;
+        let wasted = (1.0 - hit) * self.miss_penalty_bytes as f64;
+        self.peak_bw * useful / (useful + wasted)
+    }
+
+    /// Row-hit rate of a strided stream: consecutive within a row hits,
+    /// one miss per row crossing.  `access_bytes` per element, `stride`
+    /// elements apart.
+    pub fn stream_hit_rate(&self, access_bytes: u64, stride_bytes: u64) -> f64 {
+        let step = access_bytes.max(1) + stride_bytes;
+        if step >= self.row_bytes {
+            return 0.0; // every access opens a new row
+        }
+        let per_row = self.row_bytes / step.max(1);
+        1.0 - 1.0 / per_row.max(1) as f64
+    }
+
+    /// Seconds to move `bytes` sequentially (hit rate ≈ 1 − step/row).
+    pub fn stream_seconds(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.effective_bw(self.stream_hit_rate(64, 0))
+    }
+
+    /// Service time for `streams` concurrent sequential streams of the
+    /// given sizes: fair-share bandwidth plus an interleaving penalty —
+    /// concurrent streams destroy each other's row locality (hit rate
+    /// degrades with the number of co-runners).
+    pub fn contended_seconds(&self, stream_bytes: &[u64]) -> f64 {
+        if stream_bytes.is_empty() {
+            return 0.0;
+        }
+        let k = stream_bytes.len() as f64;
+        // k interleaved streams: each switch likely lands in a different
+        // row — hit rate falls as 1/k of the solo rate
+        let solo_hit = self.stream_hit_rate(64, 0);
+        let hit = solo_hit / k;
+        let bw = self.effective_bw(hit);
+        let total: u64 = stream_bytes.iter().sum();
+        total as f64 / bw
+    }
+
+    /// Energy to move `bytes` (pattern-independent in this model).
+    pub fn energy(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.energy_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_streams_near_peak() {
+        let d = DramChannel::default();
+        let bw = d.effective_bw(d.stream_hit_rate(64, 0));
+        assert!(bw > 0.9 * d.peak_bw, "sequential bw {bw:.3e}");
+    }
+
+    #[test]
+    fn random_access_collapses_bandwidth() {
+        let d = DramChannel::default();
+        let random = d.effective_bw(0.0);
+        let seq = d.effective_bw(1.0);
+        assert!(random < seq * 0.95);
+        assert!((seq - d.peak_bw).abs() < 1.0);
+    }
+
+    #[test]
+    fn large_strides_always_miss() {
+        let d = DramChannel::default();
+        assert_eq!(d.stream_hit_rate(64, 4096), 0.0);
+        assert!(d.stream_hit_rate(64, 0) > 0.9);
+    }
+
+    #[test]
+    fn contention_worse_than_fair_share() {
+        let d = DramChannel::default();
+        let solo = d.stream_seconds(100 << 20);
+        let four = d.contended_seconds(&[100 << 20; 4]);
+        // 4 streams of the same size: ≥ 4x solo (fair share) plus
+        // locality loss
+        assert!(four > 4.0 * solo, "four {four} vs solo {solo}");
+        assert!(four < 8.0 * solo, "contention penalty unreasonably large");
+    }
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let d = DramChannel::default();
+        assert!((d.energy(2000) - 2.0 * d.energy(1000)).abs() < 1e-18);
+    }
+}

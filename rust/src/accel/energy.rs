@@ -1,0 +1,160 @@
+//! Energy model: 45 nm-calibrated per-op constants + an accounting book.
+//!
+//! Constants follow the standard 45 nm numbers (Horowitz ISSCC'14 and the
+//! CACTI-P/McPAT models the paper uses): int8 MAC ≈ 0.3 pJ, SRAM ≈ 2
+//! pJ/byte for the 0.5–1 MiB scratchpads of Table 2, DRAM ≈ 160 pJ/byte
+//! (LPDDR4-class), NoC 0.64 pJ/bit/hop (McPAT, paper §4.1.1).
+//!
+//! The decisive *structural* property for the paper's Figure 8 is the
+//! ~80× gap between DRAM and SRAM/NoC traffic costs: LTS schedulers
+//! bounce inter-layer activations through DRAM, TSS schedulers keep them
+//! on-chip.
+
+use super::noc::HOP_PJ_PER_BIT;
+
+/// Per-operation energy constants (joules).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// One int8 MAC (array datapath).
+    pub mac_int8: f64,
+    /// One byte read or written to the engine scratchpad.
+    pub sram_byte: f64,
+    /// One byte read or written to DRAM.
+    pub dram_byte: f64,
+    /// One bit moved one NoC hop.
+    pub noc_bit_hop: f64,
+    /// Static/leakage power per engine (W) — idle engines still burn it.
+    pub engine_static_w: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            mac_int8: 0.3e-12,
+            sram_byte: 2.0e-12,
+            dram_byte: 160.0e-12,
+            noc_bit_hop: HOP_PJ_PER_BIT * 1e-12,
+            engine_static_w: 25.0e-3,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of `macs` int8 MACs (includes operand SRAM streaming).
+    pub fn compute(&self, macs: u64, sram_bytes: u64) -> f64 {
+        macs as f64 * self.mac_int8 + sram_bytes as f64 * self.sram_byte
+    }
+
+    /// Energy of a DRAM round-trip of `bytes` (read + later write counted
+    /// separately by the caller).
+    pub fn dram(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.dram_byte
+    }
+
+    /// Energy of a NoC transfer.
+    pub fn noc(&self, bytes: u64, hops: usize) -> f64 {
+        bytes as f64 * 8.0 * hops as f64 * self.noc_bit_hop
+    }
+
+    /// Static energy of `engines` engines over `seconds`.
+    pub fn static_energy(&self, engines: usize, seconds: f64) -> f64 {
+        self.engine_static_w * engines as f64 * seconds
+    }
+}
+
+/// Mutable energy ledger for one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyBook {
+    pub compute_j: f64,
+    pub sram_j: f64,
+    pub dram_j: f64,
+    pub noc_j: f64,
+    pub static_j: f64,
+    /// Energy spent *running the scheduler itself* (CPU serial or
+    /// on-accelerator matcher) — the paper's headline distinction.
+    pub scheduling_j: f64,
+}
+
+impl EnergyBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.compute_j + self.sram_j + self.dram_j + self.noc_j + self.static_j + self.scheduling_j
+    }
+
+    pub fn add_compute(&mut self, model: &EnergyModel, macs: u64) {
+        self.compute_j += macs as f64 * model.mac_int8;
+    }
+
+    pub fn add_sram(&mut self, model: &EnergyModel, bytes: u64) {
+        self.sram_j += bytes as f64 * model.sram_byte;
+    }
+
+    pub fn add_dram(&mut self, model: &EnergyModel, bytes: u64) {
+        self.dram_j += model.dram(bytes);
+    }
+
+    pub fn add_noc(&mut self, model: &EnergyModel, bytes: u64, hops: usize) {
+        self.noc_j += model.noc(bytes, hops);
+    }
+
+    pub fn add_static(&mut self, model: &EnergyModel, engines: usize, seconds: f64) {
+        self.static_j += model.static_energy(engines, seconds);
+    }
+
+    pub fn add_scheduling(&mut self, joules: f64) {
+        self.scheduling_j += joules;
+    }
+
+    pub fn merge(&mut self, other: &EnergyBook) {
+        self.compute_j += other.compute_j;
+        self.sram_j += other.sram_j;
+        self.dram_j += other.dram_j;
+        self.noc_j += other.noc_j;
+        self.static_j += other.static_j;
+        self.scheduling_j += other.scheduling_j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_dominates_sram_and_noc() {
+        let m = EnergyModel::default();
+        let bytes = 1_000_000u64;
+        let dram = m.dram(bytes);
+        let sram = bytes as f64 * m.sram_byte;
+        let noc5 = m.noc(bytes, 5);
+        // 160 pJ/B DRAM vs 5-hop NoC at 0.64 pJ/bit ≈ 6.25× per byte
+        assert!(dram > 5.0 * noc5, "dram {dram} vs noc {noc5}");
+        assert!(dram > 50.0 * sram);
+    }
+
+    #[test]
+    fn book_totals_add_up() {
+        let m = EnergyModel::default();
+        let mut b = EnergyBook::new();
+        b.add_compute(&m, 1_000_000);
+        b.add_dram(&m, 1000);
+        b.add_noc(&m, 1000, 3);
+        b.add_static(&m, 2, 0.001);
+        b.add_scheduling(1e-6);
+        let sum = b.compute_j + b.dram_j + b.noc_j + b.static_j + b.scheduling_j;
+        assert!((b.total() - sum).abs() < 1e-18);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let m = EnergyModel::default();
+        let mut a = EnergyBook::new();
+        a.add_dram(&m, 100);
+        let mut b = EnergyBook::new();
+        b.add_dram(&m, 100);
+        a.merge(&b);
+        assert!((a.dram_j - m.dram(200)).abs() < 1e-18);
+    }
+}

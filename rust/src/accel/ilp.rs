@@ -1,0 +1,168 @@
+//! ILP-style scheduling tensors (paper §3.1).
+//!
+//! IsoSched formalizes multi-DNN scheduling with two binary tensors
+//!
+//! ```text
+//!   X ∈ {0,1}^{D×I×N×T×P}   compute mapping
+//!   Y ∈ {0,1}^{D×I×K×T×L}   communication mapping
+//! ```
+//!
+//! (D DNNs, I iterations, N tiles, T time slots, P engines, K transfers,
+//! L links).  The tensors are the *declarative* form of a schedule; the
+//! matcher searches the same space through subgraph isomorphism.  We keep
+//! them as a validation artifact: any schedule the simulator produces can
+//! be exported to (X, Y) and checked against the ILP constraints —
+//! exclusivity, single-placement and dependency ordering — which gives
+//! the property tests an independent correctness oracle.
+
+/// Dimensions of the scheduling tensors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorDims {
+    pub dnns: usize,
+    pub iterations: usize,
+    pub tiles: usize,
+    pub slots: usize,
+    pub engines: usize,
+}
+
+/// Sparse binary scheduling tensors: entries are index tuples.
+#[derive(Clone, Debug, Default)]
+pub struct MappingTensors {
+    pub dims: Option<TensorDims>,
+    /// X entries: (dnn, iteration, tile, slot, engine).
+    pub x: Vec<(usize, usize, usize, usize, usize)>,
+    /// Y entries: (dnn, iteration, transfer, slot, link).
+    pub y: Vec<(usize, usize, usize, usize, usize)>,
+}
+
+impl MappingTensors {
+    pub fn new(dims: TensorDims) -> Self {
+        Self { dims: Some(dims), x: Vec::new(), y: Vec::new() }
+    }
+
+    /// Record "tile `t` of (dnn, iter) runs in `slot` on `engine`".
+    pub fn place(&mut self, dnn: usize, iter: usize, tile: usize, slot: usize, engine: usize) {
+        self.x.push((dnn, iter, tile, slot, engine));
+    }
+
+    /// Record "transfer `k` of (dnn, iter) uses `link` in `slot`".
+    pub fn route(&mut self, dnn: usize, iter: usize, transfer: usize, slot: usize, link: usize) {
+        self.y.push((dnn, iter, transfer, slot, link));
+    }
+
+    /// ILP constraint 1 — engine exclusivity: at most one tile per
+    /// (slot, engine).
+    pub fn check_engine_exclusive(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for &(d, i, t, s, p) in &self.x {
+            if !seen.insert((s, p)) {
+                return Err(format!("engine {p} double-booked in slot {s} (dnn {d} iter {i} tile {t})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// ILP constraint 2 — single placement: each (dnn, iter, tile) is
+    /// placed exactly once.
+    pub fn check_single_placement(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for &(d, i, t, _, _) in &self.x {
+            if !seen.insert((d, i, t)) {
+                return Err(format!("tile (dnn {d}, iter {i}, tile {t}) placed twice"));
+            }
+        }
+        Ok(())
+    }
+
+    /// ILP constraint 3 — dependency order: for each dependency
+    /// (tile a → tile b) of a DNN, slot(a) < slot(b).
+    pub fn check_dependencies(&self, deps: &[(usize, usize)]) -> Result<(), String> {
+        use std::collections::HashMap;
+        let mut slot_of: HashMap<(usize, usize, usize), usize> = HashMap::new();
+        for &(d, i, t, s, _) in &self.x {
+            slot_of.insert((d, i, t), s);
+        }
+        for &(d, i, t, _, _) in &self.x {
+            for &(a, b) in deps {
+                if b == t {
+                    if let (Some(&sa), Some(&sb)) = (slot_of.get(&(d, i, a)), slot_of.get(&(d, i, t))) {
+                        if sa >= sb {
+                            return Err(format!(
+                                "dependency {a}->{b} violated for dnn {d} iter {i}: slots {sa} >= {sb}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bounds check against the declared dims.
+    pub fn check_bounds(&self) -> Result<(), String> {
+        let Some(d) = self.dims else { return Ok(()) };
+        for &(dn, i, t, s, p) in &self.x {
+            if dn >= d.dnns || i >= d.iterations || t >= d.tiles || s >= d.slots || p >= d.engines {
+                return Err(format!("X entry ({dn},{i},{t},{s},{p}) out of bounds {d:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run every structural check.
+    pub fn validate(&self, deps: &[(usize, usize)]) -> Result<(), String> {
+        self.check_bounds()?;
+        self.check_engine_exclusive()?;
+        self.check_single_placement()?;
+        self.check_dependencies(deps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> TensorDims {
+        TensorDims { dnns: 2, iterations: 1, tiles: 4, slots: 8, engines: 4 }
+    }
+
+    #[test]
+    fn valid_schedule_passes() {
+        let mut m = MappingTensors::new(dims());
+        m.place(0, 0, 0, 0, 0);
+        m.place(0, 0, 1, 1, 1);
+        m.place(1, 0, 0, 0, 2);
+        assert!(m.validate(&[(0, 1)]).is_ok());
+    }
+
+    #[test]
+    fn double_booking_detected() {
+        let mut m = MappingTensors::new(dims());
+        m.place(0, 0, 0, 3, 2);
+        m.place(1, 0, 1, 3, 2);
+        assert!(m.check_engine_exclusive().is_err());
+    }
+
+    #[test]
+    fn double_placement_detected() {
+        let mut m = MappingTensors::new(dims());
+        m.place(0, 0, 0, 0, 0);
+        m.place(0, 0, 0, 1, 1);
+        assert!(m.check_single_placement().is_err());
+    }
+
+    #[test]
+    fn dependency_violation_detected() {
+        let mut m = MappingTensors::new(dims());
+        m.place(0, 0, 0, 5, 0);
+        m.place(0, 0, 1, 2, 1);
+        assert!(m.check_dependencies(&[(0, 1)]).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_detected() {
+        let mut m = MappingTensors::new(dims());
+        m.place(0, 0, 0, 0, 99);
+        assert!(m.check_bounds().is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Engine-scratchpad (SRAM) model: banking, capacity planning and
+//! CACTI-P-calibrated access energy (paper §4.1.1 models on-chip SRAM
+//! with CACTI-P).
+//!
+//! The TSS cascade keeps a segment's weights + double-buffered tile
+//! activations resident per engine; this module answers the two
+//! questions the tiler and the energy book ask:
+//! 1. does a segment *fit* an engine's scratchpad (capacity check that
+//!    feeds the Layer Concatenate-and-Split budget)?
+//! 2. what does a byte cost, as a function of macro size (CACTI's
+//!    energy-per-access grows roughly with √capacity)?
+
+/// One engine's scratchpad configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Scratchpad {
+    /// Total bytes.
+    pub bytes: u64,
+    /// Independent banks (concurrent accesses without conflict).
+    pub banks: usize,
+    /// Word width in bytes (one access moves one word per bank).
+    pub word_bytes: usize,
+}
+
+impl Scratchpad {
+    /// The Table-2 platforms' engine scratchpads.
+    pub fn for_engine(sram_bytes: u64) -> Self {
+        Self { bytes: sram_bytes, banks: 8, word_bytes: 16 }
+    }
+
+    /// CACTI-P-style dynamic energy per byte (J): √capacity scaling
+    /// anchored at 2 pJ/B for a 512 KiB macro (45 nm).
+    pub fn energy_per_byte(&self) -> f64 {
+        const ANCHOR_BYTES: f64 = 512.0 * 1024.0;
+        const ANCHOR_J: f64 = 2.0e-12;
+        ANCHOR_J * (self.bytes as f64 / ANCHOR_BYTES).sqrt().max(0.25)
+    }
+
+    /// Leakage power (W): CACTI-P's leakage grows ~linearly in capacity;
+    /// anchored at 5 mW for 512 KiB (45 nm, low-leakage cells).
+    pub fn leakage_watts(&self) -> f64 {
+        const ANCHOR_BYTES: f64 = 512.0 * 1024.0;
+        const ANCHOR_W: f64 = 5.0e-3;
+        ANCHOR_W * self.bytes as f64 / ANCHOR_BYTES
+    }
+
+    /// Peak bytes/cycle the banks can source.
+    pub fn bytes_per_cycle(&self) -> u64 {
+        (self.banks * self.word_bytes) as u64
+    }
+
+    /// Capacity plan for one resident segment: weights + double-buffered
+    /// input/output tiles.  Returns the bytes required.
+    pub fn segment_footprint(weight_bytes: u64, tile_in_bytes: u64, tile_out_bytes: u64) -> u64 {
+        weight_bytes + 2 * (tile_in_bytes + tile_out_bytes)
+    }
+
+    /// Whether a segment fits (with a 10% allocator margin).
+    pub fn fits(&self, footprint: u64) -> bool {
+        footprint as f64 <= self.bytes as f64 * 0.9
+    }
+
+    /// Cycles to stream `bytes` through the banks, including bank
+    /// conflicts for a given conflict rate in [0, 1).
+    pub fn stream_cycles(&self, bytes: u64, conflict_rate: f64) -> u64 {
+        let ideal = bytes.div_ceil(self.bytes_per_cycle());
+        (ideal as f64 * (1.0 + conflict_rate)).ceil() as u64
+    }
+}
+
+/// Split a segment across `k` engines when it exceeds one scratchpad:
+/// returns the minimum k (weights are partitioned, activations
+/// replicated at the halo).
+pub fn engines_needed(pad: &Scratchpad, weight_bytes: u64, tile_bytes: u64) -> usize {
+    for k in 1..=4096usize {
+        let per_engine =
+            Scratchpad::segment_footprint(weight_bytes / k as u64, tile_bytes, tile_bytes);
+        if pad.fits(per_engine) {
+            return k;
+        }
+    }
+    4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pad() -> Scratchpad {
+        Scratchpad::for_engine(512 * 1024)
+    }
+
+    #[test]
+    fn energy_anchored_and_scaling() {
+        let p = pad();
+        assert!((p.energy_per_byte() - 2.0e-12).abs() < 1e-15);
+        let big = Scratchpad::for_engine(2 * 1024 * 1024);
+        assert!(big.energy_per_byte() > p.energy_per_byte());
+        let small = Scratchpad::for_engine(32 * 1024);
+        assert!(small.energy_per_byte() < p.energy_per_byte());
+    }
+
+    #[test]
+    fn leakage_scales_linearly() {
+        let p = pad();
+        let double = Scratchpad::for_engine(1024 * 1024);
+        assert!((double.leakage_watts() / p.leakage_watts() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_check() {
+        let p = pad();
+        // 300 KiB weights + 2*(32+32) KiB buffers = 428 KiB < 90% of 512 KiB
+        let fp = Scratchpad::segment_footprint(300 << 10, 32 << 10, 32 << 10);
+        assert!(p.fits(fp));
+        // 600 KiB weights never fit
+        assert!(!p.fits(Scratchpad::segment_footprint(600 << 10, 0, 0)));
+    }
+
+    #[test]
+    fn engines_needed_partitions_weights() {
+        let p = pad();
+        // 2 MiB of weights with 16 KiB tiles: needs ~5 engines
+        let k = engines_needed(&p, 2 << 20, 16 << 10);
+        assert!((4..=8).contains(&k), "k = {k}");
+        // tiny segment: one engine
+        assert_eq!(engines_needed(&p, 64 << 10, 8 << 10), 1);
+    }
+
+    #[test]
+    fn stream_cycles_account_for_conflicts() {
+        let p = pad();
+        let clean = p.stream_cycles(1 << 20, 0.0);
+        let contended = p.stream_cycles(1 << 20, 0.5);
+        assert_eq!(clean, (1 << 20) / 128);
+        assert!((contended as f64 / clean as f64 - 1.5).abs() < 0.01);
+    }
+}

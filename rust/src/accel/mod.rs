@@ -1,0 +1,28 @@
+//! Accelerator hardware model: platforms (Table 2), systolic timing,
+//! mesh NoC, SRAM/DRAM energy, the preemptible target graph, and the
+//! ILP-style mapping tensors of §3.1.
+//!
+//! The paper synthesizes Verilog engines at FreePDK-45nm and models SRAM
+//! with CACTI-P and the NoC with McPAT; here the same quantities come
+//! from an analytic model with constants calibrated to the published
+//! 45 nm numbers (DESIGN.md §4 records the substitution).  All evaluation
+//! claims are *relative* (IMMSched vs baselines on identical hardware),
+//! which the analytic model preserves.
+
+pub mod dram;
+pub mod energy;
+pub mod ilp;
+pub mod memory;
+pub mod noc;
+pub mod platform;
+pub mod target_graph;
+pub mod timing;
+
+pub use dram::DramChannel;
+pub use energy::{EnergyBook, EnergyModel};
+pub use ilp::{MappingTensors, TensorDims};
+pub use memory::{engines_needed, Scratchpad};
+pub use noc::{Mesh, NocModel};
+pub use platform::{Platform, PlatformKind};
+pub use target_graph::build_target_graph;
+pub use timing::{tile_cycles, tile_seconds, EngineTiming};

@@ -1,0 +1,118 @@
+//! On-chip network model: 2-D mesh, XY routing, McPAT-calibrated energy
+//! (paper §4.1.1: per-hop energy 0.64 pJ/bit).
+
+use super::platform::Platform;
+
+/// Per-hop NoC energy in pJ/bit (McPAT 1.3, paper §4.1.1).
+pub const HOP_PJ_PER_BIT: f64 = 0.64;
+
+/// Link bandwidth per mesh link, bytes/s.  128-bit links at the platform
+/// clock — one flit per cycle, the standard choice for Planaria-class
+/// meshes.
+pub const LINK_BITS: f64 = 128.0;
+
+/// A mesh instance bound to a platform.
+#[derive(Clone, Copy, Debug)]
+pub struct Mesh {
+    pub cols: usize,
+    pub rows: usize,
+    pub clock_hz: f64,
+}
+
+/// NoC cost model: latency + energy of tile transfers.
+#[derive(Clone, Copy, Debug)]
+pub struct NocModel {
+    pub mesh: Mesh,
+}
+
+impl NocModel {
+    pub fn of(p: &Platform) -> Self {
+        Self {
+            mesh: Mesh { cols: p.mesh_cols, rows: p.mesh_rows(), clock_hz: p.clock_hz },
+        }
+    }
+
+    /// XY-routing hop count between engines.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = (a % self.mesh.cols, a / self.mesh.cols);
+        let (bx, by) = (b % self.mesh.cols, b / self.mesh.cols);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Transfer seconds for `bytes` from engine `a` to engine `b`:
+    /// serialization + per-hop router latency (1 cycle/hop).
+    pub fn transfer_seconds(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        if a == b || bytes == 0 {
+            return 0.0;
+        }
+        let bits = bytes as f64 * 8.0;
+        let serialization = bits / LINK_BITS / self.mesh.clock_hz;
+        let head_latency = self.hops(a, b) as f64 / self.mesh.clock_hz;
+        serialization + head_latency
+    }
+
+    /// Transfer energy in joules (0.64 pJ/bit/hop).
+    pub fn transfer_energy(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        let hops = self.hops(a, b) as f64;
+        bytes as f64 * 8.0 * hops * HOP_PJ_PER_BIT * 1e-12
+    }
+
+    /// Mean hop distance over all engine pairs (used for aggregate
+    /// estimates when placements are not pinned).
+    pub fn mean_hops(&self) -> f64 {
+        let n = self.mesh.cols * self.mesh.rows;
+        let mut total = 0usize;
+        let mut pairs = 0usize;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                total += self.hops(a, b);
+                pairs += 1;
+            }
+        }
+        if pairs == 0 {
+            0.0
+        } else {
+            total as f64 / pairs as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::platform::Platform;
+
+    fn noc() -> NocModel {
+        NocModel::of(&Platform::edge())
+    }
+
+    #[test]
+    fn zero_cost_on_self() {
+        let n = noc();
+        assert_eq!(n.transfer_seconds(3, 3, 4096), 0.0);
+        assert_eq!(n.transfer_energy(3, 3, 4096), 0.0);
+    }
+
+    #[test]
+    fn energy_matches_constant() {
+        let n = noc();
+        // engines 0 and 1 are adjacent: 1 hop
+        let e = n.transfer_energy(0, 1, 1000);
+        assert!((e - 1000.0 * 8.0 * 0.64e-12).abs() < 1e-18);
+    }
+
+    #[test]
+    fn latency_grows_with_bytes_and_hops() {
+        let n = noc();
+        assert!(n.transfer_seconds(0, 1, 4096) < n.transfer_seconds(0, 1, 65536));
+        assert!(n.transfer_seconds(0, 63, 4096) > n.transfer_seconds(0, 1, 4096));
+    }
+
+    #[test]
+    fn mean_hops_reasonable_for_8x8() {
+        let n = noc();
+        let mh = n.mean_hops();
+        // analytic mean Manhattan distance on 8x8 grid ≈ 5.25
+        assert!((5.0..5.6).contains(&mh), "mean hops {mh}");
+    }
+}

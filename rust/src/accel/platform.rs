@@ -1,0 +1,141 @@
+//! Evaluation platforms (paper Table 2).
+//!
+//! We read Table 2 as: **Edge = 64 engines, Cloud = 128 engines**, each
+//! engine a 128×128 int8 MAC systolic array clocked at 700 MHz (the
+//! table's "MACs"/"Engines" columns are swapped relative to their values;
+//! 64/128 can only be the engine counts since both rows share the
+//! 128×128 entry and the Cloud platform must dominate the Edge one).
+//! Only ratios enter the paper's claims, and those are preserved under
+//! either reading.
+
+/// Which evaluation platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    Edge,
+    Cloud,
+}
+
+impl PlatformKind {
+    pub const ALL: [PlatformKind; 2] = [PlatformKind::Edge, PlatformKind::Cloud];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlatformKind::Edge => "Edge",
+            PlatformKind::Cloud => "Cloud",
+        }
+    }
+}
+
+/// A concrete platform instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    pub kind: PlatformKind,
+    /// Number of independent engines (PSO particles map 1:1 onto these).
+    pub engines: usize,
+    /// Systolic array rows per engine.
+    pub array_rows: usize,
+    /// Systolic array cols per engine.
+    pub array_cols: usize,
+    /// Clock in Hz.
+    pub clock_hz: f64,
+    /// Per-engine scratchpad (bytes) for cascaded tiles.
+    pub sram_bytes: u64,
+    /// Mesh side (engines arranged in a square-ish mesh).
+    pub mesh_cols: usize,
+}
+
+impl Platform {
+    /// Table 2, Edge row.
+    pub fn edge() -> Self {
+        Self {
+            kind: PlatformKind::Edge,
+            engines: 64,
+            array_rows: 128,
+            array_cols: 128,
+            clock_hz: 700e6,
+            sram_bytes: 512 * 1024,
+            mesh_cols: 8,
+        }
+    }
+
+    /// Table 2, Cloud row.
+    pub fn cloud() -> Self {
+        Self {
+            kind: PlatformKind::Cloud,
+            engines: 128,
+            array_rows: 128,
+            array_cols: 128,
+            clock_hz: 700e6,
+            sram_bytes: 1024 * 1024,
+            mesh_cols: 16,
+        }
+    }
+
+    pub fn get(kind: PlatformKind) -> Self {
+        match kind {
+            PlatformKind::Edge => Self::edge(),
+            PlatformKind::Cloud => Self::cloud(),
+        }
+    }
+
+    /// MACs per engine per cycle.
+    pub fn engine_macs(&self) -> u64 {
+        (self.array_rows * self.array_cols) as u64
+    }
+
+    /// Peak MACs/s of the whole platform.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        self.engine_macs() as f64 * self.engines as f64 * self.clock_hz
+    }
+
+    /// Mesh rows (engines / mesh_cols, rounded up).
+    pub fn mesh_rows(&self) -> usize {
+        self.engines.div_ceil(self.mesh_cols)
+    }
+
+    /// Mesh coordinates of an engine.
+    pub fn engine_xy(&self, engine: usize) -> (usize, usize) {
+        (engine % self.mesh_cols, engine / self.mesh_cols)
+    }
+
+    /// Manhattan hop distance between two engines.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.engine_xy(a);
+        let (bx, by) = self.engine_xy(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloud_doubles_edge_engines() {
+        assert_eq!(Platform::edge().engines * 2, Platform::cloud().engines);
+    }
+
+    #[test]
+    fn peak_rates() {
+        let e = Platform::edge();
+        // 64 engines * 16384 MACs * 700 MHz
+        assert!((e.peak_macs_per_sec() - 64.0 * 16384.0 * 700e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn mesh_geometry() {
+        let e = Platform::edge();
+        assert_eq!(e.mesh_rows(), 8);
+        assert_eq!(e.engine_xy(0), (0, 0));
+        assert_eq!(e.engine_xy(9), (1, 1));
+        assert_eq!(e.hops(0, 9), 2);
+        assert_eq!(e.hops(0, 63), 14); // (7,7)
+    }
+
+    #[test]
+    fn hops_symmetric_and_zero_on_self() {
+        let c = Platform::cloud();
+        assert_eq!(c.hops(5, 5), 0);
+        assert_eq!(c.hops(3, 100), c.hops(100, 3));
+    }
+}

@@ -1,0 +1,109 @@
+//! Target-graph extraction: the preemptible engine subgraph → `G`.
+//!
+//! The matcher's target graph abstracts "which engines could the urgent
+//! task occupy, and which on-chip links connect them" (paper §3.2: "the
+//! preemptible PE array of the accelerator" as a DAG).  Engines are mesh
+//! nodes; the TSS cascade streams tile outputs along mesh links, so the
+//! target DAG contains an edge a→b when engines a, b are mesh-adjacent
+//! and b follows a in the (row-major snake) cascade order — an acyclic
+//! orientation of the mesh that matches how cascaded engines are chained.
+
+use crate::graph::{Dag, NodeKind};
+
+use super::platform::Platform;
+
+/// Build the target DAG over a set of preemptible engines.
+///
+/// `preemptible[e]` marks engine `e` as available for the urgent task
+/// (idle, or running a lower-priority task below its preemption ratio).
+/// Vertices of the returned DAG are the preemptible engines in ascending
+/// id order; `vertex_engine[v]` maps a vertex back to its engine id.
+pub fn build_target_graph(p: &Platform, preemptible: &[bool]) -> (Dag, Vec<usize>) {
+    assert_eq!(preemptible.len(), p.engines);
+    let engines: Vec<usize> = (0..p.engines).filter(|&e| preemptible[e]).collect();
+    let mut index_of = vec![usize::MAX; p.engines];
+    for (v, &e) in engines.iter().enumerate() {
+        index_of[e] = v;
+    }
+
+    let mut g = Dag::with_nodes(engines.len(), NodeKind::Universal);
+
+    // snake order position: left-to-right on even rows, right-to-left on
+    // odd rows — the cascade order TSS uses to chain engines
+    let snake_pos = |e: usize| -> usize {
+        let (x, y) = p.engine_xy(e);
+        if y % 2 == 0 {
+            y * p.mesh_cols + x
+        } else {
+            y * p.mesh_cols + (p.mesh_cols - 1 - x)
+        }
+    };
+
+    // TSS cascades stream over the NoC, which reaches beyond immediate
+    // mesh neighbors at one extra hop of latency; we admit links up to
+    // 2 hops so the target graph's fan-out can host tile fan-outs from
+    // Layer Concatenate-and-Split (without this, mesh degree ≤ 4 rejects
+    // most NAS-cell queries outright).
+    const REACH: usize = 2;
+    for &e in &engines {
+        for &f in &engines {
+            if e != f && p.hops(e, f) <= REACH && snake_pos(e) < snake_pos(f) {
+                g.add_edge(index_of[e], index_of[f]);
+            }
+        }
+    }
+    (g, engines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_acyclic;
+
+    #[test]
+    fn full_mesh_target_is_connected_dag() {
+        let p = Platform::edge();
+        let (g, map) = build_target_graph(&p, &vec![true; p.engines]);
+        assert_eq!(g.len(), 64);
+        assert_eq!(map.len(), 64);
+        assert!(is_acyclic(&g));
+        // snake chain ⇒ exactly one global source and one global sink
+        assert_eq!(g.sources().len(), 1);
+        // interior engines have both mesh and snake links
+        assert!(g.edge_count() >= 63, "must at least chain all engines");
+    }
+
+    #[test]
+    fn partial_preemptible_set_restricts_vertices() {
+        let p = Platform::edge();
+        let mut pre = vec![false; p.engines];
+        for e in [0usize, 1, 2, 8, 9, 10] {
+            pre[e] = true;
+        }
+        let (g, map) = build_target_graph(&p, &pre);
+        assert_eq!(g.len(), 6);
+        assert_eq!(map, vec![0, 1, 2, 8, 9, 10]);
+        assert!(is_acyclic(&g));
+        // 0-1, 1-2 horizontal; 0-8, 1-9, 2-10 vertical; 9-8? snake row 1
+        // goes right-to-left so 10->9->8:
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 2));
+        assert!(g.has_edge(map.iter().position(|&e| e == 10).unwrap(),
+                           map.iter().position(|&e| e == 9).unwrap()));
+    }
+
+    #[test]
+    fn empty_preemptible_set_gives_empty_graph() {
+        let p = Platform::edge();
+        let (g, map) = build_target_graph(&p, &vec![false; p.engines]);
+        assert!(g.is_empty());
+        assert!(map.is_empty());
+    }
+
+    #[test]
+    fn cloud_target_scales() {
+        let p = Platform::cloud();
+        let (g, _) = build_target_graph(&p, &vec![true; p.engines]);
+        assert_eq!(g.len(), 128);
+        assert!(is_acyclic(&g));
+    }
+}

@@ -1,0 +1,96 @@
+//! Systolic-array timing model: cycles to execute a tile on one engine.
+//!
+//! A weight-stationary 128×128 array computes `rows×cols` MACs per cycle
+//! at an op-dependent utilization (conv/matmul keep the array fed;
+//! depthwise/pool/eltwise cannot fill both dimensions).  Fill+drain adds
+//! `rows + cols` cycles per tile invocation.
+
+use crate::graph::NodeKind;
+
+use super::platform::Platform;
+
+/// Per-engine timing parameters derived from a [`Platform`].
+#[derive(Clone, Copy, Debug)]
+pub struct EngineTiming {
+    pub macs_per_cycle: u64,
+    pub fill_drain_cycles: u64,
+    pub clock_hz: f64,
+}
+
+impl EngineTiming {
+    pub fn of(p: &Platform) -> Self {
+        Self {
+            macs_per_cycle: p.engine_macs(),
+            fill_drain_cycles: (p.array_rows + p.array_cols) as u64,
+            clock_hz: p.clock_hz,
+        }
+    }
+}
+
+/// Array utilization by tile kind.
+///
+/// Compute tiles (conv/matmul) stream well; comparison tiles use only the
+/// comparator-augmented accumulator tree (paper §3.4), eltwise tiles only
+/// one array dimension.
+pub fn utilization(kind: NodeKind) -> f64 {
+    match kind {
+        NodeKind::Compute => 0.75,
+        NodeKind::Compare => 0.10,
+        NodeKind::Eltwise => 0.125,
+        NodeKind::Move => 0.25,
+        NodeKind::Universal => 0.75,
+    }
+}
+
+/// Cycles for `macs` MACs of a `kind` tile on one engine.
+pub fn tile_cycles(timing: &EngineTiming, kind: NodeKind, macs: u64) -> u64 {
+    if macs == 0 {
+        return timing.fill_drain_cycles;
+    }
+    let effective = (timing.macs_per_cycle as f64 * utilization(kind)).max(1.0);
+    (macs as f64 / effective).ceil() as u64 + timing.fill_drain_cycles
+}
+
+/// Seconds for `macs` MACs of a `kind` tile on one engine.
+pub fn tile_seconds(timing: &EngineTiming, kind: NodeKind, macs: u64) -> f64 {
+    tile_cycles(timing, kind, macs) as f64 / timing.clock_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing() -> EngineTiming {
+        EngineTiming::of(&Platform::edge())
+    }
+
+    #[test]
+    fn zero_work_costs_fill_drain() {
+        let t = timing();
+        assert_eq!(tile_cycles(&t, NodeKind::Compute, 0), 256);
+    }
+
+    #[test]
+    fn compute_cycles_scale_linearly() {
+        let t = timing();
+        let one = tile_cycles(&t, NodeKind::Compute, 10_000_000);
+        let two = tile_cycles(&t, NodeKind::Compute, 20_000_000);
+        let ratio = (two - 256) as f64 / (one - 256) as f64;
+        assert!((ratio - 2.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn compare_tiles_slower_than_compute() {
+        let t = timing();
+        let macs = 50_000_000;
+        assert!(tile_cycles(&t, NodeKind::Compare, macs) > tile_cycles(&t, NodeKind::Compute, macs));
+    }
+
+    #[test]
+    fn seconds_match_clock() {
+        let t = timing();
+        let cycles = tile_cycles(&t, NodeKind::Compute, 1_000_000);
+        let secs = tile_seconds(&t, NodeKind::Compute, 1_000_000);
+        assert!((secs - cycles as f64 / 700e6).abs() < 1e-15);
+    }
+}

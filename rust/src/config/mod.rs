@@ -1,0 +1,12 @@
+//! Typed configuration system with a hand-rolled TOML-subset parser
+//! (offline substitute for `serde` + `toml`, DESIGN.md §4).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float and boolean values, `#` comments.  That
+//! subset covers everything the launcher and benches need.
+
+mod parser;
+mod types;
+
+pub use parser::{parse_toml, TomlValue};
+pub use types::{Config, PsoSection, SchedulerSection, SimSection, WorkloadSection};

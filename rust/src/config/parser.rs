@@ -1,0 +1,157 @@
+//! TOML-subset parser: sections, scalar key/values, comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Scalar values the subset supports.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse the subset: map of `section.key` -> value ("" section for
+/// top-level keys).
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section header {line:?}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let parsed = parse_value(val)
+            .ok_or_else(|| anyhow::anyhow!("line {}: cannot parse value {val:?}", lineno + 1))?;
+        let full_key = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full_key, parsed);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Option<TomlValue> {
+    if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+        return Some(TomlValue::Str(v[1..v.len() - 1].to_string()));
+    }
+    match v {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let text = r#"
+# top comment
+name = "immsched"
+[pso]
+particles = 16
+w = 0.72
+relaxed = true
+[sim]
+seed = 42   # trailing comment
+"#;
+        let m = parse_toml(text).unwrap();
+        assert_eq!(m["name"], TomlValue::Str("immsched".into()));
+        assert_eq!(m["pso.particles"], TomlValue::Int(16));
+        assert_eq!(m["pso.w"], TomlValue::Float(0.72));
+        assert_eq!(m["pso.relaxed"], TomlValue::Bool(true));
+        assert_eq!(m["sim.seed"], TomlValue::Int(42));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let m = parse_toml("tag = \"a#b\"").unwrap();
+        assert_eq!(m["tag"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(parse_toml("[broken").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("k = @@@").is_err());
+        assert!(parse_toml("= 3").is_err());
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let m = parse_toml("x = 3").unwrap();
+        assert_eq!(m["x"].as_float(), Some(3.0));
+    }
+}

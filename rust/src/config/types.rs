@@ -1,0 +1,310 @@
+//! Typed configuration: defaults + TOML-subset overlay + validation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::PlatformKind;
+use crate::matcher::PsoConfig;
+use crate::workload::WorkloadClass;
+
+use super::parser::{parse_toml, TomlValue};
+
+/// `[pso]` section — matcher hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PsoSection {
+    pub particles: usize,
+    pub epochs: usize,
+    pub steps: usize,
+    pub w: f32,
+    pub c1: f32,
+    pub c2: f32,
+    pub c3: f32,
+    pub elite: usize,
+    pub relaxed: bool,
+    pub repair_budget: u64,
+}
+
+impl Default for PsoSection {
+    fn default() -> Self {
+        let d = PsoConfig::default();
+        Self {
+            particles: d.particles,
+            epochs: d.epochs,
+            steps: d.steps,
+            w: d.w,
+            c1: d.c1,
+            c2: d.c2,
+            c3: d.c3,
+            elite: d.elite,
+            relaxed: d.relaxed,
+            repair_budget: d.repair_budget,
+        }
+    }
+}
+
+impl PsoSection {
+    /// Materialize a matcher config with the given seed.
+    pub fn to_pso_config(&self, seed: u64) -> PsoConfig {
+        PsoConfig {
+            particles: self.particles,
+            epochs: self.epochs,
+            steps: self.steps,
+            w: self.w,
+            c1: self.c1,
+            c2: self.c2,
+            c3: self.c3,
+            elite: self.elite,
+            relaxed: self.relaxed,
+            early_exit: true,
+            repair_budget: self.repair_budget,
+            seed,
+        }
+    }
+}
+
+/// `[sim]` section — trace + simulation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimSection {
+    pub seed: u64,
+    /// Background (periodic) task count.
+    pub background_tasks: usize,
+    /// Urgent-task Poisson arrival rate λ (tasks/s).
+    pub arrival_rate: f64,
+    /// Simulated horizon in seconds.
+    pub horizon: f64,
+    /// Deadline slack factor for urgent tasks (deadline = arrival +
+    /// factor × isolated execution time).
+    pub deadline_factor: f64,
+}
+
+impl Default for SimSection {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            background_tasks: 4,
+            arrival_rate: 50.0,
+            horizon: 1.0,
+            deadline_factor: 3.0,
+        }
+    }
+}
+
+/// `[workload]` section.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSection {
+    pub class: WorkloadClass,
+    /// Tile budget for Layer Concatenate-and-Split.
+    pub max_tiles: usize,
+    pub split_factor: usize,
+}
+
+impl Default for WorkloadSection {
+    fn default() -> Self {
+        Self { class: WorkloadClass::Simple, max_tiles: 16, split_factor: 2 }
+    }
+}
+
+/// `[scheduler]` section.
+#[derive(Clone, Debug)]
+pub struct SchedulerSection {
+    /// Framework name: immsched | isosched | prema | planaria | moca | cdmsa.
+    pub name: String,
+    /// Adaptive single-core preemption ratio cap (fraction of engines a
+    /// single interrupt may claim).
+    pub preemption_ratio: f64,
+    /// Use the PJRT artifact for the epoch (false = native fallback).
+    pub use_pjrt: bool,
+}
+
+impl Default for SchedulerSection {
+    fn default() -> Self {
+        Self { name: "immsched".into(), preemption_ratio: 0.5, use_pjrt: true }
+    }
+}
+
+/// Full configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub platform: PlatformKind,
+    pub pso: PsoSection,
+    pub sim: SimSection,
+    pub workload: WorkloadSection,
+    pub scheduler: SchedulerSection,
+}
+
+impl Default for PlatformKind {
+    fn default() -> Self {
+        PlatformKind::Edge
+    }
+}
+
+impl Config {
+    /// Parse a config file over the defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse TOML-subset text over the defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let map = parse_toml(text)?;
+        let mut cfg = Config::default();
+        cfg.apply(&map)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply `key=value` overrides (CLI `--set section.key=value`).
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let map = parse_toml(spec)?;
+        self.apply(&map)?;
+        self.validate()
+    }
+
+    fn apply(&mut self, map: &BTreeMap<String, TomlValue>) -> Result<()> {
+        for (key, val) in map {
+            match key.as_str() {
+                "platform" => {
+                    self.platform = match val.as_str() {
+                        Some("edge") | Some("Edge") => PlatformKind::Edge,
+                        Some("cloud") | Some("Cloud") => PlatformKind::Cloud,
+                        other => bail!("unknown platform {other:?}"),
+                    }
+                }
+                "pso.particles" => self.pso.particles = int(val, key)? as usize,
+                "pso.epochs" => self.pso.epochs = int(val, key)? as usize,
+                "pso.steps" => self.pso.steps = int(val, key)? as usize,
+                "pso.w" => self.pso.w = float(val, key)? as f32,
+                "pso.c1" => self.pso.c1 = float(val, key)? as f32,
+                "pso.c2" => self.pso.c2 = float(val, key)? as f32,
+                "pso.c3" => self.pso.c3 = float(val, key)? as f32,
+                "pso.elite" => self.pso.elite = int(val, key)? as usize,
+                "pso.relaxed" => self.pso.relaxed = boolean(val, key)?,
+                "pso.repair_budget" => self.pso.repair_budget = int(val, key)? as u64,
+                "sim.seed" => self.sim.seed = int(val, key)? as u64,
+                "sim.background_tasks" => self.sim.background_tasks = int(val, key)? as usize,
+                "sim.arrival_rate" => self.sim.arrival_rate = float(val, key)?,
+                "sim.horizon" => self.sim.horizon = float(val, key)?,
+                "sim.deadline_factor" => self.sim.deadline_factor = float(val, key)?,
+                "workload.class" => {
+                    self.workload.class = match val.as_str() {
+                        Some("simple") | Some("Simple") => WorkloadClass::Simple,
+                        Some("middle") | Some("Middle") => WorkloadClass::Middle,
+                        Some("complex") | Some("Complex") => WorkloadClass::Complex,
+                        other => bail!("unknown workload class {other:?}"),
+                    }
+                }
+                "workload.max_tiles" => self.workload.max_tiles = int(val, key)? as usize,
+                "workload.split_factor" => self.workload.split_factor = int(val, key)? as usize,
+                "scheduler.name" => {
+                    self.scheduler.name = val
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("scheduler.name must be a string"))?
+                        .to_string()
+                }
+                "scheduler.preemption_ratio" => self.scheduler.preemption_ratio = float(val, key)?,
+                "scheduler.use_pjrt" => self.scheduler.use_pjrt = boolean(val, key)?,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Structural validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.pso.particles == 0 || self.pso.epochs == 0 || self.pso.steps == 0 {
+            bail!("pso.particles/epochs/steps must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.scheduler.preemption_ratio) {
+            bail!("scheduler.preemption_ratio must be in [0,1]");
+        }
+        if self.sim.arrival_rate <= 0.0 || self.sim.horizon <= 0.0 {
+            bail!("sim.arrival_rate and sim.horizon must be positive");
+        }
+        if self.workload.max_tiles < 2 {
+            bail!("workload.max_tiles must be >= 2");
+        }
+        const KNOWN: [&str; 6] = ["immsched", "isosched", "prema", "planaria", "moca", "cdmsa"];
+        if !KNOWN.contains(&self.scheduler.name.as_str()) {
+            bail!("unknown scheduler {:?} (known: {KNOWN:?})", self.scheduler.name);
+        }
+        Ok(())
+    }
+}
+
+fn int(v: &TomlValue, key: &str) -> Result<i64> {
+    v.as_int().ok_or_else(|| anyhow::anyhow!("{key} must be an integer"))
+}
+
+fn float(v: &TomlValue, key: &str) -> Result<f64> {
+    v.as_float().ok_or_else(|| anyhow::anyhow!("{key} must be a number"))
+}
+
+fn boolean(v: &TomlValue, key: &str) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key} must be a boolean"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_file_parses() {
+        let cfg = Config::from_toml(
+            r#"
+platform = "cloud"
+[pso]
+particles = 32
+relaxed = false
+[sim]
+arrival_rate = 100.0
+[workload]
+class = "complex"
+[scheduler]
+name = "isosched"
+preemption_ratio = 0.25
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.platform, PlatformKind::Cloud);
+        assert_eq!(cfg.pso.particles, 32);
+        assert!(!cfg.pso.relaxed);
+        assert_eq!(cfg.workload.class, WorkloadClass::Complex);
+        assert_eq!(cfg.scheduler.name, "isosched");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_toml("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(Config::from_toml("[scheduler]\nname = \"nope\"").is_err());
+        assert!(Config::from_toml("[scheduler]\npreemption_ratio = 2.0").is_err());
+        assert!(Config::from_toml("[pso]\nparticles = 0").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = Config::default();
+        cfg.apply_override("pso.steps = 99").unwrap();
+        assert_eq!(cfg.pso.steps, 99);
+    }
+
+    #[test]
+    fn pso_section_converts() {
+        let cfg = Config::default();
+        let pso = cfg.pso.to_pso_config(7);
+        assert_eq!(pso.seed, 7);
+        assert_eq!(pso.particles, cfg.pso.particles);
+    }
+}

@@ -1,0 +1,352 @@
+//! The global controller (paper §3.4): epoch orchestration + consensus
+//! fusion over the PJRT-executed PSO epochs.
+
+use anyhow::Result;
+
+use crate::matcher::{
+    elite_consensus, mapping_is_feasible, project_greedy, Mapping, PsoConfig, QuantizedMatcher,
+};
+use crate::runtime::{ArtifactRegistry, EpochInputs, EpochRunner, RuntimeClient, SizeClass};
+use crate::util::{MatF, Rng};
+
+/// Which execution path served a match request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchPath {
+    /// AOT artifact through PJRT (the production hot path).
+    Pjrt,
+    /// Native quantized matcher (fallback: artifact missing/corrupt or
+    /// problem larger than every size class).
+    NativeFallback,
+}
+
+/// Result of one interrupt's subgraph-matching episode.
+#[derive(Clone, Debug)]
+pub struct MatchOutcome {
+    pub mappings: Vec<Mapping>,
+    pub best_fitness: f32,
+    pub epochs_run: usize,
+    pub path: MatchPath,
+    /// Wall-clock of the episode on this host (telemetry; the simulator
+    /// uses the analytic cost model instead).
+    pub host_seconds: f64,
+}
+
+impl MatchOutcome {
+    pub fn matched(&self) -> bool {
+        !self.mappings.is_empty()
+    }
+}
+
+/// Cumulative controller telemetry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ControllerStats {
+    pub requests: u64,
+    pub matched: u64,
+    pub fallbacks: u64,
+    pub epochs_total: u64,
+}
+
+/// The global controller.  Owns the PJRT client + compiled epoch
+/// executables; single-threaded by design (the event loop serializes
+/// requests onto it).
+pub struct GlobalController {
+    config: PsoConfig,
+    runners: Vec<EpochRunner>,
+    stats: ControllerStats,
+}
+
+impl GlobalController {
+    /// Load every artifact in the registry.  Missing artifacts are
+    /// tolerated (the controller degrades to the native matcher and
+    /// logs); a present-but-corrupt artifact is also tolerated the same
+    /// way.
+    pub fn new(config: PsoConfig) -> Result<Self> {
+        let mut runners = Vec::new();
+        match ArtifactRegistry::discover(&ArtifactRegistry::default_dir()) {
+            Ok(registry) => match RuntimeClient::cpu() {
+                Ok(client) => {
+                    for artifact in registry.all() {
+                        match EpochRunner::load(&client, artifact) {
+                            Ok(r) => runners.push(r),
+                            Err(e) => {
+                                log::warn!("artifact '{}' unusable: {e:#}; skipping", artifact.name)
+                            }
+                        }
+                    }
+                }
+                Err(e) => log::warn!("PJRT client unavailable: {e:#}; native fallback only"),
+            },
+            Err(e) => log::warn!("no artifacts: {e:#}; native fallback only"),
+        }
+        Ok(Self { config, runners, stats: ControllerStats::default() })
+    }
+
+    /// A controller with no artifacts (tests / forced fallback).
+    pub fn native_only(config: PsoConfig) -> Self {
+        Self { config, runners: Vec::new(), stats: ControllerStats::default() }
+    }
+
+    pub fn stats(&self) -> ControllerStats {
+        self.stats
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        !self.runners.is_empty()
+    }
+
+    /// Serve one interrupt: find feasible mappings of `query` into
+    /// `target` under `mask`.
+    pub fn find_mapping(&mut self, mask: &MatF, q: &MatF, g: &MatF) -> MatchOutcome {
+        self.stats.requests += 1;
+        let started = std::time::Instant::now();
+        let (n, m) = (q.rows(), g.rows());
+        let runner_idx = self
+            .runners
+            .iter()
+            .position(|r| r.class().fits(n, m));
+
+        let mut outcome = match runner_idx {
+            Some(idx) => match self.run_pjrt(idx, mask, q, g) {
+                Ok(o) => o,
+                Err(e) => {
+                    log::warn!("PJRT epoch failed: {e:#}; native fallback");
+                    self.stats.fallbacks += 1;
+                    self.run_native(mask, q, g)
+                }
+            },
+            None => {
+                if !self.runners.is_empty() {
+                    log::warn!("problem {n}x{m} exceeds all size classes; native fallback");
+                }
+                self.stats.fallbacks += 1;
+                self.run_native(mask, q, g)
+            }
+        };
+        outcome.host_seconds = started.elapsed().as_secs_f64();
+        if outcome.matched() {
+            self.stats.matched += 1;
+        }
+        self.stats.epochs_total += outcome.epochs_run as u64;
+        outcome
+    }
+
+    /// T-epoch outer loop over the AOT artifact: the paper's consensus-
+    /// guided exploration, with projection + verification on the
+    /// controller.
+    fn run_pjrt(&mut self, runner_idx: usize, mask: &MatF, q: &MatF, g: &MatF) -> Result<MatchOutcome> {
+        let cfg = self.config;
+        let runner = &self.runners[runner_idx];
+        let class = runner.class();
+        let (n, m) = (q.rows(), g.rows());
+        let (pn, pm, parts) = (class.n, class.m, class.particles);
+        let mut rng = Rng::new(cfg.seed ^ 0xC0DE);
+
+        // padded, flat inputs; padding rows keep zero mask + zero S
+        let mut inputs = EpochInputs::zeros(class);
+        inputs.coefs = [cfg.w, cfg.c1, cfg.c2, cfg.c3];
+        pad_into(&mut inputs.mask, mask, pn, pm);
+        pad_into(&mut inputs.q, q, pn, pn);
+        pad_into(&mut inputs.g, g, pm, pm);
+
+        let mut best_fitness = f32::NEG_INFINITY;
+        let mut mappings: Vec<Mapping> = Vec::new();
+        let mut s_star: Vec<f32> = vec![0.0; pn * pm];
+        let mut s_bar: Vec<f32> = vec![0.0; pn * pm];
+        let mut have_star = false;
+        let mut epochs_run = 0;
+
+        for epoch in 0..cfg.epochs {
+            epochs_run += 1;
+            // fresh particles every epoch (Algorithm 1 line 4)
+            for p in 0..parts {
+                init_padded_particle(&mut inputs.s[p * pn * pm..(p + 1) * pn * pm], mask, pn, pm, &mut rng);
+            }
+            inputs.v.iter_mut().for_each(|x| *x = 0.0);
+            inputs.s_local.copy_from_slice(&inputs.s);
+            inputs.f_local.iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
+            if have_star {
+                inputs.s_star.copy_from_slice(&s_star);
+                inputs.s_bar.copy_from_slice(&s_bar);
+            } else {
+                inputs.s_star.copy_from_slice(&inputs.s[..pn * pm]);
+                inputs.s_bar.copy_from_slice(&inputs.s[..pn * pm]);
+            }
+            inputs.seed = (cfg.seed as u32).wrapping_add(epoch as u32 * 7919);
+
+            let out = runner.run(&inputs)?;
+
+            // controller-side: rank particles, update S*, project+verify
+            let mut order: Vec<usize> = (0..parts).collect();
+            order.sort_by(|&a, &b| out.f_local[b].partial_cmp(&out.f_local[a]).unwrap());
+            let best = order[0];
+            if out.f_local[best] > best_fitness {
+                best_fitness = out.f_local[best];
+                s_star.copy_from_slice(&out.s_local[best * pn * pm..(best + 1) * pn * pm]);
+                have_star = true;
+            }
+
+            let mut elites: Vec<MatF> = Vec::new();
+            let mut elite_fit: Vec<f32> = Vec::new();
+            for &p in order.iter().take(cfg.elite.max(1)) {
+                elites.push(unpad(&out.s_local[p * pn * pm..(p + 1) * pn * pm], pn, pm, pn, pm));
+                elite_fit.push(out.f_local[p]);
+            }
+            let consensus = elite_consensus(&elites, &elite_fit, cfg.elite);
+            s_bar.copy_from_slice(consensus.as_slice());
+
+            for p in 0..parts {
+                let s_full = unpad(&out.s[p * pn * pm..(p + 1) * pn * pm], pn, pm, n, m);
+                let candidate = project_greedy(&s_full, mask);
+                if mapping_is_feasible(&candidate, q, g) && !mappings.contains(&candidate) {
+                    mappings.push(candidate);
+                }
+            }
+            if !mappings.is_empty() && cfg.early_exit {
+                break;
+            }
+        }
+
+        // final repair attempt if the swarm converged but projection failed
+        if mappings.is_empty() {
+            let (repaired, _) =
+                crate::matcher::ullmann_find_first(mask, q, g, cfg.repair_budget);
+            if let Some(mp) = repaired {
+                mappings.push(mp);
+            }
+        }
+
+        Ok(MatchOutcome {
+            mappings,
+            best_fitness,
+            epochs_run,
+            path: MatchPath::Pjrt,
+            host_seconds: 0.0,
+        })
+    }
+
+    fn run_native(&mut self, mask: &MatF, q: &MatF, g: &MatF) -> MatchOutcome {
+        let out = QuantizedMatcher::new(self.config).run(mask, q, g);
+        MatchOutcome {
+            mappings: out.mappings,
+            best_fitness: out.best_fitness,
+            epochs_run: out.epochs_run,
+            path: MatchPath::NativeFallback,
+            host_seconds: 0.0,
+        }
+    }
+
+    /// Size class the controller would use (None = fallback).
+    pub fn class_for(&self, n: usize, m: usize) -> Option<SizeClass> {
+        self.runners.iter().find(|r| r.class().fits(n, m)).map(|r| r.class())
+    }
+}
+
+/// Copy `src` (r×c) into the top-left of a padded flat (pr×pc) buffer.
+fn pad_into(dst: &mut [f32], src: &MatF, pr: usize, pc: usize) {
+    assert!(src.rows() <= pr && src.cols() <= pc);
+    dst.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..src.rows() {
+        dst[i * pc..i * pc + src.cols()].copy_from_slice(src.row(i));
+    }
+}
+
+/// Extract the top-left (r×c) of a padded flat (pr×pc) buffer.
+fn unpad(flat: &[f32], pr: usize, pc: usize, r: usize, c: usize) -> MatF {
+    assert!(r <= pr && c <= pc);
+    let mut out = MatF::zeros(r, c);
+    for i in 0..r {
+        out.row_mut(i).copy_from_slice(&flat[i * pc..i * pc + c]);
+    }
+    out
+}
+
+/// Random mask-respecting row-stochastic init of one padded particle.
+fn init_padded_particle(flat: &mut [f32], mask: &MatF, pn: usize, pm: usize, rng: &mut Rng) {
+    flat.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..mask.rows() {
+        let mut sum = 0.0;
+        for j in 0..mask.cols() {
+            if mask[(i, j)] != 0.0 {
+                let v = rng.f32() + 1e-3;
+                flat[i * pm + j] = v;
+                sum += v;
+            }
+        }
+        if sum > 0.0 {
+            for j in 0..mask.cols() {
+                flat[i * pm + j] /= sum;
+            }
+        }
+    }
+    let _ = pn;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::build_mask;
+
+    fn chain_problem(n: usize, m: usize) -> (MatF, MatF, MatF) {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        (build_mask(&qd, &gd), qd.adjacency(), gd.adjacency())
+    }
+
+    #[test]
+    fn native_fallback_matches() {
+        let (mask, q, g) = chain_problem(4, 8);
+        let mut ctl = GlobalController::native_only(PsoConfig { seed: 3, ..Default::default() });
+        let out = ctl.find_mapping(&mask, &q, &g);
+        assert_eq!(out.path, MatchPath::NativeFallback);
+        assert!(out.matched());
+        assert!(mapping_is_feasible(&out.mappings[0], &q, &g));
+        assert_eq!(ctl.stats().fallbacks, 1);
+        assert_eq!(ctl.stats().matched, 1);
+    }
+
+    #[test]
+    fn pjrt_path_matches_when_artifacts_present() {
+        let mut ctl = match GlobalController::new(PsoConfig { seed: 5, ..Default::default() }) {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        if !ctl.has_pjrt() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (mask, q, g) = chain_problem(4, 8);
+        let out = ctl.find_mapping(&mask, &q, &g);
+        assert_eq!(out.path, MatchPath::Pjrt);
+        assert!(out.matched(), "PJRT path found no mapping (fitness {})", out.best_fitness);
+        assert!(mapping_is_feasible(&out.mappings[0], &q, &g));
+    }
+
+    #[test]
+    fn oversized_problem_falls_back() {
+        let mut ctl = match GlobalController::new(PsoConfig::default()) {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        // 200 query vertices exceeds every size class
+        let (mask, q, g) = chain_problem(4, 8);
+        let _ = (mask, q, g);
+        let big_q = gen_chain(200, NodeKind::Compute);
+        let big_g = gen_chain(210, NodeKind::Universal);
+        let mask = build_mask(&big_q, &big_g);
+        let out = ctl.find_mapping(&mask, &big_q.adjacency(), &big_g.adjacency());
+        assert_eq!(out.path, MatchPath::NativeFallback);
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let src = MatF::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        let mut flat = vec![0.0; 8 * 16];
+        pad_into(&mut flat, &src, 8, 16);
+        let back = unpad(&flat, 8, 16, 3, 5);
+        assert_eq!(back, src);
+        // padding region is zero
+        assert_eq!(flat[3 * 16 + 0], 0.0);
+        assert_eq!(flat[0 * 16 + 5], 0.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Interrupt service loop: a dedicated controller thread owning the PJRT
+//! runtime, fed by an mpsc channel (offline substitute for the tokio
+//! actor pattern, DESIGN.md §4).
+//!
+//! Request flow (paper Fig. 1c): an urgent task arrives → the caller
+//! sends an [`InterruptRequest`] with the query/target/mask and a
+//! response channel → the controller thread runs the matching episode →
+//! the caller receives the [`InterruptResponse`].  The controller thread
+//! is the *only* owner of the PJRT client, so the hot path is lock-free.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::matcher::{Mapping, PsoConfig};
+use crate::util::MatF;
+
+use super::controller::{ControllerStats, GlobalController, MatchOutcome};
+
+/// One urgent-task interrupt.
+pub struct InterruptRequest {
+    pub mask: MatF,
+    pub q: MatF,
+    pub g: MatF,
+    /// Reply channel for this request.
+    pub respond: mpsc::Sender<InterruptResponse>,
+}
+
+/// The controller's answer.
+#[derive(Clone, Debug)]
+pub struct InterruptResponse {
+    pub mappings: Vec<Mapping>,
+    pub best_fitness: f32,
+    pub epochs_run: usize,
+    pub host_seconds: f64,
+    pub used_pjrt: bool,
+}
+
+impl From<MatchOutcome> for InterruptResponse {
+    fn from(o: MatchOutcome) -> Self {
+        Self {
+            used_pjrt: o.path == super::controller::MatchPath::Pjrt,
+            mappings: o.mappings,
+            best_fitness: o.best_fitness,
+            epochs_run: o.epochs_run,
+            host_seconds: o.host_seconds,
+        }
+    }
+}
+
+enum Msg {
+    Interrupt(InterruptRequest),
+    Stats(mpsc::Sender<ControllerStats>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator thread.
+pub struct CoordinatorHandle {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl CoordinatorHandle {
+    /// Spawn the controller thread.  Artifact/client failures degrade to
+    /// the native matcher inside the thread (never fatal).
+    pub fn spawn(config: PsoConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("immsched-controller".into())
+            .spawn(move || {
+                let mut controller = match GlobalController::new(config) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        log::warn!("controller init degraded: {e:#}");
+                        GlobalController::native_only(config)
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Interrupt(req) => {
+                            let outcome = controller.find_mapping(&req.mask, &req.q, &req.g);
+                            // receiver may have given up (deadline) — ignore errors
+                            let _ = req.respond.send(outcome.into());
+                        }
+                        Msg::Stats(reply) => {
+                            let _ = reply.send(controller.stats());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })?;
+        Ok(Self { tx, join: Some(join) })
+    }
+
+    /// Submit an interrupt and wait for the answer.
+    pub fn match_blocking(&self, mask: MatF, q: MatF, g: MatF) -> Result<InterruptResponse> {
+        let (respond, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Interrupt(InterruptRequest { mask, q, g, respond }))
+            .map_err(|_| anyhow::anyhow!("controller thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("controller dropped the request"))
+    }
+
+    /// Submit an interrupt without blocking; returns the receiver.
+    pub fn match_async(
+        &self,
+        mask: MatF,
+        q: MatF,
+        g: MatF,
+    ) -> Result<mpsc::Receiver<InterruptResponse>> {
+        let (respond, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Interrupt(InterruptRequest { mask, q, g, respond }))
+            .map_err(|_| anyhow::anyhow!("controller thread gone"))?;
+        Ok(rx)
+    }
+
+    /// Controller telemetry.
+    pub fn stats(&self) -> Result<ControllerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Stats(tx)).map_err(|_| anyhow::anyhow!("controller thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("controller dropped the request"))
+    }
+}
+
+impl Drop for CoordinatorHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::{build_mask, mapping_is_feasible};
+
+    fn chain_problem(n: usize, m: usize) -> (MatF, MatF, MatF) {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        (build_mask(&qd, &gd), qd.adjacency(), gd.adjacency())
+    }
+
+    #[test]
+    fn interrupt_round_trip() {
+        let handle = CoordinatorHandle::spawn(PsoConfig { seed: 9, ..Default::default() }).unwrap();
+        let (mask, q, g) = chain_problem(4, 8);
+        let resp = handle.match_blocking(mask, q.clone(), g.clone()).unwrap();
+        assert!(!resp.mappings.is_empty());
+        assert!(mapping_is_feasible(&resp.mappings[0], &q, &g));
+        let stats = handle.stats().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.matched, 1);
+    }
+
+    #[test]
+    fn concurrent_interrupts_are_serialized_safely() {
+        let handle = CoordinatorHandle::spawn(PsoConfig { seed: 10, ..Default::default() }).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (mask, q, g) = chain_problem(3 + i % 2, 8);
+            rxs.push((q.clone(), g.clone(), handle.match_async(mask, q, g).unwrap()));
+        }
+        for (q, g, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(!resp.mappings.is_empty());
+            assert!(mapping_is_feasible(&resp.mappings[0], &q, &g));
+        }
+        assert_eq!(handle.stats().unwrap().requests, 4);
+    }
+
+    #[test]
+    fn shutdown_on_drop_does_not_hang() {
+        let handle = CoordinatorHandle::spawn(PsoConfig::default()).unwrap();
+        drop(handle);
+    }
+}

@@ -1,0 +1,192 @@
+//! Request router + priority queue for the coordinator front-end.
+//!
+//! The interrupt service loop (event_loop.rs) serializes matching onto
+//! the controller thread; this module is the admission stage in front of
+//! it: requests are classified, deadline-tagged, queued by (priority,
+//! deadline) and expired requests are shed *before* they waste a
+//! matching episode — the L3 backpressure mechanism.
+
+use std::collections::BinaryHeap;
+
+use crate::scheduler::Priority;
+
+/// A queued interrupt request (payload-agnostic: the router orders ids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub priority: Priority,
+    /// Absolute deadline (s since epoch start); None = best-effort.
+    pub deadline: Option<f64>,
+    /// Enqueue time.
+    pub enqueued_at: f64,
+}
+
+impl Eq for QueuedRequest {}
+
+impl PartialOrd for QueuedRequest {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedRequest {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap: higher priority first, then earlier deadline, then FIFO
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| {
+                let da = self.deadline.unwrap_or(f64::INFINITY);
+                let db = other.deadline.unwrap_or(f64::INFINITY);
+                db.partial_cmp(&da).unwrap() // earlier deadline = greater
+            })
+            .then_with(|| other.enqueued_at.partial_cmp(&self.enqueued_at).unwrap())
+    }
+}
+
+/// Router statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RouterStats {
+    pub admitted: u64,
+    pub shed_expired: u64,
+    pub shed_capacity: u64,
+    pub served: u64,
+}
+
+/// Bounded priority router.
+#[derive(Debug)]
+pub struct RequestRouter {
+    heap: BinaryHeap<QueuedRequest>,
+    capacity: usize,
+    stats: RouterStats,
+}
+
+impl RequestRouter {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { heap: BinaryHeap::new(), capacity, stats: RouterStats::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        self.stats
+    }
+
+    /// Admit a request.  Returns `false` if shed (expired on arrival or
+    /// queue full of higher-priority work).
+    pub fn admit(&mut self, req: QueuedRequest, now: f64) -> bool {
+        if req.deadline.is_some_and(|d| d <= now) {
+            self.stats.shed_expired += 1;
+            return false;
+        }
+        if self.heap.len() >= self.capacity {
+            // shed the *worst* queued request if the newcomer beats it;
+            // otherwise shed the newcomer (bounded queue, no livelock)
+            let worst_is_better = self.heap.iter().min().map_or(false, |w| *w >= req);
+            if worst_is_better {
+                self.stats.shed_capacity += 1;
+                return false;
+            }
+            // rebuild without the single worst element
+            let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
+            if let Some(pos) = all
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.cmp(b))
+                .map(|(i, _)| i)
+            {
+                all.swap_remove(pos);
+                self.stats.shed_capacity += 1;
+            }
+            self.heap = all.into();
+        }
+        self.stats.admitted += 1;
+        self.heap.push(req);
+        true
+    }
+
+    /// Pop the next request to serve, shedding anything already expired.
+    pub fn next(&mut self, now: f64) -> Option<QueuedRequest> {
+        while let Some(req) = self.heap.pop() {
+            if req.deadline.is_some_and(|d| d <= now) {
+                self.stats.shed_expired += 1;
+                continue;
+            }
+            self.stats.served += 1;
+            return Some(req);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, priority: Priority, deadline: Option<f64>, t: f64) -> QueuedRequest {
+        QueuedRequest { id, priority, deadline, enqueued_at: t }
+    }
+
+    #[test]
+    fn priority_then_deadline_then_fifo() {
+        let mut r = RequestRouter::new(16);
+        r.admit(req(1, Priority::Background, None, 0.0), 0.0);
+        r.admit(req(2, Priority::Urgent, Some(5.0), 0.1), 0.1);
+        r.admit(req(3, Priority::Urgent, Some(2.0), 0.2), 0.2);
+        r.admit(req(4, Priority::Normal, None, 0.3), 0.3);
+        assert_eq!(r.next(0.5).unwrap().id, 3, "earliest-deadline urgent first");
+        assert_eq!(r.next(0.5).unwrap().id, 2);
+        assert_eq!(r.next(0.5).unwrap().id, 4, "normal before background");
+        assert_eq!(r.next(0.5).unwrap().id, 1);
+        assert!(r.next(0.5).is_none());
+    }
+
+    #[test]
+    fn expired_requests_shed_on_admit_and_pop() {
+        let mut r = RequestRouter::new(4);
+        assert!(!r.admit(req(1, Priority::Urgent, Some(1.0), 0.0), 2.0), "already expired");
+        assert!(r.admit(req(2, Priority::Urgent, Some(3.0), 2.0), 2.0));
+        // expires while queued
+        assert!(r.next(4.0).is_none());
+        let s = r.stats();
+        assert_eq!(s.shed_expired, 2);
+        assert_eq!(s.served, 0);
+    }
+
+    #[test]
+    fn capacity_sheds_worst_not_best() {
+        let mut r = RequestRouter::new(2);
+        r.admit(req(1, Priority::Background, None, 0.0), 0.0);
+        r.admit(req(2, Priority::Normal, None, 0.1), 0.1);
+        // urgent newcomer evicts the background request
+        assert!(r.admit(req(3, Priority::Urgent, Some(9.0), 0.2), 0.2));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.next(0.3).unwrap().id, 3);
+        assert_eq!(r.next(0.3).unwrap().id, 2);
+        assert_eq!(r.stats().shed_capacity, 1);
+    }
+
+    #[test]
+    fn background_newcomer_shed_when_full_of_better() {
+        let mut r = RequestRouter::new(2);
+        r.admit(req(1, Priority::Urgent, Some(9.0), 0.0), 0.0);
+        r.admit(req(2, Priority::Urgent, Some(8.0), 0.0), 0.0);
+        assert!(!r.admit(req(3, Priority::Background, None, 0.1), 0.1));
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn fifo_within_equal_priority_and_deadline() {
+        let mut r = RequestRouter::new(8);
+        r.admit(req(10, Priority::Normal, None, 0.0), 0.0);
+        r.admit(req(11, Priority::Normal, None, 1.0), 1.0);
+        assert_eq!(r.next(2.0).unwrap().id, 10);
+        assert_eq!(r.next(2.0).unwrap().id, 11);
+    }
+}

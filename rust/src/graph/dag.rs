@@ -1,0 +1,264 @@
+//! Core DAG type with typed vertices.
+
+use crate::util::MatF;
+
+/// Vertex index within one [`Dag`].
+pub type NodeId = usize;
+
+/// Computation type of a vertex — drives the compatibility mask
+/// (paper §3.2: "the computation type of each vertex, e.g. convolution
+/// for compute-intensive tiles, max-pooling for comparison-intensive
+/// tiles").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NodeKind {
+    /// MAC-dominated tile (conv / matmul / attention score).
+    Compute,
+    /// Comparison-dominated tile (max-pool / argmax / top-k).
+    Compare,
+    /// Elementwise tile (activation, norm apply, residual add).
+    Eltwise,
+    /// Data-movement tile (concat / split / reshape).
+    Move,
+    /// A PE/engine in the target graph able to run any tile kind.
+    Universal,
+}
+
+impl NodeKind {
+    /// Can a query tile of kind `self` run on a target vertex of `other`?
+    pub fn compatible_with(self, other: NodeKind) -> bool {
+        matches!(other, NodeKind::Universal) || self == other
+    }
+}
+
+/// Adjacency-list DAG with per-node kinds and weights.
+///
+/// Node weight = normalized compute cost of the tile (used by the
+/// schedulers); edge direction = data dependency (u -> v means v consumes
+/// u's output tile).
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    succ: Vec<Vec<NodeId>>,
+    pred: Vec<Vec<NodeId>>,
+    kinds: Vec<NodeKind>,
+    weights: Vec<f64>,
+}
+
+impl Dag {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Graph with `n` nodes of the given kind and unit weight.
+    pub fn with_nodes(n: usize, kind: NodeKind) -> Self {
+        Self {
+            succ: vec![Vec::new(); n],
+            pred: vec![Vec::new(); n],
+            kinds: vec![kind; n],
+            weights: vec![1.0; n],
+        }
+    }
+
+    /// Add a node, returning its id.
+    pub fn add_node(&mut self, kind: NodeKind, weight: f64) -> NodeId {
+        self.succ.push(Vec::new());
+        self.pred.push(Vec::new());
+        self.kinds.push(kind);
+        self.weights.push(weight);
+        self.kinds.len() - 1
+    }
+
+    /// Add edge u -> v.  Panics on self-loops; duplicate edges are ignored.
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId) {
+        assert_ne!(u, v, "self-loop {u}");
+        assert!(u < self.len() && v < self.len(), "edge ({u},{v}) out of range");
+        if !self.succ[u].contains(&v) {
+            self.succ[u].push(v);
+            self.pred[v].push(u);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.succ.iter().map(Vec::len).sum()
+    }
+
+    pub fn successors(&self, u: NodeId) -> &[NodeId] {
+        &self.succ[u]
+    }
+
+    pub fn predecessors(&self, u: NodeId) -> &[NodeId] {
+        &self.pred[u]
+    }
+
+    pub fn out_degree(&self, u: NodeId) -> usize {
+        self.succ[u].len()
+    }
+
+    pub fn in_degree(&self, u: NodeId) -> usize {
+        self.pred[u].len()
+    }
+
+    pub fn kind(&self, u: NodeId) -> NodeKind {
+        self.kinds[u]
+    }
+
+    pub fn set_kind(&mut self, u: NodeId, k: NodeKind) {
+        self.kinds[u] = k;
+    }
+
+    pub fn weight(&self, u: NodeId) -> f64 {
+        self.weights[u]
+    }
+
+    pub fn set_weight(&mut self, u: NodeId, w: f64) {
+        self.weights[u] = w;
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.succ[u].contains(&v)
+    }
+
+    /// Nodes with no predecessors.
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&u| self.pred[u].is_empty()).collect()
+    }
+
+    /// Nodes with no successors.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&u| self.succ[u].is_empty()).collect()
+    }
+
+    /// Dense {0,1} adjacency matrix (row = source, col = destination) —
+    /// the `Q` / `G` the matcher and the Pallas kernel consume.
+    pub fn adjacency(&self) -> MatF {
+        let n = self.len();
+        let mut a = MatF::zeros(n, n);
+        for (u, vs) in self.succ.iter().enumerate() {
+            for &v in vs {
+                a[(u, v)] = 1.0;
+            }
+        }
+        a
+    }
+
+    /// Induced subgraph on `keep` (node ids renumbered by position).
+    pub fn induced(&self, keep: &[NodeId]) -> Dag {
+        let mut map = vec![usize::MAX; self.len()];
+        for (new, &old) in keep.iter().enumerate() {
+            map[old] = new;
+        }
+        let mut g = Dag::new();
+        for &old in keep {
+            g.add_node(self.kinds[old], self.weights[old]);
+        }
+        for &old in keep {
+            for &v in &self.succ[old] {
+                if map[v] != usize::MAX {
+                    g.add_edge(map[old], map[v]);
+                }
+            }
+        }
+        g
+    }
+
+    /// Graphviz dot dump (debugging / docs).
+    pub fn to_dot(&self, name: &str) -> String {
+        let mut s = format!("digraph {name} {{\n");
+        for u in 0..self.len() {
+            s.push_str(&format!("  n{u} [label=\"{u}:{:?} w={:.2}\"];\n", self.kinds[u], self.weights[u]));
+        }
+        for (u, vs) in self.succ.iter().enumerate() {
+            for &v in vs {
+                s.push_str(&format!("  n{u} -> n{v};\n"));
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        // 0 -> {1,2} -> 3
+        let mut g = Dag::with_nodes(4, NodeKind::Compute);
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        g
+    }
+
+    #[test]
+    fn degrees_and_edges() {
+        let g = diamond();
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(3), 2);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = diamond();
+        g.add_edge(0, 1);
+        assert_eq!(g.edge_count(), 4);
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn adjacency_matches_edges() {
+        let g = diamond();
+        let a = g.adjacency();
+        assert_eq!(a[(0, 1)], 1.0);
+        assert_eq!(a[(0, 2)], 1.0);
+        assert_eq!(a[(1, 3)], 1.0);
+        assert_eq!(a[(1, 2)], 0.0);
+        assert_eq!(a.sum(), 4.0);
+    }
+
+    #[test]
+    fn induced_subgraph_renumbers() {
+        let g = diamond();
+        let sub = g.induced(&[0, 1, 3]);
+        assert_eq!(sub.len(), 3);
+        assert!(sub.has_edge(0, 1)); // old 0->1
+        assert!(sub.has_edge(1, 2)); // old 1->3
+        assert_eq!(sub.edge_count(), 2);
+    }
+
+    #[test]
+    fn kind_compatibility() {
+        assert!(NodeKind::Compute.compatible_with(NodeKind::Universal));
+        assert!(NodeKind::Compute.compatible_with(NodeKind::Compute));
+        assert!(!NodeKind::Compute.compatible_with(NodeKind::Compare));
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_panics() {
+        let mut g = Dag::with_nodes(1, NodeKind::Compute);
+        g.add_edge(0, 0);
+    }
+}

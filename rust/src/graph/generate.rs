@@ -1,0 +1,135 @@
+//! Parametric graph generators — used by tests, property tests and the
+//! Fig. 2b stability study (random query/target pairs of controlled
+//! density).
+
+use super::dag::{Dag, NodeId, NodeKind};
+use crate::util::Rng;
+
+/// Linear chain 0 -> 1 -> ... -> n-1.
+pub fn gen_chain(n: usize, kind: NodeKind) -> Dag {
+    let mut g = Dag::with_nodes(n, kind);
+    for i in 0..n.saturating_sub(1) {
+        g.add_edge(i, i + 1);
+    }
+    g
+}
+
+/// Complete binary out-tree with `n` nodes.
+pub fn gen_tree(n: usize, kind: NodeKind) -> Dag {
+    let mut g = Dag::with_nodes(n, kind);
+    for i in 1..n {
+        g.add_edge((i - 1) / 2, i);
+    }
+    g
+}
+
+/// 2-D grid DAG (rows x cols), edges right and down — the shape of a
+/// systolic tile pipeline.
+pub fn gen_grid_2d(rows: usize, cols: usize, kind: NodeKind) -> Dag {
+    let mut g = Dag::with_nodes(rows * cols, kind);
+    let id = |r: usize, c: usize| -> NodeId { r * cols + c };
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                g.add_edge(id(r, c), id(r, c + 1));
+            }
+            if r + 1 < rows {
+                g.add_edge(id(r, c), id(r + 1, c));
+            }
+        }
+    }
+    g
+}
+
+/// Random DAG: each forward pair (i < j) gets an edge with prob `density`.
+/// Guaranteed acyclic by construction (edges only i -> j with i < j).
+pub fn gen_random_dag(n: usize, density: f64, rng: &mut Rng, kind: NodeKind) -> Dag {
+    let mut g = Dag::with_nodes(n, kind);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.chance(density) {
+                g.add_edge(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// Layered DAG: `widths[l]` nodes per layer, each node wired to 1..=fanout
+/// random nodes of the next layer — the shape of a tiled DNN stage graph.
+pub fn gen_dag_layered(widths: &[usize], fanout: usize, rng: &mut Rng, kind: NodeKind) -> Dag {
+    let mut g = Dag::new();
+    let mut layers: Vec<Vec<NodeId>> = Vec::new();
+    for &w in widths {
+        let layer: Vec<NodeId> = (0..w).map(|_| g.add_node(kind, 1.0)).collect();
+        layers.push(layer);
+    }
+    for l in 0..layers.len().saturating_sub(1) {
+        for &u in &layers[l] {
+            let k = rng.range(1, fanout.min(layers[l + 1].len()));
+            let mut targets: Vec<NodeId> = layers[l + 1].clone();
+            rng.shuffle(&mut targets);
+            for &v in targets.iter().take(k) {
+                g.add_edge(u, v);
+            }
+        }
+        // every next-layer node needs at least one producer
+        for &v in &layers[l + 1] {
+            if g.in_degree(v) == 0 {
+                let u = *rng.choose(&layers[l]);
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::is_acyclic;
+
+    #[test]
+    fn chain_shape() {
+        let g = gen_chain(5, NodeKind::Compute);
+        assert_eq!(g.edge_count(), 4);
+        assert!(is_acyclic(&g));
+    }
+
+    #[test]
+    fn tree_shape() {
+        let g = gen_tree(7, NodeKind::Compute);
+        assert_eq!(g.edge_count(), 6);
+        assert_eq!(g.sources(), vec![0]);
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = gen_grid_2d(3, 4, NodeKind::Universal);
+        assert_eq!(g.len(), 12);
+        // edges: right 3*3 + down 2*4 = 17
+        assert_eq!(g.edge_count(), 17);
+        assert!(is_acyclic(&g));
+    }
+
+    #[test]
+    fn random_dag_acyclic_at_any_density() {
+        let mut rng = Rng::new(3);
+        for &d in &[0.0, 0.2, 0.5, 1.0] {
+            let g = gen_random_dag(20, d, &mut rng, NodeKind::Compute);
+            assert!(is_acyclic(&g), "density {d}");
+        }
+    }
+
+    #[test]
+    fn layered_every_node_connected() {
+        let mut rng = Rng::new(5);
+        let g = gen_dag_layered(&[3, 4, 4, 2], 2, &mut rng, NodeKind::Compute);
+        assert_eq!(g.len(), 13);
+        assert!(is_acyclic(&g));
+        // all non-first-layer nodes have producers
+        for v in 3..13 {
+            assert!(g.in_degree(v) > 0, "node {v} orphaned");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Directed-acyclic-graph substrate.
+//!
+//! Both sides of the subgraph-isomorphism formulation live here: the
+//! *query* graph (the urgent DNN task's tile DAG) and the *target* graph
+//! (the preemptible engine/PE topology).  The matcher consumes the dense
+//! adjacency form ([`Dag::adjacency`]); the schedulers use the structural
+//! queries (topo order, levels, reachability).
+
+mod dag;
+mod generate;
+mod topo;
+
+pub use dag::{Dag, NodeId, NodeKind};
+pub use generate::{gen_chain, gen_dag_layered, gen_grid_2d, gen_random_dag, gen_tree};
+pub use topo::{is_acyclic, levels, reachability, topo_sort};

@@ -1,0 +1,129 @@
+//! Structural queries over DAGs: topological order, levels, reachability.
+
+use super::dag::{Dag, NodeId};
+
+/// Kahn topological sort; `None` if the graph has a cycle.
+pub fn topo_sort(g: &Dag) -> Option<Vec<NodeId>> {
+    let n = g.len();
+    let mut indeg: Vec<usize> = (0..n).map(|u| g.in_degree(u)).collect();
+    let mut queue: Vec<NodeId> = (0..n).filter(|&u| indeg[u] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head];
+        head += 1;
+        order.push(u);
+        for &v in g.successors(u) {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+/// Whether the graph is acyclic.
+pub fn is_acyclic(g: &Dag) -> bool {
+    topo_sort(g).is_some()
+}
+
+/// ASAP level of every node (longest path from any source).
+pub fn levels(g: &Dag) -> Vec<usize> {
+    let order = topo_sort(g).expect("levels() requires a DAG");
+    let mut level = vec![0usize; g.len()];
+    for &u in &order {
+        for &v in g.successors(u) {
+            level[v] = level[v].max(level[u] + 1);
+        }
+    }
+    level
+}
+
+/// Dense transitive reachability: `out[u][v]` iff v reachable from u
+/// (u != v).  O(V·E/64) via bitset rows propagated in reverse topo order.
+pub fn reachability(g: &Dag) -> Vec<Vec<bool>> {
+    let n = g.len();
+    let words = n.div_ceil(64);
+    let mut bits = vec![vec![0u64; words]; n];
+    let order = topo_sort(g).expect("reachability() requires a DAG");
+    for &u in order.iter().rev() {
+        for &v in g.successors(u) {
+            // u reaches v and everything v reaches.
+            let (left, right) = if u < v {
+                let (a, b) = bits.split_at_mut(v);
+                (&mut a[u], &b[0])
+            } else {
+                let (a, b) = bits.split_at_mut(u);
+                (&mut b[0], &a[v])
+            };
+            for (w, r) in left.iter_mut().zip(right) {
+                *w |= r;
+            }
+            left[v / 64] |= 1u64 << (v % 64);
+        }
+    }
+    bits.into_iter()
+        .map(|row| (0..n).map(|v| row[v / 64] >> (v % 64) & 1 == 1).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeKind;
+
+    fn chain(n: usize) -> Dag {
+        let mut g = Dag::with_nodes(n, NodeKind::Compute);
+        for i in 0..n - 1 {
+            g.add_edge(i, i + 1);
+        }
+        g
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let mut g = Dag::with_nodes(5, NodeKind::Compute);
+        g.add_edge(3, 1);
+        g.add_edge(1, 4);
+        g.add_edge(3, 0);
+        g.add_edge(0, 2);
+        let order = topo_sort(&g).unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 5];
+            for (i, &u) in order.iter().enumerate() {
+                p[u] = i;
+            }
+            p
+        };
+        assert!(pos[3] < pos[1] && pos[1] < pos[4]);
+        assert!(pos[3] < pos[0] && pos[0] < pos[2]);
+    }
+
+    #[test]
+    fn levels_of_chain() {
+        let g = chain(6);
+        assert_eq!(levels(&g), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn reachability_of_chain() {
+        let g = chain(4);
+        let r = reachability(&g);
+        assert!(r[0][3] && r[0][1] && r[1][3]);
+        assert!(!r[3][0] && !r[2][1]);
+        assert!(!r[0][0], "reachability excludes self unless via a path");
+    }
+
+    #[test]
+    fn reachability_diamond() {
+        let mut g = Dag::with_nodes(4, NodeKind::Compute);
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let r = reachability(&g);
+        assert!(r[0][3]);
+        assert!(!r[1][2] && !r[2][1]);
+    }
+}

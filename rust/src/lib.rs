@@ -1,0 +1,39 @@
+//! # immsched — IMMSched paper reproduction
+//!
+//! Interruptible multi-DNN scheduling via parallel multi-particle
+//! optimizing subgraph isomorphism (Zhao et al., CS.AR 2026), built as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas fused PSO-step kernel —
+//!   velocity/position updates, compatibility masking, reciprocal-multiply
+//!   row normalization and the edge-preserving fitness `-‖Q − S G Sᵀ‖²`,
+//!   gridded over particles (one particle ≙ one accelerator engine).
+//! * **L2** (`python/compile/model.py`): one PSO *epoch* (K fused steps for
+//!   N particles with local-best tracking) lowered AOT to HLO text.
+//! * **L3** (this crate): everything else — the DNN workload models and
+//!   tiling, the accelerator platform/energy model, the serial and parallel
+//!   subgraph matchers, the six scheduling frameworks, the interrupt-driven
+//!   coordinator with its global controller, and the benchmark harnesses
+//!   that regenerate every table and figure of the paper.
+//!
+//! Python never runs at request time: `make artifacts` lowers the epoch
+//! once per size class, and [`runtime`] loads the HLO text through the
+//! PJRT CPU client (`xla` crate) on the interrupt hot path.
+//!
+//! See `DESIGN.md` for the complete system inventory and experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod accel;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod matcher;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias (errors carry context via `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,334 @@
+//! `immsched` — CLI launcher for the IMMSched reproduction.
+//!
+//! Subcommands:
+//!   selftest                      PJRT artifact round-trip + matcher sanity
+//!   run [--config F] [--set K=V]  one simulation run, summary to stdout
+//!   match --model M [...]         one interrupt episode on the coordinator
+//!   info                          platforms, workloads, artifact registry
+//!
+//! The argument parser is hand-rolled (no clap offline; DESIGN.md §4).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use immsched::accel::{build_target_graph, Platform};
+use immsched::config::Config;
+use immsched::coordinator::CoordinatorHandle;
+use immsched::matcher::build_mask;
+use immsched::runtime::ArtifactRegistry;
+use immsched::scheduler::{
+    build_trace, metrics, FrameworkKind, SimConfig, Simulator, TraceConfig,
+};
+use immsched::util::table::{fmt_time, Table};
+use immsched::workload::{build_model, tile_layer_graph, ModelId, TilingConfig};
+
+fn main() {
+    init_logger();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("selftest") => cmd_selftest(),
+        Some("run") => cmd_run(&args[1..]),
+        Some("match") => cmd_match(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (try `immsched help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "immsched — interruptible multi-DNN scheduling (paper reproduction)\n\
+         \n\
+         USAGE: immsched <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS\n\
+           selftest                         artifact + runtime + matcher smoke test\n\
+           run  [--config FILE] [--set K=V ...]   run one simulation, print summary\n\
+           match --model NAME [--platform edge|cloud] [--tiles N]\n\
+                                            serve one urgent-task interrupt\n\
+           info                             platforms, models, artifacts\n\
+           help                             this text\n\
+         \n\
+         EXAMPLES\n\
+           immsched run --set scheduler.name=\"isosched\" --set workload.class=\"complex\"\n\
+           immsched match --model ResNet50 --platform edge"
+    );
+}
+
+fn init_logger() {
+    struct StderrLog;
+    impl log::Log for StderrLog {
+        fn enabled(&self, metadata: &log::Metadata) -> bool {
+            metadata.level() <= log::Level::Info
+        }
+        fn log(&self, record: &log::Record) {
+            if self.enabled(record.metadata()) {
+                eprintln!("[{}] {}", record.level(), record.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: StderrLog = StderrLog;
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Info));
+}
+
+/// Parse `--config F` and repeated `--set key=value` into a Config.
+fn parse_config(args: &[String]) -> Result<Config> {
+    let mut cfg = Config::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                let path = args.get(i + 1).context("--config needs a path")?;
+                cfg = Config::from_file(&PathBuf::from(path))?;
+                i += 2;
+            }
+            "--set" => {
+                let spec = args.get(i + 1).context("--set needs key=value")?;
+                cfg.apply_override(spec)?;
+                i += 2;
+            }
+            other => bail!("unknown option {other:?}"),
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_selftest() -> Result<()> {
+    println!("== immsched selftest ==");
+    // 1. artifacts
+    let registry = ArtifactRegistry::discover(&ArtifactRegistry::default_dir());
+    match &registry {
+        Ok(r) => println!("artifacts: {} size classes", r.all().len()),
+        Err(e) => println!("artifacts: MISSING ({e:#}) — fallback path will be used"),
+    }
+    // 2. coordinator round trip on a small planted problem
+    let handle = CoordinatorHandle::spawn(immsched::matcher::PsoConfig::default())?;
+    let qd = immsched::graph::gen_chain(4, immsched::graph::NodeKind::Compute);
+    let gd = immsched::graph::gen_chain(8, immsched::graph::NodeKind::Universal);
+    let mask = build_mask(&qd, &gd);
+    let t0 = std::time::Instant::now();
+    let resp = handle.match_blocking(mask, qd.adjacency(), gd.adjacency())?;
+    println!(
+        "coordinator: matched={} path={} epochs={} in {}",
+        !resp.mappings.is_empty(),
+        if resp.used_pjrt { "pjrt" } else { "native" },
+        resp.epochs_run,
+        fmt_time(t0.elapsed().as_secs_f64()),
+    );
+    if resp.mappings.is_empty() {
+        bail!("selftest failed: no mapping found for the planted chain");
+    }
+    // 3. quick simulation
+    let cfg = Config::default();
+    let platform = Platform::get(cfg.platform);
+    let trace_cfg = TraceConfig {
+        class: cfg.workload.class,
+        arrival_rate: cfg.sim.arrival_rate,
+        horizon: 0.02,
+        seed: cfg.sim.seed,
+        ..Default::default()
+    };
+    let tasks = build_trace(&trace_cfg, &platform);
+    let n_tasks = tasks.len();
+    let mut sim = Simulator::new(SimConfig::default());
+    let res = sim.run(tasks, trace_cfg.horizon);
+    let summary = metrics::summarize(&res);
+    println!(
+        "simulator: {n_tasks} tasks, {} completed, deadline rate {:.0}%",
+        summary.completed,
+        summary.deadline_rate * 100.0
+    );
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let framework = FrameworkKind::from_name(&cfg.scheduler.name)
+        .with_context(|| format!("unknown scheduler {:?}", cfg.scheduler.name))?;
+    let platform = Platform::get(cfg.platform);
+    let trace_cfg = TraceConfig {
+        class: cfg.workload.class,
+        background_tasks: cfg.sim.background_tasks,
+        arrival_rate: cfg.sim.arrival_rate,
+        horizon: cfg.sim.horizon,
+        deadline_factor: cfg.sim.deadline_factor,
+        batch: 16,
+        tiling: TilingConfig {
+            max_tiles: cfg.workload.max_tiles,
+            split_factor: cfg.workload.split_factor,
+        },
+        seed: cfg.sim.seed,
+    };
+    let tasks = build_trace(&trace_cfg, &platform);
+    println!(
+        "running {} on {} / {:?}: {} tasks over {}s",
+        framework.name(),
+        platform.kind.name(),
+        cfg.workload.class,
+        tasks.len(),
+        trace_cfg.horizon
+    );
+    let sim_cfg = SimConfig {
+        platform_kind: cfg.platform,
+        framework,
+        pso: cfg.pso.to_pso_config(cfg.sim.seed),
+        preemption_ratio: cfg.scheduler.preemption_ratio,
+        background_streams: cfg.sim.background_tasks,
+        ..Default::default()
+    };
+    let mut sim = Simulator::new(sim_cfg);
+    let res = sim.run(tasks, trace_cfg.horizon);
+    let s = metrics::summarize(&res);
+
+    let mut t = Table::new(format!("{} summary", framework.name())).header(&["metric", "value"]);
+    t.row(vec!["completed tasks".into(), s.completed.to_string()]);
+    t.row(vec!["urgent mean total latency".into(), fmt_time(s.urgent_latency)]);
+    t.row(vec!["urgent mean sched latency".into(), fmt_time(s.sched_latency)]);
+    t.row(vec!["urgent deadline rate".into(), format!("{:.1}%", s.deadline_rate * 100.0)]);
+    t.row(vec!["throughput".into(), format!("{:.1} tasks/s", s.throughput)]);
+    t.row(vec!["energy".into(), format!("{:.3} J", s.energy_j)]);
+    t.row(vec!["energy efficiency".into(), format!("{:.1} tasks/J", s.tasks_per_joule)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_match(args: &[String]) -> Result<()> {
+    let mut model_name = String::from("MobileNetV2");
+    let mut platform_name = String::from("edge");
+    let mut max_tiles = 16usize;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--model" => {
+                model_name = args.get(i + 1).context("--model needs a name")?.clone();
+                i += 2;
+            }
+            "--platform" => {
+                platform_name = args.get(i + 1).context("--platform needs edge|cloud")?.clone();
+                i += 2;
+            }
+            "--tiles" => {
+                max_tiles = args.get(i + 1).context("--tiles needs a number")?.parse()?;
+                i += 2;
+            }
+            other => bail!("unknown option {other:?}"),
+        }
+    }
+    let model = ModelId::ALL
+        .iter()
+        .find(|m| m.name().eq_ignore_ascii_case(&model_name))
+        .copied()
+        .with_context(|| format!("unknown model {model_name:?} (see `immsched info`)"))?;
+    let platform = match platform_name.to_ascii_lowercase().as_str() {
+        "edge" => Platform::edge(),
+        "cloud" => Platform::cloud(),
+        other => bail!("unknown platform {other:?}"),
+    };
+
+    let graph = build_model(model);
+    let tiles = tile_layer_graph(&graph, TilingConfig { max_tiles, split_factor: 2 });
+    let preemptible = vec![true; platform.engines];
+    let (target, vertex_engine) = build_target_graph(&platform, &preemptible);
+    let mask = build_mask(&tiles.dag, &target);
+    println!(
+        "match: {} ({} tiles) -> {} ({} engines)",
+        model.name(),
+        tiles.len(),
+        platform.kind.name(),
+        target.len()
+    );
+
+    let handle = CoordinatorHandle::spawn(immsched::matcher::PsoConfig::default())?;
+    let t0 = std::time::Instant::now();
+    let resp = handle.match_blocking(mask, tiles.dag.adjacency(), target.adjacency())?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    if let Some(mp) = resp.mappings.first() {
+        println!(
+            "FEASIBLE via {} after {} epochs in {} (fitness {:.3})",
+            if resp.used_pjrt { "pjrt" } else { "native" },
+            resp.epochs_run,
+            fmt_time(elapsed),
+            resp.best_fitness
+        );
+        let engines: Vec<String> = mp
+            .iter()
+            .enumerate()
+            .filter_map(|(tile, &v)| v.map(|v| format!("t{tile}->e{}", vertex_engine[v])))
+            .collect();
+        println!("mapping: {}", engines.join(" "));
+    } else {
+        println!(
+            "INFEASIBLE after {} epochs in {} (best fitness {:.3})",
+            resp.epochs_run,
+            fmt_time(elapsed),
+            resp.best_fitness
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let mut t = Table::new("Platforms (paper Table 2)")
+        .header(&["platform", "engines", "MACs/engine", "clock", "SRAM/engine"]);
+    for p in [Platform::edge(), Platform::cloud()] {
+        t.row(vec![
+            p.kind.name().into(),
+            p.engines.to_string(),
+            format!("{}x{}", p.array_rows, p.array_cols),
+            format!("{:.0} MHz", p.clock_hz / 1e6),
+            format!("{} KiB", p.sram_bytes / 1024),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let mut t = Table::new("Workloads (paper §4.1.2)")
+        .header(&["model", "class", "layers", "GMACs", "params (M)"]);
+    for id in ModelId::ALL {
+        let g = build_model(id);
+        t.row(vec![
+            id.name().into(),
+            id.class().name().into(),
+            g.len().to_string(),
+            format!("{:.2}", g.total_macs() as f64 / 1e9),
+            format!("{:.1}", g.total_weight_bytes() as f64 / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+
+    match ArtifactRegistry::discover(&ArtifactRegistry::default_dir()) {
+        Ok(reg) => {
+            let mut t = Table::new("AOT artifacts")
+                .header(&["class", "n", "m", "particles", "K", "path"]);
+            for a in reg.all() {
+                t.row(vec![
+                    a.name.clone(),
+                    a.class.n.to_string(),
+                    a.class.m.to_string(),
+                    a.class.particles.to_string(),
+                    a.class.k_steps.to_string(),
+                    a.path.display().to_string(),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        Err(e) => println!("artifacts: not built ({e:#})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Elite consensus (paper §3.4: the global controller "fuses
+//! multi-particle search results to produce a consensus-guided
+//! exploration direction").
+//!
+//! S̄ is the fitness-weighted mean of the top-E particles' relaxed
+//! mappings, renormalized row-stochastic.  It enters the velocity update
+//! as the third attractor (after the particle-local and global bests),
+//! pulling the swarm toward regions many good particles agree on.
+
+use crate::util::MatF;
+
+/// Fuse the top-`elite` particles into a consensus matrix.
+///
+/// `particles[i]` is particle i's relaxed mapping; `fitness[i]` its
+/// (negative, ≤ 0) edge-preserving fitness.  Weights are softmax-like:
+/// `w_i = 1 / (1 + |f_i - f_best|)`, which keeps the best particle at
+/// weight 1 and decays with fitness distance without needing exp() on
+/// the modeled fixed-point controller.
+pub fn elite_consensus(particles: &[MatF], fitness: &[f32], elite: usize) -> MatF {
+    assert_eq!(particles.len(), fitness.len());
+    assert!(!particles.is_empty());
+    let elite = elite.max(1).min(particles.len());
+
+    // rank particle indices by fitness (descending)
+    let mut idx: Vec<usize> = (0..particles.len()).collect();
+    idx.sort_by(|&a, &b| fitness[b].partial_cmp(&fitness[a]).unwrap());
+    let best_f = fitness[idx[0]];
+
+    let (n, m) = (particles[0].rows(), particles[0].cols());
+    let mut acc = MatF::zeros(n, m);
+    let mut total_w = 0.0f32;
+    for &i in idx.iter().take(elite) {
+        let w = 1.0 / (1.0 + (fitness[i] - best_f).abs());
+        for (a, &p) in acc.as_mut_slice().iter_mut().zip(particles[i].as_slice()) {
+            *a += w * p;
+        }
+        total_w += w;
+    }
+    if total_w > 0.0 {
+        for a in acc.as_mut_slice() {
+            *a /= total_w;
+        }
+    }
+    acc.row_normalize();
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_stochastic(n: usize, m: usize, rng: &mut Rng) -> MatF {
+        let mut s = MatF::from_fn(n, m, |_, _| rng.f32() + 1e-3);
+        s.row_normalize();
+        s
+    }
+
+    #[test]
+    fn consensus_is_row_stochastic() {
+        let mut rng = Rng::new(2);
+        let parts: Vec<MatF> = (0..6).map(|_| random_stochastic(4, 8, &mut rng)).collect();
+        let fit: Vec<f32> = (0..6).map(|i| -(i as f32)).collect();
+        let c = elite_consensus(&parts, &fit, 3);
+        for i in 0..4 {
+            let s: f32 = c.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums {s}");
+        }
+    }
+
+    #[test]
+    fn single_elite_equals_best_particle() {
+        let mut rng = Rng::new(3);
+        let parts: Vec<MatF> = (0..4).map(|_| random_stochastic(3, 6, &mut rng)).collect();
+        let fit = vec![-5.0, -1.0, -9.0, -2.0];
+        let c = elite_consensus(&parts, &fit, 1);
+        // best particle is index 1
+        for (a, b) in c.as_slice().iter().zip(parts[1].as_slice()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn identical_particles_fixed_point() {
+        let mut rng = Rng::new(4);
+        let p = random_stochastic(3, 5, &mut rng);
+        let parts = vec![p.clone(), p.clone(), p.clone()];
+        let c = elite_consensus(&parts, &[-1.0, -1.0, -1.0], 3);
+        for (a, b) in c.as_slice().iter().zip(p.as_slice()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn elite_larger_than_population_is_clamped() {
+        let mut rng = Rng::new(5);
+        let parts: Vec<MatF> = (0..2).map(|_| random_stochastic(2, 4, &mut rng)).collect();
+        let c = elite_consensus(&parts, &[-1.0, -2.0], 99);
+        assert_eq!(c.rows(), 2);
+    }
+}

@@ -1,0 +1,100 @@
+//! Edge-preserving fitness and feasibility verification (paper §3.3).
+
+use crate::util::MatF;
+
+use super::Mapping;
+
+/// `-‖Q − S G Sᵀ‖²_F` for one relaxed mapping S (the rust twin of the
+/// Pallas kernel's fitness, used by the native matcher and the tests
+/// that cross-check the artifact).
+pub fn edge_fitness(s: &MatF, q: &MatF, g: &MatF) -> f32 {
+    debug_assert_eq!(s.rows(), q.rows());
+    debug_assert_eq!(s.cols(), g.rows());
+    let sg = s.matmul(g); // n×m
+    let sgst = sg.matmul(&s.transpose()); // n×n
+    -q.sq_dist(&sgst)
+}
+
+/// Ullmann's feasibility condition: `M̂ G M̂ᵀ` must cover Q, i.e. for
+/// every query edge (i,k) there must be a target edge (M(i), M(k)).
+/// Partial mappings (None entries) are infeasible.
+pub fn mapping_is_feasible(mapping: &Mapping, q: &MatF, g: &MatF) -> bool {
+    let n = q.rows();
+    debug_assert_eq!(mapping.len(), n);
+    // injectivity + totality
+    let mut used = vec![false; g.rows()];
+    for &mj in mapping {
+        match mj {
+            None => return false,
+            Some(j) => {
+                if j >= g.rows() || used[j] {
+                    return false;
+                }
+                used[j] = true;
+            }
+        }
+    }
+    for i in 0..n {
+        for k in 0..n {
+            if q[(i, k)] != 0.0 {
+                let (ti, tk) = (mapping[i].unwrap(), mapping[k].unwrap());
+                if g[(ti, tk)] == 0.0 {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+
+    #[test]
+    fn perfect_embedding_zero_fitness() {
+        let q = gen_chain(3, NodeKind::Compute).adjacency();
+        let g = gen_chain(5, NodeKind::Universal).adjacency();
+        // map i -> i+1; S one-hot
+        let mut s = MatF::zeros(3, 5);
+        for i in 0..3 {
+            s[(i, i + 1)] = 1.0;
+        }
+        // SGS^T picks exactly the chain edges 1->2->3 => equals Q
+        assert_eq!(edge_fitness(&s, &q, &g), 0.0);
+    }
+
+    #[test]
+    fn wrong_embedding_negative_fitness() {
+        let q = gen_chain(3, NodeKind::Compute).adjacency();
+        let g = gen_chain(5, NodeKind::Universal).adjacency();
+        let mut s = MatF::zeros(3, 5);
+        s[(0, 0)] = 1.0;
+        s[(1, 2)] = 1.0; // gap: 0->2 is not a target edge
+        s[(2, 3)] = 1.0;
+        assert!(edge_fitness(&s, &q, &g) < 0.0);
+    }
+
+    #[test]
+    fn feasibility_accepts_true_embedding() {
+        let q = gen_chain(3, NodeKind::Compute).adjacency();
+        let g = gen_chain(5, NodeKind::Universal).adjacency();
+        assert!(mapping_is_feasible(&vec![Some(2), Some(3), Some(4)], &q, &g));
+    }
+
+    #[test]
+    fn feasibility_rejects_broken_edge() {
+        let q = gen_chain(3, NodeKind::Compute).adjacency();
+        let g = gen_chain(5, NodeKind::Universal).adjacency();
+        assert!(!mapping_is_feasible(&vec![Some(0), Some(2), Some(3)], &q, &g));
+    }
+
+    #[test]
+    fn feasibility_rejects_non_injective_and_partial() {
+        let q = gen_chain(2, NodeKind::Compute).adjacency();
+        let g = gen_chain(3, NodeKind::Universal).adjacency();
+        assert!(!mapping_is_feasible(&vec![Some(1), Some(1)], &q, &g));
+        assert!(!mapping_is_feasible(&vec![Some(0), None], &q, &g));
+    }
+}

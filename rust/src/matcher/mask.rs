@@ -1,0 +1,86 @@
+//! Global compatibility mask (paper §3.2).
+//!
+//! `mask[i][j] = 1` iff query tile i *could* map onto target vertex j:
+//! the target vertex's kind accepts the tile's computation type, and its
+//! in/out degrees can host the tile's (a target vertex needs at least as
+//! many neighbors as the query vertex it hosts — the standard Ullmann
+//! degree filter).
+
+use crate::graph::Dag;
+use crate::util::MatF;
+
+/// Build the `n×m` compatibility mask between query `q` and target `g`.
+pub fn build_mask(q: &Dag, g: &Dag) -> MatF {
+    let (n, m) = (q.len(), g.len());
+    let mut mask = MatF::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            let kind_ok = q.kind(i).compatible_with(g.kind(j));
+            let deg_ok = g.out_degree(j) >= q.out_degree(i) && g.in_degree(j) >= q.in_degree(i);
+            if kind_ok && deg_ok {
+                mask[(i, j)] = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+/// Whether any query vertex has an empty candidate row — an early
+/// infeasibility witness (the scheduler uses it to reject an interrupt
+/// without running the matcher at all).
+pub fn has_empty_row(mask: &MatF) -> bool {
+    (0..mask.rows()).any(|i| mask.row(i).iter().all(|&x| x == 0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, Dag, NodeKind};
+
+    #[test]
+    fn degree_filter_applies() {
+        // query: 0 -> 1 -> 2 (middle vertex needs in>=1 and out>=1)
+        let q = gen_chain(3, NodeKind::Compute);
+        // target: chain of 4 universal vertices
+        let g = gen_chain(4, NodeKind::Universal);
+        let mask = build_mask(&q, &g);
+        // query vertex 1 (in=1,out=1) can only host on target 1, 2
+        assert_eq!(mask[(1, 0)], 0.0);
+        assert_eq!(mask[(1, 1)], 1.0);
+        assert_eq!(mask[(1, 2)], 1.0);
+        assert_eq!(mask[(1, 3)], 0.0);
+        // query source (out=1, in=0) fits targets 0..=2
+        assert_eq!(mask[(0, 0)], 1.0);
+        assert_eq!(mask[(0, 3)], 0.0);
+    }
+
+    #[test]
+    fn kind_filter_applies() {
+        let mut q = gen_chain(2, NodeKind::Compute);
+        q.set_kind(1, NodeKind::Compare);
+        let mut g = gen_chain(3, NodeKind::Compute);
+        g.set_kind(1, NodeKind::Compare);
+        let mask = build_mask(&q, &g);
+        // compare tile only onto compare vertex
+        assert_eq!(mask[(1, 1)], 1.0);
+        assert_eq!(mask[(1, 2)], 0.0);
+    }
+
+    #[test]
+    fn universal_targets_accept_everything() {
+        let mut q = Dag::with_nodes(3, NodeKind::Compute);
+        q.set_kind(1, NodeKind::Compare);
+        q.set_kind(2, NodeKind::Eltwise);
+        let g = Dag::with_nodes(3, NodeKind::Universal);
+        let mask = build_mask(&q, &g);
+        assert_eq!(mask.sum(), 9.0);
+    }
+
+    #[test]
+    fn empty_row_detection() {
+        let q = gen_chain(3, NodeKind::Compute);
+        let g = Dag::with_nodes(3, NodeKind::Compare); // no edges, wrong kind
+        let mask = build_mask(&q, &g);
+        assert!(has_empty_row(&mask));
+    }
+}

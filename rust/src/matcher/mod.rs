@@ -1,0 +1,41 @@
+//! Subgraph-isomorphism engines — the algorithmic heart of the paper.
+//!
+//! * [`mask`] — the global compatibility mask `Mask ∈ {0,1}^{n×m}`
+//!   (degree + computation-type feasibility, §3.2).
+//! * [`ullmann`] — the classic serial Ullmann algorithm with refinement
+//!   and backtracking: both the IsoSched baseline and the final verifier
+//!   IMMSched runs on projected candidates.
+//! * [`fitness`] — the edge-preserving metric `-‖Q − S G Sᵀ‖²` (§3.3).
+//! * [`projection`] — relaxed S → discrete injective mapping M̂ (greedy
+//!   argmax and Hungarian variants).
+//! * [`consensus`] — the global controller's elite-consensus fusion S̄.
+//! * [`pso`] — the multi-particle optimizer (native f32 twin of the AOT
+//!   artifact; also the *discrete* ablation for Fig. 2b).
+//! * [`quantized`] — the u8/i32 fixed-point matcher that models the
+//!   int8 MAC datapath of §3.4 cycle-for-cycle.
+//! * [`cost`] — cycle/energy cost of running the matcher on-accelerator
+//!   vs on a host CPU (feeds Figs. 2a/6/7/8).
+
+pub mod consensus;
+pub mod cost;
+pub mod fitness;
+pub mod mask;
+pub mod projection;
+pub mod pso;
+pub mod quantized;
+pub mod ullmann;
+pub mod vf2;
+
+pub use consensus::elite_consensus;
+pub use cost::{MatcherCost, MatcherCostModel};
+pub use fitness::{edge_fitness, mapping_is_feasible};
+pub use mask::build_mask;
+pub use projection::{project_greedy, project_hungarian};
+pub use pso::{PsoConfig, PsoOutcome, PsoMatcher};
+pub use quantized::{QuantizedMatcher, QuantizedOutcome};
+pub use ullmann::{ullmann_find_first, ullmann_refine, UllmannStats};
+pub use vf2::{vf2_find_first, Vf2Stats};
+
+/// A discrete query→target mapping: `assign[i] = Some(j)` maps query
+/// vertex i to target vertex j (injective where `Some`).
+pub type Mapping = Vec<Option<usize>>;

@@ -1,0 +1,218 @@
+//! Projection: relaxed mapping S → discrete injective mapping M̂
+//! (Algorithm 1, line 19: "each query vertex maps to exactly one target
+//! vertex, each target vertex matched by at most one query vertex").
+
+use crate::util::MatF;
+
+use super::Mapping;
+
+/// Greedy projection: repeatedly take the globally largest s_ij among
+/// unassigned rows/columns.  O(n·m·min(n,m)) — this is what the
+/// lightweight on-chip controller runs (argmax is exactly the comparator
+/// tree added in §3.4).
+pub fn project_greedy(s: &MatF, mask: &MatF) -> Mapping {
+    let (n, m) = (s.rows(), s.cols());
+    let mut assign: Mapping = vec![None; n];
+    let mut row_done = vec![false; n];
+    let mut col_done = vec![false; m];
+    for _ in 0..n.min(m) {
+        let mut best: Option<(usize, usize, f32)> = None;
+        for i in 0..n {
+            if row_done[i] {
+                continue;
+            }
+            for j in 0..m {
+                if col_done[j] || mask[(i, j)] == 0.0 {
+                    continue;
+                }
+                let v = s[(i, j)];
+                if best.map_or(true, |(_, _, bv)| v > bv) {
+                    best = Some((i, j, v));
+                }
+            }
+        }
+        match best {
+            Some((i, j, _)) => {
+                assign[i] = Some(j);
+                row_done[i] = true;
+                col_done[j] = true;
+            }
+            None => break, // no mask-compatible pair left
+        }
+    }
+    assign
+}
+
+/// Hungarian (Kuhn–Munkres) projection: maximum-weight injective
+/// assignment under the mask.  Higher quality than greedy, used by the
+/// ablation bench to quantify the greedy controller's loss.
+pub fn project_hungarian(s: &MatF, mask: &MatF) -> Mapping {
+    let (n, m) = (s.rows(), s.cols());
+    if n == 0 {
+        return Vec::new();
+    }
+    // pad to square cost matrix; maximize s -> minimize (max - s)
+    let dim = n.max(m);
+    let maxv = s.as_slice().iter().cloned().fold(0.0f32, f32::max).max(1.0);
+    const FORBIDDEN: f32 = 1e6;
+    let cost = |i: usize, j: usize| -> f32 {
+        if i >= n || j >= m {
+            maxv // dummy rows/cols: neutral cost
+        } else if mask[(i, j)] == 0.0 {
+            FORBIDDEN
+        } else {
+            maxv - s[(i, j)]
+        }
+    };
+
+    // O(dim^3) Jonker-ish Hungarian with potentials
+    let mut u = vec![0.0f32; dim + 1];
+    let mut v = vec![0.0f32; dim + 1];
+    let mut p = vec![dim; dim + 1]; // p[j] = row matched to col j (dim = none)
+    let mut way = vec![0usize; dim + 1];
+    for i in 0..dim {
+        p[dim] = i;
+        let mut j0 = dim;
+        let mut minv = vec![f32::INFINITY; dim + 1];
+        let mut used = vec![false; dim + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = f32::INFINITY;
+            let mut j1 = dim;
+            for j in 0..dim {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost(i0, j) - u[i0 + 1] - v[j + 1];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=dim {
+                if used[j] {
+                    let idx = if p[j] == dim { 0 } else { p[j] + 1 };
+                    u[idx] += delta;
+                    v[if j == dim { 0 } else { j + 1 }] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == dim {
+                break;
+            }
+        }
+        // augment along the alternating path
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == dim {
+                break;
+            }
+        }
+    }
+
+    let mut assign: Mapping = vec![None; n];
+    for j in 0..dim {
+        let i = p[j];
+        if i < n && j < m && mask[(i, j)] != 0.0 {
+            assign[i] = Some(j);
+        }
+    }
+    assign
+}
+
+/// Sum of selected S entries (projection quality metric).
+pub fn projection_weight(s: &MatF, assign: &Mapping) -> f32 {
+    assign
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &mj)| mj.map(|j| s[(i, j)]))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_s(n: usize, m: usize, seed: u64) -> (MatF, MatF) {
+        let mut rng = Rng::new(seed);
+        let mut s = MatF::from_fn(n, m, |_, _| rng.f32());
+        let mask = MatF::full(n, m, 1.0);
+        s.row_normalize();
+        (s, mask)
+    }
+
+    fn is_injective(assign: &Mapping) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        assign.iter().flatten().all(|j| seen.insert(*j))
+    }
+
+    #[test]
+    fn greedy_is_total_and_injective_under_full_mask() {
+        let (s, mask) = random_s(5, 9, 3);
+        let a = project_greedy(&s, &mask);
+        assert!(a.iter().all(Option::is_some));
+        assert!(is_injective(&a));
+    }
+
+    #[test]
+    fn greedy_respects_mask() {
+        let (s, mut mask) = random_s(3, 5, 4);
+        for j in 0..5 {
+            mask[(1, j)] = 0.0;
+        }
+        mask[(1, 2)] = 1.0;
+        let a = project_greedy(&s, &mask);
+        assert_eq!(a[1], Some(2));
+    }
+
+    #[test]
+    fn hungarian_at_least_as_good_as_greedy() {
+        for seed in 0..20 {
+            let (s, mask) = random_s(6, 10, seed);
+            let wg = projection_weight(&s, &project_greedy(&s, &mask));
+            let wh = projection_weight(&s, &project_hungarian(&s, &mask));
+            assert!(wh >= wg - 1e-5, "seed {seed}: hungarian {wh} < greedy {wg}");
+        }
+    }
+
+    #[test]
+    fn hungarian_is_injective_and_respects_mask() {
+        let mut rng = Rng::new(8);
+        for _ in 0..10 {
+            let n = rng.range(2, 6);
+            let m = n + rng.range(0, 5);
+            let mut s = MatF::from_fn(n, m, |_, _| rng.f32());
+            s.row_normalize();
+            let mask = MatF::from_fn(n, m, |_, _| if rng.chance(0.7) { 1.0 } else { 0.0 });
+            let a = project_hungarian(&s, &mask);
+            assert!(is_injective(&a));
+            for (i, &mj) in a.iter().enumerate() {
+                if let Some(j) = mj {
+                    assert!(mask[(i, j)] != 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_hot_s_projects_to_itself() {
+        let mut s = MatF::zeros(3, 5);
+        s[(0, 4)] = 1.0;
+        s[(1, 0)] = 1.0;
+        s[(2, 2)] = 1.0;
+        let mask = MatF::full(3, 5, 1.0);
+        for proj in [project_greedy(&s, &mask), project_hungarian(&s, &mask)] {
+            assert_eq!(proj, vec![Some(4), Some(0), Some(2)]);
+        }
+    }
+}

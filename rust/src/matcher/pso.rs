@@ -1,0 +1,360 @@
+//! Native multi-particle optimizer (Algorithm 1) — the rust twin of the
+//! AOT artifact, plus the *discrete* ablation of Fig. 2b.
+//!
+//! Two uses:
+//! * the hardware-model execution path: the simulator charges the
+//!   accelerator for exactly the work this implementation performs
+//!   (steps × particles fused kernels, see [`super::cost`]);
+//! * a fallback when artifacts are missing/corrupt (failure injection —
+//!   the coordinator logs and degrades rather than aborting).
+//!
+//! The PJRT path ([`crate::runtime::EpochRunner`]) computes the same
+//! epoch; integration tests cross-check the two.
+
+use crate::util::{MatF, Rng};
+
+use super::consensus::elite_consensus;
+use super::fitness::{edge_fitness, mapping_is_feasible};
+use super::projection::project_greedy;
+use super::ullmann::{ullmann_find_first, UllmannStats};
+use super::Mapping;
+
+/// PSO hyperparameters (defaults follow the standard constricted swarm
+/// plus the paper's consensus term).
+#[derive(Clone, Copy, Debug)]
+pub struct PsoConfig {
+    /// Particles per epoch (mapped 1:1 onto engines).
+    pub particles: usize,
+    /// Outer epochs T (particles re-initialized each epoch, Algorithm 1
+    /// line 4; S*, S̄ and the feasible set persist).
+    pub epochs: usize,
+    /// Fused inner steps K per epoch.
+    pub steps: usize,
+    /// Inertia.
+    pub w: f32,
+    /// Cognitive (particle-local best) pull.
+    pub c1: f32,
+    /// Social (global best) pull.
+    pub c2: f32,
+    /// Consensus pull (the paper's addition).
+    pub c3: f32,
+    /// Elites fused into the consensus matrix.
+    pub elite: usize,
+    /// Continuous relaxation on (true = IMMSched; false = the unstable
+    /// discrete coupling of Fig. 2b).
+    pub relaxed: bool,
+    /// Stop at the first feasible mapping (production) or keep searching
+    /// (benchmarks that want the full trace).
+    pub early_exit: bool,
+    /// Node budget for the bounded Ullmann repair of projected
+    /// candidates.
+    pub repair_budget: u64,
+    pub seed: u64,
+}
+
+impl Default for PsoConfig {
+    fn default() -> Self {
+        Self {
+            particles: 16,
+            epochs: 8,
+            steps: 8,
+            w: 0.72,
+            c1: 1.49,
+            c2: 1.49,
+            c3: 0.60,
+            elite: 4,
+            relaxed: true,
+            early_exit: true,
+            // Algorithm 1's UllmannRefine step needs headroom on branchy
+            // queries (UNet skip tiles take ~10k nodes); the controller
+            // is charged for every expanded node in the cost model.
+            repair_budget: 100_000,
+            seed: 0x1535EED,
+        }
+    }
+}
+
+/// Search outcome + enough telemetry to drive the figures.
+#[derive(Clone, Debug, Default)]
+pub struct PsoOutcome {
+    /// Feasible mappings found (deduplicated).
+    pub mappings: Vec<Mapping>,
+    /// Best fitness reached (0 = perfect relaxed embedding).
+    pub best_fitness: f32,
+    /// Best-so-far fitness after every fused step (Fig. 2b traces).
+    pub fitness_trace: Vec<f32>,
+    /// Mean *current* fitness across particles after every fused step —
+    /// the non-monotone signal whose oscillation Fig. 2b plots as
+    /// "search stability".
+    pub mean_fitness_trace: Vec<f32>,
+    /// Epochs actually run.
+    pub epochs_run: usize,
+    /// Total fused steps executed (each = one kernel launch per particle).
+    pub steps_run: usize,
+    /// Ullmann repair statistics.
+    pub repair_stats: UllmannStats,
+    /// Fused step kernel invocations (steps_run × particles) — the unit
+    /// the cost model charges.
+    pub kernel_invocations: u64,
+}
+
+impl PsoOutcome {
+    pub fn matched(&self) -> bool {
+        !self.mappings.is_empty()
+    }
+}
+
+/// One particle's state.
+struct Particle {
+    s: MatF,
+    v: MatF,
+    s_local: MatF,
+    f_local: f32,
+}
+
+/// The native matcher.
+pub struct PsoMatcher {
+    pub config: PsoConfig,
+}
+
+impl PsoMatcher {
+    pub fn new(config: PsoConfig) -> Self {
+        Self { config }
+    }
+
+    /// Run Algorithm 1 on (mask, Q, G).
+    pub fn run(&self, mask: &MatF, q: &MatF, g: &MatF) -> PsoOutcome {
+        let cfg = &self.config;
+        let (n, m) = (mask.rows(), mask.cols());
+        assert_eq!(q.rows(), n);
+        assert_eq!(g.rows(), m);
+        let mut rng = Rng::new(cfg.seed);
+        let mut out = PsoOutcome { best_fitness: f32::NEG_INFINITY, ..Default::default() };
+
+        let mut s_star = init_particle_s(mask, &mut rng);
+        let mut f_star = f32::NEG_INFINITY;
+        let mut s_bar = s_star.clone();
+        // deterministic in (mask, q, g) — run at most once per episode
+        let mut repair_memo: Option<Option<Mapping>> = None;
+
+        'epochs: for _t in 0..cfg.epochs {
+            out.epochs_run += 1;
+            // line 4: fresh particles each epoch
+            let mut particles: Vec<Particle> = (0..cfg.particles)
+                .map(|_| {
+                    let s = init_particle_s(mask, &mut rng);
+                    Particle {
+                        v: MatF::zeros(n, m),
+                        s_local: s.clone(),
+                        f_local: f32::NEG_INFINITY,
+                        s,
+                    }
+                })
+                .collect();
+
+            for _k in 0..cfg.steps {
+                out.steps_run += 1;
+                out.kernel_invocations += cfg.particles as u64;
+                let mut f_sum = 0.0f32;
+                for p in particles.iter_mut() {
+                    step_particle(p, &s_star, &s_bar, mask, cfg, &mut rng);
+                    let f = if cfg.relaxed {
+                        edge_fitness(&p.s, q, g)
+                    } else {
+                        // discrete coupling (Fig. 2b ablation): evaluate on
+                        // the hard-rounded one-hot projection of S
+                        let hard = harden(&p.s, mask);
+                        edge_fitness(&hard, q, g)
+                    };
+                    f_sum += f;
+                    if f > p.f_local {
+                        p.f_local = f;
+                        p.s_local = p.s.clone();
+                    }
+                    if f > f_star {
+                        f_star = f;
+                        s_star = p.s.clone();
+                    }
+                }
+                out.best_fitness = out.best_fitness.max(f_star);
+                out.fitness_trace.push(f_star);
+                out.mean_fitness_trace.push(f_sum / cfg.particles.max(1) as f32);
+            }
+
+            // lines 19-25: project, refine, verify, fuse consensus
+            let fitnesses: Vec<f32> = particles.iter().map(|p| p.f_local).collect();
+            for p in &particles {
+                let candidate = project_greedy(&p.s, mask);
+                let found = if mapping_is_feasible(&candidate, q, g) {
+                    Some(candidate)
+                } else {
+                    // bounded Ullmann repair (Algorithm 1's UllmannRefine):
+                    // restrict candidates to the mask and let refinement +
+                    // a bounded backtrack fix the projection; memoized —
+                    // it is deterministic in (mask, q, g)
+                    match &repair_memo {
+                        Some(memo) => memo.clone(),
+                        None => {
+                            let (repaired, stats) =
+                                ullmann_find_first(mask, q, g, cfg.repair_budget);
+                            out.repair_stats.nodes_visited += stats.nodes_visited;
+                            out.repair_stats.refine_passes += stats.refine_passes;
+                            out.repair_stats.refuted += stats.refuted;
+                            repair_memo = Some(repaired.clone());
+                            repaired
+                        }
+                    }
+                };
+                if let Some(mp) = found {
+                    debug_assert!(mapping_is_feasible(&mp, q, g));
+                    if !out.mappings.contains(&mp) {
+                        out.mappings.push(mp);
+                    }
+                    if cfg.early_exit {
+                        break 'epochs;
+                    }
+                }
+            }
+            let snapshots: Vec<MatF> = particles.iter().map(|p| p.s_local.clone()).collect();
+            s_bar = elite_consensus(&snapshots, &fitnesses, cfg.elite);
+        }
+        out
+    }
+}
+
+/// Random mask-respecting row-stochastic initialization.
+fn init_particle_s(mask: &MatF, rng: &mut Rng) -> MatF {
+    let mut s = MatF::from_fn(mask.rows(), mask.cols(), |_, _| rng.f32() + 1e-3);
+    s.hadamard_assign(mask);
+    s.row_normalize();
+    s
+}
+
+/// Fused PSO step for one particle (the rust twin of the Pallas kernel).
+fn step_particle(p: &mut Particle, s_star: &MatF, s_bar: &MatF, mask: &MatF, cfg: &PsoConfig, rng: &mut Rng) {
+    let (n, m) = (p.s.rows(), p.s.cols());
+    for i in 0..n {
+        for j in 0..m {
+            let r1 = rng.f32();
+            let r2 = rng.f32();
+            let r3 = rng.f32();
+            let s = p.s[(i, j)];
+            let vel = cfg.w * p.v[(i, j)]
+                + cfg.c1 * r1 * (p.s_local[(i, j)] - s)
+                + cfg.c2 * r2 * (s_star[(i, j)] - s)
+                + cfg.c3 * r3 * (s_bar[(i, j)] - s);
+            p.v[(i, j)] = vel;
+            p.s[(i, j)] = (s + vel).clamp(0.0, 1.0);
+        }
+    }
+    p.s.hadamard_assign(mask);
+    p.s.row_normalize();
+}
+
+/// Hard rounding to an injective one-hot matrix (discrete ablation).
+fn harden(s: &MatF, mask: &MatF) -> MatF {
+    let assign = project_greedy(s, mask);
+    let mut hard = MatF::zeros(s.rows(), s.cols());
+    for (i, &mj) in assign.iter().enumerate() {
+        if let Some(j) = mj {
+            hard[(i, j)] = 1.0;
+        }
+    }
+    hard
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::{build_mask, ullmann::plant_embedding};
+
+    fn chain_problem() -> (MatF, MatF, MatF) {
+        let qd = gen_chain(4, NodeKind::Compute);
+        let gd = gen_chain(8, NodeKind::Universal);
+        let mask = build_mask(&qd, &gd);
+        (mask, qd.adjacency(), gd.adjacency())
+    }
+
+    #[test]
+    fn finds_chain_embedding() {
+        let (mask, q, g) = chain_problem();
+        let out = PsoMatcher::new(PsoConfig { seed: 7, ..Default::default() }).run(&mask, &q, &g);
+        assert!(out.matched(), "no mapping found: best fitness {}", out.best_fitness);
+        for mp in &out.mappings {
+            assert!(mapping_is_feasible(mp, &q, &g));
+        }
+    }
+
+    #[test]
+    fn finds_planted_embeddings() {
+        let mut rng = Rng::new(99);
+        let mut found = 0;
+        for trial in 0..10 {
+            let (q, g, _) = plant_embedding(5, 12, 0.4, 0.15, &mut rng);
+            let mask = MatF::full(5, 12, 1.0);
+            let cfg = PsoConfig { seed: trial as u64, ..Default::default() };
+            let out = PsoMatcher::new(cfg).run(&mask, &q, &g);
+            if out.matched() {
+                found += 1;
+                assert!(mapping_is_feasible(&out.mappings[0], &q, &g));
+            }
+        }
+        assert!(found >= 8, "only {found}/10 planted embeddings found");
+    }
+
+    #[test]
+    fn trace_is_monotone_best_so_far() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { early_exit: false, epochs: 3, seed: 3, ..Default::default() };
+        let out = PsoMatcher::new(cfg).run(&mask, &q, &g);
+        for w in out.fitness_trace.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6, "trace decreased: {} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn relaxed_beats_discrete_in_final_fitness() {
+        // Fig. 2b: continuous relaxation stabilizes the search.  Compare
+        // mean best fitness across seeds.
+        let mut rng = Rng::new(4242);
+        let (q, g, _) = plant_embedding(6, 14, 0.4, 0.2, &mut rng);
+        let mask = MatF::full(6, 14, 1.0);
+        let run = |relaxed: bool, seed: u64| -> f32 {
+            let cfg = PsoConfig {
+                relaxed,
+                early_exit: false,
+                epochs: 2,
+                steps: 12,
+                seed,
+                ..Default::default()
+            };
+            PsoMatcher::new(cfg).run(&mask, &q, &g).best_fitness
+        };
+        let relaxed_mean: f32 = (0..5).map(|s| run(true, s)).sum::<f32>() / 5.0;
+        let discrete_mean: f32 = (0..5).map(|s| run(false, s)).sum::<f32>() / 5.0;
+        assert!(
+            relaxed_mean >= discrete_mean,
+            "relaxed {relaxed_mean} worse than discrete {discrete_mean}"
+        );
+    }
+
+    #[test]
+    fn kernel_invocations_counted() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { early_exit: false, epochs: 2, steps: 4, particles: 8, seed: 1, ..Default::default() };
+        let out = PsoMatcher::new(cfg).run(&mask, &q, &g);
+        assert_eq!(out.steps_run, 8);
+        assert_eq!(out.kernel_invocations, 64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { seed: 55, ..Default::default() };
+        let a = PsoMatcher::new(cfg).run(&mask, &q, &g);
+        let b = PsoMatcher::new(cfg).run(&mask, &q, &g);
+        assert_eq!(a.mappings, b.mappings);
+        assert_eq!(a.fitness_trace, b.fitness_trace);
+    }
+}

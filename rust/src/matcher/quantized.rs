@@ -1,0 +1,338 @@
+//! Fixed-point matcher (paper §3.4): the u8/i32 datapath model.
+//!
+//! Positions S live on the uniform u8 grid (code 0..=255 ↔ [0,1]); the
+//! two fitness matmuls run in i32 exactly as the int8 MAC array with i32
+//! accumulators would compute them; row renormalization multiplies by a
+//! reconfigurable reciprocal instead of dividing (the divider was removed
+//! from the PEs).  Velocities stay in f32 — they live on the lightweight
+//! global controller, not the MAC array.
+//!
+//! This implementation is the *cycle-accounting twin* of the hardware:
+//! [`super::cost::MatcherCostModel`] charges the accelerator exactly the
+//! operation counts this code performs.
+
+use crate::util::{MatF, Rng};
+
+use super::fitness::mapping_is_feasible;
+use super::projection::project_greedy;
+use super::ullmann::ullmann_find_first;
+use super::{Mapping, PsoConfig};
+
+/// u8 quantization scale (code 255 = 1.0); shared with kernels/ref.py.
+pub const Q8_SCALE: f32 = 255.0;
+
+/// Quantized relaxed mapping: row-major u8 codes.
+#[derive(Clone, Debug)]
+pub struct MatQ8 {
+    rows: usize,
+    cols: usize,
+    data: Vec<u8>,
+}
+
+impl MatQ8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn quantize(m: &MatF) -> Self {
+        let data = m.as_slice().iter().map(|&x| quantize_code(x)).collect();
+        Self { rows: m.rows(), cols: m.cols(), data }
+    }
+
+    pub fn dequantize(&self) -> MatF {
+        MatF::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|&c| c as f32 / Q8_SCALE).collect(),
+        )
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> u8 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+#[inline]
+fn quantize_code(x: f32) -> u8 {
+    (x * Q8_SCALE).round().clamp(0.0, 255.0) as u8
+}
+
+/// i32 fitness on the integer datapath: `-‖Q·255² − S G Sᵀ‖²` rescaled.
+///
+/// `q`/`g` are binary; S codes are u8; the two matmuls accumulate in
+/// integer precision (max per-entry value 255²·m ≈ 8.3M for m=128).
+/// The host implementation accumulates exact integer products in f64
+/// (products ≤ 2^31, sums ≤ 2^40 ≪ 2^53 — bit-exact) because the f32
+/// lane-widening autovectorizes ~5× better than i64 MACs; the modeled
+/// *hardware* still pays int8-MAC + i32-accumulate costs in the cost
+/// model.
+pub fn fitness_q8(s: &MatQ8, q: &MatF, g: &MatF) -> f32 {
+    let (n, m) = (s.rows, s.cols);
+    // sg[i][l] = sum_j s[i][j] * g[j][l]   (u8 × {0,1})
+    let mut sg = vec![0.0f32; n * m];
+    let g_flat = g.as_slice();
+    for i in 0..n {
+        let s_row = &s.data[i * m..(i + 1) * m];
+        let sg_row = &mut sg[i * m..(i + 1) * m];
+        for (j, &sij) in s_row.iter().enumerate() {
+            if sij == 0 {
+                continue;
+            }
+            let sij = sij as f32;
+            let g_row = &g_flat[j * m..(j + 1) * m];
+            for (o, &gv) in sg_row.iter_mut().zip(g_row) {
+                *o += sij * gv; // gv ∈ {0,1}: exact integer in f32
+            }
+        }
+    }
+    // sgst[i][k] = sum_l sg[i][l] * s[k][l]; accumulate err on the fly
+    let inv = 1.0f64 / (Q8_SCALE as f64 * Q8_SCALE as f64);
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let sg_row = &sg[i * m..(i + 1) * m];
+        for k in 0..n {
+            let s_row = &s.data[k * m..(k + 1) * m];
+            // 4-lane unrolled dot: f32 products are exact integers
+            // (≤ 255·32640 < 2²⁴·2 ⇒ representable), accumulated in f64
+            // lanes so the sum stays exact (< 2⁴⁰ ≪ 2⁵³)
+            let mut lanes = [0.0f64; 4];
+            let chunks = m / 4;
+            for c in 0..chunks {
+                let b = c * 4;
+                lanes[0] += (sg_row[b] * s_row[b] as f32) as f64;
+                lanes[1] += (sg_row[b + 1] * s_row[b + 1] as f32) as f64;
+                lanes[2] += (sg_row[b + 2] * s_row[b + 2] as f32) as f64;
+                lanes[3] += (sg_row[b + 3] * s_row[b + 3] as f32) as f64;
+            }
+            for l in chunks * 4..m {
+                lanes[0] += (sg_row[l] * s_row[l] as f32) as f64;
+            }
+            let dot: f64 = lanes.iter().sum();
+            let err = q[(i, k)] as f64 - dot * inv;
+            acc += err * err;
+        }
+    }
+    -(acc as f32)
+}
+
+/// Outcome of the quantized matcher + datapath op counts for the cost
+/// model.
+#[derive(Clone, Debug, Default)]
+pub struct QuantizedOutcome {
+    pub mappings: Vec<Mapping>,
+    pub best_fitness: f32,
+    pub epochs_run: usize,
+    pub steps_run: usize,
+    /// int8 MAC operations issued to the array model.
+    pub mac_ops: u64,
+    /// element-wise PE operations (velocity/position/mask/renorm).
+    pub eltwise_ops: u64,
+    /// vector argmax reductions (projection on the comparator tree).
+    pub argmax_ops: u64,
+    /// Ullmann-repair backtracking nodes expanded on the controller.
+    pub repair_nodes: u64,
+}
+
+impl QuantizedOutcome {
+    pub fn matched(&self) -> bool {
+        !self.mappings.is_empty()
+    }
+}
+
+/// The fixed-point matcher.  Reuses [`PsoConfig`]; `relaxed` is ignored
+/// (the hardware always runs the relaxed algorithm).
+pub struct QuantizedMatcher {
+    pub config: PsoConfig,
+}
+
+struct QParticle {
+    s: MatQ8,
+    v: MatF,
+    s_local: MatQ8,
+    f_local: f32,
+}
+
+impl QuantizedMatcher {
+    pub fn new(config: PsoConfig) -> Self {
+        Self { config }
+    }
+
+    pub fn run(&self, mask: &MatF, q: &MatF, g: &MatF) -> QuantizedOutcome {
+        let cfg = &self.config;
+        let (n, m) = (mask.rows(), mask.cols());
+        let mut rng = Rng::new(cfg.seed ^ 0x9_8765);
+        let mut out = QuantizedOutcome { best_fitness: f32::NEG_INFINITY, ..Default::default() };
+
+        let mut s_star = MatQ8::quantize(&random_s(mask, &mut rng));
+        let mut f_star = f32::NEG_INFINITY;
+        let mut s_bar = s_star.clone();
+        let mut repair_memo: Option<Option<Mapping>> = None;
+
+        'epochs: for _t in 0..cfg.epochs {
+            out.epochs_run += 1;
+            let mut particles: Vec<QParticle> = (0..cfg.particles)
+                .map(|_| {
+                    let s = MatQ8::quantize(&random_s(mask, &mut rng));
+                    QParticle { v: MatF::zeros(n, m), s_local: s.clone(), f_local: f32::NEG_INFINITY, s }
+                })
+                .collect();
+
+            for _k in 0..cfg.steps {
+                out.steps_run += 1;
+                for p in particles.iter_mut() {
+                    self.step(p, &s_star, &s_bar, mask, &mut rng, &mut out);
+                    let f = fitness_q8(&p.s, q, g);
+                    // fitness matmuls: S·G (n·m·m MACs) + (SG)·Sᵀ (n·n·m)
+                    out.mac_ops += (n * m * m + n * n * m) as u64;
+                    if f > p.f_local {
+                        p.f_local = f;
+                        p.s_local = p.s.clone();
+                    }
+                    if f > f_star {
+                        f_star = f;
+                        s_star = p.s.clone();
+                    }
+                }
+                out.best_fitness = out.best_fitness.max(f_star);
+            }
+
+            // projection on the comparator tree + Ullmann verify
+            let fitnesses: Vec<f32> = particles.iter().map(|p| p.f_local).collect();
+            for p in &particles {
+                let sf = p.s.dequantize();
+                out.argmax_ops += n as u64; // one row-argmax per query vertex
+                let candidate = project_greedy(&sf, mask);
+                let found = if mapping_is_feasible(&candidate, q, g) {
+                    Some(candidate)
+                } else {
+                    // the repair is deterministic in (mask, q, g): run it
+                    // once per episode, reuse the memoized answer after
+                    match &repair_memo {
+                        Some(memo) => memo.clone(),
+                        None => {
+                            let (rep, stats) =
+                                ullmann_find_first(mask, q, g, cfg.repair_budget);
+                            out.repair_nodes += stats.nodes_visited;
+                            repair_memo = Some(rep.clone());
+                            rep
+                        }
+                    }
+                };
+                if let Some(mp) = found {
+                    if !out.mappings.contains(&mp) {
+                        out.mappings.push(mp);
+                    }
+                    if cfg.early_exit {
+                        break 'epochs;
+                    }
+                }
+            }
+            // controller-side consensus over dequantized elites
+            let snaps: Vec<MatF> = particles.iter().map(|p| p.s_local.dequantize()).collect();
+            s_bar = MatQ8::quantize(&super::consensus::elite_consensus(&snaps, &fitnesses, cfg.elite));
+        }
+        out
+    }
+
+    /// One fused fixed-point step: f32 controller math, u8 re-quantize,
+    /// reciprocal-multiply renorm.
+    fn step(
+        &self,
+        p: &mut QParticle,
+        s_star: &MatQ8,
+        s_bar: &MatQ8,
+        mask: &MatF,
+        rng: &mut Rng,
+        out: &mut QuantizedOutcome,
+    ) {
+        let cfg = &self.config;
+        let (n, m) = (p.v.rows(), p.v.cols());
+        let inv = 1.0 / Q8_SCALE;
+        let mut s_new = MatF::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                let s = p.s.get(i, j) as f32 * inv;
+                let vel = cfg.w * p.v[(i, j)]
+                    + cfg.c1 * rng.f32() * (p.s_local.get(i, j) as f32 * inv - s)
+                    + cfg.c2 * rng.f32() * (s_star.get(i, j) as f32 * inv - s)
+                    + cfg.c3 * rng.f32() * (s_bar.get(i, j) as f32 * inv - s);
+                p.v[(i, j)] = vel;
+                s_new[(i, j)] = (s + vel).clamp(0.0, 1.0);
+            }
+        }
+        // velocity+position+clip+mask+renorm = 5 elementwise passes
+        out.eltwise_ops += (5 * n * m) as u64;
+        s_new.hadamard_assign(mask);
+        s_new.row_normalize(); // reciprocal-multiply in hardware
+        p.s = MatQ8::quantize(&s_new);
+    }
+}
+
+fn random_s(mask: &MatF, rng: &mut Rng) -> MatF {
+    let mut s = MatF::from_fn(mask.rows(), mask.cols(), |_, _| rng.f32() + 1e-3);
+    s.hadamard_assign(mask);
+    s.row_normalize();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::{build_mask, edge_fitness, ullmann::plant_embedding};
+
+    #[test]
+    fn quantize_roundtrip_on_grid() {
+        let m = MatF::from_fn(4, 8, |i, j| ((i * 8 + j) as f32 / 31.0).min(1.0));
+        let q = MatQ8::quantize(&m);
+        let back = MatQ8::quantize(&q.dequantize());
+        assert_eq!(q.data, back.data);
+    }
+
+    #[test]
+    fn q8_fitness_tracks_float_fitness() {
+        let mut rng = Rng::new(31);
+        let (q, g, _) = plant_embedding(5, 10, 0.4, 0.2, &mut rng);
+        for _ in 0..5 {
+            let mask = MatF::full(5, 10, 1.0);
+            let s = random_s(&mask, &mut rng);
+            let f_float = edge_fitness(&s, &q, &g);
+            let f_q8 = fitness_q8(&MatQ8::quantize(&s), &q, &g);
+            let rel = (f_q8 - f_float).abs() / (f_float.abs() + 1.0);
+            assert!(rel < 0.1, "q8 {f_q8} vs float {f_float} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn quantized_matcher_finds_chain() {
+        let qd = gen_chain(4, NodeKind::Compute);
+        let gd = gen_chain(8, NodeKind::Universal);
+        let mask = build_mask(&qd, &gd);
+        let cfg = PsoConfig { seed: 77, ..Default::default() };
+        let out = QuantizedMatcher::new(cfg).run(&mask, &qd.adjacency(), &gd.adjacency());
+        assert!(out.matched());
+        assert!(mapping_is_feasible(&out.mappings[0], &qd.adjacency(), &gd.adjacency()));
+    }
+
+    #[test]
+    fn op_counters_populate() {
+        let qd = gen_chain(3, NodeKind::Compute);
+        let gd = gen_chain(6, NodeKind::Universal);
+        let mask = build_mask(&qd, &gd);
+        let cfg = PsoConfig { epochs: 1, steps: 2, particles: 4, early_exit: false, seed: 5, ..Default::default() };
+        let out = QuantizedMatcher::new(cfg).run(&mask, &qd.adjacency(), &gd.adjacency());
+        let (n, m) = (3u64, 6u64);
+        assert_eq!(out.mac_ops, 2 * 4 * (n * m * m + n * n * m));
+        assert_eq!(out.eltwise_ops, 2 * 4 * 5 * n * m);
+        assert!(out.argmax_ops >= n);
+    }
+}

@@ -1,0 +1,276 @@
+//! Serial Ullmann subgraph-isomorphism (Ullmann 1976) with the classic
+//! neighborhood refinement.
+//!
+//! Three roles in this repo:
+//! 1. the **IsoSched baseline** (serial CPU matcher — the thing the paper
+//!    beats, Figs. 2a/6/7),
+//! 2. the **refinement + verification** stage IMMSched applies to
+//!    projected PSO candidates (Algorithm 1, lines 19–22),
+//! 3. the ground-truth oracle for matcher property tests.
+
+use crate::util::{MatF, Rng};
+
+use super::{mapping_is_feasible, Mapping};
+
+/// Search statistics (the serial-latency numbers of Fig. 2a come from
+/// `nodes_visited` / `refine_passes` fed into the cost model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UllmannStats {
+    /// Backtracking nodes expanded.
+    pub nodes_visited: u64,
+    /// Refinement sweeps performed.
+    pub refine_passes: u64,
+    /// Candidate (i,j) pairs eliminated by refinement.
+    pub refuted: u64,
+}
+
+/// One pass of Ullmann refinement over the candidate matrix.
+///
+/// `cand[i][j]` survives only if every query successor k of i has a
+/// surviving candidate among j's target successors, and dually for
+/// predecessors.  Returns `true` if anything changed.
+fn refine_pass(cand: &mut MatF, q: &MatF, g: &MatF, stats: &mut UllmannStats) -> bool {
+    let (n, m) = (cand.rows(), cand.cols());
+    let mut changed = false;
+    for i in 0..n {
+        for j in 0..m {
+            if cand[(i, j)] == 0.0 {
+                continue;
+            }
+            let mut ok = true;
+            // successors: every k with Q[i][k]=1 needs l with G[j][l]=1 and cand[k][l]=1
+            'outer_succ: for k in 0..n {
+                if q[(i, k)] != 0.0 {
+                    for l in 0..m {
+                        if g[(j, l)] != 0.0 && cand[(k, l)] != 0.0 {
+                            continue 'outer_succ;
+                        }
+                    }
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                // predecessors: every k with Q[k][i]=1 needs l with G[l][j]=1 and cand[k][l]=1
+                'outer_pred: for k in 0..n {
+                    if q[(k, i)] != 0.0 {
+                        for l in 0..m {
+                            if g[(l, j)] != 0.0 && cand[(k, l)] != 0.0 {
+                                continue 'outer_pred;
+                            }
+                        }
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                cand[(i, j)] = 0.0;
+                stats.refuted += 1;
+                changed = true;
+            }
+        }
+    }
+    changed
+}
+
+/// Refine a candidate matrix to a fixed point.  Returns `false` if some
+/// query vertex lost all candidates (infeasible).
+pub fn ullmann_refine(cand: &mut MatF, q: &MatF, g: &MatF, stats: &mut UllmannStats) -> bool {
+    loop {
+        stats.refine_passes += 1;
+        let changed = refine_pass(cand, q, g, stats);
+        for i in 0..cand.rows() {
+            if cand.row(i).iter().all(|&x| x == 0.0) {
+                return false;
+            }
+        }
+        if !changed {
+            return true;
+        }
+    }
+}
+
+fn backtrack(
+    row: usize,
+    cand: &MatF,
+    q: &MatF,
+    g: &MatF,
+    used: &mut Vec<bool>,
+    assign: &mut Mapping,
+    stats: &mut UllmannStats,
+    budget: &mut u64,
+) -> bool {
+    if *budget == 0 {
+        return false;
+    }
+    let n = q.rows();
+    if row == n {
+        return mapping_is_feasible(assign, q, g);
+    }
+    for j in 0..cand.cols() {
+        if cand[(row, j)] == 0.0 || used[j] {
+            continue;
+        }
+        // forward consistency with already-assigned rows
+        let mut consistent = true;
+        for prev in 0..row {
+            let pj = assign[prev].unwrap();
+            if (q[(prev, row)] != 0.0 && g[(pj, j)] == 0.0)
+                || (q[(row, prev)] != 0.0 && g[(j, pj)] == 0.0)
+            {
+                consistent = false;
+                break;
+            }
+        }
+        if !consistent {
+            continue;
+        }
+        stats.nodes_visited += 1;
+        *budget = budget.saturating_sub(1);
+        used[j] = true;
+        assign[row] = Some(j);
+        if backtrack(row + 1, cand, q, g, used, assign, stats, budget) {
+            return true;
+        }
+        used[j] = false;
+        assign[row] = None;
+    }
+    false
+}
+
+/// Full serial Ullmann: refinement + depth-first backtracking.
+///
+/// `budget` caps expanded nodes (the serial baseline in open-ended
+/// scenarios must give up *eventually* to simulate its deadline misses).
+/// Returns the first feasible mapping found and the search stats.
+pub fn ullmann_find_first(
+    mask: &MatF,
+    q: &MatF,
+    g: &MatF,
+    budget: u64,
+) -> (Option<Mapping>, UllmannStats) {
+    let mut stats = UllmannStats::default();
+    let mut cand = mask.clone();
+    if !ullmann_refine(&mut cand, q, g, &mut stats) {
+        return (None, stats);
+    }
+    let mut used = vec![false; g.rows()];
+    let mut assign: Mapping = vec![None; q.rows()];
+    let mut budget = budget;
+    let found = backtrack(0, &cand, q, g, &mut used, &mut assign, &mut stats, &mut budget);
+    (found.then_some(assign), stats)
+}
+
+/// Convenience for tests: random query embedded into a random supergraph,
+/// returning (q, g, planted mapping).  The planted embedding guarantees a
+/// solution exists.
+pub fn plant_embedding(
+    n: usize,
+    m: usize,
+    q_density: f64,
+    extra_density: f64,
+    rng: &mut Rng,
+) -> (MatF, MatF, Vec<usize>) {
+    assert!(n <= m);
+    // random query DAG (i < j edges only)
+    let mut q = MatF::zeros(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.chance(q_density) {
+                q[(i, j)] = 1.0;
+            }
+        }
+    }
+    // random injective order-preserving placement of query vertices into target
+    let mut slots: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut slots);
+    let mut place: Vec<usize> = slots[..n].to_vec();
+    place.sort_unstable(); // order-preserving keeps the target acyclic
+    // target: planted edges + extra forward noise
+    let mut g = MatF::zeros(m, m);
+    for i in 0..n {
+        for j in 0..n {
+            if q[(i, j)] != 0.0 {
+                g[(place[i], place[j])] = 1.0;
+            }
+        }
+    }
+    for a in 0..m {
+        for b in (a + 1)..m {
+            if rng.chance(extra_density) {
+                g[(a, b)] = 1.0;
+            }
+        }
+    }
+    (q, g, place)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::build_mask;
+
+    #[test]
+    fn finds_chain_in_longer_chain() {
+        let qd = gen_chain(3, NodeKind::Compute);
+        let gd = gen_chain(6, NodeKind::Universal);
+        let (q, g) = (qd.adjacency(), gd.adjacency());
+        let mask = build_mask(&qd, &gd);
+        let (found, stats) = ullmann_find_first(&mask, &q, &g, 1_000_000);
+        let mapping = found.expect("chain must embed");
+        assert!(mapping_is_feasible(&mapping, &q, &g));
+        assert!(stats.nodes_visited > 0);
+    }
+
+    #[test]
+    fn rejects_impossible_embedding() {
+        // query chain longer than target chain
+        let qd = gen_chain(5, NodeKind::Compute);
+        let gd = gen_chain(3, NodeKind::Universal);
+        let mask = MatF::full(5, 3, 1.0);
+        let (found, _) = ullmann_find_first(&mask, &qd.adjacency(), &gd.adjacency(), 1_000_000);
+        assert!(found.is_none());
+    }
+
+    #[test]
+    fn planted_embeddings_always_found() {
+        let mut rng = Rng::new(17);
+        for trial in 0..20 {
+            let n = rng.range(3, 7);
+            let m = n + rng.range(2, 8);
+            let (q, g, _) = plant_embedding(n, m, 0.4, 0.2, &mut rng);
+            let mask = MatF::full(n, m, 1.0);
+            let (found, _) = ullmann_find_first(&mask, &q, &g, 10_000_000);
+            let mapping = found.unwrap_or_else(|| panic!("trial {trial}: planted not found"));
+            assert!(mapping_is_feasible(&mapping, &q, &g), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn refinement_prunes_isolated_candidates() {
+        // query edge 0->1; target has an isolated vertex 2
+        let mut q = MatF::zeros(2, 2);
+        q[(0, 1)] = 1.0;
+        let mut g = MatF::zeros(3, 3);
+        g[(0, 1)] = 1.0;
+        let mut cand = MatF::full(2, 3, 1.0);
+        let mut stats = UllmannStats::default();
+        assert!(ullmann_refine(&mut cand, &q, &g, &mut stats));
+        // query 0 (has successor) cannot sit on targets 1,2 (no successors)
+        assert_eq!(cand[(0, 1)], 0.0);
+        assert_eq!(cand[(0, 2)], 0.0);
+        assert_eq!(cand[(0, 0)], 1.0);
+        assert!(stats.refuted >= 2);
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_none() {
+        let mut rng = Rng::new(23);
+        let (q, g, _) = plant_embedding(8, 20, 0.5, 0.3, &mut rng);
+        let mask = MatF::full(8, 20, 1.0);
+        let (found, _) = ullmann_find_first(&mask, &q, &g, 1); // 1 node budget
+        assert!(found.is_none());
+    }
+}

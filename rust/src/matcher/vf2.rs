@@ -1,0 +1,229 @@
+//! VF2 subgraph-isomorphism (Cordella et al. 2004) — the second serial
+//! baseline the paper cites (§2.2: "traditional serial algorithms (e.g.,
+//! GsPM, VF2, VF3) ... exhibit strong serial dependencies").
+//!
+//! VF2 grows a partial mapping along the *frontier* of already-mapped
+//! vertices, pruning with look-ahead counts on in/out terminal sets —
+//! typically far fewer expanded states than Ullmann's row-order
+//! backtracking, but just as irreducibly serial.  The ablation bench
+//! compares both serial engines against the parallel PSO matcher.
+
+use crate::util::MatF;
+
+use super::fitness::mapping_is_feasible;
+use super::Mapping;
+
+/// VF2 search statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Vf2Stats {
+    /// Search states expanded.
+    pub states: u64,
+    /// Candidate pairs rejected by feasibility rules.
+    pub pruned: u64,
+}
+
+struct Vf2<'a> {
+    q: &'a MatF,
+    g: &'a MatF,
+    mask: &'a MatF,
+    n: usize,
+    m: usize,
+    core_q: Vec<Option<usize>>, // query -> target
+    core_g: Vec<Option<usize>>, // target -> query
+    stats: Vf2Stats,
+    budget: u64,
+}
+
+impl<'a> Vf2<'a> {
+    fn new(mask: &'a MatF, q: &'a MatF, g: &'a MatF, budget: u64) -> Self {
+        let (n, m) = (q.rows(), g.rows());
+        Self {
+            q,
+            g,
+            mask,
+            n,
+            m,
+            core_q: vec![None; n],
+            core_g: vec![None; m],
+            stats: Vf2Stats::default(),
+            budget,
+        }
+    }
+
+    /// Syntactic feasibility of adding (qu, gv): every mapped neighbor
+    /// relation of qu must be mirrored by gv.
+    fn consistent(&self, qu: usize, gv: usize) -> bool {
+        for (qk, &mapped) in self.core_q.iter().enumerate() {
+            let Some(gk) = mapped else { continue };
+            // query edges qu->qk / qk->qu must exist in the target image
+            if self.q[(qu, qk)] != 0.0 && self.g[(gv, gk)] == 0.0 {
+                return false;
+            }
+            if self.q[(qk, qu)] != 0.0 && self.g[(gk, gv)] == 0.0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Look-ahead: the target vertex must have at least as many unmapped
+    /// in/out neighbors as the query vertex needs (1-look-ahead cut).
+    fn lookahead(&self, qu: usize, gv: usize) -> bool {
+        let q_out_need = (0..self.n)
+            .filter(|&k| self.q[(qu, k)] != 0.0 && self.core_q[k].is_none())
+            .count();
+        let g_out_have = (0..self.m)
+            .filter(|&l| self.g[(gv, l)] != 0.0 && self.core_g[l].is_none())
+            .count();
+        if g_out_have < q_out_need {
+            return false;
+        }
+        let q_in_need = (0..self.n)
+            .filter(|&k| self.q[(k, qu)] != 0.0 && self.core_q[k].is_none())
+            .count();
+        let g_in_have = (0..self.m)
+            .filter(|&l| self.g[(l, gv)] != 0.0 && self.core_g[l].is_none())
+            .count();
+        g_in_have >= q_in_need
+    }
+
+    /// Next query vertex to extend: an unmapped vertex adjacent to the
+    /// mapped core if one exists (frontier-first), else the first
+    /// unmapped vertex.
+    fn next_query(&self) -> Option<usize> {
+        let mut fallback = None;
+        for u in 0..self.n {
+            if self.core_q[u].is_some() {
+                continue;
+            }
+            if fallback.is_none() {
+                fallback = Some(u);
+            }
+            let frontier = (0..self.n).any(|k| {
+                self.core_q[k].is_some() && (self.q[(u, k)] != 0.0 || self.q[(k, u)] != 0.0)
+            });
+            if frontier {
+                return Some(u);
+            }
+        }
+        fallback
+    }
+
+    fn search(&mut self, depth: usize) -> bool {
+        if depth == self.n {
+            return true;
+        }
+        if self.stats.states >= self.budget {
+            return false;
+        }
+        let Some(qu) = self.next_query() else { return false };
+        for gv in 0..self.m {
+            if self.core_g[gv].is_some() || self.mask[(qu, gv)] == 0.0 {
+                continue;
+            }
+            if !self.consistent(qu, gv) || !self.lookahead(qu, gv) {
+                self.stats.pruned += 1;
+                continue;
+            }
+            self.stats.states += 1;
+            self.core_q[qu] = Some(gv);
+            self.core_g[gv] = Some(qu);
+            if self.search(depth + 1) {
+                return true;
+            }
+            self.core_q[qu] = None;
+            self.core_g[gv] = None;
+        }
+        false
+    }
+}
+
+/// Find the first embedding with VF2 (or `None` on exhaustion/budget).
+pub fn vf2_find_first(mask: &MatF, q: &MatF, g: &MatF, budget: u64) -> (Option<Mapping>, Vf2Stats) {
+    let mut vf2 = Vf2::new(mask, q, g, budget);
+    let found = vf2.search(0);
+    let stats = vf2.stats;
+    if found {
+        let mapping = vf2.core_q.clone();
+        debug_assert!(mapping_is_feasible(&mapping, q, g));
+        (Some(mapping), stats)
+    } else {
+        (None, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::ullmann::{plant_embedding, ullmann_find_first};
+    use crate::matcher::build_mask;
+    use crate::util::Rng;
+
+    #[test]
+    fn finds_chain_embedding() {
+        let qd = gen_chain(3, NodeKind::Compute);
+        let gd = gen_chain(6, NodeKind::Universal);
+        let mask = build_mask(&qd, &gd);
+        let (found, stats) = vf2_find_first(&mask, &qd.adjacency(), &gd.adjacency(), 1_000_000);
+        let mp = found.expect("chain embeds");
+        assert!(mapping_is_feasible(&mp, &qd.adjacency(), &gd.adjacency()));
+        assert!(stats.states >= 3);
+    }
+
+    #[test]
+    fn agrees_with_ullmann_on_planted_instances() {
+        let mut rng = Rng::new(71);
+        for trial in 0..25 {
+            let n = rng.range(3, 7);
+            let m = n + rng.range(2, 8);
+            let (q, g, _) = plant_embedding(n, m, 0.4, 0.2, &mut rng);
+            let mask = MatF::full(n, m, 1.0);
+            let (vf2, _) = vf2_find_first(&mask, &q, &g, 10_000_000);
+            let (ull, _) = ullmann_find_first(&mask, &q, &g, 10_000_000);
+            assert_eq!(vf2.is_some(), ull.is_some(), "trial {trial}: engines disagree");
+            if let Some(mp) = vf2 {
+                assert!(mapping_is_feasible(&mp, &q, &g), "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_impossible_embedding() {
+        let qd = gen_chain(5, NodeKind::Compute);
+        let gd = gen_chain(3, NodeKind::Universal);
+        let mask = MatF::full(5, 3, 1.0);
+        let (found, _) = vf2_find_first(&mask, &qd.adjacency(), &gd.adjacency(), 1_000_000);
+        assert!(found.is_none());
+    }
+
+    #[test]
+    fn respects_mask() {
+        let qd = gen_chain(2, NodeKind::Compute);
+        let gd = gen_chain(4, NodeKind::Universal);
+        let mut mask = build_mask(&qd, &gd);
+        // forbid query 0 on target 0 — the only other chain start is 1/2
+        mask[(0, 0)] = 0.0;
+        let (found, _) = vf2_find_first(&mask, &qd.adjacency(), &gd.adjacency(), 1_000_000);
+        let mp = found.unwrap();
+        assert_ne!(mp[0], Some(0));
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_none() {
+        let mut rng = Rng::new(73);
+        let (q, g, _) = plant_embedding(8, 20, 0.5, 0.3, &mut rng);
+        let mask = MatF::full(8, 20, 1.0);
+        let (found, _) = vf2_find_first(&mask, &q, &g, 1);
+        assert!(found.is_none());
+    }
+
+    #[test]
+    fn vf2_prunes_more_than_it_expands_on_dense_targets() {
+        let mut rng = Rng::new(79);
+        let (q, g, _) = plant_embedding(6, 16, 0.5, 0.4, &mut rng);
+        let mask = MatF::full(6, 16, 1.0);
+        let (_, stats) = vf2_find_first(&mask, &q, &g, 10_000_000);
+        assert!(stats.states > 0);
+    }
+}

@@ -1,0 +1,481 @@
+//! Paper-figure generation: shared by the `cargo bench` harnesses and
+//! the `paper_figures` example, so every table/figure of the evaluation
+//! regenerates from one code path.
+//!
+//! Each function returns a [`Table`] (and writes line-series CSVs where
+//! the paper plots curves).  Absolute values differ from the paper (our
+//! substrate is an analytic simulator, not the authors' synthesized
+//! RTL), but the *shape* — who wins, by roughly what factor, where the
+//! gaps grow — is the reproduction target (DESIGN.md §6).
+
+use crate::accel::{Platform, PlatformKind};
+use crate::matcher::{
+    build_mask, ullmann_find_first, MatcherCostModel, PsoConfig, PsoMatcher, QuantizedMatcher,
+};
+use crate::scheduler::{
+    build_trace, metrics, FrameworkKind, SimConfig, SimResult, Simulator, TraceConfig,
+};
+use crate::util::table::{fmt_ratio, fmt_time, Table};
+use crate::util::Rng;
+use crate::workload::{ModelId, TilingConfig, WorkloadClass};
+
+/// Knobs shared by all figure runs.
+#[derive(Clone, Copy, Debug)]
+pub struct FigureParams {
+    /// Trace horizon per simulation (s).
+    pub horizon: f64,
+    /// Urgent Poisson rate for the speedup/energy figures (tasks/s).
+    pub arrival_rate: f64,
+    /// Deadline-hit target for the LBT sweep.
+    pub lbt_target: f64,
+    pub seed: u64,
+}
+
+impl Default for FigureParams {
+    fn default() -> Self {
+        Self { horizon: 0.03, arrival_rate: 100.0, lbt_target: 0.9, seed: 42 }
+    }
+}
+
+/// One simulation cell: (platform, class, framework) at a given λ.
+pub fn run_cell(
+    platform: PlatformKind,
+    class: WorkloadClass,
+    framework: FrameworkKind,
+    arrival_rate: f64,
+    params: &FigureParams,
+) -> SimResult {
+    let p = Platform::get(platform);
+    let trace_cfg = TraceConfig {
+        class,
+        arrival_rate,
+        horizon: params.horizon,
+        seed: params.seed,
+        ..Default::default()
+    };
+    let tasks = build_trace(&trace_cfg, &p);
+    let sim_cfg = SimConfig { platform_kind: platform, framework, ..Default::default() };
+    Simulator::new(sim_cfg).run(tasks, params.horizon)
+}
+
+const CELLS: [(PlatformKind, WorkloadClass); 6] = [
+    (PlatformKind::Edge, WorkloadClass::Simple),
+    (PlatformKind::Edge, WorkloadClass::Middle),
+    (PlatformKind::Edge, WorkloadClass::Complex),
+    (PlatformKind::Cloud, WorkloadClass::Simple),
+    (PlatformKind::Cloud, WorkloadClass::Middle),
+    (PlatformKind::Cloud, WorkloadClass::Complex),
+];
+
+/// Table 1: framework capability matrix.
+pub fn table1() -> Table {
+    use crate::scheduler::frameworks::make_framework;
+    let mut t = Table::new("Table 1: scheduling frameworks")
+        .header(&["framework", "strategy", "preemptive", "interruptible"]);
+    let p = Platform::edge();
+    for kind in FrameworkKind::ALL {
+        let f = make_framework(kind, p, PsoConfig::default());
+        t.row(vec![
+            kind.name().into(),
+            match f.paradigm() {
+                crate::scheduler::Paradigm::Lts => "LTS".into(),
+                crate::scheduler::Paradigm::Tss => "TSS".into(),
+            },
+            if f.preemptive() { "yes" } else { "no" }.into(),
+            if f.interruptible() { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t
+}
+
+/// Table 2: platform configurations.
+pub fn table2() -> Table {
+    let mut t = Table::new("Table 2: hardware platforms")
+        .header(&["platform", "engines", "MACs/engine", "clock", "SRAM/engine"]);
+    for p in [Platform::edge(), Platform::cloud()] {
+        t.row(vec![
+            p.kind.name().into(),
+            p.engines.to_string(),
+            format!("{}x{}", p.array_rows, p.array_cols),
+            format!("{:.0} MHz", p.clock_hz / 1e6),
+            format!("{} KiB", p.sram_bytes / 1024),
+        ]);
+    }
+    t
+}
+
+/// Fig. 2a: scheduling time vs execution time for the CPU-serial
+/// preemptive baseline (MoCA-like), Cloud platform; Scenario A = UNet
+/// (the paper's "middle workload" example), B = Qwen (complex).
+///
+/// The serial matcher is run on the *realistic interrupt instance*: the
+/// platform is busy, so the preemptible set barely exceeds the query
+/// (tight fit) — that is exactly where Ullmann backtracking explodes
+/// and why the paper profiles scheduling time as orders of magnitude
+/// above execution time.
+pub fn fig2a(_params: &FigureParams) -> Table {
+    let mut t = Table::new("Fig 2a: CPU-serial scheduling vs execution time (Cloud, MoCA-like)")
+        .header(&["scenario", "model", "exec time", "sched time (CPU)", "sched/exec", "IMMSched sched"]);
+    let platform = Platform::cloud();
+    let exec = crate::scheduler::exec_model::ExecModel::new(platform);
+    let cost_model = MatcherCostModel::default();
+    for (scenario, model) in [("A", ModelId::UNet), ("B", ModelId::Qwen7B)] {
+        let task = crate::scheduler::Task::new(
+            0,
+            model,
+            crate::scheduler::Priority::Urgent,
+            0.0,
+            TilingConfig { max_tiles: 32, split_factor: 2 },
+        );
+        let exec_t = exec.lts(&task).seconds;
+        // CPU-serial scheduling: an unpredictable arrival forces the
+        // MoCA/Planaria-class planner to re-plan the *whole resident
+        // workload* — pairwise layer-interference analysis (quadratic in
+        // total resident layers) swept over partition configurations
+        // (∝ √engines).  This offline pass is what the paper profiles
+        // as orders of magnitude above execution.
+        let resident_dnns = 8.0;
+        let total_layers = task.layers as f64 * resident_dnns;
+        // ~1e4 CPU ops per layer-pair interference evaluation (cache /
+        // bandwidth contention model), swept over √engines partition
+        // configurations — the published planners' dominant loop.
+        let ops_per_pair = 1.0e4;
+        let ops = ops_per_pair * total_layers * total_layers * (platform.engines as f64).sqrt();
+        let sched_cpu = ops / cost_model.cpu_hz;
+        let q = task.tiles.dag.adjacency();
+        // the serial scheduler enumerates candidate victim windows (which
+        // contiguous engine region to reclaim) and runs the serial match
+        // on each until one embeds — each window gets a 1M-node timeout.
+        // This is the victim-selection loop an IsoSched-style serial
+        // scheduler performs, and it is where the serial latency explodes.
+        let window = (task.tiles.len() + 4).min(platform.engines);
+        let mut sched_serial_match = 0.0;
+        let mut matched_window = None;
+        let mut last_mask = None;
+        let mut offset = 0;
+        while offset + window <= platform.engines {
+            let mut pre = vec![false; platform.engines];
+            for e in offset..offset + window {
+                pre[e] = true;
+            }
+            let (target, _) = crate::accel::build_target_graph(&platform, &pre);
+            let mask = build_mask(&task.tiles.dag, &target);
+            let (found, stats) = ullmann_find_first(&mask, &q, &target.adjacency(), 1_000_000);
+            sched_serial_match +=
+                cost_model.cpu_serial(&stats, q.rows(), target.len()).seconds;
+            last_mask = Some((mask, target));
+            if found.is_some() {
+                matched_window = Some(offset);
+                break;
+            }
+            offset += 4;
+        }
+        let _ = matched_window;
+        let total_sched = sched_cpu + sched_serial_match;
+        // IMMSched's on-accelerator episode searches all windows at once
+        // (the relaxed S spans the whole preemptible set)
+        let (mask, target) = last_mask.expect("at least one window");
+        let pso = PsoConfig::default();
+        let out = QuantizedMatcher::new(pso).run(&mask, &q, &target.adjacency());
+        let imm = cost_model.accel_pso(&out, q.rows(), target.len(), pso.particles, &platform);
+        t.row(vec![
+            scenario.into(),
+            model.name().into(),
+            fmt_time(exec_t),
+            fmt_time(total_sched),
+            format!("{:.1}x", total_sched / exec_t),
+            fmt_time(imm.seconds),
+        ]);
+    }
+    t
+}
+
+/// Fig. 2b: PSO stability with vs without continuous relaxation.
+///
+/// Stability is measured on the *mean current fitness* signal (not the
+/// monotone best-so-far): the discrete coupling makes every particle's
+/// evaluation jump between one-hot projections, so the swarm signal
+/// oscillates; the relaxation smooths it (paper Fig. 2b).  We also
+/// report the matched rate — the practical payoff of stable search.
+pub fn fig2b(params: &FigureParams) -> (Table, Vec<f64>, Vec<Vec<f64>>) {
+    let mut rng = Rng::new(params.seed);
+    let (q, g, _) = crate::matcher::ullmann::plant_embedding(8, 20, 0.3, 0.3, &mut rng);
+    let mask = crate::util::MatF::full(8, 20, 1.0);
+    let steps = 48;
+    let run = |relaxed: bool, seed: u64| {
+        let cfg = PsoConfig {
+            relaxed,
+            early_exit: false,
+            epochs: 1,
+            steps,
+            repair_budget: 0, // isolate the swarm itself — no Ullmann help
+            seed,
+            ..Default::default()
+        };
+        PsoMatcher::new(cfg).run(&mask, &q, &g)
+    };
+    let seeds = 5u64;
+    let mut avg = [vec![0.0f64; steps], vec![0.0f64; steps]];
+    let mut oscillation = [Vec::new(), Vec::new()];
+    let mut best = [Vec::new(), Vec::new()];
+    for s in 0..seeds {
+        for (i, relaxed) in [(0, true), (1, false)] {
+            let out = run(relaxed, params.seed + s);
+            // normalized step-to-step jitter of the swarm-mean fitness
+            let tr = &out.mean_fitness_trace;
+            let scale = tr.iter().map(|f| f.abs()).fold(1e-6f32, f32::max) as f64;
+            let jitter: f64 = tr
+                .windows(2)
+                .map(|w| ((w[1] - w[0]).abs() as f64) / scale)
+                .sum::<f64>()
+                / (steps - 1) as f64;
+            oscillation[i].push(jitter);
+            best[i].push(out.best_fitness as f64);
+            for k in 0..steps {
+                avg[i][k] += tr[k] as f64 / seeds as f64;
+            }
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let std = |v: &[f64]| {
+        let m = mean(v);
+        (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+    };
+    let mut t = Table::new("Fig 2b: continuous relaxation stabilizes the search").header(&[
+        "variant",
+        "swarm jitter (norm. |Δf|/step)",
+        "best-fitness std over seeds",
+    ]);
+    t.row(vec![
+        "relaxed (IMMSched)".into(),
+        format!("{:.4}", mean(&oscillation[0])),
+        format!("{:.3}", std(&best[0])),
+    ]);
+    t.row(vec![
+        "discrete coupling".into(),
+        format!("{:.4}", mean(&oscillation[1])),
+        format!("{:.3}", std(&best[1])),
+    ]);
+    let xs: Vec<f64> = (0..steps).map(|k| k as f64).collect();
+    let [relaxed_avg, discrete_avg] = avg;
+    (t, xs, vec![relaxed_avg, discrete_avg])
+}
+
+/// Shared engine for Figs. 6-8: run every framework on every cell once.
+pub struct GridResults {
+    /// [(platform, class, framework, summary)]
+    pub cells: Vec<(PlatformKind, WorkloadClass, FrameworkKind, metrics::SimSummary)>,
+}
+
+pub fn run_grid(params: &FigureParams) -> GridResults {
+    let mut cells = Vec::new();
+    for (platform, class) in CELLS {
+        for framework in FrameworkKind::ALL {
+            let res = run_cell(platform, class, framework, params.arrival_rate, params);
+            cells.push((platform, class, framework, metrics::summarize(&res)));
+        }
+    }
+    GridResults { cells }
+}
+
+impl GridResults {
+    fn get(&self, p: PlatformKind, c: WorkloadClass, f: FrameworkKind) -> &metrics::SimSummary {
+        &self
+            .cells
+            .iter()
+            .find(|(cp, cc, cf, _)| *cp == p && *cc == c && *cf == f)
+            .expect("cell missing")
+            .3
+    }
+
+    /// Geomean of `metric(IMMSched) / metric(baseline)` (or inverse)
+    /// across all six cells.
+    fn mean_ratio(&self, baseline: FrameworkKind, metric: impl Fn(&metrics::SimSummary) -> f64, higher_better: bool) -> f64 {
+        let ratios: Vec<f64> = CELLS
+            .iter()
+            .map(|&(p, c)| {
+                let ours = metric(self.get(p, c, FrameworkKind::ImmSched));
+                let base = metric(self.get(p, c, baseline));
+                if higher_better {
+                    ours / base.max(1e-30)
+                } else {
+                    base / ours.max(1e-30)
+                }
+            })
+            .collect();
+        crate::util::stats::geomean(&ratios)
+    }
+}
+
+/// Fig. 6: normalized Speedup (urgent total latency, baseline / IMMSched).
+pub fn fig6(grid: &GridResults) -> Table {
+    let mut t = Table::new("Fig 6: normalized speedup (urgent total latency vs IMMSched)")
+        .header(&["platform", "class", "PREMA", "CD-MSA", "Planaria", "MoCA", "IsoSched", "IMMSched"]);
+    for (p, c) in CELLS {
+        let imm = grid.get(p, c, FrameworkKind::ImmSched).urgent_latency;
+        let cell = |f: FrameworkKind| -> String {
+            let lat = grid.get(p, c, f).urgent_latency;
+            fmt_ratio(lat / imm.max(1e-30))
+        };
+        t.row(vec![
+            p.name().into(),
+            c.name().into(),
+            cell(FrameworkKind::Prema),
+            cell(FrameworkKind::CdMsa),
+            cell(FrameworkKind::Planaria),
+            cell(FrameworkKind::Moca),
+            cell(FrameworkKind::IsoSched),
+            "×1.00".into(),
+        ]);
+    }
+    let mut avg_row = vec!["geomean".to_string(), "all".to_string()];
+    for f in [
+        FrameworkKind::Prema,
+        FrameworkKind::CdMsa,
+        FrameworkKind::Planaria,
+        FrameworkKind::Moca,
+        FrameworkKind::IsoSched,
+    ] {
+        avg_row.push(fmt_ratio(grid.mean_ratio(f, |s| s.urgent_latency, false)));
+    }
+    avg_row.push("×1.00".into());
+    t.row(avg_row);
+    t
+}
+
+/// Fig. 7: normalized LBT.  λ sweep per cell (bounded bisection).
+pub fn fig7(params: &FigureParams) -> Table {
+    let mut t = Table::new("Fig 7: normalized LBT (max sustainable urgent rate vs IMMSched)")
+        .header(&["platform", "class", "PREMA", "CD-MSA", "Planaria", "MoCA", "IsoSched", "IMMSched [q/s]"]);
+    let mut ratios: Vec<Vec<f64>> = vec![Vec::new(); 5];
+    for (p, c) in CELLS {
+        let lbt_of = |f: FrameworkKind| -> f64 {
+            metrics::lbt_sweep(
+                |lambda| {
+                    // scale the horizon so every probe sees ~30 urgent
+                    // arrivals — a fixed horizon under-samples low rates
+                    // and turns the deadline rate into noise
+                    let mut probe = *params;
+                    probe.horizon = (30.0 / lambda).clamp(0.02, 0.5);
+                    let res = run_cell(p, c, f, lambda, &probe);
+                    let urgent = res.urgent().count();
+                    if urgent < 5 {
+                        return 1.0; // under-sampled: sustainable so far
+                    }
+                    metrics::summarize(&res).deadline_rate
+                },
+                params.lbt_target,
+                20.0,
+            )
+            // floor: "below 1 query/s" is reported as 1 (the paper's
+            // bars are normalized, never zero)
+            .max(1.0)
+        };
+        let imm = lbt_of(FrameworkKind::ImmSched);
+        let baselines = [
+            FrameworkKind::Prema,
+            FrameworkKind::CdMsa,
+            FrameworkKind::Planaria,
+            FrameworkKind::Moca,
+            FrameworkKind::IsoSched,
+        ];
+        let mut row = vec![p.name().to_string(), c.name().to_string()];
+        for (i, f) in baselines.iter().enumerate() {
+            let b = lbt_of(*f);
+            let ratio = imm / b.max(1e-9);
+            ratios[i].push(ratio);
+            row.push(format!("{}", fmt_ratio(ratio)));
+        }
+        row.push(format!("{imm:.0}"));
+        t.row(row);
+    }
+    let mut avg = vec!["geomean".to_string(), "IMM vs base".to_string()];
+    for r in &ratios {
+        avg.push(fmt_ratio(crate::util::stats::geomean(r)));
+    }
+    avg.push("—".into());
+    t.row(avg);
+    t
+}
+
+/// Fig. 8: normalized energy efficiency (tasks/J, IMMSched / baseline).
+pub fn fig8(grid: &GridResults) -> Table {
+    let mut t = Table::new("Fig 8: normalized energy efficiency (tasks/J vs baselines)")
+        .header(&["platform", "class", "PREMA", "CD-MSA", "Planaria", "MoCA", "IsoSched", "IMMSched [tasks/J]"]);
+    for (p, c) in CELLS {
+        let imm = grid.get(p, c, FrameworkKind::ImmSched).tasks_per_joule;
+        let cell = |f: FrameworkKind| -> String {
+            let b = grid.get(p, c, f).tasks_per_joule;
+            fmt_ratio(imm / b.max(1e-30))
+        };
+        t.row(vec![
+            p.name().into(),
+            c.name().into(),
+            cell(FrameworkKind::Prema),
+            cell(FrameworkKind::CdMsa),
+            cell(FrameworkKind::Planaria),
+            cell(FrameworkKind::Moca),
+            cell(FrameworkKind::IsoSched),
+            format!("{:.1}", imm),
+        ]);
+    }
+    let mut avg = vec!["geomean".to_string(), "all".to_string()];
+    for f in [
+        FrameworkKind::Prema,
+        FrameworkKind::CdMsa,
+        FrameworkKind::Planaria,
+        FrameworkKind::Moca,
+        FrameworkKind::IsoSched,
+    ] {
+        avg.push(fmt_ratio(grid.mean_ratio(f, |s| s.tasks_per_joule, true)));
+    }
+    avg.push("—".into());
+    t.row(avg);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_1_and_2_render() {
+        let t1 = table1();
+        assert!(t1.render().contains("IMMSched"));
+        let t2 = table2();
+        assert!(t2.render().contains("Cloud"));
+    }
+
+    #[test]
+    fn fig2b_shows_relaxation_advantage() {
+        let params = FigureParams { seed: 7, ..Default::default() };
+        let (t, xs, series) = fig2b(&params);
+        assert_eq!(xs.len(), 48);
+        assert_eq!(series.len(), 2);
+        assert!(!t.is_empty());
+        // the relaxed swarm-mean trace jitters less than the discrete one
+        let jitter = |s: &[f64]| -> f64 {
+            let scale = s.iter().map(|f| f.abs()).fold(1e-9, f64::max);
+            s.windows(2).map(|w| (w[1] - w[0]).abs() / scale).sum::<f64>()
+        };
+        assert!(
+            jitter(&series[0]) < jitter(&series[1]),
+            "relaxed jitter {} >= discrete jitter {}",
+            jitter(&series[0]),
+            jitter(&series[1])
+        );
+    }
+
+    #[test]
+    fn single_cell_runs() {
+        let params = FigureParams { horizon: 0.01, ..Default::default() };
+        let res = run_cell(
+            PlatformKind::Edge,
+            WorkloadClass::Simple,
+            FrameworkKind::ImmSched,
+            50.0,
+            &params,
+        );
+        assert!(res.completed_count() > 0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Report emission: ASCII tables to stdout + CSV into `reports/`.
+//!
+//! Every paper-figure bench routes its output through here so the same
+//! run produces both the console comparison and a machine-readable CSV
+//! (EXPERIMENTS.md links the CSVs).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::table::Table;
+
+pub mod figures;
+
+/// Directory reports are written into (`$IMMSCHED_REPORTS` or `reports/`).
+pub fn report_dir() -> PathBuf {
+    std::env::var_os("IMMSCHED_REPORTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("reports"))
+}
+
+/// Print a table and persist it as `<report_dir>/<stem>.csv`.
+pub fn emit(table: &Table, stem: &str) -> std::io::Result<PathBuf> {
+    print!("{}", table.render());
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{stem}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(table.to_csv().as_bytes())?;
+    println!("[report] wrote {}", path.display());
+    Ok(path)
+}
+
+/// Emit a simple named-series CSV (x, series1, series2, ...) for figures
+/// that are line plots rather than bar groups (Fig. 2b traces).
+pub fn emit_series(
+    stem: &str,
+    x_name: &str,
+    series_names: &[&str],
+    xs: &[f64],
+    series: &[Vec<f64>],
+) -> std::io::Result<PathBuf> {
+    assert_eq!(series_names.len(), series.len());
+    for s in series {
+        assert_eq!(s.len(), xs.len());
+    }
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{stem}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{},{}", x_name, series_names.join(","))?;
+    for (i, x) in xs.iter().enumerate() {
+        let row: Vec<String> = series.iter().map(|s| format!("{}", s[i])).collect();
+        writeln!(f, "{},{}", x, row.join(","))?;
+    }
+    println!("[report] wrote {}", path.display());
+    Ok(path)
+}
+
+/// Write free-form text alongside the CSVs (bench summaries).
+pub fn emit_text(stem: &str, body: &str) -> std::io::Result<PathBuf> {
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{stem}.txt"));
+    std::fs::write(&path, body)?;
+    Ok(path)
+}
+
+/// True if `path` is writable for reports (used by failure-injection
+/// tests).
+pub fn dir_writable(path: &Path) -> bool {
+    std::fs::create_dir_all(path).is_ok()
+        && std::fs::write(path.join(".probe"), b"x")
+            .map(|_| {
+                let _ = std::fs::remove_file(path.join(".probe"));
+            })
+            .is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // env-var mutation is process-global; serialize the tests that touch it
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn emit_series_roundtrip() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("immsched_report_test");
+        std::env::set_var("IMMSCHED_REPORTS", &dir);
+        let p = emit_series("t_series", "step", &["a", "b"], &[0.0, 1.0], &[vec![1.0, 2.0], vec![3.0, 4.0]])
+            .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("step,a,b\n0,1,3\n1,2,4"));
+        std::env::remove_var("IMMSCHED_REPORTS");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn emit_table_writes_csv() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("immsched_report_test2");
+        std::env::set_var("IMMSCHED_REPORTS", &dir);
+        let mut t = Table::new("x").header(&["a"]);
+        t.row(vec!["1".into()]);
+        let p = emit(&t, "t_table").unwrap();
+        assert!(p.exists());
+        std::env::remove_var("IMMSCHED_REPORTS");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

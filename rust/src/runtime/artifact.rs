@@ -1,0 +1,154 @@
+//! Artifact registry: discovery + metadata for the AOT size classes.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per
+//! lowered size class (`name n m particles k_steps`); this module parses
+//! it, locates the HLO files, and picks the smallest class that fits a
+//! given (query, target) problem — queries are padded up to the class
+//! dims with isolated vertices and an all-zero mask (padding rows cannot
+//! influence the fitness of real rows because their S rows are zero).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT size class (must mirror python/compile/model.py::SIZE_CLASSES).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SizeClass {
+    /// Max query vertices (padded n).
+    pub n: usize,
+    /// Max target vertices (padded m).
+    pub m: usize,
+    /// Particle count per epoch.
+    pub particles: usize,
+    /// Fused PSO steps per epoch.
+    pub k_steps: usize,
+}
+
+impl SizeClass {
+    /// Whether a (n_query, m_target) problem fits in this class.
+    pub fn fits(&self, n: usize, m: usize) -> bool {
+        n <= self.n && m <= self.m
+    }
+
+    /// Working-set cost proxy used to order classes (smaller = cheaper).
+    pub fn cost(&self) -> usize {
+        self.particles * self.n * self.m
+    }
+}
+
+/// A discovered artifact: metadata + path to the HLO text.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub class: SizeClass,
+    pub path: PathBuf,
+}
+
+/// All artifacts from a manifest, ordered by ascending cost.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    artifacts: Vec<Artifact>,
+}
+
+impl ArtifactRegistry {
+    /// Parse `<dir>/manifest.txt` and verify the HLO files exist.
+    pub fn discover(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: expected 5 fields, got {:?}", lineno + 1, parts);
+            }
+            let name = parts[0].to_string();
+            let nums: Vec<usize> = parts[1..]
+                .iter()
+                .map(|p| p.parse().with_context(|| format!("manifest line {}", lineno + 1)))
+                .collect::<Result<_>>()?;
+            let path = dir.join(format!("pso_epoch_{name}.hlo.txt"));
+            if !path.exists() {
+                bail!("manifest references missing artifact {}", path.display());
+            }
+            artifacts.push(Artifact {
+                name,
+                class: SizeClass { n: nums[0], m: nums[1], particles: nums[2], k_steps: nums[3] },
+                path,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {} lists no artifacts", manifest.display());
+        }
+        artifacts.sort_by_key(|a| a.class.cost());
+        Ok(Self { artifacts })
+    }
+
+    /// All artifacts, cheapest first.
+    pub fn all(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    /// Smallest class that fits the given problem dims.
+    pub fn select(&self, n: usize, m: usize) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.class.fits(n, m))
+    }
+
+    /// Look up by class name.
+    pub fn by_name(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Default artifact directory: `$IMMSCHED_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("IMMSCHED_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str, classes: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+        for c in classes {
+            std::fs::write(dir.join(format!("pso_epoch_{c}.hlo.txt")), "HloModule fake").unwrap();
+        }
+    }
+
+    #[test]
+    fn parses_manifest_and_orders_by_cost() {
+        let dir = std::env::temp_dir().join("immsched_test_manifest_a");
+        write_manifest(&dir, "big 64 128 16 8\ntiny 8 16 8 8\n", &["big", "tiny"]);
+        let reg = ArtifactRegistry::discover(&dir).unwrap();
+        assert_eq!(reg.all().len(), 2);
+        assert_eq!(reg.all()[0].name, "tiny");
+        assert_eq!(reg.select(10, 10).unwrap().name, "big"); // n=10 > tiny.n=8
+        assert_eq!(reg.select(4, 10).unwrap().name, "tiny");
+        assert!(reg.select(100, 10).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let dir = std::env::temp_dir().join("immsched_test_manifest_b");
+        write_manifest(&dir, "ghost 8 16 8 8\n", &[]);
+        assert!(ArtifactRegistry::discover(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_line_is_an_error() {
+        let dir = std::env::temp_dir().join("immsched_test_manifest_c");
+        write_manifest(&dir, "bad 8 16\n", &["bad"]);
+        assert!(ArtifactRegistry::discover(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,58 @@
+//! Shared PJRT CPU client.
+//!
+//! PJRT client construction is expensive (thread pools, allocator) and the
+//! `xla` crate's client is not `Sync`-shareable across arbitrary threads,
+//! so the coordinator creates one [`RuntimeClient`] and keeps it on the
+//! controller thread; everything reaching the runtime goes through the
+//! controller's channel (DESIGN.md §8: single-owner hot path, no locks).
+
+use anyhow::{Context, Result};
+
+/// Wrapper over the PJRT CPU client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name ("cpu" / "Host").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile an HLO-text file into a loaded executable.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Access to the raw client (tests).
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = RuntimeClient::cpu().expect("client");
+        assert!(c.device_count() >= 1);
+    }
+}

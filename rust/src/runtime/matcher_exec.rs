@@ -1,0 +1,226 @@
+//! Epoch executor: drive the AOT `pso_epoch` executable from rust.
+//!
+//! One [`EpochRunner`] wraps one compiled size class.  The calling
+//! convention (argument order, shapes, 5-tuple output) is pinned by
+//! `python/compile/model.py::epoch_fn` — change either side only with the
+//! other.
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifact::{Artifact, SizeClass};
+use super::client::RuntimeClient;
+
+/// Flat row-major epoch inputs at the class's padded dims.
+///
+/// `s`, `v`, `s_local` are `(particles, n, m)`; `f_local` is `(particles,)`;
+/// `s_star`, `s_bar`, `mask` are `(n, m)`; `q` is `(n, n)`; `g` is `(m, m)`.
+#[derive(Clone, Debug)]
+pub struct EpochInputs {
+    pub s: Vec<f32>,
+    pub v: Vec<f32>,
+    pub s_local: Vec<f32>,
+    pub f_local: Vec<f32>,
+    pub s_star: Vec<f32>,
+    pub s_bar: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub q: Vec<f32>,
+    pub g: Vec<f32>,
+    pub seed: u32,
+    /// `[w, c1, c2, c3]` PSO coefficients.
+    pub coefs: [f32; 4],
+}
+
+impl EpochInputs {
+    /// Zero-initialized inputs for a size class (S rows all-zero; callers
+    /// fill real data and masks).
+    pub fn zeros(class: SizeClass) -> Self {
+        let (p, n, m) = (class.particles, class.n, class.m);
+        Self {
+            s: vec![0.0; p * n * m],
+            v: vec![0.0; p * n * m],
+            s_local: vec![0.0; p * n * m],
+            f_local: vec![f32::NEG_INFINITY; p],
+            s_star: vec![0.0; n * m],
+            s_bar: vec![0.0; n * m],
+            mask: vec![0.0; n * m],
+            q: vec![0.0; n * n],
+            g: vec![0.0; m * m],
+            seed: 0,
+            coefs: [0.72, 1.49, 1.49, 0.6],
+        }
+    }
+
+    fn validate(&self, class: SizeClass) -> Result<()> {
+        let (p, n, m) = (class.particles, class.n, class.m);
+        ensure!(self.s.len() == p * n * m, "s len {} != {}", self.s.len(), p * n * m);
+        ensure!(self.v.len() == p * n * m, "v len mismatch");
+        ensure!(self.s_local.len() == p * n * m, "s_local len mismatch");
+        ensure!(self.f_local.len() == p, "f_local len mismatch");
+        ensure!(self.s_star.len() == n * m, "s_star len mismatch");
+        ensure!(self.s_bar.len() == n * m, "s_bar len mismatch");
+        ensure!(self.mask.len() == n * m, "mask len mismatch");
+        ensure!(self.q.len() == n * n, "q len mismatch");
+        ensure!(self.g.len() == m * m, "g len mismatch");
+        Ok(())
+    }
+}
+
+/// Flat epoch outputs (same layout as the corresponding inputs).
+#[derive(Clone, Debug)]
+pub struct EpochOutputs {
+    pub s: Vec<f32>,
+    pub v: Vec<f32>,
+    pub s_local: Vec<f32>,
+    pub f_local: Vec<f32>,
+    pub f_last: Vec<f32>,
+}
+
+/// A compiled `pso_epoch` executable for one size class.
+pub struct EpochRunner {
+    class: SizeClass,
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl EpochRunner {
+    /// Compile the artifact on the given client.
+    pub fn load(client: &RuntimeClient, artifact: &Artifact) -> Result<Self> {
+        let exe = client
+            .compile_hlo_text(&artifact.path)
+            .with_context(|| format!("loading epoch artifact '{}'", artifact.name))?;
+        Ok(Self { class: artifact.class, name: artifact.name.clone(), exe })
+    }
+
+    pub fn class(&self) -> SizeClass {
+        self.class
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute one epoch.  Shapes are checked against the size class.
+    pub fn run(&self, inputs: &EpochInputs) -> Result<EpochOutputs> {
+        inputs.validate(self.class)?;
+        let (p, n, m) = (
+            self.class.particles as i64,
+            self.class.n as i64,
+            self.class.m as i64,
+        );
+        let lit3 = |data: &[f32]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(&[p, n, m])?)
+        };
+        let lit2 = |data: &[f32], r: i64, c: i64| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(&[r, c])?)
+        };
+        let args: Vec<xla::Literal> = vec![
+            lit3(&inputs.s)?,
+            lit3(&inputs.v)?,
+            lit3(&inputs.s_local)?,
+            xla::Literal::vec1(&inputs.f_local),
+            lit2(&inputs.s_star, n, m)?,
+            lit2(&inputs.s_bar, n, m)?,
+            lit2(&inputs.mask, n, m)?,
+            lit2(&inputs.q, n, n)?,
+            lit2(&inputs.g, m, m)?,
+            xla::Literal::scalar(inputs.seed),
+            xla::Literal::vec1(&inputs.coefs),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .context("executing pso_epoch")?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching epoch outputs")?
+            .to_tuple()
+            .context("decomposing epoch output tuple")?;
+        ensure!(tuple.len() == 5, "expected 5 outputs, got {}", tuple.len());
+        let mut it = tuple.into_iter();
+        let mut take = |what: &str| -> Result<Vec<f32>> {
+            it.next()
+                .with_context(|| format!("missing output {what}"))?
+                .to_vec::<f32>()
+                .with_context(|| format!("reading output {what}"))
+        };
+        Ok(EpochOutputs {
+            s: take("s")?,
+            v: take("v")?,
+            s_local: take("s_local")?,
+            f_local: take("f_local")?,
+            f_last: take("f_last")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactRegistry;
+
+    fn registry() -> Option<ArtifactRegistry> {
+        ArtifactRegistry::discover(&ArtifactRegistry::default_dir()).ok()
+    }
+
+    /// End-to-end PJRT smoke: load the smallest artifact, run one epoch,
+    /// and check the structural invariants the L2 model guarantees.
+    #[test]
+    fn epoch_runs_and_preserves_invariants() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let client = RuntimeClient::cpu().expect("client");
+        let artifact = &reg.all()[0];
+        let runner = EpochRunner::load(&client, artifact).expect("compile");
+        let class = runner.class();
+        let (p, n, m) = (class.particles, class.n, class.m);
+
+        let mut rng = crate::util::Rng::new(1);
+        let mut inputs = EpochInputs::zeros(class);
+        // Full mask, sparse random graphs, row-stochastic random S.
+        inputs.mask.iter_mut().for_each(|x| *x = 1.0);
+        for i in 0..n * n {
+            inputs.q[i] = if rng.chance(0.25) { 1.0 } else { 0.0 };
+        }
+        for i in 0..m * m {
+            inputs.g[i] = if rng.chance(0.5) { 1.0 } else { 0.0 };
+        }
+        for part in 0..p {
+            for i in 0..n {
+                let row = &mut inputs.s[(part * n + i) * m..(part * n + i + 1) * m];
+                let mut sum = 0.0;
+                for x in row.iter_mut() {
+                    *x = rng.f32() + 1e-3;
+                    sum += *x;
+                }
+                row.iter_mut().for_each(|x| *x /= sum);
+            }
+        }
+        inputs.s_local.copy_from_slice(&inputs.s);
+        inputs.s_star.copy_from_slice(&inputs.s[..n * m]);
+        inputs.s_bar.copy_from_slice(&inputs.s[..n * m]);
+        inputs.seed = 42;
+
+        let out = runner.run(&inputs).expect("epoch");
+        assert_eq!(out.s.len(), p * n * m);
+        assert_eq!(out.f_local.len(), p);
+        assert_eq!(out.f_last.len(), p);
+        // Rows of S' are stochastic.
+        for part in 0..p {
+            for i in 0..n {
+                let sum: f32 = out.s[(part * n + i) * m..(part * n + i + 1) * m].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-3, "row sum {sum}");
+            }
+        }
+        // Local best dominates final fitness, and everything is finite.
+        for part in 0..p {
+            assert!(out.f_local[part].is_finite());
+            assert!(out.f_local[part] >= out.f_last[part] - 1e-3);
+        }
+        // Determinism: same inputs -> same outputs.
+        let out2 = runner.run(&inputs).expect("epoch 2");
+        assert_eq!(out.s, out2.s);
+        assert_eq!(out.f_last, out2.f_last);
+    }
+}

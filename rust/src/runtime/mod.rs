@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the crate touches the `xla` crate.  The
+//! interchange contract with `python/compile/aot.py`:
+//!
+//! * artifacts are HLO **text** (`pso_epoch_<class>.hlo.txt`) — jax ≥ 0.5
+//!   serialized protos carry 64-bit instruction ids the bundled
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids;
+//! * `artifacts/manifest.txt` lists `name n m particles k_steps` per class;
+//! * the entry computation takes 11 parameters
+//!   `(S, V, S_local, f_local, S*, S̄, Mask, Q, G, seed, coefs)` and
+//!   returns a 5-tuple `(S', V', S_local', f_local', f_last)`
+//!   (lowered with `return_tuple=True`).
+//!
+//! [`EpochRunner`] owns one compiled executable per size class and reuses
+//! flat buffers so the interrupt hot path performs no allocation beyond
+//! what PJRT itself requires.
+
+mod artifact;
+mod client;
+mod matcher_exec;
+
+pub use artifact::{Artifact, ArtifactRegistry, SizeClass};
+pub use client::RuntimeClient;
+pub use matcher_exec::{EpochInputs, EpochOutputs, EpochRunner};

@@ -1,0 +1,184 @@
+//! Execution-cost model: what a task costs under LTS vs TSS.
+//!
+//! The structural difference (paper Fig. 3):
+//! * **LTS** runs one task at a time on the whole array, layer by layer;
+//!   every inter-layer activation round-trips through DRAM and weights
+//!   stream from DRAM — energy pays [`EnergyModel::dram_byte`] per byte
+//!   and time pays the DRAM bandwidth wall.
+//! * **TSS** cascades layers across an engine partition; inter-layer
+//!   activations move over the NoC (0.64 pJ/bit/hop) and stay on-chip;
+//!   weights load once into engine SRAM.
+
+use crate::accel::{EnergyModel, Platform};
+
+use super::task::Task;
+
+/// Scheduling paradigm (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Paradigm {
+    Lts,
+    Tss,
+}
+
+/// Estimated execution time + energy for one task instance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecEstimate {
+    pub seconds: f64,
+    pub joules: f64,
+    /// Bytes that hit DRAM (LTS checkpoint/restore also adds here).
+    pub dram_bytes: u64,
+    /// Bytes that crossed the NoC.
+    pub noc_bytes: u64,
+}
+
+/// Execution model bound to a platform.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecModel {
+    pub platform: Platform,
+    pub energy: EnergyModel,
+    /// DRAM bandwidth (bytes/s) — LPDDR4-class edge memory.
+    pub dram_bw: f64,
+    /// Array utilization for dense layers.
+    pub utilization: f64,
+}
+
+impl ExecModel {
+    pub fn new(platform: Platform) -> Self {
+        Self {
+            platform,
+            energy: EnergyModel::default(),
+            dram_bw: 25.6e9,
+            utilization: 0.6,
+        }
+    }
+
+    /// Effective MACs/s on `k` engines.
+    pub fn rate(&self, k: usize) -> f64 {
+        self.platform.engine_macs() as f64 * k as f64 * self.platform.clock_hz * self.utilization
+    }
+
+    /// LTS estimate: whole array, DRAM-coupled layers.
+    ///
+    /// Time = max(compute, DRAM streaming) — the array stalls on
+    /// whichever is slower; energy pays DRAM for weights + 2× activations
+    /// (write + read back between layers).
+    pub fn lts(&self, task: &Task) -> ExecEstimate {
+        let compute_s = task.macs as f64 / self.rate(self.platform.engines);
+        let dram_bytes = task.weight_bytes + 2 * task.act_bytes;
+        let dram_s = dram_bytes as f64 / self.dram_bw;
+        let seconds = compute_s.max(dram_s) + compute_s.min(dram_s) * 0.2; // imperfect overlap
+        let joules = task.macs as f64 * self.energy.mac_int8
+            + dram_bytes as f64 * self.energy.dram_byte
+            + self.energy.static_energy(self.platform.engines, seconds);
+        ExecEstimate { seconds, joules, dram_bytes, noc_bytes: 0 }
+    }
+
+    /// TSS estimate on a `k`-engine partition: cascaded tiles, NoC-coupled.
+    ///
+    /// Only *segment-boundary* activations cross the NoC (intra-segment
+    /// layers are fused on one engine — that is the whole point of Layer
+    /// Concatenate-and-Split); weights stream from DRAM once.
+    pub fn tss(&self, task: &Task, k: usize) -> ExecEstimate {
+        let k = k.max(1);
+        let compute_s = task.macs as f64 / self.rate(k);
+        // pipeline fill: one segment depth of latency
+        let fill_s = compute_s / task.tiles.num_segments.max(1) as f64;
+        // fraction of layer boundaries that are segment boundaries
+        let boundary_frac =
+            (task.tiles.num_segments as f64 / task.layers.max(1) as f64).min(1.0);
+        let noc_bytes = (task.act_bytes as f64 * boundary_frac) as u64;
+        let hops = 1.5;
+        let noc_s = noc_bytes as f64 * 8.0 / (crate::accel::noc::LINK_BITS * self.platform.clock_hz)
+            / k as f64; // links in parallel across the cascade
+        let dram_bytes = task.weight_bytes; // weights loaded once
+        let dram_s = dram_bytes as f64 / self.dram_bw;
+        let seconds = compute_s.max(noc_s).max(dram_s) + fill_s;
+        let joules = task.macs as f64 * self.energy.mac_int8
+            + noc_bytes as f64 * 8.0 * hops * self.energy.noc_bit_hop
+            + task.act_bytes as f64 * self.energy.sram_byte * 2.0
+            + dram_bytes as f64 * self.energy.dram_byte
+            + self.energy.static_energy(k, seconds);
+        ExecEstimate { seconds, joules, dram_bytes, noc_bytes }
+    }
+
+    /// LTS preemption overhead: checkpoint the running layer's
+    /// activations to DRAM and restore them later.
+    pub fn lts_preempt_overhead(&self, victim: &Task) -> ExecEstimate {
+        // one layer's activations ≈ act_bytes / layers; round-trip ×2
+        let per_layer = victim.act_bytes / victim.tiles.len().max(1) as u64;
+        let bytes = per_layer * 2;
+        let seconds = bytes as f64 / self.dram_bw;
+        ExecEstimate {
+            seconds,
+            joules: bytes as f64 * self.energy.dram_byte,
+            dram_bytes: bytes,
+            noc_bytes: 0,
+        }
+    }
+
+    /// TSS preemption overhead: drain in-flight tiles of the victim
+    /// partition into engine SRAM (no DRAM round-trip).
+    pub fn tss_preempt_overhead(&self, victim: &Task, k: usize) -> ExecEstimate {
+        let per_tile = victim.act_bytes / victim.tiles.len().max(1) as u64;
+        let bytes = per_tile * k.max(1) as u64 / 4;
+        let seconds = bytes as f64 * 8.0 / (crate::accel::noc::LINK_BITS * self.platform.clock_hz);
+        ExecEstimate {
+            seconds,
+            joules: bytes as f64 * self.energy.sram_byte,
+            dram_bytes: 0,
+            noc_bytes: bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::task::Priority;
+    use crate::workload::{ModelId, TilingConfig};
+
+    fn task(model: ModelId) -> Task {
+        Task::new(0, model, Priority::Normal, 0.0, TilingConfig::default())
+    }
+
+    #[test]
+    fn tss_beats_lts_on_energy() {
+        let m = ExecModel::new(Platform::edge());
+        // activation-heavy CNN: DRAM round-trips dominate LTS — big gap
+        let t = task(ModelId::ResNet50);
+        let (lts, tss) = (m.lts(&t), m.tss(&t, m.platform.engines / 2));
+        assert!(lts.joules > 1.5 * tss.joules, "resnet lts {} vs tss {}", lts.joules, tss.joules);
+        // weight-dominated LLM: weights hit DRAM either way, but TSS
+        // still wins on the activation traffic
+        let t = task(ModelId::Qwen7B);
+        let (lts, tss) = (m.lts(&t), m.tss(&t, m.platform.engines / 2));
+        assert!(lts.joules > tss.joules, "qwen lts {} vs tss {}", lts.joules, tss.joules);
+    }
+
+    #[test]
+    fn more_engines_run_faster() {
+        let m = ExecModel::new(Platform::edge());
+        let t = task(ModelId::ResNet50);
+        assert!(m.tss(&t, 32).seconds < m.tss(&t, 8).seconds);
+    }
+
+    #[test]
+    fn lts_preempt_costs_dram() {
+        let m = ExecModel::new(Platform::edge());
+        let t = task(ModelId::UNet);
+        let lts_ov = m.lts_preempt_overhead(&t);
+        let tss_ov = m.tss_preempt_overhead(&t, 16);
+        assert!(lts_ov.dram_bytes > 0);
+        assert_eq!(tss_ov.dram_bytes, 0);
+        assert!(lts_ov.joules > tss_ov.joules);
+    }
+
+    #[test]
+    fn llm_is_dram_bound_under_lts() {
+        let m = ExecModel::new(Platform::edge());
+        let t = task(ModelId::Llama3_8B);
+        let est = m.lts(&t);
+        let compute_s = t.macs as f64 / m.rate(m.platform.engines);
+        assert!(est.seconds > compute_s, "LLM LTS must be memory-bound");
+    }
+}

@@ -1,0 +1,195 @@
+//! Evaluation metrics (paper §4.1.4): Speedup, Latency-Bound Throughput
+//! and Energy efficiency.
+
+use crate::util::stats::geomean;
+
+use super::sim::SimResult;
+use super::task::Priority;
+
+/// Aggregate metrics of one simulation run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimSummary {
+    /// Mean total latency of completed urgent tasks (s).
+    pub urgent_latency: f64,
+    /// Mean scheduling latency of urgent tasks (s).
+    pub sched_latency: f64,
+    /// Urgent deadline hit rate in [0,1].
+    pub deadline_rate: f64,
+    /// Completed tasks (all priorities).
+    pub completed: usize,
+    /// Total energy (J).
+    pub energy_j: f64,
+    /// Throughput: completed tasks per second of horizon.
+    pub throughput: f64,
+    /// Energy efficiency: completed tasks per joule.
+    pub tasks_per_joule: f64,
+}
+
+/// Summarize a run.
+pub fn summarize(res: &SimResult) -> SimSummary {
+    let urgent: Vec<_> = res
+        .records
+        .iter()
+        .filter(|r| r.priority == Priority::Urgent)
+        .collect();
+    let completed_urgent: Vec<f64> =
+        urgent.iter().filter_map(|r| r.total_latency()).collect();
+    let urgent_latency = if completed_urgent.is_empty() {
+        f64::INFINITY
+    } else {
+        completed_urgent.iter().sum::<f64>() / completed_urgent.len() as f64
+    };
+    let sched_latency = if urgent.is_empty() {
+        0.0
+    } else {
+        urgent.iter().map(|r| r.sched_seconds).sum::<f64>() / urgent.len() as f64
+    };
+    let deadline_rate = if urgent.is_empty() {
+        1.0
+    } else {
+        urgent.iter().filter(|r| r.deadline_met()).count() as f64 / urgent.len() as f64
+    };
+    let completed = res.completed_count();
+    let energy_j = res.energy.total();
+    let throughput = completed as f64 / res.horizon.max(1e-12);
+    SimSummary {
+        urgent_latency,
+        sched_latency,
+        deadline_rate,
+        completed,
+        energy_j,
+        throughput,
+        tasks_per_joule: completed as f64 / energy_j.max(1e-18),
+    }
+}
+
+/// A named collection of per-(platform, class) metric values, aggregated
+/// with the geometric mean the way the paper reports cross-workload
+/// averages.
+#[derive(Clone, Debug, Default)]
+pub struct MetricSet {
+    values: Vec<f64>,
+}
+
+impl MetricSet {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn geomean(&self) -> f64 {
+        geomean(&self.values)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            f64::NAN
+        } else {
+            self.values.iter().sum::<f64>() / self.values.len() as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Latency-Bound Throughput: the highest Poisson rate λ at which the
+/// urgent deadline hit rate stays ≥ `target_rate` (paper: "the maximum
+/// queries-per-second achieved by the system under a Poisson arrival
+/// rate").  `run` executes a simulation at a given λ and returns the
+/// deadline hit rate; the sweep doubles λ until failure then bisects.
+pub fn lbt_sweep(mut run: impl FnMut(f64) -> f64, target_rate: f64, lambda0: f64) -> f64 {
+    let mut lo = 0.0;
+    let mut hi = lambda0.max(1.0);
+    // find an upper bracket
+    let mut tries = 0;
+    while run(hi) >= target_rate {
+        lo = hi;
+        hi *= 2.0;
+        tries += 1;
+        if tries > 16 {
+            return hi; // system never saturates in range — report the cap
+        }
+    }
+    if lo == 0.0 {
+        // even lambda0 fails; bisect downward from lambda0
+        lo = 0.0;
+    }
+    for _ in 0..12 {
+        let mid = 0.5 * (lo + hi);
+        if run(mid) >= target_rate {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::EnergyBook;
+    use crate::scheduler::sim::TaskRecord;
+    use crate::scheduler::FrameworkKind;
+    use crate::workload::ModelId;
+
+    fn record(priority: Priority, arrival: f64, completed: Option<f64>, deadline: Option<f64>) -> TaskRecord {
+        TaskRecord {
+            id: 0,
+            model: ModelId::MobileNetV2,
+            priority,
+            arrival,
+            sched_seconds: 0.001,
+            started: completed.map(|c| c - 0.01),
+            completed,
+            deadline,
+        }
+    }
+
+    fn result(records: Vec<TaskRecord>) -> SimResult {
+        let mut energy = EnergyBook::new();
+        energy.compute_j = 2.0;
+        SimResult { records, energy, horizon: 1.0, framework: FrameworkKind::ImmSched }
+    }
+
+    #[test]
+    fn summary_computes_rates() {
+        let res = result(vec![
+            record(Priority::Urgent, 0.0, Some(0.1), Some(0.2)),  // met
+            record(Priority::Urgent, 0.0, Some(0.5), Some(0.2)),  // missed
+            record(Priority::Background, 0.0, Some(0.3), None),
+        ]);
+        let s = summarize(&res);
+        assert!((s.deadline_rate - 0.5).abs() < 1e-12);
+        assert_eq!(s.completed, 3);
+        assert!((s.throughput - 3.0).abs() < 1e-12);
+        assert!((s.urgent_latency - 0.3).abs() < 1e-12);
+        assert!((s.tasks_per_joule - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lbt_finds_threshold_of_synthetic_system() {
+        // synthetic system: meets deadlines iff λ <= 100
+        let lbt = lbt_sweep(|l| if l <= 100.0 { 1.0 } else { 0.0 }, 0.9, 10.0);
+        assert!((lbt - 100.0).abs() < 2.0, "lbt {lbt}");
+    }
+
+    #[test]
+    fn lbt_caps_when_never_saturating() {
+        let lbt = lbt_sweep(|_| 1.0, 0.9, 10.0);
+        assert!(lbt > 1e5);
+    }
+
+    #[test]
+    fn metric_set_geomean() {
+        let mut m = MetricSet::default();
+        m.push(1.0);
+        m.push(100.0);
+        assert!((m.geomean() - 10.0).abs() < 1e-9);
+    }
+}

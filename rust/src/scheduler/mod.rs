@@ -1,0 +1,34 @@
+//! Multi-DNN scheduling frameworks + event-driven platform simulator.
+//!
+//! Six frameworks are implemented behind one [`Framework`] trait:
+//!
+//! | framework | paradigm | preemptive | interruptible | matcher |
+//! |-----------|----------|------------|---------------|---------|
+//! | PREMA     | LTS      | ✓          | ×             | token heuristic (CPU) |
+//! | Planaria  | LTS      | ✓          | ×             | fission search (CPU)  |
+//! | MoCA      | LTS      | ✓          | ×             | memory-aware heuristic (CPU) |
+//! | CD-MSA    | LTS      | ✓          | ×             | deadline-aware heuristic (CPU) |
+//! | IsoSched  | TSS      | ✓          | ×             | serial Ullmann (CPU)  |
+//! | IMMSched  | TSS      | ✓          | ✓             | parallel PSO (on-accelerator) |
+//!
+//! (paper Table 1).  "Interruptible" = scheduling latency small enough to
+//! handle *unpredictable* triggers online; the LTS baselines and IsoSched
+//! pay their (measured or modeled) serial CPU search latency on every
+//! urgent arrival, IMMSched pays the on-accelerator PSO episode cost.
+
+pub mod exec_model;
+pub mod frameworks;
+pub mod lts_policies;
+pub mod metrics;
+pub mod preempt;
+pub mod sim;
+pub mod task;
+pub mod trace;
+
+pub use exec_model::{ExecEstimate, ExecModel, Paradigm};
+pub use frameworks::{make_framework, Framework, FrameworkKind, SchedDecision, SchedRequest};
+pub use metrics::{lbt_sweep, MetricSet, SimSummary};
+pub use preempt::{Candidate, PreemptPolicy};
+pub use sim::{SimConfig, SimResult, Simulator, TaskRecord};
+pub use task::{Priority, Task, TaskId};
+pub use trace::{build_trace, TraceConfig};

@@ -1,0 +1,167 @@
+//! Preemption policy (paper §3.3 + Fig. 4): the adaptive "single-core
+//! preemption ratio" and max-slack victim selection.
+//!
+//! * the **ratio** caps how much of the platform one interrupt may
+//!   claim; it adapts with the urgent task's deadline pressure — a tight
+//!   deadline may reclaim more engines, a loose one fewer (so background
+//!   work keeps making progress);
+//! * among preemptible candidates, victims with the **largest
+//!   execution-time slack** are reclaimed first ("prioritizes preempting
+//!   the task with the largest execution-time slack, so as to avoid
+//!   deadline violations of the original tasks caused by preemption").
+
+use super::task::Priority;
+
+/// Policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PreemptPolicy {
+    /// Base fraction of engines one interrupt may claim.
+    pub base_ratio: f64,
+    /// Ratio ceiling under maximal deadline pressure.
+    pub max_ratio: f64,
+    /// Deadline-pressure pivot: pressure 1.0 = deadline equals the
+    /// estimated isolated execution time (no slack at all).
+    pub pressure_pivot: f64,
+}
+
+impl Default for PreemptPolicy {
+    fn default() -> Self {
+        Self { base_ratio: 0.5, max_ratio: 0.875, pressure_pivot: 2.0 }
+    }
+}
+
+/// A preemption candidate (engine currently idle or owned by a
+/// lower-priority task).
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub engine: usize,
+    /// Owner priority (None = idle engine).
+    pub owner_priority: Option<Priority>,
+    /// Owner's execution-time slack: time remaining until its own
+    /// deadline minus its remaining work (idle engines: +inf).
+    pub owner_slack: f64,
+}
+
+impl PreemptPolicy {
+    /// Adaptive ratio for an urgent task whose deadline allows
+    /// `deadline_slack = (deadline - now) / isolated_exec` headroom.
+    /// `deadline_slack <= pivot` pushes the ratio toward `max_ratio`.
+    pub fn adaptive_ratio(&self, deadline_slack: f64) -> f64 {
+        if !deadline_slack.is_finite() {
+            return self.base_ratio;
+        }
+        let pressure = (self.pressure_pivot / deadline_slack.max(1e-9)).clamp(0.0, 2.0) / 2.0;
+        self.base_ratio + (self.max_ratio - self.base_ratio) * pressure
+    }
+
+    /// Select up to `ratio × total_engines` victims: idle engines first,
+    /// then background-owned by descending slack, then (only if the
+    /// policy ever allows it) normal-priority by descending slack.
+    /// Urgent owners are never selected.
+    pub fn select_victims(
+        &self,
+        candidates: &[Candidate],
+        total_engines: usize,
+        deadline_slack: f64,
+    ) -> Vec<usize> {
+        let cap = ((total_engines as f64) * self.adaptive_ratio(deadline_slack))
+            .floor()
+            .max(1.0) as usize;
+        let mut idle: Vec<&Candidate> =
+            candidates.iter().filter(|c| c.owner_priority.is_none()).collect();
+        idle.sort_by_key(|c| c.engine);
+        let mut owned: Vec<&Candidate> = candidates
+            .iter()
+            .filter(|c| {
+                matches!(c.owner_priority, Some(Priority::Background) | Some(Priority::Normal))
+            })
+            .collect();
+        // max-slack first within each priority class; Background before Normal
+        owned.sort_by(|a, b| {
+            let pa = a.owner_priority.unwrap();
+            let pb = b.owner_priority.unwrap();
+            pa.cmp(&pb) // Background < Normal: Background first
+                .then(b.owner_slack.partial_cmp(&a.owner_slack).unwrap())
+                .then(a.engine.cmp(&b.engine))
+        });
+        idle.into_iter()
+            .chain(owned)
+            .take(cap)
+            .map(|c| c.engine)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(engine: usize, prio: Option<Priority>, slack: f64) -> Candidate {
+        Candidate { engine, owner_priority: prio, owner_slack: slack }
+    }
+
+    #[test]
+    fn ratio_adapts_to_pressure() {
+        let p = PreemptPolicy::default();
+        // loose deadline (10x isolated): near base ratio
+        assert!((p.adaptive_ratio(10.0) - p.base_ratio).abs() < 0.08);
+        // tight deadline (1x isolated): pushed toward max
+        assert!(p.adaptive_ratio(1.0) > 0.8);
+        // monotone in pressure
+        assert!(p.adaptive_ratio(1.0) > p.adaptive_ratio(3.0));
+        assert!(p.adaptive_ratio(3.0) > p.adaptive_ratio(8.0));
+        // never exceeds the ceiling
+        assert!(p.adaptive_ratio(1e-6) <= p.max_ratio + 1e-12);
+    }
+
+    #[test]
+    fn idle_engines_claimed_before_victims() {
+        let p = PreemptPolicy::default();
+        let cands = vec![
+            cand(0, Some(Priority::Background), 5.0),
+            cand(1, None, f64::INFINITY),
+            cand(2, Some(Priority::Background), 1.0),
+            cand(3, None, f64::INFINITY),
+        ];
+        let victims = p.select_victims(&cands, 8, 3.0);
+        assert!(victims.len() >= 2);
+        assert_eq!(&victims[..2], &[1, 3], "idle engines must come first");
+    }
+
+    #[test]
+    fn max_slack_victims_first() {
+        let p = PreemptPolicy::default();
+        let cands = vec![
+            cand(0, Some(Priority::Background), 1.0),
+            cand(1, Some(Priority::Background), 9.0),
+            cand(2, Some(Priority::Background), 4.0),
+        ];
+        let victims = p.select_victims(&cands, 4, 3.0); // cap = 2
+        assert_eq!(victims, vec![1, 2], "largest slack preempted first");
+    }
+
+    #[test]
+    fn background_preempted_before_normal() {
+        let p = PreemptPolicy::default();
+        let cands = vec![
+            cand(0, Some(Priority::Normal), 100.0),
+            cand(1, Some(Priority::Background), 0.5),
+        ];
+        let victims = p.select_victims(&cands, 2, 3.0);
+        assert_eq!(victims[0], 1);
+    }
+
+    #[test]
+    fn cap_respected_and_at_least_one() {
+        let p = PreemptPolicy { base_ratio: 0.25, max_ratio: 0.5, pressure_pivot: 2.0 };
+        let cands: Vec<Candidate> =
+            (0..16).map(|e| cand(e, Some(Priority::Background), e as f64)).collect();
+        let loose = p.select_victims(&cands, 16, 100.0);
+        assert_eq!(loose.len(), 4); // 0.25 * 16
+        let tight = p.select_victims(&cands, 16, 0.5);
+        assert!(tight.len() > 4 && tight.len() <= 8);
+        // degenerate platform still yields one victim
+        let one = p.select_victims(&cands[..1], 1, 100.0);
+        assert_eq!(one.len(), 1);
+    }
+}

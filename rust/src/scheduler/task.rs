@@ -1,0 +1,144 @@
+//! Task model: a DNN inference job with priority, arrival and deadline.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::workload::{build_model, tile_layer_graph, ModelId, TileDag, TilingConfig};
+
+/// Memoized (model, tiling) → tile DAG + volume stats.  Traces create
+/// hundreds of task instances per model; building + tiling an LLM layer
+/// graph per instance would dominate the simulator's runtime.
+static MODEL_CACHE: Lazy<Mutex<HashMap<(ModelId, usize, usize), CachedModel>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+#[derive(Clone)]
+struct CachedModel {
+    tiles: TileDag,
+    macs: u64,
+    act_bytes: u64,
+    weight_bytes: u64,
+    layers: usize,
+}
+
+fn cached_model(model: ModelId, tiling: TilingConfig) -> CachedModel {
+    let key = (model, tiling.max_tiles, tiling.split_factor);
+    let mut cache = MODEL_CACHE.lock().unwrap();
+    cache
+        .entry(key)
+        .or_insert_with(|| {
+            let graph = build_model(model);
+            CachedModel {
+                tiles: tile_layer_graph(&graph, tiling),
+                macs: graph.total_macs(),
+                act_bytes: graph.total_act_bytes(),
+                weight_bytes: graph.total_weight_bytes(),
+                layers: graph.len(),
+            }
+        })
+        .clone()
+}
+
+/// Task identifier within one simulation.
+pub type TaskId = usize;
+
+/// Priority classes (paper §3.3: "running tasks are classified into
+/// different priority levels according to their urgency").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Steady-state periodic work — preemption victims.
+    Background,
+    /// Normal latency-sensitive work.
+    Normal,
+    /// Unpredictable urgent task with a hard deadline — the interrupt
+    /// trigger.
+    Urgent,
+}
+
+/// One DNN inference job.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub model: ModelId,
+    pub priority: Priority,
+    /// Arrival time (s).
+    pub arrival: f64,
+    /// Absolute deadline (s); urgent tasks always carry one.
+    pub deadline: Option<f64>,
+    /// Tile DAG (the matcher's query graph for urgent tasks).
+    pub tiles: TileDag,
+    /// Layer count of the original model graph (tiling granularity
+    /// context for the NoC-traffic estimate).
+    pub layers: usize,
+    /// Total MAC work.
+    pub macs: u64,
+    /// Total activation traffic (bytes).
+    pub act_bytes: u64,
+    /// Total weight bytes (DRAM-resident for LTS).
+    pub weight_bytes: u64,
+}
+
+impl Task {
+    /// Build a task for `model` with the given tiling.
+    pub fn new(
+        id: TaskId,
+        model: ModelId,
+        priority: Priority,
+        arrival: f64,
+        tiling: TilingConfig,
+    ) -> Self {
+        let cached = cached_model(model, tiling);
+        Self {
+            id,
+            model,
+            priority,
+            arrival,
+            deadline: None,
+            macs: cached.macs,
+            act_bytes: cached.act_bytes,
+            weight_bytes: cached.weight_bytes,
+            layers: cached.layers,
+            tiles: cached.tiles,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: f64) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Scale the job to a `batch` of inferences (weights shared, compute
+    /// and activations scale).  Keeps simulated task durations in a
+    /// realistic regime on the very fast modeled platforms.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.macs *= batch as u64;
+        self.act_bytes *= batch as u64;
+        self
+    }
+
+    pub fn is_urgent(&self) -> bool {
+        self.priority == Priority::Urgent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_ordering_matches_urgency() {
+        assert!(Priority::Urgent > Priority::Normal);
+        assert!(Priority::Normal > Priority::Background);
+    }
+
+    #[test]
+    fn task_carries_workload_volumes() {
+        let t = Task::new(0, ModelId::MobileNetV2, Priority::Normal, 0.0, TilingConfig::default());
+        assert!(t.macs > 100_000_000);
+        assert!(t.tiles.len() >= 2);
+        assert!(t.deadline.is_none());
+        let t = t.with_deadline(1.5);
+        assert_eq!(t.deadline, Some(1.5));
+    }
+}

@@ -1,0 +1,163 @@
+//! Trace generation: periodic background jobs + Poisson urgent arrivals
+//! (the open-ended scenario of Fig. 1c; the Poisson process is exactly
+//! how the paper's LBT metric defines arrivals, §4.1.4).
+
+use crate::accel::Platform;
+use crate::util::Rng;
+use crate::workload::{TilingConfig, WorkloadClass};
+
+use super::task::{Priority, Task};
+
+/// Trace parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub class: WorkloadClass,
+    /// Number of concurrent background streams.
+    pub background_tasks: usize,
+    /// Urgent Poisson rate λ (tasks/s).
+    pub arrival_rate: f64,
+    /// Horizon (s).
+    pub horizon: f64,
+    /// Urgent deadline = arrival + factor × isolated exec estimate.
+    pub deadline_factor: f64,
+    /// Inferences per job (batching keeps task durations realistic).
+    pub batch: usize,
+    pub tiling: TilingConfig,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            class: WorkloadClass::Simple,
+            background_tasks: 4,
+            arrival_rate: 50.0,
+            horizon: 1.0,
+            deadline_factor: 3.0,
+            batch: 16,
+            tiling: TilingConfig::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// Build the full arrival list, sorted by arrival time.
+///
+/// Background streams: each stream repeatedly re-issues one model of the
+/// class with a period of ~1.5× its isolated execution time on an equal
+/// share of the platform, producing steady engine occupancy for the
+/// urgent tasks to preempt.  Urgent tasks: Poisson(λ) arrivals of random
+/// class members with deadlines.
+pub fn build_trace(cfg: &TraceConfig, platform: &Platform) -> Vec<Task> {
+    let mut rng = Rng::new(cfg.seed);
+    let models = cfg.class.models();
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut next_id = 0;
+
+    // achievable-execution estimates drive periods and deadlines — a
+    // deadline below the platform's best-case execution time would make
+    // every scheduler "fail" vacuously
+    let exec = crate::scheduler::exec_model::ExecModel::new(*platform);
+    let share = (platform.engines / cfg.background_tasks.max(1)).max(1);
+
+    // cap per-stream instances so pathological parameter combinations
+    // cannot explode the event queue
+    const MAX_INSTANCES_PER_STREAM: usize = 400;
+    for stream in 0..cfg.background_tasks {
+        let model = models[stream % models.len()];
+        let probe =
+            Task::new(usize::MAX, model, Priority::Background, 0.0, cfg.tiling).with_batch(cfg.batch);
+        let period = exec.tss(&probe, share).seconds * 1.5;
+        // staggered starts, but guarantee at least one instance inside
+        // the horizon even when the period exceeds it (weight-heavy LLM
+        // streams on short horizons)
+        let mut t = rng.f64() * period.min(cfg.horizon * 0.5);
+        let mut count = 0;
+        while t < cfg.horizon && count < MAX_INSTANCES_PER_STREAM {
+            tasks.push(
+                Task::new(next_id, model, Priority::Background, t, cfg.tiling).with_batch(cfg.batch),
+            );
+            next_id += 1;
+            count += 1;
+            t += period;
+        }
+    }
+
+    // urgent Poisson arrivals; deadline relative to execution on the
+    // partition the matcher will actually claim (≈ one engine per tile)
+    let mut t = rng.exponential(cfg.arrival_rate);
+    while t < cfg.horizon {
+        let model = *rng.choose(&models);
+        let task =
+            Task::new(next_id, model, Priority::Urgent, t, cfg.tiling).with_batch(cfg.batch);
+        let claim = task.tiles.len().clamp(1, platform.engines);
+        let isolated = exec.tss(&task, claim).seconds;
+        let deadline = t + cfg.deadline_factor * isolated.max(1e-6);
+        tasks.push(task.with_deadline(deadline));
+        next_id += 1;
+        t += rng.exponential(cfg.arrival_rate);
+    }
+
+    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    // re-number in arrival order so TaskId doubles as an arrival index
+    for (i, task) in tasks.iter_mut().enumerate() {
+        task.id = i;
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(seed: u64, rate: f64) -> Vec<Task> {
+        let cfg = TraceConfig { seed, arrival_rate: rate, horizon: 0.5, ..Default::default() };
+        build_trace(&cfg, &Platform::edge())
+    }
+
+    #[test]
+    fn arrivals_sorted_and_ids_sequential() {
+        let t = trace(1, 50.0);
+        assert!(!t.is_empty());
+        for w in t.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, task) in t.iter().enumerate() {
+            assert_eq!(task.id, i);
+        }
+    }
+
+    #[test]
+    fn urgent_tasks_have_deadlines() {
+        let t = trace(2, 100.0);
+        let urgent: Vec<_> = t.iter().filter(|t| t.is_urgent()).collect();
+        assert!(!urgent.is_empty());
+        for u in urgent {
+            let d = u.deadline.expect("urgent without deadline");
+            assert!(d > u.arrival);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let cfg = TraceConfig { seed: 3, arrival_rate: 200.0, horizon: 2.0, ..Default::default() };
+        let t = build_trace(&cfg, &Platform::edge());
+        let urgent = t.iter().filter(|t| t.is_urgent()).count();
+        let expected = 200.0 * 2.0;
+        assert!(
+            (urgent as f64) > expected * 0.7 && (urgent as f64) < expected * 1.3,
+            "got {urgent}, expected ~{expected}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = trace(9, 50.0);
+        let b = trace(9, 50.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.model, y.model);
+            assert!((x.arrival - y.arrival).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Mini property-testing framework (offline substitute for `proptest`,
+//! DESIGN.md §4).
+//!
+//! Deterministic: every failure reports the case index and seed so the
+//! exact input replays.  Shrinking is size-based — generators receive a
+//! `size` hint that the runner decreases while re-checking a failing
+//! predicate, reporting the smallest size that still fails.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this image;
+//! // the same example executes in the unit tests below)
+//! use immsched::testing::{property, Gen};
+//! property("reverse twice is identity", 100, |g| {
+//!     let v = g.vec_usize(0..g.size().max(1), 100);
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     v == w
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Case generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Rng::new(seed), size }
+    }
+
+    /// Current size hint (shrinks on failure).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        self.rng.range(range.start, range.end - 1)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.f32()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn vec_usize(&mut self, range: std::ops::Range<usize>, max_len: usize) -> Vec<usize> {
+        let len = self.rng.below(max_len + 1);
+        (0..len).map(|_| self.rng.range(range.start, range.end - 1)).collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with a replayable report on
+/// the first failure, after shrinking the size hint.
+pub fn property(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> bool) {
+    let base_seed = 0xC0FFEE ^ name.len() as u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + case * 4; // grow sizes over the run
+        let mut g = Gen::new(seed, size);
+        if !prop(&mut g) {
+            // shrink: halve the size until it passes, report last failure
+            let mut failing_size = size;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                if prop(&mut g2) {
+                    break;
+                }
+                failing_size = s;
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed: case {case}, seed {seed:#x}, \
+                 smallest failing size {failing_size}"
+            );
+        }
+    }
+}
+
+/// Like [`property`] but the closure returns `Result` with a message.
+pub fn property_res(
+    name: &str,
+    cases: usize,
+    mut prop: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    let mut last_err = String::new();
+    let wrapped = |g: &mut Gen| -> bool {
+        match prop(g) {
+            Ok(()) => true,
+            Err(e) => {
+                last_err = e;
+                false
+            }
+        }
+    };
+    // re-implement loop to include the error message
+    let base_seed = 0xC0FFEE ^ name.len() as u64;
+    let mut wrapped = wrapped;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + case * 4;
+        let mut g = Gen::new(seed, size);
+        if !wrapped(&mut g) {
+            panic!("property '{name}' failed: case {case}, seed {seed:#x}: {last_err}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doc_example_reverse_identity() {
+        property("reverse twice is identity", 100, |g| {
+            let v = g.vec_usize(0..g.size().max(1), 100);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            v == w
+        });
+    }
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("always true", 50, |_| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_report() {
+        property("always false", 10, |_| false);
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_seed() {
+        let mut a = Gen::new(42, 10);
+        let mut b = Gen::new(42, 10);
+        for _ in 0..100 {
+            assert_eq!(a.usize_in(0..1000), b.usize_in(0..1000));
+        }
+    }
+
+    #[test]
+    fn property_res_reports_message() {
+        let result = std::panic::catch_unwind(|| {
+            property_res("res check", 5, |g| {
+                if g.size() > 8 {
+                    Err("size exceeded".to_string())
+                } else {
+                    Ok(())
+                }
+            })
+        });
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Dense row-major f32 matrix — the lingua franca between the graph
+//! layer (adjacency matrices), the matcher (relaxed mappings S) and the
+//! PJRT runtime (flat literals).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `rows x cols` f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct MatF {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatF {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatF::from_vec size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Flat row-major view.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Flat mutable row-major view.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// One row as a mutable slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &MatF) -> MatF {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = MatF::zeros(self.rows, other.cols);
+        // ikj loop order: streams `other` rows, vectorizes the inner j loop.
+        for i in 0..self.rows {
+            let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue; // adjacency matrices are sparse in practice
+                }
+                let b_row = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> MatF {
+        let mut out = MatF::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm squared of (self - other).
+    pub fn sq_dist(&self, other: &MatF) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Elementwise product in place.
+    pub fn hadamard_assign(&mut self, other: &MatF) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+    }
+
+    /// Renormalize every row to sum 1 (all-zero rows stay zero); the
+    /// reciprocal-multiply formulation mirrors the paper's divider-free
+    /// datapath and the Pallas kernel.
+    pub fn row_normalize(&mut self) {
+        const EPS: f32 = 1e-9;
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            let sum: f32 = row.iter().sum();
+            if sum > EPS {
+                let recip = 1.0 / (sum + EPS);
+                for x in row {
+                    *x *= recip;
+                }
+            } else {
+                for x in row {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Index of the max element in a row (ties -> lowest index).
+    pub fn row_argmax(&self, i: usize) -> usize {
+        let row = self.row(i);
+        let mut best = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+}
+
+impl Index<(usize, usize)> for MatF {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for MatF {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for MatF {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "MatF {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(12) {
+                write!(f, "{:6.3} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 12 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = MatF::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let i3 = MatF::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+        assert_eq!(i3.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = MatF::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = MatF::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let a = MatF::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn row_normalize_sums_to_one() {
+        let mut a = MatF::from_fn(4, 6, |i, j| ((i + j) % 3) as f32 + 0.5);
+        a.row_normalize();
+        for i in 0..4 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn row_normalize_zero_row_stays_zero() {
+        let mut a = MatF::zeros(2, 4);
+        a[(0, 1)] = 2.0;
+        a.row_normalize();
+        assert!(a.row(1).iter().all(|&x| x == 0.0));
+        assert!((a.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_argmax_ties_lowest() {
+        let a = MatF::from_vec(1, 4, vec![0.5, 0.9, 0.9, 0.1]);
+        assert_eq!(a.row_argmax(0), 1);
+    }
+
+    #[test]
+    fn sq_dist_zero_on_self() {
+        let a = MatF::from_fn(3, 3, |i, j| (i + j) as f32);
+        assert_eq!(a.sq_dist(&a), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities: deterministic RNG, statistics,
+//! dense matrices, fixed-point helpers and text tables.
+//!
+//! Everything the crate needs that would normally come from `rand`,
+//! `ndarray` or `prettytable` lives here — the build is fully offline and
+//! those crates are unavailable (DESIGN.md §4, substitution table).
+
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use matrix::MatF;
+pub use rng::Rng;
+pub use stats::Summary;

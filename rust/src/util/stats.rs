@@ -1,0 +1,128 @@
+//! Summary statistics used by the benches and the metrics module.
+
+/// Streaming summary of a sample: count/mean/min/max/percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_iter(it: impl IntoIterator<Item = f64>) -> Self {
+        let mut s = Self::new();
+        for v in it {
+            s.add(v);
+        }
+        s
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.sum() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile by nearest-rank (q in [0, 100]).
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let rank = ((q / 100.0) * (self.values.len() - 1) as f64).round() as usize;
+        self.values[rank.min(self.values.len() - 1)]
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Geometric mean — the paper reports normalized speedups averaged across
+/// workloads; geo-mean is the standard aggregator for ratios.
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let log_sum: f64 = values.iter().map(|v| v.max(1e-300).ln()).sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let s = Summary::from_iter([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::from_iter((1..=100).map(|i| i as f64));
+        // nearest-rank median of 1..=100 is 50 or 51
+        assert!((s.median() - 50.5).abs() <= 0.5, "median {}", s.median());
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[10.0, 10.0, 10.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        assert!(Summary::new().mean().is_nan());
+    }
+}

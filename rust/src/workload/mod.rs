@@ -1,0 +1,25 @@
+//! DNN workload substrate: layer IR, the nine paper models, tiling and
+//! pipeline construction.
+//!
+//! Scheduling never touches weights — only topology and per-layer compute
+//! / memory volumes matter — so each model builder produces an
+//! architecture-faithful [`LayerGraph`] (ops, tensor shapes, FLOPs,
+//! bytes) from the published configs.
+//!
+//! The paper's preemptible-DAG construction is reproduced in two steps:
+//! 1. [`tiling`] — IsoSched's *Layer Concatenate-and-Split*: adjacent
+//!    layers are concatenated into segments sized for one engine, then
+//!    split spatially into tiles → the query DAG the matcher sees.
+//! 2. [`pipeline`] — ReMap's *DAG-to-Pipeline*: tiles are assigned to
+//!    pipeline stages (ASAP levels balanced by weight) so cascaded
+//!    engines stream tile outputs over the on-chip NoC (the TSS paradigm).
+
+pub mod layers;
+pub mod models;
+pub mod pipeline;
+pub mod tiling;
+
+pub use layers::{Layer, LayerGraph, LayerOp};
+pub use models::{build_model, ModelId, WorkloadClass};
+pub use pipeline::{assign_pipeline, PipelineAssignment};
+pub use tiling::{tile_layer_graph, TileDag, TilingConfig};

@@ -1,0 +1,183 @@
+//! Simple-class workloads: MobileNetV2, ResNet50, UNet (paper §4.1.2 —
+//! "commonly used in AR/VR").  Input 224×224×3 (UNet 256×256×1).
+
+use crate::workload::layers::{Layer, LayerGraph, LayerOp};
+
+/// MobileNetV2 (Sandler et al., CVPR'18): 17 inverted-residual
+/// bottlenecks with expansion 6 (first block 1), width multiplier 1.0.
+pub fn mobilenet_v2() -> LayerGraph {
+    let mut g = LayerGraph::new("MobileNetV2");
+    // stem: conv3x3 s2, 3->32
+    let mut prev = g.push(Layer::build("stem", LayerOp::Conv { k: 3, s: 2 }, 112, 3, 32));
+
+    // (t expansion, c out, n repeats, s stride) per the paper's Table 2
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut hw = 112;
+    let mut cin = 32;
+    for (bi, &(t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            if stride == 2 {
+                hw /= 2;
+            }
+            let hidden = cin * t;
+            let name = |p: &str| format!("b{bi}.{r}.{p}");
+            // expand (skip when t == 1)
+            let expand = if t != 1 {
+                let id = g.push_after(Layer::build(name("expand"), LayerOp::PwConv, if stride == 2 { hw * 2 } else { hw }, cin, hidden), prev);
+                id
+            } else {
+                prev
+            };
+            let dw = g.push_after(
+                Layer::build(name("dw"), LayerOp::DwConv { k: 3, s: stride }, hw, hidden, hidden),
+                expand,
+            );
+            let proj = g.push_after(Layer::build(name("proj"), LayerOp::PwConv, hw, hidden, c), dw);
+            // residual add when stride 1 and cin == cout
+            if stride == 1 && cin == c {
+                let add = g.push_after(Layer::build(name("add"), LayerOp::Eltwise, hw, c, c), proj);
+                g.connect(prev, add);
+                prev = add;
+            } else {
+                prev = proj;
+            }
+            cin = c;
+        }
+    }
+    // head: 1x1 conv to 1280, pool, fc
+    let head = g.push_after(Layer::build("head", LayerOp::PwConv, 7, cin, 1280), prev);
+    let pool = g.push_after(Layer::build("gap", LayerOp::Pool { k: 7, s: 7 }, 1, 1280, 1280), head);
+    g.push_after(Layer::build("fc", LayerOp::Linear, 1, 1280, 1000), pool);
+    g
+}
+
+/// ResNet50 (He et al.): stem + [3,4,6,3] bottleneck stages.
+pub fn resnet50() -> LayerGraph {
+    let mut g = LayerGraph::new("ResNet50");
+    let stem = g.push(Layer::build("stem", LayerOp::Conv { k: 7, s: 2 }, 112, 3, 64));
+    let mut prev = g.push_after(Layer::build("maxpool", LayerOp::Pool { k: 3, s: 2 }, 56, 64, 64), stem);
+
+    let stages: [(usize, usize, usize, usize); 4] =
+        [(64, 256, 3, 56), (128, 512, 4, 28), (256, 1024, 6, 14), (512, 2048, 3, 7)];
+    let mut cin = 64;
+    for (si, &(mid, cout, blocks, hw)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            let name = |p: &str| format!("s{si}.{b}.{p}");
+            let c1 = g.push_after(Layer::build(name("c1"), LayerOp::PwConv, hw, cin, mid), prev);
+            let c2 = g.push_after(Layer::build(name("c2"), LayerOp::Conv { k: 3, s: stride }, hw, mid, mid), c1);
+            let c3 = g.push_after(Layer::build(name("c3"), LayerOp::PwConv, hw, mid, cout), c2);
+            let add = g.push_after(Layer::build(name("add"), LayerOp::Eltwise, hw, cout, cout), c3);
+            if b == 0 {
+                // projection shortcut
+                let proj = g.push_after(Layer::build(name("down"), LayerOp::PwConv, hw, cin, cout), prev);
+                g.connect(proj, add);
+            } else {
+                g.connect(prev, add);
+            }
+            prev = add;
+            cin = cout;
+        }
+    }
+    let pool = g.push_after(Layer::build("gap", LayerOp::Pool { k: 7, s: 7 }, 1, 2048, 2048), prev);
+    g.push_after(Layer::build("fc", LayerOp::Linear, 1, 2048, 1000), pool);
+    g
+}
+
+/// UNet (Ronneberger et al.): 4-level encoder/decoder with skip concats,
+/// base width 64, input 256×256.
+pub fn unet() -> LayerGraph {
+    let mut g = LayerGraph::new("UNet");
+    let widths = [64usize, 128, 256, 512];
+    let mut hw = 256;
+    let mut cin = 1;
+    let mut skips: Vec<(usize, usize, usize)> = Vec::new(); // (layer id, hw, ch)
+    let mut prev = usize::MAX;
+
+    // encoder
+    for (level, &w) in widths.iter().enumerate() {
+        let name = |p: &str| format!("enc{level}.{p}");
+        let c1 = Layer::build(name("c1"), LayerOp::Conv { k: 3, s: 1 }, hw, cin, w);
+        let c1 = if prev == usize::MAX { g.push(c1) } else { g.push_after(c1, prev) };
+        let c2 = g.push_after(Layer::build(name("c2"), LayerOp::Conv { k: 3, s: 1 }, hw, w, w), c1);
+        skips.push((c2, hw, w));
+        let pool = g.push_after(Layer::build(name("pool"), LayerOp::Pool { k: 2, s: 2 }, hw / 2, w, w), c2);
+        prev = pool;
+        hw /= 2;
+        cin = w;
+    }
+
+    // bottleneck
+    let bott1 = g.push_after(Layer::build("bott.c1", LayerOp::Conv { k: 3, s: 1 }, hw, 512, 1024), prev);
+    let mut up_prev = g.push_after(Layer::build("bott.c2", LayerOp::Conv { k: 3, s: 1 }, hw, 1024, 1024), bott1);
+    let mut c = 1024;
+
+    // decoder
+    for (level, &(skip_id, skip_hw, skip_w)) in skips.iter().enumerate().rev() {
+        let name = |p: &str| format!("dec{level}.{p}");
+        let up = g.push_after(Layer::build(name("up"), LayerOp::Upsample { factor: 2 }, skip_hw, c, skip_w), up_prev);
+        let cat = g.push_after(Layer::build(name("cat"), LayerOp::Concat, skip_hw, skip_w * 2, skip_w * 2), up);
+        g.connect(skip_id, cat);
+        let c1 = g.push_after(Layer::build(name("c1"), LayerOp::Conv { k: 3, s: 1 }, skip_hw, skip_w * 2, skip_w), cat);
+        let c2 = g.push_after(Layer::build(name("c2"), LayerOp::Conv { k: 3, s: 1 }, skip_hw, skip_w, skip_w), c1);
+        up_prev = c2;
+        c = skip_w;
+    }
+    g.push_after(Layer::build("out", LayerOp::PwConv, 256, 64, 2), up_prev);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_acyclic;
+
+    #[test]
+    fn mobilenet_block_count() {
+        let g = mobilenet_v2();
+        // 17 bottlenecks * 3-4 layers + stem + head + pool + fc
+        assert!(g.len() > 50, "got {}", g.len());
+        assert!(is_acyclic(&g.to_dag()));
+    }
+
+    #[test]
+    fn resnet50_has_53_convs() {
+        let g = resnet50();
+        let convs = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, LayerOp::Conv { .. } | LayerOp::PwConv))
+            .count();
+        // 1 stem + 16 blocks*3 + 4 downsample + fc-as-linear(excluded) = 53
+        assert_eq!(convs, 53, "conv count");
+    }
+
+    #[test]
+    fn unet_skips_create_concat_fan_in() {
+        let g = unet();
+        let dag = g.to_dag();
+        let concats: Vec<usize> = (0..g.len())
+            .filter(|&i| matches!(g.layers[i].op, LayerOp::Concat))
+            .collect();
+        assert_eq!(concats.len(), 4);
+        for &c in &concats {
+            assert_eq!(dag.in_degree(c), 2, "concat {c} must have skip + up");
+        }
+    }
+
+    #[test]
+    fn unet_is_heaviest_simple_model() {
+        // paper calls UNet the "middle workload" of the Cloud profiling
+        // scenario — it out-MACs the two classifiers at 256².
+        assert!(unet().total_macs() > mobilenet_v2().total_macs());
+    }
+}

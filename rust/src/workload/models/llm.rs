@@ -1,0 +1,185 @@
+//! Complex-class workloads: DeepSeek-7B, Qwen-7B, Llama-3-8B
+//! (paper §4.1.2 — "deeper models with higher computational and
+//! communication complexity").
+//!
+//! The scheduler sees a *generation window* of `tokens` decode steps over
+//! the transformer block graph: per block QKV/out projections + attention
+//! + gated MLP, all expressed in the layer IR.  Config numbers are from
+//! the models' published configs (hidden size, layer count, FFN dim,
+//! GQA heads).
+
+use crate::workload::layers::{Layer, LayerGraph, LayerOp};
+
+/// Transformer architecture parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LlmConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub vocab: usize,
+    /// Tokens in the modeled generation window (scheduling granularity).
+    pub tokens: usize,
+}
+
+/// DeepSeek-LLM-7B config (Bi et al. 2024).
+pub const DEEPSEEK_7B: LlmConfig = LlmConfig {
+    name: "DeepSeek-7B",
+    layers: 30,
+    hidden: 4096,
+    ffn: 11008,
+    heads: 32,
+    kv_heads: 32,
+    vocab: 102400,
+    tokens: 16,
+};
+
+/// Qwen-7B config (Bai et al. 2023).
+pub const QWEN_7B: LlmConfig = LlmConfig {
+    name: "Qwen-7B",
+    layers: 32,
+    hidden: 4096,
+    ffn: 11008,
+    heads: 32,
+    kv_heads: 32,
+    vocab: 151936,
+    tokens: 16,
+};
+
+/// Llama-3-8B config (Dubey et al. 2024) — GQA with 8 KV heads.
+pub const LLAMA3_8B: LlmConfig = LlmConfig {
+    name: "Llama-3-8B",
+    layers: 32,
+    hidden: 4096,
+    ffn: 14336,
+    heads: 32,
+    kv_heads: 8,
+    vocab: 128256,
+    tokens: 16,
+};
+
+/// Build the layer graph of one decode window of a transformer.
+pub fn build_llm(cfg: LlmConfig) -> LayerGraph {
+    let mut g = LayerGraph::new(cfg.name);
+    let h = cfg.hidden;
+    let kv_dim = h * cfg.kv_heads / cfg.heads;
+
+    let mut prev = g.push(Layer::build("embed", LayerOp::Embed, 1, cfg.vocab, h));
+    for l in 0..cfg.layers {
+        let name = |p: &str| format!("l{l}.{p}");
+        // pre-attention norm
+        let n1 = g.push_after(Layer::build(name("ln1"), LayerOp::Norm, 1, h, h), prev);
+        // QKV projections fan out from the norm
+        let q = g.push_after(Layer::build(name("q"), LayerOp::Linear, 1, h, h), n1);
+        let k = g.push_after(Layer::build(name("k"), LayerOp::Linear, 1, h, kv_dim), n1);
+        let v = g.push_after(Layer::build(name("v"), LayerOp::Linear, 1, h, kv_dim), n1);
+        // attention joins q,k,v; out_hw = tokens in window (score is L×L)
+        let attn = g.push(Layer::build(
+            name("attn"),
+            LayerOp::Attention { heads: cfg.heads },
+            cfg.tokens,
+            h,
+            h,
+        ));
+        g.connect(q, attn);
+        g.connect(k, attn);
+        g.connect(v, attn);
+        let o = g.push_after(Layer::build(name("o"), LayerOp::Linear, 1, h, h), attn);
+        // residual 1
+        let r1 = g.push_after(Layer::build(name("add1"), LayerOp::Eltwise, 1, h, h), o);
+        g.connect(prev, r1);
+        // MLP: norm -> (gate, up) -> mul -> down
+        let n2 = g.push_after(Layer::build(name("ln2"), LayerOp::Norm, 1, h, h), r1);
+        let gate = g.push_after(Layer::build(name("gate"), LayerOp::Linear, 1, h, cfg.ffn), n2);
+        let up = g.push_after(Layer::build(name("up"), LayerOp::Linear, 1, h, cfg.ffn), n2);
+        let mul = g.push(Layer::build(name("mul"), LayerOp::Eltwise, 1, cfg.ffn, cfg.ffn));
+        g.connect(gate, mul);
+        g.connect(up, mul);
+        let down = g.push_after(Layer::build(name("down"), LayerOp::Linear, 1, cfg.ffn, h), mul);
+        // residual 2
+        let r2 = g.push_after(Layer::build(name("add2"), LayerOp::Eltwise, 1, h, h), down);
+        g.connect(r1, r2);
+        prev = r2;
+    }
+    let norm_f = g.push_after(Layer::build("ln_f", LayerOp::Norm, 1, h, h), prev);
+    g.push_after(Layer::build("lm_head", LayerOp::Linear, 1, h, cfg.vocab), norm_f);
+
+    // Scale per-layer MACs by the token window: every decode step re-runs
+    // the block stack.  (Weights are shared; activations scale.)
+    for layer in &mut g.layers {
+        layer.macs *= cfg.tokens as u64;
+        layer.act_bytes *= cfg.tokens as u64;
+    }
+    g
+}
+
+pub fn deepseek_7b() -> LayerGraph {
+    build_llm(DEEPSEEK_7B)
+}
+
+pub fn qwen_7b() -> LayerGraph {
+    build_llm(QWEN_7B)
+}
+
+pub fn llama3_8b() -> LayerGraph {
+    build_llm(LLAMA3_8B)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_acyclic;
+
+    #[test]
+    fn llm_param_counts_are_plausible() {
+        // weight bytes (int8) ≈ parameter count; 7-8B expected.
+        for (g, lo, hi) in [
+            (deepseek_7b(), 6.0e9, 8.5e9),
+            (qwen_7b(), 6.5e9, 9.0e9),
+            (llama3_8b(), 7.0e9, 9.5e9),
+        ] {
+            let params = g.total_weight_bytes() as f64;
+            assert!(
+                (lo..hi).contains(&params),
+                "{}: {params:.2e} params out of [{lo:.1e},{hi:.1e})",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn llm_graphs_are_dags_with_residual_fan_in() {
+        let g = llama3_8b();
+        let dag = g.to_dag();
+        assert!(is_acyclic(&dag));
+        // every add has 2 producers
+        let adds = (0..g.len()).filter(|&i| g.layers[i].name.contains("add"));
+        for a in adds {
+            assert_eq!(dag.in_degree(a), 2, "residual {} fan-in", g.layers[a].name);
+        }
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_projections() {
+        let llama = llama3_8b();
+        let qwen = qwen_7b();
+        let kv_macs = |g: &LayerGraph| -> u64 {
+            g.layers.iter().filter(|l| l.name.ends_with(".k")).map(|l| l.macs).sum()
+        };
+        assert!(kv_macs(&llama) < kv_macs(&qwen), "GQA must reduce K-proj MACs");
+    }
+
+    #[test]
+    fn macs_scale_with_token_window() {
+        // projections scale linearly with the window, attention scores
+        // quadratically — doubling tokens gives a factor in (2, 4)
+        let mut cfg = QWEN_7B;
+        cfg.tokens = 32;
+        let double = build_llm(cfg).total_macs() as f64;
+        let single = qwen_7b().total_macs() as f64;
+        let ratio = double / single;
+        assert!(ratio > 2.0 && ratio < 4.0, "ratio {ratio}");
+    }
+}

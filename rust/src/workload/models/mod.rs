@@ -1,0 +1,185 @@
+//! The nine paper workloads, grouped by topological complexity class
+//! (paper §4.1.2, Fig. 6):
+//!
+//! * **Simple** (AR/VR): MobileNetV2, ResNet50, UNet
+//! * **Middle** (NAS-derived): EfficientNet-B0, NASNet-A, PNASNet-5
+//! * **Complex** (LLMs): DeepSeek-7B, Qwen-7B, Llama-3-8B
+//!
+//! Builders are architecture-faithful in topology and per-layer geometry
+//! (channel/dim counts, kernel sizes, block multiplicities from the
+//! papers' configs); weights are irrelevant to scheduling (DESIGN.md §4).
+
+mod cnn_simple;
+mod llm;
+mod nas;
+
+pub use cnn_simple::{mobilenet_v2, resnet50, unet};
+pub use llm::{deepseek_7b, llama3_8b, qwen_7b, LlmConfig};
+pub use nas::{efficientnet_b0, nasnet_a, pnasnet_5};
+
+use super::layers::LayerGraph;
+
+/// Workload complexity classes of the evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadClass {
+    Simple,
+    Middle,
+    Complex,
+}
+
+impl WorkloadClass {
+    pub const ALL: [WorkloadClass; 3] =
+        [WorkloadClass::Simple, WorkloadClass::Middle, WorkloadClass::Complex];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadClass::Simple => "Simple",
+            WorkloadClass::Middle => "Middle",
+            WorkloadClass::Complex => "Complex",
+        }
+    }
+
+    /// The three member models of the class.
+    pub fn models(self) -> [ModelId; 3] {
+        match self {
+            WorkloadClass::Simple => [ModelId::MobileNetV2, ModelId::ResNet50, ModelId::UNet],
+            WorkloadClass::Middle => {
+                [ModelId::EfficientNetB0, ModelId::NasNetA, ModelId::PNasNet5]
+            }
+            WorkloadClass::Complex => [ModelId::DeepSeek7B, ModelId::Qwen7B, ModelId::Llama3_8B],
+        }
+    }
+}
+
+/// All nine evaluated models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    MobileNetV2,
+    ResNet50,
+    UNet,
+    EfficientNetB0,
+    NasNetA,
+    PNasNet5,
+    DeepSeek7B,
+    Qwen7B,
+    Llama3_8B,
+}
+
+impl ModelId {
+    pub const ALL: [ModelId; 9] = [
+        ModelId::MobileNetV2,
+        ModelId::ResNet50,
+        ModelId::UNet,
+        ModelId::EfficientNetB0,
+        ModelId::NasNetA,
+        ModelId::PNasNet5,
+        ModelId::DeepSeek7B,
+        ModelId::Qwen7B,
+        ModelId::Llama3_8B,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelId::MobileNetV2 => "MobileNetV2",
+            ModelId::ResNet50 => "ResNet50",
+            ModelId::UNet => "UNet",
+            ModelId::EfficientNetB0 => "EfficientNet-B0",
+            ModelId::NasNetA => "NASNet-A",
+            ModelId::PNasNet5 => "PNASNet-5",
+            ModelId::DeepSeek7B => "DeepSeek-7B",
+            ModelId::Qwen7B => "Qwen-7B",
+            ModelId::Llama3_8B => "Llama-3-8B",
+        }
+    }
+
+    pub fn class(self) -> WorkloadClass {
+        match self {
+            ModelId::MobileNetV2 | ModelId::ResNet50 | ModelId::UNet => WorkloadClass::Simple,
+            ModelId::EfficientNetB0 | ModelId::NasNetA | ModelId::PNasNet5 => {
+                WorkloadClass::Middle
+            }
+            ModelId::DeepSeek7B | ModelId::Qwen7B | ModelId::Llama3_8B => WorkloadClass::Complex,
+        }
+    }
+}
+
+/// Build the layer graph of any evaluated model.
+pub fn build_model(id: ModelId) -> LayerGraph {
+    match id {
+        ModelId::MobileNetV2 => mobilenet_v2(),
+        ModelId::ResNet50 => resnet50(),
+        ModelId::UNet => unet(),
+        ModelId::EfficientNetB0 => efficientnet_b0(),
+        ModelId::NasNetA => nasnet_a(),
+        ModelId::PNasNet5 => pnasnet_5(),
+        ModelId::DeepSeek7B => deepseek_7b(),
+        ModelId::Qwen7B => qwen_7b(),
+        ModelId::Llama3_8B => llama3_8b(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_acyclic;
+
+    #[test]
+    fn all_models_build_and_are_dags() {
+        for id in ModelId::ALL {
+            let g = build_model(id);
+            assert!(!g.is_empty(), "{:?} empty", id);
+            assert!(is_acyclic(&g.to_dag()), "{:?} cyclic", id);
+            assert!(g.total_macs() > 0, "{:?} zero MACs", id);
+        }
+    }
+
+    #[test]
+    fn complexity_classes_ordered() {
+        // The paper's classes are ordered by *topological* complexity;
+        // compute-wise the LLM class must still dominate both CNN classes
+        // (UNet at 256² makes Simple compute-heavy, which is fine — it is
+        // the paper's own profiling "middle workload" example).
+        let macs = |c: WorkloadClass| -> u64 {
+            c.models().iter().map(|&m| build_model(m).total_macs()).sum()
+        };
+        let simple = macs(WorkloadClass::Simple);
+        let middle = macs(WorkloadClass::Middle);
+        let complex = macs(WorkloadClass::Complex);
+        assert!(complex > middle, "complex {complex} <= middle {middle}");
+        assert!(complex > simple, "complex {complex} <= simple {simple}");
+        // topological complexity: edges/node rises Simple -> Middle
+        let branchiness = |c: WorkloadClass| -> f64 {
+            c.models()
+                .iter()
+                .map(|&m| {
+                    let g = build_model(m);
+                    g.edges().len() as f64 / g.len() as f64
+                })
+                .sum::<f64>()
+                / 3.0
+        };
+        assert!(branchiness(WorkloadClass::Middle) > branchiness(WorkloadClass::Simple));
+    }
+
+    #[test]
+    fn known_mac_scales() {
+        // MobileNetV2 ~0.3 GMACs, ResNet50 ~4 GMACs @224 (published numbers).
+        let mb = build_model(ModelId::MobileNetV2).total_macs() as f64 / 1e9;
+        let rn = build_model(ModelId::ResNet50).total_macs() as f64 / 1e9;
+        assert!((0.15..0.9).contains(&mb), "MobileNetV2 {mb} GMACs");
+        assert!((2.0..8.0).contains(&rn), "ResNet50 {rn} GMACs");
+        // 7B LLMs: ~7e9 MACs per token (1 MAC per weight); we model a
+        // short generation window, so total is tokens * ~7 GMAC.
+        let qw = build_model(ModelId::Qwen7B).total_macs() as f64 / 1e9;
+        assert!(qw > 50.0, "Qwen-7B {qw} GMACs too small");
+    }
+
+    #[test]
+    fn class_membership_consistent() {
+        for class in WorkloadClass::ALL {
+            for m in class.models() {
+                assert_eq!(m.class(), class);
+            }
+        }
+    }
+}

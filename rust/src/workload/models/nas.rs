@@ -1,0 +1,206 @@
+//! Middle-class workloads: EfficientNet-B0, NASNet-A, PNASNet-5
+//! (paper §4.1.2 — "typically used in NAS").  These graphs are much
+//! *branchier* than the Simple class: NAS cells have multi-input
+//! concatenations, which is exactly the topological complexity the
+//! subgraph matcher has to absorb.
+
+use crate::workload::layers::{Layer, LayerGraph, LayerOp};
+
+/// EfficientNet-B0 (Tan & Le, ICML'19): MBConv blocks, SE omitted from
+/// topology (its FLOPs are folded into the expand conv weight).
+pub fn efficientnet_b0() -> LayerGraph {
+    let mut g = LayerGraph::new("EfficientNet-B0");
+    let mut prev = g.push(Layer::build("stem", LayerOp::Conv { k: 3, s: 2 }, 112, 3, 32));
+
+    // (expansion, channels, repeats, stride, kernel)
+    let cfg: [(usize, usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    let mut hw = 112;
+    let mut cin = 32;
+    for (bi, &(t, c, n, s, k)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            if stride == 2 {
+                hw /= 2;
+            }
+            let hidden = cin * t;
+            let name = |p: &str| format!("mb{bi}.{r}.{p}");
+            let expand = if t != 1 {
+                g.push_after(
+                    Layer::build(name("expand"), LayerOp::PwConv, if stride == 2 { hw * 2 } else { hw }, cin, hidden),
+                    prev,
+                )
+            } else {
+                prev
+            };
+            let dw = g.push_after(
+                Layer::build(name("dw"), LayerOp::DwConv { k, s: stride }, hw, hidden, hidden),
+                expand,
+            );
+            let proj = g.push_after(Layer::build(name("proj"), LayerOp::PwConv, hw, hidden, c), dw);
+            if stride == 1 && cin == c {
+                let add = g.push_after(Layer::build(name("add"), LayerOp::Eltwise, hw, c, c), proj);
+                g.connect(prev, add);
+                prev = add;
+            } else {
+                prev = proj;
+            }
+            cin = c;
+        }
+    }
+    let head = g.push_after(Layer::build("head", LayerOp::PwConv, 7, cin, 1280), prev);
+    let pool = g.push_after(Layer::build("gap", LayerOp::Pool { k: 7, s: 7 }, 1, 1280, 1280), head);
+    g.push_after(Layer::build("fc", LayerOp::Linear, 1, 1280, 1000), pool);
+    g
+}
+
+/// One NASNet/PNASNet-style cell: `n_branches` parallel branch pairs over
+/// two inputs, concatenated.  Returns the concat layer id.
+fn nas_cell(
+    g: &mut LayerGraph,
+    name: &str,
+    input_a: usize,
+    input_b: usize,
+    hw: usize,
+    cin: usize,
+    cout_per_branch: usize,
+    n_branches: usize,
+    stride: usize,
+) -> usize {
+    let mut branch_outs = Vec::new();
+    for b in 0..n_branches {
+        let src = if b % 2 == 0 { input_a } else { input_b };
+        let bname = |p: &str| format!("{name}.br{b}.{p}");
+        // alternate separable-conv (dw+pw) and pooling branches, the two
+        // op families NAS cells are built from
+        let out = if b % 3 == 2 {
+            g.push_after(
+                Layer::build(bname("pool"), LayerOp::Pool { k: 3, s: stride }, hw, cin, cin),
+                src,
+            )
+        } else {
+            let k = if b % 2 == 0 { 5 } else { 3 };
+            let dw = g.push_after(
+                Layer::build(bname("dw"), LayerOp::DwConv { k, s: stride }, hw, cin, cin),
+                src,
+            );
+            g.push_after(Layer::build(bname("pw"), LayerOp::PwConv, hw, cin, cout_per_branch), dw)
+        };
+        branch_outs.push(out);
+    }
+    let cat = g.push(Layer::build(
+        format!("{name}.cat"),
+        LayerOp::Concat,
+        hw,
+        cout_per_branch * n_branches,
+        cout_per_branch * n_branches,
+    ));
+    for &b in &branch_outs {
+        g.connect(b, cat);
+    }
+    cat
+}
+
+/// NASNet-A (mobile) — Zoph et al., CVPR'18: stem + 4 normal cells per
+/// stack, reduction cells between stacks, 5-branch cells.
+pub fn nasnet_a() -> LayerGraph {
+    nas_like("NASNet-A", 4, 5, 44)
+}
+
+/// PNASNet-5 (mobile) — Liu et al., ECCV'18: 3 cells per stack with
+/// 5-branch cells and a wider stem.
+pub fn pnasnet_5() -> LayerGraph {
+    nas_like("PNASNet-5", 3, 5, 54)
+}
+
+fn nas_like(name: &str, cells_per_stack: usize, branches: usize, stem_ch: usize) -> LayerGraph {
+    let mut g = LayerGraph::new(name);
+    let stem = g.push(Layer::build("stem", LayerOp::Conv { k: 3, s: 2 }, 112, 3, stem_ch));
+
+    let mut hw = 112;
+    let mut ch = stem_ch;
+    let mut prev_prev = stem;
+    let mut prev = stem;
+    for stack in 0..3 {
+        if stack > 0 {
+            // reduction cell halves HW, doubles channels
+            hw /= 2;
+            ch *= 2;
+            let cat = nas_cell(
+                &mut g,
+                &format!("red{stack}"),
+                prev,
+                prev_prev,
+                hw,
+                ch / 2,
+                ch / branches.max(1),
+                branches,
+                2,
+            );
+            prev_prev = prev;
+            prev = cat;
+        }
+        for c in 0..cells_per_stack {
+            let cat = nas_cell(
+                &mut g,
+                &format!("s{stack}c{c}"),
+                prev,
+                prev_prev,
+                hw,
+                ch,
+                ch / branches.max(1),
+                branches,
+                1,
+            );
+            prev_prev = prev;
+            prev = cat;
+        }
+    }
+    let pool = g.push_after(Layer::build("gap", LayerOp::Pool { k: 7, s: 7 }, 1, ch, ch), prev);
+    g.push_after(Layer::build("fc", LayerOp::Linear, 1, ch, 1000), pool);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_acyclic;
+    use crate::workload::layers::LayerOp;
+
+    #[test]
+    fn efficientnet_builds() {
+        let g = efficientnet_b0();
+        assert!(g.len() > 50);
+        assert!(is_acyclic(&g.to_dag()));
+    }
+
+    #[test]
+    fn nas_cells_have_high_fan_in_concats() {
+        for g in [nasnet_a(), pnasnet_5()] {
+            let dag = g.to_dag();
+            let max_fan_in = (0..g.len())
+                .filter(|&i| matches!(g.layers[i].op, LayerOp::Concat))
+                .map(|i| dag.in_degree(i))
+                .max()
+                .unwrap();
+            assert!(max_fan_in >= 5, "{}: fan-in {max_fan_in}", g.name);
+            assert!(is_acyclic(&dag), "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn middle_class_is_branchier_than_simple() {
+        // topological complexity proxy: edges per node
+        let branchiness = |g: &LayerGraph| g.edges().len() as f64 / g.len() as f64;
+        let nas = branchiness(&nasnet_a());
+        let mb = branchiness(&super::super::cnn_simple::mobilenet_v2());
+        assert!(nas > mb, "nas {nas} <= mobilenet {mb}");
+    }
+}

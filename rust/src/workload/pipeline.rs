@@ -1,0 +1,120 @@
+//! DAG-to-Pipeline (ReMap, Zhao et al. 2022): map a tile DAG onto a
+//! linear cascade of pipeline stages so that TSS engines stream tile
+//! outputs to their successors over on-chip links.
+//!
+//! Stages must respect dependencies (a tile's stage ≥ its producers') and
+//! should balance compute weight so the pipeline's steady-state interval
+//! is minimized.  We assign ASAP levels and then merge adjacent levels
+//! greedily until `num_stages` is reached, balancing per-stage weight.
+
+use crate::graph::{levels, Dag};
+
+/// A stage assignment for every node of a DAG.
+#[derive(Clone, Debug)]
+pub struct PipelineAssignment {
+    /// stage index per node (0-based, monotone along edges).
+    pub stage_of: Vec<usize>,
+    pub num_stages: usize,
+    /// total node weight per stage.
+    pub stage_weight: Vec<f64>,
+}
+
+impl PipelineAssignment {
+    /// Pipeline interval proxy: the heaviest stage.
+    pub fn bottleneck(&self) -> f64 {
+        self.stage_weight.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Load imbalance: max/mean stage weight (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.stage_weight.iter().sum::<f64>() / self.num_stages.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            self.bottleneck() / mean
+        }
+    }
+}
+
+/// Assign nodes to at most `num_stages` pipeline stages.
+pub fn assign_pipeline(dag: &Dag, num_stages: usize) -> PipelineAssignment {
+    assert!(num_stages >= 1);
+    let lvl = levels(dag);
+    let max_level = lvl.iter().copied().max().unwrap_or(0);
+    let n_levels = max_level + 1;
+
+    // weight per level
+    let mut level_weight = vec![0.0f64; n_levels];
+    for u in 0..dag.len() {
+        level_weight[lvl[u]] += dag.weight(u);
+    }
+
+    // merge consecutive levels into `num_stages` contiguous groups with
+    // balanced weight: greedy cut at running-weight quantiles
+    let stages = num_stages.min(n_levels);
+    let total: f64 = level_weight.iter().sum();
+    let per_stage = total / stages as f64;
+    let mut stage_of_level = vec![0usize; n_levels];
+    let mut acc = 0.0;
+    let mut stage = 0;
+    for (l, &w) in level_weight.iter().enumerate() {
+        // open a new stage when the current one is full (but never exceed
+        // the stage budget count)
+        if acc >= per_stage * (stage + 1) as f64 && stage + 1 < stages {
+            stage += 1;
+        }
+        stage_of_level[l] = stage;
+        acc += w;
+    }
+
+    let stage_of: Vec<usize> = (0..dag.len()).map(|u| stage_of_level[lvl[u]]).collect();
+    let mut stage_weight = vec![0.0f64; stages];
+    for u in 0..dag.len() {
+        stage_weight[stage_of[u]] += dag.weight(u);
+    }
+    PipelineAssignment { stage_of, num_stages: stages, stage_weight }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, gen_dag_layered, NodeKind};
+    use crate::util::Rng;
+
+    #[test]
+    fn stages_monotone_along_edges() {
+        let mut rng = Rng::new(2);
+        let dag = gen_dag_layered(&[4, 6, 6, 4, 2], 3, &mut rng, NodeKind::Compute);
+        let asg = assign_pipeline(&dag, 3);
+        for u in 0..dag.len() {
+            for &v in dag.successors(u) {
+                assert!(asg.stage_of[u] <= asg.stage_of[v], "edge {u}->{v} goes backwards");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_splits_evenly() {
+        let dag = gen_chain(12, NodeKind::Compute);
+        let asg = assign_pipeline(&dag, 4);
+        assert_eq!(asg.num_stages, 4);
+        assert!(asg.imbalance() < 1.5, "imbalance {}", asg.imbalance());
+    }
+
+    #[test]
+    fn more_stages_never_increase_bottleneck() {
+        let mut rng = Rng::new(4);
+        let dag = gen_dag_layered(&[3, 5, 5, 5, 3, 2], 2, &mut rng, NodeKind::Compute);
+        let b2 = assign_pipeline(&dag, 2).bottleneck();
+        let b4 = assign_pipeline(&dag, 4).bottleneck();
+        assert!(b4 <= b2 + 1e-9, "b4 {b4} > b2 {b2}");
+    }
+
+    #[test]
+    fn single_stage_holds_everything() {
+        let dag = gen_chain(5, NodeKind::Compute);
+        let asg = assign_pipeline(&dag, 1);
+        assert!(asg.stage_of.iter().all(|&s| s == 0));
+        assert!((asg.stage_weight[0] - dag.total_weight()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,329 @@
+//! Layer Concatenate-and-Split (IsoSched §3, reused by IMMSched §3.1):
+//! lower a layer graph to the *tile DAG* that becomes the matcher's query
+//! graph.
+//!
+//! Two phases:
+//! 1. **Concatenate** — consecutive chain layers are fused into segments
+//!    bounded by a MAC budget, so one segment ≙ the work one engine holds
+//!    resident at a time (cascaded-layer pattern of TSS).
+//! 2. **Split** — each segment is split spatially into `split_factor`
+//!    parallel tiles; inter-segment data dependencies become halo-style
+//!    tile edges (tile j of the consumer reads the spatially-overlapping
+//!    tiles of the producer).
+//!
+//! The result is bounded to `max_tiles` vertices so it fits an AOT
+//! matcher size class (queries are padded up to the class's n).
+
+use crate::graph::{Dag, NodeId, NodeKind};
+
+use super::layers::LayerGraph;
+
+/// Tiling parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TilingConfig {
+    /// Upper bound on the number of tiles (query-graph vertices).
+    pub max_tiles: usize,
+    /// Spatial split factor per segment (1 = no spatial split).
+    pub split_factor: usize,
+}
+
+impl Default for TilingConfig {
+    fn default() -> Self {
+        // 16 tiles keeps the query well under the preemptible-engine
+        // count (32 on Edge at ratio 0.5), so feasible embeddings are
+        // plentiful — matching n into barely-n targets is near-perfect-
+        // matching and fails spuriously.
+        Self { max_tiles: 16, split_factor: 2 }
+    }
+}
+
+/// Per-tile bookkeeping.
+#[derive(Clone, Debug)]
+pub struct TileInfo {
+    /// Which segment this tile belongs to.
+    pub segment: usize,
+    /// Spatial index within the segment.
+    pub split_idx: usize,
+    /// MACs carried by this tile.
+    pub macs: u64,
+    /// Activation bytes in+out for this tile.
+    pub act_bytes: u64,
+}
+
+/// The query DAG plus per-tile metadata.
+#[derive(Clone, Debug)]
+pub struct TileDag {
+    pub dag: Dag,
+    pub tiles: Vec<TileInfo>,
+    /// Number of segments before splitting.
+    pub num_segments: usize,
+}
+
+impl TileDag {
+    pub fn len(&self) -> usize {
+        self.dag.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dag.is_empty()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.tiles.iter().map(|t| t.macs).sum()
+    }
+}
+
+/// Segment = a run of fused layers (concatenate phase output).
+struct Segment {
+    layers: Vec<usize>,
+    macs: u64,
+    act_bytes: u64,
+    kind: NodeKind,
+}
+
+/// Phase 1: greedy chain fusion under a MAC budget.
+///
+/// Walk the layer DAG in topo order; a layer joins its predecessor's
+/// segment when it is the *only* consumer of a single-successor producer
+/// (pure chain) and the budget allows; otherwise it opens a new segment.
+fn concatenate(g: &LayerGraph, budget: u64) -> (Vec<Segment>, Vec<usize>) {
+    let dag = g.to_dag();
+    let order = crate::graph::topo_sort(&dag).expect("layer graph must be a DAG");
+    let mut seg_of = vec![usize::MAX; g.len()];
+    let mut segments: Vec<Segment> = Vec::new();
+
+    for &u in &order {
+        let layer = &g.layers[u];
+        let mergeable = dag.in_degree(u) == 1 && {
+            let p = dag.predecessors(u)[0];
+            dag.out_degree(p) == 1 && seg_of[p] != usize::MAX
+        };
+        let target = if mergeable {
+            let p = dag.predecessors(u)[0];
+            let s = seg_of[p];
+            (segments[s].macs + layer.macs <= budget).then_some(s)
+        } else {
+            None
+        };
+        match target {
+            Some(s) => {
+                segments[s].layers.push(u);
+                segments[s].macs += layer.macs;
+                segments[s].act_bytes += layer.act_bytes;
+                // dominant kind = kind of the heaviest layer so far
+                if layer.macs > g.layers[segments[s].layers[0]].macs {
+                    segments[s].kind = layer.op.node_kind();
+                }
+                seg_of[u] = s;
+            }
+            None => {
+                segments.push(Segment {
+                    layers: vec![u],
+                    macs: layer.macs,
+                    act_bytes: layer.act_bytes,
+                    kind: layer.op.node_kind(),
+                });
+                seg_of[u] = segments.len() - 1;
+            }
+        }
+    }
+    (segments, seg_of)
+}
+
+/// Phase 2: spatial split + halo wiring.
+fn split(
+    g: &LayerGraph,
+    segments: &[Segment],
+    seg_of: &[usize],
+    split_factor: usize,
+) -> TileDag {
+    let mut dag = Dag::new();
+    let mut tiles = Vec::new();
+    // tile ids per segment
+    let mut tiles_of: Vec<Vec<NodeId>> = Vec::with_capacity(segments.len());
+    let max_macs = segments.iter().map(|s| s.macs).max().unwrap_or(1).max(1);
+
+    for (si, seg) in segments.iter().enumerate() {
+        // tiny segments are not worth splitting (they'd produce zero-work
+        // tiles that only inflate the query graph)
+        let splits = if seg.macs * 4 >= max_macs as u64 { split_factor } else { 1 };
+        let mut ids = Vec::with_capacity(splits);
+        for sp in 0..splits {
+            let id = dag.add_node(seg.kind, seg.macs as f64 / splits as f64 / max_macs as f64);
+            tiles.push(TileInfo {
+                segment: si,
+                split_idx: sp,
+                macs: seg.macs / splits as u64,
+                act_bytes: seg.act_bytes / splits as u64,
+            });
+            ids.push(id);
+        }
+        tiles_of.push(ids);
+    }
+
+    // segment-level edges from the layer graph
+    let mut seg_edges: Vec<(usize, usize)> = Vec::new();
+    for &(u, v) in g.edges() {
+        let (su, sv) = (seg_of[u], seg_of[v]);
+        if su != sv && !seg_edges.contains(&(su, sv)) {
+            seg_edges.push((su, sv));
+        }
+    }
+    // halo wiring: consumer tile j depends on the producer tiles covering
+    // its spatial slice [j/sv, (j+1)/sv)
+    for (su, sv) in seg_edges {
+        let (pu, pv) = (tiles_of[su].len(), tiles_of[sv].len());
+        for j in 0..pv {
+            let lo = j * pu / pv;
+            let hi = ((j + 1) * pu).div_ceil(pv).min(pu);
+            for i in lo..hi.max(lo + 1) {
+                dag.add_edge(tiles_of[su][i.min(pu - 1)], tiles_of[sv][j]);
+            }
+        }
+    }
+    TileDag { dag, tiles, num_segments: segments.len() }
+}
+
+/// Phase 1b: coarsen the segment graph down to `target` segments by
+/// contracting edges that cannot create cycles.
+///
+/// Chain fusion alone cannot pass branch points (residual adds, concat
+/// fan-ins), so graphs like ResNet bottom out well above the tile
+/// budget.  An edge (u, v) of the segment DAG is contractible iff no
+/// *other* predecessor of v is reachable from u — contracting it then
+/// merges two order-adjacent segments without introducing a cycle.  We
+/// repeatedly contract the contractible edge with the smallest combined
+/// weight (keeps segments balanced).
+fn coarsen(g: &LayerGraph, segments: &mut Vec<Segment>, seg_of: &mut [usize], target: usize) {
+    while segments.len() > target.max(1) {
+        let s = segments.len();
+        // segment-level edges + reachability
+        let mut adj = vec![vec![false; s]; s];
+        for &(a, b) in g.edges() {
+            let (sa, sb) = (seg_of[a], seg_of[b]);
+            if sa != sb {
+                adj[sa][sb] = true;
+            }
+        }
+        // transitive closure by DFS from every segment (index order is
+        // NOT topological after earlier contractions)
+        let mut reach = vec![vec![false; s]; s];
+        for start in 0..s {
+            let mut stack: Vec<usize> = (0..s).filter(|&v| adj[start][v]).collect();
+            while let Some(v) = stack.pop() {
+                if !reach[start][v] {
+                    reach[start][v] = true;
+                    stack.extend((0..s).filter(|&w| adj[v][w]));
+                }
+            }
+        }
+        // best contractible edge (u,v): no other predecessor p of v with
+        // u ->* p
+        let mut best: Option<(usize, usize, u64)> = None;
+        for u in 0..s {
+            'edges: for v in 0..s {
+                if !adj[u][v] {
+                    continue;
+                }
+                for p in 0..s {
+                    if p != u && adj[p][v] && reach[u][p] {
+                        continue 'edges;
+                    }
+                }
+                let w = segments[u].macs + segments[v].macs;
+                if best.map_or(true, |(_, _, bw)| w < bw) {
+                    best = Some((u, v, w));
+                }
+            }
+        }
+        let Some((u, v, _)) = best else { break };
+        // merge the two endpoints, keeping the smaller index stable
+        let (keep, rem) = if u < v { (u, v) } else { (v, u) };
+        let removed = segments.remove(rem);
+        segments[keep].macs += removed.macs;
+        segments[keep].act_bytes += removed.act_bytes;
+        segments[keep].layers.extend(removed.layers);
+        for so in seg_of.iter_mut() {
+            if *so == rem {
+                *so = keep;
+            } else if *so > rem {
+                *so -= 1;
+            }
+        }
+    }
+}
+
+/// Full Layer Concatenate-and-Split lowering.
+///
+/// Chain-fuses under a MAC budget, coarsens the segment DAG to the tile
+/// budget (the paper bounds the query size to keep subgraph matching
+/// tractable; we bound it to an AOT size class), then splits spatially.
+pub fn tile_layer_graph(g: &LayerGraph, cfg: TilingConfig) -> TileDag {
+    assert!(cfg.max_tiles >= 2, "max_tiles too small");
+    assert!(cfg.split_factor >= 1);
+    let total = g.total_macs().max(1);
+    let desired_segments = (cfg.max_tiles / cfg.split_factor).max(1);
+    let budget = (total / desired_segments as u64).max(1);
+
+    let (mut segments, mut seg_of) = concatenate(g, budget);
+    coarsen(g, &mut segments, &mut seg_of, desired_segments);
+    let tiled = split(g, &segments, &seg_of, cfg.split_factor);
+    if tiled.len() <= cfg.max_tiles {
+        return tiled;
+    }
+    // split inflated past the budget (uneven splittable segments):
+    // retry without spatial split
+    split(g, &segments, &seg_of, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_acyclic;
+    use crate::workload::models::{build_model, ModelId};
+
+    #[test]
+    fn tiles_bounded_and_acyclic_for_all_models() {
+        for id in ModelId::ALL {
+            let g = build_model(id);
+            let t = tile_layer_graph(&g, TilingConfig { max_tiles: 32, split_factor: 2 });
+            assert!(t.len() <= 32, "{:?}: {} tiles", id, t.len());
+            assert!(t.len() >= 2, "{:?}: degenerate tiling", id);
+            assert!(is_acyclic(&t.dag), "{:?}", id);
+        }
+    }
+
+    #[test]
+    fn macs_conserved_up_to_split_rounding() {
+        let g = build_model(ModelId::ResNet50);
+        let t = tile_layer_graph(&g, TilingConfig::default());
+        let total = g.total_macs() as f64;
+        let tiled = t.total_macs() as f64;
+        assert!((tiled - total).abs() / total < 0.01, "tiled {tiled} vs {total}");
+    }
+
+    #[test]
+    fn split_factor_increases_parallel_width() {
+        let g = build_model(ModelId::UNet);
+        let narrow = tile_layer_graph(&g, TilingConfig { max_tiles: 32, split_factor: 1 });
+        let wide = tile_layer_graph(&g, TilingConfig { max_tiles: 32, split_factor: 2 });
+        assert!(wide.len() >= narrow.len());
+        // wide tiling contains multi-tile segments
+        assert!(wide.tiles.iter().any(|t| t.split_idx > 0));
+    }
+
+    #[test]
+    fn segments_respect_dependencies() {
+        // tile edges only point from earlier to later segments
+        let g = build_model(ModelId::MobileNetV2);
+        let t = tile_layer_graph(&g, TilingConfig::default());
+        for u in 0..t.len() {
+            for &v in t.dag.successors(u) {
+                assert!(
+                    t.tiles[u].segment != t.tiles[v].segment,
+                    "intra-segment tile edge {u}->{v}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Structural regression tests for the nine workload builders: the
+//! tile-DAG pipeline must stay faithful to each architecture's shape
+//! (these are the query graphs every matching result depends on).
+
+use immsched::graph::{is_acyclic, levels, topo_sort, NodeKind};
+use immsched::workload::{
+    assign_pipeline, build_model, tile_layer_graph, LayerOp, ModelId, TilingConfig, WorkloadClass,
+};
+
+#[test]
+fn every_model_has_single_entry_path() {
+    for id in ModelId::ALL {
+        let g = build_model(id).to_dag();
+        assert!(is_acyclic(&g), "{id:?}");
+        assert!(!g.sources().is_empty(), "{id:?} has no source");
+        assert!(!g.sinks().is_empty(), "{id:?} has no sink");
+        // every node reachable from some source (no disconnected islands)
+        let order = topo_sort(&g).unwrap();
+        assert_eq!(order.len(), g.len());
+    }
+}
+
+#[test]
+fn llm_depth_matches_layer_count() {
+    // Llama-3-8B: 32 blocks × ≥ 8 sequential ops + embed + head
+    let g = build_model(ModelId::Llama3_8B).to_dag();
+    let depth = levels(&g).into_iter().max().unwrap();
+    assert!(depth >= 32 * 6, "transformer depth {depth} too shallow");
+}
+
+#[test]
+fn cnn_pool_layers_are_compare_kind() {
+    let g = build_model(ModelId::ResNet50);
+    let pools: Vec<usize> = (0..g.len())
+        .filter(|&i| matches!(g.layers[i].op, LayerOp::Pool { .. }))
+        .collect();
+    assert!(!pools.is_empty());
+    let dag = g.to_dag();
+    for p in pools {
+        assert_eq!(dag.kind(p), NodeKind::Compare, "pool {p} kind");
+    }
+}
+
+#[test]
+fn tiling_is_deterministic() {
+    for id in [ModelId::UNet, ModelId::Qwen7B] {
+        let g = build_model(id);
+        let a = tile_layer_graph(&g, TilingConfig::default());
+        let b = tile_layer_graph(&g, TilingConfig::default());
+        assert_eq!(a.len(), b.len(), "{id:?}");
+        assert_eq!(a.dag.edge_count(), b.dag.edge_count(), "{id:?}");
+        for (x, y) in a.tiles.iter().zip(&b.tiles) {
+            assert_eq!(x.macs, y.macs, "{id:?}");
+            assert_eq!(x.segment, y.segment, "{id:?}");
+        }
+    }
+}
+
+#[test]
+fn tile_budget_respected_across_budgets() {
+    let g = build_model(ModelId::PNasNet5);
+    for max_tiles in [8usize, 12, 16, 24, 32, 48] {
+        let t = tile_layer_graph(&g, TilingConfig { max_tiles, split_factor: 2 });
+        assert!(t.len() <= max_tiles, "budget {max_tiles}: got {} tiles", t.len());
+        assert!(is_acyclic(&t.dag));
+    }
+}
+
+#[test]
+fn pipeline_assignment_covers_all_tiles() {
+    for id in ModelId::ALL {
+        let g = build_model(id);
+        let t = tile_layer_graph(&g, TilingConfig::default());
+        let asg = assign_pipeline(&t.dag, 4);
+        assert_eq!(asg.stage_of.len(), t.len(), "{id:?}");
+        assert!(asg.num_stages >= 1 && asg.num_stages <= 4);
+        // dependencies never go backwards through the pipeline
+        for u in 0..t.len() {
+            for &v in t.dag.successors(u) {
+                assert!(asg.stage_of[u] <= asg.stage_of[v], "{id:?}: {u}->{v}");
+            }
+        }
+    }
+}
+
+#[test]
+fn class_medians_reflect_topological_complexity() {
+    // Tile-level branchiness (edges per tile) must be highest for the
+    // Middle (NAS) class — the paper's motivation for harder matching.
+    let branchiness = |class: WorkloadClass| -> f64 {
+        class
+            .models()
+            .iter()
+            .map(|&m| {
+                let t = tile_layer_graph(&build_model(m), TilingConfig::default());
+                t.dag.edge_count() as f64 / t.len() as f64
+            })
+            .sum::<f64>()
+            / 3.0
+    };
+    let simple = branchiness(WorkloadClass::Simple);
+    let middle = branchiness(WorkloadClass::Middle);
+    assert!(
+        middle >= simple * 0.8,
+        "middle {middle} unexpectedly far below simple {simple}"
+    );
+}
+
+#[test]
+fn weight_volumes_match_published_scales() {
+    // int8 weight bytes ≈ parameter count
+    let params_m = |id: ModelId| build_model(id).total_weight_bytes() as f64 / 1e6;
+    assert!((2.0..6.0).contains(&params_m(ModelId::MobileNetV2)), "MobileNetV2 {} M", params_m(ModelId::MobileNetV2));
+    assert!((20.0..30.0).contains(&params_m(ModelId::ResNet50)), "ResNet50 {} M", params_m(ModelId::ResNet50));
+    assert!((25.0..40.0).contains(&params_m(ModelId::UNet)), "UNet {} M", params_m(ModelId::UNet));
+    assert!((3.0..9.0).contains(&params_m(ModelId::EfficientNetB0)), "EfficientNet-B0 {} M", params_m(ModelId::EfficientNetB0));
+}
