@@ -1,19 +1,20 @@
 //! Micro-bench: the matcher engines in isolation (not a paper figure —
 //! the ablation DESIGN.md calls out).
 //!
-//! Measures host wall-clock of: serial Ullmann, float PSO, quantized
-//! PSO, greedy vs Hungarian projection, and the PJRT epoch (when
-//! artifacts are built), across instance sizes.  Feeds EXPERIMENTS.md
-//! §Perf.
+//! Measures host wall-clock of: serial Ullmann, float PSO (serial *and*
+//! threaded epoch — the headline parallelism of the paper), quantized
+//! PSO, greedy vs Hungarian projection, the native epoch backend per
+//! size class, and the PJRT epoch (`pjrt` feature + built artifacts).
+//! Feeds EXPERIMENTS.md §Perf.
 
 use std::time::Instant;
 
 use immsched::matcher::{
-    build_mask, project_greedy, project_hungarian, ullmann::plant_embedding,
-    ullmann_find_first, PsoConfig, PsoMatcher, QuantizedMatcher,
+    project_greedy, project_hungarian, ullmann::plant_embedding, ullmann_find_first, PsoConfig,
+    PsoMatcher, QuantizedMatcher,
 };
 use immsched::report;
-use immsched::runtime::{ArtifactRegistry, EpochInputs, EpochRunner, RuntimeClient};
+use immsched::runtime::{default_backends, EpochBackend, EpochInputs};
 use immsched::util::table::{fmt_time, Table};
 use immsched::util::{MatF, Rng};
 
@@ -25,17 +26,37 @@ fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("[bench] threaded epoch path: {threads} worker threads available");
     let mut t = Table::new("matcher micro-benchmarks (host wall-clock)").header(&[
-        "n", "m", "ullmann", "pso f32", "pso q8", "proj greedy", "proj hungarian",
+        "n",
+        "m",
+        "ullmann",
+        "pso serial",
+        "pso threaded",
+        "pso q8",
+        "proj greedy",
+        "proj hungarian",
     ]);
 
     for &(n, m) in &[(8usize, 16usize), (16, 32), (32, 64), (64, 128)] {
         let (q, g, _) = plant_embedding(n, m, 0.3, 0.1, &mut rng);
         let mask = MatF::full(n, m, 1.0);
-        let cfg = PsoConfig { seed: 11, epochs: 2, early_exit: true, ..Default::default() };
+        // particles ≥ 8 so the threaded epoch has real fan-out to show
+        let cfg = PsoConfig {
+            seed: 11,
+            epochs: 2,
+            particles: 16,
+            early_exit: true,
+            ..Default::default()
+        };
 
         let (_, t_ull) = timed(|| ullmann_find_first(&mask, &q, &g, 200_000));
-        let (_, t_f32) = timed(|| PsoMatcher::new(cfg).run(&mask, &q, &g));
+        let (serial_out, t_serial) = timed(|| PsoMatcher::new(cfg).run_serial(&mask, &q, &g));
+        let (threaded_out, t_threaded) = timed(|| PsoMatcher::new(cfg).run_threaded(&mask, &q, &g));
+        // the threaded epoch must be a pure speedup, never a divergence
+        assert_eq!(serial_out.fitness_trace, threaded_out.fitness_trace);
+        assert_eq!(serial_out.mappings, threaded_out.mappings);
         let (_, t_q8) = timed(|| QuantizedMatcher::new(cfg).run(&mask, &q, &g));
 
         let mut s = MatF::from_fn(n, m, |_, _| rng.f32());
@@ -47,7 +68,8 @@ fn main() -> anyhow::Result<()> {
             n.to_string(),
             m.to_string(),
             fmt_time(t_ull),
-            fmt_time(t_f32),
+            fmt_time(t_serial),
+            fmt_time(t_threaded),
             fmt_time(t_q8),
             fmt_time(t_pg),
             fmt_time(t_ph),
@@ -55,38 +77,79 @@ fn main() -> anyhow::Result<()> {
     }
     report::emit(&t, "matcher_micro")?;
 
-    // PJRT epoch timing per size class (compile once, run many)
-    if let Ok(registry) = ArtifactRegistry::discover(&ArtifactRegistry::default_dir()) {
-        let client = RuntimeClient::cpu()?;
-        let mut t = Table::new("PJRT epoch (per artifact size class)").header(&[
-            "class", "n", "m", "particles", "compile", "epoch (warm, mean of 10)",
+    // native epoch backend timing per size class (the default epoch
+    // path of the global controller)
+    let mut t = Table::new("native epoch backend (per size class)").header(&[
+        "class", "n", "m", "particles", "K", "epoch (warm, mean of 10)",
+    ]);
+    for backend in default_backends() {
+        let class = backend.class();
+        let mut inputs = EpochInputs::zeros(class);
+        inputs.mask.iter_mut().for_each(|x| *x = 1.0);
+        // warm-up
+        backend.run_epoch(&inputs)?;
+        let (_, t_epoch) = timed(|| {
+            for i in 0..10 {
+                inputs.seed = i;
+                backend.run_epoch(&inputs).expect("epoch");
+            }
+        });
+        t.row(vec![
+            backend.name().to_string(),
+            class.n.to_string(),
+            class.m.to_string(),
+            class.particles.to_string(),
+            class.k_steps.to_string(),
+            fmt_time(t_epoch / 10.0),
         ]);
-        for artifact in registry.all() {
-            let (runner, t_compile) = timed(|| EpochRunner::load(&client, artifact));
-            let runner = runner?;
-            let class = runner.class();
-            let mut inputs = EpochInputs::zeros(class);
-            inputs.mask.iter_mut().for_each(|x| *x = 1.0);
-            // warm-up
-            runner.run(&inputs)?;
-            let (_, t_epoch) = timed(|| {
-                for i in 0..10 {
-                    inputs.seed = i;
-                    runner.run(&inputs).expect("epoch");
-                }
-            });
-            t.row(vec![
-                runner.name().to_string(),
-                class.n.to_string(),
-                class.m.to_string(),
-                class.particles.to_string(),
-                fmt_time(t_compile),
-                fmt_time(t_epoch / 10.0),
-            ]);
-        }
-        report::emit(&t, "pjrt_epoch_micro")?;
-    } else {
-        println!("[bench] artifacts not built — skipping PJRT micro-bench");
     }
+    report::emit(&t, "native_epoch_micro")?;
+
+    bench_pjrt()?;
+    Ok(())
+}
+
+/// PJRT epoch timing per size class (compile once, run many).
+#[cfg(feature = "pjrt")]
+fn bench_pjrt() -> anyhow::Result<()> {
+    use immsched::runtime::{ArtifactRegistry, EpochRunner, RuntimeClient};
+    let Ok(registry) = ArtifactRegistry::discover(&ArtifactRegistry::default_dir()) else {
+        println!("[bench] artifacts not built — skipping PJRT micro-bench");
+        return Ok(());
+    };
+    let client = RuntimeClient::cpu()?;
+    let mut t = Table::new("PJRT epoch (per artifact size class)").header(&[
+        "class", "n", "m", "particles", "compile", "epoch (warm, mean of 10)",
+    ]);
+    for artifact in registry.all() {
+        let (runner, t_compile) = timed(|| EpochRunner::load(&client, artifact));
+        let runner = runner?;
+        let class = runner.class();
+        let mut inputs = EpochInputs::zeros(class);
+        inputs.mask.iter_mut().for_each(|x| *x = 1.0);
+        // warm-up
+        runner.run(&inputs)?;
+        let (_, t_epoch) = timed(|| {
+            for i in 0..10 {
+                inputs.seed = i;
+                runner.run(&inputs).expect("epoch");
+            }
+        });
+        t.row(vec![
+            runner.name().to_string(),
+            class.n.to_string(),
+            class.m.to_string(),
+            class.particles.to_string(),
+            fmt_time(t_compile),
+            fmt_time(t_epoch / 10.0),
+        ]);
+    }
+    report::emit(&t, "pjrt_epoch_micro")?;
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt() -> anyhow::Result<()> {
+    println!("[bench] pjrt feature disabled — native epoch backend covered above");
     Ok(())
 }

@@ -24,6 +24,8 @@ pub struct PsoSection {
     pub elite: usize,
     pub relaxed: bool,
     pub repair_budget: u64,
+    /// Worker threads for the intra-epoch particle fan-out (0 = auto).
+    pub threads: usize,
 }
 
 impl Default for PsoSection {
@@ -40,6 +42,7 @@ impl Default for PsoSection {
             elite: d.elite,
             relaxed: d.relaxed,
             repair_budget: d.repair_budget,
+            threads: d.threads,
         }
     }
 }
@@ -59,6 +62,7 @@ impl PsoSection {
             relaxed: self.relaxed,
             early_exit: true,
             repair_budget: self.repair_budget,
+            threads: self.threads,
             seed,
         }
     }
@@ -184,6 +188,7 @@ impl Config {
                 "pso.elite" => self.pso.elite = int(val, key)? as usize,
                 "pso.relaxed" => self.pso.relaxed = boolean(val, key)?,
                 "pso.repair_budget" => self.pso.repair_budget = int(val, key)? as u64,
+                "pso.threads" => self.pso.threads = int(val, key)? as usize,
                 "sim.seed" => self.sim.seed = int(val, key)? as u64,
                 "sim.background_tasks" => self.sim.background_tasks = int(val, key)? as usize,
                 "sim.arrival_rate" => self.sim.arrival_rate = float(val, key)?,
@@ -298,6 +303,8 @@ preemption_ratio = 0.25
         let mut cfg = Config::default();
         cfg.apply_override("pso.steps = 99").unwrap();
         assert_eq!(cfg.pso.steps, 99);
+        cfg.apply_override("pso.threads = 4").unwrap();
+        assert_eq!(cfg.pso.threads, 4);
     }
 
     #[test]

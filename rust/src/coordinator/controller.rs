@@ -1,21 +1,31 @@
 //! The global controller (paper §3.4): epoch orchestration + consensus
-//! fusion over the PJRT-executed PSO epochs.
+//! fusion over [`EpochBackend`]-executed PSO epochs.
+//!
+//! The controller owns a set of per-size-class epoch backends. In a
+//! default build these are pure-native ([`crate::runtime::NativeEpochBackend`]);
+//! with the `pjrt` feature and built artifacts they are PJRT executables.
+//! Problems larger than every size class degrade to the quantized
+//! native matcher ([`MatchPath::NativeFallback`]).
 
 use anyhow::Result;
 
 use crate::matcher::{
     elite_consensus, mapping_is_feasible, project_greedy, Mapping, PsoConfig, QuantizedMatcher,
 };
-use crate::runtime::{ArtifactRegistry, EpochInputs, EpochRunner, RuntimeClient, SizeClass};
+use crate::runtime::{BackendKind, EpochBackend, EpochInputs, SizeClass};
 use crate::util::{MatF, Rng};
 
 /// Which execution path served a match request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MatchPath {
-    /// AOT artifact through PJRT (the production hot path).
+    /// AOT artifact through PJRT (the accelerated hot path, `pjrt`
+    /// feature).
     Pjrt,
-    /// Native quantized matcher (fallback: artifact missing/corrupt or
-    /// problem larger than every size class).
+    /// Pure-native epoch backend (default build): same epoch contract,
+    /// threaded across particles.
+    NativeEpoch,
+    /// Native quantized matcher (fallback: no backend fits the problem,
+    /// or an epoch failed).
     NativeFallback,
 }
 
@@ -46,52 +56,77 @@ pub struct ControllerStats {
     pub epochs_total: u64,
 }
 
-/// The global controller.  Owns the PJRT client + compiled epoch
-/// executables; single-threaded by design (the event loop serializes
-/// requests onto it).
+/// The global controller.  Owns the epoch backends; single-threaded by
+/// design (the event loop serializes requests onto it) — the epoch
+/// *inside* a backend may still fan out across particles.
 pub struct GlobalController {
     config: PsoConfig,
-    runners: Vec<EpochRunner>,
+    backends: Vec<Box<dyn EpochBackend>>,
     stats: ControllerStats,
 }
 
 impl GlobalController {
-    /// Load every artifact in the registry.  Missing artifacts are
-    /// tolerated (the controller degrades to the native matcher and
-    /// logs); a present-but-corrupt artifact is also tolerated the same
-    /// way.
+    /// Build the backend set. With the `pjrt` feature, every usable
+    /// artifact in the registry is compiled; missing/corrupt artifacts
+    /// are tolerated (logged + skipped). Whenever no PJRT backend comes
+    /// up — or the feature is off — the native epoch backends serve the
+    /// default size classes, so a fresh checkout always has a working
+    /// epoch path.
     pub fn new(config: PsoConfig) -> Result<Self> {
-        let mut runners = Vec::new();
-        match ArtifactRegistry::discover(&ArtifactRegistry::default_dir()) {
-            Ok(registry) => match RuntimeClient::cpu() {
-                Ok(client) => {
-                    for artifact in registry.all() {
-                        match EpochRunner::load(&client, artifact) {
-                            Ok(r) => runners.push(r),
-                            Err(e) => {
-                                log::warn!("artifact '{}' unusable: {e:#}; skipping", artifact.name)
+        let mut backends: Vec<Box<dyn EpochBackend>> = Vec::new();
+        #[cfg(feature = "pjrt")]
+        {
+            use crate::runtime::{ArtifactRegistry, EpochRunner, RuntimeClient};
+            match ArtifactRegistry::discover(&ArtifactRegistry::default_dir()) {
+                Ok(registry) => match RuntimeClient::cpu() {
+                    Ok(client) => {
+                        for artifact in registry.all() {
+                            match EpochRunner::load(&client, artifact) {
+                                Ok(r) => backends.push(Box::new(r)),
+                                Err(e) => crate::log_warn!(
+                                    "artifact '{}' unusable: {e:#}; skipping",
+                                    artifact.name
+                                ),
                             }
                         }
                     }
-                }
-                Err(e) => log::warn!("PJRT client unavailable: {e:#}; native fallback only"),
-            },
-            Err(e) => log::warn!("no artifacts: {e:#}; native fallback only"),
+                    Err(e) => {
+                        crate::log_warn!("PJRT client unavailable: {e:#}; native epoch backends")
+                    }
+                },
+                Err(e) => crate::log_warn!("no artifacts: {e:#}; native epoch backends"),
+            }
         }
-        Ok(Self { config, runners, stats: ControllerStats::default() })
+        if backends.is_empty() {
+            backends = crate::runtime::NativeEpochBackend::default_set()
+                .into_iter()
+                .map(|b| {
+                    let b = b.with_threads(config.threads).with_relaxed(config.relaxed);
+                    Box::new(b) as Box<dyn EpochBackend>
+                })
+                .collect();
+        }
+        Ok(Self { config, backends, stats: ControllerStats::default() })
     }
 
-    /// A controller with no artifacts (tests / forced fallback).
+    /// A controller with no epoch backends at all — every request takes
+    /// the quantized-matcher fallback (tests / forced fallback).
     pub fn native_only(config: PsoConfig) -> Self {
-        Self { config, runners: Vec::new(), stats: ControllerStats::default() }
+        Self { config, backends: Vec::new(), stats: ControllerStats::default() }
     }
 
     pub fn stats(&self) -> ControllerStats {
         self.stats
     }
 
+    /// Whether any PJRT-compiled backend is installed.
     pub fn has_pjrt(&self) -> bool {
-        !self.runners.is_empty()
+        self.backends.iter().any(|b| b.kind() == BackendKind::Pjrt)
+    }
+
+    /// Whether any epoch backend (native or PJRT) is installed.
+    pub fn has_epoch_backend(&self) -> bool {
+        !self.backends.is_empty()
     }
 
     /// Serve one interrupt: find feasible mappings of `query` into
@@ -100,23 +135,20 @@ impl GlobalController {
         self.stats.requests += 1;
         let started = std::time::Instant::now();
         let (n, m) = (q.rows(), g.rows());
-        let runner_idx = self
-            .runners
-            .iter()
-            .position(|r| r.class().fits(n, m));
+        let backend_idx = self.backends.iter().position(|b| b.class().fits(n, m));
 
-        let mut outcome = match runner_idx {
-            Some(idx) => match self.run_pjrt(idx, mask, q, g) {
+        let mut outcome = match backend_idx {
+            Some(idx) => match self.run_backend(idx, mask, q, g) {
                 Ok(o) => o,
                 Err(e) => {
-                    log::warn!("PJRT epoch failed: {e:#}; native fallback");
+                    crate::log_warn!("epoch backend failed: {e:#}; native fallback");
                     self.stats.fallbacks += 1;
                     self.run_native(mask, q, g)
                 }
             },
             None => {
-                if !self.runners.is_empty() {
-                    log::warn!("problem {n}x{m} exceeds all size classes; native fallback");
+                if !self.backends.is_empty() {
+                    crate::log_warn!("problem {n}x{m} exceeds all size classes; native fallback");
                 }
                 self.stats.fallbacks += 1;
                 self.run_native(mask, q, g)
@@ -130,13 +162,19 @@ impl GlobalController {
         outcome
     }
 
-    /// T-epoch outer loop over the AOT artifact: the paper's consensus-
+    /// T-epoch outer loop over one epoch backend: the paper's consensus-
     /// guided exploration, with projection + verification on the
     /// controller.
-    fn run_pjrt(&mut self, runner_idx: usize, mask: &MatF, q: &MatF, g: &MatF) -> Result<MatchOutcome> {
+    fn run_backend(
+        &mut self,
+        backend_idx: usize,
+        mask: &MatF,
+        q: &MatF,
+        g: &MatF,
+    ) -> Result<MatchOutcome> {
         let cfg = self.config;
-        let runner = &self.runners[runner_idx];
-        let class = runner.class();
+        let backend = &self.backends[backend_idx];
+        let class = backend.class();
         let (n, m) = (q.rows(), g.rows());
         let (pn, pm, parts) = (class.n, class.m, class.particles);
         let mut rng = Rng::new(cfg.seed ^ 0xC0DE);
@@ -159,7 +197,13 @@ impl GlobalController {
             epochs_run += 1;
             // fresh particles every epoch (Algorithm 1 line 4)
             for p in 0..parts {
-                init_padded_particle(&mut inputs.s[p * pn * pm..(p + 1) * pn * pm], mask, pn, pm, &mut rng);
+                init_padded_particle(
+                    &mut inputs.s[p * pn * pm..(p + 1) * pn * pm],
+                    mask,
+                    pn,
+                    pm,
+                    &mut rng,
+                );
             }
             inputs.v.iter_mut().for_each(|x| *x = 0.0);
             inputs.s_local.copy_from_slice(&inputs.s);
@@ -173,11 +217,10 @@ impl GlobalController {
             }
             inputs.seed = (cfg.seed as u32).wrapping_add(epoch as u32 * 7919);
 
-            let out = runner.run(&inputs)?;
+            let out = backend.run_epoch(&inputs)?;
 
             // controller-side: rank particles, update S*, project+verify
-            let mut order: Vec<usize> = (0..parts).collect();
-            order.sort_by(|&a, &b| out.f_local[b].partial_cmp(&out.f_local[a]).unwrap());
+            let order = crate::matcher::consensus::rank_fitness_desc(&out.f_local);
             let best = order[0];
             if out.f_local[best] > best_fitness {
                 best_fitness = out.f_local[best];
@@ -208,20 +251,17 @@ impl GlobalController {
 
         // final repair attempt if the swarm converged but projection failed
         if mappings.is_empty() {
-            let (repaired, _) =
-                crate::matcher::ullmann_find_first(mask, q, g, cfg.repair_budget);
+            let (repaired, _) = crate::matcher::ullmann_find_first(mask, q, g, cfg.repair_budget);
             if let Some(mp) = repaired {
                 mappings.push(mp);
             }
         }
 
-        Ok(MatchOutcome {
-            mappings,
-            best_fitness,
-            epochs_run,
-            path: MatchPath::Pjrt,
-            host_seconds: 0.0,
-        })
+        let path = match backend.kind() {
+            BackendKind::Pjrt => MatchPath::Pjrt,
+            BackendKind::Native => MatchPath::NativeEpoch,
+        };
+        Ok(MatchOutcome { mappings, best_fitness, epochs_run, path, host_seconds: 0.0 })
     }
 
     fn run_native(&mut self, mask: &MatF, q: &MatF, g: &MatF) -> MatchOutcome {
@@ -237,7 +277,7 @@ impl GlobalController {
 
     /// Size class the controller would use (None = fallback).
     pub fn class_for(&self, n: usize, m: usize) -> Option<SizeClass> {
-        self.runners.iter().find(|r| r.class().fits(n, m)).map(|r| r.class())
+        self.backends.iter().find(|b| b.class().fits(n, m)).map(|b| b.class())
     }
 }
 
@@ -305,6 +345,39 @@ mod tests {
         assert_eq!(ctl.stats().matched, 1);
     }
 
+    /// A default controller always has a working epoch path, even with
+    /// no artifacts and no XLA anywhere.
+    #[test]
+    fn default_controller_serves_native_epoch() {
+        let mut ctl = GlobalController::new(PsoConfig { seed: 5, ..Default::default() })
+            .expect("controller");
+        assert!(ctl.has_epoch_backend());
+        let (mask, q, g) = chain_problem(4, 8);
+        let out = ctl.find_mapping(&mask, &q, &g);
+        if !ctl.has_pjrt() {
+            assert_eq!(out.path, MatchPath::NativeEpoch);
+        }
+        assert!(out.matched(), "epoch path found no mapping (fitness {})", out.best_fitness);
+        assert!(mapping_is_feasible(&out.mappings[0], &q, &g));
+        assert_eq!(ctl.stats().fallbacks, 0);
+    }
+
+    #[test]
+    fn epoch_path_is_deterministic() {
+        let (mask, q, g) = chain_problem(4, 8);
+        let run = || {
+            let mut ctl = GlobalController::new(PsoConfig { seed: 11, ..Default::default() })
+                .expect("controller");
+            ctl.find_mapping(&mask, &q, &g)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.mappings, b.mappings);
+        assert_eq!(a.best_fitness, b.best_fitness);
+        assert_eq!(a.epochs_run, b.epochs_run);
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_path_matches_when_artifacts_present() {
         let mut ctl = match GlobalController::new(PsoConfig { seed: 5, ..Default::default() }) {
@@ -329,13 +402,19 @@ mod tests {
             Err(_) => return,
         };
         // 200 query vertices exceeds every size class
-        let (mask, q, g) = chain_problem(4, 8);
-        let _ = (mask, q, g);
         let big_q = gen_chain(200, NodeKind::Compute);
         let big_g = gen_chain(210, NodeKind::Universal);
         let mask = build_mask(&big_q, &big_g);
         let out = ctl.find_mapping(&mask, &big_q.adjacency(), &big_g.adjacency());
         assert_eq!(out.path, MatchPath::NativeFallback);
+    }
+
+    #[test]
+    fn class_for_picks_smallest_fitting_backend() {
+        let ctl = GlobalController::new(PsoConfig::default()).expect("controller");
+        let small = ctl.class_for(4, 8).expect("4x8 must fit");
+        assert!(small.fits(4, 8));
+        assert!(ctl.class_for(500, 500).is_none());
     }
 
     #[test]
@@ -346,7 +425,7 @@ mod tests {
         let back = unpad(&flat, 8, 16, 3, 5);
         assert_eq!(back, src);
         // padding region is zero
-        assert_eq!(flat[3 * 16 + 0], 0.0);
-        assert_eq!(flat[0 * 16 + 5], 0.0);
+        assert_eq!(flat[3 * 16], 0.0);
+        assert_eq!(flat[5], 0.0);
     }
 }

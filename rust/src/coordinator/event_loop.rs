@@ -72,7 +72,7 @@ impl CoordinatorHandle {
                 let mut controller = match GlobalController::new(config) {
                     Ok(c) => c,
                     Err(e) => {
-                        log::warn!("controller init degraded: {e:#}");
+                        crate::log_warn!("controller init degraded: {e:#}");
                         GlobalController::native_only(config)
                     }
                 };

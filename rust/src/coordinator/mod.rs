@@ -1,21 +1,22 @@
 //! L3 coordinator: the interrupt-driven control plane.
 //!
 //! * [`controller`] — the **global controller** of paper §3.4: owns the
-//!   PJRT runtime, launches PSO epochs (the AOT artifact), fuses
+//!   per-size-class epoch backends (pure-native by default, PJRT
+//!   executables under the `pjrt` feature), launches PSO epochs, fuses
 //!   multi-particle results into the global best `S*` and the elite
 //!   consensus `S̄` between epochs, projects + Ullmann-verifies
 //!   candidates, and manages the feasible-mapping set.  Falls back to
-//!   the native quantized matcher when artifacts are missing or corrupt
-//!   (failure injection path).
+//!   the native quantized matcher when no backend fits (or artifacts
+//!   are missing/corrupt — the failure injection path).
 //! * [`event_loop`] — the interrupt service thread: urgent requests
 //!   arrive over a channel, are matched on the controller thread (which
-//!   exclusively owns the PJRT client — no locks on the hot path), and
-//!   answered over per-request response channels.
+//!   exclusively owns the runtime backends — no locks on the hot path),
+//!   and answered over per-request response channels.
 
 pub mod controller;
 pub mod event_loop;
 pub mod queue;
 
-pub use controller::{ControllerStats, GlobalController, MatchOutcome};
+pub use controller::{ControllerStats, GlobalController, MatchOutcome, MatchPath};
 pub use event_loop::{CoordinatorHandle, InterruptRequest, InterruptResponse};
 pub use queue::{QueuedRequest, RequestRouter, RouterStats};

@@ -16,9 +16,13 @@
 //!   coordinator with its global controller, and the benchmark harnesses
 //!   that regenerate every table and figure of the paper.
 //!
-//! Python never runs at request time: `make artifacts` lowers the epoch
-//! once per size class, and [`runtime`] loads the HLO text through the
-//! PJRT CPU client (`xla` crate) on the interrupt hot path.
+//! Python never runs at request time: the interrupt hot path executes
+//! epochs through the [`runtime`] `EpochBackend` trait. The default
+//! build uses the pure-native backend (no XLA anywhere, threaded across
+//! particles under the `parallel` feature); with the off-by-default
+//! `pjrt` cargo feature, `make artifacts` lowers the epoch once per
+//! size class and the HLO text runs through the PJRT CPU client
+//! (`xla` crate) instead.
 //!
 //! See `DESIGN.md` for the complete system inventory and experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.

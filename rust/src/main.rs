@@ -71,20 +71,7 @@ fn print_help() {
 }
 
 fn init_logger() {
-    struct StderrLog;
-    impl log::Log for StderrLog {
-        fn enabled(&self, metadata: &log::Metadata) -> bool {
-            metadata.level() <= log::Level::Info
-        }
-        fn log(&self, record: &log::Record) {
-            if self.enabled(record.metadata()) {
-                eprintln!("[{}] {}", record.level(), record.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: StderrLog = StderrLog;
-    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Info));
+    immsched::util::logging::set_max_level(immsched::util::logging::Level::Info);
 }
 
 /// Parse `--config F` and repeated `--set key=value` into a Config.

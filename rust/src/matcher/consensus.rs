@@ -9,6 +9,17 @@
 
 use crate::util::MatF;
 
+/// Particle indices ranked by fitness, best first. NaN is demoted below
+/// every real fitness — bare `total_cmp` would rank +NaN above +inf.
+/// Shared by the consensus fusion and the controller's elite selection
+/// so the two ranking paths cannot diverge.
+pub(crate) fn rank_fitness_desc(fitness: &[f32]) -> Vec<usize> {
+    let key = |f: f32| if f.is_nan() { f32::NEG_INFINITY } else { f };
+    let mut idx: Vec<usize> = (0..fitness.len()).collect();
+    idx.sort_by(|&a, &b| key(fitness[b]).total_cmp(&key(fitness[a])));
+    idx
+}
+
 /// Fuse the top-`elite` particles into a consensus matrix.
 ///
 /// `particles[i]` is particle i's relaxed mapping; `fitness[i]` its
@@ -16,21 +27,38 @@ use crate::util::MatF;
 /// `w_i = 1 / (1 + |f_i - f_best|)`, which keeps the best particle at
 /// weight 1 and decays with fitness distance without needing exp() on
 /// the modeled fixed-point controller.
+///
+/// Robust to degenerate fitness values: NaN sorts below every real
+/// fitness, and non-finite weights — e.g. the NaN from
+/// `-inf − -inf` when every `f_local` is still untouched — clamp to 0 so
+/// they cannot poison S̄ for later epochs. When no elite carries usable
+/// weight, the elites are averaged uniformly instead.
 pub fn elite_consensus(particles: &[MatF], fitness: &[f32], elite: usize) -> MatF {
     assert_eq!(particles.len(), fitness.len());
     assert!(!particles.is_empty());
     let elite = elite.max(1).min(particles.len());
 
-    // rank particle indices by fitness (descending)
-    let mut idx: Vec<usize> = (0..particles.len()).collect();
-    idx.sort_by(|&a, &b| fitness[b].partial_cmp(&fitness[a]).unwrap());
+    let idx = rank_fitness_desc(fitness);
     let best_f = fitness[idx[0]];
 
     let (n, m) = (particles[0].rows(), particles[0].cols());
+    let weight = |f: f32| -> f32 {
+        // equal fitness (including -inf == -inf) is distance 0, weight 1
+        let dist = if f == best_f { 0.0 } else { (f - best_f).abs() };
+        let w = 1.0 / (1.0 + dist);
+        if w.is_finite() {
+            w
+        } else {
+            0.0
+        }
+    };
     let mut acc = MatF::zeros(n, m);
     let mut total_w = 0.0f32;
     for &i in idx.iter().take(elite) {
-        let w = 1.0 / (1.0 + (fitness[i] - best_f).abs());
+        let w = weight(fitness[i]);
+        if w <= 0.0 {
+            continue;
+        }
         for (a, &p) in acc.as_mut_slice().iter_mut().zip(particles[i].as_slice()) {
             *a += w * p;
         }
@@ -39,6 +67,13 @@ pub fn elite_consensus(particles: &[MatF], fitness: &[f32], elite: usize) -> Mat
     if total_w > 0.0 {
         for a in acc.as_mut_slice() {
             *a /= total_w;
+        }
+    } else {
+        // every weight clamped (all-NaN fitness): uniform elite average
+        for &i in idx.iter().take(elite) {
+            for (a, &p) in acc.as_mut_slice().iter_mut().zip(particles[i].as_slice()) {
+                *a += p / elite as f32;
+            }
         }
     }
     acc.row_normalize();
@@ -97,5 +132,45 @@ mod tests {
         let parts: Vec<MatF> = (0..2).map(|_| random_stochastic(2, 4, &mut rng)).collect();
         let c = elite_consensus(&parts, &[-1.0, -2.0], 99);
         assert_eq!(c.rows(), 2);
+    }
+
+    #[test]
+    fn nan_fitness_does_not_panic_or_poison() {
+        // regression: partial_cmp().unwrap() used to panic on NaN, and a
+        // NaN weight silently zeroed/NaN-ed S̄ for all later epochs
+        let mut rng = Rng::new(6);
+        let parts: Vec<MatF> = (0..4).map(|_| random_stochastic(3, 6, &mut rng)).collect();
+        let fit = vec![-2.0, f32::NAN, -1.0, f32::NAN];
+        let c = elite_consensus(&parts, &fit, 3);
+        assert!(c.as_slice().iter().all(|x| x.is_finite()), "consensus has non-finite entries");
+        for i in 0..3 {
+            let s: f32 = c.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums {s}");
+        }
+    }
+
+    #[test]
+    fn all_neg_infinity_fitness_gives_uniform_elite_average() {
+        // regression: (-inf) − (-inf) = NaN used to poison every weight
+        // when no particle had improved yet (e.g. a zero-step epoch)
+        let mut rng = Rng::new(7);
+        let parts: Vec<MatF> = (0..3).map(|_| random_stochastic(2, 5, &mut rng)).collect();
+        let fit = vec![f32::NEG_INFINITY; 3];
+        let c = elite_consensus(&parts, &fit, 3);
+        assert!(c.as_slice().iter().all(|x| x.is_finite()));
+        for i in 0..2 {
+            let s: f32 = c.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums {s}");
+        }
+    }
+
+    #[test]
+    fn all_nan_fitness_falls_back_to_uniform() {
+        let mut rng = Rng::new(8);
+        let parts: Vec<MatF> = (0..2).map(|_| random_stochastic(2, 4, &mut rng)).collect();
+        let c = elite_consensus(&parts, &[f32::NAN, f32::NAN], 2);
+        assert!(c.as_slice().iter().all(|x| x.is_finite()));
+        let s: f32 = c.row(0).iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
     }
 }

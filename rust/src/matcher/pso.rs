@@ -5,11 +5,22 @@
 //! * the hardware-model execution path: the simulator charges the
 //!   accelerator for exactly the work this implementation performs
 //!   (steps × particles fused kernels, see [`super::cost`]);
-//! * a fallback when artifacts are missing/corrupt (failure injection —
-//!   the coordinator logs and degrades rather than aborting).
+//! * the default epoch backend when no PJRT artifact is available
+//!   ([`crate::runtime::NativeEpochBackend`] drives the same per-particle
+//!   epoch at the artifact's padded dims).
 //!
-//! The PJRT path ([`crate::runtime::EpochRunner`]) computes the same
-//! epoch; integration tests cross-check the two.
+//! ## Parallel structure
+//!
+//! The epoch mirrors the paper's data-dependency split: within one epoch
+//! every particle runs its K fused steps against the *frozen* attractors
+//! (S*, S̄) with no cross-particle dependency, so the per-particle work
+//! fans out across threads (`std::thread::scope`, one forked RNG stream
+//! per particle). Everything that couples particles — the global best
+//! S*, the elite-consensus S̄, projection + Ullmann verification —
+//! happens at the epoch barrier on the (modeled) global controller.
+//! Serial and threaded execution are bit-identical for a given seed:
+//! particle initialization and RNG forks consume the master stream in
+//! particle order, and the trace merge runs on one thread.
 
 use crate::util::{MatF, Rng};
 
@@ -49,6 +60,10 @@ pub struct PsoConfig {
     /// Node budget for the bounded Ullmann repair of projected
     /// candidates.
     pub repair_budget: u64,
+    /// Worker threads for the intra-epoch particle fan-out (0 = one per
+    /// available core, capped at the particle count). Only consulted on
+    /// the threaded path.
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -69,6 +84,7 @@ impl Default for PsoConfig {
             // queries (UNet skip tiles take ~10k nodes); the controller
             // is charged for every expanded node in the cost model.
             repair_budget: 100_000,
+            threads: 0,
             seed: 0x1535EED,
         }
     }
@@ -104,13 +120,44 @@ impl PsoOutcome {
     }
 }
 
-/// One particle's state.
-struct Particle {
-    s: MatF,
-    v: MatF,
-    s_local: MatF,
-    f_local: f32,
+/// One particle's swarm state (shared with the native epoch backend).
+pub(crate) struct ParticleState {
+    pub s: MatF,
+    pub v: MatF,
+    pub s_local: MatF,
+    pub f_local: f32,
 }
+
+/// The velocity-update coefficients one fused step needs.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct StepParams {
+    pub w: f32,
+    pub c1: f32,
+    pub c2: f32,
+    pub c3: f32,
+    pub relaxed: bool,
+}
+
+impl StepParams {
+    pub(crate) fn from_config(cfg: &PsoConfig) -> Self {
+        Self { w: cfg.w, c1: cfg.c1, c2: cfg.c2, c3: cfg.c3, relaxed: cfg.relaxed }
+    }
+}
+
+/// A particle plus its private RNG stream and per-step fitness record for
+/// one epoch.
+pub(crate) struct EpochParticle {
+    pub state: ParticleState,
+    pub rng: Rng,
+    pub fits: Vec<f32>,
+}
+
+/// Minimum per-epoch work (particles × steps × n × m elements) before
+/// the auto path spawns scoped threads: below this, per-epoch thread
+/// spawn/join dominates the few microseconds of arithmetic and the
+/// serial loop is faster on the interrupt hot path. `run_threaded`
+/// bypasses the threshold (tests/benches force the fan-out).
+pub(crate) const PARALLEL_WORK_THRESHOLD: usize = 1 << 15;
 
 /// The native matcher.
 pub struct PsoMatcher {
@@ -122,14 +169,43 @@ impl PsoMatcher {
         Self { config }
     }
 
-    /// Run Algorithm 1 on (mask, Q, G).
+    /// Run Algorithm 1 on (mask, Q, G). Uses the threaded epoch when the
+    /// `parallel` feature is on, more than one particle is configured,
+    /// and the per-epoch work is large enough to amortize thread spawns;
+    /// results are identical to [`Self::run_serial`] either way.
     pub fn run(&self, mask: &MatF, q: &MatF, g: &MatF) -> PsoOutcome {
+        let work = self.config.particles * self.config.steps * mask.rows() * mask.cols();
+        let threaded = cfg!(feature = "parallel")
+            && self.config.particles > 1
+            && work >= PARALLEL_WORK_THRESHOLD;
+        self.run_impl(mask, q, g, threaded)
+    }
+
+    /// Force the serial per-particle loop (baseline / determinism tests).
+    pub fn run_serial(&self, mask: &MatF, q: &MatF, g: &MatF) -> PsoOutcome {
+        self.run_impl(mask, q, g, false)
+    }
+
+    /// Force the threaded epoch regardless of the `parallel` feature.
+    pub fn run_threaded(&self, mask: &MatF, q: &MatF, g: &MatF) -> PsoOutcome {
+        self.run_impl(mask, q, g, true)
+    }
+
+    fn run_impl(&self, mask: &MatF, q: &MatF, g: &MatF, threaded: bool) -> PsoOutcome {
         let cfg = &self.config;
         let (n, m) = (mask.rows(), mask.cols());
         assert_eq!(q.rows(), n);
         assert_eq!(g.rows(), m);
-        let mut rng = Rng::new(cfg.seed);
         let mut out = PsoOutcome { best_fitness: f32::NEG_INFINITY, ..Default::default() };
+        // Degenerate configs (no particles, no epochs, no steps) have
+        // nothing to search: return the empty outcome instead of
+        // panicking downstream (elite_consensus asserts on empty input,
+        // zero steps would feed NEG_INFINITY fitnesses to the consensus).
+        if cfg.particles == 0 || cfg.epochs == 0 || cfg.steps == 0 {
+            return out;
+        }
+        let mut rng = Rng::new(cfg.seed);
+        let params = StepParams::from_config(cfg);
 
         let mut s_star = init_particle_s(mask, &mut rng);
         let mut f_star = f32::NEG_INFINITY;
@@ -139,52 +215,78 @@ impl PsoMatcher {
 
         'epochs: for _t in 0..cfg.epochs {
             out.epochs_run += 1;
-            // line 4: fresh particles each epoch
-            let mut particles: Vec<Particle> = (0..cfg.particles)
-                .map(|_| {
+            // line 4: fresh particles each epoch. Initialization and the
+            // per-particle RNG forks consume the master stream in
+            // particle order, so serial and threaded runs are identical.
+            let mut particles: Vec<EpochParticle> = (0..cfg.particles)
+                .map(|i| {
                     let s = init_particle_s(mask, &mut rng);
-                    Particle {
-                        v: MatF::zeros(n, m),
-                        s_local: s.clone(),
-                        f_local: f32::NEG_INFINITY,
-                        s,
+                    let stream = rng.fork(i as u64);
+                    EpochParticle {
+                        state: ParticleState {
+                            v: MatF::zeros(n, m),
+                            s_local: s.clone(),
+                            f_local: f32::NEG_INFINITY,
+                            s,
+                        },
+                        rng: stream,
+                        fits: Vec::new(),
                     }
                 })
                 .collect();
 
-            for _k in 0..cfg.steps {
+            // the fused epoch: K steps per particle against the frozen
+            // (S*, S̄) attractors — no cross-particle dependency until
+            // the barrier below
+            run_epoch_particles(
+                &mut particles,
+                &s_star,
+                &s_bar,
+                mask,
+                q,
+                g,
+                cfg.steps,
+                &params,
+                threaded,
+                cfg.threads,
+            );
+
+            // barrier part 1: merge the per-particle traces (single
+            // thread, particle order — deterministic)
+            let f_star_before = f_star;
+            for k in 0..cfg.steps {
                 out.steps_run += 1;
                 out.kernel_invocations += cfg.particles as u64;
                 let mut f_sum = 0.0f32;
-                for p in particles.iter_mut() {
-                    step_particle(p, &s_star, &s_bar, mask, cfg, &mut rng);
-                    let f = if cfg.relaxed {
-                        edge_fitness(&p.s, q, g)
-                    } else {
-                        // discrete coupling (Fig. 2b ablation): evaluate on
-                        // the hard-rounded one-hot projection of S
-                        let hard = harden(&p.s, mask);
-                        edge_fitness(&hard, q, g)
-                    };
+                let mut step_best = f32::NEG_INFINITY;
+                for p in &particles {
+                    let f = p.fits[k];
                     f_sum += f;
-                    if f > p.f_local {
-                        p.f_local = f;
-                        p.s_local = p.s.clone();
-                    }
-                    if f > f_star {
-                        f_star = f;
-                        s_star = p.s.clone();
-                    }
+                    step_best = step_best.max(f);
                 }
-                out.best_fitness = out.best_fitness.max(f_star);
+                f_star = f_star.max(step_best);
                 out.fitness_trace.push(f_star);
-                out.mean_fitness_trace.push(f_sum / cfg.particles.max(1) as f32);
+                out.mean_fitness_trace.push(f_sum / cfg.particles as f32);
+            }
+            out.best_fitness = out.best_fitness.max(f_star);
+
+            // barrier part 2: fold the particle-local bests into S*
+            let mut best_idx: Option<usize> = None;
+            let mut best_f = f_star_before;
+            for (i, p) in particles.iter().enumerate() {
+                if p.state.f_local > best_f {
+                    best_f = p.state.f_local;
+                    best_idx = Some(i);
+                }
+            }
+            if let Some(i) = best_idx {
+                s_star = particles[i].state.s_local.clone();
             }
 
             // lines 19-25: project, refine, verify, fuse consensus
-            let fitnesses: Vec<f32> = particles.iter().map(|p| p.f_local).collect();
+            let fitnesses: Vec<f32> = particles.iter().map(|p| p.state.f_local).collect();
             for p in &particles {
-                let candidate = project_greedy(&p.s, mask);
+                let candidate = project_greedy(&p.state.s, mask);
                 let found = if mapping_is_feasible(&candidate, q, g) {
                     Some(candidate)
                 } else {
@@ -215,11 +317,108 @@ impl PsoMatcher {
                     }
                 }
             }
-            let snapshots: Vec<MatF> = particles.iter().map(|p| p.s_local.clone()).collect();
+            let snapshots: Vec<MatF> =
+                particles.iter().map(|p| p.state.s_local.clone()).collect();
             s_bar = elite_consensus(&snapshots, &fitnesses, cfg.elite);
         }
         out
     }
+}
+
+/// Run every particle's K-step epoch, serially or fanned out over scoped
+/// threads. Particles are fully independent here (frozen attractors,
+/// private RNG streams), so the two modes produce identical results.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_epoch_particles(
+    particles: &mut [EpochParticle],
+    s_star: &MatF,
+    s_bar: &MatF,
+    mask: &MatF,
+    q: &MatF,
+    g: &MatF,
+    steps: usize,
+    params: &StepParams,
+    threaded: bool,
+    threads: usize,
+) {
+    let workers = if !threaded {
+        1
+    } else {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let requested = if threads > 0 { threads } else { avail };
+        requested.clamp(1, particles.len().max(1))
+    };
+    if workers <= 1 {
+        for p in particles.iter_mut() {
+            p.fits = run_particle_epoch(
+                &mut p.state,
+                s_star,
+                s_bar,
+                mask,
+                q,
+                g,
+                steps,
+                params,
+                &mut p.rng,
+            );
+        }
+        return;
+    }
+    let chunk = (particles.len() + workers - 1) / workers;
+    std::thread::scope(|scope| {
+        for slab in particles.chunks_mut(chunk) {
+            scope.spawn(move || {
+                for p in slab.iter_mut() {
+                    p.fits = run_particle_epoch(
+                        &mut p.state,
+                        s_star,
+                        s_bar,
+                        mask,
+                        q,
+                        g,
+                        steps,
+                        params,
+                        &mut p.rng,
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// One particle's full epoch: K fused steps with local-best tracking.
+/// Returns the particle's *current* fitness after every step (the
+/// per-step trace the barrier merges).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_particle_epoch(
+    p: &mut ParticleState,
+    s_star: &MatF,
+    s_bar: &MatF,
+    mask: &MatF,
+    q: &MatF,
+    g: &MatF,
+    steps: usize,
+    params: &StepParams,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut fits = Vec::with_capacity(steps);
+    for _k in 0..steps {
+        step_particle(p, s_star, s_bar, mask, params, rng);
+        let f = if params.relaxed {
+            edge_fitness(&p.s, q, g)
+        } else {
+            // discrete coupling (Fig. 2b ablation): evaluate on the
+            // hard-rounded one-hot projection of S
+            let hard = harden(&p.s, mask);
+            edge_fitness(&hard, q, g)
+        };
+        fits.push(f);
+        if f > p.f_local {
+            p.f_local = f;
+            p.s_local = p.s.clone();
+        }
+    }
+    fits
 }
 
 /// Random mask-respecting row-stochastic initialization.
@@ -231,24 +430,38 @@ fn init_particle_s(mask: &MatF, rng: &mut Rng) -> MatF {
 }
 
 /// Fused PSO step for one particle (the rust twin of the Pallas kernel).
-fn step_particle(p: &mut Particle, s_star: &MatF, s_bar: &MatF, mask: &MatF, cfg: &PsoConfig, rng: &mut Rng) {
-    let (n, m) = (p.s.rows(), p.s.cols());
-    for i in 0..n {
-        for j in 0..m {
-            let r1 = rng.f32();
-            let r2 = rng.f32();
-            let r3 = rng.f32();
-            let s = p.s[(i, j)];
-            let vel = cfg.w * p.v[(i, j)]
-                + cfg.c1 * r1 * (p.s_local[(i, j)] - s)
-                + cfg.c2 * r2 * (s_star[(i, j)] - s)
-                + cfg.c3 * r3 * (s_bar[(i, j)] - s);
-            p.v[(i, j)] = vel;
-            p.s[(i, j)] = (s + vel).clamp(0.0, 1.0);
-        }
+/// Flat slice iteration in row-major order — the RNG is consumed three
+/// draws per element exactly as the elementwise kernel folds its key.
+fn step_particle(
+    p: &mut ParticleState,
+    s_star: &MatF,
+    s_bar: &MatF,
+    mask: &MatF,
+    params: &StepParams,
+    rng: &mut Rng,
+) {
+    let ParticleState { s, v, s_local, .. } = p;
+    for ((((s_ij, v_ij), &l_ij), &star_ij), &bar_ij) in s
+        .as_mut_slice()
+        .iter_mut()
+        .zip(v.as_mut_slice().iter_mut())
+        .zip(s_local.as_slice())
+        .zip(s_star.as_slice())
+        .zip(s_bar.as_slice())
+    {
+        let r1 = rng.f32();
+        let r2 = rng.f32();
+        let r3 = rng.f32();
+        let cur = *s_ij;
+        let vel = params.w * *v_ij
+            + params.c1 * r1 * (l_ij - cur)
+            + params.c2 * r2 * (star_ij - cur)
+            + params.c3 * r3 * (bar_ij - cur);
+        *v_ij = vel;
+        *s_ij = (cur + vel).clamp(0.0, 1.0);
     }
-    p.s.hadamard_assign(mask);
-    p.s.row_normalize();
+    s.hadamard_assign(mask);
+    s.row_normalize();
 }
 
 /// Hard rounding to an injective one-hot matrix (discrete ablation).
@@ -356,5 +569,62 @@ mod tests {
         let b = PsoMatcher::new(cfg).run(&mask, &q, &g);
         assert_eq!(a.mappings, b.mappings);
         assert_eq!(a.fitness_trace, b.fitness_trace);
+    }
+
+    #[test]
+    fn threaded_epoch_matches_serial() {
+        // the headline determinism guarantee: the threaded epoch is
+        // bit-identical to the serial per-particle loop
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { early_exit: false, epochs: 3, seed: 21, ..Default::default() };
+        let matcher = PsoMatcher::new(cfg);
+        let a = matcher.run_serial(&mask, &q, &g);
+        let b = matcher.run_threaded(&mask, &q, &g);
+        assert_eq!(a.mappings, b.mappings);
+        assert_eq!(a.fitness_trace, b.fitness_trace);
+        assert_eq!(a.mean_fitness_trace, b.mean_fitness_trace);
+        assert_eq!(a.best_fitness, b.best_fitness);
+        assert_eq!(a.steps_run, b.steps_run);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let (mask, q, g) = chain_problem();
+        let base = PsoConfig { early_exit: false, epochs: 2, seed: 33, ..Default::default() };
+        let one = PsoMatcher::new(PsoConfig { threads: 1, ..base }).run_threaded(&mask, &q, &g);
+        let three = PsoMatcher::new(PsoConfig { threads: 3, ..base }).run_threaded(&mask, &q, &g);
+        assert_eq!(one.fitness_trace, three.fitness_trace);
+        assert_eq!(one.mappings, three.mappings);
+    }
+
+    #[test]
+    fn zero_particles_is_empty_outcome() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { particles: 0, ..Default::default() };
+        let out = PsoMatcher::new(cfg).run(&mask, &q, &g);
+        assert!(!out.matched());
+        assert_eq!(out.epochs_run, 0);
+        assert_eq!(out.steps_run, 0);
+        assert!(out.fitness_trace.is_empty());
+        assert_eq!(out.best_fitness, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn zero_steps_is_empty_outcome() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { steps: 0, ..Default::default() };
+        let out = PsoMatcher::new(cfg).run(&mask, &q, &g);
+        assert!(!out.matched());
+        assert_eq!(out.steps_run, 0);
+        assert!(out.fitness_trace.is_empty());
+    }
+
+    #[test]
+    fn zero_epochs_is_empty_outcome() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { epochs: 0, ..Default::default() };
+        let out = PsoMatcher::new(cfg).run(&mask, &q, &g);
+        assert!(!out.matched());
+        assert_eq!(out.epochs_run, 0);
     }
 }

@@ -1,0 +1,323 @@
+//! Pluggable epoch execution backends.
+//!
+//! The global controller drives Algorithm 1 one *epoch* at a time
+//! through the [`EpochBackend`] trait: hand in the flat
+//! [`EpochInputs`] (particle states + frozen S*/S̄ attractors + problem
+//! matrices), get back the flat [`EpochOutputs`] (advanced states +
+//! per-particle local bests). Two implementations exist:
+//!
+//! * [`NativeEpochBackend`] (always compiled, the default): the pure-rust
+//!   twin of the AOT artifact, reusing the [`crate::matcher::pso`]
+//!   per-particle epoch at the artifact's padded dims. Fans out across
+//!   threads under the `parallel` feature.
+//! * [`crate::runtime::EpochRunner`] (`pjrt` feature): the compiled HLO
+//!   artifact through the PJRT CPU client.
+//!
+//! Both honor the same calling convention pinned by
+//! `python/compile/model.py::epoch_fn`, so the controller is oblivious
+//! to which one serves an interrupt.
+
+use anyhow::Result;
+
+use crate::matcher::pso::{run_epoch_particles, EpochParticle, ParticleState, StepParams};
+use crate::util::{MatF, Rng};
+
+use super::artifact::SizeClass;
+use super::matcher_exec::{EpochInputs, EpochOutputs};
+
+/// Which execution substrate a backend runs on (telemetry / path
+/// reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust epoch (no XLA involved).
+    Native,
+    /// AOT HLO artifact through PJRT.
+    Pjrt,
+}
+
+/// One compiled/installed epoch executor for one size class.
+pub trait EpochBackend {
+    /// Padded dims + particle count this backend serves.
+    fn class(&self) -> SizeClass;
+    /// Human-readable size-class name ("small", "medium", ...).
+    fn name(&self) -> &str;
+    /// Execution substrate (drives `MatchPath` telemetry).
+    fn kind(&self) -> BackendKind;
+    /// Advance every particle by the class's K fused steps.
+    fn run_epoch(&self, inputs: &EpochInputs) -> Result<EpochOutputs>;
+}
+
+/// Mirror of `python/compile/model.py::SIZE_CLASSES` — the size classes
+/// the native backend instantiates when no artifacts are available.
+pub const NATIVE_SIZE_CLASSES: [(&str, SizeClass); 4] = [
+    ("small", SizeClass { n: 8, m: 16, particles: 8, k_steps: 8 }),
+    ("medium", SizeClass { n: 16, m: 32, particles: 16, k_steps: 8 }),
+    ("large", SizeClass { n: 32, m: 64, particles: 16, k_steps: 8 }),
+    ("xlarge", SizeClass { n: 64, m: 128, particles: 16, k_steps: 8 }),
+];
+
+/// The pure-rust epoch executor: same contract as the PJRT artifact,
+/// no XLA anywhere.
+pub struct NativeEpochBackend {
+    name: String,
+    class: SizeClass,
+    /// Worker threads for the particle fan-out (0 = one per core).
+    threads: usize,
+    /// Continuous relaxation (true = IMMSched; false = the discrete
+    /// coupling of the Fig. 2b ablation).
+    relaxed: bool,
+}
+
+impl NativeEpochBackend {
+    pub fn new(name: impl Into<String>, class: SizeClass) -> Self {
+        Self { name: name.into(), class, threads: 0, relaxed: true }
+    }
+
+    /// Cap the intra-epoch worker count (0 = auto). Results are
+    /// identical for any worker count; this only bounds CPU use.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Select the fitness coupling. Only the native backend can run the
+    /// discrete ablation — the PJRT artifact is lowered relaxed-only.
+    pub fn with_relaxed(mut self, relaxed: bool) -> Self {
+        self.relaxed = relaxed;
+        self
+    }
+
+    /// One backend per default size class, cheapest first.
+    pub fn default_set() -> Vec<NativeEpochBackend> {
+        NATIVE_SIZE_CLASSES
+            .iter()
+            .map(|(name, class)| NativeEpochBackend::new(*name, *class))
+            .collect()
+    }
+}
+
+/// The default backend set for a controller: one native backend per size
+/// class (boxed for the controller's trait-object storage).
+pub fn default_backends() -> Vec<Box<dyn EpochBackend>> {
+    NativeEpochBackend::default_set()
+        .into_iter()
+        .map(|b| Box::new(b) as Box<dyn EpochBackend>)
+        .collect()
+}
+
+impl EpochBackend for NativeEpochBackend {
+    fn class(&self) -> SizeClass {
+        self.class
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn run_epoch(&self, inputs: &EpochInputs) -> Result<EpochOutputs> {
+        inputs.validate(self.class)?;
+        let (p_cnt, n, m) = (self.class.particles, self.class.n, self.class.m);
+        let nm = n * m;
+        let mask = MatF::from_vec(n, m, inputs.mask.clone());
+        let q = MatF::from_vec(n, n, inputs.q.clone());
+        let g = MatF::from_vec(m, m, inputs.g.clone());
+        let s_star = MatF::from_vec(n, m, inputs.s_star.clone());
+        let s_bar = MatF::from_vec(n, m, inputs.s_bar.clone());
+        let params = StepParams {
+            w: inputs.coefs[0],
+            c1: inputs.coefs[1],
+            c2: inputs.coefs[2],
+            c3: inputs.coefs[3],
+            relaxed: self.relaxed,
+        };
+
+        // one independent RNG stream per particle, forked in index order
+        // (the artifact folds its threefry key the same way)
+        let mut master = Rng::new(inputs.seed as u64 ^ 0xAE70_C41E);
+        let mut particles: Vec<EpochParticle> = (0..p_cnt)
+            .map(|i| {
+                let span = i * nm..(i + 1) * nm;
+                EpochParticle {
+                    state: ParticleState {
+                        s: MatF::from_vec(n, m, inputs.s[span.clone()].to_vec()),
+                        v: MatF::from_vec(n, m, inputs.v[span.clone()].to_vec()),
+                        s_local: MatF::from_vec(n, m, inputs.s_local[span].to_vec()),
+                        f_local: inputs.f_local[i],
+                    },
+                    rng: master.fork(i as u64),
+                    fits: Vec::new(),
+                }
+            })
+            .collect();
+
+        let work = p_cnt * self.class.k_steps * nm;
+        run_epoch_particles(
+            &mut particles,
+            &s_star,
+            &s_bar,
+            &mask,
+            &q,
+            &g,
+            self.class.k_steps,
+            &params,
+            cfg!(feature = "parallel")
+                && p_cnt > 1
+                && work >= crate::matcher::pso::PARALLEL_WORK_THRESHOLD,
+            self.threads,
+        );
+
+        let mut out = EpochOutputs {
+            s: Vec::with_capacity(p_cnt * nm),
+            v: Vec::with_capacity(p_cnt * nm),
+            s_local: Vec::with_capacity(p_cnt * nm),
+            f_local: Vec::with_capacity(p_cnt),
+            f_last: Vec::with_capacity(p_cnt),
+        };
+        for p in &particles {
+            out.s.extend_from_slice(p.state.s.as_slice());
+            out.v.extend_from_slice(p.state.v.as_slice());
+            out.s_local.extend_from_slice(p.state.s_local.as_slice());
+            out.f_local.push(p.state.f_local);
+            out.f_last.push(p.fits.last().copied().unwrap_or(f32::NEG_INFINITY));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_backend() -> NativeEpochBackend {
+        let (name, class) = NATIVE_SIZE_CLASSES[0];
+        NativeEpochBackend::new(name, class)
+    }
+
+    fn random_inputs(class: SizeClass, seed: u64) -> EpochInputs {
+        let (p, n, m) = (class.particles, class.n, class.m);
+        let mut rng = Rng::new(seed);
+        let mut inputs = EpochInputs::zeros(class);
+        inputs.mask.iter_mut().for_each(|x| *x = 1.0);
+        for x in inputs.q.iter_mut() {
+            *x = if rng.chance(0.25) { 1.0 } else { 0.0 };
+        }
+        for x in inputs.g.iter_mut() {
+            *x = if rng.chance(0.5) { 1.0 } else { 0.0 };
+        }
+        for part in 0..p {
+            for i in 0..n {
+                let row = &mut inputs.s[(part * n + i) * m..(part * n + i + 1) * m];
+                let mut sum = 0.0;
+                for x in row.iter_mut() {
+                    *x = rng.f32() + 1e-3;
+                    sum += *x;
+                }
+                row.iter_mut().for_each(|x| *x /= sum);
+            }
+        }
+        inputs.s_local.copy_from_slice(&inputs.s);
+        inputs.s_star.copy_from_slice(&inputs.s[..n * m]);
+        inputs.s_bar.copy_from_slice(&inputs.s[..n * m]);
+        inputs.seed = 42;
+        inputs
+    }
+
+    /// The native backend honors the artifact's structural contract:
+    /// stochastic S' rows, finite local bests dominating the final step.
+    #[test]
+    fn native_epoch_preserves_invariants() {
+        let backend = small_backend();
+        let class = backend.class();
+        let (p, n, m) = (class.particles, class.n, class.m);
+        let inputs = random_inputs(class, 1);
+        let out = backend.run_epoch(&inputs).expect("epoch");
+        assert_eq!(out.s.len(), p * n * m);
+        assert_eq!(out.f_local.len(), p);
+        assert_eq!(out.f_last.len(), p);
+        for part in 0..p {
+            for i in 0..n {
+                let sum: f32 = out.s[(part * n + i) * m..(part * n + i + 1) * m].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-3, "row sum {sum}");
+            }
+        }
+        for part in 0..p {
+            assert!(out.f_local[part].is_finite());
+            assert!(out.f_local[part] >= out.f_last[part] - 1e-3);
+        }
+    }
+
+    /// Same inputs → same outputs, regardless of thread interleaving.
+    #[test]
+    fn native_epoch_is_deterministic() {
+        let backend = small_backend();
+        let inputs = random_inputs(backend.class(), 2);
+        let a = backend.run_epoch(&inputs).expect("epoch a");
+        let b = backend.run_epoch(&inputs).expect("epoch b");
+        assert_eq!(a.s, b.s);
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.f_local, b.f_local);
+        assert_eq!(a.f_last, b.f_last);
+    }
+
+    /// The worker-count knob bounds CPU use only — never the numbers.
+    #[test]
+    fn thread_cap_does_not_change_results() {
+        let (name, class) = NATIVE_SIZE_CLASSES[0];
+        let inputs = random_inputs(class, 4);
+        let auto = NativeEpochBackend::new(name, class).run_epoch(&inputs).expect("auto");
+        let pinned = NativeEpochBackend::new(name, class)
+            .with_threads(1)
+            .run_epoch(&inputs)
+            .expect("pinned");
+        assert_eq!(auto.s, pinned.s);
+        assert_eq!(auto.f_local, pinned.f_local);
+    }
+
+    /// Padding rows (zero mask) must stay zero through the epoch.
+    #[test]
+    fn padding_rows_stay_zero() {
+        let backend = small_backend();
+        let class = backend.class();
+        let (p, n, m) = (class.particles, class.n, class.m);
+        let mut inputs = random_inputs(class, 3);
+        // zero the mask + S rows of the bottom half (padding region)
+        for i in n / 2..n {
+            inputs.mask[i * m..(i + 1) * m].iter_mut().for_each(|x| *x = 0.0);
+            for part in 0..p {
+                inputs.s[(part * n + i) * m..(part * n + i + 1) * m]
+                    .iter_mut()
+                    .for_each(|x| *x = 0.0);
+                inputs.s_local[(part * n + i) * m..(part * n + i + 1) * m]
+                    .iter_mut()
+                    .for_each(|x| *x = 0.0);
+            }
+        }
+        let out = backend.run_epoch(&inputs).expect("epoch");
+        for part in 0..p {
+            for i in n / 2..n {
+                let row = &out.s[(part * n + i) * m..(part * n + i + 1) * m];
+                assert!(row.iter().all(|&x| x == 0.0), "padding row leaked mass");
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_shape_is_rejected() {
+        let backend = small_backend();
+        let mut inputs = EpochInputs::zeros(backend.class());
+        inputs.s.pop();
+        assert!(backend.run_epoch(&inputs).is_err());
+    }
+
+    #[test]
+    fn default_set_is_ordered_and_fits() {
+        let set = NativeEpochBackend::default_set();
+        assert_eq!(set.len(), NATIVE_SIZE_CLASSES.len());
+        assert!(set.windows(2).all(|w| w[0].class().cost() <= w[1].class().cost()));
+        assert!(set.iter().any(|b| b.class().fits(4, 8)));
+    }
+}

@@ -1,14 +1,17 @@
-//! Epoch executor: drive the AOT `pso_epoch` executable from rust.
+//! Epoch I/O contract + the PJRT epoch executor.
 //!
-//! One [`EpochRunner`] wraps one compiled size class.  The calling
-//! convention (argument order, shapes, 5-tuple output) is pinned by
-//! `python/compile/model.py::epoch_fn` — change either side only with the
-//! other.
+//! [`EpochInputs`]/[`EpochOutputs`] are the flat interchange types every
+//! [`super::backend::EpochBackend`] speaks; they are XLA-free and always
+//! compiled. [`EpochRunner`] (behind the `pjrt` feature) wraps one
+//! compiled size class.  The calling convention (argument order, shapes,
+//! 5-tuple output) is pinned by `python/compile/model.py::epoch_fn` —
+//! change either side only with the other.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
-use super::artifact::{Artifact, SizeClass};
-use super::client::RuntimeClient;
+use super::artifact::SizeClass;
 
 /// Flat row-major epoch inputs at the class's padded dims.
 ///
@@ -50,7 +53,8 @@ impl EpochInputs {
         }
     }
 
-    fn validate(&self, class: SizeClass) -> Result<()> {
+    /// Check every buffer against the class's padded dims.
+    pub(crate) fn validate(&self, class: SizeClass) -> Result<()> {
         let (p, n, m) = (class.particles, class.n, class.m);
         ensure!(self.s.len() == p * n * m, "s len {} != {}", self.s.len(), p * n * m);
         ensure!(self.v.len() == p * n * m, "v len mismatch");
@@ -76,15 +80,20 @@ pub struct EpochOutputs {
 }
 
 /// A compiled `pso_epoch` executable for one size class.
+#[cfg(feature = "pjrt")]
 pub struct EpochRunner {
     class: SizeClass,
     name: String,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl EpochRunner {
     /// Compile the artifact on the given client.
-    pub fn load(client: &RuntimeClient, artifact: &Artifact) -> Result<Self> {
+    pub fn load(
+        client: &super::client::RuntimeClient,
+        artifact: &super::artifact::Artifact,
+    ) -> Result<Self> {
         let exe = client
             .compile_hlo_text(&artifact.path)
             .with_context(|| format!("loading epoch artifact '{}'", artifact.name))?;
@@ -153,10 +162,29 @@ impl EpochRunner {
     }
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+impl super::backend::EpochBackend for EpochRunner {
+    fn class(&self) -> SizeClass {
+        self.class
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> super::backend::BackendKind {
+        super::backend::BackendKind::Pjrt
+    }
+
+    fn run_epoch(&self, inputs: &EpochInputs) -> Result<EpochOutputs> {
+        self.run(inputs)
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
-    use crate::runtime::ArtifactRegistry;
+    use crate::runtime::{ArtifactRegistry, RuntimeClient};
 
     fn registry() -> Option<ArtifactRegistry> {
         ArtifactRegistry::discover(&ArtifactRegistry::default_dir()).ok()

@@ -1,7 +1,16 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Epoch runtime: execution backends for the fused PSO epoch.
 //!
-//! This is the only place the crate touches the `xla` crate.  The
-//! interchange contract with `python/compile/aot.py`:
+//! The controller speaks the [`EpochBackend`] trait and never cares
+//! which substrate serves an epoch:
+//!
+//! * [`NativeEpochBackend`] — pure-rust epoch at the artifact's padded
+//!   dims (default; always compiled, threads across particles under the
+//!   `parallel` feature);
+//! * [`EpochRunner`] — AOT-compiled HLO-text artifacts through the PJRT
+//!   CPU client (`pjrt` feature; the only place the crate touches the
+//!   `xla` crate).
+//!
+//! The interchange contract with `python/compile/aot.py`:
 //!
 //! * artifacts are HLO **text** (`pso_epoch_<class>.hlo.txt`) — jax ≥ 0.5
 //!   serialized protos carry 64-bit instruction ids the bundled
@@ -12,14 +21,21 @@
 //!   returns a 5-tuple `(S', V', S_local', f_local', f_last)`
 //!   (lowered with `return_tuple=True`).
 //!
-//! [`EpochRunner`] owns one compiled executable per size class and reuses
-//! flat buffers so the interrupt hot path performs no allocation beyond
-//! what PJRT itself requires.
+//! [`ArtifactRegistry`] (XLA-free) discovers artifacts either way, so
+//! `immsched info` reports them even in a default build.
 
 mod artifact;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 mod client;
 mod matcher_exec;
 
 pub use artifact::{Artifact, ArtifactRegistry, SizeClass};
+pub use backend::{
+    default_backends, BackendKind, EpochBackend, NativeEpochBackend, NATIVE_SIZE_CLASSES,
+};
+#[cfg(feature = "pjrt")]
 pub use client::RuntimeClient;
-pub use matcher_exec::{EpochInputs, EpochOutputs, EpochRunner};
+pub use matcher_exec::{EpochInputs, EpochOutputs};
+#[cfg(feature = "pjrt")]
+pub use matcher_exec::EpochRunner;

@@ -1,0 +1,112 @@
+//! Minimal leveled stderr logger — the offline substitute for the `log`
+//! facade (the crate's only external dependencies are `anyhow` and
+//! `once_cell`, DESIGN.md §4 substitution table).
+//!
+//! Library code emits through the [`crate::log_error!`],
+//! [`crate::log_warn!`], [`crate::log_info!`] and [`crate::log_debug!`]
+//! macros; binaries pick the verbosity with [`set_max_level`]. The
+//! default level is [`Level::Warn`] so degradation messages (missing
+//! artifacts, fallback paths) stay visible without any setup.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Message severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// 0 = everything off; otherwise the numeric value of the max [`Level`].
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Allow messages up to and including `level`.
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Silence all logging (tests that exercise noisy failure paths).
+pub fn disable() {
+    MAX_LEVEL.store(0, Ordering::Relaxed);
+}
+
+/// Whether a message at `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr (use the macros instead of calling this
+/// directly).
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.tag(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_matches_severity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn filtering_follows_max_level() {
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        disable();
+        assert!(!enabled(Level::Error));
+        // restore the default for other tests in this process
+        set_max_level(Level::Warn);
+    }
+}

@@ -5,6 +5,7 @@
 //! `ndarray` or `prettytable` lives here — the build is fully offline and
 //! those crates are unavailable (DESIGN.md §4, substitution table).
 
+pub mod logging;
 pub mod matrix;
 pub mod rng;
 pub mod stats;

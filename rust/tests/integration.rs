@@ -35,29 +35,25 @@ fn model_to_engine_mapping_pipeline() {
     assert_eq!(dedup.len(), engines.len(), "engine collision in mapping");
 }
 
-/// PJRT path and native path agree on feasibility for the same problem.
+/// The epoch-backend path (native by default, PJRT when compiled in)
+/// and the quantized fallback agree on feasibility for the same problem.
 #[test]
-fn pjrt_and_native_paths_agree() {
+fn epoch_and_fallback_paths_agree() {
     let qd = immsched::graph::gen_chain(5, immsched::graph::NodeKind::Compute);
     let gd = immsched::graph::gen_chain(10, immsched::graph::NodeKind::Universal);
     let mask = build_mask(&qd, &gd);
     let (q, g) = (qd.adjacency(), gd.adjacency());
 
-    let mut native = GlobalController::native_only(PsoConfig { seed: 3, ..Default::default() });
-    let native_out = native.find_mapping(&mask, &q, &g);
-    assert!(native_out.matched());
+    let mut fallback = GlobalController::native_only(PsoConfig { seed: 3, ..Default::default() });
+    let fallback_out = fallback.find_mapping(&mask, &q, &g);
+    assert!(fallback_out.matched());
 
-    let mut full = match GlobalController::new(PsoConfig { seed: 3, ..Default::default() }) {
-        Ok(c) => c,
-        Err(_) => return,
-    };
-    if !full.has_pjrt() {
-        eprintln!("skipping PJRT half: artifacts not built");
-        return;
-    }
-    let pjrt_out = full.find_mapping(&mask, &q, &g);
-    assert!(pjrt_out.matched(), "PJRT path failed where native succeeded");
-    for mp in &pjrt_out.mappings {
+    let mut full = GlobalController::new(PsoConfig { seed: 3, ..Default::default() })
+        .expect("controller construction never fails in a default build");
+    assert!(full.has_epoch_backend(), "default build must install native epoch backends");
+    let epoch_out = full.find_mapping(&mask, &q, &g);
+    assert!(epoch_out.matched(), "epoch path failed where the fallback succeeded");
+    for mp in &epoch_out.mappings {
         assert!(mapping_is_feasible(mp, &q, &g));
     }
 }

@@ -219,6 +219,106 @@ fn prop_sim_conservation() {
     });
 }
 
+/// Forked RNG streams are order-independent: the stream a particle
+/// receives depends only on the fork order (fixed at epoch setup), never
+/// on the order the streams are *consumed* in — the property that makes
+/// the threaded epoch bit-identical to the serial one.
+#[test]
+fn prop_forked_streams_order_independent() {
+    use immsched::util::Rng;
+    property_res("forked streams order independent", 40, |g| {
+        let seed = g.rng().next_u64();
+        let count = g.usize_in(2..9);
+        let draws = g.usize_in(1..64);
+        let fork_all = |seed: u64| -> Vec<Rng> {
+            let mut master = Rng::new(seed);
+            (0..count).map(|i| master.fork(i as u64)).collect()
+        };
+        // consume streams forward
+        let mut fwd = fork_all(seed);
+        let forward: Vec<Vec<u64>> = fwd
+            .iter_mut()
+            .map(|r| (0..draws).map(|_| r.next_u64()).collect())
+            .collect();
+        // consume the same streams in reverse order
+        let mut rev = fork_all(seed);
+        let mut backward: Vec<Vec<u64>> = vec![Vec::new(); count];
+        for i in (0..count).rev() {
+            backward[i] = (0..draws).map(|_| rev[i].next_u64()).collect();
+        }
+        // and interleaved round-robin
+        let mut inter = fork_all(seed);
+        let mut robin: Vec<Vec<u64>> = vec![Vec::new(); count];
+        for _ in 0..draws {
+            for (i, r) in inter.iter_mut().enumerate() {
+                robin[i].push(r.next_u64());
+            }
+        }
+        if forward != backward || forward != robin {
+            return Err("forked stream output depends on consumption order".into());
+        }
+        Ok(())
+    });
+}
+
+/// Determinism under parallelism: the threaded epoch produces the same
+/// mappings and traces as the serial per-particle loop on arbitrary
+/// planted instances.
+#[test]
+fn prop_threaded_pso_matches_serial() {
+    property_res("threaded pso == serial pso", 10, |g| {
+        let n = g.usize_in(3..7);
+        let m = n + g.usize_in(3..10);
+        let (q, gg, _) = plant_embedding(n, m, 0.4, 0.2, g.rng());
+        let mask = MatF::full(n, m, 1.0);
+        let cfg = PsoConfig {
+            seed: g.rng().next_u64(),
+            epochs: 2,
+            steps: 6,
+            particles: 8,
+            early_exit: false,
+            ..Default::default()
+        };
+        let matcher = PsoMatcher::new(cfg);
+        let a = matcher.run_serial(&mask, &q, &gg);
+        let b = matcher.run_threaded(&mask, &q, &gg);
+        if a.mappings != b.mappings {
+            return Err("mappings diverged between serial and threaded epochs".into());
+        }
+        if a.fitness_trace != b.fitness_trace || a.mean_fitness_trace != b.mean_fitness_trace {
+            return Err("fitness traces diverged between serial and threaded epochs".into());
+        }
+        Ok(())
+    });
+}
+
+/// Degenerate PSO configs (no particles / steps / epochs) return empty
+/// outcomes instead of panicking.
+#[test]
+fn prop_degenerate_pso_configs_are_safe() {
+    property_res("degenerate pso configs safe", 12, |g| {
+        let n = g.usize_in(2..5);
+        let m = n + g.usize_in(1..6);
+        let (q, gg, _) = plant_embedding(n, m, 0.4, 0.2, g.rng());
+        let mask = MatF::full(n, m, 1.0);
+        let zeroed = g.usize_in(0..3);
+        let cfg = PsoConfig {
+            particles: if zeroed == 0 { 0 } else { 4 },
+            epochs: if zeroed == 1 { 0 } else { 2 },
+            steps: if zeroed == 2 { 0 } else { 2 },
+            seed: g.rng().next_u64(),
+            ..Default::default()
+        };
+        let out = PsoMatcher::new(cfg).run(&mask, &q, &gg);
+        if out.matched() || !out.fitness_trace.is_empty() {
+            return Err(format!(
+                "degenerate config (zeroed field {zeroed}) produced non-empty outcome"
+            ));
+        }
+        Ok(())
+    });
+}
+
 /// Quantized and float matchers agree on feasibility for easy planted
 /// instances (quantization must not break the search).
 #[test]
