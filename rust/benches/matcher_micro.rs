@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
     let mut t = Table::new("native epoch backend (per size class)").header(&[
         "class", "n", "m", "particles", "K", "epoch (warm, mean of 10)",
     ]);
-    for backend in default_backends() {
+    for mut backend in default_backends() {
         let class = backend.class();
         let mut inputs = EpochInputs::zeros(class);
         inputs.mask.iter_mut().for_each(|x| *x = 1.0);

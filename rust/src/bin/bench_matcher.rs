@@ -1,0 +1,388 @@
+//! `bench_matcher` — the tracked matcher-perf pipeline.
+//!
+//! Measures, per size class (the four native epoch classes plus a
+//! `huge` class the dense path cannot serve comfortably):
+//!
+//! * **fitness sparse vs dense** — the sparse CSR [`FitnessKernel`]
+//!   against the dense `edge_fitness` oracle on a realistic scenario
+//!   (layered DNN-tile DAG pair + compatibility mask), with an
+//!   agreement check on every sample;
+//! * **native epoch latency** — steady-state `run_epoch_into` against a
+//!   reused `EpochOutputs` (the interrupt hot path);
+//! * **PSO end-to-end** — serial vs threaded episode on the
+//!   `matcher_micro` planted-embedding scenario, asserting bit-identical
+//!   traces.
+//!
+//! Results are printed as tables and written to `BENCH_matcher.json` at
+//! the repo root — the perf trajectory file tracked from PR 2 onward.
+//! `--smoke` runs tiny sizes/reps (CI keeps the binary and the JSON
+//! schema from rotting); `--out <path>` overrides the output location.
+
+use std::time::Instant;
+
+use immsched::graph::{gen_dag_layered, Dag, NodeKind};
+use immsched::matcher::{
+    build_bitmask, edge_fitness, ullmann::plant_embedding, FitnessKernel, PsoConfig, PsoMatcher,
+};
+use immsched::runtime::{
+    EpochBackend, EpochInputs, EpochOutputs, NativeEpochBackend, SizeClass, NATIVE_SIZE_CLASSES,
+};
+use immsched::util::table::{fmt_time, Table};
+use immsched::util::{MatF, Rng};
+
+struct ClassSpec {
+    name: &'static str,
+    n: usize,
+    m: usize,
+    particles: usize,
+    k_steps: usize,
+    /// PSO end-to-end columns only run where the dense-era matcher was
+    /// usable (the standard size classes).
+    run_pso: bool,
+}
+
+/// The four native epoch classes (derived from the runtime constant so
+/// the bench can never drift from the shipped hot path) plus a `huge`
+/// class beyond what the dense-era matcher served.
+fn class_specs() -> Vec<ClassSpec> {
+    let mut specs: Vec<ClassSpec> = NATIVE_SIZE_CLASSES
+        .iter()
+        .map(|&(name, c)| ClassSpec {
+            name,
+            n: c.n,
+            m: c.m,
+            particles: c.particles,
+            k_steps: c.k_steps,
+            run_pso: true,
+        })
+        .collect();
+    specs.push(ClassSpec { name: "huge", n: 128, m: 512, particles: 16, k_steps: 8, run_pso: false });
+    specs
+}
+
+/// Per-class measurements (nanoseconds unless noted).
+struct ClassResult {
+    name: &'static str,
+    n: usize,
+    m: usize,
+    q_edges: usize,
+    g_edges: usize,
+    mask_density: f64,
+    fitness_dense_ns: f64,
+    fitness_sparse_ns: f64,
+    fitness_speedup: f64,
+    epoch_native_ns: f64,
+    pso_serial_ns: Option<f64>,
+    pso_threaded_ns: Option<f64>,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_matcher.json").into());
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("[bench_matcher] smoke={smoke} worker_threads={threads} out={out_path}");
+
+    let classes = class_specs();
+    let class_count = if smoke { 2 } else { classes.len() };
+    let mut results: Vec<ClassResult> = Vec::new();
+    let mut checksum = 0.0f64; // defeats dead-code elimination across timed loops
+
+    for spec in classes.iter().take(class_count) {
+        let r = bench_class(spec, smoke, &mut checksum)?;
+        results.push(r);
+    }
+
+    render_tables(&results);
+    println!("[bench_matcher] checksum {checksum:.3}");
+
+    let largest = results.last().expect("at least one class");
+    println!(
+        "[bench_matcher] sparse-vs-dense fitness speedup on largest class ({}): {:.2}x",
+        largest.name, largest.fitness_speedup
+    );
+    if !smoke {
+        assert!(
+            largest.fitness_speedup >= 5.0,
+            "sparse fitness kernel below the 5x bar on {}: {:.2}x",
+            largest.name,
+            largest.fitness_speedup
+        );
+    }
+
+    let json = render_json(&results, smoke, threads);
+    std::fs::write(&out_path, json)?;
+    println!("[bench_matcher] wrote {out_path}");
+    Ok(())
+}
+
+/// Layered DNN-tile-shaped DAG with mixed computation kinds: layer
+/// widths ~`width`, forward fanout ≤ `fanout` (the shape `workload::
+/// tiling` emits for staged models).
+fn gen_tile_dag(nodes: usize, width: usize, fanout: usize, rng: &mut Rng, target: bool) -> Dag {
+    let mut widths = Vec::new();
+    let mut left = nodes;
+    while left > 0 {
+        let w = width.min(left).max(1);
+        widths.push(w);
+        left -= w;
+    }
+    let kind0 = if target { NodeKind::Universal } else { NodeKind::Compute };
+    let mut dag = gen_dag_layered(&widths, fanout, rng, kind0);
+    // computation-type mix drives the kind filter of the mask
+    const QUERY_KINDS: [NodeKind; 4] =
+        [NodeKind::Compute, NodeKind::Compute, NodeKind::Eltwise, NodeKind::Compare];
+    const TARGET_KINDS: [NodeKind; 10] = [
+        NodeKind::Universal,
+        NodeKind::Compute,
+        NodeKind::Compare,
+        NodeKind::Universal,
+        NodeKind::Eltwise,
+        NodeKind::Compute,
+        NodeKind::Move,
+        NodeKind::Universal,
+        NodeKind::Compare,
+        NodeKind::Eltwise,
+    ];
+    for u in 0..dag.len() {
+        if target {
+            dag.set_kind(u, TARGET_KINDS[u % TARGET_KINDS.len()]);
+        } else {
+            dag.set_kind(u, QUERY_KINDS[u % QUERY_KINDS.len()]);
+        }
+    }
+    dag
+}
+
+fn bench_class(spec: &ClassSpec, smoke: bool, checksum: &mut f64) -> anyhow::Result<ClassResult> {
+    let (n, m) = (spec.n, spec.m);
+    let mut rng = Rng::new(0xBE7C4 ^ (n as u64) << 16 ^ m as u64);
+
+    // realistic fitness scenario: tile DAG pair + compatibility mask
+    let qd = gen_tile_dag(n, 4.max(n / 8), 2, &mut rng, false);
+    let gd = gen_tile_dag(m, 8.max(m / 12), 3, &mut rng, true);
+    let bits = build_bitmask(&qd, &gd);
+    let mask = bits.to_matf();
+    let (q, g) = (qd.adjacency(), gd.adjacency());
+
+    // a few masked row-stochastic S samples, rotated through the loops
+    let samples = 4usize;
+    let s_set: Vec<MatF> = (0..samples)
+        .map(|_| {
+            let mut s = MatF::from_fn(n, m, |_, _| rng.f32() + 1e-3);
+            s.hadamard_assign(&mask);
+            s.row_normalize();
+            s
+        })
+        .collect();
+
+    let kernel = FitnessKernel::new(&q, &g);
+    let mut scratch = kernel.scratch();
+
+    // agreement check on every sample before timing anything
+    for s in &s_set {
+        let dense = edge_fitness(s, &q, &g);
+        let sparse = kernel.eval(s.as_slice(), &mut scratch);
+        let tol = 2e-3f32 * (1.0 + dense.abs());
+        assert!(
+            (dense - sparse).abs() <= tol,
+            "{}: sparse {sparse} disagrees with dense {dense}",
+            spec.name
+        );
+    }
+
+    let reps = if smoke { 3 } else { (200_000_000 / (n * m * m).max(1)).clamp(10, 20_000) };
+    let t_dense = time_per_rep(reps, |i| {
+        *checksum += edge_fitness(&s_set[i % samples], &q, &g) as f64;
+    });
+    let t_sparse = time_per_rep(reps, |i| {
+        *checksum += kernel.eval(s_set[i % samples].as_slice(), &mut scratch) as f64;
+    });
+
+    // native epoch latency (steady state: reused outputs, same backend)
+    let class =
+        SizeClass { n, m, particles: spec.particles, k_steps: spec.k_steps };
+    let mut backend = NativeEpochBackend::new(spec.name, class);
+    let mut inputs = EpochInputs::zeros(class);
+    pad_mask_q_g(&mut inputs, &mask, &q, &g);
+    init_particles(&mut inputs, class, &mut rng);
+    let mut epoch_out = EpochOutputs::zeros(class);
+    backend.run_epoch_into(&inputs, &mut epoch_out)?; // warm-up
+    let epoch_reps =
+        if smoke { 2 } else { (200_000_000 / (spec.particles * spec.k_steps * n * m).max(1)).clamp(3, 500) };
+    let t_epoch = time_per_rep(epoch_reps, |i| {
+        inputs.seed = i as u32;
+        backend.run_epoch_into(&inputs, &mut epoch_out).expect("epoch");
+    });
+
+    // PSO end-to-end on the matcher_micro planted scenario
+    let (mut t_serial, mut t_threaded) = (None, None);
+    if spec.run_pso {
+        let (pq, pg, _) = plant_embedding(n, m, 0.3, 0.1, &mut rng);
+        let full = MatF::full(n, m, 1.0);
+        let cfg = PsoConfig {
+            seed: 11,
+            epochs: 2,
+            particles: 16,
+            early_exit: true,
+            ..Default::default()
+        };
+        let pso_reps = if smoke { 1 } else { 3 };
+        let matcher = PsoMatcher::new(cfg);
+        let serial_out = matcher.run_serial(&full, &pq, &pg);
+        let threaded_out = matcher.run_threaded(&full, &pq, &pg);
+        // the threaded epoch must be a pure speedup, never a divergence
+        assert_eq!(serial_out.fitness_trace, threaded_out.fitness_trace, "{}", spec.name);
+        assert_eq!(serial_out.mappings, threaded_out.mappings, "{}", spec.name);
+        t_serial = Some(time_per_rep(pso_reps, |_| {
+            *checksum += matcher.run_serial(&full, &pq, &pg).best_fitness as f64;
+        }));
+        t_threaded = Some(time_per_rep(pso_reps, |_| {
+            *checksum += matcher.run_threaded(&full, &pq, &pg).best_fitness as f64;
+        }));
+    }
+
+    Ok(ClassResult {
+        name: spec.name,
+        n,
+        m,
+        q_edges: qd.edge_count(),
+        g_edges: gd.edge_count(),
+        mask_density: bits.density(),
+        fitness_dense_ns: t_dense * 1e9,
+        fitness_sparse_ns: t_sparse * 1e9,
+        fitness_speedup: t_dense / t_sparse.max(1e-12),
+        epoch_native_ns: t_epoch * 1e9,
+        pso_serial_ns: t_serial.map(|t| t * 1e9),
+        pso_threaded_ns: t_threaded.map(|t| t * 1e9),
+    })
+}
+
+/// Seconds per repetition of `f` over `reps` calls.
+fn time_per_rep(reps: usize, mut f: impl FnMut(usize)) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..reps {
+        f(i);
+    }
+    t0.elapsed().as_secs_f64() / reps.max(1) as f64
+}
+
+/// Copy an (n×m mask, n×n Q, m×m G) problem into class-padded inputs
+/// (dims match exactly here; kept general for padded classes).
+fn pad_mask_q_g(inputs: &mut EpochInputs, mask: &MatF, q: &MatF, g: &MatF) {
+    inputs.mask.copy_from_slice(mask.as_slice());
+    inputs.q.copy_from_slice(q.as_slice());
+    inputs.g.copy_from_slice(g.as_slice());
+}
+
+/// Mask-respecting row-stochastic particle init for the epoch inputs.
+fn init_particles(inputs: &mut EpochInputs, class: SizeClass, rng: &mut Rng) {
+    let (p, n, m) = (class.particles, class.n, class.m);
+    for part in 0..p {
+        for i in 0..n {
+            let row = &mut inputs.s[(part * n + i) * m..(part * n + i + 1) * m];
+            let mut sum = 0.0f32;
+            for (x, &mk) in row.iter_mut().zip(&inputs.mask[i * m..(i + 1) * m]) {
+                *x = (rng.f32() + 1e-3) * mk;
+                sum += *x;
+            }
+            if sum > 0.0 {
+                row.iter_mut().for_each(|x| *x /= sum);
+            }
+        }
+    }
+    inputs.s_local.copy_from_slice(&inputs.s);
+    inputs.s_star.copy_from_slice(&inputs.s[..n * m]);
+    inputs.s_bar.copy_from_slice(&inputs.s[..n * m]);
+    inputs.seed = 42;
+}
+
+fn render_tables(results: &[ClassResult]) {
+    let mut t = Table::new("sparse vs dense fitness kernel (per evaluation)").header(&[
+        "class",
+        "n",
+        "m",
+        "|E_Q|",
+        "|E_G|",
+        "mask density",
+        "dense",
+        "sparse",
+        "speedup",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.name.to_string(),
+            r.n.to_string(),
+            r.m.to_string(),
+            r.q_edges.to_string(),
+            r.g_edges.to_string(),
+            format!("{:.3}", r.mask_density),
+            fmt_time(r.fitness_dense_ns / 1e9),
+            fmt_time(r.fitness_sparse_ns / 1e9),
+            format!("{:.2}x", r.fitness_speedup),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let mut t = Table::new("hot-path latency (steady state)").header(&[
+        "class",
+        "epoch (native)",
+        "pso serial",
+        "pso threaded",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.name.to_string(),
+            fmt_time(r.epoch_native_ns / 1e9),
+            r.pso_serial_ns.map_or("-".into(), |x| fmt_time(x / 1e9)),
+            r.pso_threaded_ns.map_or("-".into(), |x| fmt_time(x / 1e9)),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn render_json(results: &[ClassResult], smoke: bool, threads: usize) -> String {
+    let opt = |v: Option<f64>| v.map_or("null".to_string(), |x| format!("{x:.1}"));
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"immsched.bench_matcher/v1\",\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str(&format!("  \"worker_threads\": {threads},\n"));
+    s.push_str("  \"classes\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"class\": \"{}\",\n", r.name));
+        s.push_str(&format!("      \"n\": {}, \"m\": {},\n", r.n, r.m));
+        s.push_str(&format!(
+            "      \"q_edges\": {}, \"g_edges\": {}, \"mask_density\": {:.4},\n",
+            r.q_edges, r.g_edges, r.mask_density
+        ));
+        s.push_str(&format!(
+            "      \"fitness_dense_ns\": {:.1}, \"fitness_sparse_ns\": {:.1}, \
+             \"fitness_speedup\": {:.2},\n",
+            r.fitness_dense_ns, r.fitness_sparse_ns, r.fitness_speedup
+        ));
+        s.push_str(&format!("      \"epoch_native_ns\": {:.1},\n", r.epoch_native_ns));
+        s.push_str(&format!(
+            "      \"pso_serial_ns\": {}, \"pso_threaded_ns\": {}\n",
+            opt(r.pso_serial_ns),
+            opt(r.pso_threaded_ns)
+        ));
+        s.push_str(if i + 1 == results.len() { "    }\n" } else { "    },\n" });
+    }
+    s.push_str("  ],\n");
+    let largest = results.last().expect("nonempty");
+    s.push_str(&format!("  \"largest_class\": \"{}\",\n", largest.name));
+    s.push_str(&format!(
+        "  \"largest_class_fitness_speedup\": {:.2}\n",
+        largest.fitness_speedup
+    ));
+    s.push_str("}\n");
+    s
+}

@@ -6,13 +6,21 @@
 //! with the `pjrt` feature and built artifacts they are PJRT executables.
 //! Problems larger than every size class degrade to the quantized
 //! native matcher ([`MatchPath::NativeFallback`]).
+//!
+//! Interrupts whose compatibility mask has an empty candidate row are
+//! rejected before particle init (§3.2): no total mapping can exist,
+//! so neither the epoch path nor the fallback matcher could ever
+//! succeed.
 
 use anyhow::Result;
 
+use crate::graph::Csr;
+use crate::matcher::consensus::{elite_consensus_flat, rank_fitness_desc};
 use crate::matcher::{
-    elite_consensus, mapping_is_feasible, project_greedy, Mapping, PsoConfig, QuantizedMatcher,
+    has_empty_row, mapping_is_feasible_csr, project_greedy_flat, Mapping, PsoConfig,
+    QuantizedMatcher,
 };
-use crate::runtime::{BackendKind, EpochBackend, EpochInputs, SizeClass};
+use crate::runtime::{BackendKind, EpochBackend, EpochInputs, EpochOutputs, SizeClass};
 use crate::util::{MatF, Rng};
 
 /// Which execution path served a match request.
@@ -27,6 +35,9 @@ pub enum MatchPath {
     /// Native quantized matcher (fallback: no backend fits the problem,
     /// or an epoch failed).
     NativeFallback,
+    /// Rejected before any search: a query vertex had an empty
+    /// candidate row in the compatibility mask.
+    Rejected,
 }
 
 /// Result of one interrupt's subgraph-matching episode.
@@ -53,6 +64,8 @@ pub struct ControllerStats {
     pub requests: u64,
     pub matched: u64,
     pub fallbacks: u64,
+    /// Interrupts rejected by the empty-candidate-row witness.
+    pub rejected: u64,
     pub epochs_total: u64,
 }
 
@@ -134,6 +147,25 @@ impl GlobalController {
     pub fn find_mapping(&mut self, mask: &MatF, q: &MatF, g: &MatF) -> MatchOutcome {
         self.stats.requests += 1;
         let started = std::time::Instant::now();
+
+        // §3.2 fast reject, before particle init: an empty candidate
+        // row means no total mapping exists. The mask arrives unpacked
+        // (f32, the PSO/artifact interchange form), so the short-circuit
+        // dense scan is the allocation-free check here; callers that
+        // already hold a packed mask get the word-wise
+        // `BitMask::has_empty_row` — the two witnesses are
+        // property-tested equal (`prop_bitmask_matches_dense_mask`).
+        if has_empty_row(mask) {
+            self.stats.rejected += 1;
+            return MatchOutcome {
+                mappings: Vec::new(),
+                best_fitness: f32::NEG_INFINITY,
+                epochs_run: 0,
+                path: MatchPath::Rejected,
+                host_seconds: started.elapsed().as_secs_f64(),
+            };
+        }
+
         let (n, m) = (q.rows(), g.rows());
         let backend_idx = self.backends.iter().position(|b| b.class().fits(n, m));
 
@@ -164,7 +196,9 @@ impl GlobalController {
 
     /// T-epoch outer loop over one epoch backend: the paper's consensus-
     /// guided exploration, with projection + verification on the
-    /// controller.
+    /// controller. Episode-lifetime buffers (inputs, outputs, candidate
+    /// staging, S*/S̄) are allocated once up front and reused every
+    /// epoch.
     fn run_backend(
         &mut self,
         backend_idx: usize,
@@ -173,7 +207,7 @@ impl GlobalController {
         g: &MatF,
     ) -> Result<MatchOutcome> {
         let cfg = self.config;
-        let backend = &self.backends[backend_idx];
+        let backend = &mut self.backends[backend_idx];
         let class = backend.class();
         let (n, m) = (q.rows(), g.rows());
         let (pn, pm, parts) = (class.n, class.m, class.particles);
@@ -186,12 +220,18 @@ impl GlobalController {
         pad_into(&mut inputs.q, q, pn, pn);
         pad_into(&mut inputs.g, g, pm, pm);
 
+        // query edge list for the per-candidate verification
+        let q_csr = Csr::from_dense(q);
+
         let mut best_fitness = f32::NEG_INFINITY;
         let mut mappings: Vec<Mapping> = Vec::new();
         let mut s_star: Vec<f32> = vec![0.0; pn * pm];
         let mut s_bar: Vec<f32> = vec![0.0; pn * pm];
         let mut have_star = false;
         let mut epochs_run = 0;
+        let mut epoch_out = EpochOutputs::zeros(class);
+        // unpadded candidate staging (top-left n×m of a padded particle)
+        let mut cand = vec![0.0f32; n * m];
 
         for epoch in 0..cfg.epochs {
             epochs_run += 1;
@@ -217,30 +257,36 @@ impl GlobalController {
             }
             inputs.seed = (cfg.seed as u32).wrapping_add(epoch as u32 * 7919);
 
-            let out = backend.run_epoch(&inputs)?;
+            backend.run_epoch_into(&inputs, &mut epoch_out)?;
 
             // controller-side: rank particles, update S*, project+verify
-            let order = crate::matcher::consensus::rank_fitness_desc(&out.f_local);
+            let order = rank_fitness_desc(&epoch_out.f_local);
             let best = order[0];
-            if out.f_local[best] > best_fitness {
-                best_fitness = out.f_local[best];
-                s_star.copy_from_slice(&out.s_local[best * pn * pm..(best + 1) * pn * pm]);
+            if epoch_out.f_local[best] > best_fitness {
+                best_fitness = epoch_out.f_local[best];
+                s_star.copy_from_slice(&epoch_out.s_local[best * pn * pm..(best + 1) * pn * pm]);
                 have_star = true;
             }
 
-            let mut elites: Vec<MatF> = Vec::new();
-            let mut elite_fit: Vec<f32> = Vec::new();
-            for &p in order.iter().take(cfg.elite.max(1)) {
-                elites.push(unpad(&out.s_local[p * pn * pm..(p + 1) * pn * pm], pn, pm, pn, pm));
-                elite_fit.push(out.f_local[p]);
-            }
-            let consensus = elite_consensus(&elites, &elite_fit, cfg.elite);
-            s_bar.copy_from_slice(consensus.as_slice());
+            // S̄ from the stacked local-best snapshots, clone-free
+            elite_consensus_flat(
+                &epoch_out.s_local,
+                parts,
+                pn,
+                pm,
+                &epoch_out.f_local,
+                cfg.elite,
+                &mut s_bar,
+            );
 
             for p in 0..parts {
-                let s_full = unpad(&out.s[p * pn * pm..(p + 1) * pn * pm], pn, pm, n, m);
-                let candidate = project_greedy(&s_full, mask);
-                if mapping_is_feasible(&candidate, q, g) && !mappings.contains(&candidate) {
+                let flat = &epoch_out.s[p * pn * pm..(p + 1) * pn * pm];
+                for i in 0..n {
+                    cand[i * m..(i + 1) * m].copy_from_slice(&flat[i * pm..i * pm + m]);
+                }
+                let candidate = project_greedy_flat(&cand, mask.as_slice(), n, m);
+                if mapping_is_feasible_csr(&candidate, &q_csr, g) && !mappings.contains(&candidate)
+                {
                     mappings.push(candidate);
                 }
             }
@@ -291,6 +337,7 @@ fn pad_into(dst: &mut [f32], src: &MatF, pr: usize, pc: usize) {
 }
 
 /// Extract the top-left (r×c) of a padded flat (pr×pc) buffer.
+#[cfg(test)]
 fn unpad(flat: &[f32], pr: usize, pc: usize, r: usize, c: usize) -> MatF {
     assert!(r <= pr && c <= pc);
     let mut out = MatF::zeros(r, c);
@@ -325,7 +372,7 @@ fn init_padded_particle(flat: &mut [f32], mask: &MatF, pn: usize, pm: usize, rng
 mod tests {
     use super::*;
     use crate::graph::{gen_chain, NodeKind};
-    use crate::matcher::build_mask;
+    use crate::matcher::{build_mask, mapping_is_feasible};
 
     fn chain_problem(n: usize, m: usize) -> (MatF, MatF, MatF) {
         let qd = gen_chain(n, NodeKind::Compute);
@@ -375,6 +422,27 @@ mod tests {
         assert_eq!(a.mappings, b.mappings);
         assert_eq!(a.best_fitness, b.best_fitness);
         assert_eq!(a.epochs_run, b.epochs_run);
+    }
+
+    /// An interrupt whose mask has an empty candidate row is rejected
+    /// before any epoch runs — no backend work, no fallback work.
+    #[test]
+    fn infeasible_mask_is_rejected_before_search() {
+        let (mut mask, q, g) = chain_problem(4, 8);
+        for j in 0..mask.cols() {
+            mask[(2, j)] = 0.0; // query vertex 2 has no candidates
+        }
+        let mut ctl =
+            GlobalController::new(PsoConfig { seed: 9, ..Default::default() }).expect("controller");
+        let out = ctl.find_mapping(&mask, &q, &g);
+        assert_eq!(out.path, MatchPath::Rejected);
+        assert!(!out.matched());
+        assert_eq!(out.epochs_run, 0);
+        assert_eq!(ctl.stats().rejected, 1);
+        assert_eq!(ctl.stats().epochs_total, 0);
+        // the fallback-only controller rejects identically
+        let mut fallback = GlobalController::native_only(PsoConfig::default());
+        assert_eq!(fallback.find_mapping(&mask, &q, &g).path, MatchPath::Rejected);
     }
 
     #[cfg(feature = "pjrt")]

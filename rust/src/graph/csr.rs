@@ -1,0 +1,163 @@
+//! Compressed-sparse-row (CSR) edge-list view of a DAG adjacency.
+//!
+//! The matcher hot path iterates *edges*, never n×m index grids: the
+//! sparse fitness kernel and the feasibility verifier both walk a [`Csr`]
+//! built once per episode. [`Csr::rebuild_from_flat`] re-points an
+//! existing view at a new adjacency while reusing its allocations, which
+//! is what keeps the epoch backend's steady state allocation-free.
+
+use super::dag::Dag;
+use crate::util::MatF;
+
+/// CSR adjacency over `nodes` vertices: `col[row_ptr[u]..row_ptr[u+1]]`
+/// holds u's successors in ascending order. Indices are `u32` — graphs
+/// here are at most a few thousand vertices, and the narrow type halves
+/// the hot loop's cache traffic.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Csr {
+    nodes: usize,
+    row_ptr: Vec<u32>,
+    col: Vec<u32>,
+}
+
+impl Csr {
+    /// Empty view with room for `nodes` vertices and `edges` edges, so a
+    /// later [`Self::rebuild_from_flat`] within those bounds never
+    /// allocates.
+    pub fn with_capacity(nodes: usize, edges: usize) -> Self {
+        let mut row_ptr = Vec::with_capacity(nodes + 1);
+        row_ptr.push(0);
+        Self { nodes: 0, row_ptr, col: Vec::with_capacity(edges) }
+    }
+
+    /// CSR view of a DAG's successor lists.
+    pub fn from_dag(d: &Dag) -> Self {
+        let mut csr = Csr::with_capacity(d.len(), d.edge_count());
+        csr.nodes = d.len();
+        for u in 0..d.len() {
+            for &v in d.successors(u) {
+                csr.col.push(v as u32);
+            }
+            csr.row_ptr.push(csr.col.len() as u32);
+        }
+        csr
+    }
+
+    /// CSR view of a dense square {0,1} adjacency matrix.
+    pub fn from_dense(a: &MatF) -> Self {
+        assert_eq!(a.rows(), a.cols(), "adjacency must be square");
+        let mut csr = Csr::with_capacity(a.rows(), 0);
+        csr.rebuild_from_flat(a.as_slice(), a.rows());
+        csr
+    }
+
+    /// Re-point the view at a flat row-major `nodes`×`nodes` {0,1}
+    /// adjacency, reusing the existing buffers (no allocation when the
+    /// capacity from [`Self::with_capacity`] covers the new graph).
+    pub fn rebuild_from_flat(&mut self, adj: &[f32], nodes: usize) {
+        assert_eq!(adj.len(), nodes * nodes, "square adjacency expected");
+        self.nodes = nodes;
+        self.row_ptr.clear();
+        self.col.clear();
+        self.row_ptr.push(0);
+        for u in 0..nodes {
+            let row = &adj[u * nodes..(u + 1) * nodes];
+            for (v, &x) in row.iter().enumerate() {
+                if x != 0.0 {
+                    self.col.push(v as u32);
+                }
+            }
+            self.row_ptr.push(self.col.len() as u32);
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Successors of `u` (ascending vertex ids).
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.col[self.row_ptr[u] as usize..self.row_ptr[u + 1] as usize]
+    }
+
+    /// Iterate every edge `(u, v)` in row-major order.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.nodes)
+            .flat_map(move |u| self.neighbors(u).iter().map(move |&v| (u as u32, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_random_dag, NodeKind};
+    use crate::util::Rng;
+
+    fn diamond() -> Dag {
+        let mut g = Dag::with_nodes(4, NodeKind::Compute);
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        g
+    }
+
+    #[test]
+    fn from_dag_matches_successors() {
+        let g = diamond();
+        let csr = Csr::from_dag(&g);
+        assert_eq!(csr.nodes(), 4);
+        assert_eq!(csr.edge_count(), 4);
+        assert_eq!(csr.neighbors(0), &[1, 2]);
+        assert_eq!(csr.neighbors(1), &[3]);
+        assert_eq!(csr.neighbors(3), &[] as &[u32]);
+    }
+
+    #[test]
+    fn from_dense_matches_from_dag() {
+        let mut rng = Rng::new(11);
+        for _ in 0..10 {
+            let d = gen_random_dag(9, 0.3, &mut rng, NodeKind::Compute);
+            let a = Csr::from_dag(&d);
+            let b = Csr::from_dense(&d.adjacency());
+            // successor lists are ascending either way
+            for u in 0..d.len() {
+                let mut want = a.neighbors(u).to_vec();
+                want.sort_unstable();
+                assert_eq!(b.neighbors(u), &want[..], "vertex {u}");
+            }
+            assert_eq!(a.edge_count(), b.edge_count());
+        }
+    }
+
+    #[test]
+    fn rebuild_reuses_capacity() {
+        let d = diamond();
+        let mut csr = Csr::with_capacity(8, 16);
+        csr.rebuild_from_flat(d.adjacency().as_slice(), 4);
+        assert_eq!(csr.edge_count(), 4);
+        let cap_before = csr.col.capacity();
+        csr.rebuild_from_flat(d.adjacency().as_slice(), 4);
+        assert_eq!(csr.col.capacity(), cap_before);
+        assert_eq!(csr.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn edges_iterates_all() {
+        let csr = Csr::from_dag(&diamond());
+        let edges: Vec<(u32, u32)> = csr.edges().collect();
+        assert_eq!(edges, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let csr = Csr::from_dag(&Dag::new());
+        assert_eq!(csr.nodes(), 0);
+        assert_eq!(csr.edge_count(), 0);
+        assert_eq!(csr.edges().count(), 0);
+    }
+}

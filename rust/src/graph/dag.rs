@@ -153,6 +153,12 @@ impl Dag {
         a
     }
 
+    /// Compressed-sparse-row view of the successor lists — the edge-list
+    /// form the matcher hot path iterates (see [`super::Csr`]).
+    pub fn csr(&self) -> super::Csr {
+        super::Csr::from_dag(self)
+    }
+
     /// Induced subgraph on `keep` (node ids renumbered by position).
     pub fn induced(&self, keep: &[NodeId]) -> Dag {
         let mut map = vec![usize::MAX; self.len()];

@@ -6,10 +6,12 @@
 //! adjacency form ([`Dag::adjacency`]); the schedulers use the structural
 //! queries (topo order, levels, reachability).
 
+mod csr;
 mod dag;
 mod generate;
 mod topo;
 
+pub use csr::Csr;
 pub use dag::{Dag, NodeId, NodeKind};
 pub use generate::{gen_chain, gen_dag_layered, gen_grid_2d, gen_random_dag, gen_tree};
 pub use topo::{is_acyclic, levels, reachability, topo_sort};

@@ -36,12 +36,53 @@ pub(crate) fn rank_fitness_desc(fitness: &[f32]) -> Vec<usize> {
 pub fn elite_consensus(particles: &[MatF], fitness: &[f32], elite: usize) -> MatF {
     assert_eq!(particles.len(), fitness.len());
     assert!(!particles.is_empty());
-    let elite = elite.max(1).min(particles.len());
+    let (n, m) = (particles[0].rows(), particles[0].cols());
+    let mut acc = MatF::zeros(n, m);
+    fuse_elites(
+        |i| particles[i].as_slice(),
+        particles.len(),
+        fitness,
+        elite,
+        acc.as_mut_slice(),
+        m,
+    );
+    acc
+}
 
+/// Flat twin of [`elite_consensus`] for the matcher's clone-free epoch
+/// barrier: `particles` is `count` stacked row-major n×m snapshots
+/// (struct-of-arrays swarm layout); the consensus is written into `out`
+/// without copying a single snapshot.
+pub(crate) fn elite_consensus_flat(
+    particles: &[f32],
+    count: usize,
+    n: usize,
+    m: usize,
+    fitness: &[f32],
+    elite: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(particles.len(), count * n * m);
+    assert_eq!(fitness.len(), count);
+    assert!(count > 0);
+    assert_eq!(out.len(), n * m);
+    let nm = n * m;
+    fuse_elites(|i| &particles[i * nm..(i + 1) * nm], count, fitness, elite, out, m);
+}
+
+/// Shared fusion core: fitness-distance weights over the ranked elites,
+/// uniform fallback when every weight clamps, row-stochastic output.
+fn fuse_elites<'a>(
+    snapshot: impl Fn(usize) -> &'a [f32],
+    count: usize,
+    fitness: &[f32],
+    elite: usize,
+    out: &mut [f32],
+    cols: usize,
+) {
+    let elite = elite.max(1).min(count);
     let idx = rank_fitness_desc(fitness);
     let best_f = fitness[idx[0]];
-
-    let (n, m) = (particles[0].rows(), particles[0].cols());
     let weight = |f: f32| -> f32 {
         // equal fitness (including -inf == -inf) is distance 0, weight 1
         let dist = if f == best_f { 0.0 } else { (f - best_f).abs() };
@@ -52,32 +93,31 @@ pub fn elite_consensus(particles: &[MatF], fitness: &[f32], elite: usize) -> Mat
             0.0
         }
     };
-    let mut acc = MatF::zeros(n, m);
+    out.fill(0.0);
     let mut total_w = 0.0f32;
     for &i in idx.iter().take(elite) {
         let w = weight(fitness[i]);
         if w <= 0.0 {
             continue;
         }
-        for (a, &p) in acc.as_mut_slice().iter_mut().zip(particles[i].as_slice()) {
+        for (a, &p) in out.iter_mut().zip(snapshot(i)) {
             *a += w * p;
         }
         total_w += w;
     }
     if total_w > 0.0 {
-        for a in acc.as_mut_slice() {
+        for a in out.iter_mut() {
             *a /= total_w;
         }
     } else {
         // every weight clamped (all-NaN fitness): uniform elite average
         for &i in idx.iter().take(elite) {
-            for (a, &p) in acc.as_mut_slice().iter_mut().zip(particles[i].as_slice()) {
+            for (a, &p) in out.iter_mut().zip(snapshot(i)) {
                 *a += p / elite as f32;
             }
         }
     }
-    acc.row_normalize();
-    acc
+    crate::util::row_normalize_in_place(out, cols);
 }
 
 #[cfg(test)]
@@ -162,6 +202,22 @@ mod tests {
             let s: f32 = c.row(i).iter().sum();
             assert!((s - 1.0).abs() < 1e-5, "row {i} sums {s}");
         }
+    }
+
+    #[test]
+    fn flat_consensus_matches_matf_version() {
+        let mut rng = Rng::new(9);
+        let (n, m, count) = (3usize, 7usize, 5usize);
+        let parts: Vec<MatF> = (0..count).map(|_| random_stochastic(n, m, &mut rng)).collect();
+        let fit: Vec<f32> = vec![-3.0, -1.5, f32::NAN, -0.5, -2.0];
+        let dense = elite_consensus(&parts, &fit, 3);
+        let mut flat = vec![0.0f32; count * n * m];
+        for (i, p) in parts.iter().enumerate() {
+            flat[i * n * m..(i + 1) * n * m].copy_from_slice(p.as_slice());
+        }
+        let mut out = vec![0.0f32; n * m];
+        elite_consensus_flat(&flat, count, n, m, &fit, 3, &mut out);
+        assert_eq!(out.as_slice(), dense.as_slice());
     }
 
     #[test]

@@ -1,12 +1,29 @@
 //! Edge-preserving fitness and feasibility verification (paper §3.3).
+//!
+//! Two fitness paths compute `-‖Q − S G Sᵀ‖²_F`:
+//!
+//! * [`edge_fitness`] — the dense reference: two dense matmuls plus a
+//!   Frobenius distance, `O(n·m²)` per evaluation. Kept as the oracle
+//!   the property tests cross-check against.
+//! * [`FitnessKernel`] — the production hot path: Q and G are sparse
+//!   {0,1} DAG adjacencies, so the kernel iterates their CSR edge lists
+//!   and skips masked-out (zero) entries of S. With `|E|` edges and
+//!   `nnz` surviving S entries the cost is `O(n·m + n·|E_G| + n·nnz)`,
+//!   and every buffer lives in a caller-owned [`FitnessScratch`], so
+//!   steady-state evaluation performs no heap allocation.
+//!
+//! The two agree exactly in real arithmetic (for {0,1} Q,
+//! `‖Q−P‖² = |E_Q| − 2·Σ_{(i,k)∈E_Q} P_ik + ‖P‖²_F`); floating-point
+//! summation order differs, so cross-checks compare with a tolerance.
 
+use crate::graph::Csr;
 use crate::util::MatF;
 
 use super::Mapping;
 
 /// `-‖Q − S G Sᵀ‖²_F` for one relaxed mapping S (the rust twin of the
-/// Pallas kernel's fitness, used by the native matcher and the tests
-/// that cross-check the artifact).
+/// Pallas kernel's fitness; the dense oracle the sparse kernel is
+/// verified against).
 pub fn edge_fitness(s: &MatF, q: &MatF, g: &MatF) -> f32 {
     debug_assert_eq!(s.rows(), q.rows());
     debug_assert_eq!(s.cols(), g.rows());
@@ -15,32 +32,242 @@ pub fn edge_fitness(s: &MatF, q: &MatF, g: &MatF) -> f32 {
     -q.sq_dist(&sgst)
 }
 
+/// Caller-owned scratch for [`FitnessKernel`] evaluations. One per
+/// worker thread; allocated once per episode (or held in the epoch
+/// backend's persistent workspace) and reused across every step.
+pub struct FitnessScratch {
+    /// Sᵀ, m×n — transposed once so the edge loops read contiguously.
+    st: Vec<f32>,
+    /// R = G·Sᵀ, m×n — row j accumulates Sᵀ rows of j's successors.
+    r: Vec<f32>,
+    /// P = S·R = S G Sᵀ, n×n.
+    p: Vec<f32>,
+    /// One-hot S for the discrete ablation ([`FitnessKernel::eval_hard`]).
+    hard: Vec<f32>,
+}
+
+impl FitnessScratch {
+    pub fn new(n: usize, m: usize) -> Self {
+        Self {
+            st: vec![0.0; n * m],
+            r: vec![0.0; n * m],
+            p: vec![0.0; n * n],
+            hard: vec![0.0; n * m],
+        }
+    }
+
+    /// The discrete-ablation staging buffer (n×m); fill it with a
+    /// hard-rounded S, then call [`FitnessKernel::eval_hard`].
+    pub(crate) fn hard_mut(&mut self) -> &mut [f32] {
+        &mut self.hard
+    }
+}
+
+/// Sparse fitness kernel for one (Q, G) episode: CSR edge lists built
+/// once (or rebuilt in place via [`Self::rebuild`] with zero
+/// allocation), shared read-only across worker threads.
+pub struct FitnessKernel {
+    n: usize,
+    m: usize,
+    q: Csr,
+    g: Csr,
+}
+
+impl FitnessKernel {
+    /// Build from dense {0,1} adjacencies (every nonzero entry must be
+    /// exactly 1.0 — DAG adjacencies and planted instances are).
+    pub fn new(q: &MatF, g: &MatF) -> Self {
+        assert_eq!(q.rows(), q.cols(), "Q must be square");
+        assert_eq!(g.rows(), g.cols(), "G must be square");
+        let mut kernel = Self::with_capacity(q.rows(), g.rows());
+        kernel.rebuild(q.as_slice(), q.rows(), g.as_slice(), g.rows());
+        kernel
+    }
+
+    /// Preallocate for the worst case at dims (n, m) so every later
+    /// [`Self::rebuild`] within those bounds is allocation-free (the
+    /// epoch backend holds one of these per size class).
+    pub fn with_capacity(n: usize, m: usize) -> Self {
+        Self {
+            n,
+            m,
+            q: Csr::with_capacity(n, n * n),
+            g: Csr::with_capacity(m, m * m),
+        }
+    }
+
+    /// Re-point the kernel at a new flat (Q, G) pair, reusing buffers.
+    ///
+    /// Panics on non-{0,1} entries: the sparse identity assumes binary
+    /// adjacencies, and a silent wrong fitness would steer the whole
+    /// swarm — the O(n²+m²) scan is noise next to one epoch. Weighted
+    /// graphs must use the dense [`edge_fitness`].
+    pub fn rebuild(&mut self, q: &[f32], n: usize, g: &[f32], m: usize) {
+        assert!(
+            q.iter().chain(g).all(|&x| x == 0.0 || x == 1.0),
+            "FitnessKernel requires {{0,1}} adjacencies (use edge_fitness for weighted graphs)"
+        );
+        self.n = n;
+        self.m = m;
+        self.q.rebuild_from_flat(q, n);
+        self.g.rebuild_from_flat(g, m);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Query edge list (shared with the feasibility verifier).
+    pub fn q_edges(&self) -> &Csr {
+        &self.q
+    }
+
+    /// Target edge list.
+    pub fn g_edges(&self) -> &Csr {
+        &self.g
+    }
+
+    /// Fresh scratch sized for this kernel's dims.
+    pub fn scratch(&self) -> FitnessScratch {
+        FitnessScratch::new(self.n, self.m)
+    }
+
+    /// `-‖Q − S G Sᵀ‖²_F` for a flat row-major n×m S.
+    pub fn eval(&self, s: &[f32], scratch: &mut FitnessScratch) -> f32 {
+        let FitnessScratch { st, r, p, .. } = scratch;
+        self.eval_core(s, st, r, p)
+    }
+
+    /// Evaluate the hard-rounded S previously written into the scratch's
+    /// staging buffer (discrete ablation of Fig. 2b).
+    pub(crate) fn eval_hard(&self, scratch: &mut FitnessScratch) -> f32 {
+        let FitnessScratch { st, r, p, hard } = scratch;
+        self.eval_core(hard, st, r, p)
+    }
+
+    fn eval_core(&self, s: &[f32], st: &mut [f32], r: &mut [f32], p: &mut [f32]) -> f32 {
+        let (n, m) = (self.n, self.m);
+        debug_assert_eq!(s.len(), n * m);
+        let st = &mut st[..m * n];
+        let r = &mut r[..m * n];
+        let p = &mut p[..n * n];
+        // 1. Sᵀ — one strided pass; every later access is contiguous.
+        for i in 0..n {
+            let srow = &s[i * m..(i + 1) * m];
+            for (l, &x) in srow.iter().enumerate() {
+                st[l * n + i] = x;
+            }
+        }
+        // 2. R = G·Sᵀ by iterating target edges: row j of R is the sum
+        //    of Sᵀ rows over j's successors (childless rows stay zero).
+        r.fill(0.0);
+        for j in 0..m {
+            let succ = self.g.neighbors(j);
+            if succ.is_empty() {
+                continue;
+            }
+            let rj = &mut r[j * n..(j + 1) * n];
+            for &l in succ {
+                let stl = &st[l as usize * n..(l as usize + 1) * n];
+                for (a, &b) in rj.iter_mut().zip(stl) {
+                    *a += b;
+                }
+            }
+        }
+        // 3. P = S·R, skipping masked-out (zero) S entries — under a
+        //    sparse compatibility mask this is the dominant saving.
+        p.fill(0.0);
+        for i in 0..n {
+            let srow = &s[i * m..(i + 1) * m];
+            let pi = &mut p[i * n..(i + 1) * n];
+            for (j, &sij) in srow.iter().enumerate() {
+                if sij == 0.0 {
+                    continue;
+                }
+                let rj = &r[j * n..(j + 1) * n];
+                for (a, &b) in pi.iter_mut().zip(rj) {
+                    *a += sij * b;
+                }
+            }
+        }
+        // 4. ‖Q − P‖² = |E_Q| − 2·Σ_{(i,k)∈E_Q} P_ik + ‖P‖² (Q is {0,1}).
+        let sum_sq: f32 = p.iter().map(|&x| x * x).sum();
+        let mut cross = 0.0f32;
+        for i in 0..n {
+            for &k in self.q.neighbors(i) {
+                cross += p[i * n + k as usize];
+            }
+        }
+        -(self.q.edge_count() as f32 - 2.0 * cross + sum_sq)
+    }
+}
+
 /// Ullmann's feasibility condition: `M̂ G M̂ᵀ` must cover Q, i.e. for
 /// every query edge (i,k) there must be a target edge (M(i), M(k)).
 /// Partial mappings (None entries) are infeasible.
+///
+/// Targets are resolved once in the totality pre-pass (no per-pair
+/// unwraps), and each row's adjacency slice is scanned with an early
+/// return. Hot paths that already own a CSR of Q should prefer
+/// [`mapping_is_feasible_csr`], which skips the zero entries entirely.
 pub fn mapping_is_feasible(mapping: &Mapping, q: &MatF, g: &MatF) -> bool {
     let n = q.rows();
     debug_assert_eq!(mapping.len(), n);
-    // injectivity + totality
-    let mut used = vec![false; g.rows()];
-    for &mj in mapping {
-        match mj {
-            None => return false,
-            Some(j) => {
-                if j >= g.rows() || used[j] {
-                    return false;
-                }
-                used[j] = true;
+    let mut tmap = vec![0usize; n];
+    if !resolve_targets(mapping, g.rows(), &mut tmap) {
+        return false;
+    }
+    for (i, &ti) in tmap.iter().enumerate() {
+        for (k, &qik) in q.row(i).iter().enumerate() {
+            if qik != 0.0 && g[(ti, tmap[k])] == 0.0 {
+                return false;
             }
         }
     }
-    for i in 0..n {
-        for k in 0..n {
-            if q[(i, k)] != 0.0 {
-                let (ti, tk) = (mapping[i].unwrap(), mapping[k].unwrap());
-                if g[(ti, tk)] == 0.0 {
+    true
+}
+
+/// [`mapping_is_feasible`] against a prebuilt CSR of Q's edges — the
+/// verify path the PSO barrier and the controller run on every projected
+/// candidate (iterating the edge list skips the n² zero scan). The two
+/// small O(n+m) scratch vectors here are epoch-barrier allocations, not
+/// per-step ones — the zero-allocation guarantee covers the fused step
+/// loop (`run_epoch_into`), which never verifies.
+pub fn mapping_is_feasible_csr(mapping: &Mapping, q_edges: &Csr, g: &MatF) -> bool {
+    let n = q_edges.nodes();
+    debug_assert_eq!(mapping.len(), n);
+    let mut tmap = vec![0usize; n];
+    if !resolve_targets(mapping, g.rows(), &mut tmap) {
+        return false;
+    }
+    for (i, &ti) in tmap.iter().enumerate() {
+        for &k in q_edges.neighbors(i) {
+            if g[(ti, tmap[k as usize])] == 0.0 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Totality + injectivity pre-pass: resolve `mapping` into `tmap`
+/// (query vertex i → target `tmap[i]`). Returns false on partial,
+/// out-of-range or non-injective mappings.
+fn resolve_targets(mapping: &Mapping, m: usize, tmap: &mut [usize]) -> bool {
+    let mut used = vec![false; m];
+    for (slot, &mj) in tmap.iter_mut().zip(mapping) {
+        match mj {
+            None => return false,
+            Some(j) => {
+                if j >= m || used[j] {
                     return false;
                 }
+                used[j] = true;
+                *slot = j;
             }
         }
     }
@@ -50,7 +277,8 @@ pub fn mapping_is_feasible(mapping: &Mapping, q: &MatF, g: &MatF) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{gen_chain, NodeKind};
+    use crate::graph::{gen_chain, gen_random_dag, NodeKind};
+    use crate::util::Rng;
 
     #[test]
     fn perfect_embedding_zero_fitness() {
@@ -63,6 +291,9 @@ mod tests {
         }
         // SGS^T picks exactly the chain edges 1->2->3 => equals Q
         assert_eq!(edge_fitness(&s, &q, &g), 0.0);
+        let kernel = FitnessKernel::new(&q, &g);
+        let mut scratch = kernel.scratch();
+        assert_eq!(kernel.eval(s.as_slice(), &mut scratch), 0.0);
     }
 
     #[test]
@@ -74,6 +305,59 @@ mod tests {
         s[(1, 2)] = 1.0; // gap: 0->2 is not a target edge
         s[(2, 3)] = 1.0;
         assert!(edge_fitness(&s, &q, &g) < 0.0);
+        let kernel = FitnessKernel::new(&q, &g);
+        let mut scratch = kernel.scratch();
+        assert!(kernel.eval(s.as_slice(), &mut scratch) < 0.0);
+    }
+
+    #[test]
+    fn sparse_kernel_tracks_dense_on_random_pairs() {
+        let mut rng = Rng::new(77);
+        for trial in 0..30 {
+            let n = 2 + (trial % 6);
+            let m = n + 3 + (trial % 5);
+            let q = gen_random_dag(n, 0.4, &mut rng, NodeKind::Compute).adjacency();
+            let g = gen_random_dag(m, 0.3, &mut rng, NodeKind::Universal).adjacency();
+            let mut s = MatF::from_fn(n, m, |_, _| {
+                if rng.chance(0.6) {
+                    rng.f32() + 1e-3
+                } else {
+                    0.0
+                }
+            });
+            s.row_normalize();
+            let dense = edge_fitness(&s, &q, &g);
+            let kernel = FitnessKernel::new(&q, &g);
+            let mut scratch = kernel.scratch();
+            let sparse = kernel.eval(s.as_slice(), &mut scratch);
+            let tol = 1e-4 * (1.0 + dense.abs());
+            assert!(
+                (dense - sparse).abs() <= tol,
+                "trial {trial}: dense {dense} vs sparse {sparse}"
+            );
+        }
+    }
+
+    #[test]
+    fn rebuild_repoints_without_stale_state() {
+        let q1 = gen_chain(3, NodeKind::Compute).adjacency();
+        let g1 = gen_chain(5, NodeKind::Universal).adjacency();
+        let mut kernel = FitnessKernel::with_capacity(4, 6);
+        kernel.rebuild(q1.as_slice(), 3, g1.as_slice(), 5);
+        assert_eq!(kernel.q_edges().edge_count(), 2);
+        assert_eq!(kernel.g_edges().edge_count(), 4);
+        // smaller second episode: no leftovers from the first
+        let q2 = gen_chain(2, NodeKind::Compute).adjacency();
+        let g2 = gen_chain(3, NodeKind::Universal).adjacency();
+        kernel.rebuild(q2.as_slice(), 2, g2.as_slice(), 3);
+        assert_eq!(kernel.n(), 2);
+        assert_eq!(kernel.m(), 3);
+        assert_eq!(kernel.q_edges().edge_count(), 1);
+        let mut s = MatF::zeros(2, 3);
+        s[(0, 1)] = 1.0;
+        s[(1, 2)] = 1.0;
+        let mut scratch = kernel.scratch();
+        assert_eq!(kernel.eval(s.as_slice(), &mut scratch), 0.0);
     }
 
     #[test]
@@ -96,5 +380,28 @@ mod tests {
         let g = gen_chain(3, NodeKind::Universal).adjacency();
         assert!(!mapping_is_feasible(&vec![Some(1), Some(1)], &q, &g));
         assert!(!mapping_is_feasible(&vec![Some(0), None], &q, &g));
+    }
+
+    #[test]
+    fn feasibility_csr_matches_dense_scan() {
+        let mut rng = Rng::new(5);
+        for _ in 0..40 {
+            let n = rng.range(2, 6);
+            let m = n + rng.range(1, 6);
+            let qd = gen_random_dag(n, 0.5, &mut rng, NodeKind::Compute);
+            let gd = gen_random_dag(m, 0.4, &mut rng, NodeKind::Universal);
+            let (q, g) = (qd.adjacency(), gd.adjacency());
+            let q_csr = qd.csr();
+            // random mapping: mostly valid shape; sometimes None,
+            // duplicate, or out of range — both checks must agree on all
+            let mapping: Mapping = (0..n)
+                .map(|_| if rng.chance(0.9) { Some(rng.below(m + 1)) } else { None })
+                .collect();
+            assert_eq!(
+                mapping_is_feasible(&mapping, &q, &g),
+                mapping_is_feasible_csr(&mapping, &q_csr, &g),
+                "mapping {mapping:?}"
+            );
+        }
     }
 }

@@ -5,29 +5,125 @@
 //! in/out degrees can host the tile's (a target vertex needs at least as
 //! many neighbors as the query vertex it hosts — the standard Ullmann
 //! degree filter).
+//!
+//! The mask is built as a packed [`BitMask`] (one bit per (i,j) pair,
+//! 64 candidates per word): feasibility witnesses like
+//! [`BitMask::has_empty_row`] are word-wise, and the scheduler uses them
+//! to reject an interrupt without running the matcher at all. The f32
+//! form ([`BitMask::to_matf`] / [`build_mask`]) remains the interchange
+//! type with the PSO state and the AOT artifact's calling convention.
 
 use crate::graph::Dag;
 use crate::util::MatF;
 
-/// Build the `n×m` compatibility mask between query `q` and target `g`.
-pub fn build_mask(q: &Dag, g: &Dag) -> MatF {
+/// Packed n×m bitset: bit j of row i is set iff query vertex i may map
+/// onto target vertex j. Rows are padded to whole 64-bit words; padding
+/// bits are always zero.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMask {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BitMask {
+    /// All-zero mask.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let words_per_row = (cols + 63) / 64;
+        Self { rows, cols, words_per_row, words: vec![0; rows * words_per_row] }
+    }
+
+    /// Pack a dense f32 mask (any nonzero entry sets the bit).
+    pub fn from_matf(mask: &MatF) -> Self {
+        let mut bits = Self::zeros(mask.rows(), mask.cols());
+        for i in 0..mask.rows() {
+            for (j, &x) in mask.row(i).iter().enumerate() {
+                if x != 0.0 {
+                    bits.set(i, j);
+                }
+            }
+        }
+        bits
+    }
+
+    /// Unpack into the f32 form the PSO state multiplies against.
+    pub fn to_matf(&self) -> MatF {
+        MatF::from_fn(self.rows, self.cols, |i, j| if self.get(i, j) { 1.0 } else { 0.0 })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.words[i * self.words_per_row + j / 64] & (1u64 << (j % 64)) != 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.words[i * self.words_per_row + j / 64] |= 1u64 << (j % 64);
+    }
+
+    /// Row i's candidate set as packed words.
+    pub fn row_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Whether any query vertex has an empty candidate row — an early
+    /// infeasibility witness, checked one word (64 candidates) at a
+    /// time. The scheduler rejects such interrupts before particle init.
+    pub fn has_empty_row(&self) -> bool {
+        (0..self.rows).any(|i| self.row_words(i).iter().all(|&w| w == 0))
+    }
+
+    /// Total candidate pairs (set bits).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of (i,j) pairs that survive the filters.
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.count_ones() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Build the packed `n×m` compatibility mask between query `q` and
+/// target `g`.
+pub fn build_bitmask(q: &Dag, g: &Dag) -> BitMask {
     let (n, m) = (q.len(), g.len());
-    let mut mask = MatF::zeros(n, m);
+    let mut mask = BitMask::zeros(n, m);
     for i in 0..n {
         for j in 0..m {
             let kind_ok = q.kind(i).compatible_with(g.kind(j));
             let deg_ok = g.out_degree(j) >= q.out_degree(i) && g.in_degree(j) >= q.in_degree(i);
             if kind_ok && deg_ok {
-                mask[(i, j)] = 1.0;
+                mask.set(i, j);
             }
         }
     }
     mask
 }
 
-/// Whether any query vertex has an empty candidate row — an early
-/// infeasibility witness (the scheduler uses it to reject an interrupt
-/// without running the matcher at all).
+/// Dense f32 form of [`build_bitmask`] — the interchange form the PSO
+/// state and the epoch backends consume.
+pub fn build_mask(q: &Dag, g: &Dag) -> MatF {
+    build_bitmask(q, g).to_matf()
+}
+
+/// Whether any query vertex has an empty candidate row in a dense f32
+/// mask. Prefer [`BitMask::has_empty_row`] where a packed mask exists —
+/// it checks 64 candidates per word instead of scanning floats.
 pub fn has_empty_row(mask: &MatF) -> bool {
     (0..mask.rows()).any(|i| mask.row(i).iter().all(|&x| x == 0.0))
 }
@@ -74,6 +170,7 @@ mod tests {
         let g = Dag::with_nodes(3, NodeKind::Universal);
         let mask = build_mask(&q, &g);
         assert_eq!(mask.sum(), 9.0);
+        assert_eq!(build_bitmask(&q, &g).count_ones(), 9);
     }
 
     #[test]
@@ -82,5 +179,53 @@ mod tests {
         let g = Dag::with_nodes(3, NodeKind::Compare); // no edges, wrong kind
         let mask = build_mask(&q, &g);
         assert!(has_empty_row(&mask));
+        assert!(build_bitmask(&q, &g).has_empty_row());
+        assert!(BitMask::from_matf(&mask).has_empty_row());
+    }
+
+    #[test]
+    fn bitmask_roundtrips_through_matf() {
+        let q = gen_chain(5, NodeKind::Compute);
+        let g = gen_chain(9, NodeKind::Universal);
+        let bits = build_bitmask(&q, &g);
+        let dense = bits.to_matf();
+        assert_eq!(BitMask::from_matf(&dense), bits);
+        for i in 0..5 {
+            for j in 0..9 {
+                assert_eq!(bits.get(i, j), dense[(i, j)] != 0.0, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn bitmask_crosses_word_boundaries() {
+        // 70 columns spans two words per row
+        let mut bits = BitMask::zeros(2, 70);
+        bits.set(0, 0);
+        bits.set(0, 63);
+        bits.set(0, 64);
+        bits.set(1, 69);
+        assert!(bits.get(0, 63));
+        assert!(bits.get(0, 64));
+        assert!(!bits.get(0, 65));
+        assert!(bits.get(1, 69));
+        assert_eq!(bits.count_ones(), 4);
+        assert_eq!(bits.row_words(0).len(), 2);
+        assert!(!bits.has_empty_row());
+    }
+
+    #[test]
+    fn empty_row_word_check_matches_float_scan() {
+        let mut dense = MatF::zeros(3, 130); // three words per row
+        dense[(0, 5)] = 1.0;
+        dense[(2, 129)] = 1.0;
+        let bits = BitMask::from_matf(&dense);
+        assert!(bits.has_empty_row()); // row 1 empty
+        assert_eq!(bits.has_empty_row(), has_empty_row(&dense));
+        let mut full = dense.clone();
+        full[(1, 64)] = 1.0;
+        let bits = BitMask::from_matf(&full);
+        assert!(!bits.has_empty_row());
+        assert_eq!(bits.has_empty_row(), has_empty_row(&full));
     }
 }

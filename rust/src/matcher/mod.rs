@@ -1,11 +1,14 @@
 //! Subgraph-isomorphism engines — the algorithmic heart of the paper.
 //!
 //! * [`mask`] — the global compatibility mask `Mask ∈ {0,1}^{n×m}`
-//!   (degree + computation-type feasibility, §3.2).
+//!   (degree + computation-type feasibility, §3.2), built as a packed
+//!   [`BitMask`] with a word-wise empty-row infeasibility witness.
 //! * [`ullmann`] — the classic serial Ullmann algorithm with refinement
 //!   and backtracking: both the IsoSched baseline and the final verifier
 //!   IMMSched runs on projected candidates.
-//! * [`fitness`] — the edge-preserving metric `-‖Q − S G Sᵀ‖²` (§3.3).
+//! * [`fitness`] — the edge-preserving metric `-‖Q − S G Sᵀ‖²` (§3.3):
+//!   the sparse CSR [`FitnessKernel`] hot path plus the dense
+//!   [`edge_fitness`] oracle it is property-tested against.
 //! * [`projection`] — relaxed S → discrete injective mapping M̂ (greedy
 //!   argmax and Hungarian variants).
 //! * [`consensus`] — the global controller's elite-consensus fusion S̄.
@@ -28,9 +31,11 @@ pub mod vf2;
 
 pub use consensus::elite_consensus;
 pub use cost::{MatcherCost, MatcherCostModel};
-pub use fitness::{edge_fitness, mapping_is_feasible};
-pub use mask::build_mask;
-pub use projection::{project_greedy, project_hungarian};
+pub use fitness::{
+    edge_fitness, mapping_is_feasible, mapping_is_feasible_csr, FitnessKernel, FitnessScratch,
+};
+pub use mask::{build_bitmask, build_mask, has_empty_row, BitMask};
+pub use projection::{project_greedy, project_greedy_flat, project_hungarian};
 pub use pso::{PsoConfig, PsoOutcome, PsoMatcher};
 pub use quantized::{QuantizedMatcher, QuantizedOutcome};
 pub use ullmann::{ullmann_find_first, ullmann_refine, UllmannStats};

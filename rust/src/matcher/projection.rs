@@ -11,7 +11,15 @@ use super::Mapping;
 /// lightweight on-chip controller runs (argmax is exactly the comparator
 /// tree added in §3.4).
 pub fn project_greedy(s: &MatF, mask: &MatF) -> Mapping {
-    let (n, m) = (s.rows(), s.cols());
+    project_greedy_flat(s.as_slice(), mask.as_slice(), s.rows(), s.cols())
+}
+
+/// [`project_greedy`] over flat row-major buffers — the form the
+/// struct-of-arrays swarm state hands the epoch barrier (no `MatF`
+/// materialization on the hot path).
+pub fn project_greedy_flat(s: &[f32], mask: &[f32], n: usize, m: usize) -> Mapping {
+    debug_assert_eq!(s.len(), n * m);
+    debug_assert_eq!(mask.len(), n * m);
     let mut assign: Mapping = vec![None; n];
     let mut row_done = vec![false; n];
     let mut col_done = vec![false; m];
@@ -22,10 +30,10 @@ pub fn project_greedy(s: &MatF, mask: &MatF) -> Mapping {
                 continue;
             }
             for j in 0..m {
-                if col_done[j] || mask[(i, j)] == 0.0 {
+                if col_done[j] || mask[i * m + j] == 0.0 {
                     continue;
                 }
-                let v = s[(i, j)];
+                let v = s[i * m + j];
                 if best.map_or(true, |(_, _, bv)| v > bv) {
                     best = Some((i, j, v));
                 }

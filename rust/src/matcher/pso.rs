@@ -9,24 +9,35 @@
 //!   ([`crate::runtime::NativeEpochBackend`] drives the same per-particle
 //!   epoch at the artifact's padded dims).
 //!
+//! ## Hot-path layout
+//!
+//! Swarm state is struct-of-arrays: one flat buffer per field
+//! (`s`/`v`/`s_local` stacked `particles × n·m`, `f_local` and the
+//! per-step fitness record per particle), allocated once per episode and
+//! reused every epoch. Fitness is the sparse [`FitnessKernel`] (CSR edge
+//! iteration, per-worker [`FitnessScratch`]), so the fused step loop is
+//! clone-free and allocation-free in steady state — the discrete
+//! ablation (`relaxed: false`) is the one exception, its projection
+//! allocates per step and is not a production path.
+//!
 //! ## Parallel structure
 //!
 //! The epoch mirrors the paper's data-dependency split: within one epoch
 //! every particle runs its K fused steps against the *frozen* attractors
 //! (S*, S̄) with no cross-particle dependency, so the per-particle work
 //! fans out across threads (`std::thread::scope`, one forked RNG stream
-//! per particle). Everything that couples particles — the global best
-//! S*, the elite-consensus S̄, projection + Ullmann verification —
-//! happens at the epoch barrier on the (modeled) global controller.
-//! Serial and threaded execution are bit-identical for a given seed:
-//! particle initialization and RNG forks consume the master stream in
-//! particle order, and the trace merge runs on one thread.
+//! and one scratch arena per worker). Everything that couples particles
+//! — the global best S*, the elite-consensus S̄, projection + Ullmann
+//! verification — happens at the epoch barrier on the (modeled) global
+//! controller. Serial and threaded execution are bit-identical for a
+//! given seed: particle initialization and RNG forks consume the master
+//! stream in particle order, and the trace merge runs on one thread.
 
-use crate::util::{MatF, Rng};
+use crate::util::{row_normalize_in_place, MatF, Rng};
 
-use super::consensus::elite_consensus;
-use super::fitness::{edge_fitness, mapping_is_feasible};
-use super::projection::project_greedy;
+use super::consensus::elite_consensus_flat;
+use super::fitness::{mapping_is_feasible_csr, FitnessKernel, FitnessScratch};
+use super::projection::project_greedy_flat;
 use super::ullmann::{ullmann_find_first, UllmannStats};
 use super::Mapping;
 
@@ -120,14 +131,6 @@ impl PsoOutcome {
     }
 }
 
-/// One particle's swarm state (shared with the native epoch backend).
-pub(crate) struct ParticleState {
-    pub s: MatF,
-    pub v: MatF,
-    pub s_local: MatF,
-    pub f_local: f32,
-}
-
 /// The velocity-update coefficients one fused step needs.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct StepParams {
@@ -144,20 +147,261 @@ impl StepParams {
     }
 }
 
-/// A particle plus its private RNG stream and per-step fitness record for
-/// one epoch.
-pub(crate) struct EpochParticle {
-    pub state: ParticleState,
-    pub rng: Rng,
-    pub fits: Vec<f32>,
-}
-
 /// Minimum per-epoch work (particles × steps × n × m elements) before
 /// the auto path spawns scoped threads: below this, per-epoch thread
 /// spawn/join dominates the few microseconds of arithmetic and the
 /// serial loop is faster on the interrupt hot path. `run_threaded`
 /// bypasses the threshold (tests/benches force the fan-out).
 pub(crate) const PARALLEL_WORK_THRESHOLD: usize = 1 << 15;
+
+/// Resolve the worker count for one epoch fan-out. Only touches
+/// `available_parallelism` when an explicit thread count is absent, so
+/// pinned single-worker runs stay syscall- and allocation-free.
+pub(crate) fn epoch_workers(threaded: bool, threads: usize, particles: usize) -> usize {
+    if !threaded || particles <= 1 {
+        return 1;
+    }
+    let requested = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    requested.clamp(1, particles)
+}
+
+/// Disjoint mutable views over one epoch's struct-of-arrays swarm state:
+/// particle p owns `s[p·nm..(p+1)·nm]`, `fits[p·steps..(p+1)·steps]`,
+/// `f_local[p]`, `rngs[p]`. The caller (matcher arena or backend
+/// workspace) owns the backing buffers; nothing here allocates.
+pub(crate) struct EpochSlices<'a> {
+    pub s: &'a mut [f32],
+    pub v: &'a mut [f32],
+    pub s_local: &'a mut [f32],
+    pub f_local: &'a mut [f32],
+    pub fits: &'a mut [f32],
+    pub rngs: &'a mut [Rng],
+}
+
+/// One particle's slice of the swarm state.
+struct ParticleSlices<'a> {
+    s: &'a mut [f32],
+    v: &'a mut [f32],
+    s_local: &'a mut [f32],
+    f_local: &'a mut f32,
+    fits: &'a mut [f32],
+    rng: &'a mut Rng,
+}
+
+/// Run every particle's K-step epoch, serially or fanned out over scoped
+/// threads. Particles are fully independent here (frozen attractors,
+/// private RNG streams and per-worker scratch), so any worker count
+/// produces identical results.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_epoch_slices(
+    slices: EpochSlices<'_>,
+    scratch: &mut [FitnessScratch],
+    kernel: &FitnessKernel,
+    s_star: &[f32],
+    s_bar: &[f32],
+    mask: &[f32],
+    steps: usize,
+    params: &StepParams,
+    workers: usize,
+) {
+    let EpochSlices { s, v, s_local, f_local, fits, rngs } = slices;
+    let particles = rngs.len();
+    let (n, m) = (kernel.n(), kernel.m());
+    let nm = n * m;
+    debug_assert_eq!(s.len(), particles * nm);
+    debug_assert_eq!(v.len(), particles * nm);
+    debug_assert_eq!(s_local.len(), particles * nm);
+    debug_assert_eq!(f_local.len(), particles);
+    debug_assert_eq!(fits.len(), particles * steps);
+    debug_assert_eq!(s_star.len(), nm);
+    debug_assert_eq!(s_bar.len(), nm);
+    debug_assert_eq!(mask.len(), nm);
+    if particles == 0 || steps == 0 || nm == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, particles);
+    assert!(scratch.len() >= workers, "need one scratch arena per worker");
+
+    if workers == 1 {
+        let arena = &mut scratch[0];
+        for p in 0..particles {
+            run_one_particle(
+                ParticleSlices {
+                    s: &mut s[p * nm..(p + 1) * nm],
+                    v: &mut v[p * nm..(p + 1) * nm],
+                    s_local: &mut s_local[p * nm..(p + 1) * nm],
+                    f_local: &mut f_local[p],
+                    fits: &mut fits[p * steps..(p + 1) * steps],
+                    rng: &mut rngs[p],
+                },
+                arena,
+                kernel,
+                s_star,
+                s_bar,
+                mask,
+                params,
+            );
+        }
+        return;
+    }
+
+    // worker slabs: ceil(particles / workers) particles each, carved out
+    // of every buffer with the same chunk count so slab p of one buffer
+    // pairs with slab p of the others
+    let per = (particles + workers - 1) / workers;
+    std::thread::scope(|scope| {
+        for (((((s_slab, v_slab), sl_slab), fl_slab), ft_slab), (rg_slab, arena)) in s
+            .chunks_mut(per * nm)
+            .zip(v.chunks_mut(per * nm))
+            .zip(s_local.chunks_mut(per * nm))
+            .zip(f_local.chunks_mut(per))
+            .zip(fits.chunks_mut(per * steps))
+            .zip(rngs.chunks_mut(per).zip(scratch.iter_mut()))
+        {
+            scope.spawn(move || {
+                for (p, rng) in rg_slab.iter_mut().enumerate() {
+                    run_one_particle(
+                        ParticleSlices {
+                            s: &mut s_slab[p * nm..(p + 1) * nm],
+                            v: &mut v_slab[p * nm..(p + 1) * nm],
+                            s_local: &mut sl_slab[p * nm..(p + 1) * nm],
+                            f_local: &mut fl_slab[p],
+                            fits: &mut ft_slab[p * steps..(p + 1) * steps],
+                            rng,
+                        },
+                        arena,
+                        kernel,
+                        s_star,
+                        s_bar,
+                        mask,
+                        params,
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// One particle's full epoch: K fused steps with local-best tracking.
+/// The particle's *current* fitness after every step lands in its `fits`
+/// slice (the per-step trace the barrier merges).
+fn run_one_particle(
+    p: ParticleSlices<'_>,
+    scratch: &mut FitnessScratch,
+    kernel: &FitnessKernel,
+    s_star: &[f32],
+    s_bar: &[f32],
+    mask: &[f32],
+    params: &StepParams,
+) {
+    let ParticleSlices { s, v, s_local, f_local, fits, rng } = p;
+    let (n, m) = (kernel.n(), kernel.m());
+    for slot in fits.iter_mut() {
+        step_particle(s, v, s_local, s_star, s_bar, mask, m, params, rng);
+        let f = if params.relaxed {
+            kernel.eval(s, scratch)
+        } else {
+            // discrete coupling (Fig. 2b ablation): evaluate on the
+            // hard-rounded one-hot projection of S (the projection
+            // allocates — ablation only, never the production path)
+            harden_into(s, mask, n, m, scratch.hard_mut());
+            kernel.eval_hard(scratch)
+        };
+        *slot = f;
+        if f > *f_local {
+            *f_local = f;
+            s_local.copy_from_slice(s);
+        }
+    }
+}
+
+/// Fused PSO step for one particle (the rust twin of the Pallas kernel).
+/// Flat slice iteration in row-major order — the RNG is consumed three
+/// draws per element exactly as the elementwise kernel folds its key.
+#[allow(clippy::too_many_arguments)]
+fn step_particle(
+    s: &mut [f32],
+    v: &mut [f32],
+    s_local: &[f32],
+    s_star: &[f32],
+    s_bar: &[f32],
+    mask: &[f32],
+    cols: usize,
+    params: &StepParams,
+    rng: &mut Rng,
+) {
+    for ((((s_ij, v_ij), &l_ij), &star_ij), &bar_ij) in
+        s.iter_mut().zip(v.iter_mut()).zip(s_local).zip(s_star).zip(s_bar)
+    {
+        let r1 = rng.f32();
+        let r2 = rng.f32();
+        let r3 = rng.f32();
+        let cur = *s_ij;
+        let vel = params.w * *v_ij
+            + params.c1 * r1 * (l_ij - cur)
+            + params.c2 * r2 * (star_ij - cur)
+            + params.c3 * r3 * (bar_ij - cur);
+        *v_ij = vel;
+        *s_ij = (cur + vel).clamp(0.0, 1.0);
+    }
+    for (x, &mk) in s.iter_mut().zip(mask) {
+        *x *= mk;
+    }
+    row_normalize_in_place(s, cols);
+}
+
+/// Random mask-respecting row-stochastic initialization of one flat n×m
+/// particle (consumes exactly n·m draws regardless of the mask, keeping
+/// the master stream aligned for any mask).
+fn init_particle(s: &mut [f32], mask: &[f32], cols: usize, rng: &mut Rng) {
+    for (x, &mk) in s.iter_mut().zip(mask) {
+        *x = (rng.f32() + 1e-3) * mk;
+    }
+    row_normalize_in_place(s, cols);
+}
+
+/// Hard rounding to an injective one-hot matrix, written into `hard`
+/// (discrete ablation).
+fn harden_into(s: &[f32], mask: &[f32], n: usize, m: usize, hard: &mut [f32]) {
+    let assign = project_greedy_flat(s, mask, n, m);
+    hard.fill(0.0);
+    for (i, &mj) in assign.iter().enumerate() {
+        if let Some(j) = mj {
+            hard[i * m + j] = 1.0;
+        }
+    }
+}
+
+/// Episode-lifetime swarm storage: every per-particle buffer the epoch
+/// loop touches, allocated once up front. Epochs re-initialize in place.
+struct SwarmArena {
+    s: Vec<f32>,
+    v: Vec<f32>,
+    s_local: Vec<f32>,
+    f_local: Vec<f32>,
+    fits: Vec<f32>,
+    rngs: Vec<Rng>,
+    scratch: Vec<FitnessScratch>,
+}
+
+impl SwarmArena {
+    fn new(particles: usize, n: usize, m: usize, steps: usize, workers: usize) -> Self {
+        let nm = n * m;
+        Self {
+            s: vec![0.0; particles * nm],
+            v: vec![0.0; particles * nm],
+            s_local: vec![0.0; particles * nm],
+            f_local: vec![f32::NEG_INFINITY; particles],
+            fits: vec![f32::NEG_INFINITY; particles * steps],
+            rngs: Vec::with_capacity(particles),
+            scratch: (0..workers.max(1)).map(|_| FitnessScratch::new(n, m)).collect(),
+        }
+    }
+}
 
 /// The native matcher.
 pub struct PsoMatcher {
@@ -199,15 +443,22 @@ impl PsoMatcher {
         let mut out = PsoOutcome { best_fitness: f32::NEG_INFINITY, ..Default::default() };
         // Degenerate configs (no particles, no epochs, no steps) have
         // nothing to search: return the empty outcome instead of
-        // panicking downstream (elite_consensus asserts on empty input,
+        // panicking downstream (elite consensus asserts on empty input,
         // zero steps would feed NEG_INFINITY fitnesses to the consensus).
         if cfg.particles == 0 || cfg.epochs == 0 || cfg.steps == 0 {
             return out;
         }
+        let nm = n * m;
+        let mask_flat = mask.as_slice();
         let mut rng = Rng::new(cfg.seed);
         let params = StepParams::from_config(cfg);
+        let kernel = FitnessKernel::new(q, g);
+        let workers = epoch_workers(threaded, cfg.threads, cfg.particles);
 
-        let mut s_star = init_particle_s(mask, &mut rng);
+        // episode-lifetime state: allocated once, reused every epoch
+        let mut arena = SwarmArena::new(cfg.particles, n, m, cfg.steps, workers);
+        let mut s_star = vec![0.0f32; nm];
+        init_particle(&mut s_star, mask_flat, m, &mut rng);
         let mut f_star = f32::NEG_INFINITY;
         let mut s_bar = s_star.clone();
         // deterministic in (mask, q, g) — run at most once per episode
@@ -218,37 +469,35 @@ impl PsoMatcher {
             // line 4: fresh particles each epoch. Initialization and the
             // per-particle RNG forks consume the master stream in
             // particle order, so serial and threaded runs are identical.
-            let mut particles: Vec<EpochParticle> = (0..cfg.particles)
-                .map(|i| {
-                    let s = init_particle_s(mask, &mut rng);
-                    let stream = rng.fork(i as u64);
-                    EpochParticle {
-                        state: ParticleState {
-                            v: MatF::zeros(n, m),
-                            s_local: s.clone(),
-                            f_local: f32::NEG_INFINITY,
-                            s,
-                        },
-                        rng: stream,
-                        fits: Vec::new(),
-                    }
-                })
-                .collect();
+            arena.rngs.clear();
+            for i in 0..cfg.particles {
+                init_particle(&mut arena.s[i * nm..(i + 1) * nm], mask_flat, m, &mut rng);
+                arena.rngs.push(rng.fork(i as u64));
+            }
+            arena.s_local.copy_from_slice(&arena.s);
+            arena.v.fill(0.0);
+            arena.f_local.fill(f32::NEG_INFINITY);
 
             // the fused epoch: K steps per particle against the frozen
             // (S*, S̄) attractors — no cross-particle dependency until
             // the barrier below
-            run_epoch_particles(
-                &mut particles,
+            run_epoch_slices(
+                EpochSlices {
+                    s: &mut arena.s,
+                    v: &mut arena.v,
+                    s_local: &mut arena.s_local,
+                    f_local: &mut arena.f_local,
+                    fits: &mut arena.fits,
+                    rngs: &mut arena.rngs,
+                },
+                &mut arena.scratch,
+                &kernel,
                 &s_star,
                 &s_bar,
-                mask,
-                q,
-                g,
+                mask_flat,
                 cfg.steps,
                 &params,
-                threaded,
-                cfg.threads,
+                workers,
             );
 
             // barrier part 1: merge the per-particle traces (single
@@ -259,8 +508,8 @@ impl PsoMatcher {
                 out.kernel_invocations += cfg.particles as u64;
                 let mut f_sum = 0.0f32;
                 let mut step_best = f32::NEG_INFINITY;
-                for p in &particles {
-                    let f = p.fits[k];
+                for p in 0..cfg.particles {
+                    let f = arena.fits[p * cfg.steps + k];
                     f_sum += f;
                     step_best = step_best.max(f);
                 }
@@ -271,23 +520,24 @@ impl PsoMatcher {
             out.best_fitness = out.best_fitness.max(f_star);
 
             // barrier part 2: fold the particle-local bests into S*
+            // (copy into the episode-lifetime buffer, no clone)
             let mut best_idx: Option<usize> = None;
             let mut best_f = f_star_before;
-            for (i, p) in particles.iter().enumerate() {
-                if p.state.f_local > best_f {
-                    best_f = p.state.f_local;
+            for (i, &f) in arena.f_local.iter().enumerate() {
+                if f > best_f {
+                    best_f = f;
                     best_idx = Some(i);
                 }
             }
             if let Some(i) = best_idx {
-                s_star = particles[i].state.s_local.clone();
+                s_star.copy_from_slice(&arena.s_local[i * nm..(i + 1) * nm]);
             }
 
             // lines 19-25: project, refine, verify, fuse consensus
-            let fitnesses: Vec<f32> = particles.iter().map(|p| p.state.f_local).collect();
-            for p in &particles {
-                let candidate = project_greedy(&p.state.s, mask);
-                let found = if mapping_is_feasible(&candidate, q, g) {
+            for p in 0..cfg.particles {
+                let s_view = &arena.s[p * nm..(p + 1) * nm];
+                let candidate = project_greedy_flat(s_view, mask_flat, n, m);
+                let found = if mapping_is_feasible_csr(&candidate, kernel.q_edges(), g) {
                     Some(candidate)
                 } else {
                     // bounded Ullmann repair (Algorithm 1's UllmannRefine):
@@ -308,7 +558,7 @@ impl PsoMatcher {
                     }
                 };
                 if let Some(mp) = found {
-                    debug_assert!(mapping_is_feasible(&mp, q, g));
+                    debug_assert!(super::fitness::mapping_is_feasible(&mp, q, g));
                     if !out.mappings.contains(&mp) {
                         out.mappings.push(mp);
                     }
@@ -317,169 +567,25 @@ impl PsoMatcher {
                     }
                 }
             }
-            let snapshots: Vec<MatF> =
-                particles.iter().map(|p| p.state.s_local.clone()).collect();
-            s_bar = elite_consensus(&snapshots, &fitnesses, cfg.elite);
+            elite_consensus_flat(
+                &arena.s_local,
+                cfg.particles,
+                n,
+                m,
+                &arena.f_local,
+                cfg.elite,
+                &mut s_bar,
+            );
         }
         out
     }
-}
-
-/// Run every particle's K-step epoch, serially or fanned out over scoped
-/// threads. Particles are fully independent here (frozen attractors,
-/// private RNG streams), so the two modes produce identical results.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn run_epoch_particles(
-    particles: &mut [EpochParticle],
-    s_star: &MatF,
-    s_bar: &MatF,
-    mask: &MatF,
-    q: &MatF,
-    g: &MatF,
-    steps: usize,
-    params: &StepParams,
-    threaded: bool,
-    threads: usize,
-) {
-    let workers = if !threaded {
-        1
-    } else {
-        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let requested = if threads > 0 { threads } else { avail };
-        requested.clamp(1, particles.len().max(1))
-    };
-    if workers <= 1 {
-        for p in particles.iter_mut() {
-            p.fits = run_particle_epoch(
-                &mut p.state,
-                s_star,
-                s_bar,
-                mask,
-                q,
-                g,
-                steps,
-                params,
-                &mut p.rng,
-            );
-        }
-        return;
-    }
-    let chunk = (particles.len() + workers - 1) / workers;
-    std::thread::scope(|scope| {
-        for slab in particles.chunks_mut(chunk) {
-            scope.spawn(move || {
-                for p in slab.iter_mut() {
-                    p.fits = run_particle_epoch(
-                        &mut p.state,
-                        s_star,
-                        s_bar,
-                        mask,
-                        q,
-                        g,
-                        steps,
-                        params,
-                        &mut p.rng,
-                    );
-                }
-            });
-        }
-    });
-}
-
-/// One particle's full epoch: K fused steps with local-best tracking.
-/// Returns the particle's *current* fitness after every step (the
-/// per-step trace the barrier merges).
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn run_particle_epoch(
-    p: &mut ParticleState,
-    s_star: &MatF,
-    s_bar: &MatF,
-    mask: &MatF,
-    q: &MatF,
-    g: &MatF,
-    steps: usize,
-    params: &StepParams,
-    rng: &mut Rng,
-) -> Vec<f32> {
-    let mut fits = Vec::with_capacity(steps);
-    for _k in 0..steps {
-        step_particle(p, s_star, s_bar, mask, params, rng);
-        let f = if params.relaxed {
-            edge_fitness(&p.s, q, g)
-        } else {
-            // discrete coupling (Fig. 2b ablation): evaluate on the
-            // hard-rounded one-hot projection of S
-            let hard = harden(&p.s, mask);
-            edge_fitness(&hard, q, g)
-        };
-        fits.push(f);
-        if f > p.f_local {
-            p.f_local = f;
-            p.s_local = p.s.clone();
-        }
-    }
-    fits
-}
-
-/// Random mask-respecting row-stochastic initialization.
-fn init_particle_s(mask: &MatF, rng: &mut Rng) -> MatF {
-    let mut s = MatF::from_fn(mask.rows(), mask.cols(), |_, _| rng.f32() + 1e-3);
-    s.hadamard_assign(mask);
-    s.row_normalize();
-    s
-}
-
-/// Fused PSO step for one particle (the rust twin of the Pallas kernel).
-/// Flat slice iteration in row-major order — the RNG is consumed three
-/// draws per element exactly as the elementwise kernel folds its key.
-fn step_particle(
-    p: &mut ParticleState,
-    s_star: &MatF,
-    s_bar: &MatF,
-    mask: &MatF,
-    params: &StepParams,
-    rng: &mut Rng,
-) {
-    let ParticleState { s, v, s_local, .. } = p;
-    for ((((s_ij, v_ij), &l_ij), &star_ij), &bar_ij) in s
-        .as_mut_slice()
-        .iter_mut()
-        .zip(v.as_mut_slice().iter_mut())
-        .zip(s_local.as_slice())
-        .zip(s_star.as_slice())
-        .zip(s_bar.as_slice())
-    {
-        let r1 = rng.f32();
-        let r2 = rng.f32();
-        let r3 = rng.f32();
-        let cur = *s_ij;
-        let vel = params.w * *v_ij
-            + params.c1 * r1 * (l_ij - cur)
-            + params.c2 * r2 * (star_ij - cur)
-            + params.c3 * r3 * (bar_ij - cur);
-        *v_ij = vel;
-        *s_ij = (cur + vel).clamp(0.0, 1.0);
-    }
-    s.hadamard_assign(mask);
-    s.row_normalize();
-}
-
-/// Hard rounding to an injective one-hot matrix (discrete ablation).
-fn harden(s: &MatF, mask: &MatF) -> MatF {
-    let assign = project_greedy(s, mask);
-    let mut hard = MatF::zeros(s.rows(), s.cols());
-    for (i, &mj) in assign.iter().enumerate() {
-        if let Some(j) = mj {
-            hard[(i, j)] = 1.0;
-        }
-    }
-    hard
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::fitness::mapping_is_feasible;
     use crate::matcher::{build_mask, ullmann::plant_embedding};
 
     fn chain_problem() -> (MatF, MatF, MatF) {
@@ -555,7 +661,14 @@ mod tests {
     #[test]
     fn kernel_invocations_counted() {
         let (mask, q, g) = chain_problem();
-        let cfg = PsoConfig { early_exit: false, epochs: 2, steps: 4, particles: 8, seed: 1, ..Default::default() };
+        let cfg = PsoConfig {
+            early_exit: false,
+            epochs: 2,
+            steps: 4,
+            particles: 8,
+            seed: 1,
+            ..Default::default()
+        };
         let out = PsoMatcher::new(cfg).run(&mask, &q, &g);
         assert_eq!(out.steps_run, 8);
         assert_eq!(out.kernel_invocations, 64);

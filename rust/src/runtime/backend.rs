@@ -3,13 +3,18 @@
 //! The global controller drives Algorithm 1 one *epoch* at a time
 //! through the [`EpochBackend`] trait: hand in the flat
 //! [`EpochInputs`] (particle states + frozen S*/S̄ attractors + problem
-//! matrices), get back the flat [`EpochOutputs`] (advanced states +
-//! per-particle local bests). Two implementations exist:
+//! matrices) plus a reusable [`EpochOutputs`], get back the advanced
+//! states + per-particle local bests. Two implementations exist:
 //!
 //! * [`NativeEpochBackend`] (always compiled, the default): the pure-rust
 //!   twin of the AOT artifact, reusing the [`crate::matcher::pso`]
 //!   per-particle epoch at the artifact's padded dims. Fans out across
-//!   threads under the `parallel` feature.
+//!   threads under the `parallel` feature. The backend owns a persistent
+//!   per-size-class workspace (sparse fitness kernel, per-worker scratch
+//!   arenas, RNG streams), so a steady-state `run_epoch_into` against a
+//!   caller-reused `EpochOutputs` performs **zero heap allocations** —
+//!   the particle state advances inside the caller's flat buffers, no
+//!   `MatF` is ever materialized.
 //! * [`crate::runtime::EpochRunner`] (`pjrt` feature): the compiled HLO
 //!   artifact through the PJRT CPU client.
 //!
@@ -19,8 +24,11 @@
 
 use anyhow::Result;
 
-use crate::matcher::pso::{run_epoch_particles, EpochParticle, ParticleState, StepParams};
-use crate::util::{MatF, Rng};
+use crate::matcher::pso::{
+    epoch_workers, run_epoch_slices, EpochSlices, StepParams, PARALLEL_WORK_THRESHOLD,
+};
+use crate::matcher::{FitnessKernel, FitnessScratch};
+use crate::util::Rng;
 
 use super::artifact::SizeClass;
 use super::matcher_exec::{EpochInputs, EpochOutputs};
@@ -43,8 +51,17 @@ pub trait EpochBackend {
     fn name(&self) -> &str;
     /// Execution substrate (drives `MatchPath` telemetry).
     fn kind(&self) -> BackendKind;
-    /// Advance every particle by the class's K fused steps.
-    fn run_epoch(&self, inputs: &EpochInputs) -> Result<EpochOutputs>;
+    /// Advance every particle by the class's K fused steps, writing the
+    /// advanced states into `out` (buffers are resized to the class
+    /// dims; pass the same `EpochOutputs` every epoch to keep the
+    /// steady state allocation-free).
+    fn run_epoch_into(&mut self, inputs: &EpochInputs, out: &mut EpochOutputs) -> Result<()>;
+    /// Convenience wrapper allocating fresh outputs per call.
+    fn run_epoch(&mut self, inputs: &EpochInputs) -> Result<EpochOutputs> {
+        let mut out = EpochOutputs::zeros(self.class());
+        self.run_epoch_into(inputs, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Mirror of `python/compile/model.py::SIZE_CLASSES` — the size classes
@@ -56,6 +73,35 @@ pub const NATIVE_SIZE_CLASSES: [(&str, SizeClass); 4] = [
     ("xlarge", SizeClass { n: 64, m: 128, particles: 16, k_steps: 8 }),
 ];
 
+/// Persistent per-size-class scratch: everything `run_epoch_into` needs
+/// beyond the caller's flat buffers, preallocated at worst-case capacity
+/// so the steady state never touches the allocator.
+struct Workspace {
+    /// Sparse fitness kernel; CSR capacity covers a fully dense (Q, G)
+    /// at the class dims, so per-interrupt rebuilds are allocation-free.
+    kernel: FitnessKernel,
+    /// One scratch arena per potential worker (≤ particles).
+    scratch: Vec<FitnessScratch>,
+    /// Per-step fitness record, `particles × k_steps`.
+    fits: Vec<f32>,
+    /// Forked per-particle RNG streams (refilled in place per epoch).
+    rngs: Vec<Rng>,
+}
+
+impl Workspace {
+    fn new(class: SizeClass) -> Self {
+        let (p, n, m) = (class.particles, class.n, class.m);
+        Self {
+            kernel: FitnessKernel::with_capacity(n, m),
+            // worst case one worker per particle — with_threads can ask
+            // for any fan-out without outgrowing the scratch pool
+            scratch: (0..p.max(1)).map(|_| FitnessScratch::new(n, m)).collect(),
+            fits: vec![f32::NEG_INFINITY; p * class.k_steps],
+            rngs: Vec::with_capacity(p),
+        }
+    }
+}
+
 /// The pure-rust epoch executor: same contract as the PJRT artifact,
 /// no XLA anywhere.
 pub struct NativeEpochBackend {
@@ -66,15 +112,17 @@ pub struct NativeEpochBackend {
     /// Continuous relaxation (true = IMMSched; false = the discrete
     /// coupling of the Fig. 2b ablation).
     relaxed: bool,
+    ws: Workspace,
 }
 
 impl NativeEpochBackend {
     pub fn new(name: impl Into<String>, class: SizeClass) -> Self {
-        Self { name: name.into(), class, threads: 0, relaxed: true }
+        Self { name: name.into(), class, threads: 0, relaxed: true, ws: Workspace::new(class) }
     }
 
     /// Cap the intra-epoch worker count (0 = auto). Results are
-    /// identical for any worker count; this only bounds CPU use.
+    /// identical for any worker count; this only bounds CPU use (and
+    /// `with_threads(1)` pins the allocation-free serial path).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
@@ -118,15 +166,11 @@ impl EpochBackend for NativeEpochBackend {
         BackendKind::Native
     }
 
-    fn run_epoch(&self, inputs: &EpochInputs) -> Result<EpochOutputs> {
+    fn run_epoch_into(&mut self, inputs: &EpochInputs, out: &mut EpochOutputs) -> Result<()> {
         inputs.validate(self.class)?;
         let (p_cnt, n, m) = (self.class.particles, self.class.n, self.class.m);
+        let k_steps = self.class.k_steps;
         let nm = n * m;
-        let mask = MatF::from_vec(n, m, inputs.mask.clone());
-        let q = MatF::from_vec(n, n, inputs.q.clone());
-        let g = MatF::from_vec(m, m, inputs.g.clone());
-        let s_star = MatF::from_vec(n, m, inputs.s_star.clone());
-        let s_bar = MatF::from_vec(n, m, inputs.s_bar.clone());
         let params = StepParams {
             w: inputs.coefs[0],
             c1: inputs.coefs[1],
@@ -135,56 +179,60 @@ impl EpochBackend for NativeEpochBackend {
             relaxed: self.relaxed,
         };
 
+        // the epoch advances the particle state *inside* the caller's
+        // output buffers — borrow + copy_from_slice, never a fresh MatF
+        out.s.resize(p_cnt * nm, 0.0);
+        out.s.copy_from_slice(&inputs.s);
+        out.v.resize(p_cnt * nm, 0.0);
+        out.v.copy_from_slice(&inputs.v);
+        out.s_local.resize(p_cnt * nm, 0.0);
+        out.s_local.copy_from_slice(&inputs.s_local);
+        out.f_local.resize(p_cnt, 0.0);
+        out.f_local.copy_from_slice(&inputs.f_local);
+        out.f_last.resize(p_cnt, 0.0);
+
+        let work = p_cnt * k_steps * nm;
+        let threaded =
+            cfg!(feature = "parallel") && p_cnt > 1 && work >= PARALLEL_WORK_THRESHOLD;
+        let workers = epoch_workers(threaded, self.threads, p_cnt);
+
+        let Workspace { kernel, scratch, fits, rngs } = &mut self.ws;
+        kernel.rebuild(&inputs.q, n, &inputs.g, m);
         // one independent RNG stream per particle, forked in index order
         // (the artifact folds its threefry key the same way)
         let mut master = Rng::new(inputs.seed as u64 ^ 0xAE70_C41E);
-        let mut particles: Vec<EpochParticle> = (0..p_cnt)
-            .map(|i| {
-                let span = i * nm..(i + 1) * nm;
-                EpochParticle {
-                    state: ParticleState {
-                        s: MatF::from_vec(n, m, inputs.s[span.clone()].to_vec()),
-                        v: MatF::from_vec(n, m, inputs.v[span.clone()].to_vec()),
-                        s_local: MatF::from_vec(n, m, inputs.s_local[span].to_vec()),
-                        f_local: inputs.f_local[i],
-                    },
-                    rng: master.fork(i as u64),
-                    fits: Vec::new(),
-                }
-            })
-            .collect();
+        rngs.clear();
+        for i in 0..p_cnt {
+            rngs.push(master.fork(i as u64));
+        }
 
-        let work = p_cnt * self.class.k_steps * nm;
-        run_epoch_particles(
-            &mut particles,
-            &s_star,
-            &s_bar,
-            &mask,
-            &q,
-            &g,
-            self.class.k_steps,
+        run_epoch_slices(
+            EpochSlices {
+                s: &mut out.s,
+                v: &mut out.v,
+                s_local: &mut out.s_local,
+                f_local: &mut out.f_local,
+                fits: &mut fits[..p_cnt * k_steps],
+                rngs: &mut rngs[..],
+            },
+            scratch,
+            kernel,
+            &inputs.s_star,
+            &inputs.s_bar,
+            &inputs.mask,
+            k_steps,
             &params,
-            cfg!(feature = "parallel")
-                && p_cnt > 1
-                && work >= crate::matcher::pso::PARALLEL_WORK_THRESHOLD,
-            self.threads,
+            workers,
         );
 
-        let mut out = EpochOutputs {
-            s: Vec::with_capacity(p_cnt * nm),
-            v: Vec::with_capacity(p_cnt * nm),
-            s_local: Vec::with_capacity(p_cnt * nm),
-            f_local: Vec::with_capacity(p_cnt),
-            f_last: Vec::with_capacity(p_cnt),
-        };
-        for p in &particles {
-            out.s.extend_from_slice(p.state.s.as_slice());
-            out.v.extend_from_slice(p.state.v.as_slice());
-            out.s_local.extend_from_slice(p.state.s_local.as_slice());
-            out.f_local.push(p.state.f_local);
-            out.f_last.push(p.fits.last().copied().unwrap_or(f32::NEG_INFINITY));
+        for (i, fl) in out.f_last.iter_mut().enumerate() {
+            *fl = if k_steps > 0 {
+                fits[i * k_steps + k_steps - 1]
+            } else {
+                f32::NEG_INFINITY
+            };
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -230,7 +278,7 @@ mod tests {
     /// stochastic S' rows, finite local bests dominating the final step.
     #[test]
     fn native_epoch_preserves_invariants() {
-        let backend = small_backend();
+        let mut backend = small_backend();
         let class = backend.class();
         let (p, n, m) = (class.particles, class.n, class.m);
         let inputs = random_inputs(class, 1);
@@ -250,10 +298,11 @@ mod tests {
         }
     }
 
-    /// Same inputs → same outputs, regardless of thread interleaving.
+    /// Same inputs → same outputs, regardless of thread interleaving —
+    /// and regardless of whether the outputs buffer is fresh or reused.
     #[test]
     fn native_epoch_is_deterministic() {
-        let backend = small_backend();
+        let mut backend = small_backend();
         let inputs = random_inputs(backend.class(), 2);
         let a = backend.run_epoch(&inputs).expect("epoch a");
         let b = backend.run_epoch(&inputs).expect("epoch b");
@@ -261,6 +310,11 @@ mod tests {
         assert_eq!(a.v, b.v);
         assert_eq!(a.f_local, b.f_local);
         assert_eq!(a.f_last, b.f_last);
+        // reused outputs buffer: identical again
+        let mut reused = EpochOutputs::zeros(backend.class());
+        backend.run_epoch_into(&inputs, &mut reused).expect("epoch c");
+        assert_eq!(a.s, reused.s);
+        assert_eq!(a.f_last, reused.f_last);
     }
 
     /// The worker-count knob bounds CPU use only — never the numbers.
@@ -280,7 +334,7 @@ mod tests {
     /// Padding rows (zero mask) must stay zero through the epoch.
     #[test]
     fn padding_rows_stay_zero() {
-        let backend = small_backend();
+        let mut backend = small_backend();
         let class = backend.class();
         let (p, n, m) = (class.particles, class.n, class.m);
         let mut inputs = random_inputs(class, 3);
@@ -307,7 +361,7 @@ mod tests {
 
     #[test]
     fn wrong_shape_is_rejected() {
-        let backend = small_backend();
+        let mut backend = small_backend();
         let mut inputs = EpochInputs::zeros(backend.class());
         inputs.s.pop();
         assert!(backend.run_epoch(&inputs).is_err());

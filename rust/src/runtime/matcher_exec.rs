@@ -79,6 +79,22 @@ pub struct EpochOutputs {
     pub f_last: Vec<f32>,
 }
 
+impl EpochOutputs {
+    /// Zero-initialized outputs at a class's padded dims. Allocate one
+    /// per episode and pass it to `run_epoch_into` every epoch — the
+    /// native backend then runs allocation-free in steady state.
+    pub fn zeros(class: SizeClass) -> Self {
+        let (p, n, m) = (class.particles, class.n, class.m);
+        Self {
+            s: vec![0.0; p * n * m],
+            v: vec![0.0; p * n * m],
+            s_local: vec![0.0; p * n * m],
+            f_local: vec![f32::NEG_INFINITY; p],
+            f_last: vec![f32::NEG_INFINITY; p],
+        }
+    }
+}
+
 /// A compiled `pso_epoch` executable for one size class.
 #[cfg(feature = "pjrt")]
 pub struct EpochRunner {
@@ -176,8 +192,11 @@ impl super::backend::EpochBackend for EpochRunner {
         super::backend::BackendKind::Pjrt
     }
 
-    fn run_epoch(&self, inputs: &EpochInputs) -> Result<EpochOutputs> {
-        self.run(inputs)
+    fn run_epoch_into(&mut self, inputs: &EpochInputs, out: &mut EpochOutputs) -> Result<()> {
+        // PJRT owns its device buffers; the host-side copy is inherent
+        // to the literal transfer, so no workspace reuse here.
+        *out = self.run(inputs)?;
+        Ok(())
     }
 }
 

@@ -132,21 +132,8 @@ impl MatF {
     /// reciprocal-multiply formulation mirrors the paper's divider-free
     /// datapath and the Pallas kernel.
     pub fn row_normalize(&mut self) {
-        const EPS: f32 = 1e-9;
-        for i in 0..self.rows {
-            let row = self.row_mut(i);
-            let sum: f32 = row.iter().sum();
-            if sum > EPS {
-                let recip = 1.0 / (sum + EPS);
-                for x in row {
-                    *x *= recip;
-                }
-            } else {
-                for x in row {
-                    *x = 0.0;
-                }
-            }
-        }
+        let cols = self.cols;
+        row_normalize_in_place(&mut self.data, cols);
     }
 
     /// Index of the max element in a row (ties -> lowest index).
@@ -164,6 +151,29 @@ impl MatF {
     /// Sum of all entries.
     pub fn sum(&self) -> f32 {
         self.data.iter().sum()
+    }
+}
+
+/// Row-normalize a flat row-major buffer with `cols` columns in place
+/// (all-zero rows stay zero). The slice twin of [`MatF::row_normalize`]
+/// — the matcher hot path runs on borrowed flat buffers, not `MatF`s.
+pub fn row_normalize_in_place(data: &mut [f32], cols: usize) {
+    const EPS: f32 = 1e-9;
+    if cols == 0 {
+        return;
+    }
+    for row in data.chunks_mut(cols) {
+        let sum: f32 = row.iter().sum();
+        if sum > EPS {
+            let recip = 1.0 / (sum + EPS);
+            for x in row {
+                *x *= recip;
+            }
+        } else {
+            for x in row {
+                *x = 0.0;
+            }
+        }
     }
 }
 

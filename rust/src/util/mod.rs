@@ -11,6 +11,6 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
-pub use matrix::MatF;
+pub use matrix::{row_normalize_in_place, MatF};
 pub use rng::Rng;
 pub use stats::Summary;

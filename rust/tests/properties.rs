@@ -2,11 +2,11 @@
 //! (in-repo `immsched::testing` framework — offline proptest substitute,
 //! DESIGN.md §4).
 
-use immsched::graph::{gen_random_dag, is_acyclic, NodeKind};
+use immsched::graph::{gen_random_dag, is_acyclic, Csr, NodeKind};
 use immsched::matcher::{
-    build_mask, edge_fitness, elite_consensus, mapping_is_feasible, project_greedy,
-    project_hungarian, ullmann::plant_embedding, ullmann_find_first, PsoConfig, PsoMatcher,
-    QuantizedMatcher,
+    build_bitmask, build_mask, edge_fitness, elite_consensus, has_empty_row, mapping_is_feasible,
+    mapping_is_feasible_csr, project_greedy, project_hungarian, ullmann::plant_embedding,
+    ullmann_find_first, BitMask, FitnessKernel, PsoConfig, PsoMatcher, QuantizedMatcher,
 };
 use immsched::testing::{property, property_res, Gen};
 use immsched::util::MatF;
@@ -314,6 +314,115 @@ fn prop_degenerate_pso_configs_are_safe() {
             return Err(format!(
                 "degenerate config (zeroed field {zeroed}) produced non-empty outcome"
             ));
+        }
+        Ok(())
+    });
+}
+
+/// The sparse CSR fitness kernel is the dense `edge_fitness` oracle up
+/// to floating-point summation order, on random DAG pairs with random
+/// sparse masks (the masked zeros exercise the kernel's skip path).
+#[test]
+fn prop_sparse_fitness_matches_dense() {
+    property_res("sparse fitness == dense", 60, |g| {
+        let n = g.usize_in(1..10);
+        let m = n + g.usize_in(0..12);
+        let dq = g.f64() * 0.7;
+        let dg = g.f64() * 0.7;
+        let q = gen_random_dag(n, dq, g.rng(), NodeKind::Compute).adjacency();
+        let gg = gen_random_dag(m, dg, g.rng(), NodeKind::Universal).adjacency();
+        let mask = MatF::from_fn(n, m, |_, _| if g.bool(0.7) { 1.0 } else { 0.0 });
+        let mut s = random_stochastic(g, n, m);
+        s.hadamard_assign(&mask);
+        s.row_normalize();
+        let dense = edge_fitness(&s, &q, &gg);
+        let kernel = FitnessKernel::new(&q, &gg);
+        let mut scratch = kernel.scratch();
+        let sparse = kernel.eval(s.as_slice(), &mut scratch);
+        let tol = 1e-3 * (1.0 + dense.abs());
+        if (dense - sparse).abs() > tol {
+            return Err(format!("n={n} m={m}: dense {dense} vs sparse {sparse}"));
+        }
+        Ok(())
+    });
+}
+
+/// Same agreement at every native epoch size class's exact dims (the
+/// shapes the interrupt hot path actually runs).
+#[test]
+fn sparse_fitness_matches_dense_at_all_size_classes() {
+    use immsched::runtime::NATIVE_SIZE_CLASSES;
+    let mut rng = immsched::util::Rng::new(0xC1A55);
+    for &(name, class) in NATIVE_SIZE_CLASSES.iter() {
+        let (n, m) = (class.n, class.m);
+        let q = gen_random_dag(n, (3.0 / n as f64).min(1.0), &mut rng, NodeKind::Compute)
+            .adjacency();
+        let gg = gen_random_dag(m, (3.0 / m as f64).min(1.0), &mut rng, NodeKind::Universal)
+            .adjacency();
+        let mut s = MatF::from_fn(n, m, |_, _| rng.f32() + 1e-3);
+        s.row_normalize();
+        let dense = edge_fitness(&s, &q, &gg);
+        let kernel = FitnessKernel::new(&q, &gg);
+        let mut scratch = kernel.scratch();
+        let sparse = kernel.eval(s.as_slice(), &mut scratch);
+        let tol = 2e-3 * (1.0 + dense.abs());
+        assert!(
+            (dense - sparse).abs() <= tol,
+            "class {name}: dense {dense} vs sparse {sparse}"
+        );
+    }
+}
+
+/// The packed bitset mask is the dense f32 mask bit for bit: same
+/// construction, same empty-row witness, lossless roundtrip. Column
+/// counts beyond 64 cross word boundaries.
+#[test]
+fn prop_bitmask_matches_dense_mask() {
+    property_res("bitmask == dense mask", 60, |g| {
+        let n = g.usize_in(1..8);
+        let m = g.usize_in(1..90);
+        let qd = gen_random_dag(n, g.f64() * 0.6, g.rng(), NodeKind::Compute);
+        let gd = gen_random_dag(m, g.f64() * 0.4, g.rng(), NodeKind::Universal);
+        let bits = build_bitmask(&qd, &gd);
+        let dense = build_mask(&qd, &gd);
+        for i in 0..n {
+            for j in 0..m {
+                if bits.get(i, j) != (dense[(i, j)] != 0.0) {
+                    return Err(format!("bit ({i},{j}) diverges"));
+                }
+            }
+        }
+        if bits.has_empty_row() != has_empty_row(&dense) {
+            return Err("empty-row witness diverges".into());
+        }
+        if BitMask::from_matf(&dense) != bits {
+            return Err("from_matf roundtrip diverges".into());
+        }
+        if (bits.density() - dense.sum() as f64 / (n * m) as f64).abs() > 1e-9 {
+            return Err("density diverges".into());
+        }
+        Ok(())
+    });
+}
+
+/// CSR-based feasibility is the dense scan on arbitrary (also invalid)
+/// mappings: partial, duplicate, out-of-range, wrong-edge.
+#[test]
+fn prop_feasibility_csr_matches_dense() {
+    property_res("feasibility csr == dense", 60, |g| {
+        let n = g.usize_in(2..7);
+        let m = n + g.usize_in(0..8);
+        let qd = gen_random_dag(n, g.f64() * 0.8, g.rng(), NodeKind::Compute);
+        let gd = gen_random_dag(m, g.f64() * 0.6, g.rng(), NodeKind::Universal);
+        let (q, gg) = (qd.adjacency(), gd.adjacency());
+        let q_csr = Csr::from_dense(&q);
+        let mapping: Vec<Option<usize>> = (0..n)
+            .map(|_| if g.bool(0.9) { Some(g.usize_in(0..m + 2)) } else { None })
+            .collect();
+        let dense = mapping_is_feasible(&mapping, &q, &gg);
+        let csr = mapping_is_feasible_csr(&mapping, &q_csr, &gg);
+        if dense != csr {
+            return Err(format!("mapping {mapping:?}: dense {dense} vs csr {csr}"));
         }
         Ok(())
     });
