@@ -13,11 +13,11 @@
 //! (needs `make artifacts` for the PJRT path).
 
 use immsched::accel::{build_target_graph, Platform, PlatformKind};
-use immsched::coordinator::CoordinatorHandle;
-use immsched::matcher::{build_mask, PsoConfig};
+use immsched::coordinator::{MatchPath, MatchProblem, MatchService};
+use immsched::matcher::PsoConfig;
 use immsched::report;
 use immsched::scheduler::{
-    build_trace, metrics, FrameworkKind, SimConfig, Simulator, TraceConfig,
+    build_trace, metrics, FrameworkKind, Priority, SimConfig, Simulator, TraceConfig,
 };
 use immsched::util::table::{fmt_ratio, fmt_time, Table};
 use immsched::workload::WorkloadClass;
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let urgent_count = tasks.iter().filter(|t| t.is_urgent()).count();
     println!("trace: {} tasks ({} urgent interrupts)", tasks.len(), urgent_count);
 
-    let coordinator = CoordinatorHandle::spawn(PsoConfig::default())?;
+    let service = MatchService::spawn(PsoConfig::default())?;
     let preemptible = vec![true; platform.engines];
     let (target, _) = build_target_graph(&platform, &preemptible);
     let mut served = 0usize;
@@ -57,27 +57,23 @@ fn main() -> anyhow::Result<()> {
         if !seen_models.insert(task.model) {
             continue; // one live episode per distinct model
         }
-        let mask = build_mask(&task.tiles.dag, &target);
-        let resp = coordinator.match_blocking(
-            mask,
-            task.tiles.dag.adjacency(),
-            target.adjacency(),
-        )?;
+        let problem = MatchProblem::from_dags(&task.tiles.dag, &target);
+        let resp = service.match_blocking(problem, Priority::Urgent, None)?;
         served += 1;
-        matched += resp.mappings.is_empty().then_some(0).unwrap_or(1);
-        pjrt_used += resp.used_pjrt as usize;
+        matched += usize::from(resp.matched());
+        pjrt_used += usize::from(resp.path == MatchPath::Pjrt);
         host_seconds += resp.host_seconds;
         println!(
             "  interrupt[{}]: {} -> {} mapping(s) via {} in {}",
             served,
             task.model.name(),
             resp.mappings.len(),
-            if resp.used_pjrt { "pjrt" } else { "native" },
+            resp.path.name(),
             fmt_time(resp.host_seconds)
         );
     }
     println!(
-        "coordinator: {served} episodes, {matched} matched, {pjrt_used} on the PJRT path, {} total\n",
+        "match service: {served} episodes, {matched} matched, {pjrt_used} on the PJRT path, {} total\n",
         fmt_time(host_seconds)
     );
 

@@ -2,16 +2,17 @@
 //!
 //! 1. build a DNN workload and tile it (Layer Concatenate-and-Split),
 //! 2. extract the preemptible target graph of the Edge platform,
-//! 3. serve one urgent-task interrupt through the coordinator (PJRT
-//!    epoch artifact if built, native quantized matcher otherwise),
+//! 3. serve one urgent-task interrupt through the `MatchService` (sparse
+//!    typed request → admission → engine chain: PJRT epoch artifact if
+//!    built, native epoch backend otherwise, quantized fallback),
 //! 4. run a short open-ended simulation and print the summary.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use immsched::accel::{build_target_graph, Platform};
-use immsched::coordinator::CoordinatorHandle;
-use immsched::matcher::{build_mask, PsoConfig};
-use immsched::scheduler::{build_trace, metrics, SimConfig, Simulator, TraceConfig};
+use immsched::coordinator::{MatchProblem, MatchService};
+use immsched::matcher::PsoConfig;
+use immsched::scheduler::{build_trace, metrics, Priority, SimConfig, Simulator, TraceConfig};
 use immsched::util::table::fmt_time;
 use immsched::workload::{build_model, tile_layer_graph, ModelId, TilingConfig};
 
@@ -41,15 +42,15 @@ fn main() -> anyhow::Result<()> {
         target.edge_count()
     );
 
-    // --- 3. one interrupt through the coordinator -----------------------
-    let mask = build_mask(&tiles.dag, &target);
-    let coordinator = CoordinatorHandle::spawn(PsoConfig::default())?;
+    // --- 3. one interrupt through the match service ---------------------
+    let problem = MatchProblem::from_dags(&tiles.dag, &target);
+    let service = MatchService::spawn(PsoConfig::default())?;
     let t0 = std::time::Instant::now();
-    let resp = coordinator.match_blocking(mask, tiles.dag.adjacency(), target.adjacency())?;
+    let resp = service.match_blocking(problem, Priority::Urgent, None)?;
     println!(
         "interrupt served in {} via {}: {} feasible mapping(s), best fitness {:.3}",
         fmt_time(t0.elapsed().as_secs_f64()),
-        if resp.used_pjrt { "PJRT artifact" } else { "native fallback" },
+        resp.path.name(),
         resp.mappings.len(),
         resp.best_fitness
     );

@@ -11,7 +11,10 @@
 //!   reused `EpochOutputs` (the interrupt hot path);
 //! * **PSO end-to-end** — serial vs threaded episode on the
 //!   `matcher_micro` planted-embedding scenario, asserting bit-identical
-//!   traces.
+//!   traces;
+//! * **service chain** — one episode through the typed `MatchRequest`
+//!   API (sparse CSR + packed-mask request into `GlobalController`'s
+//!   engine chain), the path every real interrupt takes.
 //!
 //! Results are printed as tables and written to `BENCH_matcher.json` at
 //! the repo root — the perf trajectory file tracked from PR 2 onward.
@@ -20,6 +23,7 @@
 
 use std::time::Instant;
 
+use immsched::coordinator::{CancelToken, GlobalController, MatchProblem};
 use immsched::graph::{gen_dag_layered, Dag, NodeKind};
 use immsched::matcher::{
     build_bitmask, edge_fitness, ullmann::plant_embedding, FitnessKernel, PsoConfig, PsoMatcher,
@@ -27,6 +31,7 @@ use immsched::matcher::{
 use immsched::runtime::{
     EpochBackend, EpochInputs, EpochOutputs, NativeEpochBackend, SizeClass, NATIVE_SIZE_CLASSES,
 };
+use immsched::scheduler::Priority;
 use immsched::util::table::{fmt_time, Table};
 use immsched::util::{MatF, Rng};
 
@@ -74,6 +79,7 @@ struct ClassResult {
     epoch_native_ns: f64,
     pso_serial_ns: Option<f64>,
     pso_threaded_ns: Option<f64>,
+    service_episode_ns: Option<f64>,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -248,6 +254,25 @@ fn bench_class(spec: &ClassSpec, smoke: bool, checksum: &mut f64) -> anyhow::Res
         }));
     }
 
+    // one full episode through the typed MatchRequest API: sparse
+    // request → engine chain (epoch backends + quantized fallback)
+    let mut t_service = None;
+    if spec.run_pso {
+        let problem = MatchProblem { query: qd.csr(), target: gd.csr(), mask: bits.clone() };
+        let mut controller = GlobalController::new(PsoConfig {
+            seed: 7,
+            epochs: 2,
+            repair_budget: 10_000,
+            ..Default::default()
+        })?;
+        let cancel = CancelToken::new();
+        let service_reps = if smoke { 1 } else { 3 };
+        t_service = Some(time_per_rep(service_reps, |i| {
+            let req = problem.request(i as u64, Priority::Urgent, None);
+            *checksum += controller.serve(&req, &cancel).epochs_run as f64;
+        }));
+    }
+
     Ok(ClassResult {
         name: spec.name,
         n,
@@ -261,6 +286,7 @@ fn bench_class(spec: &ClassSpec, smoke: bool, checksum: &mut f64) -> anyhow::Res
         epoch_native_ns: t_epoch * 1e9,
         pso_serial_ns: t_serial.map(|t| t * 1e9),
         pso_threaded_ns: t_threaded.map(|t| t * 1e9),
+        service_episode_ns: t_service.map(|t| t * 1e9),
     })
 }
 
@@ -335,6 +361,7 @@ fn render_tables(results: &[ClassResult]) {
         "epoch (native)",
         "pso serial",
         "pso threaded",
+        "service chain",
     ]);
     for r in results {
         t.row(vec![
@@ -342,6 +369,7 @@ fn render_tables(results: &[ClassResult]) {
             fmt_time(r.epoch_native_ns / 1e9),
             r.pso_serial_ns.map_or("-".into(), |x| fmt_time(x / 1e9)),
             r.pso_threaded_ns.map_or("-".into(), |x| fmt_time(x / 1e9)),
+            r.service_episode_ns.map_or("-".into(), |x| fmt_time(x / 1e9)),
         ]);
     }
     print!("{}", t.render());
@@ -351,7 +379,7 @@ fn render_json(results: &[ClassResult], smoke: bool, threads: usize) -> String {
     let opt = |v: Option<f64>| v.map_or("null".to_string(), |x| format!("{x:.1}"));
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"immsched.bench_matcher/v1\",\n");
+    s.push_str("  \"schema\": \"immsched.bench_matcher/v2\",\n");
     s.push_str(&format!("  \"smoke\": {smoke},\n"));
     s.push_str(&format!("  \"worker_threads\": {threads},\n"));
     s.push_str("  \"classes\": [\n");
@@ -370,10 +398,11 @@ fn render_json(results: &[ClassResult], smoke: bool, threads: usize) -> String {
         ));
         s.push_str(&format!("      \"epoch_native_ns\": {:.1},\n", r.epoch_native_ns));
         s.push_str(&format!(
-            "      \"pso_serial_ns\": {}, \"pso_threaded_ns\": {}\n",
+            "      \"pso_serial_ns\": {}, \"pso_threaded_ns\": {},\n",
             opt(r.pso_serial_ns),
             opt(r.pso_threaded_ns)
         ));
+        s.push_str(&format!("      \"service_episode_ns\": {}\n", opt(r.service_episode_ns)));
         s.push_str(if i + 1 == results.len() { "    }\n" } else { "    },\n" });
     }
     s.push_str("  ],\n");

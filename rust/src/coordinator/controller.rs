@@ -1,29 +1,41 @@
-//! The global controller (paper §3.4): epoch orchestration + consensus
-//! fusion over [`EpochBackend`]-executed PSO epochs.
+//! The global controller (paper §3.4): an ordered [`MatchEngine`] chain
+//! behind the typed [`MatchRequest`] API.
 //!
-//! The controller owns a set of per-size-class epoch backends. In a
-//! default build these are pure-native ([`crate::runtime::NativeEpochBackend`]);
-//! with the `pjrt` feature and built artifacts they are PJRT executables.
-//! Problems larger than every size class degrade to the quantized
-//! native matcher ([`MatchPath::NativeFallback`]).
+//! Engines are consulted in order per request; the first `Served` (or
+//! `Cancelled`) outcome wins, `Unsupported`/`Failed` fall through:
 //!
-//! Interrupts whose compatibility mask has an empty candidate row are
-//! rejected before particle init (§3.2): no total mapping can exist,
-//! so neither the epoch path nor the fallback matcher could ever
-//! succeed.
+//! * [`EpochEngine`] — the paper's path: per-size-class epoch backends
+//!   (pure-native by default, PJRT executables under the `pjrt`
+//!   feature), consensus fusion between epochs, projection + sparse
+//!   feasibility verification on the controller.  Interruptible at the
+//!   epoch barrier via [`CancelToken`].
+//! * [`QuantizedEngine`] — the u8/i32 fixed-point matcher; serves any
+//!   problem shape (the universal fallback).
+//! * [`UllmannEngine`] / [`Vf2Engine`] — the serial baselines (IsoSched
+//!   and the VF2 family), swappable behind the same interface for
+//!   benches and the simulator.
+//!
+//! Requests whose packed compatibility mask has an empty candidate row
+//! are rejected word-wise (§3.2) before any engine runs: no total
+//! mapping can exist.
 
 use anyhow::Result;
 
 use crate::graph::Csr;
 use crate::matcher::consensus::{elite_consensus_flat, rank_fitness_desc};
 use crate::matcher::{
-    has_empty_row, mapping_is_feasible_csr, project_greedy_flat, Mapping, PsoConfig,
-    QuantizedMatcher,
+    mapping_is_feasible_sparse, project_greedy_flat, ullmann_find_first, vf2_find_first, BitMask,
+    Mapping, PsoConfig, QuantizedMatcher,
 };
-use crate::runtime::{BackendKind, EpochBackend, EpochInputs, EpochOutputs, SizeClass};
-use crate::util::{MatF, Rng};
+use crate::runtime::{BackendKind, EpochBackend, EpochInputs, EpochOutputs};
+use crate::util::Rng;
 
-/// Which execution path served a match request.
+use super::service::{
+    CancelToken, DenseCache, EngineBudget, EngineOutcome, EngineReport, EngineWork, MatchEngine,
+    MatchRequest,
+};
+
+/// Which execution path served (or disposed of) a match request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MatchPath {
     /// AOT artifact through PJRT (the accelerated hot path, `pjrt`
@@ -32,15 +44,41 @@ pub enum MatchPath {
     /// Pure-native epoch backend (default build): same epoch contract,
     /// threaded across particles.
     NativeEpoch,
-    /// Native quantized matcher (fallback: no backend fits the problem,
-    /// or an epoch failed).
+    /// Native quantized matcher (universal fallback).
     NativeFallback,
+    /// Serial Ullmann baseline engine.
+    Ullmann,
+    /// Serial VF2 baseline engine.
+    Vf2,
     /// Rejected before any search: a query vertex had an empty
-    /// candidate row in the compatibility mask.
+    /// candidate row in the compatibility mask — or (misconfigured
+    /// custom chains only) no engine could serve the problem shape.
     Rejected,
+    /// Interrupted at an epoch barrier: higher-priority arrival,
+    /// explicit cancel, or mid-episode deadline expiry.
+    Cancelled,
+    /// Shed by admission (expired deadline or bounded-queue eviction);
+    /// never reached the controller.
+    Shed,
 }
 
-/// Result of one interrupt's subgraph-matching episode.
+impl MatchPath {
+    /// Short display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MatchPath::Pjrt => "pjrt",
+            MatchPath::NativeEpoch => "native-epoch",
+            MatchPath::NativeFallback => "quantized",
+            MatchPath::Ullmann => "ullmann",
+            MatchPath::Vf2 => "vf2",
+            MatchPath::Rejected => "rejected",
+            MatchPath::Cancelled => "cancelled",
+            MatchPath::Shed => "shed",
+        }
+    }
+}
+
+/// Result of one request's subgraph-matching episode.
 #[derive(Clone, Debug)]
 pub struct MatchOutcome {
     pub mappings: Vec<Mapping>,
@@ -63,25 +101,195 @@ impl MatchOutcome {
 pub struct ControllerStats {
     pub requests: u64,
     pub matched: u64,
+    /// Requests served past the head of the engine chain.
     pub fallbacks: u64,
-    /// Interrupts rejected by the empty-candidate-row witness.
+    /// Requests rejected by the empty-candidate-row witness.
     pub rejected: u64,
+    /// Episodes interrupted at an epoch barrier.
+    pub cancelled: u64,
     pub epochs_total: u64,
 }
 
-/// The global controller.  Owns the epoch backends; single-threaded by
-/// design (the event loop serializes requests onto it) — the epoch
-/// *inside* a backend may still fan out across particles.
+/// The global controller: owns the ordered engine chain + the shared
+/// dense staging.  Single-threaded by design (the service loop
+/// serializes requests onto it) — the epoch *inside* an engine may still
+/// fan out across particles.
 pub struct GlobalController {
-    config: PsoConfig,
-    backends: Vec<Box<dyn EpochBackend>>,
+    engines: Vec<Box<dyn MatchEngine>>,
+    dense: DenseCache,
+    node_budget: u64,
+    /// Anchor for request deadlines (seconds on the caller's clock →
+    /// host `Instant`); set by the service so deadlines become hard
+    /// mid-episode expiry at epoch barriers.
+    clock_base: Option<std::time::Instant>,
     stats: ControllerStats,
 }
 
 impl GlobalController {
-    /// Build the backend set. With the `pjrt` feature, every usable
+    /// Default chain: the epoch engine (PJRT artifacts when compiled in
+    /// and present, native per-size-class backends otherwise) followed
+    /// by the quantized universal fallback.
+    pub fn new(config: PsoConfig) -> Result<Self> {
+        let engines: Vec<Box<dyn MatchEngine>> = vec![
+            Box::new(EpochEngine::new(config)?),
+            Box::new(QuantizedEngine::new(config)),
+        ];
+        Ok(Self::with_engines(engines))
+    }
+
+    /// Chain with no epoch backends at all — every request takes the
+    /// quantized-matcher fallback (tests / forced fallback).
+    pub fn fallback_only(config: PsoConfig) -> Self {
+        Self::with_engines(vec![Box::new(QuantizedEngine::new(config))])
+    }
+
+    /// Arbitrary engine chain — the baseline-swap hook for benches, the
+    /// CLI and the simulator.
+    pub fn with_engines(engines: Vec<Box<dyn MatchEngine>>) -> Self {
+        Self {
+            engines,
+            dense: DenseCache::default(),
+            node_budget: 1_000_000,
+            clock_base: None,
+            stats: ControllerStats::default(),
+        }
+    }
+
+    /// Cap the node budget handed to serial engines.
+    pub fn with_node_budget(mut self, nodes: u64) -> Self {
+        self.node_budget = nodes;
+        self
+    }
+
+    /// Anchor request deadlines to a host clock instant (the service's
+    /// start).  Without a base, deadlines are admission metadata only.
+    pub fn with_clock_base(mut self, base: std::time::Instant) -> Self {
+        self.clock_base = Some(base);
+        self
+    }
+
+    pub fn stats(&self) -> ControllerStats {
+        self.stats
+    }
+
+    /// Engine names in chain order.
+    pub fn engine_names(&self) -> Vec<&'static str> {
+        self.engines.iter().map(|e| e.name()).collect()
+    }
+
+    /// Serve one request through the engine chain.  `cancel` is the
+    /// request's in-flight token; engines honor it at epoch barriers.
+    pub fn serve(&mut self, req: &MatchRequest<'_>, cancel: &CancelToken) -> MatchOutcome {
+        self.stats.requests += 1;
+        let started = std::time::Instant::now();
+        self.dense.clear();
+
+        // §3.2 fast reject before any engine runs: the packed mask's
+        // word-wise empty-row witness (64 candidates per word) — no
+        // dense scan, no particle init.
+        if req.mask.has_empty_row() {
+            self.stats.rejected += 1;
+            return MatchOutcome {
+                mappings: Vec::new(),
+                best_fitness: f32::NEG_INFINITY,
+                epochs_run: 0,
+                path: MatchPath::Rejected,
+                host_seconds: started.elapsed().as_secs_f64(),
+            };
+        }
+
+        // deadline → hard host-clock expiry, checked at epoch barriers
+        let expires_at = match (self.clock_base, req.deadline) {
+            (Some(base), Some(d)) if d.is_finite() && d >= 0.0 => {
+                base.checked_add(std::time::Duration::from_secs_f64(d.min(1e9)))
+            }
+            _ => None,
+        };
+
+        let mut outcome: Option<MatchOutcome> = None;
+        for (idx, engine) in self.engines.iter_mut().enumerate() {
+            let mut budget = EngineBudget {
+                nodes: self.node_budget,
+                cancel,
+                expires_at,
+                dense: &mut self.dense,
+            };
+            match engine.solve(req, &mut budget) {
+                EngineOutcome::Served(report) => {
+                    if idx > 0 {
+                        self.stats.fallbacks += 1;
+                    }
+                    outcome = Some(MatchOutcome {
+                        mappings: report.mappings,
+                        best_fitness: report.best_fitness,
+                        epochs_run: report.epochs_run,
+                        path: report.path,
+                        host_seconds: 0.0,
+                    });
+                    break;
+                }
+                EngineOutcome::Cancelled { epochs_run } => {
+                    self.stats.cancelled += 1;
+                    outcome = Some(MatchOutcome {
+                        mappings: Vec::new(),
+                        best_fitness: f32::NEG_INFINITY,
+                        epochs_run,
+                        path: MatchPath::Cancelled,
+                        host_seconds: 0.0,
+                    });
+                    break;
+                }
+                EngineOutcome::Unsupported => continue,
+                EngineOutcome::Failed(e) => {
+                    crate::log_warn!("engine '{}' failed: {e}; trying next", engine.name());
+                    continue;
+                }
+            }
+        }
+        let mut outcome = outcome.unwrap_or_else(|| {
+            crate::log_warn!("no engine in the chain served a {}x{} request", req.n(), req.m());
+            self.stats.rejected += 1;
+            MatchOutcome {
+                mappings: Vec::new(),
+                best_fitness: f32::NEG_INFINITY,
+                epochs_run: 0,
+                path: MatchPath::Rejected,
+                host_seconds: 0.0,
+            }
+        });
+        outcome.host_seconds = started.elapsed().as_secs_f64();
+        if outcome.matched() {
+            self.stats.matched += 1;
+        }
+        self.stats.epochs_total += outcome.epochs_run as u64;
+        outcome
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EpochEngine — the PSO/epoch path (paper Algorithm 1)
+// ---------------------------------------------------------------------------
+
+/// T-epoch consensus-guided search over per-size-class epoch backends.
+///
+/// The request stays sparse until this boundary: the packed mask is
+/// expanded once into episode staging, and the CSR adjacencies are
+/// scattered straight into the backend's padded flat inputs — the f32
+/// interchange the artifact calling convention pins.  The cancel token
+/// is honored between epochs (never mid-kernel).
+pub struct EpochEngine {
+    config: PsoConfig,
+    backends: Vec<Box<dyn EpochBackend>>,
+    /// Unpadded n×m f32 mask staging (episode lifetime, reused).
+    mask_nm: Vec<f32>,
+    /// Unpadded n×m candidate staging for projection.
+    cand: Vec<f32>,
+}
+
+impl EpochEngine {
+    /// Build the backend set.  With the `pjrt` feature, every usable
     /// artifact in the registry is compiled; missing/corrupt artifacts
-    /// are tolerated (logged + skipped). Whenever no PJRT backend comes
+    /// are tolerated (logged + skipped).  Whenever no PJRT backend comes
     /// up — or the feature is off — the native epoch backends serve the
     /// default size classes, so a fresh checkout always has a working
     /// epoch path.
@@ -119,17 +327,12 @@ impl GlobalController {
                 })
                 .collect();
         }
-        Ok(Self { config, backends, stats: ControllerStats::default() })
+        Ok(Self::with_backends(config, backends))
     }
 
-    /// A controller with no epoch backends at all — every request takes
-    /// the quantized-matcher fallback (tests / forced fallback).
-    pub fn native_only(config: PsoConfig) -> Self {
-        Self { config, backends: Vec::new(), stats: ControllerStats::default() }
-    }
-
-    pub fn stats(&self) -> ControllerStats {
-        self.stats
+    /// Explicit backend set (tests / custom size classes).
+    pub fn with_backends(config: PsoConfig, backends: Vec<Box<dyn EpochBackend>>) -> Self {
+        Self { config, backends, mask_nm: Vec::new(), cand: Vec::new() }
     }
 
     /// Whether any PJRT-compiled backend is installed.
@@ -137,91 +340,38 @@ impl GlobalController {
         self.backends.iter().any(|b| b.kind() == BackendKind::Pjrt)
     }
 
-    /// Whether any epoch backend (native or PJRT) is installed.
-    pub fn has_epoch_backend(&self) -> bool {
-        !self.backends.is_empty()
-    }
-
-    /// Serve one interrupt: find feasible mappings of `query` into
-    /// `target` under `mask`.
-    pub fn find_mapping(&mut self, mask: &MatF, q: &MatF, g: &MatF) -> MatchOutcome {
-        self.stats.requests += 1;
-        let started = std::time::Instant::now();
-
-        // §3.2 fast reject, before particle init: an empty candidate
-        // row means no total mapping exists. The mask arrives unpacked
-        // (f32, the PSO/artifact interchange form), so the short-circuit
-        // dense scan is the allocation-free check here; callers that
-        // already hold a packed mask get the word-wise
-        // `BitMask::has_empty_row` — the two witnesses are
-        // property-tested equal (`prop_bitmask_matches_dense_mask`).
-        if has_empty_row(mask) {
-            self.stats.rejected += 1;
-            return MatchOutcome {
-                mappings: Vec::new(),
-                best_fitness: f32::NEG_INFINITY,
-                epochs_run: 0,
-                path: MatchPath::Rejected,
-                host_seconds: started.elapsed().as_secs_f64(),
-            };
-        }
-
-        let (n, m) = (q.rows(), g.rows());
-        let backend_idx = self.backends.iter().position(|b| b.class().fits(n, m));
-
-        let mut outcome = match backend_idx {
-            Some(idx) => match self.run_backend(idx, mask, q, g) {
-                Ok(o) => o,
-                Err(e) => {
-                    crate::log_warn!("epoch backend failed: {e:#}; native fallback");
-                    self.stats.fallbacks += 1;
-                    self.run_native(mask, q, g)
-                }
-            },
-            None => {
-                if !self.backends.is_empty() {
-                    crate::log_warn!("problem {n}x{m} exceeds all size classes; native fallback");
-                }
-                self.stats.fallbacks += 1;
-                self.run_native(mask, q, g)
-            }
-        };
-        outcome.host_seconds = started.elapsed().as_secs_f64();
-        if outcome.matched() {
-            self.stats.matched += 1;
-        }
-        self.stats.epochs_total += outcome.epochs_run as u64;
-        outcome
-    }
-
-    /// T-epoch outer loop over one epoch backend: the paper's consensus-
-    /// guided exploration, with projection + verification on the
-    /// controller. Episode-lifetime buffers (inputs, outputs, candidate
-    /// staging, S*/S̄) are allocated once up front and reused every
-    /// epoch.
-    fn run_backend(
+    fn run_episode(
         &mut self,
         backend_idx: usize,
-        mask: &MatF,
-        q: &MatF,
-        g: &MatF,
-    ) -> Result<MatchOutcome> {
+        req: &MatchRequest<'_>,
+        budget: &mut EngineBudget<'_>,
+    ) -> Result<EngineOutcome> {
         let cfg = self.config;
-        let backend = &mut self.backends[backend_idx];
+        let Self { backends, mask_nm, cand, .. } = self;
+        let backend = &mut backends[backend_idx];
         let class = backend.class();
-        let (n, m) = (q.rows(), g.rows());
+        let (n, m) = (req.n(), req.m());
         let (pn, pm, parts) = (class.n, class.m, class.particles);
         let mut rng = Rng::new(cfg.seed ^ 0xC0DE);
 
-        // padded, flat inputs; padding rows keep zero mask + zero S
+        // Expand the packed mask once into episode staging; together
+        // with the padded scatters below this is the artifact-boundary
+        // densification — the request itself stays sparse.
+        mask_nm.clear();
+        mask_nm.resize(n * m, 0.0);
+        for i in 0..n {
+            for j in 0..m {
+                if req.mask.get(i, j) {
+                    mask_nm[i * m + j] = 1.0;
+                }
+            }
+        }
+
         let mut inputs = EpochInputs::zeros(class);
         inputs.coefs = [cfg.w, cfg.c1, cfg.c2, cfg.c3];
-        pad_into(&mut inputs.mask, mask, pn, pm);
-        pad_into(&mut inputs.q, q, pn, pn);
-        pad_into(&mut inputs.g, g, pm, pm);
-
-        // query edge list for the per-candidate verification
-        let q_csr = Csr::from_dense(q);
+        pad_rows(&mut inputs.mask, mask_nm, n, m, pm);
+        pad_edges(&mut inputs.q, req.query, pn);
+        pad_edges(&mut inputs.g, req.target, pm);
 
         let mut best_fitness = f32::NEG_INFINITY;
         let mut mappings: Vec<Mapping> = Vec::new();
@@ -230,17 +380,22 @@ impl GlobalController {
         let mut have_star = false;
         let mut epochs_run = 0;
         let mut epoch_out = EpochOutputs::zeros(class);
-        // unpadded candidate staging (top-left n×m of a padded particle)
-        let mut cand = vec![0.0f32; n * m];
+        cand.clear();
+        cand.resize(n * m, 0.0);
 
         for epoch in 0..cfg.epochs {
+            // The paper's interruptibility point: a higher-priority
+            // arrival (or an expired deadline) stops the episode between
+            // epochs, never mid-kernel.
+            if budget.interrupted() {
+                return Ok(EngineOutcome::Cancelled { epochs_run });
+            }
             epochs_run += 1;
             // fresh particles every epoch (Algorithm 1 line 4)
             for p in 0..parts {
                 init_padded_particle(
                     &mut inputs.s[p * pn * pm..(p + 1) * pn * pm],
-                    mask,
-                    pn,
+                    req.mask,
                     pm,
                     &mut rng,
                 );
@@ -284,8 +439,9 @@ impl GlobalController {
                 for i in 0..n {
                     cand[i * m..(i + 1) * m].copy_from_slice(&flat[i * pm..i * pm + m]);
                 }
-                let candidate = project_greedy_flat(&cand, mask.as_slice(), n, m);
-                if mapping_is_feasible_csr(&candidate, &q_csr, g) && !mappings.contains(&candidate)
+                let candidate = project_greedy_flat(cand, mask_nm, n, m);
+                if mapping_is_feasible_sparse(&candidate, req.query, req.target)
+                    && !mappings.contains(&candidate)
                 {
                     mappings.push(candidate);
                 }
@@ -295,9 +451,15 @@ impl GlobalController {
             }
         }
 
-        // final repair attempt if the swarm converged but projection failed
+        let mut work =
+            EngineWork { steps_run: epochs_run * class.k_steps * parts, ..Default::default() };
         if mappings.is_empty() {
-            let (repaired, _) = crate::matcher::ullmann_find_first(mask, q, g, cfg.repair_budget);
+            // final repair attempt if the swarm converged but projection
+            // failed — the bounded serial search over the dense forms
+            // (built at most once per episode, shared down the chain)
+            let (mask_d, q_d, g_d) = budget.dense.get(req);
+            let (repaired, stats) = ullmann_find_first(mask_d, q_d, g_d, cfg.repair_budget);
+            work.repair_nodes = stats.nodes_visited;
             if let Some(mp) = repaired {
                 mappings.push(mp);
             }
@@ -307,53 +469,162 @@ impl GlobalController {
             BackendKind::Pjrt => MatchPath::Pjrt,
             BackendKind::Native => MatchPath::NativeEpoch,
         };
-        Ok(MatchOutcome { mappings, best_fitness, epochs_run, path, host_seconds: 0.0 })
+        Ok(EngineOutcome::Served(EngineReport { mappings, best_fitness, epochs_run, path, work }))
+    }
+}
+
+impl MatchEngine for EpochEngine {
+    fn name(&self) -> &'static str {
+        "epoch"
     }
 
-    fn run_native(&mut self, mask: &MatF, q: &MatF, g: &MatF) -> MatchOutcome {
+    fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome {
+        let (n, m) = (req.n(), req.m());
+        let Some(idx) = self.backends.iter().position(|b| b.class().fits(n, m)) else {
+            return EngineOutcome::Unsupported;
+        };
+        match self.run_episode(idx, req, budget) {
+            Ok(outcome) => outcome,
+            Err(e) => EngineOutcome::Failed(format!("{e:#}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuantizedEngine — the u8/i32 fixed-point universal fallback
+// ---------------------------------------------------------------------------
+
+/// The quantized matcher behind the engine interface.  Serves any
+/// problem shape; its op counters feed the on-accelerator cost model.
+pub struct QuantizedEngine {
+    config: PsoConfig,
+}
+
+impl QuantizedEngine {
+    pub fn new(config: PsoConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl MatchEngine for QuantizedEngine {
+    fn name(&self) -> &'static str {
+        "quantized"
+    }
+
+    fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome {
+        if budget.interrupted() {
+            return EngineOutcome::Cancelled { epochs_run: 0 };
+        }
+        let (mask, q, g) = budget.dense.get(req);
         let out = QuantizedMatcher::new(self.config).run(mask, q, g);
-        MatchOutcome {
-            mappings: out.mappings,
+        EngineOutcome::Served(EngineReport {
             best_fitness: out.best_fitness,
             epochs_run: out.epochs_run,
             path: MatchPath::NativeFallback,
-            host_seconds: 0.0,
+            work: EngineWork {
+                steps_run: out.steps_run,
+                mac_ops: out.mac_ops,
+                eltwise_ops: out.eltwise_ops,
+                argmax_ops: out.argmax_ops,
+                repair_nodes: out.repair_nodes,
+                ..Default::default()
+            },
+            mappings: out.mappings,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serial baseline engines — Ullmann (IsoSched) and VF2
+// ---------------------------------------------------------------------------
+
+/// Serial Ullmann behind the engine interface (the IsoSched baseline).
+pub struct UllmannEngine;
+
+impl MatchEngine for UllmannEngine {
+    fn name(&self) -> &'static str {
+        "ullmann"
+    }
+
+    fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome {
+        if budget.interrupted() {
+            return EngineOutcome::Cancelled { epochs_run: 0 };
         }
-    }
-
-    /// Size class the controller would use (None = fallback).
-    pub fn class_for(&self, n: usize, m: usize) -> Option<SizeClass> {
-        self.backends.iter().find(|b| b.class().fits(n, m)).map(|b| b.class())
+        let (mask, q, g) = budget.dense.get(req);
+        let (found, stats) = ullmann_find_first(mask, q, g, budget.nodes);
+        let mappings: Vec<Mapping> = found.into_iter().collect();
+        EngineOutcome::Served(EngineReport {
+            best_fitness: if mappings.is_empty() { f32::NEG_INFINITY } else { 0.0 },
+            epochs_run: 0,
+            path: MatchPath::Ullmann,
+            work: EngineWork {
+                nodes_visited: stats.nodes_visited,
+                refine_passes: stats.refine_passes,
+                ..Default::default()
+            },
+            mappings,
+        })
     }
 }
 
-/// Copy `src` (r×c) into the top-left of a padded flat (pr×pc) buffer.
-fn pad_into(dst: &mut [f32], src: &MatF, pr: usize, pc: usize) {
-    assert!(src.rows() <= pr && src.cols() <= pc);
+/// Serial VF2 behind the engine interface (the second serial baseline).
+pub struct Vf2Engine;
+
+impl MatchEngine for Vf2Engine {
+    fn name(&self) -> &'static str {
+        "vf2"
+    }
+
+    fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome {
+        if budget.interrupted() {
+            return EngineOutcome::Cancelled { epochs_run: 0 };
+        }
+        let (mask, q, g) = budget.dense.get(req);
+        let (found, stats) = vf2_find_first(mask, q, g, budget.nodes);
+        let mappings: Vec<Mapping> = found.into_iter().collect();
+        EngineOutcome::Served(EngineReport {
+            best_fitness: if mappings.is_empty() { f32::NEG_INFINITY } else { 0.0 },
+            epochs_run: 0,
+            path: MatchPath::Vf2,
+            work: EngineWork { nodes_visited: stats.states, ..Default::default() },
+            mappings,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Padding helpers — the artifact-boundary densification
+// ---------------------------------------------------------------------------
+
+/// Copy an r×c flat dense block into the top-left of a padded flat
+/// buffer with `pc` columns (padding stays zero).
+fn pad_rows(dst: &mut [f32], src: &[f32], r: usize, c: usize, pc: usize) {
+    debug_assert!(src.len() == r * c && dst.len() >= r * pc);
     dst.iter_mut().for_each(|x| *x = 0.0);
-    for i in 0..src.rows() {
-        dst[i * pc..i * pc + src.cols()].copy_from_slice(src.row(i));
-    }
-}
-
-/// Extract the top-left (r×c) of a padded flat (pr×pc) buffer.
-#[cfg(test)]
-fn unpad(flat: &[f32], pr: usize, pc: usize, r: usize, c: usize) -> MatF {
-    assert!(r <= pr && c <= pc);
-    let mut out = MatF::zeros(r, c);
     for i in 0..r {
-        out.row_mut(i).copy_from_slice(&flat[i * pc..i * pc + c]);
+        dst[i * pc..i * pc + c].copy_from_slice(&src[i * c..(i + 1) * c]);
     }
-    out
 }
 
-/// Random mask-respecting row-stochastic init of one padded particle.
-fn init_padded_particle(flat: &mut [f32], mask: &MatF, pn: usize, pm: usize, rng: &mut Rng) {
+/// Scatter a CSR adjacency's edges into a padded pc×pc flat {0,1}
+/// buffer.
+fn pad_edges(dst: &mut [f32], adj: &Csr, pc: usize) {
+    debug_assert!(adj.nodes() <= pc && dst.len() == pc * pc);
+    dst.iter_mut().for_each(|x| *x = 0.0);
+    for (u, v) in adj.edges() {
+        dst[u as usize * pc + v as usize] = 1.0;
+    }
+}
+
+/// Random mask-respecting row-stochastic init of one padded particle,
+/// straight off the packed mask (consumes the RNG stream in the same
+/// order as the dense-mask init it replaces).
+fn init_padded_particle(flat: &mut [f32], mask: &BitMask, pm: usize, rng: &mut Rng) {
     flat.iter_mut().for_each(|x| *x = 0.0);
     for i in 0..mask.rows() {
         let mut sum = 0.0;
         for j in 0..mask.cols() {
-            if mask[(i, j)] != 0.0 {
+            if mask.get(i, j) {
                 let v = rng.f32() + 1e-3;
                 flat[i * pm + j] = v;
                 sum += v;
@@ -365,57 +636,65 @@ fn init_padded_particle(flat: &mut [f32], mask: &MatF, pn: usize, pm: usize, rng
             }
         }
     }
-    let _ = pn;
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{gen_chain, NodeKind};
-    use crate::matcher::{build_mask, mapping_is_feasible};
+    use crate::coordinator::service::MatchProblem;
+    use crate::graph::{gen_chain, Dag, NodeKind};
+    use crate::matcher::build_mask;
+    use crate::scheduler::Priority;
 
-    fn chain_problem(n: usize, m: usize) -> (MatF, MatF, MatF) {
+    fn chain_problem(n: usize, m: usize) -> MatchProblem {
         let qd = gen_chain(n, NodeKind::Compute);
         let gd = gen_chain(m, NodeKind::Universal);
-        (build_mask(&qd, &gd), qd.adjacency(), gd.adjacency())
+        MatchProblem::from_dags(&qd, &gd)
+    }
+
+    fn serve(ctl: &mut GlobalController, problem: &MatchProblem) -> MatchOutcome {
+        let cancel = CancelToken::new();
+        ctl.serve(&problem.request(1, Priority::Urgent, None), &cancel)
     }
 
     #[test]
-    fn native_fallback_matches() {
-        let (mask, q, g) = chain_problem(4, 8);
-        let mut ctl = GlobalController::native_only(PsoConfig { seed: 3, ..Default::default() });
-        let out = ctl.find_mapping(&mask, &q, &g);
+    fn fallback_only_serves_quantized() {
+        let problem = chain_problem(4, 8);
+        let mut ctl = GlobalController::fallback_only(PsoConfig { seed: 3, ..Default::default() });
+        let out = serve(&mut ctl, &problem);
         assert_eq!(out.path, MatchPath::NativeFallback);
         assert!(out.matched());
-        assert!(mapping_is_feasible(&out.mappings[0], &q, &g));
-        assert_eq!(ctl.stats().fallbacks, 1);
+        assert!(mapping_is_feasible_sparse(&out.mappings[0], &problem.query, &problem.target));
         assert_eq!(ctl.stats().matched, 1);
+        assert_eq!(ctl.stats().fallbacks, 0, "head-of-chain service is not a fallback");
     }
 
     /// A default controller always has a working epoch path, even with
     /// no artifacts and no XLA anywhere.
     #[test]
-    fn default_controller_serves_native_epoch() {
+    fn default_controller_serves_epoch_chain() {
         let mut ctl = GlobalController::new(PsoConfig { seed: 5, ..Default::default() })
             .expect("controller");
-        assert!(ctl.has_epoch_backend());
-        let (mask, q, g) = chain_problem(4, 8);
-        let out = ctl.find_mapping(&mask, &q, &g);
-        if !ctl.has_pjrt() {
-            assert_eq!(out.path, MatchPath::NativeEpoch);
-        }
+        assert_eq!(ctl.engine_names(), vec!["epoch", "quantized"]);
+        let problem = chain_problem(4, 8);
+        let out = serve(&mut ctl, &problem);
+        assert!(
+            matches!(out.path, MatchPath::NativeEpoch | MatchPath::Pjrt),
+            "unexpected path {:?}",
+            out.path
+        );
         assert!(out.matched(), "epoch path found no mapping (fitness {})", out.best_fitness);
-        assert!(mapping_is_feasible(&out.mappings[0], &q, &g));
+        assert!(mapping_is_feasible_sparse(&out.mappings[0], &problem.query, &problem.target));
         assert_eq!(ctl.stats().fallbacks, 0);
     }
 
     #[test]
     fn epoch_path_is_deterministic() {
-        let (mask, q, g) = chain_problem(4, 8);
+        let problem = chain_problem(4, 8);
         let run = || {
             let mut ctl = GlobalController::new(PsoConfig { seed: 11, ..Default::default() })
                 .expect("controller");
-            ctl.find_mapping(&mask, &q, &g)
+            serve(&mut ctl, &problem)
         };
         let a = run();
         let b = run();
@@ -424,47 +703,53 @@ mod tests {
         assert_eq!(a.epochs_run, b.epochs_run);
     }
 
-    /// An interrupt whose mask has an empty candidate row is rejected
-    /// before any epoch runs — no backend work, no fallback work.
+    /// A request whose mask has an empty candidate row is rejected
+    /// before any engine runs — word-wise on the packed mask.
     #[test]
     fn infeasible_mask_is_rejected_before_search() {
-        let (mut mask, q, g) = chain_problem(4, 8);
+        let qd = gen_chain(4, NodeKind::Compute);
+        let gd = gen_chain(8, NodeKind::Universal);
+        let mut mask = build_mask(&qd, &gd);
         for j in 0..mask.cols() {
             mask[(2, j)] = 0.0; // query vertex 2 has no candidates
         }
+        let problem = MatchProblem::from_dense(&mask, &qd.adjacency(), &gd.adjacency());
         let mut ctl =
             GlobalController::new(PsoConfig { seed: 9, ..Default::default() }).expect("controller");
-        let out = ctl.find_mapping(&mask, &q, &g);
+        let out = serve(&mut ctl, &problem);
         assert_eq!(out.path, MatchPath::Rejected);
         assert!(!out.matched());
         assert_eq!(out.epochs_run, 0);
         assert_eq!(ctl.stats().rejected, 1);
         assert_eq!(ctl.stats().epochs_total, 0);
-        // the fallback-only controller rejects identically
-        let mut fallback = GlobalController::native_only(PsoConfig::default());
-        assert_eq!(fallback.find_mapping(&mask, &q, &g).path, MatchPath::Rejected);
+        // the fallback-only chain rejects identically
+        let mut fallback = GlobalController::fallback_only(PsoConfig::default());
+        assert_eq!(serve(&mut fallback, &problem).path, MatchPath::Rejected);
     }
 
     #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_path_matches_when_artifacts_present() {
-        let mut ctl = match GlobalController::new(PsoConfig { seed: 5, ..Default::default() }) {
-            Ok(c) => c,
+        let engine = match EpochEngine::new(PsoConfig { seed: 5, ..Default::default() }) {
+            Ok(e) => e,
             Err(_) => return,
         };
-        if !ctl.has_pjrt() {
+        if !engine.has_pjrt() {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let (mask, q, g) = chain_problem(4, 8);
-        let out = ctl.find_mapping(&mask, &q, &g);
+        let mut ctl = GlobalController::with_engines(vec![
+            Box::new(engine),
+            Box::new(QuantizedEngine::new(PsoConfig { seed: 5, ..Default::default() })),
+        ]);
+        let problem = chain_problem(4, 8);
+        let out = serve(&mut ctl, &problem);
         assert_eq!(out.path, MatchPath::Pjrt);
         assert!(out.matched(), "PJRT path found no mapping (fitness {})", out.best_fitness);
-        assert!(mapping_is_feasible(&out.mappings[0], &q, &g));
     }
 
     #[test]
-    fn oversized_problem_falls_back() {
+    fn oversized_problem_falls_through_to_quantized() {
         let mut ctl = match GlobalController::new(PsoConfig::default()) {
             Ok(c) => c,
             Err(_) => return,
@@ -472,28 +757,95 @@ mod tests {
         // 200 query vertices exceeds every size class
         let big_q = gen_chain(200, NodeKind::Compute);
         let big_g = gen_chain(210, NodeKind::Universal);
-        let mask = build_mask(&big_q, &big_g);
-        let out = ctl.find_mapping(&mask, &big_q.adjacency(), &big_g.adjacency());
+        let problem = MatchProblem::from_dags(&big_q, &big_g);
+        let out = serve(&mut ctl, &problem);
         assert_eq!(out.path, MatchPath::NativeFallback);
+        assert_eq!(ctl.stats().fallbacks, 1);
     }
 
     #[test]
-    fn class_for_picks_smallest_fitting_backend() {
-        let ctl = GlobalController::new(PsoConfig::default()).expect("controller");
-        let small = ctl.class_for(4, 8).expect("4x8 must fit");
-        assert!(small.fits(4, 8));
-        assert!(ctl.class_for(500, 500).is_none());
+    fn serial_engines_serve_through_the_same_chain_api() {
+        let problem = chain_problem(4, 8);
+        let chains: Vec<(Box<dyn MatchEngine>, MatchPath)> = vec![
+            (
+                Box::new(QuantizedEngine::new(PsoConfig { seed: 2, ..Default::default() })),
+                MatchPath::NativeFallback,
+            ),
+            (Box::new(UllmannEngine), MatchPath::Ullmann),
+            (Box::new(Vf2Engine), MatchPath::Vf2),
+        ];
+        for (engine, want) in chains {
+            let mut ctl = GlobalController::with_engines(vec![engine]);
+            let out = serve(&mut ctl, &problem);
+            assert_eq!(out.path, want);
+            assert!(out.matched(), "{want:?} engine failed the chain problem");
+            assert!(mapping_is_feasible_sparse(&out.mappings[0], &problem.query, &problem.target));
+        }
     }
 
     #[test]
-    fn pad_unpad_roundtrip() {
-        let src = MatF::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
-        let mut flat = vec![0.0; 8 * 16];
-        pad_into(&mut flat, &src, 8, 16);
-        let back = unpad(&flat, 8, 16, 3, 5);
-        assert_eq!(back, src);
-        // padding region is zero
-        assert_eq!(flat[3 * 16], 0.0);
-        assert_eq!(flat[5], 0.0);
+    fn unsupported_head_engine_falls_through() {
+        // an epoch engine with no backends serves nothing; the chain
+        // must fall through to the quantized engine and count a fallback
+        let cfg = PsoConfig { seed: 4, ..Default::default() };
+        let mut ctl = GlobalController::with_engines(vec![
+            Box::new(EpochEngine::with_backends(cfg, Vec::new())),
+            Box::new(QuantizedEngine::new(cfg)),
+        ]);
+        let problem = chain_problem(4, 8);
+        let out = serve(&mut ctl, &problem);
+        assert_eq!(out.path, MatchPath::NativeFallback);
+        assert_eq!(ctl.stats().fallbacks, 1);
+    }
+
+    #[test]
+    fn padding_helpers_scatter_and_zero() {
+        let src = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2×3
+        let mut dst = vec![9.0; 4 * 8];
+        pad_rows(&mut dst, &src, 2, 3, 8);
+        assert_eq!(&dst[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(dst[3], 0.0);
+        assert_eq!(&dst[8..11], &[4.0, 5.0, 6.0]);
+        assert!(dst[16..].iter().all(|&x| x == 0.0));
+
+        let mut diamond = Dag::with_nodes(4, NodeKind::Compute);
+        diamond.add_edge(0, 1);
+        diamond.add_edge(0, 2);
+        diamond.add_edge(1, 3);
+        diamond.add_edge(2, 3);
+        let csr = diamond.csr();
+        let mut adj = vec![9.0f32; 6 * 6];
+        pad_edges(&mut adj, &csr, 6);
+        let dense = diamond.adjacency();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(adj[i * 6 + j], dense[(i, j)], "({i},{j})");
+            }
+        }
+        assert!(adj[4 * 6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn particle_init_respects_packed_mask() {
+        let qd = gen_chain(3, NodeKind::Compute);
+        let gd = gen_chain(6, NodeKind::Universal);
+        let problem = MatchProblem::from_dags(&qd, &gd);
+        let mut rng = Rng::new(7);
+        let pm = 8;
+        let mut flat = vec![0.5f32; 4 * pm];
+        init_padded_particle(&mut flat, &problem.mask, pm, &mut rng);
+        let dense = problem.mask.to_matf();
+        for i in 0..3 {
+            let mut sum = 0.0;
+            for j in 0..6 {
+                if dense[(i, j)] == 0.0 {
+                    assert_eq!(flat[i * pm + j], 0.0, "masked-out entry ({i},{j}) nonzero");
+                }
+                sum += flat[i * pm + j];
+            }
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sum {sum}");
+        }
+        // padding row untouched by mass
+        assert!(flat[3 * pm..].iter().all(|&x| x == 0.0));
     }
 }

@@ -1,22 +1,34 @@
-//! L3 coordinator: the interrupt-driven control plane.
+//! L3 coordinator: the interrupt-driven control plane behind one typed
+//! front door.
 //!
-//! * [`controller`] — the **global controller** of paper §3.4: owns the
-//!   per-size-class epoch backends (pure-native by default, PJRT
-//!   executables under the `pjrt` feature), launches PSO epochs, fuses
-//!   multi-particle results into the global best `S*` and the elite
-//!   consensus `S̄` between epochs, projects + Ullmann-verifies
-//!   candidates, and manages the feasible-mapping set.  Falls back to
-//!   the native quantized matcher when no backend fits (or artifacts
-//!   are missing/corrupt — the failure injection path).
-//! * [`event_loop`] — the interrupt service thread: urgent requests
-//!   arrive over a channel, are matched on the controller thread (which
-//!   exclusively owns the runtime backends — no locks on the hot path),
-//!   and answered over per-request response channels.
+//! * [`service`] — the **`MatchService` API**: sparse owned problems
+//!   ([`MatchProblem`]) and borrowed requests ([`MatchRequest`]) with
+//!   priority/deadline metadata, the pluggable [`MatchEngine`] trait,
+//!   cooperative [`CancelToken`] cancellation, and the threaded service
+//!   front-end that wires admission to the controller.
+//! * [`controller`] — the **global controller** of paper §3.4: an
+//!   ordered engine chain ([`EpochEngine`] → [`QuantizedEngine`] by
+//!   default, serial [`UllmannEngine`]/[`Vf2Engine`] swappable in),
+//!   word-wise empty-row rejection on the packed mask, consensus fusion
+//!   between epochs, projection + sparse feasibility verification.
+//! * [`queue`] — the bounded admission router: (priority, deadline,
+//!   FIFO) ordering via `total_cmp`, expiry shedding before an episode
+//!   is wasted, worst-request eviction at capacity.
+//!
+//! Request lifecycle: **submit → admit → engine chain → outcome** — see
+//! `rust/README.md` ("The MatchService request lifecycle").
 
 pub mod controller;
-pub mod event_loop;
 pub mod queue;
+pub mod service;
 
-pub use controller::{ControllerStats, GlobalController, MatchOutcome, MatchPath};
-pub use event_loop::{CoordinatorHandle, InterruptRequest, InterruptResponse};
-pub use queue::{QueuedRequest, RequestRouter, RouterStats};
+pub use controller::{
+    ControllerStats, EpochEngine, GlobalController, MatchOutcome, MatchPath, QuantizedEngine,
+    UllmannEngine, Vf2Engine,
+};
+pub use queue::{Admission, Popped, QueuedRequest, RequestRouter, RouterStats};
+pub use service::{
+    dense_adjacency, CancelToken, ControllerFactory, DenseCache, EngineBudget, EngineOutcome,
+    EngineReport, EngineWork, MatchEngine, MatchProblem, MatchRequest, MatchResponse,
+    MatchService, MatchTicket, RequestId, ServiceConfig, ServiceStats,
+};

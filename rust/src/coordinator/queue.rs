@@ -1,24 +1,37 @@
-//! Request router + priority queue for the coordinator front-end.
+//! Admission router for the coordinator front-end.
 //!
-//! The interrupt service loop (event_loop.rs) serializes matching onto
-//! the controller thread; this module is the admission stage in front of
-//! it: requests are classified, deadline-tagged, queued by (priority,
-//! deadline) and expired requests are shed *before* they waste a
-//! matching episode — the L3 backpressure mechanism.
+//! The match service serializes episodes onto the controller thread;
+//! this module is the admission stage in front of it: submissions are
+//! deadline-tagged, queued by (priority, deadline, FIFO), and expired or
+//! over-depth requests are shed *before* they waste a matching episode —
+//! the L3 backpressure mechanism.  The service loop
+//! ([`super::service::MatchService`]) drives [`RequestRouter::admit`] on
+//! every submission and [`RequestRouter::pop`] before every episode.
 
 use std::collections::BinaryHeap;
 
 use crate::scheduler::Priority;
 
-/// A queued interrupt request (payload-agnostic: the router orders ids).
+/// One queued admission ticket (payload-agnostic: the service maps ids
+/// back to owned problems).
 #[derive(Clone, Debug, PartialEq)]
 pub struct QueuedRequest {
     pub id: u64,
     pub priority: Priority,
-    /// Absolute deadline (s since epoch start); None = best-effort.
+    /// Absolute deadline (s on the service clock); None = best-effort.
     pub deadline: Option<f64>,
-    /// Enqueue time.
+    /// Enqueue time (telemetry).
     pub enqueued_at: f64,
+    /// Admission sequence number — the FIFO tiebreak (assigned by the
+    /// router; total and collision-free where enqueue timestamps are
+    /// not).
+    seq: u64,
+}
+
+impl QueuedRequest {
+    pub fn new(id: u64, priority: Priority, deadline: Option<f64>, enqueued_at: f64) -> Self {
+        Self { id, priority, deadline, enqueued_at, seq: 0 }
+    }
 }
 
 impl Eq for QueuedRequest {}
@@ -31,15 +44,18 @@ impl PartialOrd for QueuedRequest {
 
 impl Ord for QueuedRequest {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // max-heap: higher priority first, then earlier deadline, then FIFO
+        // Max-heap: higher priority first, then earlier deadline, then
+        // FIFO.  Deadlines compare via `total_cmp` — a NaN deadline is
+        // a total-order citizen (it sorts after +inf, i.e. best-effort)
+        // instead of panicking the heap.
         self.priority
             .cmp(&other.priority)
             .then_with(|| {
                 let da = self.deadline.unwrap_or(f64::INFINITY);
                 let db = other.deadline.unwrap_or(f64::INFINITY);
-                db.partial_cmp(&da).unwrap() // earlier deadline = greater
+                db.total_cmp(&da) // earlier deadline = greater
             })
-            .then_with(|| other.enqueued_at.partial_cmp(&self.enqueued_at).unwrap())
+            .then_with(|| other.seq.cmp(&self.seq)) // earlier admission = greater
     }
 }
 
@@ -49,7 +65,37 @@ pub struct RouterStats {
     pub admitted: u64,
     pub shed_expired: u64,
     pub shed_capacity: u64,
+    /// Requests popped for service.  The episode may still be skipped
+    /// (caller cancelled while queued), so this can exceed the
+    /// controller's `requests` count.
     pub served: u64,
+}
+
+/// Admission verdict for one submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Admitted — possibly evicting the worst queued request (its id;
+    /// the service answers the victim with a shed response).
+    Admitted { evicted: Option<u64> },
+    /// Shed on arrival: expired deadline, or the queue is full of
+    /// higher-ranked work.
+    Shed,
+}
+
+impl Admission {
+    pub fn admitted(&self) -> bool {
+        matches!(self, Admission::Admitted { .. })
+    }
+}
+
+/// One step of the admission pop.
+#[derive(Clone, Debug)]
+pub enum Popped {
+    /// The next request to serve.
+    Serve(QueuedRequest),
+    /// An expired request shed on the way — notify its submitter and
+    /// pop again.
+    Shed(QueuedRequest),
 }
 
 /// Bounded priority router.
@@ -57,13 +103,14 @@ pub struct RouterStats {
 pub struct RequestRouter {
     heap: BinaryHeap<QueuedRequest>,
     capacity: usize,
+    next_seq: u64,
     stats: RouterStats,
 }
 
 impl RequestRouter {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
-        Self { heap: BinaryHeap::new(), capacity, stats: RouterStats::default() }
+        Self { heap: BinaryHeap::new(), capacity, next_seq: 0, stats: RouterStats::default() }
     }
 
     pub fn len(&self) -> usize {
@@ -78,50 +125,81 @@ impl RequestRouter {
         self.stats
     }
 
-    /// Admit a request.  Returns `false` if shed (expired on arrival or
-    /// queue full of higher-priority work).
-    pub fn admit(&mut self, req: QueuedRequest, now: f64) -> bool {
+    /// The best queued request, if any (not removed).
+    pub fn peek(&self) -> Option<&QueuedRequest> {
+        self.heap.peek()
+    }
+
+    /// Admit a request.  Expired-on-arrival requests are shed; at
+    /// capacity either the worst queued request is evicted (newcomer
+    /// outranks it) or the newcomer is shed (bounded queue, no
+    /// livelock).
+    pub fn admit(&mut self, mut req: QueuedRequest, now: f64) -> Admission {
         if req.deadline.is_some_and(|d| d <= now) {
             self.stats.shed_expired += 1;
-            return false;
+            return Admission::Shed;
         }
+        req.seq = self.next_seq;
+        self.next_seq += 1;
+        let mut evicted = None;
         if self.heap.len() >= self.capacity {
-            // shed the *worst* queued request if the newcomer beats it;
-            // otherwise shed the newcomer (bounded queue, no livelock)
-            let worst_is_better = self.heap.iter().min().map_or(false, |w| *w >= req);
-            if worst_is_better {
+            let worst_outranks_newcomer = self.heap.iter().min().is_some_and(|w| *w >= req);
+            if worst_outranks_newcomer {
                 self.stats.shed_capacity += 1;
-                return false;
+                return Admission::Shed;
             }
             // rebuild without the single worst element
             let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
-            if let Some(pos) = all
-                .iter()
-                .enumerate()
-                .min_by(|(_, a), (_, b)| a.cmp(b))
-                .map(|(i, _)| i)
+            if let Some(pos) =
+                all.iter().enumerate().min_by(|(_, a), (_, b)| a.cmp(b)).map(|(i, _)| i)
             {
-                all.swap_remove(pos);
+                evicted = Some(all.swap_remove(pos).id);
                 self.stats.shed_capacity += 1;
             }
             self.heap = all.into();
         }
         self.stats.admitted += 1;
         self.heap.push(req);
-        true
+        Admission::Admitted { evicted }
     }
 
-    /// Pop the next request to serve, shedding anything already expired.
+    /// One pop step: the best queued request, or an expired one shed on
+    /// the way (callers notify the victim and pop again).
+    pub fn pop(&mut self, now: f64) -> Option<Popped> {
+        let req = self.heap.pop()?;
+        if req.deadline.is_some_and(|d| d <= now) {
+            self.stats.shed_expired += 1;
+            return Some(Popped::Shed(req));
+        }
+        self.stats.served += 1;
+        Some(Popped::Serve(req))
+    }
+
+    /// Pop the next serveable request, silently discarding expired ones
+    /// (callers that don't track shed victims).
     pub fn next(&mut self, now: f64) -> Option<QueuedRequest> {
-        while let Some(req) = self.heap.pop() {
-            if req.deadline.is_some_and(|d| d <= now) {
-                self.stats.shed_expired += 1;
-                continue;
+        while let Some(step) = self.pop(now) {
+            if let Popped::Serve(req) = step {
+                return Some(req);
             }
-            self.stats.served += 1;
-            return Some(req);
         }
         None
+    }
+
+    /// Put a popped request back, keeping its original admission `seq`
+    /// (FIFO tiebreak survives) and undoing the pop's `served` count —
+    /// for episodes preempted before they started.
+    pub fn restore(&mut self, req: QueuedRequest) {
+        self.stats.served = self.stats.served.saturating_sub(1);
+        self.heap.push(req);
+    }
+
+    /// Empty the queue (service shutdown).  Every drained request counts
+    /// as capacity-shed.
+    pub fn drain(&mut self) -> Vec<QueuedRequest> {
+        let drained = std::mem::take(&mut self.heap).into_sorted_vec();
+        self.stats.shed_capacity += drained.len() as u64;
+        drained
     }
 }
 
@@ -130,16 +208,16 @@ mod tests {
     use super::*;
 
     fn req(id: u64, priority: Priority, deadline: Option<f64>, t: f64) -> QueuedRequest {
-        QueuedRequest { id, priority, deadline, enqueued_at: t }
+        QueuedRequest::new(id, priority, deadline, t)
     }
 
     #[test]
     fn priority_then_deadline_then_fifo() {
         let mut r = RequestRouter::new(16);
-        r.admit(req(1, Priority::Background, None, 0.0), 0.0);
-        r.admit(req(2, Priority::Urgent, Some(5.0), 0.1), 0.1);
-        r.admit(req(3, Priority::Urgent, Some(2.0), 0.2), 0.2);
-        r.admit(req(4, Priority::Normal, None, 0.3), 0.3);
+        assert!(r.admit(req(1, Priority::Background, None, 0.0), 0.0).admitted());
+        assert!(r.admit(req(2, Priority::Urgent, Some(5.0), 0.1), 0.1).admitted());
+        assert!(r.admit(req(3, Priority::Urgent, Some(2.0), 0.2), 0.2).admitted());
+        assert!(r.admit(req(4, Priority::Normal, None, 0.3), 0.3).admitted());
         assert_eq!(r.next(0.5).unwrap().id, 3, "earliest-deadline urgent first");
         assert_eq!(r.next(0.5).unwrap().id, 2);
         assert_eq!(r.next(0.5).unwrap().id, 4, "normal before background");
@@ -150,22 +228,28 @@ mod tests {
     #[test]
     fn expired_requests_shed_on_admit_and_pop() {
         let mut r = RequestRouter::new(4);
-        assert!(!r.admit(req(1, Priority::Urgent, Some(1.0), 0.0), 2.0), "already expired");
-        assert!(r.admit(req(2, Priority::Urgent, Some(3.0), 2.0), 2.0));
-        // expires while queued
-        assert!(r.next(4.0).is_none());
+        assert_eq!(r.admit(req(1, Priority::Urgent, Some(1.0), 0.0), 2.0), Admission::Shed);
+        assert!(r.admit(req(2, Priority::Urgent, Some(3.0), 2.0), 2.0).admitted());
+        // expires while queued — pop reports the victim, next() skips it
+        match r.pop(4.0) {
+            Some(Popped::Shed(victim)) => assert_eq!(victim.id, 2),
+            other => panic!("expected shed, got {other:?}"),
+        }
         let s = r.stats();
         assert_eq!(s.shed_expired, 2);
         assert_eq!(s.served, 0);
     }
 
     #[test]
-    fn capacity_sheds_worst_not_best() {
+    fn capacity_sheds_worst_not_best_and_reports_victim() {
         let mut r = RequestRouter::new(2);
-        r.admit(req(1, Priority::Background, None, 0.0), 0.0);
-        r.admit(req(2, Priority::Normal, None, 0.1), 0.1);
-        // urgent newcomer evicts the background request
-        assert!(r.admit(req(3, Priority::Urgent, Some(9.0), 0.2), 0.2));
+        assert!(r.admit(req(1, Priority::Background, None, 0.0), 0.0).admitted());
+        assert!(r.admit(req(2, Priority::Normal, None, 0.1), 0.1).admitted());
+        // urgent newcomer evicts the background request — by id
+        assert_eq!(
+            r.admit(req(3, Priority::Urgent, Some(9.0), 0.2), 0.2),
+            Admission::Admitted { evicted: Some(1) }
+        );
         assert_eq!(r.len(), 2);
         assert_eq!(r.next(0.3).unwrap().id, 3);
         assert_eq!(r.next(0.3).unwrap().id, 2);
@@ -175,18 +259,64 @@ mod tests {
     #[test]
     fn background_newcomer_shed_when_full_of_better() {
         let mut r = RequestRouter::new(2);
-        r.admit(req(1, Priority::Urgent, Some(9.0), 0.0), 0.0);
-        r.admit(req(2, Priority::Urgent, Some(8.0), 0.0), 0.0);
-        assert!(!r.admit(req(3, Priority::Background, None, 0.1), 0.1));
+        assert!(r.admit(req(1, Priority::Urgent, Some(9.0), 0.0), 0.0).admitted());
+        assert!(r.admit(req(2, Priority::Urgent, Some(8.0), 0.0), 0.0).admitted());
+        assert_eq!(r.admit(req(3, Priority::Background, None, 0.1), 0.1), Admission::Shed);
         assert_eq!(r.len(), 2);
     }
 
     #[test]
     fn fifo_within_equal_priority_and_deadline() {
         let mut r = RequestRouter::new(8);
-        r.admit(req(10, Priority::Normal, None, 0.0), 0.0);
-        r.admit(req(11, Priority::Normal, None, 1.0), 1.0);
+        // identical enqueue timestamps: the admission sequence number
+        // still makes the order deterministic FIFO
+        assert!(r.admit(req(10, Priority::Normal, None, 0.0), 0.0).admitted());
+        assert!(r.admit(req(11, Priority::Normal, None, 0.0), 0.0).admitted());
         assert_eq!(r.next(2.0).unwrap().id, 10);
         assert_eq!(r.next(2.0).unwrap().id, 11);
+    }
+
+    /// Regression: a NaN deadline used to panic the heap's
+    /// `partial_cmp(..).unwrap()`; `total_cmp` orders it after every
+    /// real deadline (best-effort) instead.
+    #[test]
+    fn nan_deadline_is_ordered_not_panicking() {
+        let mut r = RequestRouter::new(8);
+        assert!(r.admit(req(1, Priority::Normal, Some(f64::NAN), 0.0), 0.0).admitted());
+        assert!(r.admit(req(2, Priority::Normal, Some(1.0), 0.0), 0.0).admitted());
+        assert!(r.admit(req(3, Priority::Normal, None, 0.0), 0.0).admitted());
+        // finite deadline first, then best-effort (None), then NaN —
+        // NaN > +inf in the total order
+        assert_eq!(r.next(0.5).unwrap().id, 2);
+        assert_eq!(r.next(0.5).unwrap().id, 3);
+        assert_eq!(r.next(0.5).unwrap().id, 1);
+        assert!(r.next(0.5).is_none());
+    }
+
+    #[test]
+    fn restore_keeps_fifo_position_and_stats() {
+        let mut r = RequestRouter::new(8);
+        assert!(r.admit(req(1, Priority::Normal, None, 0.0), 0.0).admitted());
+        assert!(r.admit(req(2, Priority::Normal, None, 0.1), 0.1).admitted());
+        let Some(Popped::Serve(first)) = r.pop(0.2) else { panic!("expected a pop") };
+        assert_eq!(first.id, 1);
+        r.restore(first);
+        // a later same-priority admission must not jump ahead of it
+        assert!(r.admit(req(3, Priority::Normal, None, 0.3), 0.3).admitted());
+        assert_eq!(r.next(0.4).unwrap().id, 1, "restored request keeps its place");
+        assert_eq!(r.next(0.4).unwrap().id, 2);
+        assert_eq!(r.next(0.4).unwrap().id, 3);
+        assert_eq!(r.stats().served, 3, "restore must undo the aborted pop's count");
+    }
+
+    #[test]
+    fn drain_empties_and_counts() {
+        let mut r = RequestRouter::new(4);
+        assert!(r.admit(req(1, Priority::Normal, None, 0.0), 0.0).admitted());
+        assert!(r.admit(req(2, Priority::Urgent, None, 0.0), 0.0).admitted());
+        let drained = r.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(r.is_empty());
+        assert_eq!(r.stats().shed_capacity, 2);
     }
 }

@@ -1,0 +1,778 @@
+//! The typed `MatchService` front-end: one request lifecycle for every
+//! caller (CLI, simulator, benches, tests) — **submit → admit → engine
+//! chain → outcome**.
+//!
+//! * [`MatchProblem`] owns one subgraph-matching instance in its sparse
+//!   forms (query/target as [`Csr`] edge lists, compatibility as a packed
+//!   [`BitMask`]); [`MatchRequest`] is the borrowed view of it that flows
+//!   through [`GlobalController`] and the engines, tagged with
+//!   [`Priority`], an optional deadline and a [`RequestId`].  Nothing
+//!   dense crosses the API; the f32 interchange forms the artifact
+//!   calling convention pins are materialized at most once per episode,
+//!   at the backend boundary ([`DenseCache`] / the epoch padding).
+//! * [`MatchEngine`] is the pluggable solver interface.  The controller
+//!   walks an ordered chain of engines per request; implementations ship
+//!   for the PSO/epoch path, the quantized matcher and the Ullmann/VF2
+//!   serial baselines (see [`super::controller`]).
+//! * [`MatchService`] is the threaded front door: submissions pass the
+//!   bounded admission router (priority/deadline pop, expiry shedding
+//!   *before* an episode is wasted) and are served one at a time on the
+//!   controller thread, which exclusively owns the engines — no locks on
+//!   the matching hot path.
+//! * [`CancelToken`] makes in-flight episodes interruptible: a
+//!   higher-priority arrival (or an explicit [`MatchTicket::cancel`])
+//!   stops the running episode at the next epoch barrier — the
+//!   "interruptible" in the paper's title.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::graph::{Csr, Dag};
+use crate::matcher::{build_bitmask, BitMask, Mapping, PsoConfig};
+use crate::scheduler::Priority;
+use crate::util::MatF;
+
+use super::controller::{ControllerStats, GlobalController, MatchOutcome, MatchPath};
+use super::queue::{Admission, Popped, QueuedRequest, RequestRouter, RouterStats};
+
+/// Unique id of one submitted request (assigned by the service; callers
+/// constructing requests directly pick their own).
+pub type RequestId = u64;
+
+/// Cooperative cancellation flag shared between a submitter and the
+/// episode serving its request.  Engines check it at epoch barriers —
+/// never mid-kernel — so cancellation is cheap and deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Request cancellation at the next epoch barrier.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// One owned subgraph-matching instance in its sparse forms.
+#[derive(Clone, Debug)]
+pub struct MatchProblem {
+    /// Query adjacency (the urgent task's tile DAG), n vertices.
+    pub query: Csr,
+    /// Target adjacency (the preemptible engine graph), m vertices.
+    pub target: Csr,
+    /// Packed n×m compatibility mask (§3.2).
+    pub mask: BitMask,
+}
+
+impl MatchProblem {
+    /// Build from the two DAGs (mask from the degree + kind filters).
+    pub fn from_dags(query: &Dag, target: &Dag) -> Self {
+        Self { query: query.csr(), target: target.csr(), mask: build_bitmask(query, target) }
+    }
+
+    /// Build from dense f32 forms (tests / synthetic instances): packs
+    /// the mask and sparsifies the adjacencies once, at the boundary.
+    pub fn from_dense(mask: &MatF, q: &MatF, g: &MatF) -> Self {
+        Self {
+            query: Csr::from_dense(q),
+            target: Csr::from_dense(g),
+            mask: BitMask::from_matf(mask),
+        }
+    }
+
+    /// Borrowed request view of this problem.
+    pub fn request(
+        &self,
+        id: RequestId,
+        priority: Priority,
+        deadline: Option<f64>,
+    ) -> MatchRequest<'_> {
+        MatchRequest {
+            id,
+            query: &self.query,
+            target: &self.target,
+            mask: &self.mask,
+            priority,
+            deadline,
+        }
+    }
+
+    /// Query vertex count.
+    pub fn n(&self) -> usize {
+        self.mask.rows()
+    }
+
+    /// Target vertex count.
+    pub fn m(&self) -> usize {
+        self.mask.cols()
+    }
+}
+
+/// Borrowed view of one match request: sparse problem views + admission
+/// metadata.  This is the only request shape [`GlobalController`] and
+/// the engines accept.
+#[derive(Clone, Copy)]
+pub struct MatchRequest<'a> {
+    pub id: RequestId,
+    pub query: &'a Csr,
+    pub target: &'a Csr,
+    pub mask: &'a BitMask,
+    pub priority: Priority,
+    /// Absolute deadline on the service clock (s); `None` = best-effort.
+    pub deadline: Option<f64>,
+}
+
+impl MatchRequest<'_> {
+    pub fn n(&self) -> usize {
+        self.mask.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.mask.cols()
+    }
+}
+
+/// Dense {0,1} adjacency of a CSR view (the interchange form dense-era
+/// engines consume).
+pub fn dense_adjacency(csr: &Csr) -> MatF {
+    let n = csr.nodes();
+    let mut out = MatF::zeros(n, n);
+    for (u, v) in csr.edges() {
+        out[(u as usize, v as usize)] = 1.0;
+    }
+    out
+}
+
+/// Lazily-built dense f32 forms of one request — the single
+/// densification point of an episode.  The controller clears it per
+/// request; every dense-consuming engine in the chain shares the same
+/// build.
+#[derive(Default)]
+pub struct DenseCache {
+    cached: Option<(MatF, MatF, MatF)>,
+}
+
+impl DenseCache {
+    /// Forget the previous request's staging.
+    pub fn clear(&mut self) {
+        self.cached = None;
+    }
+
+    /// `(mask, q, g)` dense views, built on first use per episode.
+    pub fn get(&mut self, req: &MatchRequest<'_>) -> (&MatF, &MatF, &MatF) {
+        if self.cached.is_none() {
+            self.cached = Some((
+                req.mask.to_matf(),
+                dense_adjacency(req.query),
+                dense_adjacency(req.target),
+            ));
+        }
+        let (mask, q, g) = self.cached.as_ref().expect("just built");
+        (mask, q, g)
+    }
+}
+
+/// Op-count telemetry from one engine episode — the cost models' inputs
+/// (counters an engine does not track stay zero).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineWork {
+    /// Fused PSO steps executed (particles × K × epochs).
+    pub steps_run: usize,
+    /// Serial backtracking nodes / VF2 states expanded.
+    pub nodes_visited: u64,
+    /// Ullmann refinement sweeps.
+    pub refine_passes: u64,
+    /// int8 MAC operations issued to the array model.
+    pub mac_ops: u64,
+    /// Element-wise PE operations.
+    pub eltwise_ops: u64,
+    /// Vector argmax reductions (projection).
+    pub argmax_ops: u64,
+    /// Ullmann-repair nodes expanded on the controller.
+    pub repair_nodes: u64,
+}
+
+/// A completed engine episode.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    /// Feasible mappings found (possibly empty — a completed
+    /// "no embedding" answer).
+    pub mappings: Vec<Mapping>,
+    pub best_fitness: f32,
+    pub epochs_run: usize,
+    /// Which execution path produced this report.
+    pub path: MatchPath,
+    pub work: EngineWork,
+}
+
+/// What a [`MatchEngine`] produced for one request.
+#[derive(Debug)]
+pub enum EngineOutcome {
+    /// The engine ran the episode to completion.
+    Served(EngineReport),
+    /// The problem shape is outside what this engine can serve; the
+    /// chain consults the next engine.
+    Unsupported,
+    /// The episode was interrupted at an epoch barrier by the request's
+    /// [`CancelToken`].
+    Cancelled { epochs_run: usize },
+    /// The engine failed (e.g. a backend error); the chain moves on.
+    Failed(String),
+}
+
+/// Episode-scoped execution context handed to each engine in the chain.
+pub struct EngineBudget<'a> {
+    /// Node budget for serial backtracking engines.
+    pub nodes: u64,
+    /// Cooperative cancellation; engines check it at epoch barriers.
+    pub cancel: &'a CancelToken,
+    /// Hard episode expiry on the host clock (the request's deadline,
+    /// anchored by the controller).  Checked at the same barriers as
+    /// `cancel` — a deadline that expires *mid-episode* stops the
+    /// episode instead of letting it run uselessly to completion.
+    pub expires_at: Option<Instant>,
+    /// Shared dense staging: densified at most once per episode, reused
+    /// by every dense-consuming engine in the chain.
+    pub dense: &'a mut DenseCache,
+}
+
+impl EngineBudget<'_> {
+    /// Whether the episode should stop at the next barrier (explicit
+    /// cancel, preemption, or deadline expiry).
+    pub fn interrupted(&self) -> bool {
+        self.cancel.is_cancelled() || self.expires_at.is_some_and(|t| Instant::now() >= t)
+    }
+}
+
+/// A pluggable matching engine.  [`GlobalController`] walks an ordered
+/// chain of these per request; the first `Served` (or `Cancelled`)
+/// outcome wins, `Unsupported`/`Failed` fall through to the next engine.
+pub trait MatchEngine {
+    /// Short engine name (telemetry / logs).
+    fn name(&self) -> &'static str;
+    /// Serve one request within the given budget.
+    fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome;
+}
+
+/// The service's answer to one submitted request.
+#[derive(Clone, Debug)]
+pub struct MatchResponse {
+    pub id: RequestId,
+    pub mappings: Vec<Mapping>,
+    pub best_fitness: f32,
+    pub epochs_run: usize,
+    /// Wall-clock of the episode on this host (0 for shed requests).
+    pub host_seconds: f64,
+    /// Which path served — or shed/rejected/cancelled — the request.
+    pub path: MatchPath,
+}
+
+impl MatchResponse {
+    pub fn matched(&self) -> bool {
+        !self.mappings.is_empty()
+    }
+
+    fn from_outcome(id: RequestId, o: MatchOutcome) -> Self {
+        Self {
+            id,
+            mappings: o.mappings,
+            best_fitness: o.best_fitness,
+            epochs_run: o.epochs_run,
+            host_seconds: o.host_seconds,
+            path: o.path,
+        }
+    }
+
+    fn shed(id: RequestId) -> Self {
+        Self {
+            id,
+            mappings: Vec::new(),
+            best_fitness: f32::NEG_INFINITY,
+            epochs_run: 0,
+            host_seconds: 0.0,
+            path: MatchPath::Shed,
+        }
+    }
+
+    fn cancelled(id: RequestId, epochs_run: usize) -> Self {
+        Self {
+            id,
+            mappings: Vec::new(),
+            best_fitness: f32::NEG_INFINITY,
+            epochs_run,
+            host_seconds: 0.0,
+            path: MatchPath::Cancelled,
+        }
+    }
+}
+
+/// Admission knobs for a [`MatchService`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Bounded admission depth: at capacity, the worst queued request is
+    /// evicted when a better one arrives (and the newcomer is shed when
+    /// everything queued outranks it).
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { queue_depth: 64 }
+    }
+}
+
+/// Aggregate service telemetry: controller (episodes) + admission router
+/// (queueing/shedding).  Published by the service thread before every
+/// response, readable without blocking on the controller.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    pub controller: ControllerStats,
+    pub router: RouterStats,
+}
+
+/// A submitted request: await the response, or cancel the episode.
+pub struct MatchTicket {
+    pub id: RequestId,
+    cancel: CancelToken,
+    rx: mpsc::Receiver<MatchResponse>,
+}
+
+impl MatchTicket {
+    /// Block until the service answers.
+    pub fn wait(self) -> Result<MatchResponse> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("match service dropped the request"))
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<MatchResponse> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Stop the episode at its next epoch barrier (or before it starts).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// The request's cancellation token.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+}
+
+/// Builds the controller (engine chain) inside the service thread, so
+/// engines never have to cross threads.
+pub type ControllerFactory = Box<dyn FnOnce() -> GlobalController + Send>;
+
+/// Priority + cancel token of the episode currently on the controller
+/// thread (preemption bookkeeping).
+type InFlight = Option<(Priority, CancelToken)>;
+
+struct Submission {
+    id: RequestId,
+    problem: MatchProblem,
+    priority: Priority,
+    deadline: Option<f64>,
+    cancel: CancelToken,
+    /// Flipped (before the response is sent) once this request has been
+    /// answered — the submitter's preemption check reads it under the
+    /// in-flight lock so it never cancels an episode on behalf of a
+    /// request that is already done.
+    answered: Arc<AtomicBool>,
+    respond: mpsc::Sender<MatchResponse>,
+}
+
+/// Answer a submission (marks it answered first; see `Submission`).
+fn answer(sub: Submission, resp: MatchResponse) {
+    sub.answered.store(true, Ordering::Release);
+    let _ = sub.respond.send(resp);
+}
+
+enum Msg {
+    Submit(Submission),
+    Shutdown,
+}
+
+/// Handle to a running match service (the coordinator front door).
+///
+/// Dropping the handle shuts the service down: the in-flight episode is
+/// cancelled at its next epoch barrier and still-queued requests are
+/// answered with [`MatchPath::Shed`].
+pub struct MatchService {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+    start: Instant,
+    next_id: AtomicU64,
+    stats: Arc<Mutex<ServiceStats>>,
+    inflight: Arc<Mutex<InFlight>>,
+}
+
+impl MatchService {
+    /// Spawn with the default engine chain (epoch backends first, the
+    /// quantized matcher as the universal fallback).  Engine/backend
+    /// construction failures degrade to the fallback chain, never fatal.
+    pub fn spawn(config: PsoConfig) -> Result<Self> {
+        Self::spawn_with(
+            ServiceConfig::default(),
+            Box::new(move || match GlobalController::new(config) {
+                Ok(c) => c,
+                Err(e) => {
+                    crate::log_warn!("controller init degraded: {e:#}");
+                    GlobalController::fallback_only(config)
+                }
+            }),
+        )
+    }
+
+    /// Spawn with an explicit controller factory — how benches, the CLI
+    /// and the simulator swap engine chains in behind the same service
+    /// API.
+    pub fn spawn_with(cfg: ServiceConfig, factory: ControllerFactory) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let inflight: Arc<Mutex<InFlight>> = Arc::new(Mutex::new(None));
+        let start = Instant::now();
+        let thread_stats = Arc::clone(&stats);
+        let thread_inflight = Arc::clone(&inflight);
+        let join = std::thread::Builder::new()
+            .name("immsched-match-service".into())
+            .spawn(move || service_loop(rx, cfg, factory, start, thread_stats, thread_inflight))?;
+        Ok(Self { tx, join: Some(join), start, next_id: AtomicU64::new(1), stats, inflight })
+    }
+
+    /// Seconds since service start — the clock deadlines are measured on.
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Submit a request for admission.  A strictly lower-priority episode
+    /// already running on the controller is cancelled at its next epoch
+    /// barrier so this arrival can be served sooner.  (The service loop
+    /// publishes the in-flight episode under the same lock it drains
+    /// arrivals with, so a submission either observes the episode here
+    /// or is ranked against it before the episode starts.)
+    pub fn submit(
+        &self,
+        problem: MatchProblem,
+        priority: Priority,
+        deadline: Option<f64>,
+    ) -> Result<MatchTicket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let cancel = CancelToken::new();
+        let answered = Arc::new(AtomicBool::new(false));
+        let (respond, rx) = mpsc::channel();
+        let sub = Submission {
+            id,
+            problem,
+            priority,
+            deadline,
+            cancel: cancel.clone(),
+            answered: Arc::clone(&answered),
+            respond,
+        };
+        self.tx
+            .send(Msg::Submit(sub))
+            .map_err(|_| anyhow::anyhow!("match service thread gone"))?;
+        // Preempt only on behalf of a request that can still be served:
+        // not dead-on-arrival, and not already answered (the service
+        // publishes in-flight episodes under this same lock, so the
+        // answered flag read here is current — without it, a submission
+        // served before this check could cancel an unrelated episode).
+        let admissible = !deadline.is_some_and(|d| d <= self.now());
+        if admissible {
+            let guard = self.inflight.lock().unwrap();
+            if !answered.load(Ordering::Acquire) {
+                if let Some((running, token)) = guard.as_ref() {
+                    if *running < priority {
+                        token.cancel();
+                    }
+                }
+            }
+        }
+        Ok(MatchTicket { id, cancel, rx })
+    }
+
+    /// Submit and wait for the outcome.
+    pub fn match_blocking(
+        &self,
+        problem: MatchProblem,
+        priority: Priority,
+        deadline: Option<f64>,
+    ) -> Result<MatchResponse> {
+        self.submit(problem, priority, deadline)?.wait()
+    }
+
+    /// Latest published telemetry (non-blocking; never waits on the
+    /// controller thread).
+    pub fn stats(&self) -> ServiceStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Priority of the episode currently being served, if any.
+    pub fn in_flight(&self) -> Option<Priority> {
+        self.inflight.lock().unwrap().as_ref().map(|(p, _)| *p)
+    }
+}
+
+impl Drop for MatchService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some((_, token)) = self.inflight.lock().unwrap().as_ref() {
+            token.cancel();
+        }
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn service_loop(
+    rx: mpsc::Receiver<Msg>,
+    cfg: ServiceConfig,
+    factory: ControllerFactory,
+    start: Instant,
+    stats: Arc<Mutex<ServiceStats>>,
+    inflight: Arc<Mutex<InFlight>>,
+) {
+    // Anchor the controller's deadline clock to the service clock, so
+    // request deadlines become hard mid-episode expiry at epoch barriers.
+    let mut controller = factory().with_clock_base(start);
+    let mut router = RequestRouter::new(cfg.queue_depth.max(1));
+    let mut pending: HashMap<RequestId, Submission> = HashMap::new();
+    let mut open = true;
+
+    while open {
+        // Block for work only when the queue is idle…
+        if router.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Submit(sub)) => admit_one(sub, &mut router, &mut pending, &stats, start),
+                Ok(Msg::Shutdown) | Err(_) => open = false,
+            }
+        }
+        // …then drain the arrival burst so admission ranks every
+        // contender before the next episode starts.
+        while open {
+            match rx.try_recv() {
+                Ok(Msg::Submit(sub)) => admit_one(sub, &mut router, &mut pending, &stats, start),
+                Ok(Msg::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => open = false,
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        if !open {
+            break;
+        }
+        let now = start.elapsed().as_secs_f64();
+        match router.pop(now) {
+            None => {}
+            Some(Popped::Shed(ticket)) => {
+                shed_response(ticket.id, &mut pending, &router, &stats);
+            }
+            Some(Popped::Serve(ticket)) => {
+                let Some(sub) = pending.remove(&ticket.id) else { continue };
+                // Close the preemption race: drain late arrivals and
+                // publish the in-flight episode under one lock.  Every
+                // submit either observes the episode (and cancels it at
+                // the barrier) or lands in the queue right here, where a
+                // strictly better request wins the controller instead.
+                let outranked = {
+                    let mut guard = inflight.lock().unwrap();
+                    loop {
+                        match rx.try_recv() {
+                            Ok(Msg::Submit(late)) => {
+                                admit_one(late, &mut router, &mut pending, &stats, start)
+                            }
+                            Ok(Msg::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
+                        }
+                    }
+                    let outranked =
+                        router.peek().is_some_and(|best| best.priority > sub.priority);
+                    if !outranked {
+                        *guard = Some((sub.priority, sub.cancel.clone()));
+                    }
+                    outranked
+                };
+                if !open {
+                    // shutdown raced the pop: shed instead of serving
+                    *inflight.lock().unwrap() = None;
+                    let id = sub.id;
+                    answer(sub, MatchResponse::shed(id));
+                    continue;
+                }
+                if outranked {
+                    // hand the controller to the better arrival; restore
+                    // this request with its original admission order (no
+                    // stat double-count, FIFO position kept)
+                    router.restore(ticket);
+                    pending.insert(sub.id, sub);
+                    continue;
+                }
+                serve_one(&mut controller, sub, &inflight, &router, &stats);
+            }
+        }
+    }
+
+    // Shutdown: whatever is still queued is shed, not silently dropped.
+    for ticket in router.drain() {
+        shed_response(ticket.id, &mut pending, &router, &stats);
+    }
+}
+
+fn admit_one(
+    sub: Submission,
+    router: &mut RequestRouter,
+    pending: &mut HashMap<RequestId, Submission>,
+    stats: &Arc<Mutex<ServiceStats>>,
+    start: Instant,
+) {
+    let now = start.elapsed().as_secs_f64();
+    let ticket = QueuedRequest::new(sub.id, sub.priority, sub.deadline, now);
+    match router.admit(ticket, now) {
+        Admission::Shed => {
+            stats.lock().unwrap().router = router.stats();
+            let id = sub.id;
+            answer(sub, MatchResponse::shed(id));
+        }
+        Admission::Admitted { evicted } => {
+            let id = sub.id;
+            pending.insert(id, sub);
+            stats.lock().unwrap().router = router.stats();
+            if let Some(evicted_id) = evicted {
+                if let Some(victim) = pending.remove(&evicted_id) {
+                    answer(victim, MatchResponse::shed(evicted_id));
+                }
+            }
+        }
+    }
+}
+
+fn shed_response(
+    id: RequestId,
+    pending: &mut HashMap<RequestId, Submission>,
+    router: &RequestRouter,
+    stats: &Arc<Mutex<ServiceStats>>,
+) {
+    stats.lock().unwrap().router = router.stats();
+    if let Some(sub) = pending.remove(&id) {
+        answer(sub, MatchResponse::shed(id));
+    }
+}
+
+/// Run one admitted episode.  The caller has already published the
+/// in-flight slot under the drain lock; this clears it when done.
+fn serve_one(
+    controller: &mut GlobalController,
+    sub: Submission,
+    inflight: &Arc<Mutex<InFlight>>,
+    router: &RequestRouter,
+    stats: &Arc<Mutex<ServiceStats>>,
+) {
+    let response = if sub.cancel.is_cancelled() {
+        // cancelled while queued — never reaches the controller
+        MatchResponse::cancelled(sub.id, 0)
+    } else {
+        let req = sub.problem.request(sub.id, sub.priority, sub.deadline);
+        let outcome = controller.serve(&req, &sub.cancel);
+        MatchResponse::from_outcome(sub.id, outcome)
+    };
+    *inflight.lock().unwrap() = None;
+    {
+        let mut published = stats.lock().unwrap();
+        published.controller = controller.stats();
+        published.router = router.stats();
+    }
+    answer(sub, response);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::mapping_is_feasible_sparse;
+
+    fn chain_problem(n: usize, m: usize) -> MatchProblem {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        MatchProblem::from_dags(&qd, &gd)
+    }
+
+    #[test]
+    fn submit_round_trip() {
+        let service = MatchService::spawn(PsoConfig { seed: 9, ..Default::default() }).unwrap();
+        let problem = chain_problem(4, 8);
+        let resp = service
+            .match_blocking(problem.clone(), Priority::Urgent, None)
+            .expect("service answers");
+        assert!(resp.matched());
+        assert!(mapping_is_feasible_sparse(&resp.mappings[0], &problem.query, &problem.target));
+        assert_ne!(resp.path, MatchPath::Shed);
+        let stats = service.stats();
+        assert_eq!(stats.controller.requests, 1);
+        assert_eq!(stats.controller.matched, 1);
+        assert_eq!(stats.router.served, 1);
+    }
+
+    #[test]
+    fn concurrent_submissions_are_serialized_safely() {
+        let service = MatchService::spawn(PsoConfig { seed: 10, ..Default::default() }).unwrap();
+        let mut tickets = Vec::new();
+        for i in 0..4 {
+            let problem = chain_problem(3 + i % 2, 8);
+            let ticket = service.submit(problem.clone(), Priority::Normal, None).unwrap();
+            tickets.push((problem, ticket));
+        }
+        for (problem, ticket) in tickets {
+            let resp = ticket.wait().unwrap();
+            assert!(resp.matched());
+            assert!(mapping_is_feasible_sparse(&resp.mappings[0], &problem.query, &problem.target));
+        }
+        assert_eq!(service.stats().controller.requests, 4);
+    }
+
+    #[test]
+    fn shutdown_on_drop_does_not_hang() {
+        let service = MatchService::spawn(PsoConfig::default()).unwrap();
+        drop(service);
+    }
+
+    #[test]
+    fn dense_cache_builds_once_per_episode() {
+        let problem = chain_problem(3, 6);
+        let req = problem.request(1, Priority::Normal, None);
+        let mut cache = DenseCache::default();
+        {
+            let (mask, q, g) = cache.get(&req);
+            assert_eq!((mask.rows(), mask.cols()), (3, 6));
+            assert_eq!(q.rows(), 3);
+            assert_eq!(g.rows(), 6);
+        }
+        // dense forms agree with the sparse views
+        let (mask, q, g) = cache.get(&req);
+        assert_eq!(BitMask::from_matf(mask), problem.mask);
+        assert_eq!(&Csr::from_dense(q), &problem.query);
+        assert_eq!(&Csr::from_dense(g), &problem.target);
+    }
+
+    #[test]
+    fn cancel_token_round_trip() {
+        let token = CancelToken::new();
+        assert!(!token.is_cancelled());
+        let other = token.clone();
+        other.cancel();
+        assert!(token.is_cancelled());
+    }
+}

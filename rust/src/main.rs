@@ -14,11 +14,14 @@ use anyhow::{bail, Context, Result};
 
 use immsched::accel::{build_target_graph, Platform};
 use immsched::config::Config;
-use immsched::coordinator::CoordinatorHandle;
-use immsched::matcher::build_mask;
+use immsched::coordinator::{
+    GlobalController, MatchEngine, MatchProblem, MatchService, QuantizedEngine, ServiceConfig,
+    UllmannEngine, Vf2Engine,
+};
+use immsched::matcher::PsoConfig;
 use immsched::runtime::ArtifactRegistry;
 use immsched::scheduler::{
-    build_trace, metrics, FrameworkKind, SimConfig, Simulator, TraceConfig,
+    build_trace, metrics, FrameworkKind, Priority, SimConfig, Simulator, TraceConfig,
 };
 use immsched::util::table::{fmt_time, Table};
 use immsched::workload::{build_model, tile_layer_graph, ModelId, TilingConfig};
@@ -60,6 +63,7 @@ fn print_help() {
            selftest                         artifact + runtime + matcher smoke test\n\
            run  [--config FILE] [--set K=V ...]   run one simulation, print summary\n\
            match --model NAME [--platform edge|cloud] [--tiles N]\n\
+                 [--engine pso|quantized|ullmann|vf2]\n\
                                             serve one urgent-task interrupt\n\
            info                             platforms, models, artifacts\n\
            help                             this text\n\
@@ -104,21 +108,21 @@ fn cmd_selftest() -> Result<()> {
         Ok(r) => println!("artifacts: {} size classes", r.all().len()),
         Err(e) => println!("artifacts: MISSING ({e:#}) — fallback path will be used"),
     }
-    // 2. coordinator round trip on a small planted problem
-    let handle = CoordinatorHandle::spawn(immsched::matcher::PsoConfig::default())?;
+    // 2. match-service round trip on a small planted problem
+    let service = MatchService::spawn(PsoConfig::default())?;
     let qd = immsched::graph::gen_chain(4, immsched::graph::NodeKind::Compute);
     let gd = immsched::graph::gen_chain(8, immsched::graph::NodeKind::Universal);
-    let mask = build_mask(&qd, &gd);
+    let problem = MatchProblem::from_dags(&qd, &gd);
     let t0 = std::time::Instant::now();
-    let resp = handle.match_blocking(mask, qd.adjacency(), gd.adjacency())?;
+    let resp = service.match_blocking(problem, Priority::Urgent, None)?;
     println!(
-        "coordinator: matched={} path={} epochs={} in {}",
-        !resp.mappings.is_empty(),
-        if resp.used_pjrt { "pjrt" } else { "native" },
+        "match service: matched={} path={} epochs={} in {}",
+        resp.matched(),
+        resp.path.name(),
         resp.epochs_run,
         fmt_time(t0.elapsed().as_secs_f64()),
     );
-    if resp.mappings.is_empty() {
+    if !resp.matched() {
         bail!("selftest failed: no mapping found for the planted chain");
     }
     // 3. quick simulation
@@ -199,6 +203,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
 fn cmd_match(args: &[String]) -> Result<()> {
     let mut model_name = String::from("MobileNetV2");
     let mut platform_name = String::from("edge");
+    let mut engine_name = String::from("pso");
     let mut max_tiles = 16usize;
     let mut i = 0;
     while i < args.len() {
@@ -211,12 +216,23 @@ fn cmd_match(args: &[String]) -> Result<()> {
                 platform_name = args.get(i + 1).context("--platform needs edge|cloud")?.clone();
                 i += 2;
             }
+            "--engine" => {
+                engine_name = args
+                    .get(i + 1)
+                    .context("--engine needs pso|quantized|ullmann|vf2")?
+                    .clone();
+                i += 2;
+            }
             "--tiles" => {
                 max_tiles = args.get(i + 1).context("--tiles needs a number")?.parse()?;
                 i += 2;
             }
             other => bail!("unknown option {other:?}"),
         }
+    }
+    const ENGINE_NAMES: [&str; 4] = ["pso", "quantized", "ullmann", "vf2"];
+    if !ENGINE_NAMES.contains(&engine_name.as_str()) {
+        bail!("unknown engine {engine_name:?} (one of {})", ENGINE_NAMES.join("|"));
     }
     let model = ModelId::ALL
         .iter()
@@ -233,23 +249,42 @@ fn cmd_match(args: &[String]) -> Result<()> {
     let tiles = tile_layer_graph(&graph, TilingConfig { max_tiles, split_factor: 2 });
     let preemptible = vec![true; platform.engines];
     let (target, vertex_engine) = build_target_graph(&platform, &preemptible);
-    let mask = build_mask(&tiles.dag, &target);
+    let problem = MatchProblem::from_dags(&tiles.dag, &target);
     println!(
-        "match: {} ({} tiles) -> {} ({} engines)",
+        "match: {} ({} tiles) -> {} ({} engines) via the {} engine chain",
         model.name(),
         tiles.len(),
         platform.kind.name(),
-        target.len()
+        target.len(),
+        engine_name
     );
 
-    let handle = CoordinatorHandle::spawn(immsched::matcher::PsoConfig::default())?;
+    // The same MatchService call serves every engine chain: the default
+    // PSO/epoch+quantized chain, or a single swapped-in baseline.
+    let service = if engine_name == "pso" {
+        MatchService::spawn(PsoConfig::default())?
+    } else {
+        let selected = engine_name.clone();
+        MatchService::spawn_with(
+            ServiceConfig::default(),
+            Box::new(move || {
+                let engine: Box<dyn MatchEngine> = match selected.as_str() {
+                    "quantized" => Box::new(QuantizedEngine::new(PsoConfig::default())),
+                    "ullmann" => Box::new(UllmannEngine),
+                    "vf2" => Box::new(Vf2Engine),
+                    other => unreachable!("engine {other:?} passed validation but has no chain"),
+                };
+                GlobalController::with_engines(vec![engine])
+            }),
+        )?
+    };
     let t0 = std::time::Instant::now();
-    let resp = handle.match_blocking(mask, tiles.dag.adjacency(), target.adjacency())?;
+    let resp = service.match_blocking(problem, Priority::Urgent, None)?;
     let elapsed = t0.elapsed().as_secs_f64();
     if let Some(mp) = resp.mappings.first() {
         println!(
             "FEASIBLE via {} after {} epochs in {} (fitness {:.3})",
-            if resp.used_pjrt { "pjrt" } else { "native" },
+            resp.path.name(),
             resp.epochs_run,
             fmt_time(elapsed),
             resp.best_fitness

@@ -254,6 +254,28 @@ pub fn mapping_is_feasible_csr(mapping: &Mapping, q_edges: &Csr, g: &MatF) -> bo
     true
 }
 
+/// [`mapping_is_feasible`] over two CSR edge lists — the fully sparse
+/// verify path of the typed request API ([`crate::coordinator::MatchRequest`]
+/// carries both sides as [`Csr`] views, so no dense matrix is needed to
+/// verify a projected candidate).  Neighbor lists are scanned linearly;
+/// DAG out-degrees here are tiny.
+pub fn mapping_is_feasible_sparse(mapping: &Mapping, q: &Csr, g: &Csr) -> bool {
+    let n = q.nodes();
+    debug_assert_eq!(mapping.len(), n);
+    let mut tmap = vec![0usize; n];
+    if !resolve_targets(mapping, g.nodes(), &mut tmap) {
+        return false;
+    }
+    for (i, &ti) in tmap.iter().enumerate() {
+        for &k in q.neighbors(i) {
+            if !g.neighbors(ti).contains(&(tmap[k as usize] as u32)) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
 /// Totality + injectivity pre-pass: resolve `mapping` into `tmap`
 /// (query vertex i → target `tmap[i]`). Returns false on partial,
 /// out-of-range or non-injective mappings.
@@ -400,6 +422,27 @@ mod tests {
             assert_eq!(
                 mapping_is_feasible(&mapping, &q, &g),
                 mapping_is_feasible_csr(&mapping, &q_csr, &g),
+                "mapping {mapping:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn feasibility_sparse_matches_dense_scan() {
+        let mut rng = Rng::new(13);
+        for _ in 0..40 {
+            let n = rng.range(2, 6);
+            let m = n + rng.range(1, 6);
+            let qd = gen_random_dag(n, 0.5, &mut rng, NodeKind::Compute);
+            let gd = gen_random_dag(m, 0.4, &mut rng, NodeKind::Universal);
+            let (q, g) = (qd.adjacency(), gd.adjacency());
+            let (q_csr, g_csr) = (qd.csr(), gd.csr());
+            let mapping: Mapping = (0..n)
+                .map(|_| if rng.chance(0.9) { Some(rng.below(m + 1)) } else { None })
+                .collect();
+            assert_eq!(
+                mapping_is_feasible(&mapping, &q, &g),
+                mapping_is_feasible_sparse(&mapping, &q_csr, &g_csr),
                 "mapping {mapping:?}"
             );
         }

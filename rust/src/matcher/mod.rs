@@ -32,7 +32,8 @@ pub mod vf2;
 pub use consensus::elite_consensus;
 pub use cost::{MatcherCost, MatcherCostModel};
 pub use fitness::{
-    edge_fitness, mapping_is_feasible, mapping_is_feasible_csr, FitnessKernel, FitnessScratch,
+    edge_fitness, mapping_is_feasible, mapping_is_feasible_csr, mapping_is_feasible_sparse,
+    FitnessKernel, FitnessScratch,
 };
 pub use mask::{build_bitmask, build_mask, has_empty_row, BitMask};
 pub use projection::{project_greedy, project_greedy_flat, project_hungarian};

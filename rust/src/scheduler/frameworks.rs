@@ -11,6 +11,13 @@
 //! * IMMSched runs the *actual* quantized PSO matcher; its latency is
 //!   the measured episode through the on-accelerator cost model.
 //!
+//! Both TSS frameworks build their problems through the typed
+//! [`MatchProblem`] API and run them through the pluggable
+//! [`MatchEngine`] interface — the same chain the coordinator's
+//! `MatchService` drives — so the serial baseline is swappable (see
+//! [`make_isosched_with_engine`]) and the episode telemetry
+//! ([`crate::coordinator::EngineWork`]) feeds the cost models.
+//!
 //! Matching episodes are memoized per (model, target size): repeated
 //! urgent arrivals of the same model reuse the measured episode instead
 //! of re-running the matcher — the simulator stays fast without losing
@@ -19,9 +26,11 @@
 use std::collections::HashMap;
 
 use crate::accel::{build_target_graph, Platform};
-use crate::matcher::{
-    build_mask, ullmann_find_first, MatcherCost, MatcherCostModel, PsoConfig, QuantizedMatcher,
+use crate::coordinator::{
+    CancelToken, DenseCache, EngineBudget, EngineOutcome, MatchEngine, MatchProblem,
+    QuantizedEngine, UllmannEngine,
 };
+use crate::matcher::{MatcherCost, MatcherCostModel, PsoConfig, QuantizedOutcome, UllmannStats};
 use crate::workload::ModelId;
 
 use super::exec_model::Paradigm;
@@ -135,6 +144,43 @@ pub fn make_framework(
     }
 }
 
+/// IsoSched with an explicit serial [`MatchEngine`] — the baseline-swap
+/// hook (e.g. [`crate::coordinator::Vf2Engine`] instead of Ullmann)
+/// behind the same TSS matching path.
+pub fn make_isosched_with_engine(
+    platform: Platform,
+    engine: Box<dyn MatchEngine + Send>,
+) -> Box<dyn Framework> {
+    Box::new(IsoSched::with_engine(platform, engine))
+}
+
+/// Run one episode of `engine` on the (tile DAG → preemptible target)
+/// problem of an urgent request.  Shared by the TSS frameworks.
+fn solve_typed(
+    engine: &mut dyn MatchEngine,
+    platform: &Platform,
+    req: &SchedRequest,
+    node_budget: u64,
+) -> Option<(EngineOutcome, Vec<usize>, usize, usize)> {
+    let mut pre = vec![false; platform.engines];
+    for &e in &req.preemptible {
+        pre[e] = true;
+    }
+    let (target, vertex_engine) = build_target_graph(platform, &pre);
+    if target.is_empty() {
+        return None;
+    }
+    let problem = MatchProblem::from_dags(&req.task.tiles.dag, &target);
+    let (n, m) = (problem.n(), problem.m());
+    let cancel = CancelToken::new();
+    let mut dense = DenseCache::default();
+    let mreq = problem.request(req.task.id as u64, req.task.priority, req.task.deadline);
+    let mut budget =
+        EngineBudget { nodes: node_budget, cancel: &cancel, expires_at: None, dense: &mut dense };
+    let outcome = engine.solve(&mreq, &mut budget);
+    Some((outcome, vertex_engine, n, m))
+}
+
 // ---------------------------------------------------------------------------
 // LTS baselines
 // ---------------------------------------------------------------------------
@@ -215,36 +261,47 @@ struct IsoSched {
     cost_model: MatcherCostModel,
     /// node budget before the serial matcher gives up
     budget: u64,
+    /// the serial baseline engine (Ullmann by default, swappable)
+    engine: Box<dyn MatchEngine + Send>,
     cache: MatchCache,
 }
 
 impl IsoSched {
     fn new(platform: Platform) -> Self {
+        Self::with_engine(platform, Box::new(UllmannEngine))
+    }
+
+    fn with_engine(platform: Platform, engine: Box<dyn MatchEngine + Send>) -> Self {
         Self {
             platform,
             cost_model: MatcherCostModel::default(),
             budget: 500_000,
+            engine,
             cache: MatchCache::default(),
         }
     }
 
-    fn match_once(&self, req: &SchedRequest) -> (MatcherCost, Option<Vec<usize>>) {
-        let mut pre = vec![false; self.platform.engines];
-        for &e in &req.preemptible {
-            pre[e] = true;
-        }
-        let (target, vertex_engine) = build_target_graph(&self.platform, &pre);
-        if target.is_empty() {
+    fn match_once(&mut self, req: &SchedRequest) -> (MatcherCost, Option<Vec<usize>>) {
+        let Some((outcome, vertex_engine, n, m)) =
+            solve_typed(&mut *self.engine, &self.platform, req, self.budget)
+        else {
             return (MatcherCost::zero(), None);
+        };
+        match outcome {
+            EngineOutcome::Served(rep) => {
+                let stats = UllmannStats {
+                    nodes_visited: rep.work.nodes_visited,
+                    refine_passes: rep.work.refine_passes,
+                    refuted: 0,
+                };
+                let cost = self.cost_model.cpu_serial(&stats, n, m);
+                let engines = rep.mappings.first().map(|mp| {
+                    mp.iter().flatten().map(|&v| vertex_engine[v]).collect::<Vec<_>>()
+                });
+                (cost, engines)
+            }
+            _ => (MatcherCost::zero(), None),
         }
-        let q = req.task.tiles.dag.adjacency();
-        let g = target.adjacency();
-        let mask = build_mask(&req.task.tiles.dag, &target);
-        let (mapping, stats) = ullmann_find_first(&mask, &q, &g, self.budget);
-        let cost = self.cost_model.cpu_serial(&stats, q.rows(), g.rows());
-        let engines =
-            mapping.map(|mp| mp.iter().flatten().map(|&v| vertex_engine[v]).collect::<Vec<_>>());
-        (cost, engines)
     }
 }
 
@@ -328,34 +385,49 @@ struct ImmSched {
     platform: Platform,
     pso: PsoConfig,
     cost_model: MatcherCostModel,
+    /// the on-accelerator matcher model behind the engine interface
+    engine: QuantizedEngine,
     cache: MatchCache,
 }
 
 impl ImmSched {
     fn new(platform: Platform, pso: PsoConfig) -> Self {
-        Self { platform, pso, cost_model: MatcherCostModel::default(), cache: MatchCache::default() }
+        Self {
+            platform,
+            pso,
+            cost_model: MatcherCostModel::default(),
+            engine: QuantizedEngine::new(pso),
+            cache: MatchCache::default(),
+        }
     }
 
-    fn match_once(&self, req: &SchedRequest) -> (MatcherCost, Option<Vec<usize>>) {
-        let mut pre = vec![false; self.platform.engines];
-        for &e in &req.preemptible {
-            pre[e] = true;
-        }
-        let (target, vertex_engine) = build_target_graph(&self.platform, &pre);
-        if target.is_empty() {
+    fn match_once(&mut self, req: &SchedRequest) -> (MatcherCost, Option<Vec<usize>>) {
+        let Some((outcome, vertex_engine, n, m)) =
+            solve_typed(&mut self.engine, &self.platform, req, self.pso.repair_budget)
+        else {
             return (MatcherCost::zero(), None);
+        };
+        match outcome {
+            EngineOutcome::Served(rep) => {
+                // rebuild the datapath op counts the cost model charges
+                let modeled = QuantizedOutcome {
+                    epochs_run: rep.epochs_run,
+                    steps_run: rep.work.steps_run,
+                    mac_ops: rep.work.mac_ops,
+                    eltwise_ops: rep.work.eltwise_ops,
+                    argmax_ops: rep.work.argmax_ops,
+                    repair_nodes: rep.work.repair_nodes,
+                    ..Default::default()
+                };
+                let cost =
+                    self.cost_model.accel_pso(&modeled, n, m, self.pso.particles, &self.platform);
+                let engines = rep.mappings.first().map(|mp| {
+                    mp.iter().flatten().map(|&v| vertex_engine[v]).collect::<Vec<_>>()
+                });
+                (cost, engines)
+            }
+            _ => (MatcherCost::zero(), None),
         }
-        let q = req.task.tiles.dag.adjacency();
-        let g = target.adjacency();
-        let mask = build_mask(&req.task.tiles.dag, &target);
-        let out = QuantizedMatcher::new(self.pso).run(&mask, &q, &g);
-        let cost =
-            self.cost_model.accel_pso(&out, q.rows(), g.rows(), self.pso.particles, &self.platform);
-        let engines = out
-            .mappings
-            .first()
-            .map(|mp| mp.iter().flatten().map(|&v| vertex_engine[v]).collect::<Vec<_>>());
-        (cost, engines)
     }
 }
 
@@ -386,6 +458,7 @@ impl Framework for ImmSched {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Vf2Engine;
     use crate::scheduler::task::Priority;
     use crate::workload::TilingConfig;
 
@@ -470,6 +543,22 @@ mod tests {
         let cdmsa = lat(FrameworkKind::CdMsa);
         let planaria = lat(FrameworkKind::Planaria);
         assert!(moca < prema && prema < cdmsa && cdmsa < planaria);
+    }
+
+    /// The serial baseline is swappable behind the same TSS path: an
+    /// IsoSched built on VF2 still places the workload, through the
+    /// identical `MatchEngine` interface.
+    #[test]
+    fn isosched_serial_engine_is_swappable() {
+        let p = Platform::edge();
+        let task = mk_task(ModelId::MobileNetV2);
+        let req = request(&task, 32);
+        let mut iso_vf2 = make_isosched_with_engine(p, Box::new(Vf2Engine));
+        let d = iso_vf2.schedule_urgent(&req);
+        assert!(d.feasible, "VF2-backed IsoSched should place MobileNetV2");
+        assert!(d.sched_seconds > 0.0);
+        let mut iso_ull = make_framework(FrameworkKind::IsoSched, p, PsoConfig::default());
+        assert!(iso_ull.schedule_urgent(&req).feasible);
     }
 
     #[test]

@@ -26,7 +26,10 @@ pub mod task;
 pub mod trace;
 
 pub use exec_model::{ExecEstimate, ExecModel, Paradigm};
-pub use frameworks::{make_framework, Framework, FrameworkKind, SchedDecision, SchedRequest};
+pub use frameworks::{
+    make_framework, make_isosched_with_engine, Framework, FrameworkKind, SchedDecision,
+    SchedRequest,
+};
 pub use metrics::{lbt_sweep, MetricSet, SimSummary};
 pub use preempt::{Candidate, PreemptPolicy};
 pub use sim::{SimConfig, SimResult, Simulator, TaskRecord};

@@ -11,10 +11,13 @@
 //!   urgent arrivals preempt after the framework's scheduling latency,
 //!   paying a DRAM checkpoint/restore on the victim.
 //! * **TSS**: engines are spatially partitioned; background tasks own
-//!   fixed shares; an urgent arrival triggers the subgraph matcher, which
-//!   claims preemptible engines (idle first, then the victims with the
-//!   largest slack, capped by the single-core preemption ratio); victims
-//!   pause and resume when the urgent task finishes.
+//!   fixed shares; an urgent arrival triggers the subgraph matcher —
+//!   since the `MatchService` redesign the TSS frameworks run it through
+//!   the typed sparse request + pluggable [`crate::coordinator::MatchEngine`]
+//!   chain — which claims preemptible engines (idle first, then the
+//!   victims with the largest slack, capped by the single-core
+//!   preemption ratio); victims pause and resume when the urgent task
+//!   finishes.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

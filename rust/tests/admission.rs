@@ -1,0 +1,226 @@
+//! Admission-path behavior: the queue pops in (priority, deadline,
+//! FIFO) order, expired/over-depth requests are shed before reaching
+//! the controller, and in-flight episodes are interruptible at the
+//! epoch barrier (explicit cancel + higher-priority preemption).
+
+use std::time::Duration;
+
+use immsched::coordinator::{
+    CancelToken, GlobalController, MatchEngine, MatchPath, MatchProblem, MatchService,
+    QuantizedEngine, QueuedRequest, RequestRouter, ServiceConfig, UllmannEngine, Vf2Engine,
+};
+use immsched::graph::{gen_chain, NodeKind};
+use immsched::matcher::PsoConfig;
+use immsched::scheduler::Priority;
+use immsched::util::{MatF, Rng};
+
+const PRIORITIES: [Priority; 3] = [Priority::Background, Priority::Normal, Priority::Urgent];
+
+fn chain_problem(n: usize, m: usize) -> MatchProblem {
+    let qd = gen_chain(n, NodeKind::Compute);
+    let gd = gen_chain(m, NodeKind::Universal);
+    MatchProblem::from_dags(&qd, &gd)
+}
+
+/// A problem with a full mask (no empty-row reject) that has **no**
+/// embedding: a 3-fan-out star cannot map into a chain.  The PSO episode
+/// runs every configured epoch unless something stops it — the
+/// long-running victim for cancellation tests.
+fn infeasible_full_mask_problem() -> MatchProblem {
+    let mut q = MatF::zeros(4, 4);
+    q[(0, 1)] = 1.0;
+    q[(0, 2)] = 1.0;
+    q[(0, 3)] = 1.0;
+    let gd = gen_chain(8, NodeKind::Universal);
+    MatchProblem::from_dense(&MatF::full(4, 8, 1.0), &q, &gd.adjacency())
+}
+
+/// Property: over random request mixes, the router pops exactly in
+/// (priority desc, deadline asc, admission-FIFO) order — checked against
+/// an independently sorted reference.
+#[test]
+fn queue_pops_in_priority_deadline_fifo_order() {
+    let mut rng = Rng::new(0xADA);
+    for trial in 0..60 {
+        let count = rng.range(1, 24) as u64;
+        let mut router = RequestRouter::new(64);
+        let mut reference: Vec<(u8, f64, u64)> = Vec::new();
+        for id in 0..count {
+            let priority = *rng.choose(&PRIORITIES);
+            let deadline = if rng.chance(0.5) { Some(1.0 + rng.f64() * 4.0) } else { None };
+            let verdict = router.admit(QueuedRequest::new(id, priority, deadline, 0.0), 0.0);
+            assert!(verdict.admitted(), "trial {trial}: admit {id}");
+            let rank = match priority {
+                Priority::Urgent => 0u8,
+                Priority::Normal => 1,
+                Priority::Background => 2,
+            };
+            reference.push((rank, deadline.unwrap_or(f64::INFINITY), id));
+        }
+        reference.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2)));
+        let got: Vec<u64> = std::iter::from_fn(|| router.next(0.5)).map(|r| r.id).collect();
+        let want: Vec<u64> = reference.iter().map(|r| r.2).collect();
+        assert_eq!(got, want, "trial {trial}");
+    }
+}
+
+/// Property: whatever the shed pattern, every admitted-or-shed request
+/// is accounted for exactly once (no silent drops at capacity).
+#[test]
+fn queue_conserves_requests_under_capacity_pressure() {
+    let mut rng = Rng::new(0xCAFE);
+    for trial in 0..40 {
+        let capacity = rng.range(1, 6);
+        let mut router = RequestRouter::new(capacity);
+        let total = rng.range(4, 30) as u64;
+        let mut evicted_count = 0u64;
+        let mut shed_on_admit = 0u64;
+        for id in 0..total {
+            let priority = *rng.choose(&PRIORITIES);
+            match router.admit(QueuedRequest::new(id, priority, None, 0.0), 0.0) {
+                immsched::coordinator::Admission::Admitted { evicted } => {
+                    evicted_count += u64::from(evicted.is_some());
+                }
+                immsched::coordinator::Admission::Shed => shed_on_admit += 1,
+            }
+        }
+        let remaining = std::iter::from_fn(|| router.next(0.0)).count() as u64;
+        assert_eq!(
+            remaining + evicted_count + shed_on_admit,
+            total,
+            "trial {trial}: lost requests (cap {capacity})"
+        );
+        assert!(remaining <= capacity as u64, "trial {trial}: depth bound violated");
+    }
+}
+
+/// An already-expired deadline is shed at admission: the controller
+/// never sees the request, and the caller gets a `Shed` response.
+#[test]
+fn expired_requests_are_shed_before_an_episode_is_wasted() {
+    let service = MatchService::spawn(PsoConfig { seed: 3, ..Default::default() }).unwrap();
+    let resp = service
+        .match_blocking(chain_problem(4, 8), Priority::Urgent, Some(-1.0))
+        .expect("service answers shed requests too");
+    assert_eq!(resp.path, MatchPath::Shed);
+    assert!(!resp.matched());
+    let stats = service.stats();
+    assert_eq!(stats.controller.requests, 0, "shed request must not reach the controller");
+    assert_eq!(stats.router.shed_expired, 1);
+
+    // a live-deadline request on the same service still gets served
+    let resp = service
+        .match_blocking(chain_problem(4, 8), Priority::Urgent, Some(service.now() + 60.0))
+        .unwrap();
+    assert!(resp.matched());
+    assert_eq!(service.stats().controller.requests, 1);
+}
+
+/// Three different engines are selectable behind the *same*
+/// `MatchService` call — the chain is configuration, not code.
+#[test]
+fn three_engines_selectable_behind_one_service_api() {
+    for (name, want) in [
+        ("quantized", MatchPath::NativeFallback),
+        ("ullmann", MatchPath::Ullmann),
+        ("vf2", MatchPath::Vf2),
+    ] {
+        let service = MatchService::spawn_with(
+            ServiceConfig::default(),
+            Box::new(move || {
+                let engine: Box<dyn MatchEngine> = match name {
+                    "quantized" => {
+                        Box::new(QuantizedEngine::new(PsoConfig { seed: 2, ..Default::default() }))
+                    }
+                    "ullmann" => Box::new(UllmannEngine),
+                    _ => Box::new(Vf2Engine),
+                };
+                GlobalController::with_engines(vec![engine])
+            }),
+        )
+        .unwrap();
+        let resp = service.match_blocking(chain_problem(4, 8), Priority::Urgent, None).unwrap();
+        assert!(resp.matched(), "{name} found no mapping");
+        assert_eq!(resp.path, want, "{name} served on the wrong path");
+    }
+}
+
+/// The paper's interruptibility mechanism, isolated: a cancel lands at
+/// the epoch barrier and the episode stops there — far short of its
+/// configured epoch budget, with the cancellation counted.
+#[test]
+fn cancel_token_interrupts_episode_at_epoch_barrier() {
+    let cfg = PsoConfig { seed: 7, epochs: 1_000_000, repair_budget: 1_000, ..Default::default() };
+    let mut ctl = GlobalController::new(cfg).expect("controller");
+    let problem = infeasible_full_mask_problem();
+    let cancel = CancelToken::new();
+    let canceller = cancel.clone();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(40));
+        canceller.cancel();
+    });
+    let out = ctl.serve(&problem.request(1, Priority::Background, None), &cancel);
+    killer.join().unwrap();
+    assert_eq!(out.path, MatchPath::Cancelled);
+    assert!(out.epochs_run < 1_000_000, "episode must stop at the barrier");
+    assert!(!out.matched());
+    assert_eq!(ctl.stats().cancelled, 1);
+}
+
+/// End-to-end preemption: a higher-priority arrival interrupts the
+/// lower-priority episode already running on the service thread; the
+/// urgent request is served, the victim answers `Cancelled`.
+#[test]
+fn higher_priority_arrival_preempts_running_episode() {
+    let cfg = PsoConfig { seed: 9, epochs: 1_000_000, repair_budget: 1_000, ..Default::default() };
+    let service = MatchService::spawn(cfg).unwrap();
+    let victim =
+        service.submit(infeasible_full_mask_problem(), Priority::Background, None).unwrap();
+    // wait until the victim's episode actually occupies the controller
+    let mut waited = 0;
+    while service.in_flight() != Some(Priority::Background) {
+        std::thread::sleep(Duration::from_millis(2));
+        waited += 1;
+        assert!(waited < 5_000, "victim episode never started");
+    }
+    let urgent = service.match_blocking(chain_problem(4, 8), Priority::Urgent, None).unwrap();
+    assert!(urgent.matched(), "urgent request must be served after the preemption");
+    let victim_resp = victim.wait().unwrap();
+    assert_eq!(
+        victim_resp.path,
+        MatchPath::Cancelled,
+        "lower-priority episode must yield at the epoch barrier"
+    );
+    let stats = service.stats();
+    assert_eq!(stats.controller.cancelled, 1);
+    assert_eq!(stats.controller.requests, 2);
+}
+
+/// A deadline that expires *during* the episode stops it at the next
+/// epoch barrier — expiry is enforced mid-episode, not only at
+/// admission.
+#[test]
+fn deadline_expiry_interrupts_episode_at_epoch_barrier() {
+    let cfg = PsoConfig { seed: 13, epochs: 1_000_000, repair_budget: 1_000, ..Default::default() };
+    let service = MatchService::spawn(cfg).unwrap();
+    let deadline = service.now() + 0.15;
+    let resp = service
+        .match_blocking(infeasible_full_mask_problem(), Priority::Normal, Some(deadline))
+        .unwrap();
+    assert_eq!(resp.path, MatchPath::Cancelled, "expiry must interrupt the running episode");
+    assert!(resp.epochs_run < 1_000_000);
+    assert_eq!(service.stats().controller.cancelled, 1);
+}
+
+/// Explicit caller-side cancellation through the ticket.
+#[test]
+fn ticket_cancel_stops_episode() {
+    let cfg = PsoConfig { seed: 11, epochs: 1_000_000, repair_budget: 1_000, ..Default::default() };
+    let service = MatchService::spawn(cfg).unwrap();
+    let ticket = service.submit(infeasible_full_mask_problem(), Priority::Normal, None).unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    ticket.cancel();
+    let resp = ticket.wait().unwrap();
+    assert_eq!(resp.path, MatchPath::Cancelled);
+    assert!(!resp.matched());
+}

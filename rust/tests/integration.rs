@@ -4,7 +4,7 @@
 
 use immsched::accel::{build_target_graph, Platform, PlatformKind};
 use immsched::config::Config;
-use immsched::coordinator::{CoordinatorHandle, GlobalController};
+use immsched::coordinator::{CancelToken, GlobalController, MatchPath, MatchProblem, MatchService};
 use immsched::matcher::{build_mask, mapping_is_feasible, PsoConfig, QuantizedMatcher};
 use immsched::scheduler::{
     build_trace, metrics, FrameworkKind, Priority, SimConfig, Simulator, Task, TraceConfig,
@@ -36,22 +36,24 @@ fn model_to_engine_mapping_pipeline() {
 }
 
 /// The epoch-backend path (native by default, PJRT when compiled in)
-/// and the quantized fallback agree on feasibility for the same problem.
+/// and the quantized fallback agree on feasibility for the same problem
+/// — both behind the same typed request API.
 #[test]
 fn epoch_and_fallback_paths_agree() {
     let qd = immsched::graph::gen_chain(5, immsched::graph::NodeKind::Compute);
     let gd = immsched::graph::gen_chain(10, immsched::graph::NodeKind::Universal);
-    let mask = build_mask(&qd, &gd);
+    let problem = MatchProblem::from_dags(&qd, &gd);
     let (q, g) = (qd.adjacency(), gd.adjacency());
+    let cancel = CancelToken::new();
 
-    let mut fallback = GlobalController::native_only(PsoConfig { seed: 3, ..Default::default() });
-    let fallback_out = fallback.find_mapping(&mask, &q, &g);
+    let mut fallback = GlobalController::fallback_only(PsoConfig { seed: 3, ..Default::default() });
+    let fallback_out = fallback.serve(&problem.request(1, Priority::Urgent, None), &cancel);
     assert!(fallback_out.matched());
+    assert_eq!(fallback_out.path, MatchPath::NativeFallback);
 
     let mut full = GlobalController::new(PsoConfig { seed: 3, ..Default::default() })
         .expect("controller construction never fails in a default build");
-    assert!(full.has_epoch_backend(), "default build must install native epoch backends");
-    let epoch_out = full.find_mapping(&mask, &q, &g);
+    let epoch_out = full.serve(&problem.request(2, Priority::Urgent, None), &cancel);
     assert!(epoch_out.matched(), "epoch path failed where the fallback succeeded");
     for mp in &epoch_out.mappings {
         assert!(mapping_is_feasible(mp, &q, &g));
@@ -68,13 +70,13 @@ fn corrupt_artifacts_degrade_gracefully() {
     std::fs::write(dir.join("pso_epoch_broken.hlo.txt"), "THIS IS NOT HLO").unwrap();
     std::env::set_var("IMMSCHED_ARTIFACTS", &dir);
 
-    let handle = CoordinatorHandle::spawn(PsoConfig { seed: 5, ..Default::default() }).unwrap();
+    let service = MatchService::spawn(PsoConfig { seed: 5, ..Default::default() }).unwrap();
     let qd = immsched::graph::gen_chain(4, immsched::graph::NodeKind::Compute);
     let gd = immsched::graph::gen_chain(8, immsched::graph::NodeKind::Universal);
-    let mask = build_mask(&qd, &gd);
-    let resp = handle.match_blocking(mask, qd.adjacency(), gd.adjacency()).unwrap();
-    assert!(!resp.used_pjrt, "corrupt artifact must not be used");
-    assert!(!resp.mappings.is_empty(), "native fallback must still match");
+    let problem = MatchProblem::from_dags(&qd, &gd);
+    let resp = service.match_blocking(problem, Priority::Urgent, None).unwrap();
+    assert_ne!(resp.path, MatchPath::Pjrt, "corrupt artifact must not be used");
+    assert!(resp.matched(), "native path must still match");
 
     std::env::remove_var("IMMSCHED_ARTIFACTS");
     std::fs::remove_dir_all(&dir).ok();
