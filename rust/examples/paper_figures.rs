@@ -36,6 +36,23 @@ fn main() -> anyhow::Result<()> {
     println!(">>> Fig 7 (LBT sweep — the slow one)");
     report::emit(&figures::fig7(&params), "fig7_lbt")?;
 
+    println!(">>> Perf trajectory (accumulated BENCH_matcher/BENCH_cluster entries)");
+    let (matcher_path, cluster_path) = figures::default_trajectory_paths();
+    let matcher_text = std::fs::read_to_string(&matcher_path).ok();
+    let cluster_text = std::fs::read_to_string(&cluster_path).ok();
+    let (traj, xs, series) =
+        figures::perf_trajectory(matcher_text.as_deref(), cluster_text.as_deref())?;
+    report::emit(&traj, "perf_trajectory")?;
+    if !xs.is_empty() {
+        report::emit_series(
+            "perf_trajectory_series",
+            "entry",
+            &["largest_class_fitness_speedup", "largest_class_epoch_us"],
+            &xs,
+            &series,
+        )?;
+    }
+
     println!("all figures regenerated under reports/");
     Ok(())
 }

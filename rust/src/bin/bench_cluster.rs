@@ -1,0 +1,346 @@
+//! `bench_cluster` — the tracked cluster-serving pipeline.
+//!
+//! Two phases per run:
+//!
+//! 1. **Preempt → persist → resume proof.**  Every shard is loaded with
+//!    a long-running Background episode (an infeasible full-mask star,
+//!    epoch budget calibrated to ~hundreds of ms); urgent arrivals are
+//!    then routed through the deadline-aware policy, which triggers
+//!    cross-shard preemption of the weakest victims.  The cancelled
+//!    victims' S*/S̄ snapshots land in the cluster's `ResumeStore`, the
+//!    victims are resubmitted, and the run asserts the warm start: the
+//!    `resumed` signal is set and the resumed episode's epoch count is
+//!    strictly lower than a cold solve of the same request — in fact
+//!    victim + resumed epochs must equal the cold budget exactly.
+//! 2. **Open-loop trace.**  The MMPP-bursty, trace-driven arrival
+//!    driver replays a `workload::models` mix against a second cluster
+//!    (default epoch budget), collecting per-shard latency / SLO-miss /
+//!    shed / preemption metrics.
+//!
+//! Results are appended to the `BENCH_cluster.json` trajectory at the
+//! repo root (schema `immsched.bench_cluster/v1`).  `--smoke` runs the
+//! acceptance scenario (≥2 shards, bursty arrivals, zero lost requests,
+//! ≥1 cross-shard preemption, ≥1 warm-started resume) with tiny sizes
+//! and fails loudly if any of it does not hold.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
+use immsched::cluster::{policy_by_name, ClusterConfig, MatchCluster, RoutePolicy};
+use immsched::coordinator::{CancelToken, GlobalController, MatchPath, MatchProblem, ServiceConfig};
+use immsched::graph::{gen_chain, NodeKind};
+use immsched::matcher::PsoConfig;
+use immsched::report::figures::{append_bench_entry, CLUSTER_BENCH_SCHEMA};
+use immsched::scheduler::{ArrivalProcess, Priority};
+use immsched::util::json::Json;
+use immsched::util::table::fmt_time;
+use immsched::util::MatF;
+use immsched::workload::WorkloadClass;
+
+struct Args {
+    smoke: bool,
+    fresh: bool,
+    shards: usize,
+    policy: String,
+    rate: f64,
+    horizon: f64,
+    class: WorkloadClass,
+    process: ArrivalProcess,
+    seed: u64,
+    label: String,
+    out: String,
+}
+
+fn parse_args() -> Result<Args> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1));
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let class = match flag("--class").map(String::as_str).unwrap_or("simple") {
+        "simple" => WorkloadClass::Simple,
+        "middle" => WorkloadClass::Middle,
+        "complex" => WorkloadClass::Complex,
+        other => bail!("unknown class {other:?} (simple|middle|complex)"),
+    };
+    let process = match flag("--process").map(String::as_str).unwrap_or("bursty") {
+        "poisson" => ArrivalProcess::Poisson,
+        "bursty" => ArrivalProcess::bursty_default(),
+        other => bail!("unknown process {other:?} (poisson|bursty)"),
+    };
+    Ok(Args {
+        smoke,
+        fresh: argv.iter().any(|a| a == "--fresh"),
+        shards: flag("--shards").map(|s| s.parse()).transpose()?.unwrap_or(2).max(1),
+        policy: flag("--policy").cloned().unwrap_or_else(|| "deadline-aware".into()),
+        rate: flag("--rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0),
+        horizon: flag("--horizon")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(if smoke { 0.02 } else { 0.1 }),
+        class,
+        process,
+        seed: flag("--seed").map(|s| s.parse()).transpose()?.unwrap_or(42),
+        label: flag("--label").cloned().unwrap_or_else(|| "local".into()),
+        out: flag("--out").cloned().unwrap_or_else(|| {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json").into()
+        }),
+    })
+}
+
+fn make_policy(name: &str) -> Result<Box<dyn RoutePolicy>> {
+    policy_by_name(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy {name:?} (round-robin|least-queue|deadline-aware)")
+    })
+}
+
+/// A 3-fan-out star cannot embed into a chain, but its full mask has no
+/// empty row — the episode runs its whole epoch budget unless preempted.
+fn infeasible_star_problem() -> MatchProblem {
+    let mut q = MatF::zeros(4, 4);
+    q[(0, 1)] = 1.0;
+    q[(0, 2)] = 1.0;
+    q[(0, 3)] = 1.0;
+    let gd = gen_chain(8, NodeKind::Universal);
+    MatchProblem::from_dense(&MatF::full(4, 8, 1.0), &q, &gd.adjacency())
+}
+
+fn feasible_chain_problem() -> MatchProblem {
+    let qd = gen_chain(4, NodeKind::Compute);
+    let gd = gen_chain(8, NodeKind::Universal);
+    MatchProblem::from_dags(&qd, &gd)
+}
+
+/// Measured outcome of the preempt→persist→resume proof.
+struct ResumeProof {
+    epoch_budget: usize,
+    preemptions: u64,
+    victim_epochs: usize,
+    resumed_epochs: usize,
+    resumed_ok: bool,
+}
+
+/// Calibrate an epoch budget so one cold infeasible episode runs for
+/// roughly `target_s` — long enough that preemption reliably lands
+/// mid-episode, short enough that the resumed tail stays cheap.
+fn calibrate_epoch_budget(seed: u64, target_s: f64) -> Result<usize> {
+    let probe_epochs = 256usize;
+    let cfg = PsoConfig { seed, epochs: probe_epochs, early_exit: true, ..Default::default() };
+    let mut ctl = GlobalController::new(cfg)?;
+    let problem = infeasible_star_problem();
+    let cancel = CancelToken::new();
+    let t0 = Instant::now();
+    let out = ctl.serve(&problem.request(1, Priority::Background, None), &cancel);
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-6);
+    anyhow::ensure!(out.epochs_run == probe_epochs, "calibration episode ended early");
+    let per_epoch = elapsed / probe_epochs as f64;
+    Ok(((target_s / per_epoch) as usize).clamp(512, 4_000_000))
+}
+
+/// Phase 1: load every shard with a Background victim, preempt via
+/// deadline-aware routing, resume the victims from their snapshots.
+fn resume_proof(args: &Args, target_s: f64) -> Result<ResumeProof> {
+    let epoch_budget = calibrate_epoch_budget(args.seed, target_s)?;
+    println!(
+        "[bench_cluster] resume proof: {} shards, calibrated epoch budget {epoch_budget}",
+        args.shards
+    );
+    for attempt in 0..5 {
+        let cluster = MatchCluster::spawn(
+            ClusterConfig {
+                shards: args.shards,
+                service: ServiceConfig::default(),
+                pso: PsoConfig { seed: args.seed, epochs: epoch_budget, ..Default::default() },
+                resume_capacity: 64,
+            },
+            make_policy(&args.policy)?,
+        )?;
+
+        // fillers: one long-running Background episode per shard
+        let mut fillers = Vec::new();
+        for shard in 0..args.shards {
+            fillers.push((
+                cluster.submit_to(shard, infeasible_star_problem(), Priority::Background, None)?,
+                infeasible_star_problem(),
+            ));
+        }
+        for shard in 0..args.shards {
+            let t0 = Instant::now();
+            while cluster.views()[shard].in_flight != Some(Priority::Background) {
+                if t0.elapsed() > Duration::from_secs(10) {
+                    bail!("filler episode never started on shard {shard}");
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        // head start so the victims burn epochs before the preemptors land
+        std::thread::sleep(Duration::from_secs_f64(target_s * 0.1));
+
+        // hot arrivals through the policy → cross-shard preemption of
+        // the weakest in-flight victims
+        let mut urgents = Vec::new();
+        for _ in 0..args.shards {
+            urgents.push(cluster.submit(feasible_chain_problem(), Priority::Urgent, Some(30.0))?);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for u in urgents {
+            let resp = u.wait()?;
+            anyhow::ensure!(resp.matched(), "urgent request unserved during the proof");
+        }
+
+        // victims answer Cancelled; their snapshots are now persisted
+        let mut victims = Vec::new();
+        for (ticket, problem) in fillers {
+            let id = ticket.id;
+            let resp = ticket.wait()?;
+            victims.push((id, problem, resp));
+        }
+        let preemptions = cluster.stats().preemptions();
+        let best_victim = victims
+            .iter()
+            .filter(|(_, _, r)| r.path == MatchPath::Cancelled && r.epochs_run >= 1)
+            .max_by_key(|(_, _, r)| r.epochs_run);
+        let Some((victim_id, victim_problem, victim_resp)) = best_victim else {
+            println!("[bench_cluster] attempt {attempt}: no mid-episode victim; retrying");
+            continue;
+        };
+        let victim_id = *victim_id;
+
+        // resume: resubmit the victim under its original id — the
+        // persisted snapshot warm-starts it (possibly on another shard)
+        anyhow::ensure!(
+            cluster.resume_store().contains(victim_id),
+            "victim snapshot missing from the resume store"
+        );
+        let resumed = cluster
+            .resubmit(victim_id, victim_problem.clone(), Priority::Background, None)?
+            .wait()?;
+        let resumed_ok = resumed.resumed
+            && resumed.path != MatchPath::Cancelled
+            && resumed.epochs_run < epoch_budget
+            && victim_resp.epochs_run + resumed.epochs_run == epoch_budget;
+        println!(
+            "[bench_cluster] attempt {attempt}: preemptions={preemptions} victim_epochs={} \
+             resumed_epochs={} cold_epochs={epoch_budget} resumed_signal={}",
+            victim_resp.epochs_run, resumed.epochs_run, resumed.resumed
+        );
+        if preemptions >= 1 && resumed_ok {
+            return Ok(ResumeProof {
+                epoch_budget,
+                preemptions,
+                victim_epochs: victim_resp.epochs_run,
+                resumed_epochs: resumed.epochs_run,
+                resumed_ok,
+            });
+        }
+    }
+    bail!("preempt→resume proof did not converge in 5 attempts")
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    println!(
+        "[bench_cluster] smoke={} shards={} policy={} process={} rate={} horizon={}",
+        args.smoke,
+        args.shards,
+        args.policy,
+        args.process.name(),
+        args.rate,
+        args.horizon
+    );
+
+    // ---- phase 1: preempt → persist → resume --------------------------
+    let target_s = if args.smoke { 0.3 } else { 0.8 };
+    let proof = resume_proof(&args, target_s)?;
+
+    // ---- phase 2: open-loop bursty trace ------------------------------
+    let dcfg = DriverConfig {
+        class: args.class,
+        process: args.process,
+        arrival_rate: args.rate,
+        horizon: args.horizon,
+        seed: args.seed,
+        time_scale: 0.0,
+        resubmit_cancelled: true,
+        ..Default::default()
+    };
+    let schedule = schedule_from_trace(&dcfg);
+    println!("[bench_cluster] trace: {} requests over {}s (modeled)", schedule.len(), args.horizon);
+    let cluster = MatchCluster::spawn(
+        ClusterConfig {
+            shards: args.shards,
+            service: ServiceConfig::default(),
+            pso: PsoConfig { seed: args.seed, ..Default::default() },
+            resume_capacity: 1024,
+        },
+        make_policy(&args.policy)?,
+    )?;
+    let report = run_open_loop(&cluster, &schedule, &dcfg)?;
+    print!("{}", report.table().render());
+    println!(
+        "[bench_cluster] {} submitted, {} served, {} shed, {} resumed, {} SLO misses, wall {}",
+        report.submitted(),
+        report.served(),
+        report.count_path(MatchPath::Shed),
+        report.resumed(),
+        report.slo_misses(),
+        fmt_time(report.wall_seconds)
+    );
+
+    // ---- acceptance (smoke) -------------------------------------------
+    let lost = schedule.len() != report.submitted();
+    if args.smoke {
+        assert!(args.shards >= 2, "smoke needs >= 2 shards");
+        assert!(
+            matches!(args.process, ArrivalProcess::Bursty { .. }),
+            "smoke needs bursty arrivals"
+        );
+        assert!(
+            !lost,
+            "lost requests: {} scheduled, {} answered",
+            schedule.len(),
+            report.submitted()
+        );
+        assert!(proof.preemptions >= 1, "no cross-shard preemption observed");
+        assert!(proof.resumed_ok, "warm-started resume proof failed");
+        assert!(
+            proof.resumed_epochs < proof.epoch_budget,
+            "resumed epoch count {} not below cold solve {}",
+            proof.resumed_epochs,
+            proof.epoch_budget
+        );
+        println!("[bench_cluster] SMOKE OK");
+    }
+
+    // ---- trajectory entry ---------------------------------------------
+    let entry = Json::obj(vec![
+        ("label", Json::from(args.label.as_str())),
+        ("smoke", Json::from(args.smoke)),
+        ("shards", Json::from(args.shards)),
+        ("policy", Json::from(args.policy.as_str())),
+        ("process", Json::from(args.process.name())),
+        ("arrival_rate", Json::from(args.rate)),
+        ("horizon_s", Json::from(args.horizon)),
+        ("submitted", Json::from(report.submitted())),
+        ("served", Json::from(report.served())),
+        ("shed", Json::from(report.count_path(MatchPath::Shed))),
+        ("resumed", Json::from(report.resumed())),
+        ("slo_misses", Json::from(report.slo_misses())),
+        ("preemptions", Json::from(report.cluster.preemptions())),
+        ("p50_latency_s", Json::from(report.latency_percentile(50.0))),
+        ("p95_latency_s", Json::from(report.latency_percentile(95.0))),
+        ("wall_seconds", Json::from(report.wall_seconds)),
+        (
+            "resume_proof",
+            Json::obj(vec![
+                ("epoch_budget", Json::from(proof.epoch_budget)),
+                ("preemptions", Json::from(proof.preemptions)),
+                ("victim_epochs", Json::from(proof.victim_epochs)),
+                ("resumed_epochs", Json::from(proof.resumed_epochs)),
+            ]),
+        ),
+    ]);
+    let count = append_bench_entry(&args.out, CLUSTER_BENCH_SCHEMA, entry, args.fresh)?;
+    println!("[bench_cluster] wrote {} ({count} trajectory entries)", args.out);
+    Ok(())
+}

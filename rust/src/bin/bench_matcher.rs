@@ -16,10 +16,15 @@
 //!   API (sparse CSR + packed-mask request into `GlobalController`'s
 //!   engine chain), the path every real interrupt takes.
 //!
-//! Results are printed as tables and written to `BENCH_matcher.json` at
-//! the repo root — the perf trajectory file tracked from PR 2 onward.
-//! `--smoke` runs tiny sizes/reps (CI keeps the binary and the JSON
-//! schema from rotting); `--out <path>` overrides the output location.
+//! Results are printed as tables and **appended** to the
+//! `BENCH_matcher.json` trajectory at the repo root (schema
+//! `immsched.bench_matcher/v2`: `{ schema, entries: [...] }`, one entry
+//! per run, accumulated over PRs — `report::figures::perf_trajectory`
+//! plots them).  A schema-v1 single-run file is rejected loudly; pass
+//! `--fresh` to start a new trajectory.  `--smoke` runs tiny sizes/reps
+//! (CI keeps the binary and the JSON schema from rotting); `--out
+//! <path>` overrides the output location, `--label <name>` tags the
+//! entry (CI passes the commit).
 
 use std::time::Instant;
 
@@ -28,10 +33,12 @@ use immsched::graph::{gen_dag_layered, Dag, NodeKind};
 use immsched::matcher::{
     build_bitmask, edge_fitness, ullmann::plant_embedding, FitnessKernel, PsoConfig, PsoMatcher,
 };
+use immsched::report::figures::{append_bench_entry, MATCHER_BENCH_SCHEMA};
 use immsched::runtime::{
     EpochBackend, EpochInputs, EpochOutputs, NativeEpochBackend, SizeClass, NATIVE_SIZE_CLASSES,
 };
 use immsched::scheduler::Priority;
+use immsched::util::json::Json;
 use immsched::util::table::{fmt_time, Table};
 use immsched::util::{MatF, Rng};
 
@@ -85,15 +92,16 @@ struct ClassResult {
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
-    let out_path = args
-        .iter()
-        .position(|a| a == "--out")
-        .and_then(|i| args.get(i + 1))
-        .cloned()
+    let fresh = args.iter().any(|a| a == "--fresh");
+    let flag = |name: &str| {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    };
+    let out_path = flag("--out")
         .unwrap_or_else(|| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_matcher.json").into());
+    let label = flag("--label").unwrap_or_else(|| "local".into());
 
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("[bench_matcher] smoke={smoke} worker_threads={threads} out={out_path}");
+    println!("[bench_matcher] smoke={smoke} worker_threads={threads} out={out_path} label={label}");
 
     let classes = class_specs();
     let class_count = if smoke { 2 } else { classes.len() };
@@ -122,9 +130,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let json = render_json(&results, smoke, threads);
-    std::fs::write(&out_path, json)?;
-    println!("[bench_matcher] wrote {out_path}");
+    let entry = entry_json(&results, smoke, threads, &label);
+    let appended = append_bench_entry(&out_path, MATCHER_BENCH_SCHEMA, entry, fresh)?;
+    println!("[bench_matcher] wrote {out_path} ({appended} trajectory entries)");
     Ok(())
 }
 
@@ -375,43 +383,41 @@ fn render_tables(results: &[ClassResult]) {
     print!("{}", t.render());
 }
 
-fn render_json(results: &[ClassResult], smoke: bool, threads: usize) -> String {
-    let opt = |v: Option<f64>| v.map_or("null".to_string(), |x| format!("{x:.1}"));
-    let mut s = String::new();
-    s.push_str("{\n");
-    s.push_str("  \"schema\": \"immsched.bench_matcher/v2\",\n");
-    s.push_str(&format!("  \"smoke\": {smoke},\n"));
-    s.push_str(&format!("  \"worker_threads\": {threads},\n"));
-    s.push_str("  \"classes\": [\n");
-    for (i, r) in results.iter().enumerate() {
-        s.push_str("    {\n");
-        s.push_str(&format!("      \"class\": \"{}\",\n", r.name));
-        s.push_str(&format!("      \"n\": {}, \"m\": {},\n", r.n, r.m));
-        s.push_str(&format!(
-            "      \"q_edges\": {}, \"g_edges\": {}, \"mask_density\": {:.4},\n",
-            r.q_edges, r.g_edges, r.mask_density
-        ));
-        s.push_str(&format!(
-            "      \"fitness_dense_ns\": {:.1}, \"fitness_sparse_ns\": {:.1}, \
-             \"fitness_speedup\": {:.2},\n",
-            r.fitness_dense_ns, r.fitness_sparse_ns, r.fitness_speedup
-        ));
-        s.push_str(&format!("      \"epoch_native_ns\": {:.1},\n", r.epoch_native_ns));
-        s.push_str(&format!(
-            "      \"pso_serial_ns\": {}, \"pso_threaded_ns\": {},\n",
-            opt(r.pso_serial_ns),
-            opt(r.pso_threaded_ns)
-        ));
-        s.push_str(&format!("      \"service_episode_ns\": {}\n", opt(r.service_episode_ns)));
-        s.push_str(if i + 1 == results.len() { "    }\n" } else { "    },\n" });
-    }
-    s.push_str("  ],\n");
+/// One trajectory entry for this run.
+fn entry_json(results: &[ClassResult], smoke: bool, threads: usize, label: &str) -> Json {
+    let opt = |v: Option<f64>| v.map_or(Json::Null, Json::from);
+    let round = |x: f64, digits: i32| -> f64 {
+        let scale = 10f64.powi(digits);
+        (x * scale).round() / scale
+    };
+    let classes: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("class", Json::from(r.name)),
+                ("n", Json::from(r.n)),
+                ("m", Json::from(r.m)),
+                ("q_edges", Json::from(r.q_edges)),
+                ("g_edges", Json::from(r.g_edges)),
+                ("mask_density", Json::from(round(r.mask_density, 4))),
+                ("fitness_dense_ns", Json::from(round(r.fitness_dense_ns, 1))),
+                ("fitness_sparse_ns", Json::from(round(r.fitness_sparse_ns, 1))),
+                ("fitness_speedup", Json::from(round(r.fitness_speedup, 2))),
+                ("epoch_native_ns", Json::from(round(r.epoch_native_ns, 1))),
+                ("pso_serial_ns", opt(r.pso_serial_ns.map(|x| round(x, 1)))),
+                ("pso_threaded_ns", opt(r.pso_threaded_ns.map(|x| round(x, 1)))),
+                ("service_episode_ns", opt(r.service_episode_ns.map(|x| round(x, 1)))),
+            ])
+        })
+        .collect();
     let largest = results.last().expect("nonempty");
-    s.push_str(&format!("  \"largest_class\": \"{}\",\n", largest.name));
-    s.push_str(&format!(
-        "  \"largest_class_fitness_speedup\": {:.2}\n",
-        largest.fitness_speedup
-    ));
-    s.push_str("}\n");
-    s
+    Json::obj(vec![
+        ("label", Json::from(label)),
+        ("smoke", Json::from(smoke)),
+        ("measured", Json::from(true)),
+        ("worker_threads", Json::from(threads)),
+        ("classes", Json::Arr(classes)),
+        ("largest_class", Json::from(largest.name)),
+        ("largest_class_fitness_speedup", Json::from(round(largest.fitness_speedup, 2))),
+    ])
 }

@@ -1,0 +1,320 @@
+//! `cluster/`: sharded multi-accelerator serving — the front router over
+//! N [`MatchService`] shards (one per modeled accelerator), toward the
+//! production-scale north star.
+//!
+//! * [`MatchCluster`] — owns the shards and hands out globally unique
+//!   request ids; every submission is routed by a pluggable
+//!   [`RoutePolicy`] ([`RoundRobin`], [`LeastQueueDepth`], or
+//!   [`DeadlineAware`] with cross-shard preemption) using the shards'
+//!   non-blocking [`ServiceStats`].
+//! * [`ResumeStore`] — a cancelled episode's S*/S̄ barrier snapshot is
+//!   persisted keyed by request id; [`MatchCluster::resubmit`]
+//!   warm-starts the resubmission from it (same shard or migrated),
+//!   so preemption costs the victim its *place*, not its *progress*.
+//! * [`driver`] — the open-loop, trace-driven arrival driver (Poisson
+//!   and MMPP-style bursty processes over the `workload::models` task
+//!   mix) that feeds the cluster and collects per-shard latency /
+//!   SLO-miss / shed / preemption metrics — the `bench_cluster` binary
+//!   and the `immsched cluster` CLI subcommand run it.
+//!
+//! Request lifecycle: **route → submit (shard) → admit → engine chain →
+//! outcome**, with `Cancelled` outcomes feeding the resume store.
+
+pub mod driver;
+pub mod policy;
+pub mod resume;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    MatchProblem, MatchResponse, MatchService, MatchTicket, RequestId, ServiceConfig,
+    ServiceStats, SubmitOptions,
+};
+use crate::matcher::PsoConfig;
+use crate::scheduler::Priority;
+
+pub use policy::{
+    policy_by_name, DeadlineAware, LeastQueueDepth, RoundRobin, RoutePolicy, ShardId, ShardView,
+};
+pub use resume::{ResumeStats, ResumeStore};
+
+/// Cluster-wide knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Shard count — one [`MatchService`] per modeled accelerator.
+    pub shards: usize,
+    /// Per-shard admission knobs (queue depth, epoch quota).
+    pub service: ServiceConfig,
+    /// Matcher configuration shared by every shard's engine chain.
+    pub pso: PsoConfig,
+    /// Resume-store capacity (snapshots kept for warm restarts).
+    pub resume_capacity: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            service: ServiceConfig::default(),
+            pso: PsoConfig::default(),
+            resume_capacity: 1024,
+        }
+    }
+}
+
+/// Aggregate cluster telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    /// Per-shard service stats, indexed by shard id.
+    pub shards: Vec<ServiceStats>,
+    /// Requests routed to each shard (submission counts).
+    pub routed: Vec<u64>,
+    /// Resume-store traffic (saved / taken / evicted snapshots).
+    pub resume: ResumeStats,
+}
+
+impl ClusterStats {
+    /// Episodes preempted/cancelled at an epoch barrier, cluster-wide.
+    pub fn preemptions(&self) -> u64 {
+        self.shards.iter().map(|s| s.controller.cancelled).sum()
+    }
+
+    /// Episodes that warm-started from a persisted snapshot.
+    pub fn resumes(&self) -> u64 {
+        self.shards.iter().map(|s| s.controller.resumed).sum()
+    }
+
+    /// Requests shed by admission, cluster-wide.
+    pub fn shed(&self) -> u64 {
+        self.shards.iter().map(|s| s.router.shed_expired + s.router.shed_capacity).sum()
+    }
+}
+
+/// A routed submission: which shard serves it, plus the underlying
+/// service ticket.  Waiting (blocking or polling) through the cluster
+/// ticket automatically persists any snapshot a response carries —
+/// from a cancelled episode, or handed back untouched by a shed
+/// resubmission — into the cluster's [`ResumeStore`].
+pub struct ClusterTicket {
+    pub id: RequestId,
+    pub shard: ShardId,
+    ticket: MatchTicket,
+    store: Arc<ResumeStore>,
+}
+
+impl ClusterTicket {
+    /// Block until the shard answers; a cancelled episode's snapshot is
+    /// persisted for [`MatchCluster::resubmit`] before returning.
+    pub fn wait(self) -> Result<MatchResponse> {
+        let resp = self.ticket.wait()?;
+        stash(&self.store, &resp);
+        Ok(resp)
+    }
+
+    /// Non-blocking poll; persists a cancelled episode's snapshot when
+    /// the response arrives.
+    pub fn try_wait(&self) -> Option<MatchResponse> {
+        let resp = self.ticket.try_wait()?;
+        stash(&self.store, &resp);
+        Some(resp)
+    }
+
+    /// Stop the episode at its next epoch barrier (or before it starts).
+    pub fn cancel(&self) {
+        self.ticket.cancel();
+    }
+}
+
+fn stash(store: &ResumeStore, resp: &MatchResponse) {
+    if let Some(snapshot) = &resp.snapshot {
+        store.save(resp.id, snapshot.clone());
+    }
+}
+
+/// The front router: N shards, one policy, one resume store.
+pub struct MatchCluster {
+    shards: Vec<MatchService>,
+    policy: Mutex<Box<dyn RoutePolicy>>,
+    store: Arc<ResumeStore>,
+    routed: Vec<AtomicU64>,
+    next_id: AtomicU64,
+    start: Instant,
+}
+
+impl MatchCluster {
+    /// Spawn `cfg.shards` services behind `policy`.
+    pub fn spawn(cfg: ClusterConfig, policy: Box<dyn RoutePolicy>) -> Result<Self> {
+        let shards = cfg.shards.max(1);
+        let mut services = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            services.push(MatchService::spawn_configured(cfg.service, cfg.pso)?);
+        }
+        Ok(Self {
+            shards: services,
+            policy: Mutex::new(policy),
+            store: Arc::new(ResumeStore::with_capacity(cfg.resume_capacity)),
+            routed: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            next_id: AtomicU64::new(1),
+            start: Instant::now(),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Seconds since cluster start.
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// The cluster's resume store (snapshot persistence for cancelled
+    /// episodes).
+    pub fn resume_store(&self) -> &ResumeStore {
+        &self.store
+    }
+
+    /// Current per-shard routing views (the policy input; also useful
+    /// for dashboards/tests).
+    pub fn views(&self) -> Vec<ShardView> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(shard, svc)| {
+                let stats = svc.stats();
+                ShardView {
+                    shard,
+                    queue_depth: stats.router.depth as usize,
+                    in_flight: svc.in_flight(),
+                    stats,
+                }
+            })
+            .collect()
+    }
+
+    pub fn stats(&self) -> ClusterStats {
+        ClusterStats {
+            shards: self.shards.iter().map(|s| s.stats()).collect(),
+            routed: self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            resume: self.store.stats(),
+        }
+    }
+
+    /// Submit a new request: the policy picks the shard, the cluster
+    /// assigns a globally unique id.  `timeout` is relative (seconds
+    /// from now) and is converted to the chosen shard's absolute clock.
+    pub fn submit(
+        &self,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+    ) -> Result<ClusterTicket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let shard = self.route(priority, timeout);
+        self.submit_inner(shard, id, problem, priority, timeout, None)
+    }
+
+    /// Shard-addressable submission (bypasses the policy — fillers,
+    /// tests, and debugging).
+    pub fn submit_to(
+        &self,
+        shard: ShardId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+    ) -> Result<ClusterTicket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_inner(shard, id, problem, priority, timeout, None)
+    }
+
+    /// Resubmit a previously answered request under its original id.
+    /// If a cancelled episode persisted a snapshot for `id`, the new
+    /// episode warm-starts from it — on whichever shard the policy now
+    /// picks (resume survives migration).
+    pub fn resubmit(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+    ) -> Result<ClusterTicket> {
+        let resume = self.store.take(id);
+        let shard = self.route(priority, timeout);
+        self.submit_inner(shard, id, problem, priority, timeout, resume)
+    }
+
+    fn route(&self, priority: Priority, timeout: Option<f64>) -> ShardId {
+        let views = self.views();
+        let shard = self.policy.lock().unwrap().route(priority, timeout, &views);
+        shard.min(self.shards.len() - 1)
+    }
+
+    fn submit_inner(
+        &self,
+        shard: ShardId,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<crate::matcher::SwarmSnapshot>,
+    ) -> Result<ClusterTicket> {
+        let shard = shard.min(self.shards.len() - 1);
+        let svc = &self.shards[shard];
+        let deadline = timeout.map(|t| svc.now() + t);
+        let ticket =
+            svc.submit_with(problem, priority, deadline, SubmitOptions { id: Some(id), resume })?;
+        self.routed[shard].fetch_add(1, Ordering::Relaxed);
+        Ok(ClusterTicket { id, shard, ticket, store: Arc::clone(&self.store) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+
+    fn chain_problem(n: usize, m: usize) -> MatchProblem {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        MatchProblem::from_dags(&qd, &gd)
+    }
+
+    #[test]
+    fn round_robin_cluster_serves_all_shards() {
+        let cfg = ClusterConfig {
+            shards: 3,
+            pso: PsoConfig { seed: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let cluster = MatchCluster::spawn(cfg, Box::<RoundRobin>::default()).unwrap();
+        let mut tickets = Vec::new();
+        for _ in 0..6 {
+            tickets.push(cluster.submit(chain_problem(4, 8), Priority::Normal, None).unwrap());
+        }
+        let shards_used: std::collections::HashSet<ShardId> =
+            tickets.iter().map(|t| t.shard).collect();
+        assert_eq!(shards_used.len(), 3, "round-robin must touch every shard");
+        for t in tickets {
+            let resp = t.wait().unwrap();
+            assert!(resp.matched());
+        }
+        let stats = cluster.stats();
+        assert_eq!(stats.routed.iter().sum::<u64>(), 6);
+        assert_eq!(stats.routed, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn cluster_ids_are_globally_unique() {
+        let cluster =
+            MatchCluster::spawn(ClusterConfig::default(), Box::<RoundRobin>::default()).unwrap();
+        let a = cluster.submit(chain_problem(3, 6), Priority::Normal, None).unwrap();
+        let b = cluster.submit(chain_problem(3, 6), Priority::Normal, None).unwrap();
+        assert_ne!(a.id, b.id);
+        let (ra, rb) = (a.wait().unwrap(), b.wait().unwrap());
+        assert_ne!(ra.id, rb.id, "responses must echo the cluster-assigned ids");
+    }
+}

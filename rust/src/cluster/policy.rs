@@ -1,0 +1,208 @@
+//! Pluggable shard-selection policies for the [`super::MatchCluster`]
+//! front router.
+//!
+//! A policy sees one [`ShardView`] per shard — the non-blocking
+//! [`ServiceStats`] load signal (queue depth, shed counters) plus the
+//! priority of the episode currently on the shard's controller — and
+//! picks the shard for one submission.  Three implementations ship:
+//!
+//! * [`RoundRobin`] — the baseline spreader;
+//! * [`LeastQueueDepth`] — load-aware: fewest queued + in-flight
+//!   requests wins (PREMA-style consolidated dispatch needs exactly
+//!   this runtime signal next to the static plan);
+//! * [`DeadlineAware`] — priority/deadline-aware with **cross-shard
+//!   preemption**: a hot request prefers an idle shard, else the shard
+//!   whose in-flight victim has the *lowest* priority strictly below
+//!   its own — routing there triggers the service's epoch-barrier
+//!   preemption, so the hottest work always lands where it displaces
+//!   the least important episode.
+
+use crate::coordinator::ServiceStats;
+use crate::scheduler::Priority;
+
+/// Shard index within one cluster.
+pub type ShardId = usize;
+
+/// One shard's routing-relevant state, read without blocking the
+/// shard's controller thread.
+#[derive(Clone, Debug)]
+pub struct ShardView {
+    pub shard: ShardId,
+    /// Queued requests not yet popped for service.
+    pub queue_depth: usize,
+    /// Priority of the episode currently occupying the controller.
+    pub in_flight: Option<Priority>,
+    /// Full service telemetry (router + controller counters).
+    pub stats: ServiceStats,
+}
+
+impl ShardView {
+    /// Queued plus in-flight load.
+    pub fn load(&self) -> usize {
+        self.queue_depth + usize::from(self.in_flight.is_some())
+    }
+}
+
+/// A shard-selection policy.  `route` must return a valid index into
+/// `shards` (the cluster clamps it defensively).
+pub trait RoutePolicy: Send {
+    fn name(&self) -> &'static str;
+    fn route(
+        &mut self,
+        priority: Priority,
+        deadline: Option<f64>,
+        shards: &[ShardView],
+    ) -> ShardId;
+}
+
+/// Construct a shipped policy by its CLI name (`round-robin`,
+/// `least-queue`, `deadline-aware`) — the single parsing point shared by
+/// `immsched cluster` and `bench_cluster`.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn RoutePolicy>> {
+    Some(match name {
+        "round-robin" => Box::<RoundRobin>::default(),
+        "least-queue" => Box::new(LeastQueueDepth),
+        "deadline-aware" => Box::new(DeadlineAware),
+        _ => return None,
+    })
+}
+
+/// Strict rotation over the shards, ignoring load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _: Priority, _: Option<f64>, shards: &[ShardView]) -> ShardId {
+        let shard = self.next % shards.len().max(1);
+        self.next = self.next.wrapping_add(1);
+        shard
+    }
+}
+
+/// Fewest queued + in-flight requests wins (ties → lowest shard id, so
+/// the choice is deterministic).
+#[derive(Debug, Default)]
+pub struct LeastQueueDepth;
+
+impl RoutePolicy for LeastQueueDepth {
+    fn name(&self) -> &'static str {
+        "least-queue"
+    }
+
+    fn route(&mut self, _: Priority, _: Option<f64>, shards: &[ShardView]) -> ShardId {
+        shards
+            .iter()
+            .min_by_key(|v| (v.load(), v.shard))
+            .map(|v| v.shard)
+            .unwrap_or(0)
+    }
+}
+
+/// Priority/deadline-aware routing with cross-shard preemption.
+///
+/// For a request that outranks at least one in-flight episode:
+/// 1. an **idle** shard (nothing queued, nothing in flight) serves it
+///    with zero displacement;
+/// 2. otherwise the shard whose in-flight victim has the **lowest**
+///    priority strictly below the request's — submitting there cancels
+///    the weakest victim at its next epoch barrier (the victim's
+///    snapshot lands in the resume store for a warm restart);
+/// 3. otherwise plain least-load.
+///
+/// Best-effort requests (nothing to preempt) always take least-load.
+#[derive(Debug, Default)]
+pub struct DeadlineAware;
+
+impl RoutePolicy for DeadlineAware {
+    fn name(&self) -> &'static str {
+        "deadline-aware"
+    }
+
+    fn route(
+        &mut self,
+        priority: Priority,
+        _deadline: Option<f64>,
+        shards: &[ShardView],
+    ) -> ShardId {
+        if let Some(idle) = shards.iter().find(|v| v.load() == 0) {
+            return idle.shard;
+        }
+        // weakest preemptable victim: lowest in-flight priority strictly
+        // below ours, tie-broken toward the shallower queue
+        let victim = shards
+            .iter()
+            .filter_map(|v| {
+                v.in_flight
+                    .filter(|&p| p < priority)
+                    .map(|p| (p, v.queue_depth, v.shard))
+            })
+            .min();
+        if let Some((_, _, shard)) = victim {
+            return shard;
+        }
+        LeastQueueDepth.route(priority, None, shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(shard: ShardId, queue_depth: usize, in_flight: Option<Priority>) -> ShardView {
+        ShardView { shard, queue_depth, in_flight, stats: ServiceStats::default() }
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let shards = vec![view(0, 0, None), view(1, 0, None), view(2, 0, None)];
+        let mut rr = RoundRobin::default();
+        let picks: Vec<ShardId> =
+            (0..5).map(|_| rr.route(Priority::Normal, None, &shards)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn least_queue_prefers_shallowest_then_lowest_id() {
+        let shards = vec![
+            view(0, 3, Some(Priority::Normal)),
+            view(1, 1, None),
+            view(2, 1, None),
+        ];
+        assert_eq!(LeastQueueDepth.route(Priority::Normal, None, &shards), 1);
+    }
+
+    #[test]
+    fn deadline_aware_prefers_idle_shard() {
+        let shards = vec![view(0, 2, Some(Priority::Normal)), view(1, 0, None)];
+        assert_eq!(DeadlineAware.route(Priority::Urgent, Some(1.0), &shards), 1);
+    }
+
+    #[test]
+    fn deadline_aware_targets_weakest_victim_for_preemption() {
+        // no idle shard: the urgent request must land on the shard whose
+        // in-flight episode is Background (the weakest victim), not the
+        // one running Normal work
+        let shards = vec![
+            view(0, 0, Some(Priority::Normal)),
+            view(1, 2, Some(Priority::Background)),
+            view(2, 1, Some(Priority::Urgent)),
+        ];
+        assert_eq!(DeadlineAware.route(Priority::Urgent, Some(1.0), &shards), 1);
+    }
+
+    #[test]
+    fn deadline_aware_background_falls_back_to_least_load() {
+        let shards = vec![
+            view(0, 2, Some(Priority::Background)),
+            view(1, 1, Some(Priority::Background)),
+        ];
+        // a Background request outranks nothing: least-load wins
+        assert_eq!(DeadlineAware.route(Priority::Background, None, &shards), 1);
+    }
+}

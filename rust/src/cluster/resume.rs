@@ -1,0 +1,182 @@
+//! [`ResumeStore`]: the cluster's persistence layer for cancelled
+//! episodes.
+//!
+//! A preempted (or quota-sliced) episode answers `Cancelled` with a
+//! [`SwarmSnapshot`] — the S*/S̄ attractors, the feasible set and the
+//! episode RNG at the barrier.  The store keeps those snapshots keyed by
+//! request id so a resubmission (to the same shard or migrated to
+//! another) warm-starts from where the victim stopped instead of
+//! re-exploring from scratch.  Snapshots are padding-agnostic, so a
+//! resume is safe across shards whose backends pad to different size
+//! classes.
+//!
+//! The store is bounded: at capacity the oldest snapshot is evicted
+//! (a victim that never resubmits must not leak its swarm state
+//! forever).  All operations are lock-per-call; nothing here sits on a
+//! matching hot path.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::RequestId;
+use crate::matcher::SwarmSnapshot;
+
+/// Counters describing the store's traffic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResumeStats {
+    /// Snapshots persisted from cancelled episodes.
+    pub saved: u64,
+    /// Snapshots consumed by warm-start resubmissions.
+    pub taken: u64,
+    /// Snapshots evicted at capacity before anyone resumed them.
+    pub evicted: u64,
+}
+
+/// Bounded snapshot store keyed by request id.
+#[derive(Debug)]
+pub struct ResumeStore {
+    inner: Mutex<Inner>,
+    saved: AtomicU64,
+    taken: AtomicU64,
+    evicted: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    snapshots: HashMap<RequestId, SwarmSnapshot>,
+    /// Insertion order for capacity eviction (ids may appear stale after
+    /// a take; they are skipped).
+    order: VecDeque<RequestId>,
+    capacity: usize,
+}
+
+impl Default for ResumeStore {
+    fn default() -> Self {
+        Self::with_capacity(1024)
+    }
+}
+
+impl ResumeStore {
+    /// Store holding at most `capacity` snapshots (≥ 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                snapshots: HashMap::new(),
+                order: VecDeque::new(),
+                capacity: capacity.max(1),
+            }),
+            saved: AtomicU64::new(0),
+            taken: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    /// Persist a cancelled episode's barrier snapshot (replacing any
+    /// earlier snapshot for the same id — the newest barrier wins).
+    pub fn save(&self, id: RequestId, snapshot: SwarmSnapshot) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.snapshots.insert(id, snapshot).is_none() {
+            inner.order.push_back(id);
+        }
+        while inner.snapshots.len() > inner.capacity {
+            // evict the oldest still-live snapshot
+            match inner.order.pop_front() {
+                Some(old) => {
+                    if inner.snapshots.remove(&old).is_some() {
+                        self.evicted.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+        self.saved.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consume the snapshot for `id`, if one is persisted.  Taking is
+    /// destructive: a warm start must not be replayed twice from the
+    /// same barrier (the resumed episode produces a *newer* snapshot if
+    /// it is cancelled again).
+    pub fn take(&self, id: RequestId) -> Option<SwarmSnapshot> {
+        let snap = self.inner.lock().unwrap().snapshots.remove(&id);
+        if snap.is_some() {
+            self.taken.fetch_add(1, Ordering::Relaxed);
+        }
+        snap
+    }
+
+    /// Whether a snapshot is persisted for `id`.
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.inner.lock().unwrap().snapshots.contains_key(&id)
+    }
+
+    /// Snapshots currently persisted.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().snapshots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> ResumeStats {
+        ResumeStats {
+            saved: self.saved.load(Ordering::Relaxed),
+            taken: self.taken.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn snap(epochs_done: usize) -> SwarmSnapshot {
+        SwarmSnapshot {
+            n: 2,
+            m: 3,
+            s_star: vec![0.5; 6],
+            s_bar: vec![0.5; 6],
+            best_fitness: -1.0,
+            have_star: true,
+            epochs_done,
+            rng: Rng::new(7),
+            mappings: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn save_take_round_trip_is_destructive() {
+        let store = ResumeStore::default();
+        store.save(9, snap(4));
+        assert!(store.contains(9));
+        assert_eq!(store.take(9).expect("persisted").epochs_done, 4);
+        assert!(store.take(9).is_none(), "a snapshot must not warm-start twice");
+        let stats = store.stats();
+        assert_eq!((stats.saved, stats.taken), (1, 1));
+    }
+
+    #[test]
+    fn newest_barrier_wins_for_one_id() {
+        let store = ResumeStore::default();
+        store.save(1, snap(2));
+        store.save(1, snap(7));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.take(1).unwrap().epochs_done, 7);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest() {
+        let store = ResumeStore::with_capacity(2);
+        store.save(1, snap(1));
+        store.save(2, snap(2));
+        store.save(3, snap(3));
+        assert_eq!(store.len(), 2);
+        assert!(!store.contains(1), "oldest snapshot must be evicted");
+        assert!(store.contains(2) && store.contains(3));
+        assert_eq!(store.stats().evicted, 1);
+    }
+}

@@ -25,7 +25,7 @@ use crate::graph::Csr;
 use crate::matcher::consensus::{elite_consensus_flat, rank_fitness_desc};
 use crate::matcher::{
     mapping_is_feasible_sparse, project_greedy_flat, ullmann_find_first, vf2_find_first, BitMask,
-    Mapping, PsoConfig, QuantizedMatcher,
+    Mapping, PsoConfig, QuantizedMatcher, SwarmSnapshot,
 };
 use crate::runtime::{BackendKind, EpochBackend, EpochInputs, EpochOutputs};
 use crate::util::Rng;
@@ -88,6 +88,11 @@ pub struct MatchOutcome {
     /// Wall-clock of the episode on this host (telemetry; the simulator
     /// uses the analytic cost model instead).
     pub host_seconds: f64,
+    /// The episode warm-started from the request's persisted snapshot.
+    pub resumed: bool,
+    /// Barrier snapshot of a cancelled episode (resubmit with it to
+    /// warm-start; see [`SwarmSnapshot`]).
+    pub snapshot: Option<SwarmSnapshot>,
 }
 
 impl MatchOutcome {
@@ -107,6 +112,8 @@ pub struct ControllerStats {
     pub rejected: u64,
     /// Episodes interrupted at an epoch barrier.
     pub cancelled: u64,
+    /// Episodes that warm-started from a persisted resume snapshot.
+    pub resumed: u64,
     pub epochs_total: u64,
 }
 
@@ -122,6 +129,9 @@ pub struct GlobalController {
     /// host `Instant`); set by the service so deadlines become hard
     /// mid-episode expiry at epoch barriers.
     clock_base: Option<std::time::Instant>,
+    /// Episode slicing: max epochs per episode before a barrier yield
+    /// with a resume snapshot (see [`super::service::EngineBudget`]).
+    epoch_quota: Option<usize>,
     stats: ControllerStats,
 }
 
@@ -151,6 +161,7 @@ impl GlobalController {
             dense: DenseCache::default(),
             node_budget: 1_000_000,
             clock_base: None,
+            epoch_quota: None,
             stats: ControllerStats::default(),
         }
     }
@@ -165,6 +176,13 @@ impl GlobalController {
     /// start).  Without a base, deadlines are admission metadata only.
     pub fn with_clock_base(mut self, base: std::time::Instant) -> Self {
         self.clock_base = Some(base);
+        self
+    }
+
+    /// Bound every episode to at most `quota` epochs before it yields at
+    /// the barrier with a resume snapshot (`None` = unbounded).
+    pub fn with_epoch_quota(mut self, quota: Option<usize>) -> Self {
+        self.epoch_quota = quota;
         self
     }
 
@@ -195,6 +213,8 @@ impl GlobalController {
                 epochs_run: 0,
                 path: MatchPath::Rejected,
                 host_seconds: started.elapsed().as_secs_f64(),
+                resumed: false,
+                snapshot: None,
             };
         }
 
@@ -212,6 +232,7 @@ impl GlobalController {
                 nodes: self.node_budget,
                 cancel,
                 expires_at,
+                epoch_quota: self.epoch_quota,
                 dense: &mut self.dense,
             };
             match engine.solve(req, &mut budget) {
@@ -225,17 +246,25 @@ impl GlobalController {
                         epochs_run: report.epochs_run,
                         path: report.path,
                         host_seconds: 0.0,
+                        resumed: report.resumed,
+                        snapshot: None,
                     });
                     break;
                 }
-                EngineOutcome::Cancelled { epochs_run } => {
+                EngineOutcome::Cancelled { epochs_run, snapshot } => {
                     self.stats.cancelled += 1;
+                    // a cancelled episode whose snapshot carries more
+                    // history than it ran itself had warm-started
+                    let resumed =
+                        snapshot.as_ref().is_some_and(|s| s.epochs_done > epochs_run);
                     outcome = Some(MatchOutcome {
                         mappings: Vec::new(),
                         best_fitness: f32::NEG_INFINITY,
                         epochs_run,
                         path: MatchPath::Cancelled,
                         host_seconds: 0.0,
+                        resumed,
+                        snapshot,
                     });
                     break;
                 }
@@ -255,11 +284,16 @@ impl GlobalController {
                 epochs_run: 0,
                 path: MatchPath::Rejected,
                 host_seconds: 0.0,
+                resumed: false,
+                snapshot: None,
             }
         });
         outcome.host_seconds = started.elapsed().as_secs_f64();
         if outcome.matched() {
             self.stats.matched += 1;
+        }
+        if outcome.resumed {
+            self.stats.resumed += 1;
         }
         self.stats.epochs_total += outcome.epochs_run as u64;
         outcome
@@ -352,7 +386,6 @@ impl EpochEngine {
         let class = backend.class();
         let (n, m) = (req.n(), req.m());
         let (pn, pm, parts) = (class.n, class.m, class.particles);
-        let mut rng = Rng::new(cfg.seed ^ 0xC0DE);
 
         // Expand the packed mask once into episode staging; together
         // with the padded scatters below this is the artifact-boundary
@@ -373,22 +406,60 @@ impl EpochEngine {
         pad_edges(&mut inputs.q, req.query, pn);
         pad_edges(&mut inputs.g, req.target, pm);
 
-        let mut best_fitness = f32::NEG_INFINITY;
-        let mut mappings: Vec<Mapping> = Vec::new();
+        // Warm start: a fitting resume snapshot restores the barrier
+        // state — S*/S̄ (scattered back into this class's padding), the
+        // best fitness, the feasible set, the epoch counter and the
+        // episode RNG — so the resumed epochs replay the exact stream
+        // the uninterrupted episode would have drawn.  The snapshot is
+        // padding-agnostic (unpadded n×m), so it survives migration to
+        // a shard whose backend pads differently.
+        let resume = req.resume.filter(|s| s.fits(n, m));
+        let resumed = resume.is_some();
         let mut s_star: Vec<f32> = vec![0.0; pn * pm];
         let mut s_bar: Vec<f32> = vec![0.0; pn * pm];
-        let mut have_star = false;
+        let (mut rng, mut best_fitness, mut mappings, mut have_star, start_epoch) =
+            match resume {
+                Some(snap) => {
+                    pad_rows(&mut s_star, &snap.s_star, n, m, pm);
+                    pad_rows(&mut s_bar, &snap.s_bar, n, m, pm);
+                    (
+                        snap.rng.clone(),
+                        snap.best_fitness,
+                        snap.mappings.clone(),
+                        snap.have_star,
+                        snap.epochs_done,
+                    )
+                }
+                None => {
+                    (Rng::new(cfg.seed ^ 0xC0DE), f32::NEG_INFINITY, Vec::new(), false, 0)
+                }
+            };
         let mut epochs_run = 0;
         let mut epoch_out = EpochOutputs::zeros(class);
         cand.clear();
         cand.resize(n * m, 0.0);
 
-        for epoch in 0..cfg.epochs {
+        for epoch in start_epoch..cfg.epochs {
             // The paper's interruptibility point: a higher-priority
-            // arrival (or an expired deadline) stops the episode between
-            // epochs, never mid-kernel.
-            if budget.interrupted() {
-                return Ok(EngineOutcome::Cancelled { epochs_run });
+            // arrival, an expired deadline, or an exhausted epoch quota
+            // stops the episode between epochs, never mid-kernel — and
+            // hands back the barrier snapshot so a resubmission resumes
+            // here instead of starting over.
+            if budget.interrupted() || budget.quota_reached(epochs_run) {
+                return Ok(EngineOutcome::Cancelled {
+                    epochs_run,
+                    snapshot: Some(SwarmSnapshot {
+                        n,
+                        m,
+                        s_star: gather_rows(&s_star, n, m, pm),
+                        s_bar: gather_rows(&s_bar, n, m, pm),
+                        best_fitness,
+                        have_star,
+                        epochs_done: epoch,
+                        rng,
+                        mappings,
+                    }),
+                });
             }
             epochs_run += 1;
             // fresh particles every epoch (Algorithm 1 line 4)
@@ -469,7 +540,14 @@ impl EpochEngine {
             BackendKind::Pjrt => MatchPath::Pjrt,
             BackendKind::Native => MatchPath::NativeEpoch,
         };
-        Ok(EngineOutcome::Served(EngineReport { mappings, best_fitness, epochs_run, path, work }))
+        Ok(EngineOutcome::Served(EngineReport {
+            mappings,
+            best_fitness,
+            epochs_run,
+            path,
+            resumed,
+            work,
+        }))
     }
 }
 
@@ -513,7 +591,7 @@ impl MatchEngine for QuantizedEngine {
 
     fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome {
         if budget.interrupted() {
-            return EngineOutcome::Cancelled { epochs_run: 0 };
+            return EngineOutcome::Cancelled { epochs_run: 0, snapshot: None };
         }
         let (mask, q, g) = budget.dense.get(req);
         let out = QuantizedMatcher::new(self.config).run(mask, q, g);
@@ -521,6 +599,7 @@ impl MatchEngine for QuantizedEngine {
             best_fitness: out.best_fitness,
             epochs_run: out.epochs_run,
             path: MatchPath::NativeFallback,
+            resumed: false,
             work: EngineWork {
                 steps_run: out.steps_run,
                 mac_ops: out.mac_ops,
@@ -548,7 +627,7 @@ impl MatchEngine for UllmannEngine {
 
     fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome {
         if budget.interrupted() {
-            return EngineOutcome::Cancelled { epochs_run: 0 };
+            return EngineOutcome::Cancelled { epochs_run: 0, snapshot: None };
         }
         let (mask, q, g) = budget.dense.get(req);
         let (found, stats) = ullmann_find_first(mask, q, g, budget.nodes);
@@ -557,6 +636,7 @@ impl MatchEngine for UllmannEngine {
             best_fitness: if mappings.is_empty() { f32::NEG_INFINITY } else { 0.0 },
             epochs_run: 0,
             path: MatchPath::Ullmann,
+            resumed: false,
             work: EngineWork {
                 nodes_visited: stats.nodes_visited,
                 refine_passes: stats.refine_passes,
@@ -577,7 +657,7 @@ impl MatchEngine for Vf2Engine {
 
     fn solve(&mut self, req: &MatchRequest<'_>, budget: &mut EngineBudget<'_>) -> EngineOutcome {
         if budget.interrupted() {
-            return EngineOutcome::Cancelled { epochs_run: 0 };
+            return EngineOutcome::Cancelled { epochs_run: 0, snapshot: None };
         }
         let (mask, q, g) = budget.dense.get(req);
         let (found, stats) = vf2_find_first(mask, q, g, budget.nodes);
@@ -586,6 +666,7 @@ impl MatchEngine for Vf2Engine {
             best_fitness: if mappings.is_empty() { f32::NEG_INFINITY } else { 0.0 },
             epochs_run: 0,
             path: MatchPath::Vf2,
+            resumed: false,
             work: EngineWork { nodes_visited: stats.states, ..Default::default() },
             mappings,
         })
@@ -604,6 +685,18 @@ fn pad_rows(dst: &mut [f32], src: &[f32], r: usize, c: usize, pc: usize) {
     for i in 0..r {
         dst[i * pc..i * pc + c].copy_from_slice(&src[i * c..(i + 1) * c]);
     }
+}
+
+/// Gather the top-left r×c block of a padded flat buffer with `pc`
+/// columns back into a dense r×c vector — the padding-agnostic form a
+/// [`SwarmSnapshot`] stores so it survives shard migration.
+fn gather_rows(src: &[f32], r: usize, c: usize, pc: usize) -> Vec<f32> {
+    debug_assert!(src.len() >= r * pc);
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        out[i * c..(i + 1) * c].copy_from_slice(&src[i * pc..i * pc + c]);
+    }
+    out
 }
 
 /// Scatter a CSR adjacency's edges into a padded pc×pc flat {0,1}
@@ -746,6 +839,61 @@ mod tests {
         let out = serve(&mut ctl, &problem);
         assert_eq!(out.path, MatchPath::Pjrt);
         assert!(out.matched(), "PJRT path found no mapping (fitness {})", out.best_fitness);
+    }
+
+    /// A 3-fan-out star cannot embed into a chain, but its full mask has
+    /// no empty row — the epoch episode runs its whole budget unless
+    /// something stops it (the deterministic long-running victim).
+    fn infeasible_star_problem() -> MatchProblem {
+        let mut q = crate::util::MatF::zeros(4, 4);
+        q[(0, 1)] = 1.0;
+        q[(0, 2)] = 1.0;
+        q[(0, 3)] = 1.0;
+        let gd = gen_chain(8, NodeKind::Universal);
+        MatchProblem::from_dense(&crate::util::MatF::full(4, 8, 1.0), &q, &gd.adjacency())
+    }
+
+    /// Episode slicing + warm-start resume, end to end through the real
+    /// engine chain: a quota'd episode yields `Cancelled` with a barrier
+    /// snapshot, and the resumed episode is bit-identical to the cold
+    /// run continued from that barrier — fewer epochs, same fitness,
+    /// same (empty) feasible set.
+    #[test]
+    fn epoch_quota_yields_snapshot_and_resume_is_bit_exact() {
+        let cfg = PsoConfig { seed: 21, epochs: 12, repair_budget: 500, ..Default::default() };
+        let problem = infeasible_star_problem();
+        let cancel = CancelToken::new();
+
+        let mut cold_ctl = GlobalController::new(cfg).expect("controller");
+        let cold = cold_ctl.serve(&problem.request(1, Priority::Normal, None), &cancel);
+        assert_eq!(cold.epochs_run, 12, "infeasible episode must run its whole budget");
+        assert!(!cold.resumed);
+        assert!(cold.snapshot.is_none());
+
+        let mut sliced = GlobalController::new(cfg).expect("controller").with_epoch_quota(Some(5));
+        let head = sliced.serve(&problem.request(1, Priority::Normal, None), &cancel);
+        assert_eq!(head.path, MatchPath::Cancelled);
+        assert_eq!(head.epochs_run, 5);
+        assert!(!head.resumed, "first slice is a cold start");
+        let snap = head.snapshot.clone().expect("quota yield must carry a snapshot");
+        assert_eq!(snap.epochs_done, 5);
+
+        // resume on a *different* controller (migrated shard)
+        let mut tail_ctl = GlobalController::new(cfg).expect("controller");
+        let tail = tail_ctl
+            .serve(&problem.request_resumed(1, Priority::Normal, None, Some(&snap)), &cancel);
+        assert!(tail.resumed, "resumed episode must report the resumed signal");
+        assert_eq!(tail.epochs_run, cold.epochs_run - 5, "resume must not redo burned epochs");
+        assert_eq!(tail.best_fitness, cold.best_fitness, "resume diverged from the cold run");
+        assert_eq!(tail.mappings, cold.mappings);
+        assert_eq!(tail_ctl.stats().resumed, 1);
+
+        // a re-sliced resume cancels again, with cumulative epoch history
+        let head2 = sliced
+            .serve(&problem.request_resumed(1, Priority::Normal, None, Some(&snap)), &cancel);
+        assert_eq!(head2.path, MatchPath::Cancelled);
+        assert!(head2.resumed, "cancelled-again episode had warm-started");
+        assert_eq!(head2.snapshot.expect("snapshot").epochs_done, 10);
     }
 
     #[test]

@@ -30,5 +30,5 @@ pub use queue::{Admission, Popped, QueuedRequest, RequestRouter, RouterStats};
 pub use service::{
     dense_adjacency, CancelToken, ControllerFactory, DenseCache, EngineBudget, EngineOutcome,
     EngineReport, EngineWork, MatchEngine, MatchProblem, MatchRequest, MatchResponse,
-    MatchService, MatchTicket, RequestId, ServiceConfig, ServiceStats,
+    MatchService, MatchTicket, RequestId, ServiceConfig, ServiceStats, SubmitOptions,
 };

@@ -69,6 +69,9 @@ pub struct RouterStats {
     /// (caller cancelled while queued), so this can exceed the
     /// controller's `requests` count.
     pub served: u64,
+    /// Current queue depth at the moment the stats were read — the
+    /// load signal cluster route policies balance on.
+    pub depth: u64,
 }
 
 /// Admission verdict for one submission.
@@ -122,7 +125,9 @@ impl RequestRouter {
     }
 
     pub fn stats(&self) -> RouterStats {
-        self.stats
+        let mut stats = self.stats;
+        stats.depth = self.heap.len() as u64;
+        stats
     }
 
     /// The best queued request, if any (not removed).

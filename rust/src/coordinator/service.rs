@@ -33,7 +33,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::graph::{Csr, Dag};
-use crate::matcher::{build_bitmask, BitMask, Mapping, PsoConfig};
+use crate::matcher::{build_bitmask, BitMask, Mapping, PsoConfig, SwarmSnapshot};
 use crate::scheduler::Priority;
 use crate::util::MatF;
 
@@ -99,6 +99,20 @@ impl MatchProblem {
         priority: Priority,
         deadline: Option<f64>,
     ) -> MatchRequest<'_> {
+        self.request_resumed(id, priority, deadline, None)
+    }
+
+    /// Borrowed request view carrying a warm-start snapshot from a
+    /// previously cancelled episode (see [`SwarmSnapshot`]): engines that
+    /// understand it resume from the persisted S*/S̄ instead of
+    /// re-exploring from scratch.
+    pub fn request_resumed<'a>(
+        &'a self,
+        id: RequestId,
+        priority: Priority,
+        deadline: Option<f64>,
+        resume: Option<&'a SwarmSnapshot>,
+    ) -> MatchRequest<'a> {
         MatchRequest {
             id,
             query: &self.query,
@@ -106,6 +120,7 @@ impl MatchProblem {
             mask: &self.mask,
             priority,
             deadline,
+            resume,
         }
     }
 
@@ -132,6 +147,9 @@ pub struct MatchRequest<'a> {
     pub priority: Priority,
     /// Absolute deadline on the service clock (s); `None` = best-effort.
     pub deadline: Option<f64>,
+    /// Warm-start snapshot from a cancelled episode of the same problem.
+    /// Engines that cannot use it simply ignore it.
+    pub resume: Option<&'a SwarmSnapshot>,
 }
 
 impl MatchRequest<'_> {
@@ -214,6 +232,8 @@ pub struct EngineReport {
     pub epochs_run: usize,
     /// Which execution path produced this report.
     pub path: MatchPath,
+    /// The episode warm-started from the request's [`SwarmSnapshot`].
+    pub resumed: bool,
     pub work: EngineWork,
 }
 
@@ -226,8 +246,10 @@ pub enum EngineOutcome {
     /// chain consults the next engine.
     Unsupported,
     /// The episode was interrupted at an epoch barrier by the request's
-    /// [`CancelToken`].
-    Cancelled { epochs_run: usize },
+    /// [`CancelToken`] (or its epoch quota).  Engines that maintain
+    /// resumable swarm state hand back the barrier snapshot so a
+    /// resubmission warm-starts instead of re-exploring.
+    Cancelled { epochs_run: usize, snapshot: Option<SwarmSnapshot> },
     /// The engine failed (e.g. a backend error); the chain moves on.
     Failed(String),
 }
@@ -243,6 +265,11 @@ pub struct EngineBudget<'a> {
     /// `cancel` — a deadline that expires *mid-episode* stops the
     /// episode instead of letting it run uselessly to completion.
     pub expires_at: Option<Instant>,
+    /// Episode slicing: max epochs this episode may run before yielding
+    /// at the barrier with a resume snapshot (`Cancelled`).  `None` =
+    /// unbounded.  Deterministic — the knob the cluster (and the tests)
+    /// use to bound episode occupancy on a shared shard.
+    pub epoch_quota: Option<usize>,
     /// Shared dense staging: densified at most once per episode, reused
     /// by every dense-consuming engine in the chain.
     pub dense: &'a mut DenseCache,
@@ -253,6 +280,14 @@ impl EngineBudget<'_> {
     /// cancel, preemption, or deadline expiry).
     pub fn interrupted(&self) -> bool {
         self.cancel.is_cancelled() || self.expires_at.is_some_and(|t| Instant::now() >= t)
+    }
+
+    /// Whether an episode that has already run `epochs_run` epochs has
+    /// exhausted its per-episode slice.  A zero quota is treated as 1:
+    /// every slice must make progress, or a resubmit loop would spin on
+    /// identical snapshots forever.
+    pub fn quota_reached(&self, epochs_run: usize) -> bool {
+        self.epoch_quota.is_some_and(|q| epochs_run >= q.max(1))
     }
 }
 
@@ -277,6 +312,13 @@ pub struct MatchResponse {
     pub host_seconds: f64,
     /// Which path served — or shed/rejected/cancelled — the request.
     pub path: MatchPath,
+    /// The episode warm-started from a persisted [`SwarmSnapshot`]
+    /// instead of exploring from scratch.
+    pub resumed: bool,
+    /// Barrier snapshot of a cancelled episode: persist it (keyed by
+    /// request id) and resubmit with it to warm-start — the cluster's
+    /// `ResumeStore` does exactly that.
+    pub snapshot: Option<SwarmSnapshot>,
 }
 
 impl MatchResponse {
@@ -292,10 +334,16 @@ impl MatchResponse {
             epochs_run: o.epochs_run,
             host_seconds: o.host_seconds,
             path: o.path,
+            resumed: o.resumed,
+            snapshot: o.snapshot,
         }
     }
 
-    fn shed(id: RequestId) -> Self {
+    /// Shed by admission.  A warm-start snapshot the submission carried
+    /// is handed back untouched — shedding must never destroy persisted
+    /// episode progress (the cluster re-stashes it for a later
+    /// resubmission).
+    fn shed(id: RequestId, snapshot: Option<SwarmSnapshot>) -> Self {
         Self {
             id,
             mappings: Vec::new(),
@@ -303,10 +351,14 @@ impl MatchResponse {
             epochs_run: 0,
             host_seconds: 0.0,
             path: MatchPath::Shed,
+            resumed: false,
+            snapshot,
         }
     }
 
-    fn cancelled(id: RequestId, epochs_run: usize) -> Self {
+    /// Cancelled while still queued — the episode never started, so the
+    /// (unused) resume snapshot is handed back for a later resubmission.
+    fn cancelled(id: RequestId, epochs_run: usize, snapshot: Option<SwarmSnapshot>) -> Self {
         Self {
             id,
             mappings: Vec::new(),
@@ -314,6 +366,8 @@ impl MatchResponse {
             epochs_run,
             host_seconds: 0.0,
             path: MatchPath::Cancelled,
+            resumed: false,
+            snapshot,
         }
     }
 }
@@ -325,11 +379,16 @@ pub struct ServiceConfig {
     /// evicted when a better one arrives (and the newcomer is shed when
     /// everything queued outranks it).
     pub queue_depth: usize,
+    /// Episode slicing: max epochs one episode may occupy the controller
+    /// before yielding at the barrier with a resume snapshot (answered
+    /// as `Cancelled`; resubmit with the snapshot to continue).  `None`
+    /// = episodes run to completion.
+    pub epoch_quota: Option<usize>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { queue_depth: 64 }
+        Self { queue_depth: 64, epoch_quota: None }
     }
 }
 
@@ -379,11 +438,24 @@ pub type ControllerFactory = Box<dyn FnOnce() -> GlobalController + Send>;
 /// thread (preemption bookkeeping).
 type InFlight = Option<(Priority, CancelToken)>;
 
+/// Caller-side knobs for one submission beyond (problem, priority,
+/// deadline) — see [`MatchService::submit_with`].
+#[derive(Debug, Default)]
+pub struct SubmitOptions {
+    /// Externally-assigned request id (cluster routers hand out globally
+    /// unique ids across shards); `None` = the service assigns one.
+    pub id: Option<RequestId>,
+    /// Warm-start snapshot from a previously cancelled episode of the
+    /// same problem (same shard or migrated).
+    pub resume: Option<SwarmSnapshot>,
+}
+
 struct Submission {
     id: RequestId,
     problem: MatchProblem,
     priority: Priority,
     deadline: Option<f64>,
+    resume: Option<SwarmSnapshot>,
     cancel: CancelToken,
     /// Flipped (before the response is sent) once this request has been
     /// answered — the submitter's preemption check reads it under the
@@ -423,8 +495,14 @@ impl MatchService {
     /// quantized matcher as the universal fallback).  Engine/backend
     /// construction failures degrade to the fallback chain, never fatal.
     pub fn spawn(config: PsoConfig) -> Result<Self> {
+        Self::spawn_configured(ServiceConfig::default(), config)
+    }
+
+    /// Default engine chain with explicit admission knobs — how the
+    /// cluster spawns one shard per modeled accelerator.
+    pub fn spawn_configured(cfg: ServiceConfig, config: PsoConfig) -> Result<Self> {
         Self::spawn_with(
-            ServiceConfig::default(),
+            cfg,
             Box::new(move || match GlobalController::new(config) {
                 Ok(c) => c,
                 Err(e) => {
@@ -468,7 +546,20 @@ impl MatchService {
         priority: Priority,
         deadline: Option<f64>,
     ) -> Result<MatchTicket> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_with(problem, priority, deadline, SubmitOptions::default())
+    }
+
+    /// [`Self::submit`] with an external request id and/or a warm-start
+    /// snapshot (see [`SubmitOptions`]) — the shard-addressable entry
+    /// point the cluster router uses.
+    pub fn submit_with(
+        &self,
+        problem: MatchProblem,
+        priority: Priority,
+        deadline: Option<f64>,
+        opts: SubmitOptions,
+    ) -> Result<MatchTicket> {
+        let id = opts.id.unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
         let cancel = CancelToken::new();
         let answered = Arc::new(AtomicBool::new(false));
         let (respond, rx) = mpsc::channel();
@@ -477,6 +568,7 @@ impl MatchService {
             problem,
             priority,
             deadline,
+            resume: opts.resume,
             cancel: cancel.clone(),
             answered: Arc::clone(&answered),
             respond,
@@ -547,7 +639,8 @@ fn service_loop(
 ) {
     // Anchor the controller's deadline clock to the service clock, so
     // request deadlines become hard mid-episode expiry at epoch barriers.
-    let mut controller = factory().with_clock_base(start);
+    let mut controller =
+        factory().with_clock_base(start).with_epoch_quota(cfg.epoch_quota);
     let mut router = RequestRouter::new(cfg.queue_depth.max(1));
     let mut pending: HashMap<RequestId, Submission> = HashMap::new();
     let mut open = true;
@@ -579,7 +672,7 @@ fn service_loop(
                 shed_response(ticket.id, &mut pending, &router, &stats);
             }
             Some(Popped::Serve(ticket)) => {
-                let Some(sub) = pending.remove(&ticket.id) else { continue };
+                let Some(mut sub) = pending.remove(&ticket.id) else { continue };
                 // Close the preemption race: drain late arrivals and
                 // publish the in-flight episode under one lock.  Every
                 // submit either observes the episode (and cancels it at
@@ -610,7 +703,8 @@ fn service_loop(
                     // shutdown raced the pop: shed instead of serving
                     *inflight.lock().unwrap() = None;
                     let id = sub.id;
-                    answer(sub, MatchResponse::shed(id));
+                    let snapshot = sub.resume.take();
+                    answer(sub, MatchResponse::shed(id, snapshot));
                     continue;
                 }
                 if outranked {
@@ -633,7 +727,7 @@ fn service_loop(
 }
 
 fn admit_one(
-    sub: Submission,
+    mut sub: Submission,
     router: &mut RequestRouter,
     pending: &mut HashMap<RequestId, Submission>,
     stats: &Arc<Mutex<ServiceStats>>,
@@ -645,15 +739,17 @@ fn admit_one(
         Admission::Shed => {
             stats.lock().unwrap().router = router.stats();
             let id = sub.id;
-            answer(sub, MatchResponse::shed(id));
+            let snapshot = sub.resume.take();
+            answer(sub, MatchResponse::shed(id, snapshot));
         }
         Admission::Admitted { evicted } => {
             let id = sub.id;
             pending.insert(id, sub);
             stats.lock().unwrap().router = router.stats();
             if let Some(evicted_id) = evicted {
-                if let Some(victim) = pending.remove(&evicted_id) {
-                    answer(victim, MatchResponse::shed(evicted_id));
+                if let Some(mut victim) = pending.remove(&evicted_id) {
+                    let snapshot = victim.resume.take();
+                    answer(victim, MatchResponse::shed(evicted_id, snapshot));
                 }
             }
         }
@@ -667,8 +763,9 @@ fn shed_response(
     stats: &Arc<Mutex<ServiceStats>>,
 ) {
     stats.lock().unwrap().router = router.stats();
-    if let Some(sub) = pending.remove(&id) {
-        answer(sub, MatchResponse::shed(id));
+    if let Some(mut sub) = pending.remove(&id) {
+        let snapshot = sub.resume.take();
+        answer(sub, MatchResponse::shed(id, snapshot));
     }
 }
 
@@ -676,16 +773,19 @@ fn shed_response(
 /// in-flight slot under the drain lock; this clears it when done.
 fn serve_one(
     controller: &mut GlobalController,
-    sub: Submission,
+    mut sub: Submission,
     inflight: &Arc<Mutex<InFlight>>,
     router: &RequestRouter,
     stats: &Arc<Mutex<ServiceStats>>,
 ) {
     let response = if sub.cancel.is_cancelled() {
-        // cancelled while queued — never reaches the controller
-        MatchResponse::cancelled(sub.id, 0)
+        // cancelled while queued — never reaches the controller; an
+        // unused warm-start snapshot is handed back for resubmission
+        let snapshot = sub.resume.take();
+        MatchResponse::cancelled(sub.id, 0, snapshot)
     } else {
-        let req = sub.problem.request(sub.id, sub.priority, sub.deadline);
+        let req =
+            sub.problem.request_resumed(sub.id, sub.priority, sub.deadline, sub.resume.as_ref());
         let outcome = controller.serve(&req, &sub.cancel);
         MatchResponse::from_outcome(sub.id, outcome)
     };

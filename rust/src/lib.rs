@@ -28,6 +28,7 @@
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod accel;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod graph;

@@ -4,6 +4,7 @@
 //!   selftest                      PJRT artifact round-trip + matcher sanity
 //!   run [--config F] [--set K=V]  one simulation run, summary to stdout
 //!   match --model M [...]         one interrupt episode on the coordinator
+//!   cluster [--shards N] [...]    open-loop trace against the sharded cluster
 //!   info                          platforms, workloads, artifact registry
 //!
 //! The argument parser is hand-rolled (no clap offline; DESIGN.md §4).
@@ -13,18 +14,21 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use immsched::accel::{build_target_graph, Platform};
+use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
+use immsched::cluster::{policy_by_name, ClusterConfig, MatchCluster, RoutePolicy};
 use immsched::config::Config;
 use immsched::coordinator::{
-    GlobalController, MatchEngine, MatchProblem, MatchService, QuantizedEngine, ServiceConfig,
-    UllmannEngine, Vf2Engine,
+    GlobalController, MatchEngine, MatchPath, MatchProblem, MatchService, QuantizedEngine,
+    ServiceConfig, ServiceStats, UllmannEngine, Vf2Engine,
 };
 use immsched::matcher::PsoConfig;
 use immsched::runtime::ArtifactRegistry;
 use immsched::scheduler::{
-    build_trace, metrics, FrameworkKind, Priority, SimConfig, Simulator, TraceConfig,
+    build_trace, metrics, ArrivalProcess, FrameworkKind, Priority, SimConfig, Simulator,
+    TraceConfig,
 };
 use immsched::util::table::{fmt_time, Table};
-use immsched::workload::{build_model, tile_layer_graph, ModelId, TilingConfig};
+use immsched::workload::{build_model, tile_layer_graph, ModelId, TilingConfig, WorkloadClass};
 
 fn main() {
     init_logger();
@@ -44,6 +48,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("selftest") => cmd_selftest(),
         Some("run") => cmd_run(&args[1..]),
         Some("match") => cmd_match(&args[1..]),
+        Some("cluster") => cmd_cluster(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -65,12 +70,17 @@ fn print_help() {
            match --model NAME [--platform edge|cloud] [--tiles N]\n\
                  [--engine pso|quantized|ullmann|vf2]\n\
                                             serve one urgent-task interrupt\n\
+           cluster [--shards N] [--policy round-robin|least-queue|deadline-aware]\n\
+                   [--rate R] [--horizon S] [--class simple|middle|complex]\n\
+                   [--process poisson|bursty] [--seed S]\n\
+                                            open-loop trace against a sharded cluster\n\
            info                             platforms, models, artifacts\n\
            help                             this text\n\
          \n\
          EXAMPLES\n\
            immsched run --set scheduler.name=\"isosched\" --set workload.class=\"complex\"\n\
-           immsched match --model ResNet50 --platform edge"
+           immsched match --model ResNet50 --platform edge\n\
+           immsched cluster --shards 4 --policy deadline-aware --process bursty"
     );
 }
 
@@ -158,6 +168,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         class: cfg.workload.class,
         background_tasks: cfg.sim.background_tasks,
         arrival_rate: cfg.sim.arrival_rate,
+        process: ArrivalProcess::Poisson,
         horizon: cfg.sim.horizon,
         deadline_factor: cfg.sim.deadline_factor,
         batch: 16,
@@ -281,28 +292,165 @@ fn cmd_match(args: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let resp = service.match_blocking(problem, Priority::Urgent, None)?;
     let elapsed = t0.elapsed().as_secs_f64();
-    if let Some(mp) = resp.mappings.first() {
-        println!(
-            "FEASIBLE via {} after {} epochs in {} (fitness {:.3})",
-            resp.path.name(),
+    // Every disposition is reported explicitly — shed/cancelled/rejected
+    // requests used to vanish into a misleading "INFEASIBLE" line.
+    match resp.path {
+        MatchPath::Shed => println!(
+            "SHED by admission in {} (expired deadline or bounded-queue eviction)",
+            fmt_time(elapsed)
+        ),
+        MatchPath::Cancelled => println!(
+            "CANCELLED at the epoch barrier after {} epochs in {}{}",
             resp.epochs_run,
             fmt_time(elapsed),
-            resp.best_fitness
-        );
-        let engines: Vec<String> = mp
-            .iter()
-            .enumerate()
-            .filter_map(|(tile, &v)| v.map(|v| format!("t{tile}->e{}", vertex_engine[v])))
-            .collect();
-        println!("mapping: {}", engines.join(" "));
-    } else {
-        println!(
-            "INFEASIBLE after {} epochs in {} (best fitness {:.3})",
-            resp.epochs_run,
-            fmt_time(elapsed),
-            resp.best_fitness
-        );
+            if resp.snapshot.is_some() { " (resume snapshot available)" } else { "" }
+        ),
+        MatchPath::Rejected => println!(
+            "REJECTED in {} (empty candidate row — no total mapping can exist)",
+            fmt_time(elapsed)
+        ),
+        _ => {
+            if let Some(mp) = resp.mappings.first() {
+                println!(
+                    "FEASIBLE via {}{} after {} epochs in {} (fitness {:.3})",
+                    resp.path.name(),
+                    if resp.resumed { " (warm-started)" } else { "" },
+                    resp.epochs_run,
+                    fmt_time(elapsed),
+                    resp.best_fitness
+                );
+                let engines: Vec<String> = mp
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(tile, &v)| v.map(|v| format!("t{tile}->e{}", vertex_engine[v])))
+                    .collect();
+                println!("mapping: {}", engines.join(" "));
+            } else {
+                println!(
+                    "INFEASIBLE after {} epochs in {} (best fitness {:.3})",
+                    resp.epochs_run,
+                    fmt_time(elapsed),
+                    resp.best_fitness
+                );
+            }
+        }
     }
+    print!("{}", service_summary_table(&service.stats()).render());
+    Ok(())
+}
+
+/// Per-path disposition counts of one service — every submitted request
+/// is accounted for (served / rejected / cancelled / resumed / shed),
+/// not just the happy path.
+fn service_summary_table(stats: &ServiceStats) -> Table {
+    let c = stats.controller;
+    let r = stats.router;
+    let mut t = Table::new("service summary (per-path counts)").header(&["disposition", "count"]);
+    t.row(vec!["requests (controller)".into(), c.requests.to_string()]);
+    t.row(vec!["matched".into(), c.matched.to_string()]);
+    t.row(vec!["served via fallback".into(), c.fallbacks.to_string()]);
+    t.row(vec!["rejected (empty row)".into(), c.rejected.to_string()]);
+    t.row(vec!["cancelled (preempt/quota)".into(), c.cancelled.to_string()]);
+    t.row(vec!["resumed (warm start)".into(), c.resumed.to_string()]);
+    t.row(vec!["shed: expired deadline".into(), r.shed_expired.to_string()]);
+    t.row(vec!["shed: queue capacity".into(), r.shed_capacity.to_string()]);
+    t.row(vec!["total epochs".into(), c.epochs_total.to_string()]);
+    t
+}
+
+fn cmd_cluster(args: &[String]) -> Result<()> {
+    let mut shards = 2usize;
+    let mut policy_name = String::from("deadline-aware");
+    let mut rate = 150.0f64;
+    let mut horizon = 0.05f64;
+    let mut class = WorkloadClass::Simple;
+    let mut process = ArrivalProcess::bursty_default();
+    let mut seed = 42u64;
+    let mut i = 0;
+    while i < args.len() {
+        let value = |i: usize| args.get(i + 1).context("option needs a value");
+        match args[i].as_str() {
+            "--shards" => {
+                shards = value(i)?.parse()?;
+                i += 2;
+            }
+            "--policy" => {
+                policy_name = value(i)?.clone();
+                i += 2;
+            }
+            "--rate" => {
+                rate = value(i)?.parse()?;
+                i += 2;
+            }
+            "--horizon" => {
+                horizon = value(i)?.parse()?;
+                i += 2;
+            }
+            "--class" => {
+                class = match value(i)?.as_str() {
+                    "simple" => WorkloadClass::Simple,
+                    "middle" => WorkloadClass::Middle,
+                    "complex" => WorkloadClass::Complex,
+                    other => bail!("unknown class {other:?}"),
+                };
+                i += 2;
+            }
+            "--process" => {
+                process = match value(i)?.as_str() {
+                    "poisson" => ArrivalProcess::Poisson,
+                    "bursty" => ArrivalProcess::bursty_default(),
+                    other => bail!("unknown process {other:?}"),
+                };
+                i += 2;
+            }
+            "--seed" => {
+                seed = value(i)?.parse()?;
+                i += 2;
+            }
+            other => bail!("unknown option {other:?}"),
+        }
+    }
+    let policy: Box<dyn RoutePolicy> = policy_by_name(&policy_name).with_context(|| {
+        format!("unknown policy {policy_name:?} (round-robin|least-queue|deadline-aware)")
+    })?;
+
+    let dcfg = DriverConfig {
+        class,
+        process,
+        arrival_rate: rate,
+        horizon,
+        seed,
+        ..Default::default()
+    };
+    let schedule = schedule_from_trace(&dcfg);
+    println!(
+        "cluster: {} shards ({} policy), {} {} arrivals over {horizon}s — {} requests",
+        shards,
+        policy_name,
+        rate,
+        process.name(),
+        schedule.len()
+    );
+    let cluster = MatchCluster::spawn(
+        ClusterConfig {
+            shards,
+            pso: PsoConfig { seed, ..Default::default() },
+            ..Default::default()
+        },
+        policy,
+    )?;
+    let report = run_open_loop(&cluster, &schedule, &dcfg)?;
+    print!("{}", report.table().render());
+    println!(
+        "{} submitted, {} served, {} shed, {} preempted, {} resumed, {} SLO misses in {}",
+        report.submitted(),
+        report.served(),
+        report.count_path(MatchPath::Shed),
+        report.cluster.preemptions(),
+        report.resumed(),
+        report.slo_misses(),
+        fmt_time(report.wall_seconds)
+    );
     Ok(())
 }
 

@@ -37,7 +37,7 @@ pub use fitness::{
 };
 pub use mask::{build_bitmask, build_mask, has_empty_row, BitMask};
 pub use projection::{project_greedy, project_greedy_flat, project_hungarian};
-pub use pso::{PsoConfig, PsoOutcome, PsoMatcher};
+pub use pso::{PsoConfig, PsoMatcher, PsoOutcome, SwarmSnapshot};
 pub use quantized::{QuantizedMatcher, QuantizedOutcome};
 pub use ullmann::{ullmann_find_first, ullmann_refine, UllmannStats};
 pub use vf2::{vf2_find_first, Vf2Stats};

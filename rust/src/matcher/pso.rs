@@ -101,6 +101,55 @@ impl Default for PsoConfig {
     }
 }
 
+/// Epoch-barrier checkpoint of one episode's swarm attractors — the
+/// persistent state a cancelled episode hands back so a resubmission
+/// warm-starts instead of re-exploring from scratch (the cluster's
+/// `ResumeStore` keys these by request id).
+///
+/// Everything the epoch loop carries *across* barriers is here: the
+/// global best S*, the elite-consensus S̄, the best fitness, the epochs
+/// already burned, the feasible set found so far, and the master RNG at
+/// the barrier.  Restoring all of it makes a resumed episode
+/// **bit-identical** to the uninterrupted run continued from the same
+/// barrier (per-particle state is *not* needed: Algorithm 1 line 4
+/// re-initializes particles fresh every epoch from the master stream).
+///
+/// S*/S̄ are stored unpadded (n×m row-major) so a snapshot survives
+/// migration between shards whose backends pad to different size
+/// classes.
+#[derive(Clone, Debug)]
+pub struct SwarmSnapshot {
+    /// Query vertex count the snapshot was taken for.
+    pub n: usize,
+    /// Target vertex count the snapshot was taken for.
+    pub m: usize,
+    /// Unpadded n×m global-best relaxed mapping S* at the barrier.
+    pub s_star: Vec<f32>,
+    /// Unpadded n×m elite-consensus matrix S̄ at the barrier.
+    pub s_bar: Vec<f32>,
+    /// Best fitness reached before the barrier.
+    pub best_fitness: f32,
+    /// Whether any epoch actually improved S* (false = S* is still the
+    /// cold init and the restore must not treat it as a real attractor).
+    pub have_star: bool,
+    /// Absolute epoch index to resume from (epochs completed so far).
+    pub epochs_done: usize,
+    /// Master RNG state at the barrier — the resumed episode replays the
+    /// exact particle-init stream the uninterrupted run would have drawn.
+    pub rng: Rng,
+    /// Feasible mappings already found (non-`early_exit` episodes).
+    pub mappings: Vec<Mapping>,
+}
+
+impl SwarmSnapshot {
+    /// Whether this snapshot belongs to an (n, m)-shaped problem.  A
+    /// mismatched snapshot is ignored (cold start), never an error: the
+    /// caller may have resubmitted a different problem under an old id.
+    pub fn fits(&self, n: usize, m: usize) -> bool {
+        self.n == n && self.m == m && self.s_star.len() == n * m && self.s_bar.len() == n * m
+    }
+}
+
 /// Search outcome + enough telemetry to drive the figures.
 #[derive(Clone, Debug, Default)]
 pub struct PsoOutcome {
@@ -418,24 +467,59 @@ impl PsoMatcher {
     /// and the per-epoch work is large enough to amortize thread spawns;
     /// results are identical to [`Self::run_serial`] either way.
     pub fn run(&self, mask: &MatF, q: &MatF, g: &MatF) -> PsoOutcome {
-        let work = self.config.particles * self.config.steps * mask.rows() * mask.cols();
-        let threaded = cfg!(feature = "parallel")
-            && self.config.particles > 1
-            && work >= PARALLEL_WORK_THRESHOLD;
-        self.run_impl(mask, q, g, threaded)
+        self.run_impl(mask, q, g, self.auto_threaded(mask), None, &mut || false).0
     }
 
     /// Force the serial per-particle loop (baseline / determinism tests).
     pub fn run_serial(&self, mask: &MatF, q: &MatF, g: &MatF) -> PsoOutcome {
-        self.run_impl(mask, q, g, false)
+        self.run_impl(mask, q, g, false, None, &mut || false).0
     }
 
     /// Force the threaded epoch regardless of the `parallel` feature.
     pub fn run_threaded(&self, mask: &MatF, q: &MatF, g: &MatF) -> PsoOutcome {
-        self.run_impl(mask, q, g, true)
+        self.run_impl(mask, q, g, true, None, &mut || false).0
     }
 
-    fn run_impl(&self, mask: &MatF, q: &MatF, g: &MatF, threaded: bool) -> PsoOutcome {
+    /// Interruptible, resumable episode — the warm-start entry point.
+    ///
+    /// * `resume`: warm-start from a prior barrier snapshot.  A snapshot
+    ///   whose shape does not [`SwarmSnapshot::fits`] the problem is
+    ///   ignored (cold start).
+    /// * `interrupted`: polled once per epoch *barrier* (never
+    ///   mid-kernel); returning `true` stops the episode there.
+    ///
+    /// Returns the outcome plus the barrier snapshot when interrupted
+    /// short of the epoch budget (`None` when the episode completed).
+    /// Guarantee: cold-run epochs `0..E` ≡ (run interrupted at barrier
+    /// `t`, then resumed from its snapshot) — the concatenated fitness
+    /// traces, the mappings and the best fitness are bit-identical,
+    /// because the snapshot carries the master RNG alongside S*/S̄.
+    pub fn run_resumable(
+        &self,
+        mask: &MatF,
+        q: &MatF,
+        g: &MatF,
+        resume: Option<&SwarmSnapshot>,
+        interrupted: &mut dyn FnMut() -> bool,
+    ) -> (PsoOutcome, Option<SwarmSnapshot>) {
+        self.run_impl(mask, q, g, self.auto_threaded(mask), resume, interrupted)
+    }
+
+    /// Whether the auto path fans the epoch out over scoped threads.
+    fn auto_threaded(&self, mask: &MatF) -> bool {
+        let work = self.config.particles * self.config.steps * mask.rows() * mask.cols();
+        cfg!(feature = "parallel") && self.config.particles > 1 && work >= PARALLEL_WORK_THRESHOLD
+    }
+
+    fn run_impl(
+        &self,
+        mask: &MatF,
+        q: &MatF,
+        g: &MatF,
+        threaded: bool,
+        resume: Option<&SwarmSnapshot>,
+        interrupted: &mut dyn FnMut() -> bool,
+    ) -> (PsoOutcome, Option<SwarmSnapshot>) {
         let cfg = &self.config;
         let (n, m) = (mask.rows(), mask.cols());
         assert_eq!(q.rows(), n);
@@ -446,25 +530,64 @@ impl PsoMatcher {
         // panicking downstream (elite consensus asserts on empty input,
         // zero steps would feed NEG_INFINITY fitnesses to the consensus).
         if cfg.particles == 0 || cfg.epochs == 0 || cfg.steps == 0 {
-            return out;
+            return (out, None);
         }
         let nm = n * m;
         let mask_flat = mask.as_slice();
-        let mut rng = Rng::new(cfg.seed);
         let params = StepParams::from_config(cfg);
         let kernel = FitnessKernel::new(q, g);
         let workers = epoch_workers(threaded, cfg.threads, cfg.particles);
 
-        // episode-lifetime state: allocated once, reused every epoch
+        // episode-lifetime state: allocated once, reused every epoch.
+        // Warm start: the snapshot replaces the cold attractor init *and*
+        // the master RNG, so the resumed epochs replay the exact stream
+        // the uninterrupted run would have drawn.
         let mut arena = SwarmArena::new(cfg.particles, n, m, cfg.steps, workers);
-        let mut s_star = vec![0.0f32; nm];
-        init_particle(&mut s_star, mask_flat, m, &mut rng);
-        let mut f_star = f32::NEG_INFINITY;
-        let mut s_bar = s_star.clone();
+        let resume = resume.filter(|s| s.fits(n, m));
+        let (mut rng, mut s_star, mut s_bar, mut f_star, start_epoch) = match resume {
+            Some(snap) => {
+                out.best_fitness = snap.best_fitness;
+                out.mappings = snap.mappings.clone();
+                let f_star =
+                    if snap.have_star { snap.best_fitness } else { f32::NEG_INFINITY };
+                (
+                    snap.rng.clone(),
+                    snap.s_star.clone(),
+                    snap.s_bar.clone(),
+                    f_star,
+                    snap.epochs_done,
+                )
+            }
+            None => {
+                let mut rng = Rng::new(cfg.seed);
+                let mut s_star = vec![0.0f32; nm];
+                init_particle(&mut s_star, mask_flat, m, &mut rng);
+                let s_bar = s_star.clone();
+                (rng, s_star, s_bar, f32::NEG_INFINITY, 0)
+            }
+        };
         // deterministic in (mask, q, g) — run at most once per episode
         let mut repair_memo: Option<Option<Mapping>> = None;
 
-        'epochs: for _t in 0..cfg.epochs {
+        'epochs: for t in start_epoch..cfg.epochs {
+            // epoch barrier: the episode's interruption point (cluster
+            // preemption, deadline expiry, epoch-quota slicing)
+            if interrupted() {
+                return (
+                    out.clone(),
+                    Some(SwarmSnapshot {
+                        n,
+                        m,
+                        s_star,
+                        s_bar,
+                        best_fitness: out.best_fitness,
+                        have_star: f_star > f32::NEG_INFINITY,
+                        epochs_done: t,
+                        rng,
+                        mappings: out.mappings,
+                    }),
+                );
+            }
             out.epochs_run += 1;
             // line 4: fresh particles each epoch. Initialization and the
             // per-particle RNG forks consume the master stream in
@@ -577,7 +700,7 @@ impl PsoMatcher {
                 &mut s_bar,
             );
         }
-        out
+        (out, None)
     }
 }
 
@@ -708,6 +831,82 @@ mod tests {
         let three = PsoMatcher::new(PsoConfig { threads: 3, ..base }).run_threaded(&mask, &q, &g);
         assert_eq!(one.fitness_trace, three.fitness_trace);
         assert_eq!(one.mappings, three.mappings);
+    }
+
+    /// The warm-start guarantee: interrupt at an epoch barrier, resume
+    /// from the snapshot, and the continued run is bit-identical to the
+    /// uninterrupted one — traces concatenate exactly, mappings and best
+    /// fitness agree, and the epoch counts add up.
+    #[test]
+    fn resume_is_bit_identical_to_uninterrupted_run() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { early_exit: false, epochs: 6, seed: 77, ..Default::default() };
+        let matcher = PsoMatcher::new(cfg);
+        let (cold, none) = matcher.run_resumable(&mask, &q, &g, None, &mut || false);
+        assert!(none.is_none(), "completed episode must not yield a snapshot");
+
+        for barrier in [1usize, 3, 5] {
+            let mut checks = 0usize;
+            let (head, snap) = matcher.run_resumable(&mask, &q, &g, None, &mut || {
+                checks += 1;
+                checks > barrier
+            });
+            let snap = snap.expect("interrupted episode must yield a snapshot");
+            assert_eq!(snap.epochs_done, barrier);
+            assert_eq!(head.epochs_run, barrier);
+            let (tail, done) = matcher.run_resumable(&mask, &q, &g, Some(&snap), &mut || false);
+            assert!(done.is_none());
+            assert_eq!(head.epochs_run + tail.epochs_run, cold.epochs_run, "barrier {barrier}");
+            let mut trace = head.fitness_trace.clone();
+            trace.extend_from_slice(&tail.fitness_trace);
+            assert_eq!(trace, cold.fitness_trace, "barrier {barrier}: traces diverge");
+            let mut mean = head.mean_fitness_trace.clone();
+            mean.extend_from_slice(&tail.mean_fitness_trace);
+            assert_eq!(mean, cold.mean_fitness_trace, "barrier {barrier}");
+            assert_eq!(tail.mappings, cold.mappings, "barrier {barrier}: feasible sets diverge");
+            assert_eq!(tail.best_fitness, cold.best_fitness, "barrier {barrier}");
+        }
+    }
+
+    /// A snapshot for a different problem shape is ignored — the episode
+    /// cold-starts instead of corrupting the swarm state.
+    #[test]
+    fn mismatched_snapshot_is_ignored() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { early_exit: false, epochs: 3, seed: 5, ..Default::default() };
+        let matcher = PsoMatcher::new(cfg);
+        let cold = matcher.run(&mask, &q, &g);
+        let bogus = SwarmSnapshot {
+            n: 2,
+            m: 3,
+            s_star: vec![0.5; 6],
+            s_bar: vec![0.5; 6],
+            best_fitness: -1.0,
+            have_star: true,
+            epochs_done: 1,
+            rng: Rng::new(1),
+            mappings: Vec::new(),
+        };
+        let (out, _) = matcher.run_resumable(&mask, &q, &g, Some(&bogus), &mut || false);
+        assert_eq!(out.fitness_trace, cold.fitness_trace);
+        assert_eq!(out.mappings, cold.mappings);
+    }
+
+    /// Interrupting before the first epoch yields an epochs_done=0
+    /// snapshot whose resume reproduces the cold run exactly.
+    #[test]
+    fn zero_epoch_snapshot_resumes_to_cold_run() {
+        let (mask, q, g) = chain_problem();
+        let cfg = PsoConfig { early_exit: false, epochs: 4, seed: 13, ..Default::default() };
+        let matcher = PsoMatcher::new(cfg);
+        let cold = matcher.run(&mask, &q, &g);
+        let (head, snap) = matcher.run_resumable(&mask, &q, &g, None, &mut || true);
+        assert_eq!(head.epochs_run, 0);
+        let snap = snap.expect("snapshot at barrier 0");
+        assert_eq!(snap.epochs_done, 0);
+        let (tail, _) = matcher.run_resumable(&mask, &q, &g, Some(&snap), &mut || false);
+        assert_eq!(tail.fitness_trace, cold.fitness_trace);
+        assert_eq!(tail.mappings, cold.mappings);
     }
 
     #[test]

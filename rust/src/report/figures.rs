@@ -434,6 +434,174 @@ pub fn fig8(grid: &GridResults) -> Table {
     t
 }
 
+// ---------------------------------------------------------------------------
+// Perf-over-PRs trajectory (tracked bench JSONs)
+// ---------------------------------------------------------------------------
+
+/// Current schema tags of the tracked bench trajectory files.
+pub const MATCHER_BENCH_SCHEMA: &str = "immsched.bench_matcher/v2";
+pub const CLUSTER_BENCH_SCHEMA: &str = "immsched.bench_cluster/v1";
+
+/// Default locations of the tracked trajectories (repo root).
+pub fn default_trajectory_paths() -> (std::path::PathBuf, std::path::PathBuf) {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    (root.join("BENCH_matcher.json"), root.join("BENCH_cluster.json"))
+}
+
+/// Parse a tracked bench trajectory document and return its entries.
+///
+/// The document must be `{ "schema": <expected>, "entries": [...] }`.
+/// Anything else — in particular the retired single-run
+/// `immsched.bench_matcher/v1` layout — is rejected **loudly** with a
+/// migration hint instead of being silently merged into the trajectory.
+pub fn load_bench_entries(
+    text: &str,
+    expected_schema: &str,
+) -> anyhow::Result<Vec<crate::util::json::Json>> {
+    use crate::util::json::Json;
+    let doc = Json::parse(text)?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(schema) if schema == expected_schema => {}
+        Some(other) => anyhow::bail!(
+            "bench trajectory schema mismatch: found {other:?}, expected \
+             {expected_schema:?} — schema-v1 single-run files are no longer \
+             merged; delete the file (or re-run the bench binary, which \
+             rewrites it) to migrate"
+        ),
+        None => anyhow::bail!(
+            "bench trajectory has no \"schema\" field (expected {expected_schema:?})"
+        ),
+    }
+    let entries = doc
+        .get("entries")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("bench trajectory has no \"entries\" array"))?;
+    Ok(entries.to_vec())
+}
+
+/// Append one run entry to the trajectory document at `path` and return
+/// the new entry count — the single read-validate-append-write path both
+/// bench binaries share.  A missing file starts a fresh trajectory; an
+/// existing file must carry `expected_schema` (a retired v1 single-run
+/// file fails loudly) unless `fresh` discards it deliberately.
+pub fn append_bench_entry(
+    path: &str,
+    expected_schema: &str,
+    entry: crate::util::json::Json,
+    fresh: bool,
+) -> anyhow::Result<usize> {
+    use crate::util::json::Json;
+    let mut entries: Vec<Json> = match (fresh, std::fs::read_to_string(path)) {
+        (true, _) | (false, Err(_)) => Vec::new(),
+        (false, Ok(text)) => load_bench_entries(&text, expected_schema)
+            .map_err(|e| e.context(format!("refusing to append to {path}")))?,
+    };
+    entries.push(entry);
+    let count = entries.len();
+    let doc = Json::obj(vec![
+        ("schema", Json::from(expected_schema)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(path, doc.render())?;
+    Ok(count)
+}
+
+/// The perf-over-PRs trajectory: one row per accumulated bench entry
+/// (matcher hot path, then cluster serving), plus the matcher line
+/// series (largest-class sparse-fitness speedup and epoch latency per
+/// entry) for the CSV plot.
+///
+/// Pass the *contents* of the tracked JSON files; `None` for a
+/// trajectory that does not exist yet.
+pub fn perf_trajectory(
+    matcher_text: Option<&str>,
+    cluster_text: Option<&str>,
+) -> anyhow::Result<(Table, Vec<f64>, Vec<Vec<f64>>)> {
+    use crate::util::json::Json;
+    let num = |e: &Json, k: &str| e.get(k).and_then(Json::as_f64);
+    let text = |e: &Json, k: &str| e.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+
+    let mut t = Table::new("perf trajectory over PRs (tracked bench entries)").header(&[
+        "source",
+        "entry",
+        "label",
+        "largest class",
+        "fitness speedup",
+        "epoch latency",
+        "service episode",
+        "cluster p95",
+        "SLO miss",
+    ]);
+    let mut xs = Vec::new();
+    let mut speedups = Vec::new();
+    let mut epoch_us = Vec::new();
+
+    if let Some(matcher) = matcher_text {
+        let entries = load_bench_entries(matcher, MATCHER_BENCH_SCHEMA)?;
+        for (i, e) in entries.iter().enumerate() {
+            let largest = text(e, "largest_class");
+            let speedup = num(e, "largest_class_fitness_speedup").unwrap_or(f64::NAN);
+            // per-class detail of the largest class, when present
+            let class = e.get("classes").and_then(Json::as_array).and_then(|cs| {
+                cs.iter().find(|c| c.get("class").and_then(Json::as_str) == Some(&largest))
+            });
+            let epoch_ns = class.and_then(|c| num(c, "epoch_native_ns"));
+            let service_ns = class.and_then(|c| num(c, "service_episode_ns"));
+            // smoke runs cover fewer/smaller classes and estimates are
+            // not measurements — both are labeled in the table and kept
+            // out of the plotted perf series (incomparable points)
+            let smoke = e.get("smoke").and_then(Json::as_bool).unwrap_or(false);
+            let measured = e.get("measured").and_then(Json::as_bool).unwrap_or(true);
+            let tag = if smoke {
+                " (smoke)"
+            } else if !measured {
+                " (estimate)"
+            } else {
+                ""
+            };
+            t.row(vec![
+                "matcher".into(),
+                i.to_string(),
+                format!("{}{tag}", text(e, "label")),
+                largest,
+                format!("{speedup:.2}x"),
+                epoch_ns.map_or("-".into(), |x| fmt_time(x / 1e9)),
+                service_ns.map_or("-".into(), |x| fmt_time(x / 1e9)),
+                "-".into(),
+                "-".into(),
+            ]);
+            if !smoke && measured {
+                xs.push(i as f64);
+                speedups.push(speedup);
+                epoch_us.push(epoch_ns.map_or(f64::NAN, |x| x / 1e3));
+            }
+        }
+    }
+    if let Some(cluster) = cluster_text {
+        let entries = load_bench_entries(cluster, CLUSTER_BENCH_SCHEMA)?;
+        for (i, e) in entries.iter().enumerate() {
+            let submitted = num(e, "submitted").unwrap_or(0.0);
+            let misses = num(e, "slo_misses").unwrap_or(0.0);
+            t.row(vec![
+                "cluster".into(),
+                i.to_string(),
+                text(e, "label"),
+                format!("{} shards / {}", num(e, "shards").unwrap_or(0.0), text(e, "policy")),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                num(e, "p95_latency_s").map_or("-".into(), fmt_time),
+                if submitted > 0.0 {
+                    format!("{:.1}%", 100.0 * misses / submitted)
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+    }
+    Ok((t, xs, vec![speedups, epoch_us]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -464,6 +632,60 @@ mod tests {
             jitter(&series[0]),
             jitter(&series[1])
         );
+    }
+
+    #[test]
+    fn trajectory_accepts_v2_and_renders() {
+        let matcher = r#"{
+  "schema": "immsched.bench_matcher/v2",
+  "entries": [
+    {
+      "label": "pr2-estimate",
+      "largest_class": "huge",
+      "largest_class_fitness_speedup": 6.74,
+      "classes": [
+        {"class": "huge", "epoch_native_ns": 10500000.0, "service_episode_ns": null}
+      ]
+    },
+    {
+      "label": "pr4",
+      "largest_class": "huge",
+      "largest_class_fitness_speedup": 7.1,
+      "classes": [
+        {"class": "huge", "epoch_native_ns": 9000000.0, "service_episode_ns": 1.5e7}
+      ]
+    }
+  ]
+}"#;
+        let cluster = r#"{
+  "schema": "immsched.bench_cluster/v1",
+  "entries": [
+    {"label": "pr4", "shards": 2, "policy": "deadline-aware",
+     "submitted": 40, "slo_misses": 3, "p95_latency_s": 0.012}
+  ]
+}"#;
+        let (t, xs, series) = perf_trajectory(Some(matcher), Some(cluster)).expect("trajectory");
+        let rendered = t.render();
+        assert!(rendered.contains("pr2-estimate"));
+        assert!(rendered.contains("deadline-aware"));
+        assert_eq!(xs.len(), 2);
+        assert_eq!(series[0], vec![6.74, 7.1]);
+        // missing trajectories are fine (fresh checkout)
+        let (empty, xs, _) = perf_trajectory(None, None).expect("empty");
+        assert!(xs.is_empty());
+        assert!(!empty.render().is_empty());
+    }
+
+    /// The retired single-run v1 layout must fail loudly, never merge.
+    #[test]
+    fn trajectory_rejects_schema_v1_loudly() {
+        let v1 = r#"{"schema": "immsched.bench_matcher/v1", "smoke": false, "classes": []}"#;
+        let err = load_bench_entries(v1, MATCHER_BENCH_SCHEMA).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("immsched.bench_matcher/v1"), "error must name the bad schema: {msg}");
+        assert!(msg.contains("expected"), "{msg}");
+        let missing = load_bench_entries("{}", MATCHER_BENCH_SCHEMA).unwrap_err();
+        assert!(format!("{missing:#}").contains("schema"));
     }
 
     #[test]

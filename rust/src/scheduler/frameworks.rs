@@ -175,8 +175,13 @@ fn solve_typed(
     let cancel = CancelToken::new();
     let mut dense = DenseCache::default();
     let mreq = problem.request(req.task.id as u64, req.task.priority, req.task.deadline);
-    let mut budget =
-        EngineBudget { nodes: node_budget, cancel: &cancel, expires_at: None, dense: &mut dense };
+    let mut budget = EngineBudget {
+        nodes: node_budget,
+        cancel: &cancel,
+        expires_at: None,
+        epoch_quota: None,
+        dense: &mut dense,
+    };
     let outcome = engine.solve(&mreq, &mut budget);
     Some((outcome, vertex_engine, n, m))
 }

@@ -34,4 +34,4 @@ pub use metrics::{lbt_sweep, MetricSet, SimSummary};
 pub use preempt::{Candidate, PreemptPolicy};
 pub use sim::{SimConfig, SimResult, Simulator, TaskRecord};
 pub use task::{Priority, Task, TaskId};
-pub use trace::{build_trace, TraceConfig};
+pub use trace::{build_trace, ArrivalProcess, ArrivalSampler, TraceConfig};

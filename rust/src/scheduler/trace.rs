@@ -1,6 +1,18 @@
-//! Trace generation: periodic background jobs + Poisson urgent arrivals
-//! (the open-ended scenario of Fig. 1c; the Poisson process is exactly
-//! how the paper's LBT metric defines arrivals, §4.1.4).
+//! Trace generation: periodic background jobs + stochastic urgent
+//! arrivals (the open-ended scenario of Fig. 1c).
+//!
+//! Two urgent arrival processes are supported through one
+//! [`ArrivalProcess`] sampler, shared with the cluster's open-loop
+//! driver so the simulator and the live serving path replay the *same*
+//! arrival model:
+//!
+//! * **Poisson(λ)** — exactly how the paper's LBT metric defines
+//!   arrivals (§4.1.4);
+//! * **Bursty (MMPP-style)** — a two-state Markov-modulated Poisson
+//!   process: the rate alternates between λ (base state) and λ×burst
+//!   (burst state) with exponentially distributed dwell times.  This is
+//!   the "unpredictable task arrivals" stress pattern consolidated
+//!   NPU serving must survive (PREMA §6).
 
 use crate::accel::Platform;
 use crate::util::Rng;
@@ -8,14 +20,110 @@ use crate::workload::{TilingConfig, WorkloadClass};
 
 use super::task::{Priority, Task};
 
+/// Which urgent arrival process a trace draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at the trace's `arrival_rate`.
+    #[default]
+    Poisson,
+    /// Two-state MMPP: `arrival_rate` in the base state,
+    /// `arrival_rate × burst_factor` in the burst state.
+    Bursty {
+        /// Rate multiplier inside a burst (> 1).
+        burst_factor: f64,
+        /// Mean burst-state dwell time (s).
+        mean_burst: f64,
+        /// Mean base-state dwell time (s).
+        mean_gap: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// A reasonable bursty default: 8× rate bursts of ~20 ms mean every
+    /// ~80 ms mean.
+    pub fn bursty_default() -> Self {
+        ArrivalProcess::Bursty { burst_factor: 8.0, mean_burst: 0.02, mean_gap: 0.08 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+
+    /// Stateful inter-arrival sampler starting in the base state.
+    pub fn sampler(self, base_rate: f64) -> ArrivalSampler {
+        ArrivalSampler { process: self, base_rate, in_burst: false, dwell_left: None }
+    }
+}
+
+/// Draws successive inter-arrival gaps for one [`ArrivalProcess`].
+/// For `Poisson` this consumes exactly one exponential draw per gap —
+/// bit-identical to the historical trace generator.
+#[derive(Clone, Debug)]
+pub struct ArrivalSampler {
+    process: ArrivalProcess,
+    base_rate: f64,
+    in_burst: bool,
+    /// Remaining dwell time in the current MMPP state (lazily drawn).
+    dwell_left: Option<f64>,
+}
+
+impl ArrivalSampler {
+    /// Time from the previous arrival to the next one.
+    pub fn next_gap(&mut self, rng: &mut Rng) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson => rng.exponential(self.base_rate),
+            ArrivalProcess::Bursty { burst_factor, mean_burst, mean_gap } => {
+                let mut gap = 0.0;
+                // walk MMPP states until an arrival lands inside one
+                loop {
+                    let rate = if self.in_burst {
+                        self.base_rate * burst_factor.max(1.0)
+                    } else {
+                        self.base_rate
+                    };
+                    let dwell = match self.dwell_left {
+                        Some(d) => d,
+                        None => {
+                            let mean = if self.in_burst {
+                                mean_burst.max(1e-9)
+                            } else {
+                                mean_gap.max(1e-9)
+                            };
+                            let d = rng.exponential(1.0 / mean);
+                            self.dwell_left = Some(d);
+                            d
+                        }
+                    };
+                    let candidate = rng.exponential(rate);
+                    if candidate <= dwell {
+                        self.dwell_left = Some(dwell - candidate);
+                        return gap + candidate;
+                    }
+                    // no arrival before the state switch: advance time to
+                    // the switch and redraw in the other state
+                    gap += dwell;
+                    self.in_burst = !self.in_burst;
+                    self.dwell_left = None;
+                }
+            }
+        }
+    }
+}
+
 /// Trace parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct TraceConfig {
     pub class: WorkloadClass,
     /// Number of concurrent background streams.
     pub background_tasks: usize,
-    /// Urgent Poisson rate λ (tasks/s).
+    /// Urgent base arrival rate λ (tasks/s).
     pub arrival_rate: f64,
+    /// Urgent arrival process (Poisson by default; MMPP-style bursts for
+    /// the cluster stress scenarios).
+    pub process: ArrivalProcess,
     /// Horizon (s).
     pub horizon: f64,
     /// Urgent deadline = arrival + factor × isolated exec estimate.
@@ -32,6 +140,7 @@ impl Default for TraceConfig {
             class: WorkloadClass::Simple,
             background_tasks: 4,
             arrival_rate: 50.0,
+            process: ArrivalProcess::Poisson,
             horizon: 1.0,
             deadline_factor: 3.0,
             batch: 16,
@@ -83,9 +192,13 @@ pub fn build_trace(cfg: &TraceConfig, platform: &Platform) -> Vec<Task> {
         }
     }
 
-    // urgent Poisson arrivals; deadline relative to execution on the
-    // partition the matcher will actually claim (≈ one engine per tile)
-    let mut t = rng.exponential(cfg.arrival_rate);
+    // urgent arrivals (Poisson or MMPP-bursty); deadline relative to
+    // execution on the partition the matcher will actually claim (≈ one
+    // engine per tile).  The Poisson sampler consumes exactly the draws
+    // the historical inline loop did, so default traces replay
+    // bit-identically across this refactor.
+    let mut sampler = cfg.process.sampler(cfg.arrival_rate);
+    let mut t = sampler.next_gap(&mut rng);
     while t < cfg.horizon {
         let model = *rng.choose(&models);
         let task =
@@ -95,7 +208,7 @@ pub fn build_trace(cfg: &TraceConfig, platform: &Platform) -> Vec<Task> {
         let deadline = t + cfg.deadline_factor * isolated.max(1e-6);
         tasks.push(task.with_deadline(deadline));
         next_id += 1;
-        t += rng.exponential(cfg.arrival_rate);
+        t += sampler.next_gap(&mut rng);
     }
 
     tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
@@ -158,6 +271,64 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.model, y.model);
             assert!((x.arrival - y.arrival).abs() < 1e-12);
+        }
+    }
+
+    /// The Poisson sampler is a pure refactor: it consumes exactly one
+    /// exponential draw per gap, so the stream matches the historical
+    /// inline `rng.exponential` loop bit for bit.
+    #[test]
+    fn poisson_sampler_matches_inline_exponential_stream() {
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        let mut sampler = ArrivalProcess::Poisson.sampler(120.0);
+        for _ in 0..200 {
+            assert_eq!(sampler.next_gap(&mut a).to_bits(), b.exponential(120.0).to_bits());
+        }
+    }
+
+    /// The MMPP process actually bursts: same mean-ish load, but the
+    /// inter-arrival gaps are far more dispersed than Poisson (the
+    /// squared coefficient of variation of an exponential is 1).
+    #[test]
+    fn bursty_arrivals_are_overdispersed() {
+        let gaps = |process: ArrivalProcess| -> Vec<f64> {
+            let mut rng = Rng::new(5);
+            let mut sampler = process.sampler(100.0);
+            (0..4000).map(|_| sampler.next_gap(&mut rng)).collect()
+        };
+        let cv2 = |g: &[f64]| {
+            let mean = g.iter().sum::<f64>() / g.len() as f64;
+            let var = g.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / g.len() as f64;
+            var / (mean * mean)
+        };
+        let poisson = cv2(&gaps(ArrivalProcess::Poisson));
+        let bursty = cv2(&gaps(ArrivalProcess::bursty_default()));
+        assert!((poisson - 1.0).abs() < 0.2, "poisson CV² should be ~1, got {poisson}");
+        assert!(
+            bursty > poisson * 1.5,
+            "bursty CV² {bursty} not over-dispersed vs poisson {poisson}"
+        );
+    }
+
+    #[test]
+    fn bursty_trace_is_deterministic_and_sorted() {
+        let cfg = TraceConfig {
+            seed: 11,
+            arrival_rate: 80.0,
+            process: ArrivalProcess::bursty_default(),
+            horizon: 0.5,
+            ..Default::default()
+        };
+        let a = build_trace(&cfg, &Platform::edge());
+        let b = build_trace(&cfg, &Platform::edge());
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().any(|t| t.is_urgent()));
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.arrival - y.arrival).abs() < 1e-12);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
         }
     }
 }

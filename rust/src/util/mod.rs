@@ -1,10 +1,13 @@
 //! Small self-contained utilities: deterministic RNG, statistics,
-//! dense matrices, fixed-point helpers and text tables.
+//! dense matrices, fixed-point helpers, text tables and a minimal JSON
+//! value model (parser + renderer) for the tracked bench trajectories.
 //!
 //! Everything the crate needs that would normally come from `rand`,
-//! `ndarray` or `prettytable` lives here — the build is fully offline and
-//! those crates are unavailable (DESIGN.md §4, substitution table).
+//! `ndarray`, `prettytable` or `serde_json` lives here — the build is
+//! fully offline and those crates are unavailable (DESIGN.md §4,
+//! substitution table).
 
+pub mod json;
 pub mod logging;
 pub mod matrix;
 pub mod rng;

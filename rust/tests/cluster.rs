@@ -1,0 +1,300 @@
+//! Cluster-serving behavior: routing conservation (every submitted id
+//! is answered exactly once across shards — done, shed, or
+//! cancelled-with-snapshot), cross-shard warm-start resume, and the
+//! epoch-quota slicing loop through the public service API.
+
+use std::time::Duration;
+
+use immsched::cluster::{
+    ClusterConfig, DeadlineAware, LeastQueueDepth, MatchCluster, RoundRobin,
+};
+use immsched::coordinator::{
+    MatchPath, MatchProblem, MatchService, ServiceConfig, SubmitOptions,
+};
+use immsched::graph::{gen_chain, NodeKind};
+use immsched::matcher::PsoConfig;
+use immsched::scheduler::Priority;
+use immsched::util::MatF;
+
+fn chain_problem(n: usize, m: usize) -> MatchProblem {
+    let qd = gen_chain(n, NodeKind::Compute);
+    let gd = gen_chain(m, NodeKind::Universal);
+    MatchProblem::from_dags(&qd, &gd)
+}
+
+/// Full mask, no embedding (3-fan-out star into a chain): the episode
+/// runs its whole epoch budget unless preempted/sliced.
+fn infeasible_star_problem() -> MatchProblem {
+    let mut q = MatF::zeros(4, 4);
+    q[(0, 1)] = 1.0;
+    q[(0, 2)] = 1.0;
+    q[(0, 3)] = 1.0;
+    let gd = gen_chain(8, NodeKind::Universal);
+    MatchProblem::from_dense(&MatF::full(4, 8, 1.0), &q, &gd.adjacency())
+}
+
+/// Routing conservation: across a mixed batch (serveable, already
+/// expired, cancelled-in-flight), every cluster-assigned id comes back
+/// exactly once, and cancelled episodes leave their snapshots behind.
+#[test]
+fn every_submitted_id_is_answered_exactly_once_across_shards() {
+    let cluster = MatchCluster::spawn(
+        ClusterConfig {
+            shards: 3,
+            pso: PsoConfig { seed: 17, epochs: 20_000, repair_budget: 1_000, ..Default::default() },
+            ..Default::default()
+        },
+        Box::<RoundRobin>::default(),
+    )
+    .unwrap();
+
+    let mut tickets = Vec::new();
+    // serveable requests
+    for _ in 0..6 {
+        tickets.push(cluster.submit(chain_problem(4, 8), Priority::Normal, Some(60.0)).unwrap());
+    }
+    // dead-on-arrival requests (negative SLO budget → expired deadline)
+    for _ in 0..3 {
+        tickets.push(cluster.submit(chain_problem(4, 8), Priority::Normal, Some(-1.0)).unwrap());
+    }
+    // long-running infeasible episodes, cancelled by the caller
+    for _ in 0..3 {
+        let t = cluster.submit(infeasible_star_problem(), Priority::Background, None).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        t.cancel();
+        tickets.push(t);
+    }
+
+    let submitted = tickets.len();
+    let mut ids = Vec::new();
+    let (mut done, mut shed, mut cancelled) = (0usize, 0usize, 0usize);
+    for t in tickets {
+        let id = t.id;
+        let resp = t.wait().expect("every ticket answers");
+        assert_eq!(resp.id, id, "response must echo the cluster id");
+        ids.push(resp.id);
+        match resp.path {
+            MatchPath::Shed => shed += 1,
+            MatchPath::Cancelled => {
+                cancelled += 1;
+                // a cancelled in-flight episode leaves a resumable
+                // snapshot in the store (queued-cancel leaves none)
+                if resp.snapshot.is_some() {
+                    assert!(
+                        cluster.resume_store().contains(resp.id),
+                        "cancelled episode's snapshot must be persisted"
+                    );
+                }
+            }
+            _ => done += 1,
+        }
+    }
+    ids.sort_unstable();
+    let unique = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), unique, "duplicate responses for one id");
+    assert_eq!(done + shed + cancelled, submitted, "lost requests");
+    assert_eq!(done, 6);
+    assert_eq!(shed, 3);
+    assert_eq!(cancelled, 3);
+}
+
+/// Cross-shard migration of a warm start: an episode sliced by the
+/// epoch quota on service A resumes on service B (a different
+/// controller, different thread) and finishes exactly the remaining
+/// epochs.
+#[test]
+fn quota_sliced_episode_resumes_on_another_shard() {
+    let epochs = 40usize;
+    let pso = PsoConfig { seed: 23, epochs, repair_budget: 1_000, ..Default::default() };
+    let sliced = MatchService::spawn_configured(
+        ServiceConfig { epoch_quota: Some(15), ..Default::default() },
+        pso,
+    )
+    .unwrap();
+    let full = MatchService::spawn_configured(ServiceConfig::default(), pso).unwrap();
+
+    let first = sliced
+        .submit_with(
+            infeasible_star_problem(),
+            Priority::Normal,
+            None,
+            SubmitOptions { id: Some(77), ..Default::default() },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(first.path, MatchPath::Cancelled);
+    assert_eq!(first.epochs_run, 15, "quota slice must stop at the barrier");
+    let snapshot = first.snapshot.expect("sliced episode must hand back its swarm state");
+
+    let second = full
+        .submit_with(
+            infeasible_star_problem(),
+            Priority::Normal,
+            None,
+            SubmitOptions { id: Some(77), resume: Some(snapshot) },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(second.resumed, "migrated episode must report the resumed signal");
+    assert_ne!(second.path, MatchPath::Cancelled);
+    assert_eq!(
+        first.epochs_run + second.epochs_run,
+        epochs,
+        "resume must complete exactly the remaining epochs"
+    );
+    assert_eq!(full.stats().controller.resumed, 1);
+}
+
+/// The cluster's own resubmit loop: repeated quota slices walk an
+/// episode to completion across resubmissions, never re-exploring
+/// burned epochs.
+#[test]
+fn cluster_resubmit_walks_a_sliced_episode_to_completion() {
+    let epochs = 30usize;
+    let cluster = MatchCluster::spawn(
+        ClusterConfig {
+            shards: 2,
+            service: ServiceConfig { epoch_quota: Some(8), ..Default::default() },
+            pso: PsoConfig { seed: 31, epochs, repair_budget: 1_000, ..Default::default() },
+            ..Default::default()
+        },
+        Box::new(LeastQueueDepth),
+    )
+    .unwrap();
+
+    let problem = infeasible_star_problem();
+    let first = cluster.submit(problem.clone(), Priority::Normal, None).unwrap();
+    let id = first.id;
+    let mut resp = first.wait().unwrap();
+    let mut total_epochs = resp.epochs_run;
+    let mut hops = 0;
+    while resp.path == MatchPath::Cancelled {
+        hops += 1;
+        assert!(hops <= 10, "sliced episode did not converge");
+        resp = cluster
+            .resubmit(id, problem.clone(), Priority::Normal, None)
+            .unwrap()
+            .wait()
+            .unwrap();
+        total_epochs += resp.epochs_run;
+    }
+    assert!(hops >= 2, "quota 8 over {epochs} epochs must slice repeatedly");
+    assert!(resp.resumed, "final hop must be a warm start");
+    assert_eq!(total_epochs, epochs, "slices must add up to exactly one cold solve");
+    let stats = cluster.stats();
+    assert!(stats.resumes() >= hops as u64, "every hop after the first warm-starts");
+    assert_eq!(stats.resume.saved, hops as u64);
+    assert_eq!(stats.resume.taken, hops as u64);
+}
+
+/// Shedding must never destroy persisted progress: a resubmission whose
+/// admission sheds it (here: expired deadline) hands the warm-start
+/// snapshot back in the `Shed` response, so the cluster re-stashes it
+/// and a later resubmission still warm-starts.
+#[test]
+fn shed_resubmission_returns_the_snapshot_instead_of_dropping_it() {
+    let epochs = 24usize;
+    let pso = PsoConfig { seed: 53, epochs, repair_budget: 1_000, ..Default::default() };
+    let sliced = MatchService::spawn_configured(
+        ServiceConfig { epoch_quota: Some(10), ..Default::default() },
+        pso,
+    )
+    .unwrap();
+    let first = sliced
+        .submit_with(
+            infeasible_star_problem(),
+            Priority::Normal,
+            None,
+            SubmitOptions { id: Some(5), ..Default::default() },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(first.path, MatchPath::Cancelled);
+    let snapshot = first.snapshot.expect("sliced episode yields a snapshot");
+
+    // resubmit with the snapshot but an already-expired deadline: shed
+    let shed = sliced
+        .submit_with(
+            infeasible_star_problem(),
+            Priority::Normal,
+            Some(-1.0),
+            SubmitOptions { id: Some(5), resume: Some(snapshot) },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(shed.path, MatchPath::Shed);
+    let recovered = shed.snapshot.expect("shed must hand the unused snapshot back");
+    assert_eq!(recovered.epochs_done, 10, "snapshot must survive the shed untouched");
+
+    // the recovered snapshot still warm-starts a live resubmission
+    let done = sliced
+        .submit_with(
+            infeasible_star_problem(),
+            Priority::Normal,
+            None,
+            SubmitOptions { id: Some(5), resume: Some(recovered) },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(done.resumed, "recovered snapshot must warm-start");
+    assert_eq!(done.epochs_run, 10, "second slice resumes at epoch 10, not epoch 0");
+    assert_eq!(done.snapshot.expect("re-sliced").epochs_done, 20);
+}
+
+/// Deadline-aware routing preempts across shards: with every shard busy
+/// on Background work, an urgent arrival lands on a shard whose victim
+/// is Background and cancels it at the epoch barrier.
+#[test]
+fn deadline_aware_routing_preempts_weakest_shard() {
+    let cluster = MatchCluster::spawn(
+        ClusterConfig {
+            shards: 2,
+            pso: PsoConfig { seed: 41, epochs: 20_000, repair_budget: 1_000, ..Default::default() },
+            ..Default::default()
+        },
+        Box::new(DeadlineAware),
+    )
+    .unwrap();
+
+    let mut fillers = Vec::new();
+    for shard in 0..2 {
+        fillers.push(
+            cluster
+                .submit_to(shard, infeasible_star_problem(), Priority::Background, None)
+                .unwrap(),
+        );
+    }
+    for shard in 0..2 {
+        let mut waited = 0;
+        while cluster.views()[shard].in_flight != Some(Priority::Background) {
+            std::thread::sleep(Duration::from_millis(2));
+            waited += 1;
+            assert!(waited < 5_000, "filler never started on shard {shard}");
+        }
+    }
+
+    let urgent = cluster.submit(chain_problem(4, 8), Priority::Urgent, Some(30.0)).unwrap();
+    let resp = urgent.wait().unwrap();
+    assert!(resp.matched(), "urgent request must be served");
+
+    // at least one filler was preempted by the routed urgent arrival;
+    // cancel the rest to shut down promptly (a non-targeted filler may
+    // legitimately have completed its bounded budget by now)
+    let mut cancelled = 0;
+    for f in fillers {
+        f.cancel();
+        let r = f.wait().unwrap();
+        cancelled += usize::from(r.path == MatchPath::Cancelled);
+    }
+    assert!(cancelled >= 1, "no filler answered Cancelled");
+    assert!(
+        cluster.stats().preemptions() >= 1,
+        "deadline-aware routing must have preempted a Background victim"
+    );
+}
