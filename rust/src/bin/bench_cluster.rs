@@ -22,6 +22,13 @@
 //! acceptance scenario (≥2 shards, bursty arrivals, zero lost requests,
 //! ≥1 cross-shard preemption, ≥1 warm-started resume) with tiny sizes
 //! and fails loudly if any of it does not hold.
+//!
+//! `--process-shards` runs the identical scenario with every shard
+//! hosted in an `immsched shard-worker` child process over the framed
+//! wire protocol (the `immsched` binary must be built alongside this
+//! one) — the trajectory's `transport` field lets the figure pipeline
+//! compare in-process vs out-of-process serving overhead, preemption
+//! and warm-start resume included.
 
 use std::time::{Duration, Instant};
 
@@ -43,6 +50,10 @@ struct Args {
     smoke: bool,
     fresh: bool,
     shards: usize,
+    /// Host each shard in an `immsched shard-worker` child process
+    /// over the wire protocol instead of an in-process service thread —
+    /// the trajectory compares the two transports' overhead.
+    process_shards: bool,
     policy: String,
     rate: f64,
     horizon: f64,
@@ -51,6 +62,16 @@ struct Args {
     seed: u64,
     label: String,
     out: String,
+}
+
+impl Args {
+    fn transport_name(&self) -> &'static str {
+        if self.process_shards {
+            "process"
+        } else {
+            "in-process"
+        }
+    }
 }
 
 fn parse_args() -> Result<Args> {
@@ -71,6 +92,7 @@ fn parse_args() -> Result<Args> {
     Ok(Args {
         smoke,
         fresh: argv.iter().any(|a| a == "--fresh"),
+        process_shards: argv.iter().any(|a| a == "--process-shards"),
         shards: flag("--shards").map(|s| s.parse()).transpose()?.unwrap_or(2).max(1),
         policy: flag("--policy").cloned().unwrap_or_else(|| "deadline-aware".into()),
         rate: flag("--rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0),
@@ -92,6 +114,16 @@ fn make_policy(name: &str) -> Result<Box<dyn RoutePolicy>> {
     policy_by_name(name).ok_or_else(|| {
         anyhow::anyhow!("unknown policy {name:?} (round-robin|least-queue|deadline-aware)")
     })
+}
+
+/// Spawn a cluster on the transport the run is benchmarking.
+fn spawn_cluster(args: &Args, ccfg: ClusterConfig) -> Result<MatchCluster> {
+    let policy = make_policy(&args.policy)?;
+    if args.process_shards {
+        MatchCluster::spawn_process_shards(ccfg, policy)
+    } else {
+        MatchCluster::spawn(ccfg, policy)
+    }
 }
 
 /// A 3-fan-out star cannot embed into a chain, but its full mask has no
@@ -146,14 +178,14 @@ fn resume_proof(args: &Args, target_s: f64) -> Result<ResumeProof> {
         args.shards
     );
     for attempt in 0..5 {
-        let cluster = MatchCluster::spawn(
+        let cluster = spawn_cluster(
+            args,
             ClusterConfig {
                 shards: args.shards,
                 service: ServiceConfig::default(),
                 pso: PsoConfig { seed: args.seed, epochs: epoch_budget, ..Default::default() },
                 resume_capacity: 64,
             },
-            make_policy(&args.policy)?,
         )?;
 
         // fillers: one long-running Background episode per shard
@@ -240,9 +272,10 @@ fn resume_proof(args: &Args, target_s: f64) -> Result<ResumeProof> {
 fn main() -> Result<()> {
     let args = parse_args()?;
     println!(
-        "[bench_cluster] smoke={} shards={} policy={} process={} rate={} horizon={}",
+        "[bench_cluster] smoke={} shards={} transport={} policy={} process={} rate={} horizon={}",
         args.smoke,
         args.shards,
+        args.transport_name(),
         args.policy,
         args.process.name(),
         args.rate,
@@ -266,14 +299,14 @@ fn main() -> Result<()> {
     };
     let schedule = schedule_from_trace(&dcfg);
     println!("[bench_cluster] trace: {} requests over {}s (modeled)", schedule.len(), args.horizon);
-    let cluster = MatchCluster::spawn(
+    let cluster = spawn_cluster(
+        &args,
         ClusterConfig {
             shards: args.shards,
             service: ServiceConfig::default(),
             pso: PsoConfig { seed: args.seed, ..Default::default() },
             resume_capacity: 1024,
         },
-        make_policy(&args.policy)?,
     )?;
     let report = run_open_loop(&cluster, &schedule, &dcfg)?;
     print!("{}", report.table().render());
@@ -317,6 +350,7 @@ fn main() -> Result<()> {
         ("label", Json::from(args.label.as_str())),
         ("smoke", Json::from(args.smoke)),
         ("shards", Json::from(args.shards)),
+        ("transport", Json::from(args.transport_name())),
         ("policy", Json::from(args.policy.as_str())),
         ("process", Json::from(args.process.name())),
         ("arrival_rate", Json::from(args.rate)),

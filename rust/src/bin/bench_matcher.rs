@@ -33,7 +33,7 @@ use immsched::graph::{gen_dag_layered, Dag, NodeKind};
 use immsched::matcher::{
     build_bitmask, edge_fitness, ullmann::plant_embedding, FitnessKernel, PsoConfig, PsoMatcher,
 };
-use immsched::report::figures::{append_bench_entry, MATCHER_BENCH_SCHEMA};
+use immsched::report::figures::{append_bench_entry_pruned, MATCHER_BENCH_SCHEMA};
 use immsched::runtime::{
     EpochBackend, EpochInputs, EpochOutputs, NativeEpochBackend, SizeClass, NATIVE_SIZE_CLASSES,
 };
@@ -131,7 +131,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     let entry = entry_json(&results, smoke, threads, &label);
-    let appended = append_bench_entry(&out_path, MATCHER_BENCH_SCHEMA, entry, fresh)?;
+    // A full measured run supersedes any analytic estimate entry still
+    // in the trajectory (the `pr2-seed-estimate` carried from authoring
+    // environments without a rust toolchain): measured numbers land,
+    // estimates leave — the figure pipeline never mixes the two.
+    let prune = |e: &Json| !smoke && e.get("measured").and_then(Json::as_bool) == Some(false);
+    let appended =
+        append_bench_entry_pruned(&out_path, MATCHER_BENCH_SCHEMA, entry, fresh, &prune)?;
     println!("[bench_matcher] wrote {out_path} ({appended} trajectory entries)");
     Ok(())
 }

@@ -1,12 +1,21 @@
 //! `cluster/`: sharded multi-accelerator serving — the front router over
-//! N [`MatchService`] shards (one per modeled accelerator), toward the
-//! production-scale north star.
+//! N shards (one modeled accelerator each), toward the production-scale
+//! north star.
 //!
-//! * [`MatchCluster`] — owns the shards and hands out globally unique
-//!   request ids; every submission is routed by a pluggable
-//!   [`RoutePolicy`] ([`RoundRobin`], [`LeastQueueDepth`], or
-//!   [`DeadlineAware`] with cross-shard preemption) using the shards'
-//!   non-blocking [`ServiceStats`].
+//! * [`MatchCluster`] — owns one [`ShardTransport`] per shard and hands
+//!   out globally unique request ids; every submission is routed by a
+//!   pluggable [`RoutePolicy`] ([`RoundRobin`], [`LeastQueueDepth`], or
+//!   [`DeadlineAware`] with cross-shard preemption) using the
+//!   transport-reported [`ShardStatus`] load signal.
+//! * [`transport`] — the shard boundary itself: [`InProcessShard`]
+//!   (one `MatchService` thread, the zero-copy path) and
+//!   [`ProcessShard`] (an `immsched shard-worker` child process spoken
+//!   to over the framed [`wire`] protocol).  Mixed fleets are fine —
+//!   routing never sees the difference.
+//! * [`wire`] — the versioned, schema-tagged codec ([`ShardMsg`] /
+//!   [`ShardReply`]) with bit-exact snapshot serialization, so a
+//!   preempted episode's warm-start state migrates across a process
+//!   boundary and resumes bit-identically.
 //! * [`ResumeStore`] — a cancelled episode's S*/S̄ barrier snapshot is
 //!   persisted keyed by request id; [`MatchCluster::resubmit`]
 //!   warm-starts the resubmission from it (same shard or migrated),
@@ -17,23 +26,24 @@
 //!   SLO-miss / shed / preemption metrics — the `bench_cluster` binary
 //!   and the `immsched cluster` CLI subcommand run it.
 //!
-//! Request lifecycle: **route → submit (shard) → admit → engine chain →
-//! outcome**, with `Cancelled` outcomes feeding the resume store.
+//! Request lifecycle: **route → submit (transport) → admit → engine
+//! chain → outcome**, with `Cancelled` outcomes feeding the resume
+//! store.
 
 pub mod driver;
 pub mod policy;
 pub mod resume;
+pub mod transport;
+pub mod wire;
 
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::{
-    MatchProblem, MatchResponse, MatchService, MatchTicket, RequestId, ServiceConfig,
-    ServiceStats, SubmitOptions,
-};
+use crate::coordinator::{MatchProblem, MatchResponse, RequestId, ServiceConfig, ServiceStats};
 use crate::matcher::PsoConfig;
 use crate::scheduler::Priority;
 
@@ -41,11 +51,13 @@ pub use policy::{
     policy_by_name, DeadlineAware, LeastQueueDepth, RoundRobin, RoutePolicy, ShardId, ShardView,
 };
 pub use resume::{ResumeStats, ResumeStore};
+pub use transport::{InProcessShard, ProcessShard, ShardTransport};
+pub use wire::{ShardMsg, ShardReply, ShardStatus};
 
 /// Cluster-wide knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterConfig {
-    /// Shard count — one [`MatchService`] per modeled accelerator.
+    /// Shard count — one shard per modeled accelerator.
     pub shards: usize,
     /// Per-shard admission knobs (queue depth, epoch quota).
     pub service: ServiceConfig,
@@ -94,15 +106,15 @@ impl ClusterStats {
     }
 }
 
-/// A routed submission: which shard serves it, plus the underlying
-/// service ticket.  Waiting (blocking or polling) through the cluster
-/// ticket automatically persists any snapshot a response carries —
-/// from a cancelled episode, or handed back untouched by a shed
-/// resubmission — into the cluster's [`ResumeStore`].
+/// A routed submission: which shard serves it, plus a handle on that
+/// shard's transport.  Waiting (blocking or polling) through the
+/// cluster ticket automatically persists any snapshot a response
+/// carries — from a cancelled episode, or handed back untouched by a
+/// shed resubmission — into the cluster's [`ResumeStore`].
 pub struct ClusterTicket {
     pub id: RequestId,
     pub shard: ShardId,
-    ticket: MatchTicket,
+    transport: Arc<dyn ShardTransport>,
     store: Arc<ResumeStore>,
 }
 
@@ -110,7 +122,7 @@ impl ClusterTicket {
     /// Block until the shard answers; a cancelled episode's snapshot is
     /// persisted for [`MatchCluster::resubmit`] before returning.
     pub fn wait(self) -> Result<MatchResponse> {
-        let resp = self.ticket.wait()?;
+        let resp = self.transport.wait_response(self.id)?;
         stash(&self.store, &resp);
         Ok(resp)
     }
@@ -118,14 +130,14 @@ impl ClusterTicket {
     /// Non-blocking poll; persists a cancelled episode's snapshot when
     /// the response arrives.
     pub fn try_wait(&self) -> Option<MatchResponse> {
-        let resp = self.ticket.try_wait()?;
+        let resp = self.transport.try_response(self.id)?;
         stash(&self.store, &resp);
         Some(resp)
     }
 
     /// Stop the episode at its next epoch barrier (or before it starts).
     pub fn cancel(&self) {
-        self.ticket.cancel();
+        self.transport.cancel(self.id);
     }
 }
 
@@ -135,9 +147,15 @@ fn stash(store: &ResumeStore, resp: &MatchResponse) {
     }
 }
 
-/// The front router: N shards, one policy, one resume store.
+/// Load reported for a shard whose transport failed a status query (a
+/// dead worker): effectively infinite queue depth, so load-aware
+/// policies steer new work away from it while waiters fail over.
+const DEGRADED_QUEUE_DEPTH: usize = usize::MAX / 4;
+
+/// The front router: N shards behind transports, one policy, one
+/// resume store.
 pub struct MatchCluster {
-    shards: Vec<MatchService>,
+    shards: Vec<Arc<dyn ShardTransport>>,
     policy: Mutex<Box<dyn RoutePolicy>>,
     store: Arc<ResumeStore>,
     routed: Vec<AtomicU64>,
@@ -146,21 +164,58 @@ pub struct MatchCluster {
 }
 
 impl MatchCluster {
-    /// Spawn `cfg.shards` services behind `policy`.
+    /// Spawn `cfg.shards` in-process services behind `policy` (the
+    /// zero-serialization default).
     pub fn spawn(cfg: ClusterConfig, policy: Box<dyn RoutePolicy>) -> Result<Self> {
         let shards = cfg.shards.max(1);
-        let mut services = Vec::with_capacity(shards);
+        let mut transports: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(shards);
         for _ in 0..shards {
-            services.push(MatchService::spawn_configured(cfg.service, cfg.pso)?);
+            transports.push(Arc::new(InProcessShard::spawn(cfg.service, cfg.pso)?));
         }
-        Ok(Self {
-            shards: services,
+        Ok(Self::with_transports(transports, policy, cfg.resume_capacity))
+    }
+
+    /// Spawn `cfg.shards` out-of-process `shard-worker` children (see
+    /// [`transport::worker_binary`] for how the worker binary is
+    /// found).  Same config, same policies, same resume semantics —
+    /// only the boundary differs.
+    pub fn spawn_process_shards(cfg: ClusterConfig, policy: Box<dyn RoutePolicy>) -> Result<Self> {
+        let bin = transport::worker_binary()?;
+        Self::spawn_process_shards_at(&bin, cfg, policy)
+    }
+
+    /// [`Self::spawn_process_shards`] from an explicit worker binary
+    /// (tests pass `env!("CARGO_BIN_EXE_immsched")`).
+    pub fn spawn_process_shards_at(
+        bin: &Path,
+        cfg: ClusterConfig,
+        policy: Box<dyn RoutePolicy>,
+    ) -> Result<Self> {
+        let shards = cfg.shards.max(1);
+        let mut transports: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            transports.push(Arc::new(ProcessShard::spawn_at(bin, cfg.service, cfg.pso)?));
+        }
+        Ok(Self::with_transports(transports, policy, cfg.resume_capacity))
+    }
+
+    /// Assemble a cluster over caller-provided transports — mixed
+    /// fleets (in-process + out-of-process shards) route identically.
+    pub fn with_transports(
+        transports: Vec<Arc<dyn ShardTransport>>,
+        policy: Box<dyn RoutePolicy>,
+        resume_capacity: usize,
+    ) -> Self {
+        assert!(!transports.is_empty(), "a cluster needs at least one shard");
+        let routed = (0..transports.len()).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            shards: transports,
             policy: Mutex::new(policy),
-            store: Arc::new(ResumeStore::with_capacity(cfg.resume_capacity)),
-            routed: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            store: Arc::new(ResumeStore::with_capacity(resume_capacity)),
+            routed,
             next_id: AtomicU64::new(1),
             start: Instant::now(),
-        })
+        }
     }
 
     pub fn shard_count(&self) -> usize {
@@ -178,19 +233,35 @@ impl MatchCluster {
         &self.store
     }
 
+    /// Transport kind per shard (telemetry: `"in-process"` /
+    /// `"process"`).
+    pub fn transport_kinds(&self) -> Vec<&'static str> {
+        self.shards.iter().map(|t| t.kind()).collect()
+    }
+
     /// Current per-shard routing views (the policy input; also useful
-    /// for dashboards/tests).
+    /// for dashboards/tests).  A shard whose transport cannot report —
+    /// a dead worker — shows up with an effectively infinite queue
+    /// depth so load-aware policies avoid it.
     pub fn views(&self) -> Vec<ShardView> {
         self.shards
             .iter()
             .enumerate()
-            .map(|(shard, svc)| {
-                let stats = svc.stats();
-                ShardView {
+            .map(|(shard, transport)| match transport.status() {
+                Ok(status) => ShardView {
                     shard,
-                    queue_depth: stats.router.depth as usize,
-                    in_flight: svc.in_flight(),
-                    stats,
+                    queue_depth: status.queue_depth,
+                    in_flight: status.in_flight,
+                    stats: status.stats,
+                },
+                Err(e) => {
+                    crate::log_warn!("shard {shard} status query failed: {e:#}");
+                    ShardView {
+                        shard,
+                        queue_depth: DEGRADED_QUEUE_DEPTH,
+                        in_flight: None,
+                        stats: ServiceStats::default(),
+                    }
                 }
             })
             .collect()
@@ -198,7 +269,11 @@ impl MatchCluster {
 
     pub fn stats(&self) -> ClusterStats {
         ClusterStats {
-            shards: self.shards.iter().map(|s| s.stats()).collect(),
+            shards: self
+                .shards
+                .iter()
+                .map(|t| t.status().map(|s| s.stats).unwrap_or_default())
+                .collect(),
             routed: self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
             resume: self.store.stats(),
         }
@@ -206,7 +281,8 @@ impl MatchCluster {
 
     /// Submit a new request: the policy picks the shard, the cluster
     /// assigns a globally unique id.  `timeout` is relative (seconds
-    /// from now) and is converted to the chosen shard's absolute clock.
+    /// from now); the chosen shard anchors it to its own clock — the
+    /// reason absolute deadlines never cross the transport boundary.
     pub fn submit(
         &self,
         problem: MatchProblem,
@@ -234,7 +310,8 @@ impl MatchCluster {
     /// Resubmit a previously answered request under its original id.
     /// If a cancelled episode persisted a snapshot for `id`, the new
     /// episode warm-starts from it — on whichever shard the policy now
-    /// picks (resume survives migration).
+    /// picks (resume survives migration, including across a process
+    /// boundary).
     pub fn resubmit(
         &self,
         id: RequestId,
@@ -245,6 +322,18 @@ impl MatchCluster {
         let resume = self.store.take(id);
         let shard = self.route(priority, timeout);
         self.submit_inner(shard, id, problem, priority, timeout, resume)
+    }
+
+    /// Drain every shard: in-flight work finishes, worker processes
+    /// exit.  Dropping the cluster does this implicitly; calling it
+    /// explicitly surfaces drain errors instead of swallowing them.
+    pub fn drain(&self) -> Result<()> {
+        for (shard, transport) in self.shards.iter().enumerate() {
+            transport
+                .drain()
+                .map_err(|e| e.context(format!("draining shard {shard}")))?;
+        }
+        Ok(())
     }
 
     fn route(&self, priority: Priority, timeout: Option<f64>) -> ShardId {
@@ -263,12 +352,15 @@ impl MatchCluster {
         resume: Option<crate::matcher::SwarmSnapshot>,
     ) -> Result<ClusterTicket> {
         let shard = shard.min(self.shards.len() - 1);
-        let svc = &self.shards[shard];
-        let deadline = timeout.map(|t| svc.now() + t);
-        let ticket =
-            svc.submit_with(problem, priority, deadline, SubmitOptions { id: Some(id), resume })?;
+        let transport = &self.shards[shard];
+        transport.submit(id, problem, priority, timeout, resume)?;
         self.routed[shard].fetch_add(1, Ordering::Relaxed);
-        Ok(ClusterTicket { id, shard, ticket, store: Arc::clone(&self.store) })
+        Ok(ClusterTicket {
+            id,
+            shard,
+            transport: Arc::clone(transport),
+            store: Arc::clone(&self.store),
+        })
     }
 }
 
@@ -291,6 +383,7 @@ mod tests {
             ..Default::default()
         };
         let cluster = MatchCluster::spawn(cfg, Box::<RoundRobin>::default()).unwrap();
+        assert_eq!(cluster.transport_kinds(), vec!["in-process"; 3]);
         let mut tickets = Vec::new();
         for _ in 0..6 {
             tickets.push(cluster.submit(chain_problem(4, 8), Priority::Normal, None).unwrap());
@@ -316,5 +409,23 @@ mod tests {
         assert_ne!(a.id, b.id);
         let (ra, rb) = (a.wait().unwrap(), b.wait().unwrap());
         assert_ne!(ra.id, rb.id, "responses must echo the cluster-assigned ids");
+    }
+
+    #[test]
+    fn mixed_transport_fleet_routes_uniformly() {
+        // two in-process shards behind the transport trait directly —
+        // the cluster must treat hand-assembled fleets like spawned ones
+        let pso = PsoConfig { seed: 12, ..Default::default() };
+        let transports: Vec<Arc<dyn ShardTransport>> = vec![
+            Arc::new(InProcessShard::spawn(ServiceConfig::default(), pso).unwrap()),
+            Arc::new(InProcessShard::spawn(ServiceConfig::default(), pso).unwrap()),
+        ];
+        let cluster =
+            MatchCluster::with_transports(transports, Box::<RoundRobin>::default(), 64);
+        let a = cluster.submit(chain_problem(4, 8), Priority::Normal, None).unwrap();
+        let b = cluster.submit(chain_problem(4, 8), Priority::Normal, None).unwrap();
+        assert_ne!(a.shard, b.shard);
+        assert!(a.wait().unwrap().matched());
+        assert!(b.wait().unwrap().matched());
     }
 }

@@ -1,10 +1,12 @@
 //! Pluggable shard-selection policies for the [`super::MatchCluster`]
 //! front router.
 //!
-//! A policy sees one [`ShardView`] per shard — the non-blocking
-//! [`ServiceStats`] load signal (queue depth, shed counters) plus the
-//! priority of the episode currently on the shard's controller — and
-//! picks the shard for one submission.  Three implementations ship:
+//! A policy sees one [`ShardView`] per shard — built from the
+//! transport-reported [`crate::cluster::ShardStatus`] (queue depth,
+//! in-flight episode priority, full [`ServiceStats`]), never from
+//! `MatchService` internals, so in-process and out-of-process shards
+//! are routed identically — and picks the shard for one submission.
+//! Three implementations ship:
 //!
 //! * [`RoundRobin`] — the baseline spreader;
 //! * [`LeastQueueDepth`] — load-aware: fewest queued + in-flight

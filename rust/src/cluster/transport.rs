@@ -1,0 +1,740 @@
+//! Shard transports: how the [`super::MatchCluster`] front router
+//! reaches one shard, abstracted over the process boundary.
+//!
+//! [`ShardTransport`] is the routing-facing contract — submit /
+//! resubmit (a submit carrying a resume snapshot) / cancel / stats /
+//! drain, mirroring the [`wire::ShardMsg`] protocol verbs.  Two
+//! implementations ship:
+//!
+//! * [`InProcessShard`] — wraps a [`MatchService`] thread directly (the
+//!   PR 4 cluster path, zero serialization);
+//! * [`ProcessShard`] — spawns an `immsched shard-worker` child
+//!   process hosting one `MatchService`, and speaks the framed
+//!   [`wire`] protocol over the child's stdio.  A demux thread routes
+//!   out-of-order responses back to waiters by request id.
+//!
+//! [`worker_serve`] is the other half of [`ProcessShard`]: the loop a
+//! worker process runs over its stdin/stdout.  It lives here (not in
+//! `main.rs`) so integration tests can exercise the exact production
+//! loop through any `Read`/`Write` pair.
+//!
+//! The cluster holds `Arc<dyn ShardTransport>` per shard, so mixed
+//! fleets (some shards in-process, some out-of-process) are routed
+//! identically — policies only ever see transport-reported
+//! [`ShardStatus`] load, never `MatchService` internals.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{
+    CancelToken, MatchPath, MatchProblem, MatchResponse, MatchService, MatchTicket, RequestId,
+    ServiceConfig, SubmitOptions,
+};
+use crate::matcher::{PsoConfig, SwarmSnapshot};
+use crate::scheduler::Priority;
+
+use super::wire::{
+    self, decode_msg, decode_reply, encode_msg, encode_reply, read_frame, write_frame,
+    ShardMsg, ShardReply, ShardStatus,
+};
+
+/// Environment override for the worker binary `ProcessShard::spawn`
+/// launches (useful when the router binary is not `immsched` itself).
+pub const WORKER_BIN_ENV: &str = "IMMSCHED_WORKER_BIN";
+
+/// How long a control round-trip (stats, drain) may take before the
+/// shard is declared unresponsive.
+const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One shard as the router sees it.  All methods are callable from any
+/// thread; responses are keyed by the globally unique request id the
+/// cluster assigns.
+pub trait ShardTransport: Send + Sync {
+    /// Transport kind for telemetry (`"in-process"` / `"process"`).
+    fn kind(&self) -> &'static str;
+
+    /// Submit one request.  `timeout` is relative seconds from now (the
+    /// shard anchors it to its own clock); `resume` makes this a
+    /// resubmission that warm-starts from the snapshot.
+    fn submit(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<SwarmSnapshot>,
+    ) -> Result<()>;
+
+    /// Cancel `id` at its next epoch barrier (no-op if already done).
+    fn cancel(&self, id: RequestId);
+
+    /// Current load + telemetry — the routing policies' only input.
+    fn status(&self) -> Result<ShardStatus>;
+
+    /// Non-blocking poll for `id`'s final answer.
+    fn try_response(&self, id: RequestId) -> Option<MatchResponse>;
+
+    /// Block until `id`'s final answer arrives.
+    fn wait_response(&self, id: RequestId) -> Result<MatchResponse>;
+
+    /// Finish answering everything submitted, reject further
+    /// submissions, and release the shard's execution resources.
+    /// Already-produced responses stay consumable afterwards.  Errors
+    /// if the shard cannot settle within the control timeout.
+    fn drain(&self) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// in-process transport
+// ---------------------------------------------------------------------------
+
+/// The zero-copy transport: one [`MatchService`] thread in this
+/// process, tickets demuxed by request id.
+pub struct InProcessShard {
+    svc: MatchService,
+    /// Pending tickets by id; an entry leaves when its response is
+    /// consumed (an abandoned ticket stays until the shard drops).
+    tickets: Mutex<HashMap<RequestId, MatchTicket>>,
+    /// Cancel tokens stay reachable while [`Self::wait_response`] holds
+    /// the ticket out of the map.
+    cancels: Mutex<HashMap<RequestId, CancelToken>>,
+    /// Set by [`ShardTransport::drain`]: later submissions are rejected,
+    /// mirroring a drained worker's closed stdin.
+    draining: AtomicBool,
+}
+
+impl InProcessShard {
+    pub fn spawn(cfg: ServiceConfig, pso: PsoConfig) -> Result<Self> {
+        Ok(Self {
+            svc: MatchService::spawn_configured(cfg, pso)?,
+            tickets: Mutex::new(HashMap::new()),
+            cancels: Mutex::new(HashMap::new()),
+            draining: AtomicBool::new(false),
+        })
+    }
+
+    fn forget(&self, id: RequestId) {
+        self.cancels.lock().unwrap().remove(&id);
+    }
+}
+
+impl ShardTransport for InProcessShard {
+    fn kind(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn submit(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<SwarmSnapshot>,
+    ) -> Result<()> {
+        if self.draining.load(Ordering::Acquire) {
+            bail!("shard drained: no further submissions accepted");
+        }
+        let deadline = timeout.map(|t| self.svc.now() + t);
+        let opts = SubmitOptions { id: Some(id), resume };
+        let ticket = self.svc.submit_with(problem, priority, deadline, opts)?;
+        self.cancels.lock().unwrap().insert(id, ticket.cancel_token());
+        self.tickets.lock().unwrap().insert(id, ticket);
+        Ok(())
+    }
+
+    fn cancel(&self, id: RequestId) {
+        if let Some(token) = self.cancels.lock().unwrap().get(&id) {
+            token.cancel();
+        }
+    }
+
+    fn status(&self) -> Result<ShardStatus> {
+        let stats = self.svc.stats();
+        Ok(ShardStatus {
+            queue_depth: stats.router.depth as usize,
+            in_flight: self.svc.in_flight(),
+            stats,
+        })
+    }
+
+    fn try_response(&self, id: RequestId) -> Option<MatchResponse> {
+        let mut tickets = self.tickets.lock().unwrap();
+        let resp = tickets.get(&id)?.try_wait()?;
+        tickets.remove(&id);
+        drop(tickets);
+        self.forget(id);
+        Some(resp)
+    }
+
+    fn wait_response(&self, id: RequestId) -> Result<MatchResponse> {
+        let ticket = self
+            .tickets
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .with_context(|| format!("request {id} unknown or already answered"))?;
+        let resp = ticket.wait();
+        self.forget(id);
+        resp
+    }
+
+    fn drain(&self) -> Result<()> {
+        // mirror the worker contract: stop accepting, then wait until
+        // everything submitted has been answered by the service (the
+        // responses stay in their tickets for later consumption)
+        self.draining.store(true, Ordering::Release);
+        let start = Instant::now();
+        let mut idle_streak = 0u32;
+        loop {
+            let stats = self.svc.stats();
+            if stats.router.depth == 0 && self.svc.in_flight().is_none() {
+                // two consecutive idle observations, so a submission
+                // racing the drain call has cleared the channel→queue
+                // hop before we declare the shard settled
+                idle_streak += 1;
+                if idle_streak >= 2 {
+                    return Ok(());
+                }
+            } else {
+                idle_streak = 0;
+            }
+            if start.elapsed() > CONTROL_TIMEOUT {
+                bail!("in-process shard did not settle within {CONTROL_TIMEOUT:?}");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// out-of-process transport
+// ---------------------------------------------------------------------------
+
+/// Demux state shared between callers and the reader thread.
+struct Demux {
+    state: Mutex<DemuxState>,
+    arrived: Condvar,
+}
+
+struct DemuxState {
+    responses: HashMap<RequestId, MatchResponse>,
+    /// The worker exited (or its stream broke); waiting is hopeless.
+    dead: bool,
+}
+
+/// A shard hosted by a child `shard-worker` process, reached over
+/// length-prefixed [`wire`] frames on the child's stdio.
+pub struct ProcessShard {
+    child: Mutex<Child>,
+    /// `None` after shutdown — dropping the handle closes the worker's
+    /// stdin, which the worker treats as a drain request.
+    writer: Mutex<Option<ChildStdin>>,
+    demux: Arc<Demux>,
+    /// Serializes control round-trips (stats/drain) so concurrent
+    /// callers cannot interleave each other's replies.
+    control: Mutex<ControlChannels>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+struct ControlChannels {
+    stats_rx: mpsc::Receiver<ShardStatus>,
+    drained_rx: mpsc::Receiver<u64>,
+}
+
+impl ProcessShard {
+    /// Spawn a worker with this binary's `shard-worker` subcommand (or
+    /// the [`WORKER_BIN_ENV`] override / a sibling `immsched` binary —
+    /// see [`worker_binary`]).
+    pub fn spawn(cfg: ServiceConfig, pso: PsoConfig) -> Result<Self> {
+        Self::spawn_at(&worker_binary()?, cfg, pso)
+    }
+
+    /// Spawn a worker from an explicit binary path (tests pass
+    /// `env!("CARGO_BIN_EXE_immsched")`).
+    pub fn spawn_at(bin: &Path, cfg: ServiceConfig, pso: PsoConfig) -> Result<Self> {
+        let mut child = Command::new(bin)
+            .arg("shard-worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning shard worker {}", bin.display()))?;
+        let mut stdin = child.stdin.take().expect("piped stdin");
+        let mut stdout = child.stdout.take().expect("piped stdout");
+
+        // handshake before the demux thread owns stdout: Hello carries
+        // the shard config, Ready proves the schema matches.  The first
+        // read runs on a helper thread so a worker that never answers
+        // fails the spawn after CONTROL_TIMEOUT instead of hanging it;
+        // stdout comes back through the channel for the demux thread.
+        let reap = |mut child: Child, e: anyhow::Error| -> anyhow::Error {
+            let _ = child.kill();
+            let _ = child.wait();
+            e
+        };
+        if let Err(e) = write_frame(&mut stdin, &encode_msg(&ShardMsg::Hello { service: cfg, pso }))
+        {
+            return Err(reap(child, e));
+        }
+        let (hs_tx, hs_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let first = read_frame(&mut stdout);
+            let _ = hs_tx.send((first, stdout));
+        });
+        let (first, stdout) = match hs_rx.recv_timeout(CONTROL_TIMEOUT) {
+            Ok(pair) => pair,
+            Err(_) => {
+                let e = anyhow::anyhow!(
+                    "shard worker did not answer the hello within {CONTROL_TIMEOUT:?}"
+                );
+                return Err(reap(child, e));
+            }
+        };
+        let handshake = (|| -> Result<()> {
+            let first = first?.context("shard worker exited before answering the hello")?;
+            match decode_reply(&first)? {
+                ShardReply::Ready { schema } if schema == wire::WIRE_SCHEMA => Ok(()),
+                ShardReply::Ready { schema } => {
+                    bail!("shard worker speaks {schema:?}, expected {:?}", wire::WIRE_SCHEMA)
+                }
+                ShardReply::Error { context } => {
+                    bail!("shard worker rejected the hello: {context}")
+                }
+                other => bail!("unexpected handshake reply {other:?}"),
+            }
+        })();
+        if let Err(e) = handshake {
+            return Err(reap(child, e));
+        }
+
+        let demux = Arc::new(Demux {
+            state: Mutex::new(DemuxState { responses: HashMap::new(), dead: false }),
+            arrived: Condvar::new(),
+        });
+        let (stats_tx, stats_rx) = mpsc::channel();
+        let (drained_tx, drained_rx) = mpsc::channel();
+        let reader_demux = Arc::clone(&demux);
+        let reader = std::thread::Builder::new()
+            .name("immsched-shard-demux".into())
+            .spawn(move || demux_loop(stdout, reader_demux, stats_tx, drained_tx))?;
+
+        Ok(Self {
+            child: Mutex::new(child),
+            writer: Mutex::new(Some(stdin)),
+            demux,
+            control: Mutex::new(ControlChannels { stats_rx, drained_rx }),
+            reader: Mutex::new(Some(reader)),
+        })
+    }
+
+    fn send(&self, msg: &ShardMsg) -> Result<()> {
+        match self.writer.lock().unwrap().as_mut() {
+            Some(w) => write_frame(w, &encode_msg(msg)),
+            None => bail!("shard worker connection already shut down"),
+        }
+    }
+
+    /// Reap the child after the protocol says it is done (or kill it if
+    /// it is not).  Closing our end of its stdin first lets a healthy
+    /// worker observe EOF (= drain) and exit on its own.
+    fn shutdown(&self, kill: bool) {
+        drop(self.writer.lock().unwrap().take());
+        let mut child = self.child.lock().unwrap();
+        if kill {
+            let _ = child.kill();
+        }
+        let _ = child.wait();
+        if let Some(handle) = self.reader.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Reader side of the stdio connection: routes replies to waiters.
+fn demux_loop(
+    mut stdout: ChildStdout,
+    demux: Arc<Demux>,
+    stats_tx: mpsc::Sender<ShardStatus>,
+    drained_tx: mpsc::Sender<u64>,
+) {
+    loop {
+        match read_frame(&mut stdout) {
+            Ok(Some(frame)) => match decode_reply(&frame) {
+                Ok(ShardReply::Response(resp)) => {
+                    let mut state = demux.state.lock().unwrap();
+                    state.responses.insert(resp.id, resp);
+                    demux.arrived.notify_all();
+                }
+                Ok(ShardReply::Stats(status)) => {
+                    let _ = stats_tx.send(status);
+                }
+                Ok(ShardReply::Drained { answered }) => {
+                    let _ = drained_tx.send(answered);
+                }
+                Ok(ShardReply::Error { context }) => {
+                    crate::log_warn!("shard worker error reply: {context}");
+                }
+                Ok(ShardReply::Ready { .. }) => {
+                    crate::log_warn!("shard worker sent a duplicate ready frame");
+                }
+                Err(e) => {
+                    // an undecodable reply means the framing is out of
+                    // sync or the peer speaks something else — every
+                    // later frame is suspect, and silently skipping one
+                    // would strand its waiter forever.  Declare the
+                    // connection dead so waiters fail loudly.
+                    crate::log_warn!("undecodable shard reply, closing connection: {e:#}");
+                    break;
+                }
+            },
+            Ok(None) | Err(_) => break,
+        }
+    }
+    demux.state.lock().unwrap().dead = true;
+    demux.arrived.notify_all();
+}
+
+impl ShardTransport for ProcessShard {
+    fn kind(&self) -> &'static str {
+        "process"
+    }
+
+    fn submit(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<SwarmSnapshot>,
+    ) -> Result<()> {
+        self.send(&ShardMsg::Submit { id, problem, priority, timeout, resume })
+    }
+
+    fn cancel(&self, id: RequestId) {
+        // best-effort: a broken pipe means the worker is gone and every
+        // waiter will fail over the dead flag anyway
+        let _ = self.send(&ShardMsg::Cancel { id });
+    }
+
+    fn status(&self) -> Result<ShardStatus> {
+        let control = self.control.lock().unwrap();
+        // a reply that arrived after an earlier call timed out would
+        // otherwise answer *this* request and desync every later one
+        while control.stats_rx.try_recv().is_ok() {}
+        self.send(&ShardMsg::Stats)?;
+        control
+            .stats_rx
+            .recv_timeout(CONTROL_TIMEOUT)
+            .context("shard worker did not answer a stats request")
+    }
+
+    fn try_response(&self, id: RequestId) -> Option<MatchResponse> {
+        self.demux.state.lock().unwrap().responses.remove(&id)
+    }
+
+    fn wait_response(&self, id: RequestId) -> Result<MatchResponse> {
+        let mut state = self.demux.state.lock().unwrap();
+        loop {
+            if let Some(resp) = state.responses.remove(&id) {
+                return Ok(resp);
+            }
+            if state.dead {
+                bail!("shard worker exited before answering request {id}");
+            }
+            state = self.demux.arrived.wait(state).unwrap();
+        }
+    }
+
+    fn drain(&self) -> Result<()> {
+        let control = self.control.lock().unwrap();
+        self.send(&ShardMsg::Drain)?;
+        let answered = control
+            .drained_rx
+            .recv_timeout(CONTROL_TIMEOUT)
+            .context("shard worker did not acknowledge the drain")?;
+        drop(control);
+        crate::log_debug!("shard worker drained after {answered} responses");
+        self.shutdown(false);
+        Ok(())
+    }
+}
+
+impl Drop for ProcessShard {
+    fn drop(&mut self) {
+        // Polite first (covers the normal cluster-drop path), forceful
+        // if the worker is wedged.  Note the last-resort semantics: a
+        // worker legitimately busy past CONTROL_TIMEOUT is killed
+        // mid-episode here — callers who care about in-flight work must
+        // consume their responses (or call `drain()`) before dropping.
+        if self.drain().is_err() {
+            self.shutdown(true);
+        }
+    }
+}
+
+/// Resolve the worker binary [`ProcessShard::spawn`] launches: the
+/// [`WORKER_BIN_ENV`] override, this binary itself when it *is*
+/// `immsched`, or an `immsched` binary sitting next to it (the cargo
+/// target layout the bench binaries run from).
+pub fn worker_binary() -> Result<PathBuf> {
+    if let Ok(path) = std::env::var(WORKER_BIN_ENV) {
+        return Ok(PathBuf::from(path));
+    }
+    let me = std::env::current_exe().context("resolving current executable")?;
+    let stem = me.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+    if stem == "immsched" {
+        return Ok(me);
+    }
+    let sibling = me.with_file_name(format!("immsched{}", std::env::consts::EXE_SUFFIX));
+    if sibling.exists() {
+        return Ok(sibling);
+    }
+    bail!(
+        "cannot locate the `immsched` worker binary next to {} — build it \
+         (`cargo build --release`) or set {WORKER_BIN_ENV}",
+        me.display()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// How often the worker sweeps its pending tickets while idle.
+const IDLE_POLL: Duration = Duration::from_millis(2);
+/// Sweep cadence while episodes are in flight (snappy completions).
+const BUSY_POLL: Duration = Duration::from_micros(200);
+
+/// The `immsched shard-worker` loop: host one [`MatchService`] behind
+/// the framed stdio protocol.  The first frame must be
+/// [`ShardMsg::Hello`]; EOF on `input` is treated as a drain (finish
+/// pending work, then exit) so a dying router never strands episodes
+/// half-reported.
+pub fn worker_serve<R, W>(input: R, mut output: W) -> Result<()>
+where
+    R: Read + Send + 'static,
+    W: Write,
+{
+    let mut input = input;
+    let hello = read_frame(&mut input)?.context("EOF before the hello frame")?;
+    let svc = match decode_msg(&hello) {
+        Ok(ShardMsg::Hello { service, pso }) => MatchService::spawn_configured(service, pso)?,
+        Ok(other) => {
+            let reply = ShardReply::Error {
+                context: format!("first frame must be hello, got {other:?}"),
+            };
+            write_frame(&mut output, &encode_reply(&reply))?;
+            bail!("handshake failed: first frame was not hello");
+        }
+        Err(e) => {
+            let reply = ShardReply::Error { context: format!("undecodable hello: {e:#}") };
+            write_frame(&mut output, &encode_reply(&reply))?;
+            return Err(e);
+        }
+    };
+    write_frame(
+        &mut output,
+        &encode_reply(&ShardReply::Ready { schema: wire::WIRE_SCHEMA.to_string() }),
+    )?;
+
+    // decouple frame reading from episode completion: the reader thread
+    // blocks on stdin while the main loop pumps finished episodes out
+    let (tx, rx) = mpsc::channel::<ShardMsg>();
+    let reader = std::thread::Builder::new().name("immsched-worker-reader".into()).spawn(
+        move || {
+            while let Ok(Some(frame)) = read_frame(&mut input) {
+                let msg = match decode_msg(&frame) {
+                    Ok(msg) => msg,
+                    Err(e) => {
+                        // out-of-sync framing poisons every later frame
+                        // (and a dropped submit would strand its waiter)
+                        // — treat it like EOF: drain pending and exit
+                        crate::log_warn!("undecodable frame, closing connection: {e:#}");
+                        break;
+                    }
+                };
+                if tx.send(msg).is_err() {
+                    break;
+                }
+            }
+        },
+    )?;
+
+    let mut pending: Vec<(RequestId, MatchTicket)> = Vec::new();
+    let mut answered: u64 = 0;
+    let mut open = true;
+    let mut draining = false;
+    loop {
+        // pump completions first so a drain observes them
+        let mut i = 0;
+        while i < pending.len() {
+            if let Some(resp) = pending[i].1.try_wait() {
+                pending.swap_remove(i);
+                answered += 1;
+                write_frame(&mut output, &encode_reply(&ShardReply::Response(resp)))?;
+            } else {
+                i += 1;
+            }
+        }
+        if pending.is_empty() {
+            if draining {
+                write_frame(&mut output, &encode_reply(&ShardReply::Drained { answered }))?;
+                break;
+            }
+            if !open {
+                break;
+            }
+        }
+        let timeout = if pending.is_empty() { IDLE_POLL } else { BUSY_POLL };
+        let msg = if open {
+            match rx.recv_timeout(timeout) {
+                Ok(msg) => Some(msg),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // router hung up: finish pending work, then exit
+                    open = false;
+                    None
+                }
+            }
+        } else {
+            std::thread::sleep(timeout);
+            None
+        };
+        let Some(msg) = msg else { continue };
+        match msg {
+            ShardMsg::Hello { .. } => {
+                let reply = ShardReply::Error { context: "duplicate hello".into() };
+                write_frame(&mut output, &encode_reply(&reply))?;
+            }
+            ShardMsg::Submit { id, problem, priority, timeout, resume } => {
+                let deadline = timeout.map(|t| svc.now() + t);
+                // kept aside so a failed submission can still hand the
+                // warm-start snapshot back (shedding must never destroy
+                // persisted progress) — and so the waiter gets a real
+                // response instead of hanging on an id-less error
+                let backup = resume.clone();
+                match svc.submit_with(
+                    problem,
+                    priority,
+                    deadline,
+                    SubmitOptions { id: Some(id), resume },
+                ) {
+                    Ok(ticket) => pending.push((id, ticket)),
+                    Err(e) => {
+                        crate::log_warn!("submit {id} failed on the worker: {e:#}");
+                        let shed = MatchResponse {
+                            id,
+                            mappings: Vec::new(),
+                            best_fitness: f32::NEG_INFINITY,
+                            epochs_run: 0,
+                            host_seconds: 0.0,
+                            path: MatchPath::Shed,
+                            resumed: false,
+                            snapshot: backup,
+                        };
+                        answered += 1;
+                        write_frame(&mut output, &encode_reply(&ShardReply::Response(shed)))?;
+                    }
+                }
+            }
+            ShardMsg::Cancel { id } => {
+                if let Some((_, ticket)) = pending.iter().find(|(pid, _)| *pid == id) {
+                    ticket.cancel();
+                }
+            }
+            ShardMsg::Stats => {
+                let stats = svc.stats();
+                let status = ShardStatus {
+                    queue_depth: stats.router.depth as usize,
+                    in_flight: svc.in_flight(),
+                    stats,
+                };
+                write_frame(&mut output, &encode_reply(&ShardReply::Stats(status)))?;
+            }
+            ShardMsg::Drain => draining = true,
+        }
+    }
+    output.flush().ok();
+    drop(svc); // join the service thread before reporting exit
+    // The reader thread may still be parked on a blocking stdin read
+    // (the router keeps our stdin open until it reaps us) — detach it
+    // instead of joining; process exit tears it down.
+    drop(reader);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+
+    fn chain_problem(n: usize, m: usize) -> MatchProblem {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        MatchProblem::from_dags(&qd, &gd)
+    }
+
+    #[test]
+    fn in_process_transport_round_trip() {
+        let shard = InProcessShard::spawn(
+            ServiceConfig::default(),
+            PsoConfig { seed: 3, ..Default::default() },
+        )
+        .unwrap();
+        shard.submit(41, chain_problem(4, 8), Priority::Normal, None, None).unwrap();
+        let resp = shard.wait_response(41).unwrap();
+        assert_eq!(resp.id, 41);
+        assert!(resp.matched());
+        assert!(shard.try_response(41).is_none(), "a response is consumed exactly once");
+        let status = shard.status().unwrap();
+        assert_eq!(status.stats.controller.requests, 1);
+        assert_eq!(shard.kind(), "in-process");
+        // drain parity with the worker contract: settles, then rejects
+        shard.drain().unwrap();
+        let refused = shard.submit(42, chain_problem(4, 8), Priority::Normal, None, None);
+        assert!(refused.is_err(), "a drained shard must reject new submissions");
+    }
+
+    #[test]
+    fn in_process_cancel_reaches_a_queued_request() {
+        let shard = InProcessShard::spawn(
+            ServiceConfig::default(),
+            PsoConfig { seed: 5, epochs: 50_000, ..Default::default() },
+        )
+        .unwrap();
+        // a long-running episode keeps the controller busy…
+        let mut q = crate::util::MatF::zeros(4, 4);
+        q[(0, 1)] = 1.0;
+        q[(0, 2)] = 1.0;
+        q[(0, 3)] = 1.0;
+        let star = MatchProblem::from_dense(
+            &crate::util::MatF::full(4, 8, 1.0),
+            &q,
+            &gen_chain(8, NodeKind::Universal).adjacency(),
+        );
+        shard.submit(1, star, Priority::Normal, None, None).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        shard.cancel(1);
+        let resp = shard.wait_response(1).unwrap();
+        assert_eq!(resp.path, crate::coordinator::MatchPath::Cancelled);
+    }
+
+    #[test]
+    fn worker_binary_resolves_or_errors_helpfully() {
+        // under `cargo test` the current exe is a test binary, so the
+        // resolver either finds a sibling immsched or explains how to
+        // get one — it must never return a path that does not exist
+        match worker_binary() {
+            Ok(path) => assert!(path.exists(), "resolved worker {} missing", path.display()),
+            Err(e) => assert!(e.to_string().contains("worker binary"), "{e:#}"),
+        }
+    }
+}

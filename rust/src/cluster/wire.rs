@@ -1,0 +1,648 @@
+//! The shard wire protocol: a versioned, schema-tagged, serializable
+//! form of the cluster/service boundary.
+//!
+//! Everything a [`super::transport::ShardTransport`] moves between the
+//! front router and a shard is expressed here as two explicit message
+//! enums — [`ShardMsg`] (router → shard: hello/submit/cancel/stats/
+//! drain; a resubmission is a `Submit` carrying a `resume` snapshot) and
+//! [`ShardReply`] (shard → router: ready/response/stats/drained/error)
+//! — encoded as [`Json`] documents framed with a 4-byte big-endian
+//! length prefix.  The same `MatchService` semantics run on both sides;
+//! only the transport differs.
+//!
+//! Encoding rules, chosen so a warm-start [`SwarmSnapshot`] that
+//! crosses a process boundary resumes **bit-identically**:
+//!
+//! * every f32 travels as its u32 bit pattern (JSON numbers are f64 —
+//!   a u32 is exact, while a pretty-printed float would corrupt
+//!   ±inf/NaN and is one rounding bug away from breaking resume);
+//! * 64-bit words that may exceed 2^53 (request ids, seeds, budgets,
+//!   RNG state) travel as 16-digit hex strings;
+//! * graphs travel sparse: CSR edge lists and per-row mask candidate
+//!   columns — never a dense matrix;
+//! * every frame carries the [`WIRE_SCHEMA`] tag and a `"t"` type tag;
+//!   a schema mismatch, an unknown type, an oversized frame, or a
+//!   truncated frame is a loud decode error, never a guess.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{
+    ControllerStats, MatchPath, MatchProblem, MatchResponse, RequestId, RouterStats,
+    ServiceConfig, ServiceStats,
+};
+use crate::graph::Csr;
+use crate::matcher::{BitMask, Mapping, PsoConfig, SwarmSnapshot};
+use crate::scheduler::Priority;
+use crate::util::json::{
+    decode_opt_indices, encode_opt_indices, f32_bits, get_bool, get_dim, get_f32_bits,
+    get_hex_u64, get_str, get_u64, get_usize, hex_u64, Json,
+};
+
+/// Protocol version tag carried by every frame.  Bump on any layout
+/// change: a mixed-version router/worker pair must fail the handshake,
+/// not mis-decode swarm state.
+pub const WIRE_SCHEMA: &str = "immsched.shard-wire/v1";
+
+/// Hard ceiling on one frame's payload (64 MiB).  The largest real
+/// payload is a `huge`-class problem + snapshot (a few MiB of JSON); a
+/// length prefix beyond this is a corrupt or hostile stream and is
+/// rejected before any allocation.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+// ---------------------------------------------------------------------------
+// message enums
+// ---------------------------------------------------------------------------
+
+/// Router → shard.
+///
+/// `Submit` dwarfs the control variants by design — it carries the
+/// whole problem + optional snapshot, and boxing it would only move
+/// the indirection into every transport hot path.
+#[allow(clippy::large_enum_variant)]
+#[derive(Clone, Debug)]
+pub enum ShardMsg {
+    /// Handshake: must be the first frame on a connection.  Carries the
+    /// shard's full configuration so a worker process needs no
+    /// out-of-band config channel.
+    Hello { service: ServiceConfig, pso: PsoConfig },
+    /// Submit (or, with `resume`, resubmit) one request.  `timeout` is
+    /// relative seconds from receipt — absolute deadlines never cross
+    /// the boundary, because the two sides do not share a clock.
+    Submit {
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<SwarmSnapshot>,
+    },
+    /// Cancel the identified request at its next epoch barrier.
+    Cancel { id: RequestId },
+    /// Request a [`ShardReply::Stats`] load report.
+    Stats,
+    /// Finish everything in flight, answer [`ShardReply::Drained`],
+    /// then exit.
+    Drain,
+}
+
+/// Shard → router.
+#[allow(clippy::large_enum_variant)]
+#[derive(Clone, Debug)]
+pub enum ShardReply {
+    /// Handshake acknowledgement (echoes the protocol schema).
+    Ready { schema: String },
+    /// A request's final answer.  Out-of-order by design: the shard's
+    /// admission queue reorders by priority/deadline.
+    Response(MatchResponse),
+    /// Non-blocking load report — the routing policies' input.
+    Stats(ShardStatus),
+    /// Drain complete; `answered` counts responses sent over this
+    /// connection's lifetime.
+    Drained { answered: u64 },
+    /// A handshake- or protocol-level failure (bad hello, duplicate
+    /// hello).  Per-request failures are answered as shed
+    /// [`ShardReply::Response`]s instead — an error carries no request
+    /// id, so it could never release the right waiter.  Undecodable
+    /// *frames* are connection-fatal on both sides: out-of-sync framing
+    /// poisons everything after it.
+    Error { context: String },
+}
+
+/// One shard's routing-relevant load, as reported by its transport —
+/// the only view `RoutePolicy` implementations see, so in-process and
+/// out-of-process shards are indistinguishable to routing.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStatus {
+    /// Queued requests not yet popped for service.
+    pub queue_depth: usize,
+    /// Priority of the episode currently on the controller, if any.
+    pub in_flight: Option<Priority>,
+    /// Full service telemetry (controller + admission router).
+    pub stats: ServiceStats,
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame and flush (the peer blocks on it).
+pub fn write_frame<W: Write>(w: &mut W, doc: &Json) -> Result<()> {
+    let payload = doc.render();
+    let bytes = payload.as_bytes();
+    anyhow::ensure!(bytes.len() <= MAX_FRAME_BYTES, "frame of {} bytes too large", bytes.len());
+    w.write_all(&(bytes.len() as u32).to_be_bytes()).context("writing frame length")?;
+    w.write_all(bytes).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame.  `Ok(None)` on clean EOF *between* frames; EOF
+/// mid-length or mid-payload is a truncation error, as is a length
+/// prefix beyond [`MAX_FRAME_BYTES`] or an unparseable payload.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    match r.read(&mut len)? {
+        0 => return Ok(None),
+        mut got => {
+            while got < 4 {
+                let more = r.read(&mut len[got..])?;
+                if more == 0 {
+                    bail!("truncated frame: EOF inside the length prefix ({got}/4 bytes)");
+                }
+                got += more;
+            }
+        }
+    }
+    let len = u32::from_be_bytes(len) as usize;
+    anyhow::ensure!(
+        len <= MAX_FRAME_BYTES,
+        "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("truncated frame: EOF inside a {len}-byte payload"))?;
+    let text = std::str::from_utf8(&payload).context("frame payload is not UTF-8")?;
+    Ok(Some(Json::parse(text).context("frame payload is not valid JSON")?))
+}
+
+// ---------------------------------------------------------------------------
+// field helpers (bit-exact primitives live in util::json — shared with
+// SwarmSnapshot serde so the two codecs cannot drift)
+// ---------------------------------------------------------------------------
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    // a non-finite f64 renders as null (see util::json); decode it back
+    // to NaN rather than failing — it is telemetry, not control state
+    match v.get(key) {
+        Some(Json::Null) => Ok(f64::NAN),
+        Some(x) => x.as_f64().with_context(|| format!("field {key:?} is not a number")),
+        None => bail!("missing numeric field {key:?}"),
+    }
+}
+
+fn encode_priority(p: Priority) -> Json {
+    Json::from(p.name())
+}
+
+fn decode_priority(v: &Json, key: &str) -> Result<Priority> {
+    let name = get_str(v, key)?;
+    Priority::from_name(name).with_context(|| format!("unknown priority {name:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// graph / problem codec
+// ---------------------------------------------------------------------------
+
+/// CSR adjacency as `{nodes, edges: [u0, v0, u1, v1, ...]}` (row-major
+/// edge order, the form [`Csr::edges`] emits).
+pub fn encode_csr(csr: &Csr) -> Json {
+    let mut flat = Vec::with_capacity(csr.edge_count() * 2);
+    for (u, v) in csr.edges() {
+        flat.push(Json::Num(u as f64));
+        flat.push(Json::Num(v as f64));
+    }
+    Json::obj(vec![("nodes", Json::from(csr.nodes())), ("edges", Json::Arr(flat))])
+}
+
+/// Inverse of [`encode_csr`].
+pub fn decode_csr(v: &Json) -> Result<Csr> {
+    let nodes = get_dim(v, "nodes")?;
+    let flat = v.get("edges").and_then(Json::as_array).context("csr missing edges")?;
+    anyhow::ensure!(flat.len() % 2 == 0, "csr edge list has an odd element count");
+    let mut pairs = Vec::with_capacity(flat.len() / 2);
+    for uv in flat.chunks_exact(2) {
+        let endpoint = |x: &Json| -> Result<u32> {
+            let x = x.as_f64().context("csr edge endpoint not a number")?;
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0 && x <= u32::MAX as f64,
+                "csr edge endpoint out of range"
+            );
+            Ok(x as u32)
+        };
+        pairs.push((endpoint(&uv[0])?, endpoint(&uv[1])?));
+    }
+    Csr::from_edge_pairs(nodes, &pairs)
+}
+
+/// Packed compatibility mask as `{rows, cols, set: [[cols...], ...]}` —
+/// one candidate-column list per query row.
+pub fn encode_mask(mask: &BitMask) -> Json {
+    let rows: Vec<Json> = (0..mask.rows())
+        .map(|i| {
+            Json::Arr(
+                (0..mask.cols())
+                    .filter(|&j| mask.get(i, j))
+                    .map(|j| Json::Num(j as f64))
+                    .collect(),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("rows", Json::from(mask.rows())),
+        ("cols", Json::from(mask.cols())),
+        ("set", Json::Arr(rows)),
+    ])
+}
+
+/// Largest mask the decoder will allocate (cells = rows × cols); the
+/// per-dimension cap alone would still let a 60-byte frame demand a
+/// 2^40-cell bitset.
+const MAX_MASK_CELLS: usize = 1 << 28;
+
+/// Inverse of [`encode_mask`].
+pub fn decode_mask(v: &Json) -> Result<BitMask> {
+    let rows = get_dim(v, "rows")?;
+    let cols = get_dim(v, "cols")?;
+    let cells = rows.checked_mul(cols).context("mask shape overflows")?;
+    anyhow::ensure!(
+        cells <= MAX_MASK_CELLS,
+        "mask of {cells} cells exceeds the {MAX_MASK_CELLS}-cell cap"
+    );
+    let set = v.get("set").and_then(Json::as_array).context("mask missing set rows")?;
+    anyhow::ensure!(set.len() == rows, "mask has {} set rows, expected {rows}", set.len());
+    let mut mask = BitMask::zeros(rows, cols);
+    for (i, row) in set.iter().enumerate() {
+        for j in row.as_array().context("mask row must be an array")? {
+            let j = j.as_f64().context("mask column not a number")?;
+            anyhow::ensure!(
+                j >= 0.0 && j.fract() == 0.0 && (j as usize) < cols,
+                "mask column {j} outside {cols} columns"
+            );
+            mask.set(i, j as usize);
+        }
+    }
+    Ok(mask)
+}
+
+/// One owned matching instance (`query`/`target` CSR + packed mask).
+pub fn encode_problem(p: &MatchProblem) -> Json {
+    Json::obj(vec![
+        ("query", encode_csr(&p.query)),
+        ("target", encode_csr(&p.target)),
+        ("mask", encode_mask(&p.mask)),
+    ])
+}
+
+/// Inverse of [`encode_problem`]; the mask shape must match the graphs.
+pub fn decode_problem(v: &Json) -> Result<MatchProblem> {
+    let query = decode_csr(v.get("query").context("problem missing query")?)?;
+    let target = decode_csr(v.get("target").context("problem missing target")?)?;
+    let mask = decode_mask(v.get("mask").context("problem missing mask")?)?;
+    anyhow::ensure!(
+        mask.rows() == query.nodes() && mask.cols() == target.nodes(),
+        "mask {}x{} does not match query {} / target {} vertices",
+        mask.rows(),
+        mask.cols(),
+        query.nodes(),
+        target.nodes()
+    );
+    Ok(MatchProblem { query, target, mask })
+}
+
+// ---------------------------------------------------------------------------
+// config / stats / response codec
+// ---------------------------------------------------------------------------
+
+fn encode_service_config(cfg: &ServiceConfig) -> Json {
+    Json::obj(vec![
+        ("queue_depth", Json::from(cfg.queue_depth)),
+        ("epoch_quota", cfg.epoch_quota.map_or(Json::Null, Json::from)),
+    ])
+}
+
+fn decode_service_config(v: &Json) -> Result<ServiceConfig> {
+    Ok(ServiceConfig {
+        queue_depth: get_usize(v, "queue_depth")?,
+        epoch_quota: match v.get("epoch_quota") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(get_usize(v, "epoch_quota")?),
+        },
+    })
+}
+
+fn encode_pso_config(cfg: &PsoConfig) -> Json {
+    Json::obj(vec![
+        ("particles", Json::from(cfg.particles)),
+        ("epochs", Json::from(cfg.epochs)),
+        ("steps", Json::from(cfg.steps)),
+        ("w", f32_bits(cfg.w)),
+        ("c1", f32_bits(cfg.c1)),
+        ("c2", f32_bits(cfg.c2)),
+        ("c3", f32_bits(cfg.c3)),
+        ("elite", Json::from(cfg.elite)),
+        ("relaxed", Json::from(cfg.relaxed)),
+        ("early_exit", Json::from(cfg.early_exit)),
+        ("repair_budget", hex_u64(cfg.repair_budget)),
+        ("threads", Json::from(cfg.threads)),
+        ("seed", hex_u64(cfg.seed)),
+    ])
+}
+
+fn decode_pso_config(v: &Json) -> Result<PsoConfig> {
+    Ok(PsoConfig {
+        particles: get_usize(v, "particles")?,
+        epochs: get_usize(v, "epochs")?,
+        steps: get_usize(v, "steps")?,
+        w: get_f32_bits(v, "w")?,
+        c1: get_f32_bits(v, "c1")?,
+        c2: get_f32_bits(v, "c2")?,
+        c3: get_f32_bits(v, "c3")?,
+        elite: get_usize(v, "elite")?,
+        relaxed: get_bool(v, "relaxed")?,
+        early_exit: get_bool(v, "early_exit")?,
+        repair_budget: get_hex_u64(v, "repair_budget")?,
+        threads: get_usize(v, "threads")?,
+        seed: get_hex_u64(v, "seed")?,
+    })
+}
+
+fn encode_service_stats(s: &ServiceStats) -> Json {
+    let c = s.controller;
+    let r = s.router;
+    Json::obj(vec![
+        (
+            "controller",
+            Json::obj(vec![
+                ("requests", Json::from(c.requests)),
+                ("matched", Json::from(c.matched)),
+                ("fallbacks", Json::from(c.fallbacks)),
+                ("rejected", Json::from(c.rejected)),
+                ("cancelled", Json::from(c.cancelled)),
+                ("resumed", Json::from(c.resumed)),
+                ("epochs_total", Json::from(c.epochs_total)),
+            ]),
+        ),
+        (
+            "router",
+            Json::obj(vec![
+                ("admitted", Json::from(r.admitted)),
+                ("shed_expired", Json::from(r.shed_expired)),
+                ("shed_capacity", Json::from(r.shed_capacity)),
+                ("served", Json::from(r.served)),
+                ("depth", Json::from(r.depth)),
+            ]),
+        ),
+    ])
+}
+
+fn decode_service_stats(v: &Json) -> Result<ServiceStats> {
+    let c = v.get("controller").context("stats missing controller")?;
+    let r = v.get("router").context("stats missing router")?;
+    Ok(ServiceStats {
+        controller: ControllerStats {
+            requests: get_u64(c, "requests")?,
+            matched: get_u64(c, "matched")?,
+            fallbacks: get_u64(c, "fallbacks")?,
+            rejected: get_u64(c, "rejected")?,
+            cancelled: get_u64(c, "cancelled")?,
+            resumed: get_u64(c, "resumed")?,
+            epochs_total: get_u64(c, "epochs_total")?,
+        },
+        router: RouterStats {
+            admitted: get_u64(r, "admitted")?,
+            shed_expired: get_u64(r, "shed_expired")?,
+            shed_capacity: get_u64(r, "shed_capacity")?,
+            served: get_u64(r, "served")?,
+            depth: get_u64(r, "depth")?,
+        },
+    })
+}
+
+/// A full [`MatchResponse`] (fitness as f32 bits, id as hex, optional
+/// snapshot through [`SwarmSnapshot::to_json`]).
+pub fn encode_response(resp: &MatchResponse) -> Json {
+    Json::obj(vec![
+        ("id", hex_u64(resp.id)),
+        ("mappings", Json::Arr(resp.mappings.iter().map(|mp| encode_opt_indices(mp)).collect())),
+        ("best_fitness", f32_bits(resp.best_fitness)),
+        ("epochs_run", Json::from(resp.epochs_run)),
+        ("host_seconds", Json::from(resp.host_seconds)),
+        ("path", Json::from(resp.path.name())),
+        ("resumed", Json::from(resp.resumed)),
+        ("snapshot", resp.snapshot.as_ref().map_or(Json::Null, SwarmSnapshot::to_json)),
+    ])
+}
+
+/// Inverse of [`encode_response`].
+pub fn decode_response(v: &Json) -> Result<MatchResponse> {
+    let path_name = get_str(v, "path")?;
+    Ok(MatchResponse {
+        id: get_hex_u64(v, "id")?,
+        mappings: v
+            .get("mappings")
+            .and_then(Json::as_array)
+            .context("response missing mappings")?
+            .iter()
+            .map(decode_opt_indices)
+            .collect::<Result<Vec<Mapping>>>()?,
+        best_fitness: get_f32_bits(v, "best_fitness")?,
+        epochs_run: get_usize(v, "epochs_run")?,
+        host_seconds: get_f64(v, "host_seconds")?,
+        path: MatchPath::from_name(path_name)
+            .with_context(|| format!("unknown match path {path_name:?}"))?,
+        resumed: get_bool(v, "resumed")?,
+        snapshot: match v.get("snapshot") {
+            None | Some(Json::Null) => None,
+            Some(snap) => Some(SwarmSnapshot::from_json(snap)?),
+        },
+    })
+}
+
+fn encode_status(status: &ShardStatus) -> Json {
+    Json::obj(vec![
+        ("queue_depth", Json::from(status.queue_depth)),
+        ("in_flight", status.in_flight.map_or(Json::Null, encode_priority)),
+        ("stats", encode_service_stats(&status.stats)),
+    ])
+}
+
+fn decode_status(v: &Json) -> Result<ShardStatus> {
+    Ok(ShardStatus {
+        queue_depth: get_usize(v, "queue_depth")?,
+        in_flight: match v.get("in_flight") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(decode_priority(v, "in_flight")?),
+        },
+        stats: decode_service_stats(v.get("stats").context("status missing stats")?)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// message codec
+// ---------------------------------------------------------------------------
+
+fn envelope(t: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("schema", Json::from(WIRE_SCHEMA)), ("t", Json::from(t))];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+fn check_envelope(v: &Json) -> Result<&str> {
+    let schema = get_str(v, "schema")?;
+    anyhow::ensure!(
+        schema == WIRE_SCHEMA,
+        "wire schema mismatch: peer speaks {schema:?}, this side {WIRE_SCHEMA:?}"
+    );
+    get_str(v, "t")
+}
+
+/// Encode one router → shard message.
+pub fn encode_msg(msg: &ShardMsg) -> Json {
+    match msg {
+        ShardMsg::Hello { service, pso } => envelope(
+            "hello",
+            vec![("service", encode_service_config(service)), ("pso", encode_pso_config(pso))],
+        ),
+        ShardMsg::Submit { id, problem, priority, timeout, resume } => envelope(
+            "submit",
+            vec![
+                ("id", hex_u64(*id)),
+                ("priority", encode_priority(*priority)),
+                ("timeout", timeout.map_or(Json::Null, Json::from)),
+                ("resume", resume.as_ref().map_or(Json::Null, SwarmSnapshot::to_json)),
+                ("problem", encode_problem(problem)),
+            ],
+        ),
+        ShardMsg::Cancel { id } => envelope("cancel", vec![("id", hex_u64(*id))]),
+        ShardMsg::Stats => envelope("stats", vec![]),
+        ShardMsg::Drain => envelope("drain", vec![]),
+    }
+}
+
+/// Decode one router → shard message.
+pub fn decode_msg(v: &Json) -> Result<ShardMsg> {
+    Ok(match check_envelope(v)? {
+        "hello" => ShardMsg::Hello {
+            service: decode_service_config(v.get("service").context("hello missing service")?)?,
+            pso: decode_pso_config(v.get("pso").context("hello missing pso")?)?,
+        },
+        "submit" => ShardMsg::Submit {
+            id: get_hex_u64(v, "id")?,
+            problem: decode_problem(v.get("problem").context("submit missing problem")?)?,
+            priority: decode_priority(v, "priority")?,
+            timeout: match v.get("timeout") {
+                None | Some(Json::Null) => None,
+                Some(x) => Some(x.as_f64().context("timeout must be a number")?),
+            },
+            resume: match v.get("resume") {
+                None | Some(Json::Null) => None,
+                Some(snap) => Some(SwarmSnapshot::from_json(snap)?),
+            },
+        },
+        "cancel" => ShardMsg::Cancel { id: get_hex_u64(v, "id")? },
+        "stats" => ShardMsg::Stats,
+        "drain" => ShardMsg::Drain,
+        other => bail!("unknown shard message type {other:?}"),
+    })
+}
+
+/// Encode one shard → router reply.
+pub fn encode_reply(reply: &ShardReply) -> Json {
+    match reply {
+        ShardReply::Ready { schema } => {
+            envelope("ready", vec![("proto", Json::from(schema.as_str()))])
+        }
+        ShardReply::Response(resp) => {
+            envelope("response", vec![("response", encode_response(resp))])
+        }
+        ShardReply::Stats(status) => envelope("stats", vec![("status", encode_status(status))]),
+        ShardReply::Drained { answered } => {
+            envelope("drained", vec![("answered", Json::from(*answered))])
+        }
+        ShardReply::Error { context } => {
+            envelope("error", vec![("context", Json::from(context.as_str()))])
+        }
+    }
+}
+
+/// Decode one shard → router reply.
+pub fn decode_reply(v: &Json) -> Result<ShardReply> {
+    Ok(match check_envelope(v)? {
+        "ready" => ShardReply::Ready { schema: get_str(v, "proto")?.to_string() },
+        "response" => ShardReply::Response(decode_response(
+            v.get("response").context("reply missing response")?,
+        )?),
+        "stats" => {
+            ShardReply::Stats(decode_status(v.get("status").context("reply missing status")?)?)
+        }
+        "drained" => ShardReply::Drained { answered: get_u64(v, "answered")? },
+        "error" => ShardReply::Error { context: get_str(v, "context")?.to_string() },
+        other => bail!("unknown shard reply type {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen_chain, NodeKind};
+
+    fn chain_problem(n: usize, m: usize) -> MatchProblem {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        MatchProblem::from_dags(&qd, &gd)
+    }
+
+    #[test]
+    fn problem_round_trips() {
+        let p = chain_problem(5, 11);
+        let back = decode_problem(&encode_problem(&p)).unwrap();
+        assert_eq!(back.query, p.query);
+        assert_eq!(back.target, p.target);
+        assert_eq!(back.mask, p.mask);
+    }
+
+    #[test]
+    fn configs_round_trip_bit_exactly() {
+        let pso = PsoConfig { seed: u64::MAX - 3, repair_budget: 1 << 60, ..Default::default() };
+        let back = decode_pso_config(&encode_pso_config(&pso)).unwrap();
+        assert_eq!(back.seed, pso.seed, "seeds past 2^53 must survive");
+        assert_eq!(back.repair_budget, pso.repair_budget);
+        assert_eq!(back.w.to_bits(), pso.w.to_bits());
+        let svc = ServiceConfig { queue_depth: 7, epoch_quota: Some(3) };
+        let back = decode_service_config(&encode_service_config(&svc)).unwrap();
+        assert_eq!((back.queue_depth, back.epoch_quota), (7, Some(3)));
+    }
+
+    #[test]
+    fn frame_round_trip_and_eof() {
+        let mut buf = Vec::new();
+        let doc = encode_msg(&ShardMsg::Stats);
+        write_frame(&mut buf, &doc).unwrap();
+        write_frame(&mut buf, &encode_msg(&ShardMsg::Drain)).unwrap();
+        let mut r = &buf[..];
+        let first = decode_msg(&read_frame(&mut r).unwrap().unwrap()).unwrap();
+        assert!(matches!(first, ShardMsg::Stats));
+        let second = decode_msg(&read_frame(&mut r).unwrap().unwrap()).unwrap();
+        assert!(matches!(second, ShardMsg::Drain));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF between frames");
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &encode_msg(&ShardMsg::Stats)).unwrap();
+        // EOF inside the payload
+        let mut cut = &buf[..buf.len() - 3];
+        assert!(read_frame(&mut cut).unwrap_err().to_string().contains("truncated"));
+        // EOF inside the length prefix
+        let mut cut = &buf[..2];
+        assert!(read_frame(&mut cut).unwrap_err().to_string().contains("length prefix"));
+        // oversized length prefix is rejected before allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_be_bytes());
+        huge.extend_from_slice(b"xx");
+        let mut r = &huge[..];
+        assert!(read_frame(&mut r).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn schema_mismatch_fails_loudly() {
+        let mut doc = encode_msg(&ShardMsg::Stats);
+        if let Json::Obj(fields) = &mut doc {
+            fields[0].1 = Json::from("immsched.shard-wire/v0");
+        }
+        let err = decode_msg(&doc).unwrap_err().to_string();
+        assert!(err.contains("schema mismatch"), "{err}");
+    }
+}

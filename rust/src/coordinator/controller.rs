@@ -76,6 +76,22 @@ impl MatchPath {
             MatchPath::Shed => "shed",
         }
     }
+
+    /// Inverse of [`Self::name`] (`None` for unknown names) — the wire
+    /// protocol decodes response paths through this.
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "pjrt" => MatchPath::Pjrt,
+            "native-epoch" => MatchPath::NativeEpoch,
+            "quantized" => MatchPath::NativeFallback,
+            "ullmann" => MatchPath::Ullmann,
+            "vf2" => MatchPath::Vf2,
+            "rejected" => MatchPath::Rejected,
+            "cancelled" => MatchPath::Cancelled,
+            "shed" => MatchPath::Shed,
+            _ => return None,
+        })
+    }
 }
 
 /// Result of one request's subgraph-matching episode.

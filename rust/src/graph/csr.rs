@@ -43,6 +43,33 @@ impl Csr {
         csr
     }
 
+    /// Rebuild a view from an explicit edge list sorted by source
+    /// vertex (the row-major order [`Self::edges`] emits — the wire
+    /// codec's interchange form).  Per-row successor order is preserved
+    /// verbatim, so `from_edge_pairs(nodes, edges().collect())` is the
+    /// identity.  Out-of-range endpoints and unsorted sources are
+    /// decode errors, never silent truncation.
+    pub fn from_edge_pairs(nodes: usize, pairs: &[(u32, u32)]) -> anyhow::Result<Self> {
+        let mut csr = Csr::with_capacity(nodes, pairs.len());
+        csr.nodes = nodes;
+        let mut row = 0usize;
+        for &(u, v) in pairs {
+            let (u, v) = (u as usize, v as usize);
+            anyhow::ensure!(u < nodes && v < nodes, "edge ({u}, {v}) outside {nodes} vertices");
+            anyhow::ensure!(u >= row, "edge list not sorted by source vertex at ({u}, {v})");
+            while row < u {
+                csr.row_ptr.push(csr.col.len() as u32);
+                row += 1;
+            }
+            csr.col.push(v as u32);
+        }
+        while row < nodes {
+            csr.row_ptr.push(csr.col.len() as u32);
+            row += 1;
+        }
+        Ok(csr)
+    }
+
     /// CSR view of a dense square {0,1} adjacency matrix.
     pub fn from_dense(a: &MatF) -> Self {
         assert_eq!(a.rows(), a.cols(), "adjacency must be square");
@@ -151,6 +178,29 @@ mod tests {
         let csr = Csr::from_dag(&diamond());
         let edges: Vec<(u32, u32)> = csr.edges().collect();
         assert_eq!(edges, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn edge_pairs_round_trip_is_identity() {
+        let mut rng = Rng::new(29);
+        for _ in 0..10 {
+            let d = gen_random_dag(11, 0.35, &mut rng, NodeKind::Compute);
+            let csr = Csr::from_dag(&d);
+            let pairs: Vec<(u32, u32)> = csr.edges().collect();
+            let back = Csr::from_edge_pairs(csr.nodes(), &pairs).unwrap();
+            assert_eq!(back, csr);
+        }
+        // trailing isolated vertices must keep their (empty) rows
+        let back = Csr::from_edge_pairs(5, &[(0, 1)]).unwrap();
+        assert_eq!(back.nodes(), 5);
+        assert_eq!(back.neighbors(4), &[] as &[u32]);
+    }
+
+    #[test]
+    fn edge_pairs_reject_malformed_lists() {
+        assert!(Csr::from_edge_pairs(3, &[(0, 7)]).is_err(), "out-of-range target");
+        assert!(Csr::from_edge_pairs(3, &[(9, 0)]).is_err(), "out-of-range source");
+        assert!(Csr::from_edge_pairs(3, &[(2, 0), (0, 1)]).is_err(), "unsorted sources");
     }
 
     #[test]

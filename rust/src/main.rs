@@ -49,6 +49,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("match") => cmd_match(&args[1..]),
         Some("cluster") => cmd_cluster(&args[1..]),
+        Some("shard-worker") => cmd_shard_worker(),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -72,8 +73,13 @@ fn print_help() {
                                             serve one urgent-task interrupt\n\
            cluster [--shards N] [--policy round-robin|least-queue|deadline-aware]\n\
                    [--rate R] [--horizon S] [--class simple|middle|complex]\n\
-                   [--process poisson|bursty] [--seed S]\n\
+                   [--process poisson|bursty] [--seed S] [--process-shards]\n\
                                             open-loop trace against a sharded cluster\n\
+                                            (--process-shards: one shard-worker child\n\
+                                             process per shard over the wire protocol)\n\
+           shard-worker                     host one match-service shard over framed\n\
+                                            stdio (spawned by --process-shards; see\n\
+                                            rust/README.md for the wire contract)\n\
            info                             platforms, models, artifacts\n\
            help                             this text\n\
          \n\
@@ -358,6 +364,14 @@ fn service_summary_table(stats: &ServiceStats) -> Table {
     t
 }
 
+/// Host one `MatchService` shard over length-prefixed wire frames on
+/// stdin/stdout — the child process half of `--process-shards`.  The
+/// parent speaks first (`hello` with the shard config); logs go to
+/// stderr, which the parent inherits.
+fn cmd_shard_worker() -> Result<()> {
+    immsched::cluster::transport::worker_serve(std::io::stdin(), std::io::stdout())
+}
+
 fn cmd_cluster(args: &[String]) -> Result<()> {
     let mut shards = 2usize;
     let mut policy_name = String::from("deadline-aware");
@@ -366,10 +380,15 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     let mut class = WorkloadClass::Simple;
     let mut process = ArrivalProcess::bursty_default();
     let mut seed = 42u64;
+    let mut process_shards = false;
     let mut i = 0;
     while i < args.len() {
         let value = |i: usize| args.get(i + 1).context("option needs a value");
         match args[i].as_str() {
+            "--process-shards" => {
+                process_shards = true;
+                i += 1;
+            }
             "--shards" => {
                 shards = value(i)?.parse()?;
                 i += 2;
@@ -424,21 +443,24 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     };
     let schedule = schedule_from_trace(&dcfg);
     println!(
-        "cluster: {} shards ({} policy), {} {} arrivals over {horizon}s — {} requests",
+        "cluster: {} {} shards ({} policy), {} {} arrivals over {horizon}s — {} requests",
         shards,
+        if process_shards { "out-of-process" } else { "in-process" },
         policy_name,
         rate,
         process.name(),
         schedule.len()
     );
-    let cluster = MatchCluster::spawn(
-        ClusterConfig {
-            shards,
-            pso: PsoConfig { seed, ..Default::default() },
-            ..Default::default()
-        },
-        policy,
-    )?;
+    let ccfg = ClusterConfig {
+        shards,
+        pso: PsoConfig { seed, ..Default::default() },
+        ..Default::default()
+    };
+    let cluster = if process_shards {
+        MatchCluster::spawn_process_shards(ccfg, policy)?
+    } else {
+        MatchCluster::spawn(ccfg, policy)?
+    };
     let report = run_open_loop(&cluster, &schedule, &dcfg)?;
     print!("{}", report.table().render());
     println!(

@@ -33,6 +33,7 @@
 //! given seed: particle initialization and RNG forks consume the master
 //! stream in particle order, and the trace merge runs on one thread.
 
+use crate::util::json::Json;
 use crate::util::{row_normalize_in_place, MatF, Rng};
 
 use super::consensus::elite_consensus_flat;
@@ -117,7 +118,7 @@ impl Default for PsoConfig {
 /// S*/S̄ are stored unpadded (n×m row-major) so a snapshot survives
 /// migration between shards whose backends pad to different size
 /// classes.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SwarmSnapshot {
     /// Query vertex count the snapshot was taken for.
     pub n: usize,
@@ -147,6 +148,97 @@ impl SwarmSnapshot {
     /// caller may have resubmitted a different problem under an old id.
     pub fn fits(&self, n: usize, m: usize) -> bool {
         self.n == n && self.m == m && self.s_star.len() == n * m && self.s_bar.len() == n * m
+    }
+
+    /// Serialize for the shard wire protocol.  Encodings are
+    /// **bit-exact**, never lossy-pretty (see the codec primitives in
+    /// [`crate::util::json`]): f32 values travel as their u32 bit
+    /// patterns (so ±inf/NaN and every subnormal survive — a JSON float
+    /// would turn them into `null`) and the 64-bit RNG words as hex
+    /// strings (f64-backed JSON numbers lose integer fidelity past
+    /// 2^53).  A snapshot that crosses a process boundary through this
+    /// codec resumes bit-identically to a same-process resume.
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::{encode_opt_indices, f32_bits, f32_bits_arr, hex_u64};
+        let mappings = self.mappings.iter().map(|mp| encode_opt_indices(mp)).collect();
+        Json::obj(vec![
+            ("n", Json::from(self.n)),
+            ("m", Json::from(self.m)),
+            ("s_star", f32_bits_arr(&self.s_star)),
+            ("s_bar", f32_bits_arr(&self.s_bar)),
+            ("best_fitness", f32_bits(self.best_fitness)),
+            ("have_star", Json::from(self.have_star)),
+            ("epochs_done", Json::from(self.epochs_done)),
+            ("rng", Json::Arr(self.rng.state().iter().map(|&w| hex_u64(w)).collect())),
+            ("mappings", Json::Arr(mappings)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`].  Shape inconsistencies (S*/S̄ not
+    /// n×m, out-of-cap dimensions, an impossible all-zero RNG state)
+    /// are decode errors: a malformed snapshot must be rejected at the
+    /// boundary, not warm-start a subtly corrupted episode.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        use crate::util::json::{
+            decode_opt_indices, get_bool, get_dim, get_f32_bits, get_f32_bits_arr, get_usize,
+        };
+        use anyhow::Context as _;
+        let (n, m) = (get_dim(v, "n")?, get_dim(v, "m")?);
+        let cells = n.checked_mul(m).context("snapshot shape overflows")?;
+        let s_star = get_f32_bits_arr(v, "s_star")?;
+        let s_bar = get_f32_bits_arr(v, "s_bar")?;
+        anyhow::ensure!(
+            s_star.len() == cells && s_bar.len() == cells,
+            "snapshot S*/S̄ shape mismatch: {}x{} vs {} / {} entries",
+            n,
+            m,
+            s_star.len(),
+            s_bar.len()
+        );
+        let rng_words = v
+            .get("rng")
+            .and_then(Json::as_array)
+            .context("snapshot missing rng state")?;
+        anyhow::ensure!(rng_words.len() == 4, "rng state must be 4 words");
+        let mut state = [0u64; 4];
+        for (slot, w) in state.iter_mut().zip(rng_words) {
+            let hex = w.as_str().context("rng word must be a hex string")?;
+            *slot = u64::from_str_radix(hex, 16)
+                .with_context(|| format!("bad rng word {hex:?}"))?;
+        }
+        // the all-zero state is xoshiro's fixed point — no legitimate
+        // stream ever reaches it, so it can only mean corruption
+        anyhow::ensure!(state != [0; 4], "snapshot rng state is all-zero (corrupt)");
+        let mappings = v
+            .get("mappings")
+            .and_then(Json::as_array)
+            .context("snapshot missing mappings")?
+            .iter()
+            .map(decode_opt_indices)
+            .collect::<anyhow::Result<Vec<Mapping>>>()?;
+        // the feasible set must actually fit the problem shape — a
+        // garbage mapping that decoded "successfully" would otherwise
+        // surface as a matched() response pointing at vertices the
+        // target graph does not have
+        for mp in &mappings {
+            anyhow::ensure!(mp.len() == n, "snapshot mapping has {} slots, expected {n}", mp.len());
+            for &slot in mp {
+                if let Some(vtx) = slot {
+                    anyhow::ensure!(vtx < m, "snapshot mapping targets vertex {vtx} >= {m}");
+                }
+            }
+        }
+        Ok(Self {
+            n,
+            m,
+            s_star,
+            s_bar,
+            best_fitness: get_f32_bits(v, "best_fitness")?,
+            have_star: get_bool(v, "have_star")?,
+            epochs_done: get_usize(v, "epochs_done")?,
+            rng: Rng::from_state(state),
+            mappings,
+        })
     }
 }
 

@@ -490,12 +490,34 @@ pub fn append_bench_entry(
     entry: crate::util::json::Json,
     fresh: bool,
 ) -> anyhow::Result<usize> {
+    append_bench_entry_pruned(path, expected_schema, entry, fresh, &|_| false)
+}
+
+/// [`append_bench_entry`] that first drops accumulated entries matching
+/// `prune` — how `bench_matcher`'s first *measured* run supersedes the
+/// analytic `measured: false` seed estimate instead of letting the two
+/// sit side by side in the trajectory forever.
+pub fn append_bench_entry_pruned(
+    path: &str,
+    expected_schema: &str,
+    entry: crate::util::json::Json,
+    fresh: bool,
+    prune: &dyn Fn(&crate::util::json::Json) -> bool,
+) -> anyhow::Result<usize> {
     use crate::util::json::Json;
     let mut entries: Vec<Json> = match (fresh, std::fs::read_to_string(path)) {
         (true, _) | (false, Err(_)) => Vec::new(),
         (false, Ok(text)) => load_bench_entries(&text, expected_schema)
             .map_err(|e| e.context(format!("refusing to append to {path}")))?,
     };
+    let before = entries.len();
+    entries.retain(|e| !prune(e));
+    if entries.len() < before {
+        crate::log_info!(
+            "bench trajectory {path}: pruned {} superseded entries",
+            before - entries.len()
+        );
+    }
     entries.push(entry);
     let count = entries.len();
     let doc = Json::obj(vec![
@@ -674,6 +696,41 @@ mod tests {
         let (empty, xs, _) = perf_trajectory(None, None).expect("empty");
         assert!(xs.is_empty());
         assert!(!empty.render().is_empty());
+    }
+
+    /// A measured append prunes superseded analytic-estimate entries.
+    #[test]
+    fn pruned_append_drops_estimate_entries() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join(format!("immsched-prune-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("traj.json");
+        let path = path.to_str().unwrap();
+        let estimate = Json::obj(vec![
+            ("label", Json::from("pr2-seed-estimate")),
+            ("measured", Json::from(false)),
+        ]);
+        let count =
+            append_bench_entry(path, MATCHER_BENCH_SCHEMA, estimate, true).unwrap();
+        assert_eq!(count, 1);
+        let measured =
+            Json::obj(vec![("label", Json::from("real-run")), ("measured", Json::from(true))]);
+        let is_estimate =
+            |e: &Json| e.get("measured").and_then(Json::as_bool) == Some(false);
+        let count = append_bench_entry_pruned(
+            path,
+            MATCHER_BENCH_SCHEMA,
+            measured,
+            false,
+            &is_estimate,
+        )
+        .unwrap();
+        assert_eq!(count, 1, "the estimate must be superseded, not accumulated");
+        let text = std::fs::read_to_string(path).unwrap();
+        let entries = load_bench_entries(&text, MATCHER_BENCH_SCHEMA).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("label").and_then(Json::as_str), Some("real-run"));
+        std::fs::remove_file(path).ok();
     }
 
     /// The retired single-run v1 layout must fail loudly, never merge.

@@ -56,6 +56,27 @@ pub enum Priority {
     Urgent,
 }
 
+impl Priority {
+    /// Stable lowercase name — the wire protocol's interchange form.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Background => "background",
+            Priority::Normal => "normal",
+            Priority::Urgent => "urgent",
+        }
+    }
+
+    /// Inverse of [`Self::name`] (`None` for unknown names).
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "background" => Priority::Background,
+            "normal" => Priority::Normal,
+            "urgent" => Priority::Urgent,
+            _ => return None,
+        })
+    }
+}
+
 /// One DNN inference job.
 #[derive(Clone, Debug)]
 pub struct Task {

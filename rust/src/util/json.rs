@@ -93,6 +93,133 @@ impl Json {
     }
 }
 
+// ---------------------------------------------------------------------------
+// codec primitives (shared by the shard wire protocol and snapshot serde)
+// ---------------------------------------------------------------------------
+//
+// Bit-exact encoding rules for state that must survive a process
+// boundary unchanged: f32 values travel as their u32 bit patterns
+// (±inf/NaN and subnormals survive, where a pretty-printed float would
+// not), and 64-bit words that may exceed 2^53 travel as 16-digit hex
+// strings (JSON numbers are f64).  Both `matcher::SwarmSnapshot` serde
+// and `cluster::wire` build on these — one implementation, no drift.
+
+/// Upper bound on any decoded dimension (vertex counts, mask rows/cols,
+/// swarm shapes).  A corrupt or hostile document must be rejected
+/// *before* it sizes an allocation, and products of two dims stay far
+/// from overflow.
+pub const MAX_WIRE_DIM: usize = 1 << 20;
+
+/// Encode an f32 as its u32 bit pattern (exact in an f64-backed number).
+pub fn f32_bits(x: f32) -> Json {
+    Json::Num(x.to_bits() as f64)
+}
+
+/// Decode [`f32_bits`] from one value.
+pub fn decode_f32_bits(v: &Json) -> Result<f32> {
+    let bits = v.as_f64().ok_or_else(|| anyhow!("f32 bit pattern is not a number"))?;
+    if !((0.0..=u32::MAX as f64).contains(&bits) && bits.fract() == 0.0) {
+        bail!("value {bits} is not an f32 bit pattern");
+    }
+    Ok(f32::from_bits(bits as u32))
+}
+
+/// Decode an [`f32_bits`]-encoded field.
+pub fn get_f32_bits(v: &Json, key: &str) -> Result<f32> {
+    let field = v.get(key).ok_or_else(|| anyhow!("missing f32 bit field {key:?}"))?;
+    decode_f32_bits(field).map_err(|e| e.context(format!("field {key:?}")))
+}
+
+/// Encode a whole f32 slice as bit patterns.
+pub fn f32_bits_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| f32_bits(x)).collect())
+}
+
+/// Decode an [`f32_bits_arr`]-encoded field.
+pub fn get_f32_bits_arr(v: &Json, key: &str) -> Result<Vec<f32>> {
+    v.get(key)
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("missing f32 bit array {key:?}"))?
+        .iter()
+        .map(decode_f32_bits)
+        .collect()
+}
+
+/// Encode a u64 as a 16-digit hex string (exact past 2^53).
+pub fn hex_u64(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+/// Decode a [`hex_u64`]-encoded field.
+pub fn get_hex_u64(v: &Json, key: &str) -> Result<u64> {
+    let s = v
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing hex field {key:?}"))?;
+    u64::from_str_radix(s, 16).map_err(|_| anyhow!("bad hex field {key:?} = {s:?}"))
+}
+
+/// Decode a non-negative integer field (an index or count).
+pub fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    let x = v
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing numeric field {key:?}"))?;
+    if !(x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64) {
+        bail!("field {key:?} = {x} is not an index");
+    }
+    Ok(x as usize)
+}
+
+/// [`get_usize`] additionally bounded by [`MAX_WIRE_DIM`] — for any
+/// field that sizes an allocation.
+pub fn get_dim(v: &Json, key: &str) -> Result<usize> {
+    let x = get_usize(v, key)?;
+    if x > MAX_WIRE_DIM {
+        bail!("dimension {key:?} = {x} exceeds the {MAX_WIRE_DIM} cap");
+    }
+    Ok(x)
+}
+
+/// Decode a u64 counter field (plain JSON number; fine below 2^53).
+pub fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    Ok(get_usize(v, key)? as u64)
+}
+
+/// Decode a bool field.
+pub fn get_bool(v: &Json, key: &str) -> Result<bool> {
+    v.get(key).and_then(Json::as_bool).ok_or_else(|| anyhow!("missing bool field {key:?}"))
+}
+
+/// Decode a string field.
+pub fn get_str<'v>(v: &'v Json, key: &str) -> Result<&'v str> {
+    v.get(key).and_then(Json::as_str).ok_or_else(|| anyhow!("missing string field {key:?}"))
+}
+
+/// Encode a slice of optional indices (`None` → `null`) — the shape of
+/// a matcher mapping.
+pub fn encode_opt_indices(slots: &[Option<usize>]) -> Json {
+    Json::Arr(slots.iter().map(|s| s.map_or(Json::Null, |x| Json::Num(x as f64))).collect())
+}
+
+/// Inverse of [`encode_opt_indices`].
+pub fn decode_opt_indices(v: &Json) -> Result<Vec<Option<usize>>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("index list must be an array"))?
+        .iter()
+        .map(|slot| match slot {
+            Json::Null => Ok(None),
+            _ => {
+                let x = slot.as_f64().ok_or_else(|| anyhow!("slot is not an index"))?;
+                if !(x >= 0.0 && x.fract() == 0.0 && x <= MAX_WIRE_DIM as f64) {
+                    bail!("slot {x} is not an in-range index");
+                }
+                Ok(Some(x as usize))
+            }
+        })
+        .collect()
+}
+
 impl From<&str> for Json {
     fn from(s: &str) -> Json {
         Json::Str(s.to_string())
@@ -297,7 +424,14 @@ fn render_into(v: &Json, indent: usize, out: &mut String) {
             let _ = write!(out, "{b}");
         }
         Json::Num(x) => {
-            if x.fract() == 0.0 && x.abs() < 9.0e15 {
+            if !x.is_finite() {
+                // JSON has no NaN/±inf literal. A non-finite number here
+                // means a degenerate metric (0/0 rate, empty percentile)
+                // leaked into a document; rendering it raw would corrupt
+                // the whole committed trajectory file for every later
+                // reader. Degrade the one value to null instead.
+                out.push_str("null");
+            } else if x.fract() == 0.0 && x.abs() < 9.0e15 {
                 let _ = write!(out, "{}", *x as i64);
             } else {
                 let _ = write!(out, "{x}");
@@ -405,6 +539,30 @@ mod tests {
         let v = Json::Obj(vec![("k\"ey\n".into(), Json::Str("a\\b\t".into()))]);
         let rendered = v.render();
         assert_eq!(Json::parse(&rendered).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null_not_invalid_json() {
+        // regression: a poisoned stat (NaN/±inf f64) must never emit
+        // `NaN`/`inf` tokens that would make a committed BENCH_*.json
+        // unparseable for every later run
+        let v = Json::obj(vec![
+            ("bad_a", Json::from(f64::NAN)),
+            ("bad_b", Json::from(f64::INFINITY)),
+            ("bad_c", Json::from(f64::NEG_INFINITY)),
+            ("ok", Json::from(1.5)),
+        ]);
+        let rendered = v.render();
+        assert!(!rendered.contains("NaN") && !rendered.contains("inf"), "{rendered}");
+        let back = Json::parse(&rendered).expect("non-finite render must stay valid JSON");
+        assert_eq!(back.get("bad_a"), Some(&Json::Null));
+        assert_eq!(back.get("bad_b"), Some(&Json::Null));
+        assert_eq!(back.get("bad_c"), Some(&Json::Null));
+        assert_eq!(back.get("ok").and_then(Json::as_f64), Some(1.5));
+        // nested positions go through the same renderer
+        let arr = Json::Arr(vec![Json::from(f64::NAN), Json::from(2.0)]);
+        let back = Json::parse(&arr.render()).expect("array render");
+        assert_eq!(back.as_array().unwrap()[0], Json::Null);
     }
 
     #[test]

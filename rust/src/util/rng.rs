@@ -6,7 +6,7 @@
 //! a requirement for the paper-figure benches to be reproducible.
 
 /// xoshiro256** 1.0 (Blackman & Vigna), seeded with SplitMix64.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Rng {
     s: [u64; 4],
 }
@@ -31,6 +31,25 @@ impl Rng {
     /// Derive an independent stream (for per-component sub-RNGs).
     pub fn fork(&mut self, stream: u64) -> Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    /// The raw 256-bit generator state — what a serialized
+    /// `SwarmSnapshot` carries across a process boundary so a migrated
+    /// episode replays the exact stream the uninterrupted run would
+    /// have drawn.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Restore a generator from [`Self::state`].  An all-zero state is
+    /// invalid for xoshiro (it is a fixed point); it is replaced by the
+    /// seed-0 state so a corrupted wire payload degrades to a valid —
+    /// if different — stream instead of a generator stuck on zero.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        if s == [0; 4] {
+            return Rng::new(0);
+        }
+        Self { s }
     }
 
     /// Next raw 64 random bits.
@@ -197,5 +216,24 @@ mod tests {
         let mut b = base.fork(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn state_round_trip_continues_the_exact_stream() {
+        let mut a = Rng::new(77);
+        for _ in 0..123 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        assert_eq!(a, b);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn all_zero_state_degrades_to_a_valid_generator() {
+        let mut r = Rng::from_state([0; 4]);
+        assert_ne!(r.next_u64(), 0, "xoshiro must not be stuck on the zero fixed point");
     }
 }

@@ -1,20 +1,32 @@
 //! Cluster-serving behavior: routing conservation (every submitted id
 //! is answered exactly once across shards — done, shed, or
-//! cancelled-with-snapshot), cross-shard warm-start resume, and the
-//! epoch-quota slicing loop through the public service API.
+//! cancelled-with-snapshot), cross-shard warm-start resume, the
+//! epoch-quota slicing loop through the public service API, and the
+//! transport-equivalence acceptance: identical dispositions on
+//! in-process and out-of-process shards, with bit-identical resume
+//! across the process boundary.
+//!
+//! The out-of-process tests spawn the real `immsched shard-worker`
+//! binary (cargo builds it for integration tests and exposes the path
+//! via `CARGO_BIN_EXE_immsched`).
 
+use std::path::Path;
 use std::time::Duration;
 
+use immsched::cluster::transport::{ProcessShard, ShardTransport};
 use immsched::cluster::{
     ClusterConfig, DeadlineAware, LeastQueueDepth, MatchCluster, RoundRobin,
 };
 use immsched::coordinator::{
-    MatchPath, MatchProblem, MatchService, ServiceConfig, SubmitOptions,
+    MatchPath, MatchProblem, MatchService, RequestId, ServiceConfig, SubmitOptions,
 };
 use immsched::graph::{gen_chain, NodeKind};
 use immsched::matcher::PsoConfig;
 use immsched::scheduler::Priority;
 use immsched::util::MatF;
+
+/// The worker binary the out-of-process tests spawn.
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_immsched");
 
 fn chain_problem(n: usize, m: usize) -> MatchProblem {
     let qd = gen_chain(n, NodeKind::Compute);
@@ -245,6 +257,176 @@ fn shed_resubmission_returns_the_snapshot_instead_of_dropping_it() {
     assert!(done.resumed, "recovered snapshot must warm-start");
     assert_eq!(done.epochs_run, 10, "second slice resumes at epoch 10, not epoch 0");
     assert_eq!(done.snapshot.expect("re-sliced").epochs_done, 20);
+}
+
+/// One request's final disposition after walking quota slices to
+/// completion — everything that must be transport-invariant.
+#[derive(Debug, PartialEq)]
+struct Disposition {
+    path: &'static str,
+    epochs_total: usize,
+    final_epochs: usize,
+    resumed: bool,
+    hops: u32,
+    mappings: Vec<Vec<Option<usize>>>,
+    best_fitness_bits: u32,
+}
+
+/// Submit a fixed request sequence (feasible chains interleaved with
+/// quota-sliced infeasible stars), resubmitting cancelled episodes from
+/// their persisted snapshots until each completes, and record every
+/// final disposition in submission order.
+fn run_disposition_walk(cluster: &MatchCluster) -> Vec<Disposition> {
+    let mut problems: Vec<MatchProblem> = Vec::new();
+    for i in 0..8 {
+        if i % 4 == 3 {
+            problems.push(infeasible_star_problem());
+        } else {
+            problems.push(chain_problem(4, 8));
+        }
+    }
+    let mut out = Vec::new();
+    for problem in problems {
+        // sequential submit→settle keeps the walk timing-independent:
+        // dispositions must depend on the transport never, on
+        // concurrency races never, only on (seed, policy, quota)
+        let ticket = cluster.submit(problem.clone(), Priority::Normal, None).unwrap();
+        let id = ticket.id;
+        let mut resp = ticket.wait().unwrap();
+        let mut epochs_total = resp.epochs_run;
+        let mut hops = 0u32;
+        while resp.path == MatchPath::Cancelled {
+            hops += 1;
+            assert!(hops <= 16, "sliced episode did not converge");
+            resp = cluster
+                .resubmit(id, problem.clone(), Priority::Normal, None)
+                .unwrap()
+                .wait()
+                .unwrap();
+            epochs_total += resp.epochs_run;
+        }
+        out.push(Disposition {
+            path: resp.path.name(),
+            epochs_total,
+            final_epochs: resp.epochs_run,
+            resumed: resp.resumed,
+            hops,
+            mappings: resp.mappings,
+            best_fitness_bits: resp.best_fitness.to_bits(),
+        });
+    }
+    out
+}
+
+fn walk_config() -> ClusterConfig {
+    ClusterConfig {
+        shards: 2,
+        service: ServiceConfig { epoch_quota: Some(8), ..Default::default() },
+        pso: PsoConfig { seed: 61, epochs: 20, repair_budget: 1_000, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Acceptance: a cluster run with identical seed, request sequence and
+/// route policy produces the *same* per-request dispositions (paths,
+/// epoch totals, resume signals, mappings, fitness bits) whether the
+/// shards are in-process service threads or out-of-process
+/// `shard-worker` children behind the wire protocol.
+#[test]
+fn in_process_and_process_transports_produce_identical_dispositions() {
+    let in_proc =
+        MatchCluster::spawn(walk_config(), Box::<RoundRobin>::default()).unwrap();
+    let in_proc_walk = run_disposition_walk(&in_proc);
+
+    let out_proc = MatchCluster::spawn_process_shards_at(
+        Path::new(WORKER_BIN),
+        walk_config(),
+        Box::<RoundRobin>::default(),
+    )
+    .unwrap();
+    assert_eq!(out_proc.transport_kinds(), vec!["process"; 2]);
+    let out_proc_walk = run_disposition_walk(&out_proc);
+    out_proc.drain().expect("workers drain cleanly");
+
+    assert_eq!(
+        in_proc_walk, out_proc_walk,
+        "dispositions must not depend on the transport"
+    );
+    // the walk exercised the interesting paths, not just happy serves
+    assert!(in_proc_walk.iter().any(|d| d.hops >= 2), "no quota slicing happened");
+    assert!(in_proc_walk.iter().any(|d| d.resumed), "no warm start happened");
+    assert!(in_proc_walk.iter().any(|d| !d.mappings.is_empty()), "nothing matched");
+}
+
+/// Acceptance: a snapshot migrated across a process boundary resumes
+/// bit-identically to a same-process resume — same epochs, same
+/// mappings, same fitness bits, same follow-up snapshot.
+#[test]
+fn snapshot_migrated_across_process_boundary_resumes_bit_identically() {
+    let epochs = 40usize;
+    let pso = PsoConfig { seed: 23, epochs, repair_budget: 1_000, ..Default::default() };
+    let sliced = MatchService::spawn_configured(
+        ServiceConfig { epoch_quota: Some(15), ..Default::default() },
+        pso,
+    )
+    .unwrap();
+    let first = sliced
+        .submit_with(
+            infeasible_star_problem(),
+            Priority::Normal,
+            None,
+            SubmitOptions { id: Some(9), ..Default::default() },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(first.path, MatchPath::Cancelled);
+    assert_eq!(first.epochs_run, 15);
+    let snapshot = first.snapshot.expect("sliced episode yields a snapshot");
+
+    // resume A: same process, fresh service
+    let same_proc = MatchService::spawn_configured(ServiceConfig::default(), pso).unwrap();
+    let resumed_here = same_proc
+        .submit_with(
+            infeasible_star_problem(),
+            Priority::Normal,
+            None,
+            SubmitOptions { id: Some(9), resume: Some(snapshot.clone()) },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    // resume B: the identical snapshot crosses the wire codec into a
+    // shard-worker child process and resumes there
+    let shard =
+        ProcessShard::spawn_at(Path::new(WORKER_BIN), ServiceConfig::default(), pso).unwrap();
+    let id: RequestId = 9;
+    shard
+        .submit(id, infeasible_star_problem(), Priority::Normal, None, Some(snapshot))
+        .unwrap();
+    let resumed_there = shard.wait_response(id).unwrap();
+    shard.drain().expect("worker drains cleanly");
+
+    assert!(resumed_here.resumed && resumed_there.resumed, "both must warm-start");
+    assert_eq!(resumed_there.path, resumed_here.path);
+    assert_eq!(resumed_there.epochs_run, resumed_here.epochs_run);
+    assert_eq!(
+        first.epochs_run + resumed_there.epochs_run,
+        epochs,
+        "migrated resume must complete exactly the remaining epochs"
+    );
+    assert_eq!(resumed_there.mappings, resumed_here.mappings);
+    assert_eq!(
+        resumed_there.best_fitness.to_bits(),
+        resumed_here.best_fitness.to_bits(),
+        "fitness must match to the bit"
+    );
+    match (&resumed_here.snapshot, &resumed_there.snapshot) {
+        (None, None) => {}
+        (Some(a), Some(b)) => assert_eq!(a, b, "follow-up snapshots must be bit-identical"),
+        (a, b) => panic!("snapshot presence diverged: {:?} vs {:?}", a.is_some(), b.is_some()),
+    }
 }
 
 /// Deadline-aware routing preempts across shards: with every shard busy

@@ -1,0 +1,371 @@
+//! Wire-layer contract tests: encode→decode must be the identity for
+//! every payload the shard protocol moves — across problem sizes and
+//! edge densities, including bit-exact snapshot state — and the framed
+//! reader must reject malformed and truncated streams loudly.
+
+use immsched::cluster::wire::{
+    decode_msg, decode_problem, decode_reply, decode_response, encode_msg, encode_problem,
+    encode_reply, encode_response, read_frame, write_frame, ShardMsg, ShardReply, ShardStatus,
+    MAX_FRAME_BYTES,
+};
+use immsched::coordinator::{
+    ControllerStats, MatchPath, MatchProblem, MatchResponse, RouterStats, ServiceConfig,
+    ServiceStats,
+};
+use immsched::graph::{gen_chain, gen_random_dag, NodeKind};
+use immsched::matcher::{PsoConfig, SwarmSnapshot};
+use immsched::scheduler::Priority;
+use immsched::util::json::Json;
+use immsched::util::Rng;
+
+fn random_problem(n: usize, m: usize, density: f64, rng: &mut Rng) -> MatchProblem {
+    let qd = gen_random_dag(n, density, rng, NodeKind::Compute);
+    let gd = gen_random_dag(m, density, rng, NodeKind::Universal);
+    MatchProblem::from_dags(&qd, &gd)
+}
+
+fn random_snapshot(n: usize, m: usize, rng: &mut Rng) -> SwarmSnapshot {
+    SwarmSnapshot {
+        n,
+        m,
+        s_star: (0..n * m).map(|_| rng.f32()).collect(),
+        s_bar: (0..n * m).map(|_| rng.f32()).collect(),
+        best_fitness: -rng.f32() * 100.0,
+        have_star: rng.below(2) == 1,
+        epochs_done: rng.below(10_000),
+        rng: rng.fork(7),
+        mappings: (0..rng.below(3))
+            .map(|_| {
+                (0..n)
+                    .map(|_| if rng.below(5) == 0 { None } else { Some(rng.below(m)) })
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+/// Problems of many shapes and densities survive the codec exactly.
+#[test]
+fn problem_round_trip_across_sizes_and_densities() {
+    let mut rng = Rng::new(0xB0A7);
+    for &(n, m) in &[(2usize, 3usize), (4, 8), (8, 16), (16, 32), (32, 64)] {
+        for &density in &[0.0, 0.1, 0.35, 0.8] {
+            let p = random_problem(n, m, density, &mut rng);
+            let doc = encode_problem(&p);
+            // through the renderer/parser too — that is what actually
+            // crosses the pipe
+            let doc = Json::parse(&doc.render()).expect("rendered problem parses");
+            let back = decode_problem(&doc).expect("decode");
+            assert_eq!(back.query, p.query, "query n={n} m={m} d={density}");
+            assert_eq!(back.target, p.target, "target n={n} m={m} d={density}");
+            assert_eq!(back.mask, p.mask, "mask n={n} m={m} d={density}");
+        }
+    }
+}
+
+/// Snapshot state is the warm-start payload: every f32 bit, the RNG
+/// words and the feasible set must survive render→parse→decode.
+#[test]
+fn snapshot_round_trip_is_bit_identical() {
+    let mut rng = Rng::new(0x5EED);
+    for &(n, m) in &[(2usize, 2usize), (4, 8), (9, 17), (16, 32)] {
+        let snap = random_snapshot(n, m, &mut rng);
+        let doc = Json::parse(&snap.to_json().render()).expect("rendered snapshot parses");
+        let back = SwarmSnapshot::from_json(&doc).expect("decode");
+        assert_eq!(back, snap, "snapshot n={n} m={m}");
+        // explicit bit-level check on the attractors (PartialEq on f32
+        // would hide a NaN substitution)
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.s_star), bits(&snap.s_star));
+        assert_eq!(bits(&back.s_bar), bits(&snap.s_bar));
+        assert_eq!(back.best_fitness.to_bits(), snap.best_fitness.to_bits());
+        assert_eq!(back.rng.state(), snap.rng.state());
+    }
+}
+
+/// Non-finite fitness values are real states (a shed response carries
+/// `-inf`; a poisoned epoch could produce NaN) — the bit encoding must
+/// carry them where a JSON float would collapse to null.
+#[test]
+fn snapshot_non_finite_fitness_survives() {
+    let mut rng = Rng::new(3);
+    for bad in [f32::NEG_INFINITY, f32::INFINITY, f32::NAN] {
+        let mut snap = random_snapshot(3, 5, &mut rng);
+        snap.best_fitness = bad;
+        snap.s_star[2] = bad;
+        let doc = Json::parse(&snap.to_json().render()).unwrap();
+        let back = SwarmSnapshot::from_json(&doc).unwrap();
+        assert_eq!(back.best_fitness.to_bits(), bad.to_bits());
+        assert_eq!(back.s_star[2].to_bits(), bad.to_bits());
+    }
+}
+
+/// Responses round-trip across every disposition path.
+#[test]
+fn response_round_trip_across_paths() {
+    let mut rng = Rng::new(11);
+    let paths = [
+        MatchPath::NativeEpoch,
+        MatchPath::NativeFallback,
+        MatchPath::Ullmann,
+        MatchPath::Vf2,
+        MatchPath::Rejected,
+        MatchPath::Cancelled,
+        MatchPath::Shed,
+    ];
+    for (i, &path) in paths.iter().enumerate() {
+        let resp = MatchResponse {
+            id: (u64::MAX - 17).wrapping_add(i as u64), // ids past 2^53 must survive
+            mappings: vec![vec![Some(1), None, Some(0)]],
+            best_fitness: if path == MatchPath::Shed { f32::NEG_INFINITY } else { -0.5 },
+            epochs_run: 42,
+            host_seconds: 0.0625,
+            path,
+            resumed: i % 2 == 0,
+            snapshot: if path == MatchPath::Cancelled {
+                Some(random_snapshot(3, 4, &mut rng))
+            } else {
+                None
+            },
+        };
+        let doc = Json::parse(&encode_response(&resp).render()).unwrap();
+        let back = decode_response(&doc).unwrap();
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.mappings, resp.mappings);
+        assert_eq!(back.best_fitness.to_bits(), resp.best_fitness.to_bits());
+        assert_eq!(back.epochs_run, resp.epochs_run);
+        assert_eq!(back.host_seconds, resp.host_seconds);
+        assert_eq!(back.path, resp.path);
+        assert_eq!(back.resumed, resp.resumed);
+        assert_eq!(back.snapshot, resp.snapshot);
+    }
+}
+
+/// Full message/reply envelopes round-trip through real frames.
+#[test]
+fn framed_messages_round_trip() {
+    let mut rng = Rng::new(21);
+    let problem = random_problem(4, 8, 0.3, &mut rng);
+    let msgs = vec![
+        ShardMsg::Hello {
+            service: ServiceConfig { queue_depth: 9, epoch_quota: Some(4) },
+            pso: PsoConfig { seed: 1 << 60, ..Default::default() },
+        },
+        ShardMsg::Submit {
+            id: 77,
+            problem: problem.clone(),
+            priority: Priority::Urgent,
+            timeout: Some(1.5),
+            resume: Some(random_snapshot(4, 8, &mut rng)),
+        },
+        ShardMsg::Cancel { id: 77 },
+        ShardMsg::Stats,
+        ShardMsg::Drain,
+    ];
+    let mut buf = Vec::new();
+    for msg in &msgs {
+        write_frame(&mut buf, &encode_msg(msg)).unwrap();
+    }
+    let mut r = &buf[..];
+    for msg in &msgs {
+        let frame = read_frame(&mut r).unwrap().expect("frame present");
+        let back = decode_msg(&frame).unwrap();
+        match (msg, &back) {
+            (ShardMsg::Hello { service, pso }, ShardMsg::Hello { service: s2, pso: p2 }) => {
+                assert_eq!(service.queue_depth, s2.queue_depth);
+                assert_eq!(service.epoch_quota, s2.epoch_quota);
+                assert_eq!(pso.seed, p2.seed);
+            }
+            (
+                ShardMsg::Submit { id, priority, timeout, resume, problem },
+                ShardMsg::Submit { id: i2, priority: p2, timeout: t2, resume: r2, problem: pr2 },
+            ) => {
+                assert_eq!(id, i2);
+                assert_eq!(priority, p2);
+                assert_eq!(timeout, t2);
+                assert_eq!(resume, r2);
+                assert_eq!(problem.mask, pr2.mask);
+            }
+            (ShardMsg::Cancel { id }, ShardMsg::Cancel { id: i2 }) => assert_eq!(id, i2),
+            (ShardMsg::Stats, ShardMsg::Stats) | (ShardMsg::Drain, ShardMsg::Drain) => {}
+            (want, got) => panic!("decoded {got:?}, wanted {want:?}"),
+        }
+    }
+    assert!(read_frame(&mut r).unwrap().is_none());
+
+    // replies too
+    let replies = vec![
+        ShardReply::Ready { schema: "immsched.shard-wire/v1".into() },
+        ShardReply::Stats(ShardStatus {
+            queue_depth: 3,
+            in_flight: Some(Priority::Background),
+            stats: ServiceStats {
+                controller: ControllerStats { requests: 5, cancelled: 2, ..Default::default() },
+                router: RouterStats { admitted: 7, depth: 3, ..Default::default() },
+            },
+        }),
+        ShardReply::Drained { answered: 12 },
+        ShardReply::Error { context: "boom".into() },
+    ];
+    let mut buf = Vec::new();
+    for reply in &replies {
+        write_frame(&mut buf, &encode_reply(reply)).unwrap();
+    }
+    let mut r = &buf[..];
+    match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
+        ShardReply::Ready { schema } => assert_eq!(schema, "immsched.shard-wire/v1"),
+        other => panic!("{other:?}"),
+    }
+    match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
+        ShardReply::Stats(status) => {
+            assert_eq!(status.queue_depth, 3);
+            assert_eq!(status.in_flight, Some(Priority::Background));
+            assert_eq!(status.stats.controller.requests, 5);
+            assert_eq!(status.stats.controller.cancelled, 2);
+            assert_eq!(status.stats.router.admitted, 7);
+        }
+        other => panic!("{other:?}"),
+    }
+    match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
+        ShardReply::Drained { answered } => assert_eq!(answered, 12),
+        other => panic!("{other:?}"),
+    }
+    match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
+        ShardReply::Error { context } => assert_eq!(context, "boom"),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Every truncation point of a real frame is a loud error, not a hang
+/// or a silent partial decode.
+#[test]
+fn truncated_frames_fail_at_every_cut() {
+    let problem = MatchProblem::from_dags(
+        &gen_chain(4, NodeKind::Compute),
+        &gen_chain(8, NodeKind::Universal),
+    );
+    let mut buf = Vec::new();
+    write_frame(
+        &mut buf,
+        &encode_msg(&ShardMsg::Submit {
+            id: 5,
+            problem,
+            priority: Priority::Normal,
+            timeout: None,
+            resume: None,
+        }),
+    )
+    .unwrap();
+    // cuts through the length prefix and through the payload
+    for cut in [1usize, 2, 3, 4 + 1, buf.len() / 2, buf.len() - 1] {
+        let mut r = &buf[..cut];
+        let err = read_frame(&mut r).expect_err("cut at {cut} must fail");
+        assert!(format!("{err:#}").contains("truncated"), "cut {cut}: {err:#}");
+    }
+    // full frame still decodes after all that
+    let mut r = &buf[..];
+    assert!(decode_msg(&read_frame(&mut r).unwrap().unwrap()).is_ok());
+}
+
+/// Garbage payloads and hostile length prefixes are rejected.
+#[test]
+fn malformed_frames_are_rejected() {
+    // valid length prefix, invalid JSON payload
+    let mut buf = Vec::new();
+    let payload = b"not json at all";
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload);
+    let mut r = &buf[..];
+    assert!(read_frame(&mut r).is_err(), "garbage payload must not decode");
+
+    // valid JSON, wrong envelope
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &Json::obj(vec![("schema", Json::from("bogus/v9"))])).unwrap();
+    let mut r = &buf[..];
+    let frame = read_frame(&mut r).unwrap().unwrap();
+    assert!(decode_msg(&frame).is_err(), "wrong schema must not decode");
+
+    // length prefix beyond the cap is refused before allocation
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&((MAX_FRAME_BYTES + 1) as u32).to_be_bytes());
+    buf.extend_from_slice(b"xxxx");
+    let mut r = &buf[..];
+    let err = read_frame(&mut r).unwrap_err();
+    assert!(format!("{err:#}").contains("cap"), "{err:#}");
+
+    // structurally valid frame, semantically broken snapshot
+    let bogus = Json::obj(vec![("n", Json::from(3usize)), ("m", Json::from(3usize))]);
+    assert!(SwarmSnapshot::from_json(&bogus).is_err(), "missing fields must fail decode");
+}
+
+/// A tiny document must not be able to demand an enormous allocation:
+/// dimensions are capped before anything is sized from them.
+#[test]
+fn hostile_dimensions_are_rejected_before_allocation() {
+    use immsched::cluster::wire::{decode_csr, decode_mask};
+    // a ~60-byte mask document claiming 10^15 columns
+    let huge_mask = Json::obj(vec![
+        ("rows", Json::from(1usize)),
+        ("cols", Json::Num(1e15)),
+        ("set", Json::Arr(vec![Json::Arr(vec![])])),
+    ]);
+    assert!(decode_mask(&huge_mask).is_err(), "per-dimension cap must reject");
+    // per-dim legal but the product would still be a 2^38-cell bitset
+    let wide_mask = Json::obj(vec![
+        ("rows", Json::from(1usize << 19)),
+        ("cols", Json::from(1usize << 19)),
+        ("set", Json::Arr(vec![])),
+    ]);
+    assert!(decode_mask(&wide_mask).is_err(), "cell-count cap must reject");
+    let huge_csr =
+        Json::obj(vec![("nodes", Json::Num(1e15)), ("edges", Json::Arr(vec![]))]);
+    assert!(decode_csr(&huge_csr).is_err(), "csr node cap must reject");
+    // snapshot dims are capped too, and empty arrays cannot sneak past
+    // the shape check via an overflowing n*m
+    let mut rng = Rng::new(4);
+    let mut doc = random_snapshot(2, 2, &mut rng).to_json();
+    if let Json::Obj(fields) = &mut doc {
+        for (k, v) in fields.iter_mut() {
+            if k == "n" || k == "m" {
+                *v = Json::Num(1e15);
+            }
+        }
+    }
+    assert!(SwarmSnapshot::from_json(&doc).is_err(), "snapshot dim cap must reject");
+}
+
+/// A decoded feasible set must actually fit the problem shape — a
+/// mapping with too few slots or an out-of-range target vertex is
+/// corruption, not a match result.
+#[test]
+fn snapshot_with_out_of_shape_mappings_is_rejected() {
+    let mut rng = Rng::new(6);
+    let mut snap = random_snapshot(4, 8, &mut rng);
+    snap.mappings = vec![vec![Some(1), None, Some(0), Some(2)]];
+    let good = SwarmSnapshot::from_json(&snap.to_json()).expect("in-shape mapping decodes");
+    assert_eq!(good.mappings, snap.mappings);
+    // target vertex beyond m
+    snap.mappings = vec![vec![Some(1), None, Some(0), Some(999)]];
+    assert!(SwarmSnapshot::from_json(&snap.to_json()).is_err(), "vertex >= m must fail");
+    // wrong slot count
+    snap.mappings = vec![vec![Some(1)]];
+    assert!(SwarmSnapshot::from_json(&snap.to_json()).is_err(), "len != n must fail");
+}
+
+/// An all-zero RNG state can only come from corruption (xoshiro never
+/// reaches its zero fixed point) — it must fail decode, not silently
+/// resume on a substituted stream.
+#[test]
+fn snapshot_with_zeroed_rng_state_is_rejected() {
+    let mut rng = Rng::new(8);
+    let mut doc = random_snapshot(3, 4, &mut rng).to_json();
+    if let Json::Obj(fields) = &mut doc {
+        for (k, v) in fields.iter_mut() {
+            if k == "rng" {
+                *v = Json::Arr(vec![Json::from("0000000000000000"); 4]);
+            }
+        }
+    }
+    let err = SwarmSnapshot::from_json(&doc).unwrap_err();
+    assert!(format!("{err:#}").contains("all-zero"), "{err:#}");
+}
