@@ -1,0 +1,67 @@
+//! `immsched-lint` driver: walk the crate sources, print findings,
+//! optionally write the JSON report, exit nonzero on any finding.
+//!
+//! ```text
+//! cargo run --release --bin lint [-- --root <crate-dir>] [--report <findings.json>]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.  The report is
+//! written even when findings exist, so CI can upload it either way.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use immsched::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut report_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => return usage("--root needs a directory"),
+            },
+            "--report" => match args.next() {
+                Some(file) => report_path = Some(PathBuf::from(file)),
+                None => return usage("--report needs a file path"),
+            },
+            other => return usage(&format!("unknown argument {other:?}")),
+        }
+    }
+
+    let report = match lint::lint_tree(&root) {
+        Ok(report) => report,
+        Err(e) => {
+            eprintln!("immsched-lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = &report_path {
+        if let Err(e) = std::fs::write(path, report.to_json().render()) {
+            eprintln!("immsched-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    for finding in &report.findings {
+        eprintln!("{}", finding.display_line());
+    }
+    if report.is_clean() {
+        eprintln!("immsched-lint: {} files clean", report.files_scanned);
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "immsched-lint: {} finding(s) across {} files",
+            report.findings.len(),
+            report.files_scanned
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("immsched-lint: {msg}");
+    eprintln!("usage: lint [--root <crate-dir>] [--report <findings.json>]");
+    ExitCode::from(2)
+}

@@ -388,7 +388,7 @@ mod tests {
         for _ in 0..6 {
             tickets.push(cluster.submit(chain_problem(4, 8), Priority::Normal, None).unwrap());
         }
-        let shards_used: std::collections::HashSet<ShardId> =
+        let shards_used: std::collections::BTreeSet<ShardId> =
             tickets.iter().map(|t| t.shard).collect();
         assert_eq!(shards_used.len(), 3, "round-robin must touch every shard");
         for t in tickets {

@@ -15,7 +15,7 @@
 //! forever).  All operations are lock-per-call; nothing here sits on a
 //! matching hot path.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -45,7 +45,9 @@ pub struct ResumeStore {
 
 #[derive(Debug, Default)]
 struct Inner {
-    snapshots: HashMap<RequestId, SwarmSnapshot>,
+    /// BTreeMap, not HashMap: any future iteration (debug dumps,
+    /// drain-to-wire) must see id order, not per-process hash order.
+    snapshots: BTreeMap<RequestId, SwarmSnapshot>,
     /// Insertion order for capacity eviction (ids may appear stale after
     /// a take; they are skipped).
     order: VecDeque<RequestId>,
@@ -63,7 +65,7 @@ impl ResumeStore {
     pub fn with_capacity(capacity: usize) -> Self {
         Self {
             inner: Mutex::new(Inner {
-                snapshots: HashMap::new(),
+                snapshots: BTreeMap::new(),
                 order: VecDeque::new(),
                 capacity: capacity.max(1),
             }),

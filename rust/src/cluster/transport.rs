@@ -23,13 +23,13 @@
 //! identically — policies only ever see transport-reported
 //! [`ShardStatus`] load, never `MatchService` internals.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -53,6 +53,15 @@ pub const WORKER_BIN_ENV: &str = "IMMSCHED_WORKER_BIN";
 /// How long a control round-trip (stats, drain) may take before the
 /// shard is declared unresponsive.
 const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Take a transport lock even if another thread panicked while holding
+/// it.  The maps behind these locks (tickets, cancel tokens, demuxed
+/// responses, the writer handle) are valid after any partial update, so
+/// poison recovery degrades at most the one request the panicking
+/// thread owned — instead of wedging every later caller of the shard.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One shard as the router sees it.  All methods are callable from any
 /// thread; responses are keyed by the globally unique request id the
@@ -102,10 +111,10 @@ pub struct InProcessShard {
     svc: MatchService,
     /// Pending tickets by id; an entry leaves when its response is
     /// consumed (an abandoned ticket stays until the shard drops).
-    tickets: Mutex<HashMap<RequestId, MatchTicket>>,
+    tickets: Mutex<BTreeMap<RequestId, MatchTicket>>,
     /// Cancel tokens stay reachable while [`Self::wait_response`] holds
     /// the ticket out of the map.
-    cancels: Mutex<HashMap<RequestId, CancelToken>>,
+    cancels: Mutex<BTreeMap<RequestId, CancelToken>>,
     /// Set by [`ShardTransport::drain`]: later submissions are rejected,
     /// mirroring a drained worker's closed stdin.
     draining: AtomicBool,
@@ -115,14 +124,14 @@ impl InProcessShard {
     pub fn spawn(cfg: ServiceConfig, pso: PsoConfig) -> Result<Self> {
         Ok(Self {
             svc: MatchService::spawn_configured(cfg, pso)?,
-            tickets: Mutex::new(HashMap::new()),
-            cancels: Mutex::new(HashMap::new()),
+            tickets: Mutex::new(BTreeMap::new()),
+            cancels: Mutex::new(BTreeMap::new()),
             draining: AtomicBool::new(false),
         })
     }
 
     fn forget(&self, id: RequestId) {
-        self.cancels.lock().unwrap().remove(&id);
+        lock_recover(&self.cancels).remove(&id);
     }
 }
 
@@ -145,13 +154,13 @@ impl ShardTransport for InProcessShard {
         let deadline = timeout.map(|t| self.svc.now() + t);
         let opts = SubmitOptions { id: Some(id), resume };
         let ticket = self.svc.submit_with(problem, priority, deadline, opts)?;
-        self.cancels.lock().unwrap().insert(id, ticket.cancel_token());
-        self.tickets.lock().unwrap().insert(id, ticket);
+        lock_recover(&self.cancels).insert(id, ticket.cancel_token());
+        lock_recover(&self.tickets).insert(id, ticket);
         Ok(())
     }
 
     fn cancel(&self, id: RequestId) {
-        if let Some(token) = self.cancels.lock().unwrap().get(&id) {
+        if let Some(token) = lock_recover(&self.cancels).get(&id) {
             token.cancel();
         }
     }
@@ -166,7 +175,7 @@ impl ShardTransport for InProcessShard {
     }
 
     fn try_response(&self, id: RequestId) -> Option<MatchResponse> {
-        let mut tickets = self.tickets.lock().unwrap();
+        let mut tickets = lock_recover(&self.tickets);
         let resp = tickets.get(&id)?.try_wait()?;
         tickets.remove(&id);
         drop(tickets);
@@ -175,10 +184,7 @@ impl ShardTransport for InProcessShard {
     }
 
     fn wait_response(&self, id: RequestId) -> Result<MatchResponse> {
-        let ticket = self
-            .tickets
-            .lock()
-            .unwrap()
+        let ticket = lock_recover(&self.tickets)
             .remove(&id)
             .with_context(|| format!("request {id} unknown or already answered"))?;
         let resp = ticket.wait();
@@ -225,7 +231,7 @@ struct Demux {
 }
 
 struct DemuxState {
-    responses: HashMap<RequestId, MatchResponse>,
+    responses: BTreeMap<RequestId, MatchResponse>,
     /// The worker exited (or its stream broke); waiting is hopeless.
     dead: bool,
 }
@@ -267,19 +273,22 @@ impl ProcessShard {
             .stderr(Stdio::inherit())
             .spawn()
             .with_context(|| format!("spawning shard worker {}", bin.display()))?;
-        let mut stdin = child.stdin.take().expect("piped stdin");
-        let mut stdout = child.stdout.take().expect("piped stdout");
+        let reap = |mut child: Child, e: anyhow::Error| -> anyhow::Error {
+            let _ = child.kill();
+            let _ = child.wait();
+            e
+        };
+        let (Some(mut stdin), Some(mut stdout)) = (child.stdin.take(), child.stdout.take())
+        else {
+            let e = anyhow::anyhow!("shard worker spawned without piped stdio");
+            return Err(reap(child, e));
+        };
 
         // handshake before the demux thread owns stdout: Hello carries
         // the shard config, Ready proves the schema matches.  The first
         // read runs on a helper thread so a worker that never answers
         // fails the spawn after CONTROL_TIMEOUT instead of hanging it;
         // stdout comes back through the channel for the demux thread.
-        let reap = |mut child: Child, e: anyhow::Error| -> anyhow::Error {
-            let _ = child.kill();
-            let _ = child.wait();
-            e
-        };
         if let Err(e) = write_frame(&mut stdin, &encode_msg(&ShardMsg::Hello { service: cfg, pso }))
         {
             return Err(reap(child, e));
@@ -316,7 +325,7 @@ impl ProcessShard {
         }
 
         let demux = Arc::new(Demux {
-            state: Mutex::new(DemuxState { responses: HashMap::new(), dead: false }),
+            state: Mutex::new(DemuxState { responses: BTreeMap::new(), dead: false }),
             arrived: Condvar::new(),
         });
         let (stats_tx, stats_rx) = mpsc::channel();
@@ -336,7 +345,7 @@ impl ProcessShard {
     }
 
     fn send(&self, msg: &ShardMsg) -> Result<()> {
-        match self.writer.lock().unwrap().as_mut() {
+        match lock_recover(&self.writer).as_mut() {
             Some(w) => write_frame(w, &encode_msg(msg)),
             None => bail!("shard worker connection already shut down"),
         }
@@ -346,13 +355,13 @@ impl ProcessShard {
     /// it is not).  Closing our end of its stdin first lets a healthy
     /// worker observe EOF (= drain) and exit on its own.
     fn shutdown(&self, kill: bool) {
-        drop(self.writer.lock().unwrap().take());
-        let mut child = self.child.lock().unwrap();
+        drop(lock_recover(&self.writer).take());
+        let mut child = lock_recover(&self.child);
         if kill {
             let _ = child.kill();
         }
         let _ = child.wait();
-        if let Some(handle) = self.reader.lock().unwrap().take() {
+        if let Some(handle) = lock_recover(&self.reader).take() {
             let _ = handle.join();
         }
     }
@@ -369,7 +378,7 @@ fn demux_loop(
         match read_frame(&mut stdout) {
             Ok(Some(frame)) => match decode_reply(&frame) {
                 Ok(ShardReply::Response(resp)) => {
-                    let mut state = demux.state.lock().unwrap();
+                    let mut state = lock_recover(&demux.state);
                     state.responses.insert(resp.id, resp);
                     demux.arrived.notify_all();
                 }
@@ -398,7 +407,7 @@ fn demux_loop(
             Ok(None) | Err(_) => break,
         }
     }
-    demux.state.lock().unwrap().dead = true;
+    lock_recover(&demux.state).dead = true;
     demux.arrived.notify_all();
 }
 
@@ -425,7 +434,7 @@ impl ShardTransport for ProcessShard {
     }
 
     fn status(&self) -> Result<ShardStatus> {
-        let control = self.control.lock().unwrap();
+        let control = lock_recover(&self.control);
         // a reply that arrived after an earlier call timed out would
         // otherwise answer *this* request and desync every later one
         while control.stats_rx.try_recv().is_ok() {}
@@ -437,11 +446,11 @@ impl ShardTransport for ProcessShard {
     }
 
     fn try_response(&self, id: RequestId) -> Option<MatchResponse> {
-        self.demux.state.lock().unwrap().responses.remove(&id)
+        lock_recover(&self.demux.state).responses.remove(&id)
     }
 
     fn wait_response(&self, id: RequestId) -> Result<MatchResponse> {
-        let mut state = self.demux.state.lock().unwrap();
+        let mut state = lock_recover(&self.demux.state);
         loop {
             if let Some(resp) = state.responses.remove(&id) {
                 return Ok(resp);
@@ -449,12 +458,16 @@ impl ShardTransport for ProcessShard {
             if state.dead {
                 bail!("shard worker exited before answering request {id}");
             }
-            state = self.demux.arrived.wait(state).unwrap();
+            state = self
+                .demux
+                .arrived
+                .wait(state)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     fn drain(&self) -> Result<()> {
-        let control = self.control.lock().unwrap();
+        let control = lock_recover(&self.control);
         self.send(&ShardMsg::Drain)?;
         let answered = control
             .drained_rx
@@ -574,15 +587,17 @@ where
     let mut draining = false;
     loop {
         // pump completions first so a drain observes them
-        let mut i = 0;
-        while i < pending.len() {
-            if let Some(resp) = pending[i].1.try_wait() {
-                pending.swap_remove(i);
-                answered += 1;
-                write_frame(&mut output, &encode_reply(&ShardReply::Response(resp)))?;
-            } else {
-                i += 1;
+        let mut finished: Vec<MatchResponse> = Vec::new();
+        pending.retain(|(_, ticket)| match ticket.try_wait() {
+            Some(resp) => {
+                finished.push(resp);
+                false
             }
+            None => true,
+        });
+        for resp in finished {
+            answered += 1;
+            write_frame(&mut output, &encode_reply(&ShardReply::Response(resp)))?;
         }
         if pending.is_empty() {
             if draining {

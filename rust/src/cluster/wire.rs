@@ -36,7 +36,7 @@ use crate::graph::Csr;
 use crate::matcher::{BitMask, Mapping, PsoConfig, SwarmSnapshot};
 use crate::scheduler::Priority;
 use crate::util::json::{
-    decode_opt_indices, encode_opt_indices, f32_bits, get_bool, get_dim, get_f32_bits,
+    as_index, decode_opt_indices, encode_opt_indices, f32_bits, get_bool, get_dim, get_f32_bits,
     get_hex_u64, get_str, get_u64, get_usize, hex_u64, Json,
 };
 
@@ -131,7 +131,8 @@ pub fn write_frame<W: Write>(w: &mut W, doc: &Json) -> Result<()> {
     let payload = doc.render();
     let bytes = payload.as_bytes();
     anyhow::ensure!(bytes.len() <= MAX_FRAME_BYTES, "frame of {} bytes too large", bytes.len());
-    w.write_all(&(bytes.len() as u32).to_be_bytes()).context("writing frame length")?;
+    let len = u32::try_from(bytes.len()).context("frame length exceeds u32")?;
+    w.write_all(&len.to_be_bytes()).context("writing frame length")?;
     w.write_all(bytes).context("writing frame payload")?;
     w.flush().context("flushing frame")?;
     Ok(())
@@ -146,6 +147,8 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
         0 => return Ok(None),
         mut got => {
             while got < 4 {
+                // lint:allow(no-panic-transport): got < 4 is the loop guard, so the
+                // len[got..] slice of the 4-byte prefix buffer cannot go out of bounds
                 let more = r.read(&mut len[got..])?;
                 if more == 0 {
                     bail!("truncated frame: EOF inside the length prefix ({got}/4 bytes)");
@@ -154,7 +157,8 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
             }
         }
     }
-    let len = u32::from_be_bytes(len) as usize;
+    let len = usize::try_from(u32::from_be_bytes(len))
+        .context("frame length exceeds this platform's address space")?;
     anyhow::ensure!(
         len <= MAX_FRAME_BYTES,
         "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
@@ -199,8 +203,8 @@ fn decode_priority(v: &Json, key: &str) -> Result<Priority> {
 pub fn encode_csr(csr: &Csr) -> Json {
     let mut flat = Vec::with_capacity(csr.edge_count() * 2);
     for (u, v) in csr.edges() {
-        flat.push(Json::Num(u as f64));
-        flat.push(Json::Num(v as f64));
+        flat.push(Json::Num(f64::from(u)));
+        flat.push(Json::Num(f64::from(v)));
     }
     Json::obj(vec![("nodes", Json::from(csr.nodes())), ("edges", Json::Arr(flat))])
 }
@@ -210,17 +214,14 @@ pub fn decode_csr(v: &Json) -> Result<Csr> {
     let nodes = get_dim(v, "nodes")?;
     let flat = v.get("edges").and_then(Json::as_array).context("csr missing edges")?;
     anyhow::ensure!(flat.len() % 2 == 0, "csr edge list has an odd element count");
+    let endpoint = |x: &Json| -> Result<u32> {
+        let x = as_index(x).context("csr edge endpoint")?;
+        u32::try_from(x).context("csr edge endpoint out of range")
+    };
     let mut pairs = Vec::with_capacity(flat.len() / 2);
     for uv in flat.chunks_exact(2) {
-        let endpoint = |x: &Json| -> Result<u32> {
-            let x = x.as_f64().context("csr edge endpoint not a number")?;
-            anyhow::ensure!(
-                x >= 0.0 && x.fract() == 0.0 && x <= u32::MAX as f64,
-                "csr edge endpoint out of range"
-            );
-            Ok(x as u32)
-        };
-        pairs.push((endpoint(&uv[0])?, endpoint(&uv[1])?));
+        let [u, v] = uv else { bail!("csr edge chunk is not a pair") };
+        pairs.push((endpoint(u)?, endpoint(v)?));
     }
     Csr::from_edge_pairs(nodes, &pairs)
 }
@@ -230,12 +231,7 @@ pub fn decode_csr(v: &Json) -> Result<Csr> {
 pub fn encode_mask(mask: &BitMask) -> Json {
     let rows: Vec<Json> = (0..mask.rows())
         .map(|i| {
-            Json::Arr(
-                (0..mask.cols())
-                    .filter(|&j| mask.get(i, j))
-                    .map(|j| Json::Num(j as f64))
-                    .collect(),
-            )
+            Json::Arr((0..mask.cols()).filter(|&j| mask.get(i, j)).map(Json::from).collect())
         })
         .collect();
     Json::obj(vec![
@@ -264,12 +260,9 @@ pub fn decode_mask(v: &Json) -> Result<BitMask> {
     let mut mask = BitMask::zeros(rows, cols);
     for (i, row) in set.iter().enumerate() {
         for j in row.as_array().context("mask row must be an array")? {
-            let j = j.as_f64().context("mask column not a number")?;
-            anyhow::ensure!(
-                j >= 0.0 && j.fract() == 0.0 && (j as usize) < cols,
-                "mask column {j} outside {cols} columns"
-            );
-            mask.set(i, j as usize);
+            let j = as_index(j).context("mask column")?;
+            anyhow::ensure!(j < cols, "mask column {j} outside {cols} columns");
+            mask.set(i, j);
         }
     }
     Ok(mask)

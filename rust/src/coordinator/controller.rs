@@ -215,6 +215,9 @@ impl GlobalController {
     /// request's in-flight token; engines honor it at epoch barriers.
     pub fn serve(&mut self, req: &MatchRequest<'_>, cancel: &CancelToken) -> MatchOutcome {
         self.stats.requests += 1;
+        // lint:allow(no-wallclock-core): telemetry-only episode timing (host_seconds)
+        // and the service-anchored deadline clock; neither feeds match results or
+        // ordering, and the epoch loop itself is deterministic
         let started = std::time::Instant::now();
         self.dense.clear();
 

@@ -24,7 +24,7 @@
 //!   stops the running episode at the next epoch barrier — the
 //!   "interruptible" in the paper's title.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -642,7 +642,7 @@ fn service_loop(
     let mut controller =
         factory().with_clock_base(start).with_epoch_quota(cfg.epoch_quota);
     let mut router = RequestRouter::new(cfg.queue_depth.max(1));
-    let mut pending: HashMap<RequestId, Submission> = HashMap::new();
+    let mut pending: BTreeMap<RequestId, Submission> = BTreeMap::new();
     let mut open = true;
 
     while open {
@@ -729,7 +729,7 @@ fn service_loop(
 fn admit_one(
     mut sub: Submission,
     router: &mut RequestRouter,
-    pending: &mut HashMap<RequestId, Submission>,
+    pending: &mut BTreeMap<RequestId, Submission>,
     stats: &Arc<Mutex<ServiceStats>>,
     start: Instant,
 ) {
@@ -758,7 +758,7 @@ fn admit_one(
 
 fn shed_response(
     id: RequestId,
-    pending: &mut HashMap<RequestId, Submission>,
+    pending: &mut BTreeMap<RequestId, Submission>,
     router: &RequestRouter,
     stats: &Arc<Mutex<ServiceStats>>,
 ) {

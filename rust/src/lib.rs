@@ -27,11 +27,22 @@
 //! See `DESIGN.md` for the complete system inventory and experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+// The only unsafe in the repo is the counting global allocator in
+// tests/alloc_free.rs (its own crate, with a local allow); the library
+// itself is forbid-level unsafe-free.
+#![forbid(unsafe_code)]
+// CI parity: the clippy job runs with `-D warnings`; promoting the
+// deny to the crate root makes a plain local `cargo build` match CI
+// instead of drifting until the next push.
+#![deny(warnings)]
+#![deny(clippy::all)]
+
 pub mod accel;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod graph;
+pub mod lint;
 pub mod matcher;
 pub mod report;
 pub mod runtime;

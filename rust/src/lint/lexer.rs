@@ -1,0 +1,380 @@
+//! The scrubbing lexer behind `immsched-lint`.
+//!
+//! Rules must see *code tokens only*: a doc comment quoting
+//! `partial_cmp().unwrap()` as a cautionary tale, or a fixture snippet
+//! embedded in a test as a raw string, must never produce a finding.
+//! [`scrub`] therefore rewrites the source into an equal-length string
+//! in which every comment, string literal, and char literal is blanked
+//! to spaces (newlines kept, so byte offsets map to the original line
+//! numbers), while harvesting `lint:allow` pragmas from plain `//`
+//! line comments (doc comments only ever *quote* pragma syntax)
+//! and mapping `#[cfg(test)] mod … { … }` regions so per-rule test-code
+//! exemptions can be applied by line.
+//!
+//! This is a token-level scanner, not a parser — the repo deliberately
+//! carries no `syn`-class dependency (see `util::json` for the same
+//! trade).  The lexer handles the constructs that actually occur in
+//! real Rust source: nested block comments, escapes in string/char
+//! literals, raw strings (`r"…"`, `r#"…"#`), byte literals (`b"…"`,
+//! `b'…'`, `br#"…"#`), and the char-literal-versus-lifetime ambiguity
+//! of a lone `'`.  Non-ASCII bytes are blanked as well, so the scrubbed
+//! text is pure ASCII and safe to slice at any offset.
+
+/// One `// lint:allow(<rule>): <justification>` pragma.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// The rule name between the parentheses (not yet validated).
+    pub rule: String,
+    /// Whether non-trivial justification text follows the rule name.
+    pub justified: bool,
+}
+
+/// The scrubbed view of one source file.
+pub struct Scrub {
+    /// Same byte length as the input; comment/literal/non-ASCII bytes
+    /// are spaces, newlines are preserved.
+    pub code: String,
+    /// Byte offset where each line begins (line 1 at offset 0).
+    line_starts: Vec<usize>,
+    /// Pragmas harvested from line comments, in source order.
+    pub pragmas: Vec<Pragma>,
+    /// Inclusive 1-based line ranges of `#[cfg(test)] mod` bodies.
+    test_ranges: Vec<(usize, usize)>,
+    /// Per line (0-indexed): does any non-whitespace code survive?
+    code_lines: Vec<bool>,
+}
+
+impl Scrub {
+    /// 1-based line number of a byte offset into the original source.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= offset)
+    }
+
+    /// Is this 1-based line inside a `#[cfg(test)] mod` body?
+    pub fn in_test_code(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(lo, hi)| line >= lo && line <= hi)
+    }
+
+    /// Does this 1-based line carry any code after scrubbing?
+    pub fn line_has_code(&self, line: usize) -> bool {
+        line >= 1 && self.code_lines.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// Blank comments and literals out of `src` (see module docs).
+pub fn scrub(src: &str) -> Scrub {
+    let bytes = src.as_bytes();
+    let mut code: Vec<u8> = bytes.to_vec();
+    // (byte offset, rule, justified) — lines resolved after the scan
+    let mut raw_pragmas: Vec<(usize, String, bool)> = Vec::new();
+
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+            let start = i;
+            // doc comments (`///`, `//!`) may *quote* pragma syntax —
+            // only plain `//` comments carry live pragmas
+            let doc = matches!(bytes.get(i + 2), Some(&b'/') | Some(&b'!'));
+            while i < bytes.len() && bytes[i] != b'\n' {
+                i += 1;
+            }
+            if !doc {
+                if let Some((rule, justified)) = parse_pragma(&src[start..i]) {
+                    raw_pragmas.push((start, rule, justified));
+                }
+            }
+            blank(&mut code, start, i);
+        } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < bytes.len() && depth > 0 {
+                if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut code, start, i);
+        } else if b == b'"' {
+            i = blank_string(&mut code, bytes, i);
+        } else if b == b'r' && !prev_is_ident(bytes, i) {
+            match raw_quote_after(bytes, i + 1) {
+                Some(q) => i = blank_raw_string(&mut code, bytes, i, q),
+                None => i += 1,
+            }
+        } else if b == b'b' && !prev_is_ident(bytes, i) {
+            match bytes.get(i + 1) {
+                Some(&b'"') => i = blank_string_from(&mut code, bytes, i, i + 1),
+                Some(&b'\'') => i = blank_char_from(&mut code, bytes, i, i + 1),
+                Some(&b'r') => match raw_quote_after(bytes, i + 2) {
+                    Some(q) => i = blank_raw_string(&mut code, bytes, i, q),
+                    None => i += 1,
+                },
+                _ => i += 1,
+            }
+        } else if b == b'\'' {
+            i = char_or_lifetime(&mut code, bytes, i);
+        } else {
+            i += 1;
+        }
+    }
+
+    // force pure ASCII so rule scans can slice anywhere (math glyphs in
+    // the few identifiers-adjacent positions would only ever *hide* a
+    // token, never invent one)
+    for b in code.iter_mut() {
+        if *b >= 0x80 {
+            *b = b' ';
+        }
+    }
+    let code = String::from_utf8(code).expect("scrubbed text is pure ASCII");
+
+    let mut line_starts = vec![0usize];
+    for (idx, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            line_starts.push(idx + 1);
+        }
+    }
+    let code_lines: Vec<bool> = code.lines().map(|l| !l.trim().is_empty()).collect();
+
+    let mut out = Scrub {
+        code,
+        line_starts,
+        pragmas: Vec::new(),
+        test_ranges: Vec::new(),
+        code_lines,
+    };
+    out.pragmas = raw_pragmas
+        .into_iter()
+        .map(|(offset, rule, justified)| Pragma { line: out.line_of(offset), rule, justified })
+        .collect();
+    out.test_ranges = test_regions(&out.code)
+        .into_iter()
+        .map(|(open, close)| (out.line_of(open), out.line_of(close)))
+        .collect();
+    out
+}
+
+/// Parse `lint:allow(<rule>)[: justification]` out of one line comment.
+fn parse_pragma(comment: &str) -> Option<(String, bool)> {
+    let at = comment.find("lint:allow(")?;
+    let rest = &comment[at + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..]
+        .trim_start_matches(|c: char| c == ':' || c.is_whitespace())
+        .trim();
+    // a justification must carry real words — a bare colon or a couple
+    // of punctuation characters do not explain anything
+    Some((rule, after.len() >= 8))
+}
+
+/// Find every `#[cfg(test)] mod … { … }` body as a byte range.
+fn test_regions(code: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("cfg(test)") {
+        let at = from + pos;
+        from = at + "cfg(test)".len();
+        let Some(open) = find_mod_open(code, from) else { continue };
+        let Some(close) = match_brace(bytes, open) else { continue };
+        out.push((open, close));
+    }
+    out
+}
+
+/// From just past a `cfg(test)` attribute, locate the opening brace of
+/// a `mod` item declared within the next few tokens (`None` when the
+/// attribute gates something other than a module).
+fn find_mod_open(code: &str, after: usize) -> Option<usize> {
+    let window_end = (after + 160).min(code.len());
+    let rel = find_ident(&code[after..window_end], "mod").into_iter().next()?;
+    let brace = code[after + rel..].find('{')?;
+    Some(after + rel + brace)
+}
+
+/// Whole-word occurrences of `word` in (scrubbed) `code`.
+pub fn find_ident(code: &str, word: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        from = at + 1;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Is this byte part of an identifier?
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// First non-whitespace position at or after `i`.
+pub fn skip_ws(bytes: &[u8], mut i: usize) -> usize {
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// The identifier starting at `i` (empty when none starts there).
+pub fn ident_at(bytes: &[u8], i: usize) -> &[u8] {
+    let mut j = i;
+    while j < bytes.len() && is_ident_byte(bytes[j]) {
+        j += 1;
+    }
+    bytes.get(i..j).unwrap_or(&[])
+}
+
+/// Offset of the `)` matching the `(` at `open`.
+pub fn match_paren(bytes: &[u8], open: usize) -> Option<usize> {
+    match_delims(bytes, open, b'(', b')')
+}
+
+/// Offset of the `}` matching the `{` at `open`.
+pub fn match_brace(bytes: &[u8], open: usize) -> Option<usize> {
+    match_delims(bytes, open, b'{', b'}')
+}
+
+fn match_delims(bytes: &[u8], open: usize, od: u8, cd: u8) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < bytes.len() {
+        if bytes[i] == od {
+            depth += 1;
+        } else if bytes[i] == cd {
+            depth = depth.checked_sub(1)?;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && is_ident_byte(bytes[i - 1])
+}
+
+/// After a raw-string prefix (`r` or `br`), the position of the opening
+/// quote past any `#`s — `None` when this is not a raw string (e.g. a
+/// raw identifier `r#match` or a plain ident starting with `r`).
+fn raw_quote_after(bytes: &[u8], mut j: usize) -> Option<usize> {
+    while bytes.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    (bytes.get(j) == Some(&b'"')).then_some(j)
+}
+
+fn blank(code: &mut [u8], start: usize, end: usize) {
+    for b in code.iter_mut().take(end.min(code.len())).skip(start) {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+/// Blank a normal string literal whose opening quote is at `q`;
+/// returns the offset just past the closing quote.
+fn blank_string(code: &mut [u8], bytes: &[u8], q: usize) -> usize {
+    blank_string_from(code, bytes, q, q)
+}
+
+fn blank_string_from(code: &mut [u8], bytes: &[u8], start: usize, q: usize) -> usize {
+    let mut i = q + 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => {
+                i += 1;
+                break;
+            }
+            _ => i += 1,
+        }
+    }
+    blank(code, start, i);
+    i
+}
+
+/// Blank a raw string: `start` is the prefix (`r`/`b`), `q` the opening
+/// quote; the `#`s between them set the closing delimiter.
+fn blank_raw_string(code: &mut [u8], bytes: &[u8], start: usize, q: usize) -> usize {
+    let hashes = q - start - usize::from(bytes.get(start) == Some(&b'b')) - 1;
+    let mut i = q + 1;
+    while i < bytes.len() {
+        if bytes[i] == b'"'
+            && i + 1 + hashes <= bytes.len()
+            && bytes[i + 1..i + 1 + hashes].iter().all(|&c| c == b'#')
+        {
+            i += 1 + hashes;
+            break;
+        }
+        i += 1;
+    }
+    blank(code, start, i);
+    i
+}
+
+/// Blank a definite char literal whose opening quote is at `q`.
+fn blank_char_from(code: &mut [u8], bytes: &[u8], start: usize, q: usize) -> usize {
+    let mut i = q + 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'\'' => {
+                i += 1;
+                break;
+            }
+            _ => i += 1,
+        }
+    }
+    blank(code, start, i);
+    i
+}
+
+/// A lone `'` opens a char literal iff a closing quote follows within
+/// one (possibly escaped or multi-byte) character; otherwise it
+/// introduces a lifetime and stays in place.
+fn char_or_lifetime(code: &mut [u8], bytes: &[u8], q: usize) -> usize {
+    match bytes.get(q + 1) {
+        Some(&b'\\') => blank_char_from(code, bytes, q, q),
+        Some(&c) => {
+            let width = utf8_width(c);
+            if bytes.get(q + 1 + width) == Some(&b'\'') {
+                blank_char_from(code, bytes, q, q)
+            } else {
+                q + 1
+            }
+        }
+        None => q + 1,
+    }
+}
+
+fn utf8_width(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b < 0xE0 {
+        2
+    } else if b < 0xF0 {
+        3
+    } else {
+        4
+    }
+}

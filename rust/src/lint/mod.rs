@@ -1,0 +1,224 @@
+//! `immsched-lint`: the dependency-free invariant linter.
+//!
+//! Everything this reproduction claims descends from one property —
+//! bit-exact determinism (serial ≡ threaded PSO epochs, bit-identical
+//! warm-start resume, a wire codec that survives a process hop).  The
+//! five rules in [`rules`] mechanize the invariants that property rests
+//! on; this module turns them into a tier-1 gate: `tests/lint.rs` runs
+//! the linter over the live tree under plain `cargo test`, and the
+//! `lint` binary (`cargo run --release --bin lint`) walks `src/`,
+//! `tests/` and `benches/`, prints findings, writes a machine-readable
+//! JSON report, and exits nonzero on any finding.
+//!
+//! In the repo's own idiom (`util::json` precedent) the scanner is
+//! token-level and dependency-free — no `syn`.  The [`lexer`] blanks
+//! comments and string/char literals so quoted counter-examples never
+//! trigger rules, maps `#[cfg(test)]` bodies for per-rule test
+//! exemptions, and harvests suppression pragmas.
+//!
+//! # Pragmas
+//!
+//! A finding is suppressed by a line comment on the same line, or
+//! standing alone directly above it (further comment-only lines may
+//! intervene):
+//!
+//! ```text
+//! // lint:allow(no-wallclock-core): telemetry-only timing, never ordering
+//! ```
+//!
+//! The justification text after the colon is mandatory; a pragma
+//! without one, naming an unknown rule, or suppressing nothing is
+//! itself reported (as [`BAD_PRAGMA`] / [`UNUSED_PRAGMA`]), so stale
+//! escapes cannot accumulate.
+
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub use lexer::{scrub, Pragma, Scrub};
+pub use rules::{
+    NO_FLOAT_UNWRAP_ORD, NO_HASH_ITER_DETERMINISM, NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT,
+    NO_WALLCLOCK_CORE, RULES,
+};
+
+/// Schema tag carried by the JSON findings report.
+pub const REPORT_SCHEMA: &str = "immsched.lint/v1";
+
+/// A malformed `lint:allow` pragma: missing justification text, or an
+/// unknown rule name.
+pub const BAD_PRAGMA: &str = "lint-pragma";
+
+/// A justified `lint:allow` pragma that suppresses nothing.
+pub const UNUSED_PRAGMA: &str = "unused-lint-allow";
+
+/// One linter finding, attributed to a file and 1-based line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Crate-relative path, `/`-separated.
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    /// `path:line: [rule] message` — the human-facing form.
+    pub fn display_line(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::from(self.path.as_str())),
+            ("line", Json::from(self.line)),
+            ("rule", Json::from(self.rule)),
+            ("message", Json::from(self.message.as_str())),
+        ])
+    }
+}
+
+/// The result of linting a tree: every finding, sorted by
+/// (path, line, rule), plus how many files were scanned.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable form (uploaded as a CI artifact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::from(REPORT_SCHEMA)),
+            ("root", Json::from(self.root.as_str())),
+            ("files_scanned", Json::from(self.files_scanned)),
+            ("findings", Json::Arr(self.findings.iter().map(Finding::to_json).collect())),
+        ])
+    }
+}
+
+/// Lint one file's source text.  `rel_path` is the crate-relative,
+/// `/`-separated path — it selects which rules are in scope.
+pub fn lint_source(rel_path: &str, source: &str) -> Vec<Finding> {
+    let scrubbed = lexer::scrub(source);
+    let raw = rules::scan(rel_path, &scrubbed);
+    let mut used = vec![false; scrubbed.pragmas.len()];
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in raw {
+        match pragma_covering(&scrubbed, f.line, f.rule) {
+            Some(idx) => used[idx] = true,
+            None => findings.push(Finding {
+                path: rel_path.to_string(),
+                line: f.line,
+                rule: f.rule,
+                message: f.message,
+            }),
+        }
+    }
+    for (idx, p) in scrubbed.pragmas.iter().enumerate() {
+        if !RULES.contains(&p.rule.as_str()) {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line: p.line,
+                rule: BAD_PRAGMA,
+                message: format!("lint:allow names unknown rule {:?}", p.rule),
+            });
+        } else if !p.justified {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line: p.line,
+                rule: BAD_PRAGMA,
+                message: format!(
+                    "lint:allow({}) has no justification — write \
+                     `// lint:allow({}): <why this site is safe>`",
+                    p.rule, p.rule
+                ),
+            });
+        } else if !used[idx] {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line: p.line,
+                rule: UNUSED_PRAGMA,
+                message: format!("lint:allow({}) suppresses nothing — remove it", p.rule),
+            });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Which justified pragma (if any) covers a finding of `rule` at
+/// `line`: one trailing on the same line, or one standing alone above
+/// it with only comment/blank lines in between.
+fn pragma_covering(scrubbed: &Scrub, line: usize, rule: &str) -> Option<usize> {
+    for (idx, p) in scrubbed.pragmas.iter().enumerate() {
+        if p.rule != rule || !p.justified {
+            continue;
+        }
+        if p.line == line {
+            return Some(idx);
+        }
+        if p.line < line
+            && !scrubbed.line_has_code(p.line)
+            && (p.line + 1..line).all(|l| !scrubbed.line_has_code(l))
+        {
+            return Some(idx);
+        }
+    }
+    None
+}
+
+/// Lint every `.rs` file under `<root>/{src,tests,benches}`.
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in ["src", "tests", "benches"] {
+        collect_rs(&root.join(dir), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        findings.extend(lint_source(&rel, &source));
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(Report {
+        root: root.to_string_lossy().into_owned(),
+        files_scanned: files.len(),
+        findings,
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("reading directory {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

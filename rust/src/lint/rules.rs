@@ -1,0 +1,335 @@
+//! The five `immsched-lint` rules and their module scopes.
+//!
+//! Every rule mechanizes one invariant the reproduction's claims rest
+//! on (see `rust/README.md`, "Invariants enforced by static analysis"):
+//! the tree stays bit-exactly deterministic, NaN-safe, and
+//! panic-free across the transport boundary not because reviewers
+//! remember to check, but because `cargo run --bin lint` fails when it
+//! is not.
+//!
+//! Scopes are path prefixes relative to the crate root (`src/…`,
+//! `tests/…`, `benches/…`); an entry ending in `/` matches a subtree,
+//! anything else matches one file exactly.
+
+use super::lexer::{find_ident, ident_at, is_ident_byte, match_paren, skip_ws, Scrub};
+
+/// `partial_cmp(..).unwrap()` / comparator callbacks built on
+/// `partial_cmp` — one NaN operand panics the comparison.  Applies
+/// everywhere, tests included.
+pub const NO_FLOAT_UNWRAP_ORD: &str = "no-float-unwrap-ord";
+
+/// `HashMap`/`HashSet` in deterministic modules — iteration order is
+/// randomized per process and can leak into results or wire bytes.
+pub const NO_HASH_ITER_DETERMINISM: &str = "no-hash-iter-determinism";
+
+/// `Instant::now`/`SystemTime` outside the service/driver boundary —
+/// core algorithms must be replayable; only relative timeouts cross
+/// the wire.
+pub const NO_WALLCLOCK_CORE: &str = "no-wallclock-core";
+
+/// `.unwrap()`/`.expect()`/panicking macros/indexing in the transport
+/// layer — a decode failure must stay a loud `Err`, never a worker
+/// abort.  `#[cfg(test)]` bodies are exempt.
+pub const NO_PANIC_TRANSPORT: &str = "no-panic-transport";
+
+/// Bare `as` numeric casts in the wire codec — narrowing must go
+/// through `From`/`TryFrom` or the checked `util::json` helpers so the
+/// bit-exact encodings cannot silently truncate.
+pub const NO_LOSSY_WIRE_CAST: &str = "no-lossy-wire-cast";
+
+/// All real rules (pragma-hygiene findings use separate names).
+pub const RULES: [&str; 5] = [
+    NO_FLOAT_UNWRAP_ORD,
+    NO_HASH_ITER_DETERMINISM,
+    NO_WALLCLOCK_CORE,
+    NO_PANIC_TRANSPORT,
+    NO_LOSSY_WIRE_CAST,
+];
+
+/// Modules whose iteration order / float ordering reaches results or
+/// wire bytes ([`NO_HASH_ITER_DETERMINISM`]).
+const DETERMINISTIC_MODULES: &[&str] = &[
+    "src/matcher/",
+    "src/graph/",
+    "src/cluster/wire.rs",
+    "src/cluster/policy.rs",
+    "src/scheduler/lts_policies.rs",
+];
+
+/// Boundary modules allowed to read the wall clock: binaries, benches,
+/// tests, and the service/driver layer that anchors relative timeouts
+/// ([`NO_WALLCLOCK_CORE`] applies everywhere else).
+const WALLCLOCK_BOUNDARY: &[&str] = &[
+    "src/main.rs",
+    "src/bin/",
+    "benches/",
+    "tests/",
+    "examples/",
+    "src/coordinator/service.rs",
+    "src/cluster/mod.rs",
+    "src/cluster/driver.rs",
+    "src/cluster/transport.rs",
+];
+
+/// The transport layer ([`NO_PANIC_TRANSPORT`]).
+const TRANSPORT_MODULES: &[&str] = &["src/cluster/wire.rs", "src/cluster/transport.rs"];
+
+/// The wire codec itself ([`NO_LOSSY_WIRE_CAST`]).
+const WIRE_MODULES: &[&str] = &["src/cluster/wire.rs"];
+
+fn in_listed(rel: &str, list: &[&str]) -> bool {
+    list.iter().any(|m| if m.ends_with('/') { rel.starts_with(m) } else { rel == *m })
+}
+
+/// One pre-pragma finding (file attached by the caller).
+#[derive(Clone, Debug)]
+pub struct RawFinding {
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Run every rule in scope for `rel` over one scrubbed file.
+pub fn scan(rel: &str, scrub: &Scrub) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    float_unwrap_ord(scrub, &mut out);
+    if in_listed(rel, DETERMINISTIC_MODULES) {
+        hash_collections(scrub, &mut out);
+    }
+    if !in_listed(rel, WALLCLOCK_BOUNDARY) {
+        wallclock(scrub, &mut out);
+    }
+    if in_listed(rel, TRANSPORT_MODULES) {
+        panic_transport(scrub, &mut out);
+    }
+    if in_listed(rel, WIRE_MODULES) {
+        lossy_casts(scrub, &mut out);
+    }
+    // one construct can trip a rule via several probes (e.g. a sort_by
+    // whose callback also unwraps); collapse to one finding per line
+    out.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+    out.dedup_by(|x, y| x.line == y.line && x.rule == y.rule);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: no-float-unwrap-ord
+// ---------------------------------------------------------------------------
+
+fn float_unwrap_ord(scrub: &Scrub, out: &mut Vec<RawFinding>) {
+    let code = &scrub.code;
+    let bytes = code.as_bytes();
+    // form A: a partial_cmp(...) call whose result is unwrapped
+    for at in find_ident(code, "partial_cmp") {
+        let open = skip_ws(bytes, at + "partial_cmp".len());
+        if bytes.get(open) != Some(&b'(') {
+            continue;
+        }
+        let Some(close) = match_paren(bytes, open) else { continue };
+        let dot = skip_ws(bytes, close + 1);
+        if bytes.get(dot) != Some(&b'.') {
+            continue;
+        }
+        let name = ident_at(bytes, skip_ws(bytes, dot + 1));
+        if name == b"unwrap" || name == b"expect" {
+            out.push(RawFinding {
+                line: scrub.line_of(at),
+                rule: NO_FLOAT_UNWRAP_ORD,
+                message: "partial_cmp(..).unwrap() panics on NaN; use total_cmp \
+                          (NaN orders last, the queue.rs convention)"
+                    .into(),
+            });
+        }
+    }
+    // form B: a comparator callback built on partial_cmp (sort_by &
+    // friends) — even a non-panicking fallback makes the order lie
+    for word in ["sort_by", "sort_unstable_by", "min_by", "max_by"] {
+        for at in find_ident(code, word) {
+            let open = skip_ws(bytes, at + word.len());
+            if bytes.get(open) != Some(&b'(') {
+                continue;
+            }
+            let Some(close) = match_paren(bytes, open) else { continue };
+            let body = code.get(open..close).unwrap_or("");
+            if !find_ident(body, "partial_cmp").is_empty() {
+                out.push(RawFinding {
+                    line: scrub.line_of(at),
+                    rule: NO_FLOAT_UNWRAP_ORD,
+                    message: format!(
+                        "{word} comparator built on partial_cmp; use total_cmp so \
+                         NaN has a defined (last) position"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: no-hash-iter-determinism
+// ---------------------------------------------------------------------------
+
+fn hash_collections(scrub: &Scrub, out: &mut Vec<RawFinding>) {
+    for word in ["HashMap", "HashSet"] {
+        for at in find_ident(&scrub.code, word) {
+            out.push(RawFinding {
+                line: scrub.line_of(at),
+                rule: NO_HASH_ITER_DETERMINISM,
+                message: format!(
+                    "{word} iteration order is randomized per process; use \
+                     BTreeMap/BTreeSet (or sorted iteration) in deterministic modules"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule 3: no-wallclock-core
+// ---------------------------------------------------------------------------
+
+fn wallclock(scrub: &Scrub, out: &mut Vec<RawFinding>) {
+    let code = &scrub.code;
+    let bytes = code.as_bytes();
+    for at in find_ident(code, "Instant") {
+        let colon = skip_ws(bytes, at + "Instant".len());
+        if bytes.get(colon) == Some(&b':')
+            && bytes.get(colon + 1) == Some(&b':')
+            && ident_at(bytes, skip_ws(bytes, colon + 2)) == b"now"
+        {
+            out.push(RawFinding {
+                line: scrub.line_of(at),
+                rule: NO_WALLCLOCK_CORE,
+                message: "Instant::now() outside the service/driver boundary makes \
+                          core results unreplayable; thread a clock in from the caller"
+                    .into(),
+            });
+        }
+    }
+    for at in find_ident(code, "SystemTime") {
+        out.push(RawFinding {
+            line: scrub.line_of(at),
+            rule: NO_WALLCLOCK_CORE,
+            message: "SystemTime outside the service/driver boundary makes core \
+                      results unreplayable; only relative timeouts may cross the wire"
+                .into(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule 4: no-panic-transport
+// ---------------------------------------------------------------------------
+
+/// Keywords that may legitimately precede a `[` without forming an
+/// index expression (`let [u, v] = …`, `match x { … }[`-adjacent, …).
+const PRE_BRACKET_KEYWORDS: &[&[u8]] = &[
+    b"let", b"else", b"match", b"return", b"in", b"if", b"while", b"loop", b"mut", b"ref",
+    b"move", b"break", b"continue", b"as", b"unsafe",
+];
+
+fn panic_transport(scrub: &Scrub, out: &mut Vec<RawFinding>) {
+    let code = &scrub.code;
+    let bytes = code.as_bytes();
+    let push = |out: &mut Vec<RawFinding>, at: usize, message: String| {
+        let line = scrub.line_of(at);
+        if !scrub.in_test_code(line) {
+            out.push(RawFinding { line, rule: NO_PANIC_TRANSPORT, message });
+        }
+    };
+    for word in ["unwrap", "expect"] {
+        for at in find_ident(code, word) {
+            if preceded_by_dot_or_path(bytes, at) {
+                push(
+                    out,
+                    at,
+                    format!(
+                        ".{word}() in the transport layer turns a decode failure \
+                         into a worker abort; propagate an Err instead"
+                    ),
+                );
+            }
+        }
+    }
+    for word in ["panic", "unreachable", "todo", "unimplemented"] {
+        for at in find_ident(code, word) {
+            if bytes.get(at + word.len()) == Some(&b'!') {
+                push(
+                    out,
+                    at,
+                    format!("{word}! in the transport layer aborts the worker; bail! instead"),
+                );
+            }
+        }
+    }
+    for (at, &b) in bytes.iter().enumerate() {
+        if b == b'[' && is_index_expression(bytes, at) {
+            push(
+                out,
+                at,
+                "indexing/slicing can panic in the transport layer; use get()/\
+                 slice patterns or prove the bound and lint:allow with the proof"
+                    .into(),
+            );
+        }
+    }
+}
+
+fn preceded_by_dot_or_path(bytes: &[u8], at: usize) -> bool {
+    let mut i = at;
+    while i > 0 && bytes[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    i > 0 && (bytes[i - 1] == b'.' || (i > 1 && bytes[i - 1] == b':' && bytes[i - 2] == b':'))
+}
+
+/// A `[` opens an index expression when the previous non-space token is
+/// an identifier (that is not a keyword), a `)`, or a `]`.
+fn is_index_expression(bytes: &[u8], at: usize) -> bool {
+    let mut p = at;
+    while p > 0 && bytes[p - 1] == b' ' {
+        p -= 1;
+    }
+    if p == 0 {
+        return false;
+    }
+    let prev = bytes[p - 1];
+    if prev == b')' || prev == b']' {
+        return true;
+    }
+    if !is_ident_byte(prev) {
+        return false;
+    }
+    let mut s = p - 1;
+    while s > 0 && is_ident_byte(bytes[s - 1]) {
+        s -= 1;
+    }
+    let word = bytes.get(s..p).unwrap_or(&[]);
+    !PRE_BRACKET_KEYWORDS.contains(&word)
+}
+
+// ---------------------------------------------------------------------------
+// rule 5: no-lossy-wire-cast
+// ---------------------------------------------------------------------------
+
+const NUMERIC_PRIMITIVES: &[&[u8]] = &[
+    b"u8", b"u16", b"u32", b"u64", b"u128", b"usize", b"i8", b"i16", b"i32", b"i64", b"i128",
+    b"isize", b"f32", b"f64",
+];
+
+fn lossy_casts(scrub: &Scrub, out: &mut Vec<RawFinding>) {
+    let code = &scrub.code;
+    let bytes = code.as_bytes();
+    for at in find_ident(code, "as") {
+        let target = ident_at(bytes, skip_ws(bytes, at + 2));
+        if NUMERIC_PRIMITIVES.contains(&target) {
+            out.push(RawFinding {
+                line: scrub.line_of(at),
+                rule: NO_LOSSY_WIRE_CAST,
+                message: "bare `as` numeric cast in the wire codec can silently \
+                          truncate; use From/TryFrom or the checked util::json helpers"
+                    .into(),
+            });
+        }
+    }
+}

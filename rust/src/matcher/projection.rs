@@ -160,7 +160,7 @@ mod tests {
     }
 
     fn is_injective(assign: &Mapping) -> bool {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         assign.iter().flatten().all(|j| seen.insert(*j))
     }
 

@@ -20,6 +20,7 @@
 //!   underuse their reservation.
 
 use super::task::Priority;
+use crate::util::ord::{nan_greatest_cmp, nan_least_cmp};
 
 /// What a policy sees about one queued/running task.
 #[derive(Clone, Copy, Debug)]
@@ -66,15 +67,14 @@ pub fn prema_tokens(view: &TaskView, now: f64) -> f64 {
 }
 
 /// Pick the queued task with the most tokens (ties: earliest arrival).
+/// NaN-keyed tasks (poisoned arrival) never win the pick.
 pub fn prema_pick(queue: &[TaskView], now: f64) -> Option<usize> {
     queue
         .iter()
         .enumerate()
         .max_by(|(_, a), (_, b)| {
-            prema_tokens(a, now)
-                .partial_cmp(&prema_tokens(b, now))
-                .unwrap()
-                .then(b.arrival.partial_cmp(&a.arrival).unwrap())
+            nan_least_cmp(prema_tokens(a, now), prema_tokens(b, now))
+                .then(nan_greatest_cmp(b.arrival, a.arrival))
         })
         .map(|(i, _)| i)
 }
@@ -110,9 +110,7 @@ pub fn planaria_pick(queue: &[TaskView], now: f64) -> Option<usize> {
     queue
         .iter()
         .enumerate()
-        .max_by(|(_, a), (_, b)| {
-            planaria_score(a, now).partial_cmp(&planaria_score(b, now)).unwrap()
-        })
+        .max_by(|(_, a), (_, b)| nan_least_cmp(planaria_score(a, now), planaria_score(b, now)))
         .map(|(i, _)| i)
 }
 
@@ -165,8 +163,7 @@ pub fn moca_pick(queue: &[TaskView], bandwidth_budget_bytes: u64) -> Option<usiz
         .iter()
         .max_by(|(_, a), (_, b)| {
             priority_weight(a.priority)
-                .partial_cmp(&priority_weight(b.priority))
-                .unwrap()
+                .total_cmp(&priority_weight(b.priority))
                 .then(a.dram_bytes.cmp(&b.dram_bytes))
         })
         .copied()
@@ -188,7 +185,10 @@ pub fn moca_pick(queue: &[TaskView], bandwidth_budget_bytes: u64) -> Option<usiz
 /// CD-MSA: earliest-deadline-first with a cooperation bonus.
 /// `coop_credit[i]` ∈ [0, 1] is how much of its reservation task i has
 /// historically ceded; higher credit breaks deadline ties first.
-pub fn cdmsa_pick(queue: &[TaskView], coop_credit: &[f64], now: f64) -> Option<usize> {
+/// A NaN deadline, credit or arrival demotes the task, never wedges the
+/// queue (feasibility itself is [`cdmsa_admissible`], which the
+/// simulator consults separately).
+pub fn cdmsa_pick(queue: &[TaskView], coop_credit: &[f64], _now: f64) -> Option<usize> {
     assert_eq!(queue.len(), coop_credit.len());
     queue
         .iter()
@@ -196,18 +196,11 @@ pub fn cdmsa_pick(queue: &[TaskView], coop_credit: &[f64], now: f64) -> Option<u
         .min_by(|(i, a), (j, b)| {
             let da = a.deadline.unwrap_or(f64::INFINITY);
             let db = b.deadline.unwrap_or(f64::INFINITY);
-            da.partial_cmp(&db)
-                .unwrap()
-                .then(coop_credit[*j].partial_cmp(&coop_credit[*i]).unwrap())
-                .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+            nan_greatest_cmp(da, db)
+                .then(nan_least_cmp(coop_credit[*j], coop_credit[*i]))
+                .then(nan_greatest_cmp(a.arrival, b.arrival))
         })
         .map(|(i, _)| i)
-        .filter(|_| {
-            // CD-MSA refuses to start a task that cannot meet its
-            // deadline anymore (it would waste the array) unless nothing
-            // else is admissible
-            true
-        })
 }
 
 /// CD-MSA admission: would starting `view` now still meet its deadline?
@@ -232,7 +225,8 @@ mod tests {
         let q = [bg, urgent];
         assert_eq!(prema_pick(&q, 1.0), Some(1));
         // long-starved background eventually wins (no starvation)
-        assert_eq!(prema_pick(&[view(0, Priority::Background, 0.0), view(1, Priority::Urgent, 9.9)], 10.0), Some(0));
+        let q = [view(0, Priority::Background, 0.0), view(1, Priority::Urgent, 9.9)];
+        assert_eq!(prema_pick(&q, 10.0), Some(0));
     }
 
     #[test]
@@ -297,6 +291,52 @@ mod tests {
         // b and c tie on deadline; c has more cooperation credit
         let pick = cdmsa_pick(&[a, b, c], &[0.0, 0.2, 0.9], 1.0);
         assert_eq!(pick, Some(2));
+    }
+
+    #[test]
+    fn prema_nan_arrival_never_wins_and_never_panics() {
+        // regression: the old comparator was partial_cmp(..).unwrap(),
+        // which aborted the whole episode on one NaN-keyed task
+        let fresh = view(0, Priority::Normal, 2.0);
+        let poisoned = view(1, Priority::Normal, f64::NAN);
+        // NaN arrival → NaN wait, but f64::max(NaN-now, 0.0) is 0.0, so
+        // tokens tie at 0 and the arrival tiebreak must demote the NaN
+        assert_eq!(prema_pick(&[fresh, poisoned], 2.0), Some(0));
+        assert_eq!(prema_pick(&[poisoned, fresh], 2.0), Some(1));
+        // all-NaN queue still returns *something* deterministically
+        assert!(prema_pick(&[poisoned, poisoned], 2.0).is_some());
+    }
+
+    #[test]
+    fn planaria_nan_inputs_cannot_panic_the_pick() {
+        // a NaN remaining (or deadline) is absorbed by the laxity floor —
+        // `(..).max(1e-9)` ignores NaN — so the score stays finite; and
+        // the comparator is nan_least_cmp rather than
+        // partial_cmp(..).unwrap(), so even a genuinely NaN score
+        // (poisoned best-effort weight) demotes instead of aborting
+        let mut poisoned = view(0, Priority::Normal, 0.0);
+        poisoned.deadline = Some(1.0);
+        poisoned.remaining = f64::NAN;
+        assert!(planaria_score(&poisoned, 0.0).is_finite());
+        let sane = view(1, Priority::Normal, 0.0);
+        assert!(planaria_pick(&[poisoned, sane], 0.0).is_some());
+    }
+
+    #[test]
+    fn cdmsa_nan_keys_demote_instead_of_panicking() {
+        // NaN deadline loses to any real deadline
+        let mut nan_dl = view(0, Priority::Normal, 0.0);
+        nan_dl.deadline = Some(f64::NAN);
+        let mut real_dl = view(1, Priority::Normal, 0.0);
+        real_dl.deadline = Some(3.0);
+        assert_eq!(cdmsa_pick(&[nan_dl, real_dl], &[0.5, 0.5], 1.0), Some(1));
+        // NaN cooperation credit loses the tiebreak
+        let mut a = view(0, Priority::Normal, 0.0);
+        a.deadline = Some(3.0);
+        let mut b = view(1, Priority::Normal, 0.0);
+        b.deadline = Some(3.0);
+        assert_eq!(cdmsa_pick(&[a, b], &[f64::NAN, 0.1], 1.0), Some(1));
+        assert_eq!(cdmsa_pick(&[a, b], &[0.1, f64::NAN], 1.0), Some(0));
     }
 
     #[test]

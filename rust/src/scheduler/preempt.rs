@@ -11,6 +11,7 @@
 //!   deadline violations of the original tasks caused by preemption").
 
 use super::task::Priority;
+use crate::util::ord::nan_least_cmp;
 
 /// Policy parameters.
 #[derive(Clone, Copy, Debug)]
@@ -76,12 +77,15 @@ impl PreemptPolicy {
                 matches!(c.owner_priority, Some(Priority::Background) | Some(Priority::Normal))
             })
             .collect();
-        // max-slack first within each priority class; Background before Normal
+        // max-slack first within each priority class; Background before
+        // Normal; an owner with NaN slack (unknown headroom) sorts last
+        // in its class, so it is reclaimed only once every known-slack
+        // victim is taken
         owned.sort_by(|a, b| {
             let pa = a.owner_priority.unwrap();
             let pb = b.owner_priority.unwrap();
             pa.cmp(&pb) // Background < Normal: Background first
-                .then(b.owner_slack.partial_cmp(&a.owner_slack).unwrap())
+                .then(nan_least_cmp(b.owner_slack, a.owner_slack))
                 .then(a.engine.cmp(&b.engine))
         });
         idle.into_iter()
@@ -149,6 +153,21 @@ mod tests {
         ];
         let victims = p.select_victims(&cands, 2, 3.0);
         assert_eq!(victims[0], 1);
+    }
+
+    #[test]
+    fn nan_slack_victim_taken_last_not_panicking() {
+        // regression: the slack tiebreak was partial_cmp(..).unwrap(),
+        // so one owner with a poisoned (NaN) slack estimate aborted
+        // victim selection for the whole interrupt
+        let p = PreemptPolicy::default();
+        let cands = vec![
+            cand(0, Some(Priority::Background), f64::NAN),
+            cand(1, Some(Priority::Background), 1.0),
+            cand(2, Some(Priority::Background), 9.0),
+        ];
+        let victims = p.select_victims(&cands, 4, 3.0); // cap = 2
+        assert_eq!(victims, vec![2, 1], "NaN slack must rank below known slack");
     }
 
     #[test]

@@ -155,11 +155,9 @@ impl PartialOrd for OrdEvent {
 
 impl Ord for OrdEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0
-            .time
-            .partial_cmp(&other.0.time)
-            .unwrap()
-            .then(self.0.task.cmp(&other.0.task))
+        // total_cmp: a NaN event time orders after every real time
+        // instead of panicking the event heap
+        self.0.time.total_cmp(&other.0.time).then(self.0.task.cmp(&other.0.task))
     }
 }
 

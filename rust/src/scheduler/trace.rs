@@ -211,7 +211,7 @@ pub fn build_trace(cfg: &TraceConfig, platform: &Platform) -> Vec<Task> {
         t += sampler.next_gap(&mut rng);
     }
 
-    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     // re-number in arrival order so TaskId doubles as an arrival index
     for (i, task) in tasks.iter_mut().enumerate() {
         task.id = i;

@@ -159,16 +159,22 @@ pub fn get_hex_u64(v: &Json, key: &str) -> Result<u64> {
     u64::from_str_radix(s, 16).map_err(|_| anyhow!("bad hex field {key:?} = {s:?}"))
 }
 
-/// Decode a non-negative integer field (an index or count).
-pub fn get_usize(v: &Json, key: &str) -> Result<usize> {
-    let x = v
-        .get(key)
-        .and_then(Json::as_f64)
-        .ok_or_else(|| anyhow!("missing numeric field {key:?}"))?;
+/// Decode one JSON value as a non-negative integer index or count.
+/// This is the single checked number→usize conversion the wire codecs
+/// use — the bounds check lives here so call sites never need a bare
+/// `as` cast on untrusted input.
+pub fn as_index(v: &Json) -> Result<usize> {
+    let x = v.as_f64().ok_or_else(|| anyhow!("value is not a number"))?;
     if !(x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64) {
-        bail!("field {key:?} = {x} is not an index");
+        bail!("value {x} is not an index");
     }
     Ok(x as usize)
+}
+
+/// Decode a non-negative integer field (an index or count).
+pub fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    let field = v.get(key).ok_or_else(|| anyhow!("missing numeric field {key:?}"))?;
+    as_index(field).map_err(|e| e.context(format!("field {key:?}")))
 }
 
 /// [`get_usize`] additionally bounded by [`MAX_WIRE_DIM`] — for any

@@ -10,10 +10,12 @@
 pub mod json;
 pub mod logging;
 pub mod matrix;
+pub mod ord;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
 pub use matrix::{row_normalize_in_place, MatF};
+pub use ord::{nan_greatest_cmp, nan_least_cmp};
 pub use rng::Rng;
 pub use stats::Summary;

@@ -1,0 +1,89 @@
+//! Total orderings over `f64` with an explicit NaN convention.
+//!
+//! `partial_cmp(..).unwrap()` panics the moment a NaN reaches a
+//! comparator — and scheduler inputs (slack, deadlines, arrival times,
+//! fitness) are all derived floats, so one poisoned task could abort a
+//! whole serving episode.  `f64::total_cmp` never panics but its IEEE
+//! total order interleaves NaN with the sign bit (−NaN below −inf,
+//! +NaN above +inf), which is the wrong tiebreak in both directions.
+//!
+//! These two comparators pin the convention the repo wants
+//! (`no-float-unwrap-ord` in `immsched-lint` enforces their use):
+//! *a NaN-keyed task never wins a pick and never wedges a queue* —
+//! it sorts last, deterministically, whichever way the selection runs.
+
+use std::cmp::Ordering;
+
+/// Total order where every NaN compares greater than every real value
+/// (NaNs are mutually equal).
+///
+/// Use in ascending sorts and `min_by`-style selections so NaN keys
+/// rank last / never win.
+pub fn nan_greatest_cmp(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
+/// Total order where every NaN compares less than every real value
+/// (NaNs are mutually equal).
+///
+/// Use in `max_by`-style selections (and descending sorts) so NaN keys
+/// rank last / never win.
+pub fn nan_least_cmp(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reals_order_normally() {
+        assert_eq!(nan_greatest_cmp(1.0, 2.0), Ordering::Less);
+        assert_eq!(nan_greatest_cmp(2.0, 1.0), Ordering::Greater);
+        assert_eq!(nan_greatest_cmp(1.0, 1.0), Ordering::Equal);
+        assert_eq!(nan_least_cmp(1.0, 2.0), Ordering::Less);
+        assert_eq!(nan_least_cmp(-0.0, 0.0), Ordering::Less); // total order, like total_cmp
+    }
+
+    #[test]
+    fn nan_ranks_last_in_both_conventions() {
+        let nan = f64::NAN;
+        // ascending sort / min_by: NaN is the greatest value
+        assert_eq!(nan_greatest_cmp(nan, f64::INFINITY), Ordering::Greater);
+        assert_eq!(nan_greatest_cmp(f64::NEG_INFINITY, nan), Ordering::Less);
+        assert_eq!(nan_greatest_cmp(nan, nan), Ordering::Equal);
+        // max_by: NaN is the least value, so it can never be the max
+        assert_eq!(nan_least_cmp(nan, f64::NEG_INFINITY), Ordering::Less);
+        assert_eq!(nan_least_cmp(f64::INFINITY, nan), Ordering::Greater);
+        assert_eq!(nan_least_cmp(nan, nan), Ordering::Equal);
+    }
+
+    #[test]
+    fn sort_pushes_nan_to_the_tail() {
+        let mut xs = vec![2.0, f64::NAN, -1.0, 3.0];
+        xs.sort_by(|a, b| nan_greatest_cmp(*a, *b));
+        assert_eq!(&xs[..3], &[-1.0, 2.0, 3.0]);
+        assert!(xs[3].is_nan());
+    }
+
+    #[test]
+    fn max_by_never_picks_nan() {
+        let xs = [f64::NAN, 1.0, f64::NAN, 0.5];
+        let best = xs
+            .iter()
+            .copied()
+            .max_by(|a, b| nan_least_cmp(*a, *b))
+            .unwrap();
+        assert_eq!(best, 1.0);
+    }
+}

@@ -61,7 +61,11 @@ impl Summary {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // NaN samples sort to the tail (the repo's queue.rs
+            // NaN-orders-last convention): low/mid percentiles of a
+            // partially poisoned sample stay finite, and a NaN sample
+            // can no longer panic the sort outright
+            self.values.sort_by(|a, b| crate::util::ord::nan_greatest_cmp(*a, *b));
             self.sorted = true;
         }
     }
@@ -124,5 +128,16 @@ mod tests {
     #[test]
     fn empty_summary_is_nan() {
         assert!(Summary::new().mean().is_nan());
+    }
+
+    #[test]
+    fn percentile_with_nan_sample_does_not_panic_and_keeps_low_quantiles_finite() {
+        // regression: the sort comparator was partial_cmp(..).unwrap(),
+        // so one NaN latency sample aborted the whole bench summary;
+        // now NaN sorts last, poisoning only the top of the distribution
+        let mut s = Summary::from_iter([3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.median(), 3.0); // rank round(1.5) = 2 of [1, 2, 3, NaN]
+        assert!(s.percentile(100.0).is_nan());
     }
 }

@@ -480,3 +480,44 @@ fn deadline_aware_routing_preempts_weakest_shard() {
         "deadline-aware routing must have preempted a Background victim"
     );
 }
+
+/// Observability ordering: `views()` and `stats()` index shards in
+/// ascending shard-id order on every call.  The cluster keys its
+/// internal tables by ordered maps (`BTreeMap`), so two reads taken at
+/// a quiet moment must agree exactly — a regression to hash-ordered
+/// iteration would make this flap across processes.
+#[test]
+fn views_and_stats_report_shards_in_stable_ascending_order() {
+    let cluster = MatchCluster::spawn(
+        ClusterConfig {
+            shards: 4,
+            pso: PsoConfig { seed: 5, epochs: 10_000, repair_budget: 500, ..Default::default() },
+            ..Default::default()
+        },
+        Box::<LeastQueueDepth>::default(),
+    )
+    .unwrap();
+
+    let tickets: Vec<_> = (0..8)
+        .map(|_| cluster.submit(chain_problem(4, 8), Priority::Normal, Some(60.0)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().expect("every ticket answers");
+    }
+
+    let ids: Vec<_> = cluster.views().iter().map(|v| v.shard).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3], "views must come back ascending by shard id");
+    let again: Vec<_> = cluster.views().iter().map(|v| v.shard).collect();
+    assert_eq!(ids, again, "view order must not change between reads");
+
+    let stats = cluster.stats();
+    assert_eq!(stats.shards.len(), 4, "one stats row per shard, indexed by shard id");
+    assert_eq!(stats.routed.len(), 4, "one routed counter per shard, indexed by shard id");
+    assert_eq!(
+        stats.routed.iter().sum::<u64>(),
+        8,
+        "every submission accounted to exactly one shard"
+    );
+    let served: u64 = stats.shards.iter().map(|s| s.router.admitted).sum();
+    assert!(served >= 1, "admitted counters must aggregate per shard");
+}

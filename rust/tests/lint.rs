@@ -1,0 +1,338 @@
+//! Tier-1 gate for `immsched-lint`: the live tree must be clean, and
+//! every rule must fire on a violating fixture and stay quiet on the
+//! clean / pragma-suppressed variants.  All fixtures are raw strings —
+//! the scrubbing lexer blanks string literals, so they are invisible
+//! when the linter walks this very file.
+
+use std::path::Path;
+
+use immsched::lint::{
+    lint_source, lint_tree, Finding, BAD_PRAGMA, NO_FLOAT_UNWRAP_ORD, NO_HASH_ITER_DETERMINISM,
+    NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT, NO_WALLCLOCK_CORE, UNUSED_PRAGMA,
+};
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// the live tree (tier-1: the whole point of the linter)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn live_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("walking the crate sources");
+    assert!(
+        report.files_scanned > 40,
+        "only {} files scanned — the walk missed src/tests/benches",
+        report.files_scanned
+    );
+    let lines: Vec<String> = report.findings.iter().map(Finding::display_line).collect();
+    assert!(report.is_clean(), "the tree must stay lint-clean; findings:\n{}", lines.join("\n"));
+}
+
+#[test]
+fn report_json_is_machine_readable() {
+    let findings = lint_source(
+        "src/matcher/fixture.rs",
+        r#"use std::collections::HashMap;"#,
+    );
+    assert!(!findings.is_empty());
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("walking the crate sources");
+    let doc = immsched::util::json::Json::parse(&report.to_json().render())
+        .expect("report must render as valid JSON");
+    assert_eq!(
+        doc.get("schema").and_then(immsched::util::json::Json::as_str),
+        Some("immsched.lint/v1")
+    );
+    assert!(doc.get("findings").is_some());
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: no-float-unwrap-ord (applies everywhere)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn float_unwrap_ord_fires_on_both_forms() {
+    let unwrapped = r#"
+fn worst(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap()
+}
+"#;
+    let found = lint_source("src/util/fixture.rs", unwrapped);
+    assert_eq!(rules_of(&found), vec![NO_FLOAT_UNWRAP_ORD], "{found:?}");
+
+    let comparator = r#"
+fn order(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("comparable"));
+}
+"#;
+    let found = lint_source("src/util/fixture.rs", comparator);
+    assert!(
+        found.iter().all(|f| f.rule == NO_FLOAT_UNWRAP_ORD) && !found.is_empty(),
+        "{found:?}"
+    );
+
+    // the rule has no test exemption: a panicking comparator in a test
+    // aborts the test process just the same
+    let in_tests = lint_source("tests/fixture.rs", unwrapped);
+    assert_eq!(rules_of(&in_tests), vec![NO_FLOAT_UNWRAP_ORD]);
+}
+
+#[test]
+fn float_total_cmp_and_trait_impls_are_clean() {
+    let ok = r#"
+fn order(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+impl PartialOrd for Thing {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+"#;
+    assert!(lint_source("src/util/fixture.rs", ok).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: no-hash-iter-determinism (deterministic modules only)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hash_containers_flagged_only_in_deterministic_modules() {
+    let hashy = r#"
+use std::collections::{HashMap, HashSet};
+fn table() -> HashMap<u32, f32> { HashMap::new() }
+"#;
+    for path in
+        ["src/matcher/fixture.rs", "src/graph/fixture.rs", "src/cluster/wire.rs"]
+    {
+        let found = lint_source(path, hashy);
+        assert!(
+            found.iter().all(|f| f.rule == NO_HASH_ITER_DETERMINISM) && !found.is_empty(),
+            "{path}: {found:?}"
+        );
+    }
+    // outside the deterministic scope the same source is fine
+    assert!(lint_source("src/accel/fixture.rs", hashy).is_empty());
+    assert!(lint_source("tests/fixture.rs", hashy).is_empty());
+
+    let ordered = r#"
+use std::collections::{BTreeMap, BTreeSet};
+fn table() -> BTreeMap<u32, f32> { BTreeMap::new() }
+"#;
+    assert!(lint_source("src/matcher/fixture.rs", ordered).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 3: no-wallclock-core (everywhere except service/driver edges)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wallclock_flagged_in_core_but_not_at_the_boundary() {
+    let clocky = r#"
+fn stamp() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}
+"#;
+    let found = lint_source("src/scheduler/fixture.rs", clocky);
+    assert_eq!(rules_of(&found), vec![NO_WALLCLOCK_CORE], "{found:?}");
+
+    let systime = r#"use std::time::SystemTime;"#;
+    let found = lint_source("src/matcher/fixture.rs", systime);
+    assert_eq!(rules_of(&found), vec![NO_WALLCLOCK_CORE]);
+
+    // boundary modules own the host clock legitimately
+    for path in ["src/bin/fixture.rs", "benches/fixture.rs", "src/coordinator/service.rs"] {
+        assert!(lint_source(path, clocky).is_empty(), "{path} is a clock boundary");
+    }
+    // `Instant` as a type (a deadline anchor passed in) is fine anywhere
+    let typed = r#"fn anchor(base: std::time::Instant) -> std::time::Instant { base }"#;
+    assert!(lint_source("src/coordinator/fixture.rs", typed).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 4: no-panic-transport (cluster wire/transport, non-test code)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_paths_flagged_in_transport_modules() {
+    let panicky = r#"
+fn route(frames: &Vec<u8>, i: usize) -> u8 {
+    let head = frames[i];
+    let tail = frames.last().unwrap();
+    if head != *tail { panic!("torn frame"); }
+    head
+}
+"#;
+    let found = lint_source("src/cluster/transport.rs", panicky);
+    assert_eq!(found.len(), 3, "indexing + unwrap + panic!: {found:?}");
+    assert!(found.iter().all(|f| f.rule == NO_PANIC_TRANSPORT));
+
+    // the same code is allowed outside the transport boundary…
+    assert!(lint_source("src/scheduler/fixture.rs", panicky).is_empty());
+    // …and inside a #[cfg(test)] module of a transport file
+    let tested = r#"
+fn shift(x: u64) -> u64 { x >> 1 }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn round_trip() {
+        let v = vec![1u8];
+        assert_eq!(v[0], super::shift(2) as u8);
+    }
+}
+"#;
+    assert!(lint_source("src/cluster/transport.rs", tested).is_empty());
+}
+
+#[test]
+fn non_panicking_transport_idioms_are_clean() {
+    let ok = r#"
+fn route(frames: &Vec<u8>, i: usize) -> Option<u8> {
+    let head = frames.get(i)?;
+    let fallback = frames.first().copied().unwrap_or(0);
+    Some(head.wrapping_add(fallback))
+}
+"#;
+    assert!(lint_source("src/cluster/wire.rs", ok).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 5: no-lossy-wire-cast (cluster wire only, tests included)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bare_numeric_casts_flagged_in_wire() {
+    let casty = r#"
+fn encode(len: usize) -> u32 {
+    len as u32
+}
+"#;
+    let found = lint_source("src/cluster/wire.rs", casty);
+    assert_eq!(rules_of(&found), vec![NO_LOSSY_WIRE_CAST], "{found:?}");
+    // elsewhere a numeric cast is an accepted idiom
+    assert!(lint_source("src/cluster/transport.rs", casty).is_empty());
+
+    let checked = r#"
+fn encode(len: usize) -> anyhow::Result<u32> {
+    Ok(u32::try_from(len)?)
+}
+fn rename(x: ThisKind) -> f64 { x.as_f64() }
+"#;
+    assert!(lint_source("src/cluster/wire.rs", checked).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// pragmas
+// ---------------------------------------------------------------------------
+
+#[test]
+fn justified_pragma_suppresses_same_line_and_above() {
+    let same_line = r#"
+use std::collections::HashMap; // lint:allow(no-hash-iter-determinism): fixture proves same-line coverage
+"#;
+    assert!(lint_source("src/matcher/fixture.rs", same_line).is_empty());
+
+    let above = r#"
+// lint:allow(no-hash-iter-determinism): fixture proves the standalone form,
+// including trailing comment lines between the pragma and the code
+use std::collections::HashMap;
+"#;
+    assert!(lint_source("src/matcher/fixture.rs", above).is_empty());
+}
+
+#[test]
+fn pragma_does_not_leak_past_the_first_code_line() {
+    let leaky = r#"
+// lint:allow(no-hash-iter-determinism): covers only the line below
+use std::collections::HashMap;
+use std::collections::HashSet;
+"#;
+    let found = lint_source("src/matcher/fixture.rs", leaky);
+    assert_eq!(rules_of(&found), vec![NO_HASH_ITER_DETERMINISM], "{found:?}");
+    assert_eq!(found[0].line, 4, "the second hash container is NOT covered");
+}
+
+#[test]
+fn unjustified_or_unknown_pragmas_are_findings_themselves() {
+    let bare = r#"
+// lint:allow(no-hash-iter-determinism)
+use std::collections::HashMap;
+"#;
+    let found = lint_source("src/matcher/fixture.rs", bare);
+    // the naked pragma suppresses nothing, so the finding survives too
+    let mut rules = rules_of(&found);
+    rules.sort_unstable();
+    assert_eq!(rules, vec![BAD_PRAGMA, NO_HASH_ITER_DETERMINISM], "{found:?}");
+
+    let unknown = r#"
+// lint:allow(no-such-rule): long enough justification text
+fn fine() {}
+"#;
+    let found = lint_source("src/matcher/fixture.rs", unknown);
+    assert_eq!(rules_of(&found), vec![BAD_PRAGMA]);
+}
+
+#[test]
+fn doc_comments_only_quote_pragmas_never_carry_them() {
+    // documentation that *shows* the pragma syntax must neither
+    // suppress findings nor be reported as a bad/unused pragma
+    let documented = r#"
+//! Suppress with `// lint:allow(no-wallclock-core): why it is safe`.
+
+/// Such as `// lint:allow(not-a-rule)` — quoted, not live.
+fn pure(x: u64) -> u64 { x + 1 }
+"#;
+    assert!(lint_source("src/scheduler/fixture.rs", documented).is_empty());
+}
+
+#[test]
+fn unused_justified_pragma_is_reported() {
+    let stale = r#"
+// lint:allow(no-wallclock-core): this used to guard an Instant call
+fn pure(x: u64) -> u64 { x + 1 }
+"#;
+    let found = lint_source("src/scheduler/fixture.rs", stale);
+    assert_eq!(rules_of(&found), vec![UNUSED_PRAGMA], "{found:?}");
+}
+
+// ---------------------------------------------------------------------------
+// the scrubbing lexer: quoted counter-examples never fire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn comments_strings_and_raw_strings_are_invisible() {
+    let quoted = r##"
+// partial_cmp(&b).unwrap() in a comment is fine
+/* and HashMap in a block comment, even /* nested */ ones */
+fn doc() -> &'static str {
+    let a = "std::time::Instant::now() quoted";
+    let b = r#"v.sort_by(|a, b| a.partial_cmp(b).unwrap())"#;
+    let c = b"HashMap as bytes";
+    if a.len() + b.len() + c.len() > 0 { a } else { b }
+}
+"##;
+    assert!(lint_source("src/matcher/fixture.rs", quoted).is_empty());
+}
+
+#[test]
+fn char_literals_and_lifetimes_do_not_desync_the_lexer() {
+    let tricky = r#"
+fn first<'a>(s: &'a str) -> Option<&'a str> {
+    let quote = '"';
+    let escaped = '\'';
+    let _ = (quote, escaped);
+    s.split(' ').next()
+}
+use std::collections::HashMap;
+"#;
+    // if the lexer mistook a lifetime for an open char literal it would
+    // blank the rest of the file and miss the real violation below
+    let found = lint_source("src/matcher/fixture.rs", tricky);
+    assert_eq!(rules_of(&found), vec![NO_HASH_ITER_DETERMINISM], "{found:?}");
+    assert_eq!(found[0].line, 8);
+}
