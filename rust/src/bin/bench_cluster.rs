@@ -29,13 +29,25 @@
 //! one) — the trajectory's `transport` field lets the figure pipeline
 //! compare in-process vs out-of-process serving overhead, preemption
 //! and warm-start resume included.
+//!
+//! `--chaos SPEC` wraps every phase-2 shard transport in the
+//! deterministic [`FaultInjectingTransport`] with the given scripted
+//! schedule (`SEQ:FAULT` entries, e.g. `"2:kill,5:garbage"`), seeded
+//! by `--chaos-seed`; the open-loop run then exercises the fleet's
+//! failover paths and the trajectory records the failover and chaos
+//! counters alongside the serving metrics.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
-use immsched::cluster::{policy_by_name, ClusterConfig, MatchCluster, RoutePolicy};
+use immsched::cluster::transport::worker_binary;
+use immsched::cluster::{
+    policy_by_name, ChaosSchedule, ClusterConfig, FaultInjectingTransport, InProcessShard,
+    MatchCluster, ProcessShard, RoutePolicy, ShardTransport, SupervisedFleet, SupervisorConfig,
+};
 use immsched::coordinator::{CancelToken, GlobalController, MatchPath, MatchProblem, ServiceConfig};
 use immsched::graph::{gen_chain, NodeKind};
 use immsched::matcher::PsoConfig;
@@ -62,6 +74,10 @@ struct Args {
     seed: u64,
     label: String,
     out: String,
+    /// Scripted chaos schedule for the open-loop phase (`SEQ:FAULT`
+    /// entries); `None` = no fault injection.
+    chaos: Option<String>,
+    chaos_seed: u64,
 }
 
 impl Args {
@@ -107,6 +123,8 @@ fn parse_args() -> Result<Args> {
         out: flag("--out").cloned().unwrap_or_else(|| {
             concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json").into()
         }),
+        chaos: flag("--chaos").cloned(),
+        chaos_seed: flag("--chaos-seed").map(|s| s.parse()).transpose()?.unwrap_or(1337),
     })
 }
 
@@ -124,6 +142,40 @@ fn spawn_cluster(args: &Args, ccfg: ClusterConfig) -> Result<MatchCluster> {
     } else {
         MatchCluster::spawn(ccfg, policy)
     }
+}
+
+/// One bare (un-wrapped) shard transport of the benchmarked kind.
+fn spawn_transport(args: &Args, ccfg: &ClusterConfig) -> Result<Arc<dyn ShardTransport>> {
+    Ok(if args.process_shards {
+        let bin = worker_binary()?;
+        Arc::new(ProcessShard::spawn_at(&bin, ccfg.service, ccfg.pso)?)
+    } else {
+        Arc::new(InProcessShard::spawn(ccfg.service, ccfg.pso)?)
+    })
+}
+
+/// Spawn the phase-2 cluster, wrapping every shard in the seeded
+/// fault-injection decorator when `--chaos` is set.  Returns the
+/// concrete chaos handles so the trajectory can read their counters.
+fn spawn_chaos_cluster(
+    args: &Args,
+    ccfg: ClusterConfig,
+    schedule: &ChaosSchedule,
+) -> Result<(MatchCluster, Vec<Arc<FaultInjectingTransport>>)> {
+    let policy = make_policy(&args.policy)?;
+    let mut wrapped: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(args.shards);
+    let mut chaos = Vec::with_capacity(args.shards);
+    for shard in 0..args.shards {
+        let inner = spawn_transport(args, &ccfg)?;
+        let c = Arc::new(FaultInjectingTransport::new(
+            inner,
+            schedule.clone(),
+            args.chaos_seed ^ shard as u64,
+        ));
+        chaos.push(Arc::clone(&c));
+        wrapped.push(c);
+    }
+    Ok((MatchCluster::with_transports(wrapped, policy, ccfg.resume_capacity), chaos))
 }
 
 /// A 3-fan-out star cannot embed into a chain, but its full mask has no
@@ -299,16 +351,33 @@ fn main() -> Result<()> {
     };
     let schedule = schedule_from_trace(&dcfg);
     println!("[bench_cluster] trace: {} requests over {}s (modeled)", schedule.len(), args.horizon);
-    let cluster = spawn_cluster(
-        &args,
-        ClusterConfig {
-            shards: args.shards,
-            service: ServiceConfig::default(),
-            pso: PsoConfig { seed: args.seed, ..Default::default() },
-            resume_capacity: 1024,
-        },
-    )?;
-    let report = run_open_loop(&cluster, &schedule, &dcfg)?;
+    let ccfg = ClusterConfig {
+        shards: args.shards,
+        service: ServiceConfig::default(),
+        pso: PsoConfig { seed: args.seed, ..Default::default() },
+        resume_capacity: 1024,
+    };
+    let chaos_schedule = match &args.chaos {
+        Some(spec) => Some(ChaosSchedule::parse(spec)?),
+        None => None,
+    };
+    let (cluster, chaos_shards) = match &chaos_schedule {
+        Some(cs) => {
+            println!(
+                "[bench_cluster] chaos: schedule {:?} seed {} on every shard",
+                cs.summary(),
+                args.chaos_seed
+            );
+            spawn_chaos_cluster(&args, ccfg, cs)?
+        }
+        None => (spawn_cluster(&args, ccfg)?, Vec::new()),
+    };
+    let fleet = SupervisedFleet::new(Arc::new(cluster), SupervisorConfig::default());
+    let report = run_open_loop(&fleet, &schedule, &dcfg)?;
+    if let Err(e) = fleet.drain() {
+        // a chaos-killed worker legitimately cannot drain
+        println!("[bench_cluster] drain after run: {e:#}");
+    }
     print!("{}", report.table().render());
     println!(
         "[bench_cluster] {} submitted, {} served, {} shed, {} resumed, {} SLO misses, wall {}",
@@ -318,6 +387,13 @@ fn main() -> Result<()> {
         report.resumed(),
         report.slo_misses(),
         fmt_time(report.wall_seconds)
+    );
+    println!(
+        "[bench_cluster] supervision: {} probes, {} shard failures, {} replays, {} sheds at floor",
+        report.failover.probes,
+        report.failover.shards_failed,
+        report.failover.replays,
+        report.failover.shed_at_floor
     );
 
     // ---- acceptance (smoke) -------------------------------------------
@@ -342,6 +418,12 @@ fn main() -> Result<()> {
             proof.resumed_epochs,
             proof.epoch_budget
         );
+        if chaos_schedule.as_ref().is_some_and(|cs| cs.summary().contains("kill")) {
+            assert!(
+                report.failover.shards_failed >= 1,
+                "chaos killed a shard but supervision never declared a failure"
+            );
+        }
         println!("[bench_cluster] SMOKE OK");
     }
 
@@ -364,6 +446,47 @@ fn main() -> Result<()> {
         ("p50_latency_s", Json::from(report.latency_percentile(50.0))),
         ("p95_latency_s", Json::from(report.latency_percentile(95.0))),
         ("wall_seconds", Json::from(report.wall_seconds)),
+        (
+            "failover",
+            Json::obj(vec![
+                ("probes", Json::from(report.failover.probes)),
+                ("probe_failures", Json::from(report.failover.probe_failures)),
+                ("shard_failures", Json::from(report.failover.shards_failed)),
+                ("replays", Json::from(report.failover.replays)),
+                ("respawns", Json::from(report.failover.respawns)),
+                ("shed_at_floor", Json::from(report.failover.shed_at_floor)),
+            ]),
+        ),
+        (
+            "chaos",
+            match &chaos_schedule {
+                None => Json::Null,
+                Some(cs) => {
+                    let mut kills = 0u64;
+                    let mut drops = 0u64;
+                    let mut garbage = 0u64;
+                    let mut truncated = 0u64;
+                    let mut delays = 0u64;
+                    for c in &chaos_shards {
+                        let s = c.stats();
+                        kills += s.kills;
+                        drops += s.dropped_replies;
+                        garbage += s.garbage_frames;
+                        truncated += s.truncated_frames;
+                        delays += s.delays;
+                    }
+                    Json::obj(vec![
+                        ("schedule", Json::from(cs.summary().as_str())),
+                        ("seed", Json::from(args.chaos_seed)),
+                        ("kills", Json::from(kills)),
+                        ("dropped_replies", Json::from(drops)),
+                        ("garbage_frames", Json::from(garbage)),
+                        ("truncated_frames", Json::from(truncated)),
+                        ("delays", Json::from(delays)),
+                    ])
+                }
+            },
+        ),
         (
             "resume_proof",
             Json::obj(vec![

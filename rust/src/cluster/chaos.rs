@@ -1,0 +1,405 @@
+//! [`FaultInjectingTransport`]: a deterministic fault-injection
+//! decorator over any [`ShardTransport`].
+//!
+//! Robustness claims are worthless untested, and real worker crashes
+//! are miserable to reproduce.  This module makes every failure mode
+//! the supervision layer handles *scriptable*: a [`ChaosSchedule`]
+//! maps submission sequence numbers (per decorated transport, starting
+//! at 0) to faults, so "the worker dies under the third request" is a
+//! one-line schedule entry and an ordinary `cargo test` — no signals,
+//! no sleeps-and-hope, no flakes.
+//!
+//! Faults ([`ChaosFault`]):
+//!
+//! * `Delay` — sleep before forwarding (plus a small seeded jitter),
+//!   modeling a slow shard;
+//! * `DropReply` — forward the submission but swallow its response
+//!   forever; the decorated transport reports the id [`lost`], which is
+//!   what supervision keys replay on;
+//! * `Garbage` / `Truncate` — deliver a malformed frame through
+//!   [`ShardTransport::inject_frame_fault`], poisoning (or wedging)
+//!   the connection exactly the way a corrupted pipe would;
+//! * `Kill` — [`ShardTransport::abort`]: the worker dies *now*,
+//!   mid-episode, un-drained.
+//!
+//! Determinism: the schedule is keyed by sequence number, the jitter
+//! RNG is seeded, and all bookkeeping uses ordered collections — the
+//! same seed + schedule produces the same per-request disposition on
+//! every run, which the chaos tests assert literally.
+//!
+//! [`lost`]: ShardTransport::lost
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{MatchProblem, MatchResponse, RequestId};
+use crate::matcher::SwarmSnapshot;
+use crate::scheduler::Priority;
+use crate::util::Rng;
+
+use super::transport::{lock_recover, FrameFault, ShardTransport};
+use super::wire::ShardStatus;
+
+/// One scripted fault, applied when its scheduled submission arrives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosFault {
+    /// Sleep this long (plus ≤ 1 ms of seeded jitter) before
+    /// forwarding the submission.
+    Delay(Duration),
+    /// Forward the submission but swallow its reply forever; the id is
+    /// reported [`ShardTransport::lost`] so supervision replays it.
+    DropReply,
+    /// Deliver a well-framed, undecodable payload to the shard — the
+    /// connection-poisoning fault (the worker finishes pending work,
+    /// then exits).
+    Garbage,
+    /// Deliver a frame header that promises more bytes than follow —
+    /// the wedged-connection fault (control round-trips time out).
+    Truncate,
+    /// Kill the shard's execution resources immediately, un-drained.
+    Kill,
+}
+
+impl ChaosFault {
+    fn spec(&self) -> String {
+        match self {
+            ChaosFault::Delay(d) => format!("delay={}", d.as_millis()),
+            ChaosFault::DropReply => "drop".to_string(),
+            ChaosFault::Garbage => "garbage".to_string(),
+            ChaosFault::Truncate => "truncate".to_string(),
+            ChaosFault::Kill => "kill".to_string(),
+        }
+    }
+}
+
+/// Scripted faults keyed by per-transport submission sequence number
+/// (the first submission through the decorator is sequence 0).
+#[derive(Clone, Debug, Default)]
+pub struct ChaosSchedule {
+    entries: BTreeMap<u64, ChaosFault>,
+}
+
+impl ChaosSchedule {
+    /// Builder: fault the `seq`-th submission.
+    #[must_use]
+    pub fn at(mut self, seq: u64, fault: ChaosFault) -> Self {
+        self.entries.insert(seq, fault);
+        self
+    }
+
+    /// Parse the CLI spec format: comma-separated `SEQ:FAULT` entries
+    /// where `FAULT` is `kill`, `drop`, `garbage`, `truncate`, or
+    /// `delay=MILLIS` — e.g. `"2:kill,5:garbage,9:delay=25"`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut schedule = Self::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let Some((seq, fault)) = entry.split_once(':') else {
+                bail!("chaos entry {entry:?} is not SEQ:FAULT");
+            };
+            let seq: u64 = seq
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("chaos entry {entry:?}: bad sequence ({e})"))?;
+            let fault = match fault.trim() {
+                "kill" => ChaosFault::Kill,
+                "drop" => ChaosFault::DropReply,
+                "garbage" => ChaosFault::Garbage,
+                "truncate" => ChaosFault::Truncate,
+                other => match other.strip_prefix("delay=") {
+                    Some(ms) => {
+                        let ms: u64 = ms.parse().map_err(|e| {
+                            anyhow::anyhow!("chaos entry {entry:?}: bad delay ({e})")
+                        })?;
+                        ChaosFault::Delay(Duration::from_millis(ms))
+                    }
+                    None => bail!(
+                        "chaos entry {entry:?}: unknown fault {other:?} \
+                         (expected kill|drop|garbage|truncate|delay=MS)"
+                    ),
+                },
+            };
+            schedule.entries.insert(seq, fault);
+        }
+        Ok(schedule)
+    }
+
+    /// Canonical spec string (sequence order) — telemetry records this
+    /// so a chaotic run is reproducible from its trajectory alone.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (seq, fault) in &self.entries {
+            if !out.is_empty() {
+                out.push(',');
+            }
+            let _ = write!(out, "{seq}:{}", fault.spec());
+        }
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Counters for faults actually applied (a snapshot; the live counters
+/// are atomics inside the transport).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChaosStats {
+    pub delays: u64,
+    pub dropped_replies: u64,
+    pub garbage_frames: u64,
+    pub truncated_frames: u64,
+    pub kills: u64,
+    /// Frame faults the inner transport could not realize (it has no
+    /// frame boundary — e.g. an in-process shard).
+    pub unsupported: u64,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    delays: AtomicU64,
+    dropped_replies: AtomicU64,
+    garbage_frames: AtomicU64,
+    truncated_frames: AtomicU64,
+    kills: AtomicU64,
+    unsupported: AtomicU64,
+}
+
+/// The fault-injection decorator.  Wrap any transport, hand the result
+/// to a cluster, and the scripted faults fire as submissions flow
+/// through — everything else delegates to the inner transport.
+pub struct FaultInjectingTransport {
+    inner: Arc<dyn ShardTransport>,
+    schedule: ChaosSchedule,
+    /// Seeded jitter source for `Delay` faults (determinism: same seed
+    /// → same jitter sequence).
+    rng: Mutex<Rng>,
+    /// Submissions seen so far — the schedule key.
+    seq: AtomicU64,
+    /// Ids whose replies this decorator swallows.
+    dropped: Mutex<BTreeSet<RequestId>>,
+    counters: Counters,
+}
+
+impl FaultInjectingTransport {
+    pub fn new(inner: Arc<dyn ShardTransport>, schedule: ChaosSchedule, seed: u64) -> Self {
+        Self {
+            inner,
+            schedule,
+            rng: Mutex::new(Rng::new(seed)),
+            seq: AtomicU64::new(0),
+            dropped: Mutex::new(BTreeSet::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    /// Faults applied so far.
+    pub fn stats(&self) -> ChaosStats {
+        ChaosStats {
+            delays: self.counters.delays.load(Ordering::Relaxed),
+            dropped_replies: self.counters.dropped_replies.load(Ordering::Relaxed),
+            garbage_frames: self.counters.garbage_frames.load(Ordering::Relaxed),
+            truncated_frames: self.counters.truncated_frames.load(Ordering::Relaxed),
+            kills: self.counters.kills.load(Ordering::Relaxed),
+            unsupported: self.counters.unsupported.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The scripted schedule (telemetry reads its summary).
+    pub fn schedule(&self) -> &ChaosSchedule {
+        &self.schedule
+    }
+
+    fn frame_fault(&self, fault: FrameFault) {
+        match self.inner.inject_frame_fault(fault) {
+            Ok(()) => {
+                let counter = match fault {
+                    FrameFault::Garbage => &self.counters.garbage_frames,
+                    FrameFault::Truncated => &self.counters.truncated_frames,
+                };
+                counter.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                self.counters.unsupported.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!("chaos frame fault unsupported by inner transport: {e:#}");
+            }
+        }
+    }
+}
+
+impl ShardTransport for FaultInjectingTransport {
+    fn kind(&self) -> &'static str {
+        match self.inner.kind() {
+            "process" => "chaos+process",
+            "in-process" => "chaos+in-process",
+            _ => "chaos",
+        }
+    }
+
+    fn submit(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<SwarmSnapshot>,
+    ) -> Result<()> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let fault = self.schedule.entries.get(&seq).copied();
+        if !matches!(fault, Some(ChaosFault::DropReply)) {
+            // an un-faulted resubmission of a previously dropped id
+            // supersedes the drop — its new reply flows normally
+            lock_recover(&self.dropped).remove(&id);
+        }
+        match fault {
+            None => {}
+            Some(ChaosFault::Delay(base)) => {
+                let jitter_us = lock_recover(&self.rng).next_u64() % 1_000;
+                thread::sleep(base + Duration::from_micros(jitter_us));
+                self.counters.delays.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(ChaosFault::DropReply) => {
+                lock_recover(&self.dropped).insert(id);
+                self.counters.dropped_replies.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(ChaosFault::Garbage) => self.frame_fault(FrameFault::Garbage),
+            Some(ChaosFault::Truncate) => self.frame_fault(FrameFault::Truncated),
+            Some(ChaosFault::Kill) => {
+                self.counters.kills.fetch_add(1, Ordering::Relaxed);
+                self.inner.abort();
+            }
+        }
+        self.inner.submit(id, problem, priority, timeout, resume)
+    }
+
+    fn cancel(&self, id: RequestId) {
+        self.inner.cancel(id);
+    }
+
+    fn status(&self) -> Result<ShardStatus> {
+        self.inner.status()
+    }
+
+    fn try_response(&self, id: RequestId) -> Option<MatchResponse> {
+        if lock_recover(&self.dropped).contains(&id) {
+            // swallow the inner reply (if it ever arrives) — the id
+            // stays lost until a resubmission supersedes the drop
+            let _ = self.inner.try_response(id);
+            return None;
+        }
+        self.inner.try_response(id)
+    }
+
+    fn wait_response(&self, id: RequestId) -> Result<MatchResponse> {
+        if lock_recover(&self.dropped).contains(&id) {
+            bail!("chaos dropped the reply for request {id}");
+        }
+        self.inner.wait_response(id)
+    }
+
+    fn drain(&self) -> Result<()> {
+        self.inner.drain()
+    }
+
+    fn healthy(&self) -> bool {
+        self.inner.healthy()
+    }
+
+    fn lost(&self, id: RequestId) -> bool {
+        lock_recover(&self.dropped).contains(&id) || self.inner.lost(id)
+    }
+
+    fn abort(&self) {
+        self.inner.abort();
+    }
+
+    fn inject_frame_fault(&self, fault: FrameFault) -> Result<()> {
+        self.inner.inject_frame_fault(fault)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::InProcessShard;
+    use crate::coordinator::ServiceConfig;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::PsoConfig;
+
+    fn chain_problem(n: usize, m: usize) -> MatchProblem {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        MatchProblem::from_dags(&qd, &gd)
+    }
+
+    #[test]
+    fn schedule_spec_round_trips() {
+        let spec = "2:kill,5:garbage,7:drop,9:delay=25,11:truncate";
+        let schedule = ChaosSchedule::parse(spec).unwrap();
+        assert_eq!(schedule.len(), 5);
+        assert_eq!(schedule.summary(), spec, "parse → summary must be the identity");
+        assert!(ChaosSchedule::parse("1:frobnicate").is_err());
+        assert!(ChaosSchedule::parse("nope").is_err());
+        assert!(ChaosSchedule::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn dropped_reply_is_lost_until_resubmission_supersedes() {
+        let inner: Arc<dyn ShardTransport> = Arc::new(
+            InProcessShard::spawn(
+                ServiceConfig::default(),
+                PsoConfig { seed: 5, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let chaos = FaultInjectingTransport::new(
+            inner,
+            ChaosSchedule::default().at(0, ChaosFault::DropReply),
+            42,
+        );
+        let problem = chain_problem(3, 6);
+        chaos.submit(1, problem.clone(), Priority::Normal, None, None).unwrap();
+        assert!(chaos.lost(1), "a dropped reply must read as lost");
+        assert!(chaos.try_response(1).is_none(), "the swallowed reply must never surface");
+        assert!(chaos.wait_response(1).is_err());
+        // resubmission (sequence 1: no fault) supersedes the drop
+        chaos.submit(1, problem, Priority::Normal, None, None).unwrap();
+        assert!(!chaos.lost(1));
+        let resp = chaos.wait_response(1).unwrap();
+        assert!(resp.matched());
+        assert_eq!(chaos.stats().dropped_replies, 1);
+        chaos.drain().unwrap();
+    }
+
+    #[test]
+    fn frame_faults_on_frameless_transport_count_as_unsupported() {
+        let inner: Arc<dyn ShardTransport> = Arc::new(
+            InProcessShard::spawn(
+                ServiceConfig::default(),
+                PsoConfig { seed: 6, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let chaos = FaultInjectingTransport::new(
+            inner,
+            ChaosSchedule::default().at(0, ChaosFault::Garbage),
+            7,
+        );
+        assert_eq!(chaos.kind(), "chaos+in-process");
+        chaos.submit(1, chain_problem(3, 6), Priority::Normal, None, None).unwrap();
+        assert!(chaos.wait_response(1).unwrap().matched(), "the submission still flows");
+        assert_eq!(chaos.stats().unsupported, 1);
+        assert_eq!(chaos.stats().garbage_frames, 0);
+        chaos.drain().unwrap();
+    }
+}

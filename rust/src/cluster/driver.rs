@@ -11,8 +11,12 @@
 //! The driver collects per-shard latency / SLO-miss / shed / preemption
 //! metrics and resubmits cancelled requests with their persisted
 //! snapshots, so a run exercises the whole preempt → persist → resume
-//! loop.  `bench_cluster` and `immsched cluster` are thin wrappers
-//! around [`schedule_from_trace`] + [`run_open_loop`].
+//! loop.  Since the fleet supervision layer landed, the driver runs
+//! through a [`SupervisedFleet`] rather than the raw cluster — a shard
+//! dying mid-run becomes a replay (counted in the report's
+//! [`FailoverStats`]) instead of a hang.  `bench_cluster` and
+//! `immsched cluster` are thin wrappers around [`schedule_from_trace`]
+//! + [`run_open_loop`].
 
 use std::time::{Duration, Instant};
 
@@ -25,7 +29,7 @@ use crate::util::stats::Summary;
 use crate::util::table::{fmt_time, Table};
 use crate::workload::{TilingConfig, WorkloadClass};
 
-use super::{ClusterStats, ClusterTicket, MatchCluster, ShardId};
+use super::{ClusterStats, FailoverStats, ShardId, SupervisedFleet};
 
 /// Knobs for one driver run.
 #[derive(Clone, Copy, Debug)]
@@ -140,6 +144,9 @@ pub struct DriverReport {
     pub outcomes: Vec<RequestOutcome>,
     /// Final cluster telemetry (per-shard stats, resume-store traffic).
     pub cluster: ClusterStats,
+    /// Supervision telemetry: probes, shard deaths, replays, sheds at
+    /// the capacity floor.
+    pub failover: FailoverStats,
     /// Wall-clock of the whole run (s).
     pub wall_seconds: f64,
 }
@@ -226,9 +233,10 @@ impl DriverReport {
     }
 }
 
-/// In-flight bookkeeping for one submitted request.
+/// In-flight bookkeeping for one submitted request (the fleet tracks
+/// the ticket; the driver tracks only the id).
 struct Pending {
-    ticket: ClusterTicket,
+    id: RequestId,
     problem: MatchProblem,
     priority: Priority,
     timeout: Option<f64>,
@@ -240,13 +248,14 @@ struct Pending {
 /// legitimately cancel the same episode several times).
 const MAX_RESUBMITS: u32 = 16;
 
-/// Replay `schedule` against `cluster` on the wall clock.  Every
+/// Replay `schedule` against the fleet on the wall clock.  Every
 /// submitted request is answered exactly once in the report (served,
 /// shed, or cancelled); with `resubmit_cancelled`, cancelled requests
 /// are resubmitted with their snapshots until they complete or the
-/// resubmit bound is hit.
+/// resubmit bound is hit.  A shard dying mid-run is the fleet's
+/// problem — the driver just sees (replayed) responses.
 pub fn run_open_loop(
-    cluster: &MatchCluster,
+    fleet: &SupervisedFleet,
     schedule: &[TimedRequest],
     cfg: &DriverConfig,
 ) -> Result<DriverReport> {
@@ -263,22 +272,23 @@ pub fn run_open_loop(
             }
         }
         prev_at = req.at;
-        let ticket = cluster.submit(req.problem.clone(), req.priority, req.timeout)?;
+        let id = fleet.submit(req.problem.clone(), req.priority, req.timeout)?;
         pending.push(Pending {
-            ticket,
+            id,
             problem: req.problem.clone(),
             priority: req.priority,
             timeout: req.timeout,
             submitted: Instant::now(),
             resubmits: 0,
         });
-        drain_ready(cluster, cfg, &mut pending, &mut outcomes)?;
+        drain_ready(fleet, cfg, &mut pending, &mut outcomes)?;
     }
 
     // settle: poll the in-flight set until every submission (including
-    // warm-start resubmissions) has a final response
+    // warm-start resubmissions and failover replays) has a final
+    // response
     while !pending.is_empty() {
-        drain_ready(cluster, cfg, &mut pending, &mut outcomes)?;
+        drain_ready(fleet, cfg, &mut pending, &mut outcomes)?;
         if !pending.is_empty() {
             std::thread::sleep(Duration::from_micros(200));
         }
@@ -286,23 +296,27 @@ pub fn run_open_loop(
 
     Ok(DriverReport {
         outcomes,
-        cluster: cluster.stats(),
+        cluster: fleet.cluster().stats(),
+        failover: fleet.failover(),
         wall_seconds: started.elapsed().as_secs_f64(),
     })
 }
 
 /// Non-blocking sweep over the in-flight set.
 fn drain_ready(
-    cluster: &MatchCluster,
+    fleet: &SupervisedFleet,
     cfg: &DriverConfig,
     pending: &mut Vec<Pending>,
     outcomes: &mut Vec<RequestOutcome>,
 ) -> Result<()> {
     let mut i = 0;
     while i < pending.len() {
-        if let Some(resp) = pending[i].ticket.try_wait() {
+        // capture the serving shard before the poll — the record is
+        // gone once the response surfaces
+        let shard = fleet.shard_of(pending[i].id).unwrap_or(0);
+        if let Some(resp) = fleet.try_wait(pending[i].id) {
             let p = pending.swap_remove(i);
-            settle(cluster, cfg, p, resp, pending, outcomes)?;
+            settle(fleet, cfg, p, shard, resp, pending, outcomes)?;
         } else {
             i += 1;
         }
@@ -311,12 +325,13 @@ fn drain_ready(
 }
 
 /// Record a final response — or turn a cancellation into a warm-start
-/// resubmission (the ticket's `wait`/`try_wait` has already persisted
-/// the snapshot into the cluster's resume store).
+/// resubmission (the fleet's `try_wait` has already persisted the
+/// snapshot into the cluster's resume store).
 fn settle(
-    cluster: &MatchCluster,
+    fleet: &SupervisedFleet,
     cfg: &DriverConfig,
     p: Pending,
+    shard: ShardId,
     resp: MatchResponse,
     pending: &mut Vec<Pending>,
     outcomes: &mut Vec<RequestOutcome>,
@@ -326,16 +341,23 @@ fn settle(
         && resp.snapshot.is_some()
         && p.resubmits < MAX_RESUBMITS
     {
-        let ticket = cluster.resubmit(p.ticket.id, p.problem.clone(), p.priority, p.timeout)?;
-        pending.push(Pending {
-            ticket,
-            problem: p.problem,
-            priority: p.priority,
-            timeout: p.timeout,
-            submitted: p.submitted,
-            resubmits: p.resubmits + 1,
-        });
-        return Ok(());
+        // a failed resubmission (e.g. routing hit a shard that just
+        // died) keeps its snapshot in the store and the cancellation
+        // becomes this request's final answer — never lose the request
+        match fleet.resubmit(p.id, p.problem.clone(), p.priority, p.timeout) {
+            Ok(()) => {
+                pending.push(Pending {
+                    id: p.id,
+                    problem: p.problem,
+                    priority: p.priority,
+                    timeout: p.timeout,
+                    submitted: p.submitted,
+                    resubmits: p.resubmits + 1,
+                });
+                return Ok(());
+            }
+            Err(e) => crate::log_warn!("resubmit of request {} failed: {e:#}", p.id),
+        }
     }
     let latency = p.submitted.elapsed().as_secs_f64();
     let slo_miss = match resp.path {
@@ -344,7 +366,7 @@ fn settle(
     };
     outcomes.push(RequestOutcome {
         id: resp.id,
-        shard: p.ticket.shard,
+        shard,
         priority: p.priority,
         path: resp.path,
         resumed: resp.resumed,
@@ -359,8 +381,11 @@ fn settle(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{ClusterConfig, LeastQueueDepth, MatchCluster};
+    use crate::cluster::{
+        ClusterConfig, LeastQueueDepth, MatchCluster, SupervisorConfig,
+    };
     use crate::matcher::PsoConfig;
+    use std::sync::Arc;
 
     #[test]
     fn schedule_replays_trace_with_deadline_slack() {
@@ -395,22 +420,27 @@ mod tests {
             ..Default::default()
         };
         let schedule = schedule_from_trace(&dcfg);
-        let cluster = MatchCluster::spawn(
-            ClusterConfig {
-                shards: 2,
-                pso: PsoConfig { seed: 6, ..Default::default() },
-                ..Default::default()
-            },
-            Box::new(LeastQueueDepth),
-        )
-        .unwrap();
-        let report = run_open_loop(&cluster, &schedule, &dcfg).unwrap();
+        let cluster = Arc::new(
+            MatchCluster::spawn(
+                ClusterConfig {
+                    shards: 2,
+                    pso: PsoConfig { seed: 6, ..Default::default() },
+                    ..Default::default()
+                },
+                Box::new(LeastQueueDepth),
+            )
+            .unwrap(),
+        );
+        let fleet = SupervisedFleet::new(cluster, SupervisorConfig::default());
+        let report = run_open_loop(&fleet, &schedule, &dcfg).unwrap();
         assert_eq!(report.submitted(), schedule.len(), "lost or duplicated responses");
         let mut ids: Vec<RequestId> = report.outcomes.iter().map(|o| o.id).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), schedule.len(), "duplicate final responses for one id");
         assert!(report.served() > 0, "nothing served");
+        assert_eq!(report.failover.shards_failed, 0, "healthy run must not fail shards");
         assert!(!report.table().is_empty());
+        fleet.drain().unwrap();
     }
 }

@@ -25,33 +25,51 @@
 //!   mix) that feeds the cluster and collects per-shard latency /
 //!   SLO-miss / shed / preemption metrics — the `bench_cluster` binary
 //!   and the `immsched cluster` CLI subcommand run it.
+//! * [`supervise`] — fleet supervision over the transports: heartbeat
+//!   liveness probes, automatic failover of in-flight requests off
+//!   dead or wedged shards (warm-starting from the resume store), and
+//!   graceful degradation to shedding below a capacity floor.
+//! * [`chaos`] — [`FaultInjectingTransport`], a deterministic seeded
+//!   decorator over any transport that injects delays, dropped
+//!   replies, undecodable frames and worker kills from a scripted
+//!   schedule, so the failover paths are exercised by ordinary
+//!   `cargo test`.
 //!
 //! Request lifecycle: **route → submit (transport) → admit → engine
 //! chain → outcome**, with `Cancelled` outcomes feeding the resume
 //! store.
 
+pub mod chaos;
 pub mod driver;
 pub mod policy;
 pub mod resume;
+pub mod supervise;
 pub mod transport;
 pub mod wire;
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::{MatchProblem, MatchResponse, RequestId, ServiceConfig, ServiceStats};
-use crate::matcher::PsoConfig;
+use crate::matcher::{PsoConfig, SwarmSnapshot};
 use crate::scheduler::Priority;
 
+use transport::lock_recover;
+
+pub use chaos::{ChaosFault, ChaosSchedule, ChaosStats, FaultInjectingTransport};
 pub use policy::{
     policy_by_name, DeadlineAware, LeastQueueDepth, RoundRobin, RoutePolicy, ShardId, ShardView,
+    DEGRADED_QUEUE_DEPTH,
 };
 pub use resume::{ResumeStats, ResumeStore};
-pub use transport::{InProcessShard, ProcessShard, ShardTransport};
+pub use supervise::{FailoverStats, SupervisedFleet, SupervisorConfig};
+pub use transport::{
+    FrameFault, InProcessShard, ProcessShard, ShardTransport, TransportConfig,
+};
 pub use wire::{ShardMsg, ShardReply, ShardStatus};
 
 /// Cluster-wide knobs.
@@ -139,6 +157,18 @@ impl ClusterTicket {
     pub fn cancel(&self) {
         self.transport.cancel(self.id);
     }
+
+    /// Whether the transport serving this ticket still considers
+    /// itself alive (supervision's cheap per-poll liveness check).
+    pub fn healthy(&self) -> bool {
+        self.transport.healthy()
+    }
+
+    /// Whether this ticket's reply can no longer arrive (dropped by a
+    /// dead connection) — supervision replays lost tickets elsewhere.
+    pub fn lost(&self) -> bool {
+        self.transport.lost(self.id)
+    }
 }
 
 fn stash(store: &ResumeStore, resp: &MatchResponse) {
@@ -147,15 +177,26 @@ fn stash(store: &ResumeStore, resp: &MatchResponse) {
     }
 }
 
-/// Load reported for a shard whose transport failed a status query (a
-/// dead worker): effectively infinite queue depth, so load-aware
-/// policies steer new work away from it while waiters fail over.
-const DEGRADED_QUEUE_DEPTH: usize = usize::MAX / 4;
+/// One shard's cached status: when it was probed, and what the probe
+/// said (`None` = the probe failed, i.e. a dead or wedged worker — the
+/// failure is cached too, so a dead shard costs one control timeout per
+/// TTL window instead of one per submission).
+type StatusSlot = Option<(Instant, Option<ShardStatus>)>;
+
+/// How long a cached [`ShardStatus`] stays fresh before `views()` /
+/// `stats()` re-probe.  The supervision heartbeat force-refreshes via
+/// [`MatchCluster::probe`], so under a running [`SupervisedFleet`] the
+/// routing hot path almost never pays a status round-trip.
+const DEFAULT_STATUS_TTL: Duration = Duration::from_millis(50);
 
 /// The front router: N shards behind transports, one policy, one
-/// resume store.
+/// resume store.  Transports sit behind per-shard locks so supervision
+/// can swap in a respawned replacement without tearing the cluster
+/// down.
 pub struct MatchCluster {
-    shards: Vec<Arc<dyn ShardTransport>>,
+    shards: Vec<Mutex<Arc<dyn ShardTransport>>>,
+    status_cache: Vec<Mutex<StatusSlot>>,
+    status_ttl: Duration,
     policy: Mutex<Box<dyn RoutePolicy>>,
     store: Arc<ResumeStore>,
     routed: Vec<AtomicU64>,
@@ -208,8 +249,11 @@ impl MatchCluster {
     ) -> Self {
         assert!(!transports.is_empty(), "a cluster needs at least one shard");
         let routed = (0..transports.len()).map(|_| AtomicU64::new(0)).collect();
+        let status_cache = (0..transports.len()).map(|_| Mutex::new(None)).collect();
         Self {
-            shards: transports,
+            shards: transports.into_iter().map(Mutex::new).collect(),
+            status_cache,
+            status_ttl: DEFAULT_STATUS_TTL,
             policy: Mutex::new(policy),
             store: Arc::new(ResumeStore::with_capacity(resume_capacity)),
             routed,
@@ -218,8 +262,38 @@ impl MatchCluster {
         }
     }
 
+    /// Override how long cached shard statuses stay fresh (tests use
+    /// `Duration::ZERO` to force a probe per call).
+    pub fn set_status_ttl(&mut self, ttl: Duration) {
+        self.status_ttl = ttl;
+    }
+
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The transport currently serving `shard` (a clone of the handle —
+    /// supervision may swap the slot afterwards, in which case the
+    /// returned transport keeps serving its already-issued tickets).
+    pub fn transport(&self, shard: ShardId) -> Arc<dyn ShardTransport> {
+        let shard = shard.min(self.shards.len() - 1);
+        Arc::clone(&lock_recover(&self.shards[shard]))
+    }
+
+    /// Swap a respawned replacement transport into `shard`'s slot and
+    /// invalidate its cached status.  Tickets issued against the old
+    /// transport keep their own handle; only *new* routing sees the
+    /// replacement.
+    pub fn replace_transport(&self, shard: ShardId, transport: Arc<dyn ShardTransport>) {
+        let shard = shard.min(self.shards.len() - 1);
+        *lock_recover(&self.shards[shard]) = transport;
+        *lock_recover(&self.status_cache[shard]) = None;
+    }
+
+    /// Whether `shard`'s transport considers itself alive (cheap local
+    /// check — no control round-trip).
+    pub fn shard_healthy(&self, shard: ShardId) -> bool {
+        self.transport(shard).healthy()
     }
 
     /// Seconds since cluster start.
@@ -236,43 +310,72 @@ impl MatchCluster {
     /// Transport kind per shard (telemetry: `"in-process"` /
     /// `"process"`).
     pub fn transport_kinds(&self) -> Vec<&'static str> {
-        self.shards.iter().map(|t| t.kind()).collect()
+        (0..self.shards.len()).map(|s| self.transport(s).kind()).collect()
+    }
+
+    /// Force-refresh `shard`'s cached status with a live control
+    /// round-trip.  The supervision heartbeat calls this on its own
+    /// cadence, which is what keeps `views()` / `stats()` off the
+    /// per-submit status tax; a failed probe is cached too (as a
+    /// degraded entry), so a dead worker costs one control timeout per
+    /// TTL window, not one per routing decision.
+    pub fn probe(&self, shard: ShardId) -> Result<ShardStatus> {
+        let shard = shard.min(self.shards.len() - 1);
+        let res = self.transport(shard).status();
+        *lock_recover(&self.status_cache[shard]) =
+            Some((Instant::now(), res.as_ref().ok().cloned()));
+        res
+    }
+
+    /// Cached-or-fresh status for `shard`: serve the cache while it is
+    /// within the TTL, otherwise probe.  `None` means the most recent
+    /// probe failed (dead or wedged worker).
+    fn fetch_status(&self, shard: ShardId) -> Option<ShardStatus> {
+        {
+            let slot = lock_recover(&self.status_cache[shard]);
+            if let Some((at, status)) = slot.as_ref() {
+                if at.elapsed() <= self.status_ttl {
+                    return status.clone();
+                }
+            }
+        }
+        match self.probe(shard) {
+            Ok(status) => Some(status),
+            Err(e) => {
+                crate::log_warn!("shard {shard} status probe failed: {e:#}");
+                None
+            }
+        }
     }
 
     /// Current per-shard routing views (the policy input; also useful
-    /// for dashboards/tests).  A shard whose transport cannot report —
-    /// a dead worker — shows up with an effectively infinite queue
-    /// depth so load-aware policies avoid it.
+    /// for dashboards/tests), served from the TTL status cache.  A
+    /// shard whose transport cannot report — a dead worker — shows up
+    /// with an effectively infinite queue depth so load-aware policies
+    /// avoid it.
     pub fn views(&self) -> Vec<ShardView> {
-        self.shards
-            .iter()
-            .enumerate()
-            .map(|(shard, transport)| match transport.status() {
-                Ok(status) => ShardView {
+        (0..self.shards.len())
+            .map(|shard| match self.fetch_status(shard) {
+                Some(status) => ShardView {
                     shard,
                     queue_depth: status.queue_depth,
                     in_flight: status.in_flight,
                     stats: status.stats,
                 },
-                Err(e) => {
-                    crate::log_warn!("shard {shard} status query failed: {e:#}");
-                    ShardView {
-                        shard,
-                        queue_depth: DEGRADED_QUEUE_DEPTH,
-                        in_flight: None,
-                        stats: ServiceStats::default(),
-                    }
-                }
+                None => ShardView {
+                    shard,
+                    queue_depth: DEGRADED_QUEUE_DEPTH,
+                    in_flight: None,
+                    stats: ServiceStats::default(),
+                },
             })
             .collect()
     }
 
     pub fn stats(&self) -> ClusterStats {
         ClusterStats {
-            shards: self
-                .shards
-                .iter()
-                .map(|t| t.status().map(|s| s.stats).unwrap_or_default())
+            shards: (0..self.shards.len())
+                .map(|s| self.fetch_status(s).map(|st| st.stats).unwrap_or_default())
                 .collect(),
             routed: self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
             resume: self.store.stats(),
@@ -320,16 +423,39 @@ impl MatchCluster {
         timeout: Option<f64>,
     ) -> Result<ClusterTicket> {
         let resume = self.store.take(id);
+        self.resubmit_carrying(id, problem, priority, timeout, resume)
+    }
+
+    /// [`Self::resubmit`] with an explicitly supplied warm-start
+    /// snapshot instead of a destructive store take.  Fleet supervision
+    /// uses this to replay a request whose shard died: the fleet holds
+    /// its own copy of the last barrier snapshot, so a second crash
+    /// mid-replay can still warm-start from the same barrier.
+    pub fn resubmit_carrying(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<SwarmSnapshot>,
+    ) -> Result<ClusterTicket> {
         let shard = self.route(priority, timeout);
         self.submit_inner(shard, id, problem, priority, timeout, resume)
+    }
+
+    /// Reserve a globally unique request id without submitting anything
+    /// — supervision mints ids for requests it must answer on the
+    /// cluster's behalf (e.g. shedding at the capacity floor).
+    pub fn allocate_request_id(&self) -> RequestId {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Drain every shard: in-flight work finishes, worker processes
     /// exit.  Dropping the cluster does this implicitly; calling it
     /// explicitly surfaces drain errors instead of swallowing them.
     pub fn drain(&self) -> Result<()> {
-        for (shard, transport) in self.shards.iter().enumerate() {
-            transport
+        for shard in 0..self.shards.len() {
+            self.transport(shard)
                 .drain()
                 .map_err(|e| e.context(format!("draining shard {shard}")))?;
         }
@@ -349,18 +475,13 @@ impl MatchCluster {
         problem: MatchProblem,
         priority: Priority,
         timeout: Option<f64>,
-        resume: Option<crate::matcher::SwarmSnapshot>,
+        resume: Option<SwarmSnapshot>,
     ) -> Result<ClusterTicket> {
         let shard = shard.min(self.shards.len() - 1);
-        let transport = &self.shards[shard];
+        let transport = self.transport(shard);
         transport.submit(id, problem, priority, timeout, resume)?;
         self.routed[shard].fetch_add(1, Ordering::Relaxed);
-        Ok(ClusterTicket {
-            id,
-            shard,
-            transport: Arc::clone(transport),
-            store: Arc::clone(&self.store),
-        })
+        Ok(ClusterTicket { id, shard, transport, store: Arc::clone(&self.store) })
     }
 }
 

@@ -25,6 +25,12 @@ use crate::scheduler::Priority;
 /// Shard index within one cluster.
 pub type ShardId = usize;
 
+/// Load reported for a shard whose transport failed a status query (a
+/// dead or wedged worker): effectively infinite queue depth, so
+/// load-aware policies steer new work away from it while supervision
+/// fails its in-flight requests over.
+pub const DEGRADED_QUEUE_DEPTH: usize = usize::MAX / 4;
+
 /// One shard's routing-relevant state, read without blocking the
 /// shard's controller thread.
 #[derive(Clone, Debug)]
@@ -41,7 +47,13 @@ pub struct ShardView {
 impl ShardView {
     /// Queued plus in-flight load.
     pub fn load(&self) -> usize {
-        self.queue_depth + usize::from(self.in_flight.is_some())
+        self.queue_depth.saturating_add(usize::from(self.in_flight.is_some()))
+    }
+
+    /// Whether this view is the degraded placeholder for a shard whose
+    /// transport could not report (dead or wedged worker).
+    pub fn is_degraded(&self) -> bool {
+        self.queue_depth >= DEGRADED_QUEUE_DEPTH
     }
 }
 
@@ -158,6 +170,20 @@ mod tests {
 
     fn view(shard: ShardId, queue_depth: usize, in_flight: Option<Priority>) -> ShardView {
         ShardView { shard, queue_depth, in_flight, stats: ServiceStats::default() }
+    }
+
+    #[test]
+    fn degraded_views_lose_every_load_comparison() {
+        let shards = vec![
+            ShardView { queue_depth: DEGRADED_QUEUE_DEPTH, ..view(0, 0, None) },
+            view(1, 50, Some(Priority::Urgent)),
+        ];
+        assert!(shards[0].is_degraded() && !shards[1].is_degraded());
+        assert_eq!(
+            LeastQueueDepth.route(Priority::Normal, None, &shards),
+            1,
+            "a dead shard must lose to any live shard, however loaded"
+        );
     }
 
     #[test]

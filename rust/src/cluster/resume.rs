@@ -108,6 +108,15 @@ impl ResumeStore {
         snap
     }
 
+    /// Non-destructive read of the snapshot for `id` (a clone; the
+    /// persisted copy stays).  Fleet supervision peeks before handing a
+    /// snapshot to a replacement shard, so a second crash mid-replay
+    /// can still warm-start from the same barrier — ordinary warm
+    /// starts must keep using the destructive [`Self::take`].
+    pub fn peek(&self, id: RequestId) -> Option<SwarmSnapshot> {
+        self.inner.lock().unwrap().snapshots.get(&id).cloned()
+    }
+
     /// Whether a snapshot is persisted for `id`.
     pub fn contains(&self, id: RequestId) -> bool {
         self.inner.lock().unwrap().snapshots.contains_key(&id)
@@ -159,6 +168,16 @@ mod tests {
         assert!(store.take(9).is_none(), "a snapshot must not warm-start twice");
         let stats = store.stats();
         assert_eq!((stats.saved, stats.taken), (1, 1));
+    }
+
+    #[test]
+    fn peek_is_non_destructive() {
+        let store = ResumeStore::default();
+        store.save(3, snap(6));
+        assert_eq!(store.peek(3).expect("persisted").epochs_done, 6);
+        assert!(store.contains(3), "peek must leave the snapshot in place");
+        assert_eq!(store.stats().taken, 0, "peek is not a take");
+        assert_eq!(store.take(3).expect("still persisted").epochs_done, 6);
     }
 
     #[test]

@@ -1,0 +1,694 @@
+//! [`SupervisedFleet`]: fault-tolerant supervision over a
+//! [`MatchCluster`]'s shard transports.
+//!
+//! The cluster routes; this layer keeps the routed work *alive*.  A
+//! heartbeat thread probes every shard on a fixed cadence (refreshing
+//! the cluster's status cache as a side effect, which is what keeps
+//! routing off the per-submit status tax).  A shard that fails
+//! [`ShardTransport::healthy`] — or misses
+//! [`SupervisorConfig::miss_threshold`] consecutive probes — is
+//! declared dead: every in-flight request the fleet tracked on it is
+//! **replayed** onto the surviving shards (or a respawned replacement,
+//! if a respawner is installed), warm-starting from the last persisted
+//! barrier snapshot so a crash mid-episode loses at most one epoch
+//! quota of work.
+//!
+//! Replay is bounded: [`SupervisorConfig::max_replays`] attempts with
+//! exponential backoff, and none at all once live capacity falls below
+//! [`SupervisorConfig::capacity_floor`] — past either limit the fleet
+//! degrades gracefully, answering the request itself with a
+//! [`MatchPath::Shed`] response that *carries the warm-start snapshot
+//! back to the caller* (shedding must never destroy persisted episode
+//! progress).
+//!
+//! Crash-safety of resume state: [`MatchCluster::resubmit`] takes the
+//! snapshot out of the [`super::ResumeStore`] destructively, so a
+//! shard that dies holding the only copy would strand the episode at
+//! zero.  The fleet therefore keeps its own copy of the last snapshot
+//! it handed out ([`FlightRecord`]'s `resume`) and replays from
+//! whichever is newer — the store's (a later barrier was reached) or
+//! its own (the crash predated any barrier reply).
+//!
+//! Everything here is exercised deterministically by the
+//! [`super::chaos`] transport under ordinary `cargo test`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{MatchPath, MatchProblem, MatchResponse, RequestId};
+use crate::matcher::SwarmSnapshot;
+use crate::scheduler::Priority;
+
+use super::policy::ShardId;
+use super::transport::{lock_recover, ShardTransport};
+use super::{ClusterTicket, MatchCluster};
+
+/// Supervision knobs.  Defaults suit tests and modest fleets; long
+/// control timeouts (see [`super::TransportConfig`]) stretch how long
+/// a *wedged* (as opposed to dead) worker takes to detect, since a
+/// wedged probe blocks until its timeout.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Heartbeat cadence — every shard is probed this often.
+    pub heartbeat_interval: Duration,
+    /// Consecutive failed probes before a shard is declared dead (a
+    /// transport reporting `healthy() == false` is declared dead
+    /// immediately, without waiting out the streak).
+    pub miss_threshold: u32,
+    /// Replay attempts per request before degrading to a shed answer.
+    pub max_replays: u32,
+    /// First replay backoff; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Minimum live shards for replay/admission; below it the fleet
+    /// sheds instead of queueing onto a doomed remnant.
+    pub capacity_floor: usize,
+    /// Poll cadence for [`SupervisedFleet::wait`].
+    pub poll: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            heartbeat_interval: Duration::from_millis(100),
+            miss_threshold: 3,
+            max_replays: 3,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(250),
+            capacity_floor: 1,
+            poll: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Supervision telemetry (monotonic counters; snapshot via
+/// [`SupervisedFleet::failover`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FailoverStats {
+    /// Heartbeat probes issued.
+    pub probes: u64,
+    /// Probes that failed (the shard may still be within its miss
+    /// streak).
+    pub probe_failures: u64,
+    /// Shards declared dead.
+    pub shards_failed: u64,
+    /// Requests successfully replayed off a dead shard.
+    pub replays: u64,
+    /// Dead shards replaced via the installed respawner.
+    pub respawns: u64,
+    /// Requests degraded to a shed answer (replay budget exhausted or
+    /// capacity below the floor).
+    pub shed_at_floor: u64,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    probes: AtomicU64,
+    probe_failures: AtomicU64,
+    shards_failed: AtomicU64,
+    replays: AtomicU64,
+    respawns: AtomicU64,
+    shed_at_floor: AtomicU64,
+}
+
+/// Per-shard liveness bookkeeping.
+#[derive(Clone, Copy, Debug, Default)]
+struct ShardHealth {
+    misses: u32,
+    dead: bool,
+}
+
+/// Everything needed to replay one in-flight request from scratch —
+/// the fleet's in-flight inventory entry.
+struct FlightRecord {
+    /// The live routed submission (`None` only for requests the fleet
+    /// answered itself, where `done` is `Some`).
+    ticket: Option<ClusterTicket>,
+    problem: MatchProblem,
+    priority: Priority,
+    timeout: Option<f64>,
+    /// Fleet-held copy of the last warm-start snapshot handed to a
+    /// shard — the crash-replay source when the store's copy was
+    /// destructively taken by the submission that died.
+    resume: Option<SwarmSnapshot>,
+    replays: u32,
+    /// A replay is in progress on another thread; pollers must not
+    /// touch the ticket.
+    replaying: bool,
+    /// A fleet-synthesized answer (shed at the floor) awaiting pickup.
+    done: Option<MatchResponse>,
+}
+
+type Respawner = Box<dyn Fn(ShardId) -> Result<Arc<dyn ShardTransport>> + Send + Sync>;
+
+/// The supervision layer.  Construct with [`SupervisedFleet::new`]
+/// (spawns the heartbeat), submit/wait through it instead of the raw
+/// cluster, and worker deaths become replays instead of hangs.
+pub struct SupervisedFleet {
+    cluster: Arc<MatchCluster>,
+    cfg: SupervisorConfig,
+    flights: Mutex<BTreeMap<RequestId, FlightRecord>>,
+    health: Mutex<Vec<ShardHealth>>,
+    respawner: Mutex<Option<Respawner>>,
+    counters: Counters,
+    stop: Arc<AtomicBool>,
+    heartbeat: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SupervisedFleet {
+    /// Wrap `cluster` and start the heartbeat thread.
+    pub fn new(cluster: Arc<MatchCluster>, cfg: SupervisorConfig) -> Arc<Self> {
+        let shards = cluster.shard_count();
+        let fleet = Arc::new(Self {
+            cluster,
+            cfg,
+            flights: Mutex::new(BTreeMap::new()),
+            health: Mutex::new(vec![ShardHealth::default(); shards]),
+            respawner: Mutex::new(None),
+            counters: Counters::default(),
+            stop: Arc::new(AtomicBool::new(false)),
+            heartbeat: Mutex::new(None),
+        });
+        let weak = Arc::downgrade(&fleet);
+        let stop = Arc::clone(&fleet.stop);
+        let interval = cfg.heartbeat_interval;
+        let handle = thread::Builder::new()
+            .name("fleet-heartbeat".into())
+            .spawn(move || heartbeat_loop(&weak, &stop, interval));
+        match handle {
+            Ok(h) => *lock_recover(&fleet.heartbeat) = Some(h),
+            Err(e) => crate::log_warn!("fleet heartbeat thread failed to spawn: {e}"),
+        }
+        fleet
+    }
+
+    /// Install a respawner: called with a dead shard's id, it returns
+    /// a replacement transport the fleet swaps into the cluster before
+    /// replaying the victim's requests.
+    pub fn set_respawn(
+        &self,
+        f: impl Fn(ShardId) -> Result<Arc<dyn ShardTransport>> + Send + Sync + 'static,
+    ) {
+        *lock_recover(&self.respawner) = Some(Box::new(f));
+    }
+
+    /// The supervised cluster (telemetry reads stats through this).
+    pub fn cluster(&self) -> &MatchCluster {
+        &self.cluster
+    }
+
+    /// Shards not currently declared dead.
+    pub fn live_shards(&self) -> usize {
+        lock_recover(&self.health).iter().filter(|h| !h.dead).count()
+    }
+
+    /// Supervision counters so far.
+    pub fn failover(&self) -> FailoverStats {
+        FailoverStats {
+            probes: self.counters.probes.load(Ordering::Relaxed),
+            probe_failures: self.counters.probe_failures.load(Ordering::Relaxed),
+            shards_failed: self.counters.shards_failed.load(Ordering::Relaxed),
+            replays: self.counters.replays.load(Ordering::Relaxed),
+            respawns: self.counters.respawns.load(Ordering::Relaxed),
+            shed_at_floor: self.counters.shed_at_floor.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The shard currently serving `id` (`None` once answered, or for
+    /// fleet-answered requests).
+    pub fn shard_of(&self, id: RequestId) -> Option<ShardId> {
+        lock_recover(&self.flights)
+            .get(&id)
+            .and_then(|rec| rec.ticket.as_ref().map(|t| t.shard))
+    }
+
+    /// Submit through the fleet: routed by the cluster's policy,
+    /// tracked in the in-flight inventory, retried (with fresh ids)
+    /// over transient submission errors, shed outright below the
+    /// capacity floor.  Returns the id to [`Self::wait`] on.
+    pub fn submit(
+        &self,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+    ) -> Result<RequestId> {
+        let mut attempt: u32 = 0;
+        while attempt < self.cfg.max_replays.max(1) {
+            attempt += 1;
+            if self.live_shards() < self.cfg.capacity_floor {
+                return Ok(self.shed_new(problem, priority, timeout));
+            }
+            match self.cluster.submit(problem.clone(), priority, timeout) {
+                Ok(ticket) => {
+                    let id = ticket.id;
+                    lock_recover(&self.flights).insert(
+                        id,
+                        FlightRecord {
+                            ticket: Some(ticket),
+                            problem,
+                            priority,
+                            timeout,
+                            resume: None,
+                            replays: 0,
+                            replaying: false,
+                            done: None,
+                        },
+                    );
+                    return Ok(id);
+                }
+                Err(e) => {
+                    crate::log_warn!("fleet submit attempt {attempt} failed: {e:#}");
+                    thread::sleep(self.backoff(attempt));
+                }
+            }
+        }
+        Ok(self.shed_new(problem, priority, timeout))
+    }
+
+    /// Resubmit an answered (typically quota-cancelled) request under
+    /// its original id, warm-starting from its persisted snapshot —
+    /// the fleet keeps its own copy of the snapshot it hands out, so a
+    /// crash mid-resume can still replay from the same barrier.
+    pub fn resubmit(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+    ) -> Result<()> {
+        let resume = self.cluster.resume_store().take(id);
+        let ticket = match self.cluster.resubmit_carrying(
+            id,
+            problem.clone(),
+            priority,
+            timeout,
+            resume.clone(),
+        ) {
+            Ok(ticket) => ticket,
+            Err(e) => {
+                // a failed resubmission (e.g. routed onto a shard that
+                // just died) must not destroy the snapshot it took
+                if let Some(snapshot) = resume {
+                    self.cluster.resume_store().save(id, snapshot);
+                }
+                return Err(e);
+            }
+        };
+        let mut flights = lock_recover(&self.flights);
+        match flights.get_mut(&id) {
+            Some(rec) => {
+                rec.ticket = Some(ticket);
+                rec.problem = problem;
+                rec.priority = priority;
+                rec.timeout = timeout;
+                if resume.is_some() {
+                    rec.resume = resume;
+                }
+                rec.replaying = false;
+                rec.done = None;
+            }
+            None => {
+                flights.insert(
+                    id,
+                    FlightRecord {
+                        ticket: Some(ticket),
+                        problem,
+                        priority,
+                        timeout,
+                        resume,
+                        replays: 0,
+                        replaying: false,
+                        done: None,
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking poll for `id`'s answer.  A poll that finds the
+    /// serving shard dead (or the reply lost) triggers the replay path
+    /// instead of spinning forever — the answer then arrives from a
+    /// surviving shard on a later poll.
+    pub fn try_wait(&self, id: RequestId) -> Option<MatchResponse> {
+        let needs_replay = {
+            let mut flights = lock_recover(&self.flights);
+            let rec = flights.get_mut(&id)?;
+            if let Some(done) = rec.done.take() {
+                flights.remove(&id);
+                return Some(done);
+            }
+            if rec.replaying {
+                return None;
+            }
+            let ticket = rec.ticket.as_ref()?;
+            if let Some(resp) = ticket.try_wait() {
+                // keep the freshest barrier for crash-replay of any
+                // follow-up slice resubmitted under this id
+                if resp.snapshot.is_some() {
+                    rec.resume.clone_from(&resp.snapshot);
+                }
+                flights.remove(&id);
+                return Some(resp);
+            }
+            let shard = ticket.shard;
+            ticket.lost()
+                || !ticket.healthy()
+                || lock_recover(&self.health).get(shard).is_some_and(|h| h.dead)
+        };
+        if needs_replay {
+            self.replay(id);
+        }
+        None
+    }
+
+    /// Block until `id` is answered — by its shard, a replay onto a
+    /// surviving shard, or the fleet itself (a shed at the floor).
+    pub fn wait(&self, id: RequestId) -> Result<MatchResponse> {
+        // lint:allow(no-unbounded-retry): every failure path converges — replay is
+        // bounded by max_replays and then answers the record with a shed response
+        loop {
+            if let Some(resp) = self.try_wait(id) {
+                return Ok(resp);
+            }
+            if !lock_recover(&self.flights).contains_key(&id) {
+                bail!("request {id} is not in flight on this fleet");
+            }
+            thread::sleep(self.cfg.poll);
+        }
+    }
+
+    /// Stop the heartbeat and drain the cluster.
+    pub fn drain(&self) -> Result<()> {
+        self.stop_heartbeat();
+        self.cluster.drain()
+    }
+
+    fn backoff(&self, attempt: u32) -> Duration {
+        let factor = 1u32 << attempt.saturating_sub(1).min(16);
+        (self.cfg.backoff_base * factor).min(self.cfg.backoff_cap)
+    }
+
+    fn stop_heartbeat(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = lock_recover(&self.heartbeat).take() {
+            let _ = handle.join();
+        }
+    }
+
+    /// Answer a request the fleet cannot place: mint an id, record a
+    /// shed response carrying any warm-start snapshot back.
+    fn shed_new(
+        &self,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+    ) -> RequestId {
+        let id = self.cluster.allocate_request_id();
+        let done = Some(shed_response(id, None));
+        self.counters.shed_at_floor.fetch_add(1, Ordering::Relaxed);
+        lock_recover(&self.flights).insert(
+            id,
+            FlightRecord {
+                ticket: None,
+                problem,
+                priority,
+                timeout,
+                resume: None,
+                replays: 0,
+                replaying: false,
+                done,
+            },
+        );
+        id
+    }
+
+    /// One heartbeat sweep: probe every shard, advance miss streaks,
+    /// declare deaths, respawn (if possible) and rescue the dead
+    /// shard's in-flight requests.
+    fn probe_all(&self) {
+        for shard in 0..self.cluster.shard_count() {
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let alive = self.cluster.shard_healthy(shard);
+            // a transport that *knows* it is dead gets no probe — a
+            // wedged probe would block for the control timeout
+            let probed_ok = alive && self.cluster.probe(shard).is_ok();
+            self.counters.probes.fetch_add(1, Ordering::Relaxed);
+            let newly_dead = {
+                let mut health = lock_recover(&self.health);
+                let Some(h) = health.get_mut(shard) else { continue };
+                if probed_ok {
+                    // a respawned or recovered shard silently rejoins
+                    h.misses = 0;
+                    h.dead = false;
+                    false
+                } else {
+                    self.counters.probe_failures.fetch_add(1, Ordering::Relaxed);
+                    h.misses = h.misses.saturating_add(1);
+                    let dead_now = !alive || h.misses >= self.cfg.miss_threshold;
+                    let newly = dead_now && !h.dead;
+                    h.dead = h.dead || dead_now;
+                    newly
+                }
+            };
+            if newly_dead {
+                self.counters.shards_failed.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "shard {shard} declared dead (healthy={alive}); failing over its in-flight \
+                     requests"
+                );
+                self.try_respawn(shard);
+                self.rescue_shard(shard);
+            }
+        }
+    }
+
+    /// Replace a dead shard's transport via the installed respawner
+    /// (if any); on success the shard rejoins the live set immediately.
+    fn try_respawn(&self, shard: ShardId) {
+        let guard = lock_recover(&self.respawner);
+        let Some(respawn) = guard.as_ref() else { return };
+        match respawn(shard) {
+            Ok(transport) => {
+                self.cluster.replace_transport(shard, transport);
+                if let Some(h) = lock_recover(&self.health).get_mut(shard) {
+                    h.misses = 0;
+                    h.dead = false;
+                }
+                self.counters.respawns.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => crate::log_warn!("respawn of shard {shard} failed: {e:#}"),
+        }
+    }
+
+    /// Replay every tracked request currently ticketed on `shard`.
+    fn rescue_shard(&self, shard: ShardId) {
+        let victims: Vec<RequestId> = lock_recover(&self.flights)
+            .iter()
+            .filter(|(_, rec)| {
+                rec.done.is_none()
+                    && !rec.replaying
+                    && rec.ticket.as_ref().is_some_and(|t| t.shard == shard)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for id in victims {
+            self.replay(id);
+        }
+    }
+
+    /// Replay one request whose shard died: bounded attempts with
+    /// exponential backoff, warm-starting from the freshest snapshot
+    /// (store first, fleet copy as the crash fallback); exhaustion or
+    /// a capacity floor violation degrades to a shed answer carrying
+    /// the snapshot back.
+    fn replay(&self, id: RequestId) {
+        let (problem, priority, timeout, mut replays, resume_copy) = {
+            let mut flights = lock_recover(&self.flights);
+            let Some(rec) = flights.get_mut(&id) else { return };
+            if rec.done.is_some() || rec.replaying {
+                return;
+            }
+            rec.replaying = true;
+            (rec.problem.clone(), rec.priority, rec.timeout, rec.replays, rec.resume.clone())
+        };
+        while replays < self.cfg.max_replays {
+            replays += 1;
+            thread::sleep(self.backoff(replays));
+            if self.live_shards() < self.cfg.capacity_floor {
+                break;
+            }
+            let resume = self.cluster.resume_store().take(id).or_else(|| resume_copy.clone());
+            match self.cluster.resubmit_carrying(
+                id,
+                problem.clone(),
+                priority,
+                timeout,
+                resume.clone(),
+            ) {
+                Ok(ticket) => {
+                    self.counters.replays.fetch_add(1, Ordering::Relaxed);
+                    let mut flights = lock_recover(&self.flights);
+                    if let Some(rec) = flights.get_mut(&id) {
+                        rec.ticket = Some(ticket);
+                        rec.replays = replays;
+                        if resume.is_some() {
+                            rec.resume = resume;
+                        }
+                        rec.replaying = false;
+                    }
+                    return;
+                }
+                Err(e) => {
+                    crate::log_warn!("replay {replays}/{} of request {id} failed: {e:#}",
+                        self.cfg.max_replays);
+                }
+            }
+        }
+        // degraded: answer the request ourselves, handing the
+        // warm-start snapshot back so no episode progress is destroyed
+        let snapshot = self.cluster.resume_store().take(id).or(resume_copy);
+        self.counters.shed_at_floor.fetch_add(1, Ordering::Relaxed);
+        let mut flights = lock_recover(&self.flights);
+        if let Some(rec) = flights.get_mut(&id) {
+            rec.replays = replays;
+            rec.replaying = false;
+            rec.ticket = None;
+            rec.done = Some(shed_response(id, snapshot));
+        }
+    }
+}
+
+impl Drop for SupervisedFleet {
+    fn drop(&mut self) {
+        self.stop_heartbeat();
+    }
+}
+
+/// The fleet's graceful-degradation answer (mirrors the service's own
+/// shed semantics: empty mappings, the snapshot handed back).
+fn shed_response(id: RequestId, snapshot: Option<SwarmSnapshot>) -> MatchResponse {
+    MatchResponse {
+        id,
+        mappings: Vec::new(),
+        best_fitness: f32::NEG_INFINITY,
+        epochs_run: 0,
+        host_seconds: 0.0,
+        path: MatchPath::Shed,
+        resumed: false,
+        snapshot,
+    }
+}
+
+/// The heartbeat body: sweep until the fleet is dropped or drained.
+fn heartbeat_loop(fleet: &Weak<SupervisedFleet>, stop: &AtomicBool, interval: Duration) {
+    // lint:allow(no-unbounded-retry): runs until drop/drain sets the stop flag —
+    // the thread must outlive no fleet
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let Some(fleet) = fleet.upgrade() else { return };
+        fleet.probe_all();
+        drop(fleet);
+        thread::sleep(interval);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterConfig, InProcessShard, RoundRobin};
+    use crate::coordinator::ServiceConfig;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::PsoConfig;
+
+    fn chain_problem(n: usize, m: usize) -> MatchProblem {
+        let qd = gen_chain(n, NodeKind::Compute);
+        let gd = gen_chain(m, NodeKind::Universal);
+        MatchProblem::from_dags(&qd, &gd)
+    }
+
+    fn fast_cfg() -> SupervisorConfig {
+        SupervisorConfig {
+            heartbeat_interval: Duration::from_millis(10),
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(5),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn healthy_fleet_is_transparent() {
+        let cfg = ClusterConfig {
+            shards: 2,
+            pso: PsoConfig { seed: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let cluster =
+            Arc::new(MatchCluster::spawn(cfg, Box::<RoundRobin>::default()).unwrap());
+        let fleet = SupervisedFleet::new(cluster, fast_cfg());
+        let id = fleet.submit(chain_problem(4, 8), Priority::Normal, None).unwrap();
+        let resp = fleet.wait(id).unwrap();
+        assert!(resp.matched());
+        let stats = fleet.failover();
+        assert_eq!(stats.shards_failed, 0);
+        assert_eq!(stats.replays, 0);
+        assert_eq!(fleet.live_shards(), 2);
+        fleet.drain().unwrap();
+    }
+
+    #[test]
+    fn below_capacity_floor_submissions_shed_instead_of_queueing() {
+        let cfg = ClusterConfig {
+            shards: 1,
+            pso: PsoConfig { seed: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let cluster =
+            Arc::new(MatchCluster::spawn(cfg, Box::<RoundRobin>::default()).unwrap());
+        let fleet = SupervisedFleet::new(
+            cluster,
+            SupervisorConfig { capacity_floor: 2, ..fast_cfg() },
+        );
+        // one live shard < floor of two: the fleet answers directly
+        let id = fleet.submit(chain_problem(3, 6), Priority::Normal, None).unwrap();
+        let resp = fleet.wait(id).unwrap();
+        assert_eq!(resp.path, MatchPath::Shed);
+        assert_eq!(fleet.failover().shed_at_floor, 1);
+        fleet.drain().unwrap();
+    }
+
+    #[test]
+    fn respawner_replaces_a_dead_transport() {
+        let pso = PsoConfig { seed: 9, ..Default::default() };
+        let transports: Vec<Arc<dyn ShardTransport>> = vec![Arc::new(
+            InProcessShard::spawn(ServiceConfig::default(), pso).unwrap(),
+        )];
+        let cluster = Arc::new(MatchCluster::with_transports(
+            transports,
+            Box::<RoundRobin>::default(),
+            64,
+        ));
+        let fleet = SupervisedFleet::new(Arc::clone(&cluster), fast_cfg());
+        fleet.set_respawn(move |_| {
+            let t: Arc<dyn ShardTransport> =
+                Arc::new(InProcessShard::spawn(ServiceConfig::default(), pso)?);
+            Ok(t)
+        });
+        fleet.try_respawn(0);
+        assert_eq!(fleet.failover().respawns, 1);
+        // the replacement transport serves new work
+        let id = fleet.submit(chain_problem(4, 8), Priority::Normal, None).unwrap();
+        assert!(fleet.wait(id).unwrap().matched());
+        fleet.drain().unwrap();
+    }
+}

@@ -54,13 +54,52 @@ pub const WORKER_BIN_ENV: &str = "IMMSCHED_WORKER_BIN";
 /// shard is declared unresponsive.
 const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// How often the worker sweeps its pending tickets while idle.
+const IDLE_POLL: Duration = Duration::from_millis(2);
+/// Sweep cadence while episodes are in flight (snappy completions).
+const BUSY_POLL: Duration = Duration::from_micros(200);
+
+/// Timing knobs for one transport endpoint.  The defaults are the
+/// constants the transports shipped with; supervision tests shrink
+/// `control_timeout` so a wedged worker is detected in milliseconds
+/// instead of half a minute.
+#[derive(Clone, Copy, Debug)]
+pub struct TransportConfig {
+    /// Budget for one control round-trip (handshake, stats, drain)
+    /// before the shard is declared unresponsive.
+    pub control_timeout: Duration,
+    /// Worker-side sweep cadence over pending tickets while idle.
+    pub idle_poll: Duration,
+    /// Worker-side sweep cadence while episodes are in flight.
+    pub busy_poll: Duration,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self { control_timeout: CONTROL_TIMEOUT, idle_poll: IDLE_POLL, busy_poll: BUSY_POLL }
+    }
+}
+
 /// Take a transport lock even if another thread panicked while holding
 /// it.  The maps behind these locks (tickets, cancel tokens, demuxed
 /// responses, the writer handle) are valid after any partial update, so
 /// poison recovery degrades at most the one request the panicking
 /// thread owned — instead of wedging every later caller of the shard.
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A deliberately malformed frame, injected by the chaos transport to
+/// exercise the connection-fault paths a corrupt peer would trigger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameFault {
+    /// A well-framed payload that is not decodable wire JSON — the
+    /// receiver treats the whole connection as poisoned.
+    Garbage,
+    /// A length prefix promising more bytes than are ever sent — the
+    /// receiver blocks mid-frame and the connection wedges (control
+    /// round-trips start timing out).
+    Truncated,
 }
 
 /// One shard as the router sees it.  All methods are callable from any
@@ -99,6 +138,37 @@ pub trait ShardTransport: Send + Sync {
     /// Already-produced responses stay consumable afterwards.  Errors
     /// if the shard cannot settle within the control timeout.
     fn drain(&self) -> Result<()>;
+
+    /// Cheap liveness hint: `false` once the transport *knows* its
+    /// shard can no longer answer (worker exited, connection fault).
+    /// Supervision fails over immediately on `false` instead of
+    /// waiting out a heartbeat miss streak.  Transports with no such
+    /// signal report `true`.
+    fn healthy(&self) -> bool {
+        true
+    }
+
+    /// Whether `id` can no longer be answered on this transport (its
+    /// reply was lost or the connection died before it was produced).
+    /// Supervision replays lost requests elsewhere.  Default: never.
+    fn lost(&self, _id: RequestId) -> bool {
+        false
+    }
+
+    /// Forcibly terminate the shard's execution resources *now* — no
+    /// drain, in-flight episodes die un-answered.  The chaos transport
+    /// uses this as its kill-the-child fault; supervision uses it to
+    /// put a wedged worker out of its misery before respawning.  No-op
+    /// for transports with nothing to kill (in-process shards).
+    fn abort(&self) {}
+
+    /// Chaos hook: deliver a deliberately malformed frame to the
+    /// shard, exercising the undecodable-frame / wedged-connection
+    /// fault paths.  Errors on transports without a frame boundary.
+    fn inject_frame_fault(&self, fault: FrameFault) -> Result<()> {
+        let _ = fault;
+        bail!("transport {:?} has no frame boundary to corrupt", self.kind())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -118,15 +188,23 @@ pub struct InProcessShard {
     /// Set by [`ShardTransport::drain`]: later submissions are rejected,
     /// mirroring a drained worker's closed stdin.
     draining: AtomicBool,
+    /// Timing knobs (only `control_timeout` applies in-process).
+    tcfg: TransportConfig,
 }
 
 impl InProcessShard {
     pub fn spawn(cfg: ServiceConfig, pso: PsoConfig) -> Result<Self> {
+        Self::spawn_with(cfg, pso, TransportConfig::default())
+    }
+
+    /// [`Self::spawn`] with explicit transport timing knobs.
+    pub fn spawn_with(cfg: ServiceConfig, pso: PsoConfig, tcfg: TransportConfig) -> Result<Self> {
         Ok(Self {
             svc: MatchService::spawn_configured(cfg, pso)?,
             tickets: Mutex::new(BTreeMap::new()),
             cancels: Mutex::new(BTreeMap::new()),
             draining: AtomicBool::new(false),
+            tcfg,
         })
     }
 
@@ -167,9 +245,11 @@ impl ShardTransport for InProcessShard {
 
     fn status(&self) -> Result<ShardStatus> {
         let stats = self.svc.stats();
+        let inventory = self.svc.in_flight_request();
         Ok(ShardStatus {
             queue_depth: stats.router.depth as usize,
-            in_flight: self.svc.in_flight(),
+            in_flight: inventory.map(|(_, p)| p),
+            in_flight_id: inventory.map(|(id, _)| id),
             stats,
         })
     }
@@ -212,8 +292,8 @@ impl ShardTransport for InProcessShard {
             } else {
                 idle_streak = 0;
             }
-            if start.elapsed() > CONTROL_TIMEOUT {
-                bail!("in-process shard did not settle within {CONTROL_TIMEOUT:?}");
+            if start.elapsed() > self.tcfg.control_timeout {
+                bail!("in-process shard did not settle within {:?}", self.tcfg.control_timeout);
             }
             std::thread::sleep(Duration::from_millis(1));
         }
@@ -248,6 +328,7 @@ pub struct ProcessShard {
     /// callers cannot interleave each other's replies.
     control: Mutex<ControlChannels>,
     reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+    tcfg: TransportConfig,
 }
 
 struct ControlChannels {
@@ -266,6 +347,18 @@ impl ProcessShard {
     /// Spawn a worker from an explicit binary path (tests pass
     /// `env!("CARGO_BIN_EXE_immsched")`).
     pub fn spawn_at(bin: &Path, cfg: ServiceConfig, pso: PsoConfig) -> Result<Self> {
+        Self::spawn_at_with(bin, cfg, pso, TransportConfig::default())
+    }
+
+    /// [`Self::spawn_at`] with explicit transport timing knobs, so
+    /// supervision tests can shrink the control timeout from its 30 s
+    /// default and detect a wedged worker in milliseconds.
+    pub fn spawn_at_with(
+        bin: &Path,
+        cfg: ServiceConfig,
+        pso: PsoConfig,
+        tcfg: TransportConfig,
+    ) -> Result<Self> {
         let mut child = Command::new(bin)
             .arg("shard-worker")
             .stdin(Stdio::piped())
@@ -287,8 +380,9 @@ impl ProcessShard {
         // handshake before the demux thread owns stdout: Hello carries
         // the shard config, Ready proves the schema matches.  The first
         // read runs on a helper thread so a worker that never answers
-        // fails the spawn after CONTROL_TIMEOUT instead of hanging it;
-        // stdout comes back through the channel for the demux thread.
+        // fails the spawn after the control timeout instead of hanging
+        // it; stdout comes back through the channel for the demux
+        // thread.
         if let Err(e) = write_frame(&mut stdin, &encode_msg(&ShardMsg::Hello { service: cfg, pso }))
         {
             return Err(reap(child, e));
@@ -298,11 +392,12 @@ impl ProcessShard {
             let first = read_frame(&mut stdout);
             let _ = hs_tx.send((first, stdout));
         });
-        let (first, stdout) = match hs_rx.recv_timeout(CONTROL_TIMEOUT) {
+        let (first, stdout) = match hs_rx.recv_timeout(tcfg.control_timeout) {
             Ok(pair) => pair,
             Err(_) => {
                 let e = anyhow::anyhow!(
-                    "shard worker did not answer the hello within {CONTROL_TIMEOUT:?}"
+                    "shard worker did not answer the hello within {:?}",
+                    tcfg.control_timeout
                 );
                 return Err(reap(child, e));
             }
@@ -341,6 +436,7 @@ impl ProcessShard {
             demux,
             control: Mutex::new(ControlChannels { stats_rx, drained_rx }),
             reader: Mutex::new(Some(reader)),
+            tcfg,
         })
     }
 
@@ -441,7 +537,7 @@ impl ShardTransport for ProcessShard {
         self.send(&ShardMsg::Stats)?;
         control
             .stats_rx
-            .recv_timeout(CONTROL_TIMEOUT)
+            .recv_timeout(self.tcfg.control_timeout)
             .context("shard worker did not answer a stats request")
     }
 
@@ -471,11 +567,55 @@ impl ShardTransport for ProcessShard {
         self.send(&ShardMsg::Drain)?;
         let answered = control
             .drained_rx
-            .recv_timeout(CONTROL_TIMEOUT)
+            .recv_timeout(self.tcfg.control_timeout)
             .context("shard worker did not acknowledge the drain")?;
         drop(control);
         crate::log_debug!("shard worker drained after {answered} responses");
         self.shutdown(false);
+        Ok(())
+    }
+
+    fn healthy(&self) -> bool {
+        !lock_recover(&self.demux.state).dead && lock_recover(&self.writer).is_some()
+    }
+
+    fn lost(&self, id: RequestId) -> bool {
+        // once the connection is dead, any reply not already demuxed
+        // will never arrive
+        let state = lock_recover(&self.demux.state);
+        state.dead && !state.responses.contains_key(&id)
+    }
+
+    fn abort(&self) {
+        self.shutdown(true);
+    }
+
+    fn inject_frame_fault(&self, fault: FrameFault) -> Result<()> {
+        let mut guard = lock_recover(&self.writer);
+        let Some(w) = guard.as_mut() else {
+            bail!("shard worker connection already shut down");
+        };
+        match fault {
+            FrameFault::Garbage => {
+                // well-framed, but the payload is not wire JSON — the
+                // worker treats the connection as poisoned, finishes
+                // pending episodes, and exits
+                let payload = b"chaos: deliberately undecodable payload";
+                let len = u32::try_from(payload.len()).context("garbage frame length")?;
+                w.write_all(&len.to_be_bytes()).context("writing garbage frame length")?;
+                w.write_all(payload).context("writing garbage frame payload")?;
+                w.flush().context("flushing garbage frame")?;
+            }
+            FrameFault::Truncated => {
+                // promise 64 payload bytes, deliver 4 and go silent:
+                // the worker's reader blocks mid-frame and every later
+                // frame lands *inside* the bogus payload — the wedged
+                // connection whose control round-trips time out
+                w.write_all(&64u32.to_be_bytes()).context("writing truncated frame length")?;
+                w.write_all(b"cut!").context("writing truncated frame stub")?;
+                w.flush().context("flushing truncated frame")?;
+            }
+        }
         Ok(())
     }
 }
@@ -521,17 +661,23 @@ pub fn worker_binary() -> Result<PathBuf> {
 // worker side
 // ---------------------------------------------------------------------------
 
-/// How often the worker sweeps its pending tickets while idle.
-const IDLE_POLL: Duration = Duration::from_millis(2);
-/// Sweep cadence while episodes are in flight (snappy completions).
-const BUSY_POLL: Duration = Duration::from_micros(200);
-
 /// The `immsched shard-worker` loop: host one [`MatchService`] behind
 /// the framed stdio protocol.  The first frame must be
 /// [`ShardMsg::Hello`]; EOF on `input` is treated as a drain (finish
 /// pending work, then exit) so a dying router never strands episodes
 /// half-reported.
-pub fn worker_serve<R, W>(input: R, mut output: W) -> Result<()>
+pub fn worker_serve<R, W>(input: R, output: W) -> Result<()>
+where
+    R: Read + Send + 'static,
+    W: Write,
+{
+    worker_serve_with(input, output, TransportConfig::default())
+}
+
+/// [`worker_serve`] with explicit poll cadences (tests hosting the
+/// worker loop in-process tune the sweep without multi-millisecond
+/// waits).
+pub fn worker_serve_with<R, W>(input: R, mut output: W, tcfg: TransportConfig) -> Result<()>
 where
     R: Read + Send + 'static,
     W: Write,
@@ -608,7 +754,7 @@ where
                 break;
             }
         }
-        let timeout = if pending.is_empty() { IDLE_POLL } else { BUSY_POLL };
+        let timeout = if pending.is_empty() { tcfg.idle_poll } else { tcfg.busy_poll };
         let msg = if open {
             match rx.recv_timeout(timeout) {
                 Ok(msg) => Some(msg),
@@ -667,9 +813,11 @@ where
             }
             ShardMsg::Stats => {
                 let stats = svc.stats();
+                let inventory = svc.in_flight_request();
                 let status = ShardStatus {
                     queue_depth: stats.router.depth as usize,
-                    in_flight: svc.in_flight(),
+                    in_flight: inventory.map(|(_, p)| p),
+                    in_flight_id: inventory.map(|(id, _)| id),
                     stats,
                 };
                 write_frame(&mut output, &encode_reply(&ShardReply::Stats(status)))?;

@@ -43,7 +43,7 @@ use crate::util::json::{
 /// Protocol version tag carried by every frame.  Bump on any layout
 /// change: a mixed-version router/worker pair must fail the handshake,
 /// not mis-decode swarm state.
-pub const WIRE_SCHEMA: &str = "immsched.shard-wire/v1";
+pub const WIRE_SCHEMA: &str = "immsched.shard-wire/v2";
 
 /// Hard ceiling on one frame's payload (64 MiB).  The largest real
 /// payload is a `huge`-class problem + snapshot (a few MiB of JSON); a
@@ -118,6 +118,10 @@ pub struct ShardStatus {
     pub queue_depth: usize,
     /// Priority of the episode currently on the controller, if any.
     pub in_flight: Option<Priority>,
+    /// Request id of that episode — the shard's in-flight inventory.
+    /// Fleet supervision reads it so a dead shard's victim is known
+    /// for replay without waiting for its waiter to notice.
+    pub in_flight_id: Option<RequestId>,
     /// Full service telemetry (controller + admission router).
     pub stats: ServiceStats,
 }
@@ -446,6 +450,7 @@ fn encode_status(status: &ShardStatus) -> Json {
     Json::obj(vec![
         ("queue_depth", Json::from(status.queue_depth)),
         ("in_flight", status.in_flight.map_or(Json::Null, encode_priority)),
+        ("in_flight_id", status.in_flight_id.map_or(Json::Null, hex_u64)),
         ("stats", encode_service_stats(&status.stats)),
     ])
 }
@@ -456,6 +461,10 @@ fn decode_status(v: &Json) -> Result<ShardStatus> {
         in_flight: match v.get("in_flight") {
             None | Some(Json::Null) => None,
             Some(_) => Some(decode_priority(v, "in_flight")?),
+        },
+        in_flight_id: match v.get("in_flight_id") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(get_hex_u64(v, "in_flight_id")?),
         },
         stats: decode_service_stats(v.get("stats").context("status missing stats")?)?,
     })

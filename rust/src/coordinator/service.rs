@@ -434,9 +434,10 @@ impl MatchTicket {
 /// engines never have to cross threads.
 pub type ControllerFactory = Box<dyn FnOnce() -> GlobalController + Send>;
 
-/// Priority + cancel token of the episode currently on the controller
-/// thread (preemption bookkeeping).
-type InFlight = Option<(Priority, CancelToken)>;
+/// Request id, priority and cancel token of the episode currently on
+/// the controller thread (preemption bookkeeping, plus the in-flight
+/// inventory fleet supervision replays after a shard failure).
+type InFlight = Option<(RequestId, Priority, CancelToken)>;
 
 /// Caller-side knobs for one submission beyond (problem, priority,
 /// deadline) — see [`MatchService::submit_with`].
@@ -585,7 +586,7 @@ impl MatchService {
         if admissible {
             let guard = self.inflight.lock().unwrap();
             if !answered.load(Ordering::Acquire) {
-                if let Some((running, token)) = guard.as_ref() {
+                if let Some((_, running, token)) = guard.as_ref() {
                     if *running < priority {
                         token.cancel();
                     }
@@ -613,14 +614,21 @@ impl MatchService {
 
     /// Priority of the episode currently being served, if any.
     pub fn in_flight(&self) -> Option<Priority> {
-        self.inflight.lock().unwrap().as_ref().map(|(p, _)| *p)
+        self.in_flight_request().map(|(_, p)| p)
+    }
+
+    /// In-flight request inventory: id and priority of the episode on
+    /// the controller right now.  Fleet supervision reads this through
+    /// the stats probe so a dead shard's victim is known for replay.
+    pub fn in_flight_request(&self) -> Option<(RequestId, Priority)> {
+        self.inflight.lock().unwrap().as_ref().map(|(id, p, _)| (*id, *p))
     }
 }
 
 impl Drop for MatchService {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some((_, token)) = self.inflight.lock().unwrap().as_ref() {
+        if let Some((_, _, token)) = self.inflight.lock().unwrap().as_ref() {
             token.cancel();
         }
         if let Some(join) = self.join.take() {
@@ -695,7 +703,7 @@ fn service_loop(
                     let outranked =
                         router.peek().is_some_and(|best| best.priority > sub.priority);
                     if !outranked {
-                        *guard = Some((sub.priority, sub.cancel.clone()));
+                        *guard = Some((sub.id, sub.priority, sub.cancel.clone()));
                     }
                     outranked
                 };

@@ -43,7 +43,7 @@ use crate::util::json::Json;
 pub use lexer::{scrub, Pragma, Scrub};
 pub use rules::{
     NO_FLOAT_UNWRAP_ORD, NO_HASH_ITER_DETERMINISM, NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT,
-    NO_WALLCLOCK_CORE, RULES,
+    NO_UNBOUNDED_RETRY, NO_WALLCLOCK_CORE, RULES,
 };
 
 /// Schema tag carried by the JSON findings report.

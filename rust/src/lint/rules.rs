@@ -1,4 +1,4 @@
-//! The five `immsched-lint` rules and their module scopes.
+//! The six `immsched-lint` rules and their module scopes.
 //!
 //! Every rule mechanizes one invariant the reproduction's claims rest
 //! on (see `rust/README.md`, "Invariants enforced by static analysis"):
@@ -11,7 +11,7 @@
 //! `tests/…`, `benches/…`); an entry ending in `/` matches a subtree,
 //! anything else matches one file exactly.
 
-use super::lexer::{find_ident, ident_at, is_ident_byte, match_paren, skip_ws, Scrub};
+use super::lexer::{find_ident, ident_at, is_ident_byte, match_brace, match_paren, skip_ws, Scrub};
 
 /// `partial_cmp(..).unwrap()` / comparator callbacks built on
 /// `partial_cmp` — one NaN operand panics the comparison.  Applies
@@ -37,13 +37,22 @@ pub const NO_PANIC_TRANSPORT: &str = "no-panic-transport";
 /// bit-exact encodings cannot silently truncate.
 pub const NO_LOSSY_WIRE_CAST: &str = "no-lossy-wire-cast";
 
+/// `loop`/`while` in the supervision/chaos layer with no visible bound
+/// identifier (`max`/`cap`/`limit`/`budget`/`bound`/`threshold`) — a
+/// recovery path that retries forever turns one dead worker into a
+/// hung fleet.  Loops that are genuinely unbounded by design (the
+/// heartbeat; a blocking wait whose failure paths all converge) carry
+/// a `lint:allow` with the termination argument.
+pub const NO_UNBOUNDED_RETRY: &str = "no-unbounded-retry";
+
 /// All real rules (pragma-hygiene findings use separate names).
-pub const RULES: [&str; 5] = [
+pub const RULES: [&str; 6] = [
     NO_FLOAT_UNWRAP_ORD,
     NO_HASH_ITER_DETERMINISM,
     NO_WALLCLOCK_CORE,
     NO_PANIC_TRANSPORT,
     NO_LOSSY_WIRE_CAST,
+    NO_UNBOUNDED_RETRY,
 ];
 
 /// Modules whose iteration order / float ordering reaches results or
@@ -71,11 +80,21 @@ const WALLCLOCK_BOUNDARY: &[&str] = &[
     "src/cluster/transport.rs",
 ];
 
-/// The transport layer ([`NO_PANIC_TRANSPORT`]).
-const TRANSPORT_MODULES: &[&str] = &["src/cluster/wire.rs", "src/cluster/transport.rs"];
+/// The transport layer ([`NO_PANIC_TRANSPORT`]): the wire codec, the
+/// transports, and the supervision/chaos layers stacked on them — a
+/// panic anywhere here aborts a worker or the supervisor itself.
+const TRANSPORT_MODULES: &[&str] = &[
+    "src/cluster/wire.rs",
+    "src/cluster/transport.rs",
+    "src/cluster/supervise.rs",
+    "src/cluster/chaos.rs",
+];
 
 /// The wire codec itself ([`NO_LOSSY_WIRE_CAST`]).
 const WIRE_MODULES: &[&str] = &["src/cluster/wire.rs"];
+
+/// The fault-recovery layer ([`NO_UNBOUNDED_RETRY`]).
+const RETRY_MODULES: &[&str] = &["src/cluster/supervise.rs", "src/cluster/chaos.rs"];
 
 fn in_listed(rel: &str, list: &[&str]) -> bool {
     list.iter().any(|m| if m.ends_with('/') { rel.starts_with(m) } else { rel == *m })
@@ -104,6 +123,9 @@ pub fn scan(rel: &str, scrub: &Scrub) -> Vec<RawFinding> {
     }
     if in_listed(rel, WIRE_MODULES) {
         lossy_casts(scrub, &mut out);
+    }
+    if in_listed(rel, RETRY_MODULES) {
+        unbounded_retry(scrub, &mut out);
     }
     // one construct can trip a rule via several probes (e.g. a sort_by
     // whose callback also unwraps); collapse to one finding per line
@@ -332,4 +354,70 @@ fn lossy_casts(scrub: &Scrub, out: &mut Vec<RawFinding>) {
             });
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// rule 6: no-unbounded-retry
+// ---------------------------------------------------------------------------
+
+/// Identifier fragments that signal a loop is bounded (a counter
+/// compared against a maximum, a budget, a threshold…).
+const RETRY_BOUND_WORDS: &[&str] = &["max", "cap", "budget", "limit", "bound", "threshold"];
+
+fn unbounded_retry(scrub: &Scrub, out: &mut Vec<RawFinding>) {
+    let code = &scrub.code;
+    let bytes = code.as_bytes();
+    for word in ["loop", "while"] {
+        for at in find_ident(code, word) {
+            // the loop's full span: keyword → matching close brace of
+            // its body (for `while`, the condition rides along, so a
+            // bound in either the condition or the body counts)
+            let Some(open) = next_brace(bytes, at + word.len()) else { continue };
+            let Some(close) = match_brace(bytes, open) else { continue };
+            let span = code.get(at..close).unwrap_or("");
+            if !has_bound_ident(span) {
+                let line = scrub.line_of(at);
+                if scrub.in_test_code(line) {
+                    continue;
+                }
+                out.push(RawFinding {
+                    line,
+                    rule: NO_UNBOUNDED_RETRY,
+                    message: format!(
+                        "{word} in the fault-recovery layer has no visible bound \
+                         (no max/cap/limit/budget/bound/threshold identifier); bound \
+                         the retry or lint:allow with the termination argument"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// First `{` at or after `from` (the loop body's opening brace).
+fn next_brace(bytes: &[u8], from: usize) -> Option<usize> {
+    bytes.iter().skip(from).position(|&b| b == b'{').map(|off| from + off)
+}
+
+/// Whether any identifier in `span` contains a bound-signalling
+/// fragment (case-insensitive).
+fn has_bound_ident(span: &str) -> bool {
+    let bytes = span.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if is_ident_byte(bytes[i]) && (i == 0 || !is_ident_byte(bytes[i - 1])) {
+            let mut j = i;
+            while j < bytes.len() && is_ident_byte(bytes[j]) {
+                j += 1;
+            }
+            let ident = span.get(i..j).map(str::to_ascii_lowercase).unwrap_or_default();
+            if RETRY_BOUND_WORDS.iter().any(|w| ident.contains(w)) {
+                return true;
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    false
 }

@@ -15,7 +15,9 @@ use anyhow::{bail, Context, Result};
 
 use immsched::accel::{build_target_graph, Platform};
 use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
-use immsched::cluster::{policy_by_name, ClusterConfig, MatchCluster, RoutePolicy};
+use immsched::cluster::{
+    policy_by_name, ClusterConfig, MatchCluster, RoutePolicy, SupervisedFleet, SupervisorConfig,
+};
 use immsched::config::Config;
 use immsched::coordinator::{
     GlobalController, MatchEngine, MatchPath, MatchProblem, MatchService, QuantizedEngine,
@@ -456,12 +458,14 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
         pso: PsoConfig { seed, ..Default::default() },
         ..Default::default()
     };
-    let cluster = if process_shards {
+    let cluster = std::sync::Arc::new(if process_shards {
         MatchCluster::spawn_process_shards(ccfg, policy)?
     } else {
         MatchCluster::spawn(ccfg, policy)?
-    };
-    let report = run_open_loop(&cluster, &schedule, &dcfg)?;
+    });
+    let fleet = SupervisedFleet::new(cluster, SupervisorConfig::default());
+    let report = run_open_loop(&fleet, &schedule, &dcfg)?;
+    fleet.drain()?;
     print!("{}", report.table().render());
     println!(
         "{} submitted, {} served, {} shed, {} preempted, {} resumed, {} SLO misses in {}",
@@ -472,6 +476,13 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
         report.resumed(),
         report.slo_misses(),
         fmt_time(report.wall_seconds)
+    );
+    println!(
+        "supervision: {} probes, {} shard failures, {} replays, {} sheds at floor",
+        report.failover.probes,
+        report.failover.shards_failed,
+        report.failover.replays,
+        report.failover.shed_at_floor
     );
     Ok(())
 }

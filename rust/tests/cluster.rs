@@ -11,11 +11,15 @@
 //! via `CARGO_BIN_EXE_immsched`).
 
 use std::path::Path;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use immsched::cluster::transport::{ProcessShard, ShardTransport};
+use immsched::cluster::transport::{
+    FrameFault, InProcessShard, ProcessShard, ShardTransport, TransportConfig,
+};
 use immsched::cluster::{
-    ClusterConfig, DeadlineAware, LeastQueueDepth, MatchCluster, RoundRobin,
+    ChaosFault, ChaosSchedule, ClusterConfig, DeadlineAware, FaultInjectingTransport,
+    LeastQueueDepth, MatchCluster, RoundRobin, SupervisedFleet, SupervisorConfig,
 };
 use immsched::coordinator::{
     MatchPath, MatchProblem, MatchService, RequestId, ServiceConfig, SubmitOptions,
@@ -427,6 +431,248 @@ fn snapshot_migrated_across_process_boundary_resumes_bit_identically() {
         (Some(a), Some(b)) => assert_eq!(a, b, "follow-up snapshots must be bit-identical"),
         (a, b) => panic!("snapshot presence diverged: {:?} vs {:?}", a.is_some(), b.is_some()),
     }
+}
+
+/// A supervisor tuned for test cadences: fast heartbeat, short replay
+/// backoff, a few extra replay attempts to ride out stale status
+/// caches right after a kill.
+fn fast_supervisor() -> SupervisorConfig {
+    SupervisorConfig {
+        heartbeat_interval: Duration::from_millis(10),
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(20),
+        max_replays: 6,
+        ..Default::default()
+    }
+}
+
+/// Resubmit through the fleet, riding out the window where routing may
+/// still steer onto a shard that just died (its cached status has not
+/// expired yet — the cluster routes on a TTL'd view of shard health).
+fn resubmit_insistently(fleet: &SupervisedFleet, id: RequestId, problem: &MatchProblem) {
+    let mut attempts = 0;
+    while let Err(e) = fleet.resubmit(id, problem.clone(), Priority::Normal, None) {
+        attempts += 1;
+        assert!(attempts < 200, "resubmit never found a live shard: {e:#}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Acceptance (tier-1): a worker killed mid-episode fails over onto the
+/// surviving shard, warm-starting from the last persisted barrier, and
+/// the epochs reported across every received slice add up to *exactly*
+/// the uninterrupted budget — a crash costs at most the unpersisted
+/// tail of one slice, never double-counts, never restarts silently.
+#[test]
+fn killed_worker_fails_over_and_conserves_the_epoch_budget() {
+    let epochs = 40usize;
+    let pso = PsoConfig { seed: 23, epochs, repair_budget: 1_000, ..Default::default() };
+    let svc = ServiceConfig { epoch_quota: Some(15), ..Default::default() };
+    let shards: Vec<Arc<ProcessShard>> = (0..2)
+        .map(|_| Arc::new(ProcessShard::spawn_at(Path::new(WORKER_BIN), svc, pso).unwrap()))
+        .collect();
+    let transports: Vec<Arc<dyn ShardTransport>> =
+        shards.iter().map(|s| Arc::clone(s) as Arc<dyn ShardTransport>).collect();
+    let mut cluster =
+        MatchCluster::with_transports(transports, Box::new(LeastQueueDepth), 64);
+    // keep routing's view of a dead shard fresh — a long-lived stale
+    // "healthy" cache entry would bounce replays off the corpse
+    cluster.set_status_ttl(Duration::from_millis(5));
+    let cluster = Arc::new(cluster);
+    let fleet = SupervisedFleet::new(Arc::clone(&cluster), fast_supervisor());
+
+    let problem = infeasible_star_problem();
+    let id = fleet.submit(problem.clone(), Priority::Normal, None).unwrap();
+    // kill the worker the request was routed to, mid-episode: the first
+    // quota slice takes milliseconds, the abort lands in microseconds
+    let victim = fleet.shard_of(id).expect("submitted request must be ticketed");
+    shards[victim].abort();
+
+    let mut resp = fleet.wait(id).unwrap();
+    let mut total_epochs = resp.epochs_run;
+    let mut hops = 0;
+    while resp.path == MatchPath::Cancelled {
+        hops += 1;
+        assert!(hops <= 16, "episode did not converge after failover");
+        resubmit_insistently(&fleet, id, &problem);
+        resp = fleet.wait(id).unwrap();
+        total_epochs += resp.epochs_run;
+    }
+    assert_ne!(resp.path, MatchPath::Shed, "two shards must absorb one worker death");
+    assert!(resp.resumed, "the final slice must warm-start from a persisted barrier");
+    assert_eq!(
+        total_epochs, epochs,
+        "epochs across the kill must add up to exactly one uninterrupted budget"
+    );
+    let failover = fleet.failover();
+    assert!(failover.shards_failed >= 1, "the kill must be detected: {failover:?}");
+    assert!(failover.replays >= 1, "the in-flight victim must be replayed: {failover:?}");
+    assert_eq!(fleet.live_shards(), 1, "exactly one shard survives");
+    // the survivor still drains cleanly (the fleet's own drain would
+    // also try the corpse, which can no longer answer control traffic)
+    drop(fleet);
+    shards[1 - victim].drain().expect("survivor drains cleanly");
+}
+
+/// Satellite: when the *only* worker dies after a slice persisted its
+/// barrier, replay exhausts against zero live capacity and the fleet
+/// degrades to a shed answer — but the shed response hands the
+/// warm-start snapshot back instead of destroying the progress.
+#[test]
+fn dead_worker_shed_hands_the_snapshot_back() {
+    let pso = PsoConfig { seed: 53, epochs: 24, repair_budget: 1_000, ..Default::default() };
+    let svc = ServiceConfig { epoch_quota: Some(10), ..Default::default() };
+    let shard =
+        Arc::new(ProcessShard::spawn_at(Path::new(WORKER_BIN), svc, pso).unwrap());
+    let transports: Vec<Arc<dyn ShardTransport>> =
+        vec![Arc::clone(&shard) as Arc<dyn ShardTransport>];
+    let mut cluster =
+        MatchCluster::with_transports(transports, Box::<RoundRobin>::default(), 64);
+    cluster.set_status_ttl(Duration::from_millis(5));
+    let fleet = SupervisedFleet::new(Arc::new(cluster), fast_supervisor());
+
+    let problem = infeasible_star_problem();
+    let id = fleet.submit(problem.clone(), Priority::Normal, None).unwrap();
+    let first = fleet.wait(id).unwrap();
+    assert_eq!(first.path, MatchPath::Cancelled, "quota 10 slices the 24-epoch episode");
+    assert_eq!(first.epochs_run, 10);
+
+    // resubmit the second slice, then kill the only worker before it
+    // can answer — the child dies holding the in-flight request
+    fleet.resubmit(id, problem, Priority::Normal, None).unwrap();
+    shard.abort();
+
+    let resp = fleet.wait(id).unwrap();
+    assert_eq!(resp.path, MatchPath::Shed, "no live capacity left: degrade, don't hang");
+    let snapshot = resp.snapshot.expect("shed must hand the warm-start snapshot back");
+    assert_eq!(
+        snapshot.epochs_done, 10,
+        "the persisted barrier must survive the crash untouched"
+    );
+    assert!(fleet.failover().shed_at_floor >= 1);
+}
+
+/// What must be identical across two chaos runs with the same seeds
+/// and schedules.
+#[derive(Debug, PartialEq)]
+struct ChaosRun {
+    dispositions: Vec<(&'static str, usize, bool, u32)>,
+    replays: u64,
+    sheds: u64,
+    injected: String,
+}
+
+/// Drive a fixed workload through a supervised fleet whose in-process
+/// shards sit behind seeded fault injectors (a reply dropped on each
+/// shard, a delay on the first submission), and record everything
+/// observable about the outcome.
+fn run_chaos_fleet(chaos_seed: u64) -> ChaosRun {
+    let pso = PsoConfig { seed: 61, epochs: 20, repair_budget: 1_000, ..Default::default() };
+    let svc = ServiceConfig::default();
+    let schedules = [
+        ChaosSchedule::default()
+            .at(0, ChaosFault::Delay(Duration::from_millis(2)))
+            .at(1, ChaosFault::DropReply),
+        ChaosSchedule::default().at(2, ChaosFault::DropReply),
+    ];
+    let chaos: Vec<Arc<FaultInjectingTransport>> = schedules
+        .iter()
+        .enumerate()
+        .map(|(shard, schedule)| {
+            let inner: Arc<dyn ShardTransport> =
+                Arc::new(InProcessShard::spawn(svc, pso).unwrap());
+            Arc::new(FaultInjectingTransport::new(
+                inner,
+                schedule.clone(),
+                chaos_seed ^ shard as u64,
+            ))
+        })
+        .collect();
+    let transports: Vec<Arc<dyn ShardTransport>> =
+        chaos.iter().map(|c| Arc::clone(c) as Arc<dyn ShardTransport>).collect();
+    let cluster = Arc::new(MatchCluster::with_transports(
+        transports,
+        Box::<RoundRobin>::default(),
+        64,
+    ));
+    let fleet = SupervisedFleet::new(Arc::clone(&cluster), fast_supervisor());
+
+    let mut dispositions = Vec::new();
+    for i in 0..6 {
+        let problem =
+            if i % 2 == 1 { infeasible_star_problem() } else { chain_problem(4, 8) };
+        let id = fleet.submit(problem.clone(), Priority::Normal, None).unwrap();
+        let mut resp = fleet.wait(id).unwrap();
+        let mut epochs_total = resp.epochs_run;
+        let mut hops = 0u32;
+        while resp.path == MatchPath::Cancelled {
+            hops += 1;
+            assert!(hops <= 16, "episode did not converge under chaos");
+            fleet.resubmit(id, problem.clone(), Priority::Normal, None).unwrap();
+            resp = fleet.wait(id).unwrap();
+            epochs_total += resp.epochs_run;
+        }
+        dispositions.push((resp.path.name(), epochs_total, resp.resumed, hops));
+    }
+    let failover = fleet.failover();
+    let injected =
+        chaos.iter().map(|c| format!("{:?}", c.stats())).collect::<Vec<_>>().join(" | ");
+    ChaosRun {
+        dispositions,
+        replays: failover.replays,
+        sheds: failover.shed_at_floor,
+        injected,
+    }
+}
+
+/// Acceptance: chaos is deterministic — the same seeds and schedules
+/// produce the same per-request dispositions, the same replay counts,
+/// and the same injected-fault tallies on two independent runs.
+#[test]
+fn chaos_with_equal_seeds_and_schedules_is_deterministic() {
+    let first = run_chaos_fleet(0xC0FFEE);
+    let second = run_chaos_fleet(0xC0FFEE);
+    assert_eq!(first, second, "chaos dispositions must be a pure function of the seed");
+    assert!(first.replays >= 1, "the scheduled reply drops must force replays: {first:?}");
+    assert_eq!(first.sheds, 0, "healthy shards absorb dropped replies without shedding");
+    assert!(
+        first.injected.contains("dropped_replies: 1"),
+        "each shard must record its scheduled drop: {}",
+        first.injected
+    );
+}
+
+/// Satellite: the configurable control timeout bounds how long a
+/// *wedged* (not dead) worker can stall a control round-trip.  A
+/// truncated frame promises bytes that never arrive, wedging the
+/// worker's reader mid-frame; with a short [`TransportConfig`] the
+/// next status probe fails in well under the 30-second default.
+#[test]
+fn truncated_frame_wedges_within_the_configured_control_timeout() {
+    let pso = PsoConfig { seed: 7, ..Default::default() };
+    let tcfg = TransportConfig {
+        control_timeout: Duration::from_millis(250),
+        ..Default::default()
+    };
+    let shard = ProcessShard::spawn_at_with(
+        Path::new(WORKER_BIN),
+        ServiceConfig::default(),
+        pso,
+        tcfg,
+    )
+    .unwrap();
+    shard.status().expect("a fresh worker answers control traffic");
+
+    shard.inject_frame_fault(FrameFault::Truncated).unwrap();
+    let probe_started = Instant::now();
+    let probe = shard.status();
+    let waited = probe_started.elapsed();
+    assert!(probe.is_err(), "a wedged worker must fail the control round-trip");
+    assert!(
+        waited < Duration::from_secs(10),
+        "the 250ms control timeout must bound detection, not the 30s default: {waited:?}"
+    );
+    shard.abort();
 }
 
 /// Deadline-aware routing preempts across shards: with every shard busy

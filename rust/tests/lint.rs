@@ -8,7 +8,7 @@ use std::path::Path;
 
 use immsched::lint::{
     lint_source, lint_tree, Finding, BAD_PRAGMA, NO_FLOAT_UNWRAP_ORD, NO_HASH_ITER_DETERMINISM,
-    NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT, NO_WALLCLOCK_CORE, UNUSED_PRAGMA,
+    NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT, NO_UNBOUNDED_RETRY, NO_WALLCLOCK_CORE, UNUSED_PRAGMA,
 };
 
 fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
@@ -224,6 +224,84 @@ fn encode(len: usize) -> anyhow::Result<u32> {
 fn rename(x: ThisKind) -> f64 { x.as_f64() }
 "#;
     assert!(lint_source("src/cluster/wire.rs", checked).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 6: no-unbounded-retry (fault-recovery modules, non-test code)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unbounded_loops_flagged_in_fault_recovery_modules() {
+    let spinny = r#"
+fn redial(mut attempt: u32) -> u32 {
+    loop {
+        attempt = attempt.wrapping_add(1);
+        if attempt == 0 { break; }
+    }
+    attempt
+}
+fn drain_backlog(mut backlog: u32) {
+    while backlog > 0 {
+        backlog = backlog.saturating_sub(1);
+    }
+}
+"#;
+    for path in ["src/cluster/supervise.rs", "src/cluster/chaos.rs"] {
+        let found = lint_source(path, spinny);
+        assert_eq!(found.len(), 2, "{path}: loop + while both spin blind: {found:?}");
+        assert!(found.iter().all(|f| f.rule == NO_UNBOUNDED_RETRY));
+    }
+    // outside the fault-recovery scope the same source is fine
+    assert!(lint_source("src/cluster/driver.rs", spinny).is_empty());
+    assert!(lint_source("src/scheduler/fixture.rs", spinny).is_empty());
+}
+
+#[test]
+fn bounded_pragmad_and_test_retries_are_clean() {
+    // a bound-signalling identifier in the condition or body is the proof
+    let bounded = r#"
+fn redial(mut attempt: u32, max_replays: u32) -> u32 {
+    while attempt < max_replays {
+        attempt += 1;
+    }
+    attempt
+}
+fn backoff(mut tries: u32, budget: u32) -> u32 {
+    loop {
+        if tries >= budget { return tries; }
+        tries += 1;
+    }
+}
+"#;
+    assert!(lint_source("src/cluster/supervise.rs", bounded).is_empty());
+
+    // a justified pragma carries the termination argument instead
+    let pledged = r#"
+fn pump(stop: &std::sync::atomic::AtomicBool) {
+    // lint:allow(no-unbounded-retry): runs until the owner flips the stop flag
+    loop {
+        if stop.load(std::sync::atomic::Ordering::Relaxed) { return; }
+    }
+}
+"#;
+    assert!(lint_source("src/cluster/supervise.rs", pledged).is_empty());
+
+    // test code spins freely — a hung test is the harness's problem
+    let in_tests = r#"
+fn shift(x: u64) -> u64 { x >> 1 }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn spin() {
+        let mut x = 4u64;
+        loop {
+            x = super::shift(x);
+            if x == 0 { break; }
+        }
+    }
+}
+"#;
+    assert!(lint_source("src/cluster/chaos.rs", in_tests).is_empty());
 }
 
 // ---------------------------------------------------------------------------

@@ -195,10 +195,11 @@ fn framed_messages_round_trip() {
 
     // replies too
     let replies = vec![
-        ShardReply::Ready { schema: "immsched.shard-wire/v1".into() },
+        ShardReply::Ready { schema: "immsched.shard-wire/v2".into() },
         ShardReply::Stats(ShardStatus {
             queue_depth: 3,
             in_flight: Some(Priority::Background),
+            in_flight_id: Some((1 << 60) + 5),
             stats: ServiceStats {
                 controller: ControllerStats { requests: 5, cancelled: 2, ..Default::default() },
                 router: RouterStats { admitted: 7, depth: 3, ..Default::default() },
@@ -213,13 +214,14 @@ fn framed_messages_round_trip() {
     }
     let mut r = &buf[..];
     match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
-        ShardReply::Ready { schema } => assert_eq!(schema, "immsched.shard-wire/v1"),
+        ShardReply::Ready { schema } => assert_eq!(schema, "immsched.shard-wire/v2"),
         other => panic!("{other:?}"),
     }
     match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
         ShardReply::Stats(status) => {
             assert_eq!(status.queue_depth, 3);
             assert_eq!(status.in_flight, Some(Priority::Background));
+            assert_eq!(status.in_flight_id, Some((1 << 60) + 5), "ids past 2^53 must survive");
             assert_eq!(status.stats.controller.requests, 5);
             assert_eq!(status.stats.controller.cancelled, 2);
             assert_eq!(status.stats.router.admitted, 7);
