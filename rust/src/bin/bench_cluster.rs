@@ -36,6 +36,11 @@
 //! by `--chaos-seed`; the open-loop run then exercises the fleet's
 //! failover paths and the trajectory records the failover and chaos
 //! counters alongside the serving metrics.
+//!
+//! `--socket-shards` hosts every shard in an `immsched shard-listen`
+//! child dialed over loopback TCP (`--socket-uds` over a Unix-domain
+//! socket instead) — the full multi-host path: accept loop, framed
+//! session per connection, reconnect-with-resume link supervision.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -43,6 +48,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
+use immsched::cluster::net::{spawn_shard_listener, ListenerChild, SocketShard};
 use immsched::cluster::transport::worker_binary;
 use immsched::cluster::{
     policy_by_name, ChaosSchedule, ClusterConfig, FaultInjectingTransport, InProcessShard,
@@ -66,6 +72,11 @@ struct Args {
     /// over the wire protocol instead of an in-process service thread —
     /// the trajectory compares the two transports' overhead.
     process_shards: bool,
+    /// Host each shard in an `immsched shard-listen` child dialed over
+    /// loopback TCP — the full socket path, link supervision included.
+    socket_shards: bool,
+    /// As `--socket-shards`, but over a Unix-domain socket.
+    socket_uds: bool,
     policy: String,
     rate: f64,
     horizon: f64,
@@ -81,8 +92,16 @@ struct Args {
 }
 
 impl Args {
+    fn socket(&self) -> bool {
+        self.socket_shards || self.socket_uds
+    }
+
     fn transport_name(&self) -> &'static str {
-        if self.process_shards {
+        if self.socket_uds {
+            "socket-uds"
+        } else if self.socket_shards {
+            "socket"
+        } else if self.process_shards {
             "process"
         } else {
             "in-process"
@@ -109,6 +128,8 @@ fn parse_args() -> Result<Args> {
         smoke,
         fresh: argv.iter().any(|a| a == "--fresh"),
         process_shards: argv.iter().any(|a| a == "--process-shards"),
+        socket_shards: argv.iter().any(|a| a == "--socket-shards"),
+        socket_uds: argv.iter().any(|a| a == "--socket-uds"),
         shards: flag("--shards").map(|s| s.parse()).transpose()?.unwrap_or(2).max(1),
         policy: flag("--policy").cloned().unwrap_or_else(|| "deadline-aware".into()),
         rate: flag("--rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0),
@@ -134,19 +155,55 @@ fn make_policy(name: &str) -> Result<Box<dyn RoutePolicy>> {
     })
 }
 
-/// Spawn a cluster on the transport the run is benchmarking.
-fn spawn_cluster(args: &Args, ccfg: ClusterConfig) -> Result<MatchCluster> {
-    let policy = make_policy(&args.policy)?;
-    if args.process_shards {
-        MatchCluster::spawn_process_shards(ccfg, policy)
+/// The listener address spec for one socket shard slot.
+fn socket_spec(args: &Args, slot: usize) -> String {
+    if args.socket_uds {
+        let dir = std::env::temp_dir();
+        format!("unix://{}/immsched-bench-{}-{slot}.sock", dir.display(), std::process::id())
     } else {
-        MatchCluster::spawn(ccfg, policy)
+        "127.0.0.1:0".into()
     }
 }
 
-/// One bare (un-wrapped) shard transport of the benchmarked kind.
-fn spawn_transport(args: &Args, ccfg: &ClusterConfig) -> Result<Arc<dyn ShardTransport>> {
-    Ok(if args.process_shards {
+/// Spawn a cluster on the transport the run is benchmarking.  The
+/// returned [`ListenerChild`] handles (socket transports only) must
+/// outlive the cluster — dropping one kills its worker.
+fn spawn_cluster(
+    args: &Args,
+    ccfg: ClusterConfig,
+) -> Result<(MatchCluster, Vec<ListenerChild>)> {
+    let policy = make_policy(&args.policy)?;
+    if args.socket() {
+        let mut children = Vec::with_capacity(args.shards);
+        let mut transports: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(args.shards);
+        for slot in 0..args.shards {
+            transports.push(spawn_transport(args, &ccfg, slot, &mut children)?);
+        }
+        let cluster = MatchCluster::with_transports(transports, policy, ccfg.resume_capacity);
+        Ok((cluster, children))
+    } else if args.process_shards {
+        Ok((MatchCluster::spawn_process_shards(ccfg, policy)?, Vec::new()))
+    } else {
+        Ok((MatchCluster::spawn(ccfg, policy)?, Vec::new()))
+    }
+}
+
+/// One bare (un-wrapped) shard transport of the benchmarked kind; a
+/// socket transport's listener child is appended to `children`.
+fn spawn_transport(
+    args: &Args,
+    ccfg: &ClusterConfig,
+    slot: usize,
+    children: &mut Vec<ListenerChild>,
+) -> Result<Arc<dyn ShardTransport>> {
+    Ok(if args.socket() {
+        let bin = worker_binary()?;
+        let child =
+            spawn_shard_listener(&bin, &socket_spec(args, slot), &[], Duration::from_secs(30))?;
+        let shard = SocketShard::connect(child.addr().clone(), ccfg.service, ccfg.pso)?;
+        children.push(child);
+        Arc::new(shard)
+    } else if args.process_shards {
         let bin = worker_binary()?;
         Arc::new(ProcessShard::spawn_at(&bin, ccfg.service, ccfg.pso)?)
     } else {
@@ -161,12 +218,13 @@ fn spawn_chaos_cluster(
     args: &Args,
     ccfg: ClusterConfig,
     schedule: &ChaosSchedule,
-) -> Result<(MatchCluster, Vec<Arc<FaultInjectingTransport>>)> {
+) -> Result<(MatchCluster, Vec<Arc<FaultInjectingTransport>>, Vec<ListenerChild>)> {
     let policy = make_policy(&args.policy)?;
     let mut wrapped: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(args.shards);
     let mut chaos = Vec::with_capacity(args.shards);
+    let mut children = Vec::new();
     for shard in 0..args.shards {
-        let inner = spawn_transport(args, &ccfg)?;
+        let inner = spawn_transport(args, &ccfg, shard, &mut children)?;
         let c = Arc::new(FaultInjectingTransport::new(
             inner,
             schedule.clone(),
@@ -175,7 +233,8 @@ fn spawn_chaos_cluster(
         chaos.push(Arc::clone(&c));
         wrapped.push(c);
     }
-    Ok((MatchCluster::with_transports(wrapped, policy, ccfg.resume_capacity), chaos))
+    let cluster = MatchCluster::with_transports(wrapped, policy, ccfg.resume_capacity);
+    Ok((cluster, chaos, children))
 }
 
 /// A 3-fan-out star cannot embed into a chain, but its full mask has no
@@ -230,7 +289,8 @@ fn resume_proof(args: &Args, target_s: f64) -> Result<ResumeProof> {
         args.shards
     );
     for attempt in 0..5 {
-        let cluster = spawn_cluster(
+        // `_children` holds any socket workers alive for the attempt
+        let (cluster, _children) = spawn_cluster(
             args,
             ClusterConfig {
                 shards: args.shards,
@@ -361,7 +421,7 @@ fn main() -> Result<()> {
         Some(spec) => Some(ChaosSchedule::parse(spec)?),
         None => None,
     };
-    let (cluster, chaos_shards) = match &chaos_schedule {
+    let (cluster, chaos_shards, _children) = match &chaos_schedule {
         Some(cs) => {
             println!(
                 "[bench_cluster] chaos: schedule {:?} seed {} on every shard",
@@ -370,7 +430,10 @@ fn main() -> Result<()> {
             );
             spawn_chaos_cluster(&args, ccfg, cs)?
         }
-        None => (spawn_cluster(&args, ccfg)?, Vec::new()),
+        None => {
+            let (cluster, children) = spawn_cluster(&args, ccfg)?;
+            (cluster, Vec::new(), children)
+        }
     };
     let fleet = SupervisedFleet::new(Arc::new(cluster), SupervisorConfig::default());
     let report = run_open_loop(&fleet, &schedule, &dcfg)?;

@@ -34,6 +34,12 @@
 //!   replies, undecodable frames and worker kills from a scripted
 //!   schedule, so the failover paths are exercised by ordinary
 //!   `cargo test`.
+//! * [`net`] — shards on the network: [`SocketShard`] dials a remote
+//!   `immsched shard-listen` worker over TCP or Unix-domain sockets
+//!   (reconnect-with-resume on a severed link), [`WorkerRegistry`]
+//!   speaks the `immsched.fleet-wire/v1` join/heartbeat/leave protocol
+//!   so the router *discovers* workers, and [`ElasticScaler`] grows
+//!   and retires shard slots against the observed queue depth.
 //!
 //! Request lifecycle: **route → submit (transport) → admit → engine
 //! chain → outcome**, with `Cancelled` outcomes feeding the resume
@@ -41,6 +47,7 @@
 
 pub mod chaos;
 pub mod driver;
+pub mod net;
 pub mod policy;
 pub mod resume;
 pub mod supervise;
@@ -64,6 +71,11 @@ pub use chaos::{ChaosFault, ChaosSchedule, ChaosStats, FaultInjectingTransport};
 pub use policy::{
     policy_by_name, DeadlineAware, LeastQueueDepth, RoundRobin, RoutePolicy, ShardId, ShardView,
     DEGRADED_QUEUE_DEPTH,
+};
+pub use net::{
+    announce, shards_from_registry, spawn_shard_listener, Announcer, ElasticScaler,
+    ElasticityConfig, ListenConfig, ListenerChild, NetAddr, NetStream, ReconnectConfig,
+    RegistryServer, ShardListener, SocketShard, WorkerRegistry,
 };
 pub use resume::{ResumeStats, ResumeStore};
 pub use supervise::{FailoverStats, SupervisedFleet, SupervisorConfig};
@@ -327,12 +339,22 @@ impl MatchCluster {
         res
     }
 
-    /// Cached-or-fresh status for `shard`: serve the cache while it is
-    /// within the TTL, otherwise probe.  `None` means the most recent
-    /// probe failed (dead or wedged worker).
+    /// Cached-or-fresh status for `shard`: fold in any status a reply
+    /// piggybacked since the last look (wire v3 pushes one on every
+    /// response, so a busy shard refreshes its cache for free), then
+    /// serve the cache while it is within the TTL, otherwise probe.
+    /// `None` means the most recent probe failed (dead or wedged
+    /// worker).
     fn fetch_status(&self, shard: ShardId) -> Option<ShardStatus> {
         {
-            let slot = lock_recover(&self.status_cache[shard]);
+            let pushed = self.transport(shard).take_pushed_status();
+            let mut slot = lock_recover(&self.status_cache[shard]);
+            if let Some((at, status)) = pushed {
+                let newer = slot.as_ref().map_or(true, |(prev, _)| at > *prev);
+                if newer {
+                    *slot = Some((at, Some(status)));
+                }
+            }
             if let Some((at, status)) = slot.as_ref() {
                 if at.elapsed() <= self.status_ttl {
                     return status.clone();

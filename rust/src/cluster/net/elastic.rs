@@ -1,0 +1,304 @@
+//! Registry-driven fleet elasticity: grow and retire shard slots
+//! against the observed queue depth.
+//!
+//! The cluster's slot count is fixed at construction (`views()`,
+//! `stats()` and routing are all indexed by slot), so elasticity works
+//! *within* the slots: retiring a shard swaps a [`RetiredShard`]
+//! placeholder into its slot — it reports the degraded queue depth, so
+//! every routing policy already avoids it — and growing swaps a real
+//! transport back in via the spawner (typically a registry dial).
+//! Capacity planning therefore sets `max_shards` at spawn time and
+//! lets the scaler decide how many slots are *live*.
+//!
+//! The policy itself is the pure function [`scale_decision`], kept
+//! free of I/O so it can be tested as a table; [`ElasticScaler::step`]
+//! applies one decision to a live cluster.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{MatchProblem, MatchResponse, RequestId};
+use crate::matcher::SwarmSnapshot;
+use crate::scheduler::Priority;
+
+use super::super::transport::{lock_recover, ShardTransport};
+use super::super::wire::ShardStatus;
+use super::super::{MatchCluster, DEGRADED_QUEUE_DEPTH};
+
+/// Elasticity thresholds, all in queued requests *per live shard*.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticityConfig {
+    /// Grow when the total queue depth exceeds this many requests per
+    /// live shard (and a retired slot is available to fill).
+    pub grow_above: usize,
+    /// Retire when the total queue depth falls below this many
+    /// requests per live shard (and more than `min_shards` are live).
+    pub shrink_below: usize,
+    /// Never retire below this many live shards.
+    pub min_shards: usize,
+    /// Never grow above this many live shards (the slot count caps it
+    /// regardless).
+    pub max_shards: usize,
+}
+
+impl Default for ElasticityConfig {
+    fn default() -> Self {
+        Self { grow_above: 4, shrink_below: 1, min_shards: 1, max_shards: usize::MAX }
+    }
+}
+
+/// One elasticity verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Fill a retired slot with a fresh worker.
+    Grow,
+    /// Drain and retire one live shard.
+    Shrink,
+    /// Load sits inside the hysteresis band — do nothing.
+    Hold,
+}
+
+/// The pure scaling policy: what to do with `live` live shards and
+/// `total_queue_depth` queued requests across them.  `Grow` whenever
+/// the fleet is below `min_shards`; otherwise grow on
+/// `depth > grow_above · live` (capped by `max_shards`) and shrink on
+/// `depth < shrink_below · live` (floored by `min_shards`).
+pub fn scale_decision(
+    cfg: &ElasticityConfig,
+    live: usize,
+    total_queue_depth: usize,
+) -> ScaleAction {
+    if live < cfg.min_shards {
+        return ScaleAction::Grow;
+    }
+    if live < cfg.max_shards && total_queue_depth > cfg.grow_above.saturating_mul(live) {
+        return ScaleAction::Grow;
+    }
+    if live > cfg.min_shards && total_queue_depth < cfg.shrink_below.saturating_mul(live) {
+        return ScaleAction::Shrink;
+    }
+    ScaleAction::Hold
+}
+
+/// The placeholder transport occupying a retired slot.  It reports the
+/// degraded queue depth — the same sentinel a dead worker's failed
+/// probe caches — so every routing policy already knows to route
+/// around it, and it rejects anything routed at it anyway.
+#[derive(Debug, Default)]
+pub struct RetiredShard;
+
+impl ShardTransport for RetiredShard {
+    fn kind(&self) -> &'static str {
+        "retired"
+    }
+
+    fn submit(
+        &self,
+        id: RequestId,
+        _problem: MatchProblem,
+        _priority: Priority,
+        _timeout: Option<f64>,
+        _resume: Option<SwarmSnapshot>,
+    ) -> Result<()> {
+        bail!("request {id}: this shard slot is retired")
+    }
+
+    fn cancel(&self, _id: RequestId) {}
+
+    fn status(&self) -> Result<ShardStatus> {
+        Ok(ShardStatus { queue_depth: DEGRADED_QUEUE_DEPTH, ..ShardStatus::default() })
+    }
+
+    fn try_response(&self, _id: RequestId) -> Option<MatchResponse> {
+        None
+    }
+
+    fn wait_response(&self, id: RequestId) -> Result<MatchResponse> {
+        bail!("request {id}: a retired shard slot holds no responses")
+    }
+
+    fn drain(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Applies [`scale_decision`] to a live [`MatchCluster`]: retire swaps
+/// a [`RetiredShard`] into the slot after draining the incumbent; grow
+/// refills a retired slot from the spawner (typically
+/// [`super::registry::shards_from_registry`]'s dialer or a
+/// [`super::SocketShard`] factory).
+pub struct ElasticScaler {
+    cluster: Arc<MatchCluster>,
+    cfg: ElasticityConfig,
+    spawner: Box<dyn Fn() -> Result<Arc<dyn ShardTransport>> + Send + Sync>,
+    /// Which slots hold a live transport (false = retired placeholder).
+    live: Mutex<Vec<bool>>,
+    grows: AtomicU64,
+    retires: AtomicU64,
+}
+
+impl ElasticScaler {
+    /// Wrap `cluster`, whose every slot is assumed live.  `spawner`
+    /// produces a replacement transport when a retired slot regrows.
+    pub fn new(
+        cluster: Arc<MatchCluster>,
+        cfg: ElasticityConfig,
+        spawner: impl Fn() -> Result<Arc<dyn ShardTransport>> + Send + Sync + 'static,
+    ) -> Self {
+        let slots = cluster.shard_count();
+        Self {
+            cluster,
+            cfg,
+            spawner: Box::new(spawner),
+            live: Mutex::new(vec![true; slots]),
+            grows: AtomicU64::new(0),
+            retires: AtomicU64::new(0),
+        }
+    }
+
+    /// How many slots currently hold a live transport.
+    pub fn live_count(&self) -> usize {
+        lock_recover(&self.live).iter().filter(|l| **l).count()
+    }
+
+    /// `(grows, retires)` applied over this scaler's lifetime.
+    pub fn churn(&self) -> (u64, u64) {
+        (self.grows.load(Ordering::Acquire), self.retires.load(Ordering::Acquire))
+    }
+
+    /// Observe the cluster and apply at most one scaling action;
+    /// returns what was actually done (a `Grow` verdict with no
+    /// retired slot left to fill degrades to `Hold`).
+    pub fn step(&self) -> Result<ScaleAction> {
+        let views = self.cluster.views();
+        let live = lock_recover(&self.live).clone();
+        let live_count = live.iter().filter(|l| **l).count();
+        // a degraded depth is a dead-or-retired sentinel, not load
+        let depth: usize = views
+            .iter()
+            .filter(|v| live.get(v.shard).copied().unwrap_or(false) && !v.is_degraded())
+            .map(|v| v.queue_depth)
+            .sum();
+        match scale_decision(&self.cfg, live_count, depth) {
+            ScaleAction::Grow => self.grow(),
+            ScaleAction::Shrink => {
+                // retire the emptiest live shard: cheapest to drain
+                let victim = views
+                    .iter()
+                    .filter(|v| live.get(v.shard).copied().unwrap_or(false))
+                    .min_by_key(|v| v.queue_depth)
+                    .map(|v| v.shard);
+                match victim {
+                    Some(slot) => self.retire(slot).map(|()| ScaleAction::Shrink),
+                    None => Ok(ScaleAction::Hold),
+                }
+            }
+            ScaleAction::Hold => Ok(ScaleAction::Hold),
+        }
+    }
+
+    /// Fill the lowest retired slot from the spawner; `Hold` if every
+    /// slot is already live.
+    pub fn grow(&self) -> Result<ScaleAction> {
+        let slot = {
+            let live = lock_recover(&self.live);
+            live.iter().position(|l| !*l)
+        };
+        let Some(slot) = slot else {
+            return Ok(ScaleAction::Hold);
+        };
+        let shard = (self.spawner)().context("spawning a replacement shard")?;
+        self.cluster.replace_transport(slot, shard);
+        if let Some(live) = lock_recover(&self.live).get_mut(slot) {
+            *live = true;
+        }
+        self.grows.fetch_add(1, Ordering::AcqRel);
+        crate::log_debug!("elastic: slot {slot} regrown");
+        Ok(ScaleAction::Grow)
+    }
+
+    /// Drain `slot`'s transport and swap in the retired placeholder.
+    /// New routing sees the degraded placeholder immediately; the
+    /// incumbent finishes (and keeps serving) its already-issued
+    /// tickets before its handle drops.
+    pub fn retire(&self, slot: usize) -> Result<()> {
+        let incumbent = self.cluster.transport(slot);
+        self.cluster.replace_transport(slot, Arc::new(RetiredShard));
+        if let Some(live) = lock_recover(&self.live).get_mut(slot) {
+            *live = false;
+        }
+        self.retires.fetch_add(1, Ordering::AcqRel);
+        incumbent.drain().with_context(|| format!("draining retired slot {slot}"))?;
+        crate::log_debug!("elastic: slot {slot} retired");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::{ClusterConfig, InProcessShard, LeastQueueDepth};
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+    use crate::graph::{gen_chain, NodeKind};
+    use crate::matcher::PsoConfig;
+
+    #[test]
+    fn scale_decision_table() {
+        let cfg =
+            ElasticityConfig { grow_above: 4, shrink_below: 1, min_shards: 1, max_shards: 3 };
+        // below the floor: always grow
+        assert_eq!(scale_decision(&cfg, 0, 0), ScaleAction::Grow);
+        // 2 live, depth 9 > 4·2: grow
+        assert_eq!(scale_decision(&cfg, 2, 9), ScaleAction::Grow);
+        // at the cap: the same load holds
+        assert_eq!(scale_decision(&cfg, 3, 100), ScaleAction::Hold);
+        // 2 live, depth 1 < 1·2: shrink
+        assert_eq!(scale_decision(&cfg, 2, 1), ScaleAction::Shrink);
+        // at the floor: an empty queue holds
+        assert_eq!(scale_decision(&cfg, 1, 0), ScaleAction::Hold);
+        // inside the band: hold
+        assert_eq!(scale_decision(&cfg, 2, 5), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn retire_then_regrow_round_trips_a_slot() {
+        let pso = PsoConfig { seed: 9, ..Default::default() };
+        let cfg = ClusterConfig { shards: 2, pso, ..Default::default() };
+        let cluster =
+            Arc::new(MatchCluster::spawn(cfg, Box::new(LeastQueueDepth)).unwrap());
+        let scaler = ElasticScaler::new(
+            Arc::clone(&cluster),
+            ElasticityConfig { min_shards: 1, ..Default::default() },
+            move || Ok(Arc::new(InProcessShard::spawn(ServiceConfig::default(), pso)?)),
+        );
+        assert_eq!(scaler.live_count(), 2);
+
+        scaler.retire(1).unwrap();
+        assert_eq!(scaler.live_count(), 1);
+        assert_eq!(cluster.transport(1).kind(), "retired");
+        // the retired slot reads as degraded, so routing avoids it and
+        // submissions still land on the live shard
+        let qd = gen_chain(3, NodeKind::Compute);
+        let gd = gen_chain(6, NodeKind::Universal);
+        for _ in 0..3 {
+            let ticket = cluster
+                .submit(MatchProblem::from_dags(&qd, &gd), Priority::Normal, None)
+                .unwrap();
+            assert_eq!(ticket.shard, 0, "routing must avoid the retired slot");
+            assert!(ticket.wait().unwrap().matched());
+        }
+
+        assert_eq!(scaler.grow().unwrap(), ScaleAction::Grow);
+        assert_eq!(scaler.live_count(), 2);
+        assert_eq!(cluster.transport(1).kind(), "in-process");
+        let ticket = cluster
+            .submit(MatchProblem::from_dags(&qd, &gd), Priority::Normal, None)
+            .unwrap();
+        assert!(ticket.wait().unwrap().matched());
+        // every slot live again: growing further holds
+        assert_eq!(scaler.grow().unwrap(), ScaleAction::Hold);
+        assert_eq!(scaler.churn(), (1, 1));
+    }
+}

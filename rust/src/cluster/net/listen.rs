@@ -1,0 +1,179 @@
+//! [`ShardListener`]: the serving side of the socket transport.
+//!
+//! An accept loop over a [`NetListener`] (TCP or Unix-domain) that runs
+//! one [`worker_serve`] session — one `MatchService`, the exact loop a
+//! `shard-worker` child runs over stdio — per accepted connection, on
+//! its own thread.  Drain-on-disconnect comes for free: `worker_serve`
+//! treats EOF as a drain request, so a router that vanishes never
+//! strands episodes half-reported.
+//!
+//! [`spawn_shard_listener`] is the out-of-process form: it spawns
+//! `immsched shard-listen` as a child, parses the announce line for the
+//! bound address (letting tests bind port 0), and kills the child on
+//! drop — the "machine" the multi-host tests power off.
+//!
+//! [`worker_serve`]: super::super::transport::worker_serve
+
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::super::transport::{worker_serve_with, TransportConfig};
+use super::{NetAddr, NetListener, NetStream};
+
+/// Accept-loop knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ListenConfig {
+    /// Connections served before [`ShardListener::serve`] returns —
+    /// the accept loop's bound.  The default is effectively "serve
+    /// forever"; tests set the exact number of sessions they dial.
+    pub max_conns: u64,
+}
+
+impl Default for ListenConfig {
+    fn default() -> Self {
+        Self { max_conns: u64::MAX }
+    }
+}
+
+/// A bound shard endpoint — see the module docs.
+pub struct ShardListener {
+    socket: NetListener,
+    addr: NetAddr,
+}
+
+impl ShardListener {
+    /// Bind `addr` (TCP port 0 picks an ephemeral port; a stale UDS
+    /// socket file is replaced).
+    pub fn bind(addr: &NetAddr) -> Result<Self> {
+        let (socket, addr) = NetListener::bind(addr)?;
+        Ok(Self { socket, addr })
+    }
+
+    /// The concrete bound address peers can dial.
+    pub fn local_addr(&self) -> &NetAddr {
+        &self.addr
+    }
+
+    /// Accept and serve connections, one `MatchService` per connection,
+    /// until `lcfg.max_conns` have been accepted; then join every
+    /// session and return.
+    pub fn serve(&self, tcfg: TransportConfig, lcfg: ListenConfig) -> Result<()> {
+        let mut sessions = Vec::new();
+        let mut accepted: u64 = 0;
+        while accepted < lcfg.max_conns {
+            accepted += 1;
+            let stream = self.socket.accept()?;
+            let session = std::thread::Builder::new()
+                .name("immsched-shard-conn".into())
+                .spawn(move || serve_conn(stream, tcfg))?;
+            sessions.push(session);
+        }
+        for session in sessions {
+            let _ = session.join();
+        }
+        Ok(())
+    }
+}
+
+/// One connection's lifetime: split the stream and run the worker loop.
+fn serve_conn(stream: NetStream, tcfg: TransportConfig) {
+    let read_half = match stream.try_clone() {
+        Ok(half) => half,
+        Err(e) => {
+            crate::log_warn!("cannot split an accepted connection: {e:#}");
+            return;
+        }
+    };
+    if let Err(e) = worker_serve_with(read_half, stream, tcfg) {
+        crate::log_warn!("shard connection ended with an error: {e:#}");
+    }
+}
+
+/// An `immsched shard-listen` child process (the out-of-process worker
+/// "machine").  Killed and reaped on drop.
+pub struct ListenerChild {
+    child: Child,
+    addr: NetAddr,
+}
+
+impl ListenerChild {
+    /// The address the child announced (concrete even when spawned on
+    /// port 0).
+    pub fn addr(&self) -> &NetAddr {
+        &self.addr
+    }
+
+    /// Kill the listener process — the machine-failure fault the
+    /// multi-host failover tests inject.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ListenerChild {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `immsched shard-listen --addr <spec> [extra…]` and wait (up to
+/// `announce_timeout`) for its `shard-listen: listening on <addr>`
+/// announce line.
+pub fn spawn_shard_listener(
+    bin: &Path,
+    spec: &str,
+    extra: &[&str],
+    announce_timeout: Duration,
+) -> Result<ListenerChild> {
+    let mut child = Command::new(bin)
+        .arg("shard-listen")
+        .arg("--addr")
+        .arg(spec)
+        .args(extra)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning shard listener {}", bin.display()))?;
+    let reap = |mut child: Child, e: anyhow::Error| -> anyhow::Error {
+        let _ = child.kill();
+        let _ = child.wait();
+        e
+    };
+    let Some(stdout) = child.stdout.take() else {
+        return Err(reap(child, anyhow::anyhow!("shard listener spawned without piped stdout")));
+    };
+    // read the announce line on a helper thread so a child that dies
+    // before binding fails the spawn after a timeout instead of
+    // hanging it; afterwards the thread keeps the pipe drained so the
+    // child can never block on a full stdout buffer
+    let (announce_tx, announce_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line);
+        let _ = announce_tx.send(line);
+        let _ = std::io::copy(&mut reader, &mut std::io::sink());
+    });
+    let line = match announce_rx.recv_timeout(announce_timeout) {
+        Ok(line) => line,
+        Err(_) => {
+            let e = anyhow::anyhow!("shard listener did not announce within {announce_timeout:?}");
+            return Err(reap(child, e));
+        }
+    };
+    let Some(spec) = line.trim().strip_prefix("shard-listen: listening on ") else {
+        return Err(reap(child, anyhow::anyhow!("unexpected announce line {line:?}")));
+    };
+    let addr = match NetAddr::parse(spec) {
+        Ok(addr) => addr,
+        Err(e) => return Err(reap(child, e)),
+    };
+    Ok(ListenerChild { child, addr })
+}

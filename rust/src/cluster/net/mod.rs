@@ -1,0 +1,269 @@
+//! `cluster/net/`: shards on the network — the multi-host serving
+//! subsystem.
+//!
+//! Everything the cluster already proved across a *process* boundary
+//! (the framed [`super::wire`] codec, bit-identical snapshot
+//! migration, supervised failover) is lifted here onto real stream
+//! sockets, so shards can live on other machines:
+//!
+//! * [`NetAddr`] / [`NetStream`] — one address type over TCP and
+//!   Unix-domain stream sockets (`tcp://host:port`, `unix:///path`, or
+//!   a bare `host:port`), and one stream type the codec reads/writes.
+//! * [`socket`] — [`SocketShard`], a [`super::ShardTransport`] that
+//!   dials a listener and speaks the wire protocol over the socket,
+//!   with reconnect-with-resume: a severed link is redialed under a
+//!   bounded exponential backoff and every unanswered request is
+//!   resubmitted from its persisted warm-start snapshot.
+//! * [`listen`] — [`ShardListener`], the serving side: an accept loop
+//!   that runs one `worker_serve` session (one `MatchService`) per
+//!   connection; the `immsched shard-listen` subcommand wraps it.
+//! * [`registry`] — [`WorkerRegistry`] and the versioned
+//!   `immsched.fleet-wire/v1` join/leave/heartbeat protocol, so the
+//!   router *discovers* workers instead of being handed them, and a
+//!   supervised fleet's "respawn" becomes "wait for a registry join".
+//! * [`elastic`] — registry-driven fleet elasticity: grow/retire shard
+//!   slots against the observed queue depth.
+
+pub mod elastic;
+pub mod listen;
+pub mod registry;
+pub mod socket;
+
+pub use elastic::{scale_decision, ElasticScaler, ElasticityConfig, RetiredShard, ScaleAction};
+pub use listen::{spawn_shard_listener, ListenConfig, ListenerChild, ShardListener};
+pub use registry::{
+    announce, registry_respawner, shards_from_registry, Announcer, FleetMsg, FleetReply,
+    RegistryServer, WorkerEntry, WorkerRegistry, FLEET_SCHEMA,
+};
+pub use socket::{ReconnectConfig, ReconnectStats, SocketShard};
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// A shard endpoint: a TCP `host:port` or a Unix-domain socket path.
+///
+/// Parsed from `tcp://host:port`, `unix:///path/to.sock`, or a bare
+/// `host:port` (TCP).  `Display` renders the canonical prefixed form,
+/// which `parse` accepts back — addresses survive a trip through the
+/// fleet wire protocol or a CLI flag unchanged.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum NetAddr {
+    /// TCP endpoint as `host:port` (resolved at connect time).
+    Tcp(String),
+    /// Unix-domain stream socket path.
+    Uds(PathBuf),
+}
+
+impl NetAddr {
+    /// Parse an endpoint spec (see the type docs for accepted forms).
+    pub fn parse(spec: &str) -> Result<Self> {
+        if let Some(path) = spec.strip_prefix("unix://") {
+            anyhow::ensure!(!path.is_empty(), "empty unix socket path in {spec:?}");
+            return Ok(Self::Uds(PathBuf::from(path)));
+        }
+        let hostport = spec.strip_prefix("tcp://").unwrap_or(spec);
+        anyhow::ensure!(
+            hostport.contains(':'),
+            "TCP address {spec:?} must be host:port (or use unix:///path for a socket file)"
+        );
+        Ok(Self::Tcp(hostport.to_string()))
+    }
+
+    /// Dial this endpoint (TCP connects under `timeout`; a UDS connect
+    /// is local and immediate).
+    pub fn connect(&self, timeout: Duration) -> Result<NetStream> {
+        match self {
+            Self::Tcp(hostport) => {
+                let addr = hostport
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolving {hostport:?}"))?
+                    .next()
+                    .with_context(|| format!("{hostport:?} resolves to no address"))?;
+                let stream = TcpStream::connect_timeout(&addr, timeout)
+                    .with_context(|| format!("connecting to tcp://{hostport}"))?;
+                // the protocol is strictly request/response-framed and
+                // every frame is flushed — Nagle only adds latency
+                stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                Ok(NetStream::Tcp(stream))
+            }
+            Self::Uds(path) => {
+                let stream = UnixStream::connect(path)
+                    .with_context(|| format!("connecting to unix://{}", path.display()))?;
+                Ok(NetStream::Unix(stream))
+            }
+        }
+    }
+}
+
+impl fmt::Display for NetAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Tcp(hostport) => write!(f, "tcp://{hostport}"),
+            Self::Uds(path) => write!(f, "unix://{}", path.display()),
+        }
+    }
+}
+
+/// One connected stream socket, TCP or Unix-domain, behind a single
+/// `Read`/`Write` type so the wire codec and `worker_serve` loop are
+/// family-blind.
+#[derive(Debug)]
+pub enum NetStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl NetStream {
+    /// A second handle on the same socket (reader/writer split — both
+    /// halves share the underlying descriptor, so a shutdown through
+    /// either unblocks the other).
+    pub fn try_clone(&self) -> Result<Self> {
+        Ok(match self {
+            Self::Tcp(s) => Self::Tcp(s.try_clone().context("cloning a TCP stream")?),
+            Self::Unix(s) => Self::Unix(s.try_clone().context("cloning a UDS stream")?),
+        })
+    }
+
+    /// Shut down both directions; blocked reads on any clone return.
+    /// Best-effort — an already-closed socket is fine.
+    pub fn shutdown_both(&self) {
+        match self {
+            Self::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            Self::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    /// Arm (or disarm, with `None`) a read timeout on the socket.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        match self {
+            Self::Tcp(s) => s.set_read_timeout(timeout).context("setting a TCP read timeout"),
+            Self::Unix(s) => s.set_read_timeout(timeout).context("setting a UDS read timeout"),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.read(buf),
+            Self::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.write(buf),
+            Self::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.flush(),
+            Self::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listening socket, TCP or Unix-domain — shared by the shard
+/// listener and the registry server.  Dropping a UDS listener removes
+/// its socket file.
+pub(crate) enum NetListener {
+    Tcp(TcpListener),
+    Uds { listener: UnixListener, path: PathBuf },
+}
+
+impl NetListener {
+    /// Bind `addr`.  TCP port 0 binds an ephemeral port; the returned
+    /// address is the concrete one peers can dial.  A stale UDS socket
+    /// file (from a killed predecessor) is removed first.
+    pub(crate) fn bind(addr: &NetAddr) -> Result<(Self, NetAddr)> {
+        match addr {
+            NetAddr::Tcp(hostport) => {
+                let listener = TcpListener::bind(hostport.as_str())
+                    .with_context(|| format!("binding tcp://{hostport}"))?;
+                let local = listener.local_addr().context("reading the bound TCP address")?;
+                Ok((Self::Tcp(listener), NetAddr::Tcp(local.to_string())))
+            }
+            NetAddr::Uds(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path).with_context(|| {
+                        format!("removing the stale socket file {}", path.display())
+                    })?;
+                }
+                let listener = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix://{}", path.display()))?;
+                Ok((Self::Uds { listener, path: path.clone() }, addr.clone()))
+            }
+        }
+    }
+
+    /// Accept one connection (blocking).
+    pub(crate) fn accept(&self) -> Result<NetStream> {
+        match self {
+            Self::Tcp(listener) => {
+                let (stream, peer) = listener.accept().context("accepting a TCP connection")?;
+                stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                crate::log_debug!("accepted connection from {peer}");
+                Ok(NetStream::Tcp(stream))
+            }
+            Self::Uds { listener, .. } => {
+                let (stream, _) = listener.accept().context("accepting a UDS connection")?;
+                Ok(NetStream::Unix(stream))
+            }
+        }
+    }
+
+    /// Switch the accept loop between blocking and polling mode.
+    pub(crate) fn set_nonblocking(&self, nonblocking: bool) -> Result<()> {
+        match self {
+            Self::Tcp(listener) => listener
+                .set_nonblocking(nonblocking)
+                .context("toggling nonblocking accept on a TCP listener"),
+            Self::Uds { listener, .. } => listener
+                .set_nonblocking(nonblocking)
+                .context("toggling nonblocking accept on a UDS listener"),
+        }
+    }
+}
+
+impl Drop for NetListener {
+    fn drop(&mut self) {
+        if let Self::Uds { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_specs_parse_and_render_canonically() {
+        let tcp = NetAddr::parse("127.0.0.1:7070").unwrap();
+        assert_eq!(tcp, NetAddr::Tcp("127.0.0.1:7070".into()));
+        assert_eq!(tcp.to_string(), "tcp://127.0.0.1:7070");
+        assert_eq!(NetAddr::parse(&tcp.to_string()).unwrap(), tcp);
+
+        let uds = NetAddr::parse("unix:///tmp/immsched.sock").unwrap();
+        assert_eq!(uds, NetAddr::Uds(PathBuf::from("/tmp/immsched.sock")));
+        assert_eq!(uds.to_string(), "unix:///tmp/immsched.sock");
+        assert_eq!(NetAddr::parse(&uds.to_string()).unwrap(), uds);
+
+        assert!(NetAddr::parse("no-port-here").is_err());
+        assert!(NetAddr::parse("unix://").is_err());
+    }
+}

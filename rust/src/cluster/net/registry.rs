@@ -1,0 +1,613 @@
+//! [`WorkerRegistry`] and the versioned `immsched.fleet-wire/v1`
+//! membership protocol: how the router *discovers* workers.
+//!
+//! The fleet protocol is deliberately tiny — three messages framed with
+//! the same length-prefixed codec as the shard wire:
+//!
+//! | message                   | reply                  | meaning |
+//! |---------------------------|------------------------|---------|
+//! | `join {name, addr}`       | `welcome {worker}`     | a worker offers its dialable shard address |
+//! | `heartbeat {worker}`      | `ack`                  | liveness; refreshes the worker's lease |
+//! | `leave {worker}`          | `ack`                  | polite departure |
+//!
+//! A worker's membership connection doubles as its lease: when the
+//! connection drops (machine death, `kill -9`), the server-side handler
+//! marks every worker it joined as left — an *implicit leave* — so a
+//! dead machine disappears from `live()` without waiting out the
+//! heartbeat window.  A worker that stays connected but silent ages out
+//! of `live()` once its last heartbeat is older than the liveness
+//! window, and [`WorkerRegistry::evict_stale`] garbage-collects it.
+//!
+//! [`registry_respawner`] closes the loop with PR 7's supervision: a
+//! [`super::super::SupervisedFleet`] respawner that *waits for a
+//! registry join* (bounded) instead of forking a process — a dead
+//! machine's in-flight requests replay onto whichever worker joins
+//! next.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::ServiceConfig;
+use crate::matcher::PsoConfig;
+use crate::util::json::{get_hex_u64, get_str, hex_u64, Json};
+
+use super::super::transport::{lock_recover, ShardTransport, TransportConfig};
+use super::super::wire::{read_frame, write_frame};
+use super::super::ShardId;
+use super::socket::{ReconnectConfig, SocketShard};
+use super::{NetAddr, NetListener, NetStream};
+
+/// Protocol version tag carried by every fleet frame.  Bump on any
+/// layout change: a mixed-version worker/registry pair must fail
+/// loudly, not mis-track membership.
+pub const FLEET_SCHEMA: &str = "immsched.fleet-wire/v1";
+
+/// Budget for one membership round-trip (join, heartbeat ack).
+const REGISTRY_IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Accept-loop poll cadence while no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Handler read-timeout: how often an idle membership connection
+/// re-checks the server's stop flag.
+const HANDLER_POLL: Duration = Duration::from_millis(25);
+
+/// Poll cadence while waiting for workers to join.
+const JOIN_POLL: Duration = Duration::from_millis(2);
+
+// ---------------------------------------------------------------------------
+// fleet message codec
+// ---------------------------------------------------------------------------
+
+/// Worker → registry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetMsg {
+    /// Offer a worker: `name` for telemetry, `addr` the dialable shard
+    /// endpoint (a [`NetAddr`] spec).
+    Join { name: String, addr: String },
+    /// Refresh the worker's liveness lease.
+    Heartbeat { worker: u64 },
+    /// Polite departure (connection drop is the implicit form).
+    Leave { worker: u64 },
+}
+
+/// Registry → worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetReply {
+    /// Join accepted; `worker` is the registry-assigned id.
+    Welcome { worker: u64 },
+    /// Heartbeat/leave acknowledged.
+    Ack,
+    /// Protocol-level rejection (bad address, unknown worker).
+    Error { context: String },
+}
+
+fn fleet_envelope(t: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("schema", Json::from(FLEET_SCHEMA)), ("t", Json::from(t))];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+fn check_fleet_envelope(v: &Json) -> Result<&str> {
+    let schema = get_str(v, "schema")?;
+    anyhow::ensure!(
+        schema == FLEET_SCHEMA,
+        "fleet wire schema mismatch: peer speaks {schema:?}, this side {FLEET_SCHEMA:?}"
+    );
+    get_str(v, "t")
+}
+
+/// Encode one worker → registry message.
+pub fn encode_fleet_msg(msg: &FleetMsg) -> Json {
+    match msg {
+        FleetMsg::Join { name, addr } => fleet_envelope(
+            "join",
+            vec![("name", Json::from(name.as_str())), ("addr", Json::from(addr.as_str()))],
+        ),
+        FleetMsg::Heartbeat { worker } => {
+            fleet_envelope("heartbeat", vec![("worker", hex_u64(*worker))])
+        }
+        FleetMsg::Leave { worker } => fleet_envelope("leave", vec![("worker", hex_u64(*worker))]),
+    }
+}
+
+/// Decode one worker → registry message.
+pub fn decode_fleet_msg(v: &Json) -> Result<FleetMsg> {
+    Ok(match check_fleet_envelope(v)? {
+        "join" => FleetMsg::Join {
+            name: get_str(v, "name")?.to_string(),
+            addr: get_str(v, "addr")?.to_string(),
+        },
+        "heartbeat" => FleetMsg::Heartbeat { worker: get_hex_u64(v, "worker")? },
+        "leave" => FleetMsg::Leave { worker: get_hex_u64(v, "worker")? },
+        other => bail!("unknown fleet message type {other:?}"),
+    })
+}
+
+/// Encode one registry → worker reply.
+pub fn encode_fleet_reply(reply: &FleetReply) -> Json {
+    match reply {
+        FleetReply::Welcome { worker } => {
+            fleet_envelope("welcome", vec![("worker", hex_u64(*worker))])
+        }
+        FleetReply::Ack => fleet_envelope("ack", vec![]),
+        FleetReply::Error { context } => {
+            fleet_envelope("error", vec![("context", Json::from(context.as_str()))])
+        }
+    }
+}
+
+/// Decode one registry → worker reply.
+pub fn decode_fleet_reply(v: &Json) -> Result<FleetReply> {
+    Ok(match check_fleet_envelope(v)? {
+        "welcome" => FleetReply::Welcome { worker: get_hex_u64(v, "worker")? },
+        "ack" => FleetReply::Ack,
+        "error" => FleetReply::Error { context: get_str(v, "context")?.to_string() },
+        other => bail!("unknown fleet reply type {other:?}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the registry
+// ---------------------------------------------------------------------------
+
+/// One registered worker.
+#[derive(Clone, Debug)]
+pub struct WorkerEntry {
+    /// Registry-assigned id (unique for the registry's lifetime).
+    pub worker: u64,
+    /// Worker-chosen name (telemetry only).
+    pub name: String,
+    /// The dialable shard endpoint the worker advertised.
+    pub addr: NetAddr,
+    pub joined_at: Instant,
+    pub last_beat: Instant,
+}
+
+struct RegistryState {
+    workers: BTreeMap<u64, WorkerEntry>,
+    next_id: u64,
+}
+
+/// Fleet membership: who has joined, and who is heartbeat-live.
+pub struct WorkerRegistry {
+    state: Mutex<RegistryState>,
+    window: Duration,
+}
+
+impl WorkerRegistry {
+    /// A registry whose workers stay live for `window` past their last
+    /// heartbeat (a join counts as a heartbeat).
+    pub fn new(window: Duration) -> Self {
+        Self { state: Mutex::new(RegistryState { workers: BTreeMap::new(), next_id: 1 }), window }
+    }
+
+    pub fn liveness_window(&self) -> Duration {
+        self.window
+    }
+
+    /// Register a worker; returns its registry-assigned id.
+    pub fn join(&self, name: &str, addr: NetAddr) -> u64 {
+        let mut state = lock_recover(&self.state);
+        let worker = state.next_id;
+        state.next_id += 1;
+        let now = Instant::now();
+        state.workers.insert(
+            worker,
+            WorkerEntry { worker, name: name.to_string(), addr, joined_at: now, last_beat: now },
+        );
+        crate::log_debug!("fleet: worker {worker} ({name:?}) joined");
+        worker
+    }
+
+    /// Refresh a worker's lease; `false` if the worker is unknown
+    /// (never joined, left, or already evicted).
+    pub fn heartbeat(&self, worker: u64) -> bool {
+        match lock_recover(&self.state).workers.get_mut(&worker) {
+            Some(entry) => {
+                entry.last_beat = Instant::now();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove a worker; `false` if it was not registered.
+    pub fn leave(&self, worker: u64) -> bool {
+        let removed = lock_recover(&self.state).workers.remove(&worker).is_some();
+        if removed {
+            crate::log_debug!("fleet: worker {worker} left");
+        }
+        removed
+    }
+
+    /// Workers whose last heartbeat is within the liveness window —
+    /// the only ones the router may dial.
+    pub fn live(&self) -> Vec<WorkerEntry> {
+        let state = lock_recover(&self.state);
+        state.workers.values().filter(|w| w.last_beat.elapsed() <= self.window).cloned().collect()
+    }
+
+    /// Drop every worker whose lease has lapsed; returns how many.
+    pub fn evict_stale(&self) -> usize {
+        let mut state = lock_recover(&self.state);
+        let before = state.workers.len();
+        let window = self.window;
+        state.workers.retain(|_, w| w.last_beat.elapsed() <= window);
+        let evicted = before - state.workers.len();
+        if evicted > 0 {
+            crate::log_debug!("fleet: evicted {evicted} stale workers");
+        }
+        evicted
+    }
+
+    /// Block (bounded by `budget`) until at least `min_workers` workers
+    /// are live; returns whatever is live at that point.
+    pub fn wait_for_live(&self, min_workers: usize, budget: Duration) -> Vec<WorkerEntry> {
+        let started = Instant::now();
+        while started.elapsed() <= budget {
+            let live = self.live();
+            if live.len() >= min_workers {
+                return live;
+            }
+            std::thread::sleep(JOIN_POLL);
+        }
+        self.live()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the server side
+// ---------------------------------------------------------------------------
+
+/// A listening [`WorkerRegistry`]: an accept loop that speaks the fleet
+/// protocol, one handler thread per membership connection.  Dropping
+/// the server stops the accept loop.
+pub struct RegistryServer {
+    registry: Arc<WorkerRegistry>,
+    addr: NetAddr,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl RegistryServer {
+    /// Bind `addr` (TCP port 0 picks an ephemeral port) with the given
+    /// liveness window.
+    pub fn bind(addr: &NetAddr, window: Duration) -> Result<Self> {
+        let (listener, addr) = NetListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let registry = Arc::new(WorkerRegistry::new(window));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_registry = Arc::clone(&registry);
+        let thread_stop = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("immsched-fleet-accept".into())
+            .spawn(move || accept_loop(listener, thread_registry, thread_stop))?;
+        Ok(Self { registry, addr, stop, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The membership the accept loop maintains.
+    pub fn registry(&self) -> Arc<WorkerRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// The concrete bound address workers announce to.
+    pub fn addr(&self) -> &NetAddr {
+        &self.addr
+    }
+}
+
+impl Drop for RegistryServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(handle) = lock_recover(&self.accept).take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Whether an error is a read-timeout (idle poll), not a broken peer.
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(io.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+    })
+}
+
+fn accept_loop(listener: NetListener, registry: Arc<WorkerRegistry>, stop: Arc<AtomicBool>) {
+    // lint:allow(no-unbounded-retry): runs for the registry server's lifetime; the stop flag (set on drop) ends it
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok(stream) => {
+                let conn_registry = Arc::clone(&registry);
+                let conn_stop = Arc::clone(&stop);
+                let spawned = std::thread::Builder::new()
+                    .name("immsched-fleet-conn".into())
+                    .spawn(move || serve_fleet_conn(conn_registry, stream, conn_stop));
+                if let Err(e) = spawned {
+                    crate::log_warn!("cannot spawn a fleet connection handler: {e:#}");
+                }
+            }
+            Err(e) if is_timeout(&e) => std::thread::sleep(ACCEPT_POLL),
+            Err(e) => {
+                crate::log_warn!("fleet accept failed: {e:#}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// One membership connection: answer fleet messages until EOF, a
+/// protocol fault, or server stop; then mark everything this
+/// connection joined as left (the implicit leave).
+fn serve_fleet_conn(registry: Arc<WorkerRegistry>, mut stream: NetStream, stop: Arc<AtomicBool>) {
+    if stream.set_read_timeout(Some(HANDLER_POLL)).is_err() {
+        return;
+    }
+    let mut joined: Vec<u64> = Vec::new();
+    // lint:allow(no-unbounded-retry): runs for the connection's lifetime; EOF, a protocol fault, or the stop flag ends it
+    while !stop.load(Ordering::Acquire) {
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => break,
+            // between frames the socket is idle, so the poll timeout
+            // fires on the first prefix byte and framing stays in sync
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) => {
+                crate::log_warn!("fleet connection broke: {e:#}");
+                break;
+            }
+        };
+        let reply = match decode_fleet_msg(&frame) {
+            Ok(FleetMsg::Join { name, addr }) => match NetAddr::parse(&addr) {
+                Ok(addr) => {
+                    let worker = registry.join(&name, addr);
+                    joined.push(worker);
+                    FleetReply::Welcome { worker }
+                }
+                Err(e) => FleetReply::Error { context: format!("bad worker address: {e:#}") },
+            },
+            Ok(FleetMsg::Heartbeat { worker }) => {
+                if registry.heartbeat(worker) {
+                    FleetReply::Ack
+                } else {
+                    FleetReply::Error { context: format!("unknown worker {worker}") }
+                }
+            }
+            Ok(FleetMsg::Leave { worker }) => {
+                joined.retain(|w| *w != worker);
+                registry.leave(worker);
+                FleetReply::Ack
+            }
+            Err(e) => {
+                // undecodable frames are connection-fatal, mirroring
+                // the shard wire: out-of-sync framing poisons
+                // everything after it
+                crate::log_warn!("undecodable fleet frame, closing the connection: {e:#}");
+                break;
+            }
+        };
+        if write_frame(&mut stream, &encode_fleet_reply(&reply)).is_err() {
+            break;
+        }
+    }
+    for worker in joined {
+        registry.leave(worker);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the worker side
+// ---------------------------------------------------------------------------
+
+/// A worker's live membership: the join succeeded, heartbeats run on a
+/// background thread, and dropping the handle sends a polite leave.
+pub struct Announcer {
+    worker: u64,
+    stop: Arc<AtomicBool>,
+    beat: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Announcer {
+    /// The registry-assigned worker id.
+    pub fn worker(&self) -> u64 {
+        self.worker
+    }
+
+    /// Stop heartbeating and leave the registry (idempotent).
+    pub fn halt(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(handle) = lock_recover(&self.beat).take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Announcer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Join `registry_addr` as `name`, advertising `advertise` as the
+/// dialable shard endpoint, then heartbeat every `interval` on a
+/// background thread until the [`Announcer`] is dropped.
+pub fn announce(
+    registry_addr: &NetAddr,
+    name: &str,
+    advertise: &NetAddr,
+    interval: Duration,
+) -> Result<Announcer> {
+    let mut stream = registry_addr
+        .connect(REGISTRY_IO_TIMEOUT)
+        .with_context(|| format!("dialing the registry at {registry_addr}"))?;
+    stream
+        .set_read_timeout(Some(REGISTRY_IO_TIMEOUT))
+        .context("arming the membership read timeout")?;
+    let join = FleetMsg::Join { name: name.to_string(), addr: advertise.to_string() };
+    write_frame(&mut stream, &encode_fleet_msg(&join)).context("sending the join")?;
+    let reply = read_frame(&mut stream)
+        .context("reading the join reply")?
+        .context("registry closed the connection before answering the join")?;
+    let worker = match decode_fleet_reply(&reply)? {
+        FleetReply::Welcome { worker } => worker,
+        FleetReply::Error { context } => bail!("registry rejected the join: {context}"),
+        other => bail!("unexpected join reply {other:?}"),
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let beat_stop = Arc::clone(&stop);
+    let beat = std::thread::Builder::new().name("immsched-fleet-announce".into()).spawn(
+        move || {
+            // lint:allow(no-unbounded-retry): heartbeats for the worker's lifetime; the stop flag or a broken registry link ends it
+            while !beat_stop.load(Ordering::Acquire) {
+                std::thread::sleep(interval);
+                if beat_stop.load(Ordering::Acquire) {
+                    break;
+                }
+                let beat_msg = encode_fleet_msg(&FleetMsg::Heartbeat { worker });
+                if write_frame(&mut stream, &beat_msg).is_err() {
+                    break;
+                }
+                match read_frame(&mut stream) {
+                    Ok(Some(_)) => {}
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            let _ = write_frame(&mut stream, &encode_fleet_msg(&FleetMsg::Leave { worker }));
+        },
+    )?;
+    Ok(Announcer { worker, stop, beat: Mutex::new(Some(beat)) })
+}
+
+// ---------------------------------------------------------------------------
+// discovery → cluster wiring
+// ---------------------------------------------------------------------------
+
+/// Dial every heartbeat-live worker and hand back one transport per
+/// worker (plus the worker id behind each slot, so supervision can map
+/// a dead slot back to its registry entry).  Errors if the registry
+/// has no live workers, or any dial fails.
+pub fn shards_from_registry(
+    registry: &WorkerRegistry,
+    service: ServiceConfig,
+    pso: PsoConfig,
+    tcfg: TransportConfig,
+    rcfg: ReconnectConfig,
+) -> Result<(Vec<Arc<dyn ShardTransport>>, Vec<u64>)> {
+    let live = registry.live();
+    anyhow::ensure!(!live.is_empty(), "the registry has no live workers to build a cluster from");
+    let mut transports: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(live.len());
+    let mut workers = Vec::with_capacity(live.len());
+    for entry in &live {
+        let shard = SocketShard::connect_with(entry.addr.clone(), service, pso, tcfg, rcfg)
+            .with_context(|| format!("dialing worker {:?} at {}", entry.name, entry.addr))?;
+        transports.push(Arc::new(shard));
+        workers.push(entry.worker);
+    }
+    Ok((transports, workers))
+}
+
+/// A respawner for [`SupervisedFleet::set_respawn`]: when a shard
+/// slot dies, wait (bounded by `join_budget`) for a heartbeat-live
+/// worker no other slot is assigned to — typically a fresh join — dial
+/// it, and record the slot → worker assignment.  "Respawn" becomes
+/// "wait for a registry join".
+///
+/// `assigned` maps each cluster slot to the registry worker serving it
+/// (seed it from [`shards_from_registry`]'s second return).  The dead
+/// slot's stale assignment keeps its (possibly still heartbeat-live)
+/// victim worker from being re-picked.
+///
+/// [`SupervisedFleet::set_respawn`]: super::super::SupervisedFleet::set_respawn
+#[allow(clippy::too_many_arguments)]
+pub fn registry_respawner(
+    registry: Arc<WorkerRegistry>,
+    assigned: Arc<Mutex<BTreeMap<ShardId, u64>>>,
+    service: ServiceConfig,
+    pso: PsoConfig,
+    tcfg: TransportConfig,
+    rcfg: ReconnectConfig,
+    join_budget: Duration,
+) -> impl Fn(ShardId) -> Result<Arc<dyn ShardTransport>> + Send + Sync + 'static {
+    move |slot| {
+        let started = Instant::now();
+        while started.elapsed() <= join_budget {
+            let taken: BTreeSet<u64> = lock_recover(&assigned).values().copied().collect();
+            let replacement = registry.live().into_iter().find(|w| !taken.contains(&w.worker));
+            if let Some(entry) = replacement {
+                let shard =
+                    SocketShard::connect_with(entry.addr.clone(), service, pso, tcfg, rcfg)?;
+                lock_recover(&assigned).insert(slot, entry.worker);
+                crate::log_debug!(
+                    "shard {slot} respawned onto registry worker {} ({:?}) at {}",
+                    entry.worker,
+                    entry.name,
+                    entry.addr
+                );
+                return Ok(Arc::new(shard));
+            }
+            std::thread::sleep(JOIN_POLL);
+        }
+        bail!("no unassigned live worker joined the registry within {join_budget:?} for shard {slot}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_messages_round_trip() {
+        let msgs = vec![
+            FleetMsg::Join { name: "npu-box-3".into(), addr: "tcp://10.0.0.3:7070".into() },
+            FleetMsg::Heartbeat { worker: u64::MAX - 7 },
+            FleetMsg::Leave { worker: 3 },
+        ];
+        for msg in &msgs {
+            let back = decode_fleet_msg(&encode_fleet_msg(msg)).unwrap();
+            assert_eq!(&back, msg);
+        }
+        let replies = vec![
+            FleetReply::Welcome { worker: 1 << 60 },
+            FleetReply::Ack,
+            FleetReply::Error { context: "nope".into() },
+        ];
+        for reply in &replies {
+            let back = decode_fleet_reply(&encode_fleet_reply(reply)).unwrap();
+            assert_eq!(&back, reply);
+        }
+    }
+
+    #[test]
+    fn fleet_schema_mismatch_fails_loudly() {
+        let mut doc = encode_fleet_msg(&FleetMsg::Heartbeat { worker: 1 });
+        if let Json::Obj(fields) = &mut doc {
+            fields[0].1 = Json::from("immsched.fleet-wire/v0");
+        }
+        let err = decode_fleet_msg(&doc).unwrap_err().to_string();
+        assert!(err.contains("schema mismatch"), "{err}");
+    }
+
+    #[test]
+    fn liveness_window_separates_live_from_stale() {
+        let registry = WorkerRegistry::new(Duration::from_millis(40));
+        let a = registry.join("a", NetAddr::Tcp("127.0.0.1:1".into()));
+        let b = registry.join("b", NetAddr::Tcp("127.0.0.1:2".into()));
+        assert_eq!(registry.live().len(), 2);
+        // only a heartbeats past the window
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(registry.heartbeat(a));
+        std::thread::sleep(Duration::from_millis(25));
+        let live = registry.live();
+        assert_eq!(live.len(), 1, "b's lease must have lapsed");
+        assert_eq!(live[0].worker, a);
+        assert_eq!(registry.evict_stale(), 1);
+        assert!(!registry.heartbeat(b), "an evicted worker must re-join, not heartbeat");
+        assert!(registry.leave(a));
+        assert_eq!(registry.live().len(), 0);
+    }
+}

@@ -1,0 +1,529 @@
+//! [`SocketShard`]: a [`ShardTransport`] over a stream socket, with
+//! reconnect-with-resume.
+//!
+//! The shard dials a [`super::ShardListener`] (TCP or Unix-domain),
+//! performs the Hello → Ready handshake, and then speaks exactly the
+//! framed [`wire`] protocol `ProcessShard` speaks over stdio.  What the
+//! socket adds is *link supervision*: every submission is recorded in
+//! an in-flight table (problem, priority, relative timeout, warm-start
+//! snapshot) until its response arrives, and when the connection breaks
+//! the link thread redials under a bounded exponential backoff
+//! ([`ReconnectConfig`]) and resubmits every unanswered request from
+//! its persisted [`SwarmSnapshot`] — so a severed link costs zero lost
+//! epochs and the resumed episode is bit-identical to an uninterrupted
+//! one.  Undecodable frames are connection-fatal (framing is out of
+//! sync); the redial gives the session a fresh frame boundary.
+//!
+//! Liveness semantics: the shard stays `healthy()` while redialing —
+//! supervision must not fail over a link that is about to heal — and
+//! reports dead (with every unanswered request `lost()`) only once the
+//! redial budget is exhausted or the shard is closed.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{MatchProblem, MatchResponse, RequestId, ServiceConfig};
+use crate::matcher::{PsoConfig, SwarmSnapshot};
+use crate::scheduler::Priority;
+use crate::util::json::Json;
+
+use super::super::transport::{lock_recover, ShardTransport, TransportConfig};
+use super::super::wire::{
+    self, decode_reply, encode_msg, read_frame, write_frame, ShardMsg, ShardReply, ShardStatus,
+};
+use super::{NetAddr, NetStream};
+
+/// Redial policy for a severed connection: how many attempts one outage
+/// may consume, and the exponential backoff between them.
+#[derive(Clone, Copy, Debug)]
+pub struct ReconnectConfig {
+    /// Redial attempts per outage before the shard is declared dead.
+    pub max_redials: u32,
+    /// Backoff before the first redial; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for ReconnectConfig {
+    fn default() -> Self {
+        Self {
+            max_redials: 5,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Link-supervision counters (telemetry + test assertions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReconnectStats {
+    /// Redial attempts made (successful or not).
+    pub redials: u64,
+    /// Requests resubmitted onto a healed link from their snapshots.
+    pub resubmits: u64,
+}
+
+/// One recorded submission, kept until its response arrives so a
+/// healed link can replay it exactly as first submitted.
+struct Inflight {
+    problem: MatchProblem,
+    priority: Priority,
+    timeout: Option<f64>,
+    resume: Option<SwarmSnapshot>,
+    /// Link generation the request was last written on (0 = never
+    /// written — e.g. submitted while the link was down).  After a
+    /// redial bumps the generation, every entry with an older stamp is
+    /// resubmitted.
+    sent_gen: u64,
+}
+
+/// The write half of the live session, plus its generation counter.
+struct Link {
+    /// `None` while a redial is in progress or after shutdown.
+    stream: Option<NetStream>,
+    /// Bumped on every successful (re)dial; generation 1 is the
+    /// original connection.
+    generation: u64,
+}
+
+struct DemuxState {
+    responses: BTreeMap<RequestId, MatchResponse>,
+    /// The link is gone for good (redial budget exhausted or shard
+    /// closed); waiting for anything not already demuxed is hopeless.
+    dead: bool,
+}
+
+struct Control {
+    stats_rx: mpsc::Receiver<ShardStatus>,
+    drained_rx: mpsc::Receiver<u64>,
+}
+
+struct Inner {
+    addr: NetAddr,
+    service: ServiceConfig,
+    pso: PsoConfig,
+    tcfg: TransportConfig,
+    rcfg: ReconnectConfig,
+    link: Mutex<Link>,
+    state: Mutex<DemuxState>,
+    arrived: Condvar,
+    /// Freshest status piggybacked on a reply (or answered to a stats
+    /// round-trip), consumed by [`ShardTransport::take_pushed_status`].
+    pushed: Mutex<Option<(Instant, ShardStatus)>>,
+    inflight: Mutex<BTreeMap<RequestId, Inflight>>,
+    control: Mutex<Control>,
+    stats_tx: mpsc::Sender<ShardStatus>,
+    drained_tx: mpsc::Sender<u64>,
+    /// Set by drain/abort: no more submissions, no more redials.
+    closed: AtomicBool,
+    redials: AtomicU64,
+    resubmits: AtomicU64,
+}
+
+/// A shard reached over a stream socket — see the module docs.
+pub struct SocketShard {
+    inner: Arc<Inner>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SocketShard {
+    /// Dial `addr` with default timing and redial policies.
+    pub fn connect(addr: NetAddr, service: ServiceConfig, pso: PsoConfig) -> Result<Self> {
+        Self::connect_with(addr, service, pso, TransportConfig::default(), Default::default())
+    }
+
+    /// [`Self::connect`] with explicit transport timing and redial
+    /// knobs (tests shrink both to force outages in milliseconds).
+    pub fn connect_with(
+        addr: NetAddr,
+        service: ServiceConfig,
+        pso: PsoConfig,
+        tcfg: TransportConfig,
+        rcfg: ReconnectConfig,
+    ) -> Result<Self> {
+        let stream = dial(&addr, service, pso, &tcfg)?;
+        let read_half = stream.try_clone().context("splitting the dialed stream")?;
+        let (stats_tx, stats_rx) = mpsc::channel();
+        let (drained_tx, drained_rx) = mpsc::channel();
+        let inner = Arc::new(Inner {
+            addr,
+            service,
+            pso,
+            tcfg,
+            rcfg,
+            link: Mutex::new(Link { stream: Some(stream), generation: 1 }),
+            state: Mutex::new(DemuxState { responses: BTreeMap::new(), dead: false }),
+            arrived: Condvar::new(),
+            pushed: Mutex::new(None),
+            inflight: Mutex::new(BTreeMap::new()),
+            control: Mutex::new(Control { stats_rx, drained_rx }),
+            stats_tx,
+            drained_tx,
+            closed: AtomicBool::new(false),
+            redials: AtomicU64::new(0),
+            resubmits: AtomicU64::new(0),
+        });
+        let link_inner = Arc::clone(&inner);
+        let reader = std::thread::Builder::new()
+            .name("immsched-socket-link".into())
+            .spawn(move || link_loop(link_inner, read_half))?;
+        Ok(Self { inner, reader: Mutex::new(Some(reader)) })
+    }
+
+    /// Link-supervision counters so far.
+    pub fn reconnect_stats(&self) -> ReconnectStats {
+        ReconnectStats {
+            redials: self.inner.redials.load(Ordering::Relaxed),
+            resubmits: self.inner.resubmits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Test hook: sever the live connection *without* closing the shard
+    /// — the link thread observes the broken stream and redials, which
+    /// is exactly what a flaky network does.
+    pub fn sever(&self) {
+        if let Some(stream) = lock_recover(&self.inner.link).stream.take() {
+            stream.shutdown_both();
+        }
+    }
+
+    fn send(&self, msg: &ShardMsg) -> Result<()> {
+        let mut link = lock_recover(&self.inner.link);
+        match link.stream.as_mut() {
+            Some(stream) => write_frame(stream, &encode_msg(msg)),
+            None => bail!("socket shard link to {} is down", self.inner.addr),
+        }
+    }
+
+    fn close_link(&self) {
+        if let Some(stream) = lock_recover(&self.inner.link).stream.take() {
+            stream.shutdown_both();
+        }
+    }
+
+    fn join_reader(&self) {
+        if let Some(handle) = lock_recover(&self.reader).take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl ShardTransport for SocketShard {
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+
+    fn submit(
+        &self,
+        id: RequestId,
+        problem: MatchProblem,
+        priority: Priority,
+        timeout: Option<f64>,
+        resume: Option<SwarmSnapshot>,
+    ) -> Result<()> {
+        if self.inner.closed.load(Ordering::Acquire) {
+            bail!("socket shard closed: no further submissions accepted");
+        }
+        if lock_recover(&self.inner.state).dead {
+            bail!("socket shard link to {} is dead (redial budget exhausted)", self.inner.addr);
+        }
+        // record before writing (and under the link lock, so a redial's
+        // resubmission sweep cannot run between the two): if the write
+        // is lost to a severed link, the sweep finds the entry and
+        // replays it on the healed session
+        let mut link = lock_recover(&self.inner.link);
+        let generation = link.generation;
+        lock_recover(&self.inner.inflight).insert(
+            id,
+            Inflight {
+                problem: problem.clone(),
+                priority,
+                timeout,
+                resume: resume.clone(),
+                sent_gen: 0,
+            },
+        );
+        if let Some(stream) = link.stream.as_mut() {
+            let msg = ShardMsg::Submit { id, problem, priority, timeout, resume };
+            match write_frame(stream, &encode_msg(&msg)) {
+                Ok(()) => {
+                    if let Some(entry) = lock_recover(&self.inner.inflight).get_mut(&id) {
+                        entry.sent_gen = generation;
+                    }
+                }
+                Err(e) => {
+                    // the link thread will notice the broken stream and
+                    // redial; the entry just recorded rides along
+                    crate::log_warn!("submit {id} write failed, deferred to redial: {e:#}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn cancel(&self, id: RequestId) {
+        // best-effort: if the link is down, the redial resubmits the
+        // request and the caller may cancel again
+        let _ = self.send(&ShardMsg::Cancel { id });
+    }
+
+    fn status(&self) -> Result<ShardStatus> {
+        let control = lock_recover(&self.inner.control);
+        // a reply that arrived after an earlier call timed out would
+        // otherwise answer *this* request and desync every later one
+        // lint:allow(no-unbounded-retry): drains already-buffered stale replies; try_recv never blocks
+        while control.stats_rx.try_recv().is_ok() {}
+        self.send(&ShardMsg::Stats)?;
+        control
+            .stats_rx
+            .recv_timeout(self.inner.tcfg.control_timeout)
+            .context("socket shard did not answer a stats request")
+    }
+
+    fn try_response(&self, id: RequestId) -> Option<MatchResponse> {
+        lock_recover(&self.inner.state).responses.remove(&id)
+    }
+
+    fn wait_response(&self, id: RequestId) -> Result<MatchResponse> {
+        let mut state = lock_recover(&self.inner.state);
+        // lint:allow(no-unbounded-retry): parked on a condvar; the link thread notifies on every arrival and on death
+        loop {
+            if let Some(resp) = state.responses.remove(&id) {
+                return Ok(resp);
+            }
+            if state.dead {
+                bail!("socket shard link died before answering request {id}");
+            }
+            state = self.inner.arrived.wait(state).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn drain(&self) -> Result<()> {
+        let control = lock_recover(&self.inner.control);
+        self.inner.closed.store(true, Ordering::Release);
+        // lint:allow(no-unbounded-retry): drains already-buffered stale replies; try_recv never blocks
+        while control.drained_rx.try_recv().is_ok() {}
+        self.send(&ShardMsg::Drain)?;
+        let answered = control
+            .drained_rx
+            .recv_timeout(self.inner.tcfg.control_timeout)
+            .context("socket shard did not acknowledge the drain")?;
+        drop(control);
+        crate::log_debug!("socket shard to {} drained after {answered} responses", self.inner.addr);
+        self.close_link();
+        self.join_reader();
+        Ok(())
+    }
+
+    fn healthy(&self) -> bool {
+        // a redial in progress is still healthy — failing over a link
+        // that is about to heal would double-run its requests
+        !lock_recover(&self.inner.state).dead
+    }
+
+    fn lost(&self, id: RequestId) -> bool {
+        let state = lock_recover(&self.inner.state);
+        state.dead && !state.responses.contains_key(&id)
+    }
+
+    fn abort(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+        self.close_link();
+        {
+            let mut state = lock_recover(&self.inner.state);
+            state.dead = true;
+        }
+        self.inner.arrived.notify_all();
+        self.join_reader();
+    }
+
+    fn take_pushed_status(&self) -> Option<(Instant, ShardStatus)> {
+        lock_recover(&self.inner.pushed).take()
+    }
+}
+
+impl Drop for SocketShard {
+    fn drop(&mut self) {
+        if self.inner.closed.load(Ordering::Acquire) {
+            self.join_reader();
+            return;
+        }
+        if self.drain().is_err() {
+            self.abort();
+        }
+    }
+}
+
+/// Connect + handshake: Hello (carrying the shard config) out, Ready
+/// (proving the schema) back, under the control timeout.
+fn dial(
+    addr: &NetAddr,
+    service: ServiceConfig,
+    pso: PsoConfig,
+    tcfg: &TransportConfig,
+) -> Result<NetStream> {
+    let mut stream = addr.connect(tcfg.control_timeout)?;
+    stream
+        .set_read_timeout(Some(tcfg.control_timeout))
+        .context("arming the handshake read timeout")?;
+    write_frame(&mut stream, &encode_msg(&ShardMsg::Hello { service, pso }))
+        .with_context(|| format!("sending the hello to {addr}"))?;
+    let first = read_frame(&mut stream)
+        .with_context(|| format!("reading the handshake reply from {addr}"))?
+        .with_context(|| format!("{addr} closed the connection before answering the hello"))?;
+    match decode_reply(&first)? {
+        ShardReply::Ready { schema } if schema == wire::WIRE_SCHEMA => {}
+        ShardReply::Ready { schema } => {
+            bail!("listener {addr} speaks {schema:?}, expected {:?}", wire::WIRE_SCHEMA)
+        }
+        ShardReply::Error { context } => bail!("listener {addr} rejected the hello: {context}"),
+        other => bail!("unexpected handshake reply from {addr}: {other:?}"),
+    }
+    stream.set_read_timeout(None).context("disarming the handshake read timeout")?;
+    Ok(stream)
+}
+
+/// The link thread: demux replies off the live session; when the
+/// stream breaks, redial within the configured budget and resubmit
+/// everything unanswered; mark the shard dead when the budget is spent
+/// or the shard closes.
+fn link_loop(inner: Arc<Inner>, mut read_half: NetStream) {
+    // One iteration = one read on the live session.  The loop ends via
+    // the closed flag or the bounded redial budget below.
+    loop {
+        match read_frame(&mut read_half) {
+            Ok(Some(frame)) => match route_reply(&inner, &frame) {
+                Ok(()) => continue,
+                Err(e) => {
+                    // undecodable reply: the framing is out of sync and
+                    // every later frame is suspect — connection-fatal.
+                    // A redial gives the session a fresh frame boundary.
+                    crate::log_warn!("undecodable reply from {}, severing: {e:#}", inner.addr);
+                }
+            },
+            Ok(None) | Err(_) => {}
+        }
+        // the session is over (EOF, I/O error, or a fatal decode)
+        read_half.shutdown_both();
+        if inner.closed.load(Ordering::Acquire) {
+            break;
+        }
+        match redial_within_budget(&inner) {
+            Some(next_read_half) => read_half = next_read_half,
+            None => break,
+        }
+    }
+    lock_recover(&inner.state).dead = true;
+    inner.arrived.notify_all();
+}
+
+/// Route one decoded reply to its waiter/slot.
+fn route_reply(inner: &Inner, frame: &Json) -> Result<()> {
+    match decode_reply(frame)? {
+        ShardReply::Response { response, status } => {
+            lock_recover(&inner.inflight).remove(&response.id);
+            if let Some(status) = status {
+                *lock_recover(&inner.pushed) = Some((Instant::now(), status));
+            }
+            lock_recover(&inner.state).responses.insert(response.id, response);
+            inner.arrived.notify_all();
+        }
+        ShardReply::Stats(status) => {
+            *lock_recover(&inner.pushed) = Some((Instant::now(), status.clone()));
+            let _ = inner.stats_tx.send(status);
+        }
+        ShardReply::Drained { answered } => {
+            let _ = inner.drained_tx.send(answered);
+        }
+        ShardReply::Error { context } => {
+            crate::log_warn!("socket shard error reply from {}: {context}", inner.addr);
+        }
+        ShardReply::Ready { .. } => {
+            crate::log_warn!("socket shard peer {} sent a stray ready frame", inner.addr);
+        }
+    }
+    Ok(())
+}
+
+/// Exponential backoff for redial `attempt` (1-based), capped.
+fn redial_backoff(rcfg: &ReconnectConfig, attempt: u32) -> Duration {
+    let doublings = attempt.saturating_sub(1).min(16);
+    rcfg.backoff_base.saturating_mul(1u32 << doublings).min(rcfg.backoff_cap)
+}
+
+/// Redial under the configured budget; on success the new session's
+/// read half comes back and every unanswered request has been
+/// resubmitted onto it.  `None` = budget exhausted (or shard closed).
+fn redial_within_budget(inner: &Inner) -> Option<NetStream> {
+    let mut attempt: u32 = 0;
+    while attempt < inner.rcfg.max_redials {
+        attempt += 1;
+        inner.redials.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(redial_backoff(&inner.rcfg, attempt));
+        if inner.closed.load(Ordering::Acquire) {
+            return None;
+        }
+        match reconnect(inner) {
+            Ok(read_half) => {
+                crate::log_debug!(
+                    "socket shard link to {} healed on redial {attempt}/{}",
+                    inner.addr,
+                    inner.rcfg.max_redials
+                );
+                return Some(read_half);
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "socket shard redial {attempt}/{} to {} failed: {e:#}",
+                    inner.rcfg.max_redials,
+                    inner.addr
+                );
+            }
+        }
+    }
+    crate::log_warn!(
+        "socket shard link to {} is dead after {} redials",
+        inner.addr,
+        inner.rcfg.max_redials
+    );
+    None
+}
+
+/// One redial attempt: dial + handshake, install the new write half
+/// under a bumped generation, and resubmit every in-flight request not
+/// yet written on this generation (oldest id first), each from its
+/// persisted warm-start snapshot.
+fn reconnect(inner: &Inner) -> Result<NetStream> {
+    let stream = dial(&inner.addr, inner.service, inner.pso, &inner.tcfg)?;
+    let read_half = stream.try_clone().context("splitting the redialed stream")?;
+    let mut link = lock_recover(&inner.link);
+    link.generation += 1;
+    let generation = link.generation;
+    link.stream = Some(stream);
+    let mut inflight = lock_recover(&inner.inflight);
+    for (id, entry) in inflight.iter_mut() {
+        if entry.sent_gen >= generation {
+            continue;
+        }
+        let msg = ShardMsg::Submit {
+            id: *id,
+            problem: entry.problem.clone(),
+            priority: entry.priority,
+            timeout: entry.timeout,
+            resume: entry.resume.clone(),
+        };
+        match link.stream.as_mut() {
+            Some(stream) => write_frame(stream, &encode_msg(&msg))
+                .with_context(|| format!("resubmitting request {id} after a redial"))?,
+            None => bail!("link stream vanished mid-resubmission"),
+        }
+        entry.sent_gen = generation;
+        inner.resubmits.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(read_half)
+}

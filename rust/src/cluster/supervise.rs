@@ -190,7 +190,10 @@ impl SupervisedFleet {
 
     /// Install a respawner: called with a dead shard's id, it returns
     /// a replacement transport the fleet swaps into the cluster before
-    /// replaying the victim's requests.
+    /// replaying the victim's requests. For socket fleets,
+    /// [`crate::cluster::net::registry_respawner`] builds one that
+    /// waits (bounded) for a replacement worker to join the
+    /// [`crate::cluster::net::WorkerRegistry`] and dials it.
     pub fn set_respawn(
         &self,
         f: impl Fn(ShardId) -> Result<Arc<dyn ShardTransport>> + Send + Sync + 'static,

@@ -169,6 +169,16 @@ pub trait ShardTransport: Send + Sync {
         let _ = fault;
         bail!("transport {:?} has no frame boundary to corrupt", self.kind())
     }
+
+    /// Take the freshest [`ShardStatus`] a reply piggybacked (since
+    /// wire v3 every `Response` frame carries one), stamped with its
+    /// arrival instant.  The cluster folds it into the TTL status
+    /// cache before deciding whether a probe is due, so completions
+    /// refresh routing for free.  Default: transports with no push
+    /// channel report `None`.
+    fn take_pushed_status(&self) -> Option<(Instant, ShardStatus)> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -308,6 +318,9 @@ impl ShardTransport for InProcessShard {
 struct Demux {
     state: Mutex<DemuxState>,
     arrived: Condvar,
+    /// Freshest reply-piggybacked status, for
+    /// [`ShardTransport::take_pushed_status`].
+    pushed: Mutex<Option<(Instant, ShardStatus)>>,
 }
 
 struct DemuxState {
@@ -422,6 +435,7 @@ impl ProcessShard {
         let demux = Arc::new(Demux {
             state: Mutex::new(DemuxState { responses: BTreeMap::new(), dead: false }),
             arrived: Condvar::new(),
+            pushed: Mutex::new(None),
         });
         let (stats_tx, stats_rx) = mpsc::channel();
         let (drained_tx, drained_rx) = mpsc::channel();
@@ -473,9 +487,12 @@ fn demux_loop(
     loop {
         match read_frame(&mut stdout) {
             Ok(Some(frame)) => match decode_reply(&frame) {
-                Ok(ShardReply::Response(resp)) => {
+                Ok(ShardReply::Response { response, status }) => {
+                    if let Some(status) = status {
+                        *lock_recover(&demux.pushed) = Some((Instant::now(), status));
+                    }
                     let mut state = lock_recover(&demux.state);
-                    state.responses.insert(resp.id, resp);
+                    state.responses.insert(response.id, response);
                     demux.arrived.notify_all();
                 }
                 Ok(ShardReply::Stats(status)) => {
@@ -590,6 +607,10 @@ impl ShardTransport for ProcessShard {
         self.shutdown(true);
     }
 
+    fn take_pushed_status(&self) -> Option<(Instant, ShardStatus)> {
+        lock_recover(&self.demux.pushed).take()
+    }
+
     fn inject_frame_fault(&self, fault: FrameFault) -> Result<()> {
         let mut guard = lock_recover(&self.writer);
         let Some(w) = guard.as_mut() else {
@@ -674,6 +695,20 @@ where
     worker_serve_with(input, output, TransportConfig::default())
 }
 
+/// The service's current load: answered to explicit `Stats` probes and
+/// piggybacked on every `Response` so the router's status cache
+/// refreshes on each reply.
+fn service_status(svc: &MatchService) -> ShardStatus {
+    let stats = svc.stats();
+    let inventory = svc.in_flight_request();
+    ShardStatus {
+        queue_depth: stats.router.depth as usize,
+        in_flight: inventory.map(|(_, p)| p),
+        in_flight_id: inventory.map(|(id, _)| id),
+        stats,
+    }
+}
+
 /// [`worker_serve`] with explicit poll cadences (tests hosting the
 /// worker loop in-process tune the sweep without multi-millisecond
 /// waits).
@@ -743,7 +778,9 @@ where
         });
         for resp in finished {
             answered += 1;
-            write_frame(&mut output, &encode_reply(&ShardReply::Response(resp)))?;
+            let reply =
+                ShardReply::Response { response: resp, status: Some(service_status(&svc)) };
+            write_frame(&mut output, &encode_reply(&reply))?;
         }
         if pending.is_empty() {
             if draining {
@@ -802,7 +839,11 @@ where
                             snapshot: backup,
                         };
                         answered += 1;
-                        write_frame(&mut output, &encode_reply(&ShardReply::Response(shed)))?;
+                        let reply = ShardReply::Response {
+                            response: shed,
+                            status: Some(service_status(&svc)),
+                        };
+                        write_frame(&mut output, &encode_reply(&reply))?;
                     }
                 }
             }
@@ -812,15 +853,8 @@ where
                 }
             }
             ShardMsg::Stats => {
-                let stats = svc.stats();
-                let inventory = svc.in_flight_request();
-                let status = ShardStatus {
-                    queue_depth: stats.router.depth as usize,
-                    in_flight: inventory.map(|(_, p)| p),
-                    in_flight_id: inventory.map(|(id, _)| id),
-                    stats,
-                };
-                write_frame(&mut output, &encode_reply(&ShardReply::Stats(status)))?;
+                let reply = ShardReply::Stats(service_status(&svc));
+                write_frame(&mut output, &encode_reply(&reply))?;
             }
             ShardMsg::Drain => draining = true,
         }

@@ -43,7 +43,7 @@ use crate::util::json::{
 /// Protocol version tag carried by every frame.  Bump on any layout
 /// change: a mixed-version router/worker pair must fail the handshake,
 /// not mis-decode swarm state.
-pub const WIRE_SCHEMA: &str = "immsched.shard-wire/v2";
+pub const WIRE_SCHEMA: &str = "immsched.shard-wire/v3";
 
 /// Hard ceiling on one frame's payload (64 MiB).  The largest real
 /// payload is a `huge`-class problem + snapshot (a few MiB of JSON); a
@@ -93,8 +93,12 @@ pub enum ShardReply {
     /// Handshake acknowledgement (echoes the protocol schema).
     Ready { schema: String },
     /// A request's final answer.  Out-of-order by design: the shard's
-    /// admission queue reorders by priority/deadline.
-    Response(MatchResponse),
+    /// admission queue reorders by priority/deadline.  Since v3 every
+    /// response piggybacks the shard's post-completion [`ShardStatus`]
+    /// so the router's TTL status cache refreshes for free on each
+    /// reply instead of only via heartbeat probes (`None` keeps older
+    /// senders representable in memory, never on the wire).
+    Response { response: MatchResponse, status: Option<ShardStatus> },
     /// Non-blocking load report — the routing policies' input.
     Stats(ShardStatus),
     /// Drain complete; `answered` counts responses sent over this
@@ -482,10 +486,14 @@ fn envelope(t: &str, mut fields: Vec<(&str, Json)>) -> Json {
 
 fn check_envelope(v: &Json) -> Result<&str> {
     let schema = get_str(v, "schema")?;
-    anyhow::ensure!(
-        schema == WIRE_SCHEMA,
-        "wire schema mismatch: peer speaks {schema:?}, this side {WIRE_SCHEMA:?}"
-    );
+    if schema != WIRE_SCHEMA {
+        let hint = if schema.starts_with("immsched.shard-wire/") {
+            " (mixed router/worker versions — redeploy both sides from the same build)"
+        } else {
+            ""
+        };
+        bail!("wire schema mismatch: peer speaks {schema:?}, this side {WIRE_SCHEMA:?}{hint}");
+    }
     get_str(v, "t")
 }
 
@@ -545,9 +553,13 @@ pub fn encode_reply(reply: &ShardReply) -> Json {
         ShardReply::Ready { schema } => {
             envelope("ready", vec![("proto", Json::from(schema.as_str()))])
         }
-        ShardReply::Response(resp) => {
-            envelope("response", vec![("response", encode_response(resp))])
-        }
+        ShardReply::Response { response, status } => envelope(
+            "response",
+            vec![
+                ("response", encode_response(response)),
+                ("status", status.as_ref().map_or(Json::Null, encode_status)),
+            ],
+        ),
         ShardReply::Stats(status) => envelope("stats", vec![("status", encode_status(status))]),
         ShardReply::Drained { answered } => {
             envelope("drained", vec![("answered", Json::from(*answered))])
@@ -562,9 +574,13 @@ pub fn encode_reply(reply: &ShardReply) -> Json {
 pub fn decode_reply(v: &Json) -> Result<ShardReply> {
     Ok(match check_envelope(v)? {
         "ready" => ShardReply::Ready { schema: get_str(v, "proto")?.to_string() },
-        "response" => ShardReply::Response(decode_response(
-            v.get("response").context("reply missing response")?,
-        )?),
+        "response" => ShardReply::Response {
+            response: decode_response(v.get("response").context("reply missing response")?)?,
+            status: match v.get("status") {
+                None | Some(Json::Null) => None,
+                Some(status) => Some(decode_status(status)?),
+            },
+        },
         "stats" => {
             ShardReply::Stats(decode_status(v.get("status").context("reply missing status")?)?)
         }

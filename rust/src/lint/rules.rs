@@ -66,8 +66,8 @@ const DETERMINISTIC_MODULES: &[&str] = &[
 ];
 
 /// Boundary modules allowed to read the wall clock: binaries, benches,
-/// tests, and the service/driver layer that anchors relative timeouts
-/// ([`NO_WALLCLOCK_CORE`] applies everywhere else).
+/// tests, and the service/driver/socket layers that anchor relative
+/// timeouts ([`NO_WALLCLOCK_CORE`] applies everywhere else).
 const WALLCLOCK_BOUNDARY: &[&str] = &[
     "src/main.rs",
     "src/bin/",
@@ -78,23 +78,28 @@ const WALLCLOCK_BOUNDARY: &[&str] = &[
     "src/cluster/mod.rs",
     "src/cluster/driver.rs",
     "src/cluster/transport.rs",
+    "src/cluster/net/",
 ];
 
 /// The transport layer ([`NO_PANIC_TRANSPORT`]): the wire codec, the
-/// transports, and the supervision/chaos layers stacked on them — a
-/// panic anywhere here aborts a worker or the supervisor itself.
+/// transports (including the socket subsystem), and the
+/// supervision/chaos layers stacked on them — a panic anywhere here
+/// aborts a worker or the supervisor itself.
 const TRANSPORT_MODULES: &[&str] = &[
     "src/cluster/wire.rs",
     "src/cluster/transport.rs",
     "src/cluster/supervise.rs",
     "src/cluster/chaos.rs",
+    "src/cluster/net/",
 ];
 
 /// The wire codec itself ([`NO_LOSSY_WIRE_CAST`]).
 const WIRE_MODULES: &[&str] = &["src/cluster/wire.rs"];
 
-/// The fault-recovery layer ([`NO_UNBOUNDED_RETRY`]).
-const RETRY_MODULES: &[&str] = &["src/cluster/supervise.rs", "src/cluster/chaos.rs"];
+/// The fault-recovery layer ([`NO_UNBOUNDED_RETRY`]): supervision,
+/// chaos, and the socket subsystem's reconnect/accept/heartbeat loops.
+const RETRY_MODULES: &[&str] =
+    &["src/cluster/supervise.rs", "src/cluster/chaos.rs", "src/cluster/net/"];
 
 fn in_listed(rel: &str, list: &[&str]) -> bool {
     list.iter().any(|m| if m.ends_with('/') { rel.starts_with(m) } else { rel == *m })

@@ -5,6 +5,7 @@
 //!   run [--config F] [--set K=V]  one simulation run, summary to stdout
 //!   match --model M [...]         one interrupt episode on the coordinator
 //!   cluster [--shards N] [...]    open-loop trace against the sharded cluster
+//!   shard-listen [--addr A] [...] host shards behind a TCP/UDS socket
 //!   info                          platforms, workloads, artifact registry
 //!
 //! The argument parser is hand-rolled (no clap offline; DESIGN.md §4).
@@ -13,10 +14,15 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use immsched::accel::{build_target_graph, Platform};
 use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
+use immsched::cluster::net::{announce, ListenConfig, NetAddr, ShardListener, SocketShard};
 use immsched::cluster::{
-    policy_by_name, ClusterConfig, MatchCluster, RoutePolicy, SupervisedFleet, SupervisorConfig,
+    policy_by_name, ClusterConfig, MatchCluster, RoutePolicy, ShardTransport, SupervisedFleet,
+    SupervisorConfig, TransportConfig,
 };
 use immsched::config::Config;
 use immsched::coordinator::{
@@ -52,6 +58,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("match") => cmd_match(&args[1..]),
         Some("cluster") => cmd_cluster(&args[1..]),
         Some("shard-worker") => cmd_shard_worker(),
+        Some("shard-listen") => cmd_shard_listen(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -76,19 +83,30 @@ fn print_help() {
            cluster [--shards N] [--policy round-robin|least-queue|deadline-aware]\n\
                    [--rate R] [--horizon S] [--class simple|middle|complex]\n\
                    [--process poisson|bursty] [--seed S] [--process-shards]\n\
+                   [--connect ADDR[,ADDR...]]\n\
                                             open-loop trace against a sharded cluster\n\
                                             (--process-shards: one shard-worker child\n\
-                                             process per shard over the wire protocol)\n\
+                                             process per shard over the wire protocol;\n\
+                                             --connect: dial running shard-listen\n\
+                                             workers, one shard per address)\n\
            shard-worker                     host one match-service shard over framed\n\
                                             stdio (spawned by --process-shards; see\n\
                                             rust/README.md for the wire contract)\n\
+           shard-listen [--addr tcp://H:P|unix:///path] [--max-conns N]\n\
+                        [--registry ADDR --name NAME [--heartbeat-ms MS]]\n\
+                                            host shards behind a listening socket, one\n\
+                                            match service per accepted connection; with\n\
+                                            --registry, join the fleet registry and\n\
+                                            heartbeat until killed\n\
            info                             platforms, models, artifacts\n\
            help                             this text\n\
          \n\
          EXAMPLES\n\
            immsched run --set scheduler.name=\"isosched\" --set workload.class=\"complex\"\n\
            immsched match --model ResNet50 --platform edge\n\
-           immsched cluster --shards 4 --policy deadline-aware --process bursty"
+           immsched cluster --shards 4 --policy deadline-aware --process bursty\n\
+           immsched shard-listen --addr tcp://0.0.0.0:7070\n\
+           immsched cluster --connect tcp://host-a:7070,tcp://host-b:7070"
     );
 }
 
@@ -374,6 +392,62 @@ fn cmd_shard_worker() -> Result<()> {
     immsched::cluster::transport::worker_serve(std::io::stdin(), std::io::stdout())
 }
 
+/// Host match-service shards behind a listening TCP or Unix-domain
+/// socket — the multi-host worker.  The first stdout line announces
+/// the concrete bound address (`shard-listen: listening on <addr>`) so
+/// a parent that bound port 0 can read it back; with `--registry` the
+/// worker also joins the fleet registry and heartbeats until killed.
+fn cmd_shard_listen(args: &[String]) -> Result<()> {
+    let mut spec = String::from("127.0.0.1:0");
+    let mut max_conns = u64::MAX;
+    let mut registry_spec: Option<String> = None;
+    let mut name = String::from("worker");
+    let mut heartbeat_ms = 100u64;
+    let mut i = 0;
+    while i < args.len() {
+        let value = |i: usize| args.get(i + 1).context("option needs a value");
+        match args[i].as_str() {
+            "--addr" => {
+                spec = value(i)?.clone();
+                i += 2;
+            }
+            "--max-conns" => {
+                max_conns = value(i)?.parse()?;
+                i += 2;
+            }
+            "--registry" => {
+                registry_spec = Some(value(i)?.clone());
+                i += 2;
+            }
+            "--name" => {
+                name = value(i)?.clone();
+                i += 2;
+            }
+            "--heartbeat-ms" => {
+                heartbeat_ms = value(i)?.parse()?;
+                i += 2;
+            }
+            other => bail!("unknown option {other:?}"),
+        }
+    }
+    let listener = ShardListener::bind(&NetAddr::parse(&spec)?)?;
+    let addr = listener.local_addr().clone();
+    // the announce line is a contract: spawn_shard_listener parses it
+    println!("shard-listen: listening on {addr}");
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let _membership = match &registry_spec {
+        Some(registry) => Some(announce(
+            &NetAddr::parse(registry)?,
+            &name,
+            &addr,
+            Duration::from_millis(heartbeat_ms),
+        )?),
+        None => None,
+    };
+    listener.serve(TransportConfig::default(), ListenConfig { max_conns })
+}
+
 fn cmd_cluster(args: &[String]) -> Result<()> {
     let mut shards = 2usize;
     let mut policy_name = String::from("deadline-aware");
@@ -383,6 +457,7 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     let mut process = ArrivalProcess::bursty_default();
     let mut seed = 42u64;
     let mut process_shards = false;
+    let mut connect: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let value = |i: usize| args.get(i + 1).context("option needs a value");
@@ -390,6 +465,10 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
             "--process-shards" => {
                 process_shards = true;
                 i += 1;
+            }
+            "--connect" => {
+                connect = value(i)?.split(',').map(str::to_string).collect();
+                i += 2;
             }
             "--shards" => {
                 shards = value(i)?.parse()?;
@@ -444,10 +523,18 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
         ..Default::default()
     };
     let schedule = schedule_from_trace(&dcfg);
+    if !connect.is_empty() {
+        shards = connect.len();
+    }
+    let kind = if !connect.is_empty() {
+        "socket"
+    } else if process_shards {
+        "out-of-process"
+    } else {
+        "in-process"
+    };
     println!(
-        "cluster: {} {} shards ({} policy), {} {} arrivals over {horizon}s — {} requests",
-        shards,
-        if process_shards { "out-of-process" } else { "in-process" },
+        "cluster: {shards} {kind} shards ({} policy), {} {} arrivals over {horizon}s — {} requests",
         policy_name,
         rate,
         process.name(),
@@ -458,7 +545,15 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
         pso: PsoConfig { seed, ..Default::default() },
         ..Default::default()
     };
-    let cluster = std::sync::Arc::new(if process_shards {
+    let cluster = Arc::new(if !connect.is_empty() {
+        let mut transports: Vec<Arc<dyn ShardTransport>> = Vec::with_capacity(connect.len());
+        for addr in &connect {
+            let shard = SocketShard::connect(NetAddr::parse(addr)?, ccfg.service, ccfg.pso)
+                .with_context(|| format!("dialing shard listener {addr}"))?;
+            transports.push(Arc::new(shard));
+        }
+        MatchCluster::with_transports(transports, policy, ccfg.resume_capacity)
+    } else if process_shards {
         MatchCluster::spawn_process_shards(ccfg, policy)?
     } else {
         MatchCluster::spawn(ccfg, policy)?

@@ -305,6 +305,69 @@ mod tests {
 }
 
 // ---------------------------------------------------------------------------
+// the cluster::net subtree: transport + retry + wallclock scopes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn net_subtree_is_inside_the_panic_transport_boundary() {
+    let panicky = r#"
+fn route(frames: &Vec<u8>, i: usize) -> u8 {
+    let head = frames[i];
+    let tail = frames.last().unwrap();
+    if head != *tail { panic!("torn frame"); }
+    head
+}
+"#;
+    // any file under src/cluster/net/ is transport code — the socket
+    // subsystem must degrade to errors, never panic a serving process
+    for path in ["src/cluster/net/socket.rs", "src/cluster/net/deep/fixture.rs"] {
+        let found = lint_source(path, panicky);
+        assert_eq!(found.len(), 3, "{path}: indexing + unwrap + panic!: {found:?}");
+        assert!(found.iter().all(|f| f.rule == NO_PANIC_TRANSPORT), "{found:?}");
+    }
+}
+
+#[test]
+fn net_subtree_accept_and_redial_loops_must_be_bounded() {
+    // an accept/heartbeat loop with no bound word and no pragma spins blind
+    let spinny = r#"
+fn accept_loop(pending: &mut u32) {
+    loop {
+        *pending = pending.wrapping_add(1);
+        if *pending == 0 { break; }
+    }
+}
+"#;
+    let found = lint_source("src/cluster/net/registry_fixture.rs", spinny);
+    assert_eq!(rules_of(&found), vec![NO_UNBOUNDED_RETRY], "{found:?}");
+
+    // the real redial shape: the budget identifier is the proof
+    let bounded = r#"
+fn redial(mut attempt: u32, max_redials: u32) -> u32 {
+    while attempt < max_redials {
+        attempt = attempt.saturating_add(1);
+    }
+    attempt
+}
+"#;
+    assert!(lint_source("src/cluster/net/socket_fixture.rs", bounded).is_empty());
+}
+
+#[test]
+fn net_subtree_owns_the_host_clock() {
+    // heartbeat windows and reconnect backoff legitimately read the
+    // host clock — net/ sits on the wallclock boundary like the
+    // transport layer it extends
+    let clocky = r#"
+fn age() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}
+"#;
+    assert!(lint_source("src/cluster/net/registry_fixture.rs", clocky).is_empty());
+}
+
+// ---------------------------------------------------------------------------
 // pragmas
 // ---------------------------------------------------------------------------
 

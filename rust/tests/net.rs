@@ -1,0 +1,398 @@
+//! Multi-host serving acceptance: socket shards round-trip the full
+//! wire protocol over loopback TCP and Unix-domain streams, a severed
+//! connection redials within its bounded backoff budget and loses zero
+//! epochs (bit-identical to an uninterrupted run), a worker killed
+//! mid-episode fails over and is replaced through the registry's join
+//! protocol, and the cluster is built from — and routes only to —
+//! heartbeat-live registry workers.
+//!
+//! The process tests spawn the real `immsched shard-listen` binary
+//! (cargo builds it for integration tests and exposes the path via
+//! `CARGO_BIN_EXE_immsched`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use immsched::cluster::net::registry::{decode_fleet_reply, encode_fleet_msg};
+use immsched::cluster::net::{
+    registry_respawner, shards_from_registry, spawn_shard_listener, FleetMsg, FleetReply,
+    ListenConfig, NetAddr, ReconnectConfig, RegistryServer, ShardListener, SocketShard,
+};
+use immsched::cluster::transport::{ShardTransport, TransportConfig};
+use immsched::cluster::wire::{read_frame, write_frame};
+use immsched::cluster::{
+    LeastQueueDepth, MatchCluster, RoundRobin, SupervisedFleet, SupervisorConfig,
+};
+use immsched::coordinator::{
+    MatchPath, MatchProblem, MatchService, RequestId, ServiceConfig, SubmitOptions,
+};
+use immsched::graph::{gen_chain, NodeKind};
+use immsched::matcher::PsoConfig;
+use immsched::scheduler::Priority;
+use immsched::util::MatF;
+
+/// The worker binary the listener-process tests spawn.
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_immsched");
+
+fn chain_problem(n: usize, m: usize) -> MatchProblem {
+    let qd = gen_chain(n, NodeKind::Compute);
+    let gd = gen_chain(m, NodeKind::Universal);
+    MatchProblem::from_dags(&qd, &gd)
+}
+
+/// Full mask, no embedding (3-fan-out star into a chain): the episode
+/// runs its whole epoch budget unless preempted/sliced.
+fn infeasible_star_problem() -> MatchProblem {
+    let mut q = MatF::zeros(4, 4);
+    q[(0, 1)] = 1.0;
+    q[(0, 2)] = 1.0;
+    q[(0, 3)] = 1.0;
+    let gd = gen_chain(8, NodeKind::Universal);
+    MatchProblem::from_dense(&MatF::full(4, 8, 1.0), &q, &gd.adjacency())
+}
+
+/// A supervisor tuned for test cadences: fast heartbeat, short replay
+/// backoff, a few extra replay attempts to ride out stale status
+/// caches right after a kill.
+fn fast_supervisor() -> SupervisorConfig {
+    SupervisorConfig {
+        heartbeat_interval: Duration::from_millis(10),
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(20),
+        max_replays: 6,
+        ..Default::default()
+    }
+}
+
+/// Resubmit through the fleet, riding out the window where routing may
+/// still steer onto a shard that just died (its cached status has not
+/// expired yet — the cluster routes on a TTL'd view of shard health).
+fn resubmit_insistently(fleet: &SupervisedFleet, id: RequestId, problem: &MatchProblem) {
+    let mut attempts = 0;
+    while let Err(e) = fleet.resubmit(id, problem.clone(), Priority::Normal, None) {
+        attempts += 1;
+        assert!(attempts < 200, "resubmit never found a live shard: {e:#}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Socket shards behind an in-process accept loop serve a routed batch
+/// over loopback TCP exactly like local transports, and the listener
+/// winds down cleanly once its connection budget is spent and drained.
+#[test]
+fn socket_shards_serve_a_routed_batch_over_loopback_tcp() {
+    let listener = ShardListener::bind(&NetAddr::parse("127.0.0.1:0").unwrap()).unwrap();
+    let addr = listener.local_addr().clone();
+    let server = std::thread::spawn(move || {
+        listener.serve(TransportConfig::default(), ListenConfig { max_conns: 2 })
+    });
+
+    let pso = PsoConfig { seed: 17, epochs: 20_000, repair_budget: 1_000, ..Default::default() };
+    let transports: Vec<Arc<dyn ShardTransport>> = (0..2)
+        .map(|_| {
+            Arc::new(SocketShard::connect(addr.clone(), ServiceConfig::default(), pso).unwrap())
+                as Arc<dyn ShardTransport>
+        })
+        .collect();
+    let cluster = MatchCluster::with_transports(transports, Box::<RoundRobin>::default(), 64);
+    assert_eq!(cluster.transport_kinds(), vec!["socket"; 2]);
+
+    let tickets: Vec<_> = (0..6)
+        .map(|_| cluster.submit(chain_problem(4, 8), Priority::Normal, Some(60.0)).unwrap())
+        .collect();
+    for t in tickets {
+        assert!(t.wait().expect("every ticket answers").matched());
+    }
+    assert_eq!(cluster.stats().routed.iter().sum::<u64>(), 6);
+
+    cluster.drain().expect("remote sessions drain cleanly");
+    server.join().unwrap().expect("the listener winds down after its last drain");
+}
+
+/// The same protocol runs over a Unix-domain stream, and the listener
+/// removes its socket file on the way out.
+#[test]
+fn socket_shards_serve_over_a_unix_domain_socket() {
+    let path = std::env::temp_dir().join(format!("immsched-net-uds-{}.sock", std::process::id()));
+    let listener = ShardListener::bind(&NetAddr::Uds(path.clone())).unwrap();
+    let addr = listener.local_addr().clone();
+    let server = std::thread::spawn(move || {
+        listener.serve(TransportConfig::default(), ListenConfig { max_conns: 1 })
+    });
+
+    let pso = PsoConfig { seed: 17, epochs: 20_000, repair_budget: 1_000, ..Default::default() };
+    let shard = SocketShard::connect(addr, ServiceConfig::default(), pso).unwrap();
+    assert_eq!(shard.kind(), "socket");
+    for id in 0..2u64 {
+        shard.submit(id, chain_problem(4, 8), Priority::Normal, None, None).unwrap();
+        assert!(shard.wait_response(id).unwrap().matched());
+    }
+
+    shard.drain().expect("the remote session drains cleanly");
+    server.join().unwrap().expect("the listener winds down after the drain");
+    assert!(!path.exists(), "the listener must remove its socket file on shutdown");
+}
+
+/// Acceptance: a connection severed mid-episode redials within the
+/// bounded backoff budget, resubmits the interrupted request, and the
+/// quota-sliced walk still completes *exactly* the uninterrupted epoch
+/// budget with bit-identical results — a cut cable costs at most the
+/// unpersisted tail of one slice, never epochs, never determinism.
+#[test]
+fn severed_connection_redials_within_budget_and_loses_zero_epochs() {
+    let epochs = 40usize;
+    let pso = PsoConfig { seed: 23, epochs, repair_budget: 1_000, ..Default::default() };
+    let svc = ServiceConfig { epoch_quota: Some(15), ..Default::default() };
+    let problem = infeasible_star_problem();
+
+    // the uninterrupted reference walk, on a plain in-process service
+    let reference = MatchService::spawn_configured(svc, pso).unwrap();
+    let mut ref_resp = reference
+        .submit_with(
+            problem.clone(),
+            Priority::Normal,
+            None,
+            SubmitOptions { id: Some(9), ..Default::default() },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    let mut ref_total = ref_resp.epochs_run;
+    while ref_resp.path == MatchPath::Cancelled {
+        let snap = ref_resp.snapshot.clone().expect("sliced episode yields a snapshot");
+        ref_resp = reference
+            .submit_with(
+                problem.clone(),
+                Priority::Normal,
+                None,
+                SubmitOptions { id: Some(9), resume: Some(snap) },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        ref_total += ref_resp.epochs_run;
+    }
+    assert_eq!(ref_total, epochs);
+
+    // the same walk over a socket whose link is cut mid-first-slice
+    // (the slice takes milliseconds, the sever lands in microseconds);
+    // the accept budget leaves room for the redialed connections
+    let listener = ShardListener::bind(&NetAddr::parse("127.0.0.1:0").unwrap()).unwrap();
+    let addr = listener.local_addr().clone();
+    let _server = std::thread::spawn(move || {
+        listener.serve(TransportConfig::default(), ListenConfig { max_conns: 8 })
+    });
+    let rcfg = ReconnectConfig {
+        max_redials: 5,
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(20),
+    };
+    let shard =
+        SocketShard::connect_with(addr, svc, pso, TransportConfig::default(), rcfg).unwrap();
+
+    let id: RequestId = 9;
+    shard.submit(id, problem.clone(), Priority::Normal, None, None).unwrap();
+    shard.sever();
+    let mut resp = shard.wait_response(id).unwrap();
+    let mut total = resp.epochs_run;
+    let mut hops = 0;
+    while resp.path == MatchPath::Cancelled {
+        hops += 1;
+        assert!(hops <= 16, "sliced episode did not converge after the sever");
+        let snap = resp.snapshot.clone().expect("sliced episode yields a snapshot");
+        shard.submit(id, problem.clone(), Priority::Normal, None, Some(snap)).unwrap();
+        resp = shard.wait_response(id).unwrap();
+        total += resp.epochs_run;
+    }
+    shard.drain().expect("the healed link still drains cleanly");
+
+    assert!(resp.resumed, "the final slice must warm-start");
+    assert_eq!(total, epochs, "epochs across the sever must add up to exactly one cold solve");
+    let stats = shard.reconnect_stats();
+    assert!(stats.redials >= 1, "the cut link must have been redialed: {stats:?}");
+    assert!(stats.resubmits >= 1, "the interrupted request must be resubmitted: {stats:?}");
+
+    // bit-identity with the uninterrupted reference walk
+    assert_eq!(resp.path, ref_resp.path);
+    assert_eq!(total, ref_total);
+    assert_eq!(resp.mappings, ref_resp.mappings);
+    assert_eq!(
+        resp.best_fitness.to_bits(),
+        ref_resp.best_fitness.to_bits(),
+        "fitness must match the uninterrupted run to the bit"
+    );
+}
+
+/// Acceptance (tentpole): a `shard-listen` worker killed mid-episode
+/// over a real TCP socket fails over onto the surviving worker, the
+/// supervisor refills the dead slot from the *registry* (a freshly
+/// joined worker, not a local respawn), and the epochs across every
+/// received slice add up to exactly the uninterrupted budget.
+#[test]
+fn killed_socket_worker_fails_over_and_rejoins_via_the_registry() {
+    let epochs = 40usize;
+    let pso = PsoConfig { seed: 23, epochs, repair_budget: 1_000, ..Default::default() };
+    let svc = ServiceConfig { epoch_quota: Some(15), ..Default::default() };
+
+    let server = RegistryServer::bind(
+        &NetAddr::parse("127.0.0.1:0").unwrap(),
+        Duration::from_millis(250),
+    )
+    .unwrap();
+    let registry = server.registry();
+    let reg = server.addr().to_string();
+
+    let names = ["net-kill-w0", "net-kill-w1"];
+    let mut children: Vec<_> = names
+        .iter()
+        .map(|name| {
+            spawn_shard_listener(
+                Path::new(WORKER_BIN),
+                "127.0.0.1:0",
+                &["--registry", &reg, "--name", name, "--heartbeat-ms", "20"],
+                Duration::from_secs(10),
+            )
+            .unwrap()
+        })
+        .collect();
+    let live = registry.wait_for_live(2, Duration::from_secs(10));
+    assert_eq!(live.len(), 2, "both workers must join and heartbeat");
+
+    let tcfg = TransportConfig::default();
+    let rcfg = ReconnectConfig {
+        max_redials: 2,
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(20),
+    };
+    let (transports, workers) = shards_from_registry(&registry, svc, pso, tcfg, rcfg).unwrap();
+    let mut cluster = MatchCluster::with_transports(transports, Box::new(LeastQueueDepth), 64);
+    // keep routing's view of a dead shard fresh — a long-lived stale
+    // "healthy" cache entry would bounce replays off the corpse
+    cluster.set_status_ttl(Duration::from_millis(5));
+    let fleet = SupervisedFleet::new(Arc::new(cluster), fast_supervisor());
+    let assigned: Arc<Mutex<BTreeMap<usize, u64>>> =
+        Arc::new(Mutex::new(workers.iter().copied().enumerate().collect()));
+    fleet.set_respawn(registry_respawner(
+        Arc::clone(&registry),
+        Arc::clone(&assigned),
+        svc,
+        pso,
+        tcfg,
+        rcfg,
+        Duration::from_secs(10),
+    ));
+
+    let problem = infeasible_star_problem();
+    let id = fleet.submit(problem.clone(), Priority::Normal, None).unwrap();
+    // kill the worker the request was routed to, mid-episode: the first
+    // quota slice takes milliseconds, the kill lands in microseconds
+    let victim = fleet.shard_of(id).expect("submitted request must be ticketed");
+    let victim_name = live
+        .iter()
+        .find(|w| w.worker == workers[victim])
+        .expect("the routed slot maps to a registry worker")
+        .name
+        .clone();
+    let victim_child =
+        names.iter().position(|n| *n == victim_name).expect("the worker maps to a child");
+    children[victim_child].kill();
+    // a fresh worker joins; the respawner waits for exactly this (the
+    // survivor is already assigned to the other slot, so it is skipped)
+    let _replacement = spawn_shard_listener(
+        Path::new(WORKER_BIN),
+        "127.0.0.1:0",
+        &["--registry", &reg, "--name", "net-kill-w2", "--heartbeat-ms", "20"],
+        Duration::from_secs(10),
+    )
+    .unwrap();
+
+    let mut resp = fleet.wait(id).unwrap();
+    let mut total_epochs = resp.epochs_run;
+    let mut hops = 0;
+    while resp.path == MatchPath::Cancelled {
+        hops += 1;
+        assert!(hops <= 16, "episode did not converge after failover");
+        resubmit_insistently(&fleet, id, &problem);
+        resp = fleet.wait(id).unwrap();
+        total_epochs += resp.epochs_run;
+    }
+    assert_ne!(resp.path, MatchPath::Shed, "two workers must absorb one worker death");
+    assert!(resp.resumed, "the final slice must warm-start from a persisted barrier");
+    assert_eq!(
+        total_epochs, epochs,
+        "epochs across the kill must add up to exactly one uninterrupted budget"
+    );
+    let failover = fleet.failover();
+    assert!(failover.shards_failed >= 1, "the kill must be detected: {failover:?}");
+    assert!(failover.replays >= 1, "the in-flight victim must be replayed: {failover:?}");
+    assert!(
+        failover.respawns >= 1,
+        "the dead slot must be refilled from a registry join: {failover:?}"
+    );
+}
+
+/// Acceptance: the cluster is built from — and routes only to —
+/// joined, heartbeat-live workers.  A worker that joins but never
+/// heartbeats falls out of the live set after the liveness window,
+/// gets no shard slot, and is eventually evicted outright.
+#[test]
+fn registry_routes_only_to_heartbeat_live_workers() {
+    let window = Duration::from_millis(150);
+    let server = RegistryServer::bind(&NetAddr::parse("127.0.0.1:0").unwrap(), window).unwrap();
+    let registry = server.registry();
+    let reg = server.addr().to_string();
+
+    let _live_child = spawn_shard_listener(
+        Path::new(WORKER_BIN),
+        "127.0.0.1:0",
+        &["--registry", &reg, "--name", "net-live-a", "--heartbeat-ms", "25"],
+        Duration::from_secs(10),
+    )
+    .unwrap();
+    assert_eq!(registry.wait_for_live(1, Duration::from_secs(10)).len(), 1);
+
+    // a worker that joins by hand over raw fleet frames and then never
+    // heartbeats (its advertised address is never dialed, so a dead
+    // port is fine); joining *after* the real worker is live keeps the
+    // two live windows overlapping for the next assertion
+    let mut silent = server.addr().connect(Duration::from_secs(5)).unwrap();
+    silent.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let join =
+        FleetMsg::Join { name: "net-silent-b".into(), addr: "tcp://127.0.0.1:1".into() };
+    write_frame(&mut silent, &encode_fleet_msg(&join)).unwrap();
+    let reply = read_frame(&mut silent).unwrap().expect("registry answers the join");
+    let FleetReply::Welcome { worker: silent_id } = decode_fleet_reply(&reply).unwrap() else {
+        panic!("a well-formed join must be welcomed");
+    };
+    assert_eq!(registry.wait_for_live(2, Duration::from_secs(10)).len(), 2);
+
+    // let the silent worker age out of the window; the announcer keeps
+    // the real worker beating well inside it
+    std::thread::sleep(window * 2);
+    let live = registry.live();
+    assert_eq!(live.len(), 1, "only the heartbeating worker stays live");
+    assert_eq!(live[0].name, "net-live-a");
+
+    let pso = PsoConfig { seed: 17, epochs: 20_000, repair_budget: 1_000, ..Default::default() };
+    let (transports, workers) = shards_from_registry(
+        &registry,
+        ServiceConfig::default(),
+        pso,
+        TransportConfig::default(),
+        ReconnectConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(workers, vec![live[0].worker], "the cluster is built from live workers only");
+    let cluster = MatchCluster::with_transports(transports, Box::new(LeastQueueDepth), 64);
+    for _ in 0..3 {
+        let ticket = cluster.submit(chain_problem(4, 8), Priority::Normal, None).unwrap();
+        assert_eq!(ticket.shard, 0, "every submission lands on the one live worker");
+        assert!(ticket.wait().unwrap().matched());
+    }
+    cluster.drain().expect("the live worker's session drains cleanly");
+
+    assert_eq!(registry.evict_stale(), 1, "the silent worker is garbage-collected");
+    assert!(!registry.heartbeat(silent_id), "an evicted worker cannot heartbeat back");
+}

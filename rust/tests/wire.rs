@@ -6,7 +6,7 @@
 use immsched::cluster::wire::{
     decode_msg, decode_problem, decode_reply, decode_response, encode_msg, encode_problem,
     encode_reply, encode_response, read_frame, write_frame, ShardMsg, ShardReply, ShardStatus,
-    MAX_FRAME_BYTES,
+    MAX_FRAME_BYTES, WIRE_SCHEMA,
 };
 use immsched::coordinator::{
     ControllerStats, MatchPath, MatchProblem, MatchResponse, RouterStats, ServiceConfig,
@@ -195,7 +195,7 @@ fn framed_messages_round_trip() {
 
     // replies too
     let replies = vec![
-        ShardReply::Ready { schema: "immsched.shard-wire/v2".into() },
+        ShardReply::Ready { schema: WIRE_SCHEMA.into() },
         ShardReply::Stats(ShardStatus {
             queue_depth: 3,
             in_flight: Some(Priority::Background),
@@ -214,7 +214,7 @@ fn framed_messages_round_trip() {
     }
     let mut r = &buf[..];
     match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
-        ShardReply::Ready { schema } => assert_eq!(schema, "immsched.shard-wire/v2"),
+        ShardReply::Ready { schema } => assert_eq!(schema, WIRE_SCHEMA),
         other => panic!("{other:?}"),
     }
     match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
@@ -370,4 +370,174 @@ fn snapshot_with_zeroed_rng_state_is_rejected() {
     }
     let err = SwarmSnapshot::from_json(&doc).unwrap_err();
     assert!(format!("{err:#}").contains("all-zero"), "{err:#}");
+}
+
+/// A reader that hands out at most `chunk` bytes per `read` call — the
+/// socket transports see exactly this shape whenever TCP segmentation
+/// or a slow peer splits a frame across reads.
+struct Dribble<'a> {
+    data: &'a [u8],
+    pos: usize,
+    chunk: usize,
+}
+
+impl std::io::Read for Dribble<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(self.chunk).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Short reads are not errors: a frame split into 1-, 2- and 3-byte
+/// dribbles — including splits *inside* the 4-byte length prefix —
+/// must decode identically to a single contiguous read.
+#[test]
+fn split_frames_survive_byte_dribble_reads() {
+    let mut rng = Rng::new(31);
+    let problem = random_problem(4, 8, 0.3, &mut rng);
+    let msgs = vec![
+        ShardMsg::Submit {
+            id: 9,
+            problem,
+            priority: Priority::Normal,
+            timeout: Some(2.5),
+            resume: Some(random_snapshot(4, 8, &mut rng)),
+        },
+        ShardMsg::Stats,
+        ShardMsg::Drain,
+    ];
+    let mut buf = Vec::new();
+    for msg in &msgs {
+        write_frame(&mut buf, &encode_msg(msg)).unwrap();
+    }
+    for chunk in [1usize, 2, 3, 7] {
+        let mut r = Dribble { data: &buf, pos: 0, chunk };
+        for msg in &msgs {
+            let frame = read_frame(&mut r).unwrap().expect("frame present");
+            let back = decode_msg(&frame).unwrap();
+            match (msg, &back) {
+                (
+                    ShardMsg::Submit { id, resume, .. },
+                    ShardMsg::Submit { id: i2, resume: r2, .. },
+                ) => {
+                    assert_eq!(id, i2, "chunk {chunk}");
+                    assert_eq!(resume, r2, "chunk {chunk}: snapshot must survive the dribble");
+                }
+                (ShardMsg::Stats, ShardMsg::Stats) | (ShardMsg::Drain, ShardMsg::Drain) => {}
+                (want, got) => panic!("chunk {chunk}: decoded {got:?}, wanted {want:?}"),
+            }
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "chunk {chunk}: clean EOF after the batch");
+    }
+}
+
+/// A stream that dies *between* frames is a clean EOF, but one that
+/// dies *inside* a frame is a loud truncation — and the frames before
+/// the cut still decode.
+#[test]
+fn truncation_mid_stream_fails_after_decoding_prior_frames() {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &encode_msg(&ShardMsg::Cancel { id: 3 })).unwrap();
+    let first_len = buf.len();
+    write_frame(&mut buf, &encode_msg(&ShardMsg::Stats)).unwrap();
+    for cut in [first_len + 2, buf.len() - 1] {
+        let mut r = &buf[..cut];
+        let frame = read_frame(&mut r).unwrap().expect("first frame intact");
+        assert!(matches!(decode_msg(&frame).unwrap(), ShardMsg::Cancel { id: 3 }));
+        let err = read_frame(&mut r).expect_err("cut inside the second frame must fail");
+        assert!(format!("{err:#}").contains("truncated"), "cut {cut}: {err:#}");
+    }
+    // the same stream cut exactly on the frame boundary is a clean EOF
+    let mut r = &buf[..first_len];
+    assert!(read_frame(&mut r).unwrap().is_some());
+    assert!(read_frame(&mut r).unwrap().is_none(), "a boundary cut is EOF, not truncation");
+}
+
+/// v3: every `Response` piggybacks the worker's status so the router's
+/// TTL cache refreshes without a stats round-trip — present status
+/// round-trips field-for-field, absent status stays absent.
+#[test]
+fn response_reply_piggybacks_status() {
+    let mut rng = Rng::new(41);
+    let resp = MatchResponse {
+        id: 1 << 60,
+        mappings: vec![vec![Some(0), Some(2), None]],
+        best_fitness: -1.25,
+        epochs_run: 17,
+        host_seconds: 0.5,
+        path: MatchPath::Cancelled,
+        resumed: true,
+        snapshot: Some(random_snapshot(3, 4, &mut rng)),
+    };
+    let status = ShardStatus {
+        queue_depth: 4,
+        in_flight: Some(Priority::Urgent),
+        in_flight_id: Some((1 << 60) + 1),
+        stats: ServiceStats {
+            controller: ControllerStats { requests: 9, resumed: 3, ..Default::default() },
+            router: RouterStats { admitted: 11, depth: 4, ..Default::default() },
+        },
+    };
+    for carried in [Some(status), None] {
+        let reply =
+            ShardReply::Response { response: resp.clone(), status: carried.clone() };
+        let doc = Json::parse(&encode_reply(&reply).render()).unwrap();
+        match decode_reply(&doc).unwrap() {
+            ShardReply::Response { response, status } => {
+                assert_eq!(response.id, resp.id);
+                assert_eq!(response.snapshot, resp.snapshot);
+                match (&carried, &status) {
+                    (Some(want), Some(got)) => {
+                        assert_eq!(got.queue_depth, want.queue_depth);
+                        assert_eq!(got.in_flight, want.in_flight);
+                        assert_eq!(got.in_flight_id, want.in_flight_id);
+                        assert_eq!(got.stats.controller.requests, 9);
+                        assert_eq!(got.stats.router.admitted, 11);
+                    }
+                    (None, None) => {}
+                    (want, got) => panic!(
+                        "status presence diverged: {:?} vs {:?}",
+                        want.is_some(),
+                        got.is_some()
+                    ),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+/// Mixing wire versions must fail loudly and helpfully: an old
+/// `immsched.shard-wire/` peer gets the redeploy hint, arbitrary
+/// garbage schemas get the plain mismatch.
+#[test]
+fn older_wire_schema_is_rejected_with_the_mixed_version_hint() {
+    let mut doc = encode_msg(&ShardMsg::Stats);
+    if let Json::Obj(fields) = &mut doc {
+        for (k, v) in fields.iter_mut() {
+            if k == "schema" {
+                *v = Json::from("immsched.shard-wire/v2");
+            }
+        }
+    }
+    let err = decode_msg(&doc).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("schema mismatch"), "{text}");
+    assert!(text.contains("immsched.shard-wire/v2"), "{text}");
+    assert!(text.contains(WIRE_SCHEMA), "{text}");
+    assert!(text.contains("redeploy both sides"), "an old peer earns the versioning hint: {text}");
+
+    let mut doc = encode_msg(&ShardMsg::Stats);
+    if let Json::Obj(fields) = &mut doc {
+        for (k, v) in fields.iter_mut() {
+            if k == "schema" {
+                *v = Json::from("bogus/v9");
+            }
+        }
+    }
+    let text = format!("{:#}", decode_msg(&doc).unwrap_err());
+    assert!(text.contains("schema mismatch"), "{text}");
+    assert!(!text.contains("redeploy both sides"), "garbage is not a version skew: {text}");
 }
