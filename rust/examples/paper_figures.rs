@@ -53,6 +53,11 @@ fn main() -> anyhow::Result<()> {
         )?;
     }
 
+    if let Some(cluster) = cluster_text.as_deref() {
+        println!(">>> Observability plane (obs_overhead + incident counters)");
+        report::emit(&figures::obs_trajectory(cluster)?, "obs_trajectory")?;
+    }
+
     println!("all figures regenerated under reports/");
     Ok(())
 }

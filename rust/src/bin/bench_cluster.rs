@@ -47,7 +47,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
+use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig, TimedRequest};
 use immsched::cluster::net::{spawn_shard_listener, ListenerChild, SocketShard};
 use immsched::cluster::transport::worker_binary;
 use immsched::cluster::{
@@ -89,6 +89,9 @@ struct Args {
     /// entries); `None` = no fault injection.
     chaos: Option<String>,
     chaos_seed: u64,
+    /// Enable the observability plane and write the flight-recorder
+    /// dump here at the end of the run (and on any mid-run incident).
+    obs_out: Option<String>,
 }
 
 impl Args {
@@ -146,6 +149,7 @@ fn parse_args() -> Result<Args> {
         }),
         chaos: flag("--chaos").cloned(),
         chaos_seed: flag("--chaos-seed").map(|s| s.parse()).transpose()?.unwrap_or(1337),
+        obs_out: flag("--obs-out").cloned(),
     })
 }
 
@@ -235,6 +239,60 @@ fn spawn_chaos_cluster(
     }
     let cluster = MatchCluster::with_transports(wrapped, policy, ccfg.resume_capacity);
     Ok((cluster, chaos, children))
+}
+
+/// Price the observability plane: the same phase-2 schedule driven
+/// through fresh in-process clusters with the plane off, then on (each
+/// mode best-of-3 to damp scheduler noise).  In-process always — the
+/// probe measures the instrumentation's hot-path cost, not transport
+/// jitter.  Leaves the plane disabled; the caller restores `--obs-out`
+/// state if needed.
+fn measure_obs_overhead(
+    args: &Args,
+    dcfg: &DriverConfig,
+    schedule: &[TimedRequest],
+) -> Result<Json> {
+    let run_once = |on: bool| -> Result<f64> {
+        if on {
+            immsched::obs::enable_all();
+        } else {
+            immsched::obs::disable_all();
+        }
+        immsched::obs::tracer().clear();
+        immsched::obs::recorder().clear();
+        let ccfg = ClusterConfig {
+            shards: args.shards,
+            service: ServiceConfig::default(),
+            pso: PsoConfig { seed: args.seed, ..Default::default() },
+            resume_capacity: 1024,
+        };
+        let cluster = MatchCluster::spawn(ccfg, make_policy(&args.policy)?)?;
+        let fleet = SupervisedFleet::new(Arc::new(cluster), SupervisorConfig::default());
+        let report = run_open_loop(&fleet, schedule, dcfg)?;
+        fleet.drain()?;
+        Ok(report.mean_latency())
+    };
+    let best_of = |on: bool| -> Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            best = best.min(run_once(on)?);
+        }
+        Ok(best)
+    };
+    let off = best_of(false)?;
+    let on = best_of(true)?;
+    immsched::obs::disable_all();
+    let overhead_pct = if off > 0.0 { (on - off) / off * 100.0 } else { 0.0 };
+    println!(
+        "[bench_cluster] obs_overhead: mean latency off={} on={} ({overhead_pct:+.2}%)",
+        fmt_time(off),
+        fmt_time(on)
+    );
+    Ok(Json::obj(vec![
+        ("mean_latency_off_s", Json::from(off)),
+        ("mean_latency_on_s", Json::from(on)),
+        ("overhead_pct", Json::from(overhead_pct)),
+    ]))
 }
 
 /// A 3-fan-out star cannot embed into a chain, but its full mask has no
@@ -383,6 +441,11 @@ fn resume_proof(args: &Args, target_s: f64) -> Result<ResumeProof> {
 
 fn main() -> Result<()> {
     let args = parse_args()?;
+    immsched::util::logging::init_from_env();
+    if let Some(path) = &args.obs_out {
+        immsched::obs::enable_all();
+        immsched::obs::recorder::set_dump_path(Some(path.into()));
+    }
     println!(
         "[bench_cluster] smoke={} shards={} transport={} policy={} process={} rate={} horizon={}",
         args.smoke,
@@ -459,6 +522,19 @@ fn main() -> Result<()> {
         report.failover.shed_at_floor
     );
 
+    // ---- observability: final dump, then the overhead probe -----------
+    if let Some(path) = &args.obs_out {
+        // capture the main run's events before the probe clears them
+        immsched::obs::recorder::dump_to_disk("bench-complete");
+        println!("[bench_cluster] obs dump written to {path}");
+    }
+    let obs_overhead = measure_obs_overhead(&args, &dcfg, &schedule)?;
+    let obs_overhead_pct =
+        obs_overhead.get("overhead_pct").and_then(Json::as_f64).unwrap_or(0.0);
+    if args.obs_out.is_some() {
+        immsched::obs::enable_all();
+    }
+
     // ---- acceptance (smoke) -------------------------------------------
     let lost = schedule.len() != report.submitted();
     if args.smoke {
@@ -487,6 +563,10 @@ fn main() -> Result<()> {
                 "chaos killed a shard but supervision never declared a failure"
             );
         }
+        assert!(
+            obs_overhead_pct <= 2.0,
+            "observability plane costs {obs_overhead_pct:.2}% mean latency (budget: 2%)"
+        );
         println!("[bench_cluster] SMOKE OK");
     }
 
@@ -550,6 +630,7 @@ fn main() -> Result<()> {
                 }
             },
         ),
+        ("obs_overhead", obs_overhead),
         (
             "resume_proof",
             Json::obj(vec![

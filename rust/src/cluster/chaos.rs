@@ -40,6 +40,9 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{MatchProblem, MatchResponse, RequestId};
 use crate::matcher::SwarmSnapshot;
+use crate::obs::metrics::{publish_chaos, well};
+use crate::obs::recorder;
+use crate::obs::trace::{span_with, SpanKind};
 use crate::scheduler::Priority;
 use crate::util::Rng;
 
@@ -261,6 +264,20 @@ impl ShardTransport for FaultInjectingTransport {
             // supersedes the drop — its new reply flows normally
             lock_recover(&self.dropped).remove(&id);
         }
+        if let Some(fault) = fault {
+            well::CHAOS_FAULTS.inc();
+            span_with(id, SpanKind::Fault, || format!("seq={seq} fault={}", fault.spec()));
+            if recorder::enabled() {
+                recorder::record(
+                    "chaos-fault",
+                    vec![
+                        ("id".into(), id.to_string()),
+                        ("seq".into(), seq.to_string()),
+                        ("fault".into(), fault.spec()),
+                    ],
+                );
+            }
+        }
         match fault {
             None => {}
             Some(ChaosFault::Delay(base)) => {
@@ -278,6 +295,9 @@ impl ShardTransport for FaultInjectingTransport {
                 self.counters.kills.fetch_add(1, Ordering::Relaxed);
                 self.inner.abort();
             }
+        }
+        if fault.is_some() {
+            publish_chaos(&self.stats());
         }
         self.inner.submit(id, problem, priority, timeout, resume)
     }

@@ -24,6 +24,8 @@ use anyhow::Result;
 
 use crate::accel::{build_target_graph, Platform, PlatformKind};
 use crate::coordinator::{MatchPath, MatchProblem, MatchResponse, RequestId};
+use crate::obs::metrics::well;
+use crate::obs::trace::{terminal, SpanKind};
 use crate::scheduler::{build_trace, ArrivalProcess, Priority, TraceConfig};
 use crate::util::stats::Summary;
 use crate::util::table::{fmt_time, Table};
@@ -173,6 +175,15 @@ impl DriverReport {
 
     pub fn slo_misses(&self) -> usize {
         self.outcomes.iter().filter(|o| o.slo_miss).count()
+    }
+
+    /// Mean end-to-end latency across final responses (s) — what the
+    /// bench's `obs_overhead` block compares between paired runs.
+    pub fn mean_latency(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|o| o.latency).sum::<f64>() / self.outcomes.len() as f64
     }
 
     /// Latency percentile across final responses (s); `q` in [0, 100].
@@ -364,6 +375,19 @@ fn settle(
         MatchPath::Shed | MatchPath::Cancelled => true,
         _ => p.timeout.is_some_and(|t| latency > t),
     };
+    // the driver is the terminal-span arbiter: exactly one terminal
+    // event per request life, stamped where the outcome is classified
+    let kind = match resp.path {
+        MatchPath::Shed => SpanKind::Shed,
+        MatchPath::Cancelled => SpanKind::Cancelled,
+        MatchPath::Rejected => SpanKind::Failed,
+        _ => SpanKind::Done,
+    };
+    terminal(resp.id, kind, || {
+        format!("path={} slo_miss={slo_miss} resubmits={}", resp.path.name(), p.resubmits)
+    });
+    well::CLUSTER_TERMINAL.inc();
+    well::CLUSTER_LATENCY.observe_us((latency * 1e6) as u64);
     outcomes.push(RequestOutcome {
         id: resp.id,
         shard,

@@ -63,6 +63,8 @@ use anyhow::Result;
 
 use crate::coordinator::{MatchProblem, MatchResponse, RequestId, ServiceConfig, ServiceStats};
 use crate::matcher::{PsoConfig, SwarmSnapshot};
+use crate::obs::metrics::{publish_service, well};
+use crate::obs::trace::{span_with, SpanKind};
 use crate::scheduler::Priority;
 
 use transport::lock_recover;
@@ -395,10 +397,16 @@ impl MatchCluster {
     }
 
     pub fn stats(&self) -> ClusterStats {
+        let shards: Vec<ServiceStats> = (0..self.shards.len())
+            .map(|s| self.fetch_status(s).map(|st| st.stats).unwrap_or_default())
+            .collect();
+        // unify the per-shard stats structs into the metrics registry
+        // as views (no-op with the plane disabled)
+        for (shard, stats) in shards.iter().enumerate() {
+            publish_service(shard, stats);
+        }
         ClusterStats {
-            shards: (0..self.shards.len())
-                .map(|s| self.fetch_status(s).map(|st| st.stats).unwrap_or_default())
-                .collect(),
+            shards,
             routed: self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
             resume: self.store.stats(),
         }
@@ -503,6 +511,10 @@ impl MatchCluster {
         let transport = self.transport(shard);
         transport.submit(id, problem, priority, timeout, resume)?;
         self.routed[shard].fetch_add(1, Ordering::Relaxed);
+        well::CLUSTER_ROUTED.inc();
+        span_with(id, SpanKind::Route, || {
+            format!("shard={shard} kind={}", transport.kind())
+        });
         Ok(ClusterTicket { id, shard, transport, store: Arc::clone(&self.store) })
     }
 }

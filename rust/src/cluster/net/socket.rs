@@ -28,10 +28,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{MatchProblem, MatchResponse, RequestId, ServiceConfig};
 use crate::matcher::{PsoConfig, SwarmSnapshot};
+use crate::obs::metrics::well;
+use crate::obs::recorder;
+use crate::obs::trace::{self, span_with, SpanKind};
 use crate::scheduler::Priority;
 use crate::util::json::Json;
 
-use super::super::transport::{lock_recover, ShardTransport, TransportConfig};
+use super::super::transport::{lock_recover, submit_trace_ctx, ShardTransport, TransportConfig};
 use super::super::wire::{
     self, decode_reply, encode_msg, read_frame, write_frame, ShardMsg, ShardReply, ShardStatus,
 };
@@ -249,7 +252,8 @@ impl ShardTransport for SocketShard {
             },
         );
         if let Some(stream) = link.stream.as_mut() {
-            let msg = ShardMsg::Submit { id, problem, priority, timeout, resume };
+            let msg =
+                ShardMsg::Submit { id, problem, priority, timeout, resume, trace: submit_trace_ctx(id) };
             match write_frame(stream, &encode_msg(&msg)) {
                 Ok(()) => {
                     if let Some(entry) = lock_recover(&self.inner.inflight).get_mut(&id) {
@@ -425,8 +429,9 @@ fn link_loop(inner: Arc<Inner>, mut read_half: NetStream) {
 /// Route one decoded reply to its waiter/slot.
 fn route_reply(inner: &Inner, frame: &Json) -> Result<()> {
     match decode_reply(frame)? {
-        ShardReply::Response { response, status } => {
+        ShardReply::Response { response, status, spans } => {
             lock_recover(&inner.inflight).remove(&response.id);
+            trace::ingest_remote(spans);
             if let Some(status) = status {
                 *lock_recover(&inner.pushed) = Some((Instant::now(), status));
             }
@@ -464,6 +469,23 @@ fn redial_within_budget(inner: &Inner) -> Option<NetStream> {
     while attempt < inner.rcfg.max_redials {
         attempt += 1;
         inner.redials.fetch_add(1, Ordering::Relaxed);
+        well::NET_REDIALS.inc();
+        if recorder::enabled() {
+            recorder::record(
+                "redial",
+                vec![
+                    ("addr".into(), inner.addr.to_string()),
+                    ("attempt".into(), attempt.to_string()),
+                    ("budget".into(), inner.rcfg.max_redials.to_string()),
+                ],
+            );
+        }
+        if attempt == 1 && trace::enabled() {
+            // stamp the outage onto every request it strands
+            for id in lock_recover(&inner.inflight).keys() {
+                span_with(*id, SpanKind::Redial, || format!("addr={}", inner.addr));
+            }
+        }
         std::thread::sleep(redial_backoff(&inner.rcfg, attempt));
         if inner.closed.load(Ordering::Acquire) {
             return None;
@@ -479,18 +501,30 @@ fn redial_within_budget(inner: &Inner) -> Option<NetStream> {
             }
             Err(e) => {
                 crate::log_warn!(
-                    "socket shard redial {attempt}/{} to {} failed: {e:#}",
-                    inner.rcfg.max_redials,
-                    inner.addr
+                    { addr = inner.addr, attempt = attempt, budget = inner.rcfg.max_redials },
+                    "socket shard redial failed: {e:#}"
                 );
             }
         }
     }
     crate::log_warn!(
-        "socket shard link to {} is dead after {} redials",
-        inner.addr,
-        inner.rcfg.max_redials
+        { addr = inner.addr, redials = inner.rcfg.max_redials },
+        "socket shard link is dead, redial budget exhausted"
     );
+    if recorder::enabled() {
+        recorder::record(
+            "link-dead",
+            vec![
+                ("addr".into(), inner.addr.to_string()),
+                ("redials".into(), inner.redials.load(Ordering::Relaxed).to_string()),
+                (
+                    "stranded".into(),
+                    lock_recover(&inner.inflight).len().to_string(),
+                ),
+            ],
+        );
+        recorder::dump_to_disk("link-dead");
+    }
     None
 }
 
@@ -516,6 +550,7 @@ fn reconnect(inner: &Inner) -> Result<NetStream> {
             priority: entry.priority,
             timeout: entry.timeout,
             resume: entry.resume.clone(),
+            trace: submit_trace_ctx(*id),
         };
         match link.stream.as_mut() {
             Some(stream) => write_frame(stream, &encode_msg(&msg))
@@ -524,6 +559,8 @@ fn reconnect(inner: &Inner) -> Result<NetStream> {
         }
         entry.sent_gen = generation;
         inner.resubmits.fetch_add(1, Ordering::Relaxed);
+        well::NET_RESUBMITS.inc();
+        span_with(*id, SpanKind::Resubmit, || format!("generation={generation}"));
     }
     Ok(read_half)
 }

@@ -42,6 +42,9 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{MatchPath, MatchProblem, MatchResponse, RequestId};
 use crate::matcher::SwarmSnapshot;
+use crate::obs::metrics::{publish_failover, well};
+use crate::obs::recorder;
+use crate::obs::trace::{span_with, SpanKind};
 use crate::scheduler::Priority;
 
 use super::policy::ShardId;
@@ -416,6 +419,19 @@ impl SupervisedFleet {
         let id = self.cluster.allocate_request_id();
         let done = Some(shed_response(id, None));
         self.counters.shed_at_floor.fetch_add(1, Ordering::Relaxed);
+        well::CLUSTER_SHED_AT_FLOOR.inc();
+        span_with(id, SpanKind::Shed, || "reason=capacity-floor".to_string());
+        if recorder::enabled() {
+            recorder::record(
+                "shed-floor",
+                vec![
+                    ("id".into(), id.to_string()),
+                    ("live_shards".into(), self.live_shards().to_string()),
+                    ("floor".into(), self.cfg.capacity_floor.to_string()),
+                ],
+            );
+            recorder::dump_to_disk("shed-at-floor");
+        }
         lock_recover(&self.flights).insert(
             id,
             FlightRecord {
@@ -464,14 +480,27 @@ impl SupervisedFleet {
             };
             if newly_dead {
                 self.counters.shards_failed.fetch_add(1, Ordering::Relaxed);
+                well::CLUSTER_SHARDS_FAILED.inc();
                 crate::log_warn!(
-                    "shard {shard} declared dead (healthy={alive}); failing over its in-flight \
-                     requests"
+                    { shard = shard, healthy = alive },
+                    "shard declared dead; failing over its in-flight requests"
                 );
+                if recorder::enabled() {
+                    recorder::record(
+                        "shard-dead",
+                        vec![
+                            ("shard".into(), shard.to_string()),
+                            ("healthy".into(), alive.to_string()),
+                            ("live_shards".into(), self.live_shards().to_string()),
+                        ],
+                    );
+                    recorder::dump_to_disk("shard-dead");
+                }
                 self.try_respawn(shard);
                 self.rescue_shard(shard);
             }
         }
+        publish_failover(&self.failover());
     }
 
     /// Replace a dead shard's transport via the installed respawner
@@ -487,8 +516,11 @@ impl SupervisedFleet {
                     h.dead = false;
                 }
                 self.counters.respawns.fetch_add(1, Ordering::Relaxed);
+                if recorder::enabled() {
+                    recorder::record("respawn", vec![("shard".into(), shard.to_string())]);
+                }
             }
-            Err(e) => crate::log_warn!("respawn of shard {shard} failed: {e:#}"),
+            Err(e) => crate::log_warn!({ shard = shard }, "respawn failed: {e:#}"),
         }
     }
 
@@ -539,6 +571,20 @@ impl SupervisedFleet {
             ) {
                 Ok(ticket) => {
                     self.counters.replays.fetch_add(1, Ordering::Relaxed);
+                    well::CLUSTER_REPLAYS.inc();
+                    span_with(id, SpanKind::Replay, || {
+                        format!("attempt={replays} shard={}", ticket.shard)
+                    });
+                    if recorder::enabled() {
+                        recorder::record(
+                            "replay",
+                            vec![
+                                ("id".into(), id.to_string()),
+                                ("attempt".into(), replays.to_string()),
+                                ("shard".into(), ticket.shard.to_string()),
+                            ],
+                        );
+                    }
                     let mut flights = lock_recover(&self.flights);
                     if let Some(rec) = flights.get_mut(&id) {
                         rec.ticket = Some(ticket);
@@ -551,8 +597,10 @@ impl SupervisedFleet {
                     return;
                 }
                 Err(e) => {
-                    crate::log_warn!("replay {replays}/{} of request {id} failed: {e:#}",
-                        self.cfg.max_replays);
+                    crate::log_warn!(
+                        { id = id, attempt = replays, budget = self.cfg.max_replays },
+                        "replay failed: {e:#}"
+                    );
                 }
             }
         }
@@ -560,6 +608,15 @@ impl SupervisedFleet {
         // warm-start snapshot back so no episode progress is destroyed
         let snapshot = self.cluster.resume_store().take(id).or(resume_copy);
         self.counters.shed_at_floor.fetch_add(1, Ordering::Relaxed);
+        well::CLUSTER_SHED_AT_FLOOR.inc();
+        span_with(id, SpanKind::Shed, || format!("reason=replay-exhausted replays={replays}"));
+        if recorder::enabled() {
+            recorder::record(
+                "shed-floor",
+                vec![("id".into(), id.to_string()), ("replays".into(), replays.to_string())],
+            );
+            recorder::dump_to_disk("shed-at-floor");
+        }
         let mut flights = lock_recover(&self.flights);
         if let Some(rec) = flights.get_mut(&id) {
             rec.replays = replays;

@@ -39,6 +39,7 @@ use crate::coordinator::{
     ServiceConfig, SubmitOptions,
 };
 use crate::matcher::{PsoConfig, SwarmSnapshot};
+use crate::obs::trace::{self, TraceCtx, TraceEvent};
 use crate::scheduler::Priority;
 
 use super::wire::{
@@ -87,6 +88,24 @@ impl Default for TransportConfig {
 /// thread owned — instead of wedging every later caller of the shard.
 pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Trace context a transport attaches to an outgoing submit when
+/// tracing is on: the globally unique request id doubles as the trace
+/// id (parent 0 = root), so the worker's spans stitch by id on return.
+pub(crate) fn submit_trace_ctx(id: RequestId) -> Option<TraceCtx> {
+    trace::enabled().then_some(TraceCtx { trace_id: id, parent: 0 })
+}
+
+/// Worker-side spans to piggyback on a response: drained from the
+/// worker's tracer so a long-lived worker neither re-ships nor
+/// accumulates them.  Empty (and allocation-free) with tracing off.
+fn drain_worker_spans(id: RequestId) -> Vec<TraceEvent> {
+    if trace::enabled() {
+        trace::tracer().take_for(id)
+    } else {
+        Vec::new()
+    }
 }
 
 /// A deliberately malformed frame, injected by the chaos transport to
@@ -487,10 +506,13 @@ fn demux_loop(
     loop {
         match read_frame(&mut stdout) {
             Ok(Some(frame)) => match decode_reply(&frame) {
-                Ok(ShardReply::Response { response, status }) => {
+                Ok(ShardReply::Response { response, status, spans }) => {
                     if let Some(status) = status {
                         *lock_recover(&demux.pushed) = Some((Instant::now(), status));
                     }
+                    // worker-side spans stitch into this process's
+                    // timeline for the request
+                    trace::ingest_remote(spans);
                     let mut state = lock_recover(&demux.state);
                     state.responses.insert(response.id, response);
                     demux.arrived.notify_all();
@@ -537,7 +559,14 @@ impl ShardTransport for ProcessShard {
         timeout: Option<f64>,
         resume: Option<SwarmSnapshot>,
     ) -> Result<()> {
-        self.send(&ShardMsg::Submit { id, problem, priority, timeout, resume })
+        self.send(&ShardMsg::Submit {
+            id,
+            problem,
+            priority,
+            timeout,
+            resume,
+            trace: submit_trace_ctx(id),
+        })
     }
 
     fn cancel(&self, id: RequestId) {
@@ -778,8 +807,12 @@ where
         });
         for resp in finished {
             answered += 1;
-            let reply =
-                ShardReply::Response { response: resp, status: Some(service_status(&svc)) };
+            let spans = drain_worker_spans(resp.id);
+            let reply = ShardReply::Response {
+                response: resp,
+                status: Some(service_status(&svc)),
+                spans,
+            };
             write_frame(&mut output, &encode_reply(&reply))?;
         }
         if pending.is_empty() {
@@ -812,7 +845,13 @@ where
                 let reply = ShardReply::Error { context: "duplicate hello".into() };
                 write_frame(&mut output, &encode_reply(&reply))?;
             }
-            ShardMsg::Submit { id, problem, priority, timeout, resume } => {
+            ShardMsg::Submit { id, problem, priority, timeout, resume, trace: ctx } => {
+                // a submit carrying a trace context asks this worker to
+                // record spans and ship them back — the router's flag
+                // crosses the boundary implicitly, no extra config verb
+                if ctx.is_some() && !trace::enabled() {
+                    trace::set_enabled(true);
+                }
                 let deadline = timeout.map(|t| svc.now() + t);
                 // kept aside so a failed submission can still hand the
                 // warm-start snapshot back (shedding must never destroy
@@ -839,9 +878,11 @@ where
                             snapshot: backup,
                         };
                         answered += 1;
+                        let spans = drain_worker_spans(id);
                         let reply = ShardReply::Response {
                             response: shed,
                             status: Some(service_status(&svc)),
+                            spans,
                         };
                         write_frame(&mut output, &encode_reply(&reply))?;
                     }

@@ -34,6 +34,7 @@ use crate::coordinator::{
 };
 use crate::graph::Csr;
 use crate::matcher::{BitMask, Mapping, PsoConfig, SwarmSnapshot};
+use crate::obs::trace::{SpanKind, TraceCtx, TraceEvent};
 use crate::scheduler::Priority;
 use crate::util::json::{
     as_index, decode_opt_indices, encode_opt_indices, f32_bits, get_bool, get_dim, get_f32_bits,
@@ -42,8 +43,10 @@ use crate::util::json::{
 
 /// Protocol version tag carried by every frame.  Bump on any layout
 /// change: a mixed-version router/worker pair must fail the handshake,
-/// not mis-decode swarm state.
-pub const WIRE_SCHEMA: &str = "immsched.shard-wire/v3";
+/// not mis-decode swarm state.  v4 added the observability plane:
+/// `submit` carries an optional trace context and `response` piggybacks
+/// the worker-side span timeline.
+pub const WIRE_SCHEMA: &str = "immsched.shard-wire/v4";
 
 /// Hard ceiling on one frame's payload (64 MiB).  The largest real
 /// payload is a `huge`-class problem + snapshot (a few MiB of JSON); a
@@ -70,12 +73,15 @@ pub enum ShardMsg {
     /// Submit (or, with `resume`, resubmit) one request.  `timeout` is
     /// relative seconds from receipt — absolute deadlines never cross
     /// the boundary, because the two sides do not share a clock.
+    /// `trace`, when present, asks the worker to record spans for this
+    /// request and ship them back on the response (v4).
     Submit {
         id: RequestId,
         problem: MatchProblem,
         priority: Priority,
         timeout: Option<f64>,
         resume: Option<SwarmSnapshot>,
+        trace: Option<TraceCtx>,
     },
     /// Cancel the identified request at its next epoch barrier.
     Cancel { id: RequestId },
@@ -97,8 +103,11 @@ pub enum ShardReply {
     /// response piggybacks the shard's post-completion [`ShardStatus`]
     /// so the router's TTL status cache refreshes for free on each
     /// reply instead of only via heartbeat probes (`None` keeps older
-    /// senders representable in memory, never on the wire).
-    Response { response: MatchResponse, status: Option<ShardStatus> },
+    /// senders representable in memory, never on the wire).  Since v4
+    /// the worker's span timeline for the request rides along (empty
+    /// unless the submit carried a trace context), so a multi-host
+    /// request stitches into one timeline on the router.
+    Response { response: MatchResponse, status: Option<ShardStatus>, spans: Vec<TraceEvent> },
     /// Non-blocking load report — the routing policies' input.
     Stats(ShardStatus),
     /// Drain complete; `answered` counts responses sent over this
@@ -450,6 +459,53 @@ pub fn decode_response(v: &Json) -> Result<MatchResponse> {
     })
 }
 
+/// Trace context as `{trace: <hex>, parent: <hex>}` — both words are
+/// full u64s, so they travel as 16-digit hex and round-trip bit-exactly
+/// (ids and trace words may exceed 2^53).
+pub fn encode_trace_ctx(ctx: &TraceCtx) -> Json {
+    Json::obj(vec![("trace", hex_u64(ctx.trace_id)), ("parent", hex_u64(ctx.parent))])
+}
+
+/// Inverse of [`encode_trace_ctx`].
+pub fn decode_trace_ctx(v: &Json) -> Result<TraceCtx> {
+    Ok(TraceCtx { trace_id: get_hex_u64(v, "trace")?, parent: get_hex_u64(v, "parent")? })
+}
+
+/// One worker-side span (kind by stable name, stamp as hex nanos —
+/// worker-local clock, meaningful for ordering within the worker).
+fn encode_span(ev: &TraceEvent) -> Json {
+    Json::obj(vec![
+        ("id", hex_u64(ev.id)),
+        ("kind", Json::from(ev.kind.name())),
+        ("at_ns", hex_u64(ev.at_nanos)),
+        ("terminal", Json::from(ev.terminal)),
+        ("detail", Json::from(ev.detail.as_str())),
+    ])
+}
+
+fn decode_span(v: &Json) -> Result<TraceEvent> {
+    let kind_name = get_str(v, "kind")?;
+    Ok(TraceEvent {
+        id: get_hex_u64(v, "id")?,
+        kind: SpanKind::from_name(kind_name)
+            .with_context(|| format!("unknown span kind {kind_name:?}"))?,
+        at_nanos: get_hex_u64(v, "at_ns")?,
+        terminal: get_bool(v, "terminal")?,
+        // the router's ingest marks provenance; on the wire it is
+        // implicit (every shipped span is remote to the receiver)
+        remote: false,
+        detail: get_str(v, "detail")?.to_string(),
+    })
+}
+
+fn encode_spans(spans: &[TraceEvent]) -> Json {
+    Json::Arr(spans.iter().map(encode_span).collect())
+}
+
+fn decode_spans(v: &Json) -> Result<Vec<TraceEvent>> {
+    v.as_array().context("spans must be an array")?.iter().map(decode_span).collect()
+}
+
 fn encode_status(status: &ShardStatus) -> Json {
     Json::obj(vec![
         ("queue_depth", Json::from(status.queue_depth)),
@@ -504,13 +560,14 @@ pub fn encode_msg(msg: &ShardMsg) -> Json {
             "hello",
             vec![("service", encode_service_config(service)), ("pso", encode_pso_config(pso))],
         ),
-        ShardMsg::Submit { id, problem, priority, timeout, resume } => envelope(
+        ShardMsg::Submit { id, problem, priority, timeout, resume, trace } => envelope(
             "submit",
             vec![
                 ("id", hex_u64(*id)),
                 ("priority", encode_priority(*priority)),
                 ("timeout", timeout.map_or(Json::Null, Json::from)),
                 ("resume", resume.as_ref().map_or(Json::Null, SwarmSnapshot::to_json)),
+                ("trace", trace.as_ref().map_or(Json::Null, encode_trace_ctx)),
                 ("problem", encode_problem(problem)),
             ],
         ),
@@ -539,6 +596,10 @@ pub fn decode_msg(v: &Json) -> Result<ShardMsg> {
                 None | Some(Json::Null) => None,
                 Some(snap) => Some(SwarmSnapshot::from_json(snap)?),
             },
+            trace: match v.get("trace") {
+                None | Some(Json::Null) => None,
+                Some(ctx) => Some(decode_trace_ctx(ctx)?),
+            },
         },
         "cancel" => ShardMsg::Cancel { id: get_hex_u64(v, "id")? },
         "stats" => ShardMsg::Stats,
@@ -553,11 +614,12 @@ pub fn encode_reply(reply: &ShardReply) -> Json {
         ShardReply::Ready { schema } => {
             envelope("ready", vec![("proto", Json::from(schema.as_str()))])
         }
-        ShardReply::Response { response, status } => envelope(
+        ShardReply::Response { response, status, spans } => envelope(
             "response",
             vec![
                 ("response", encode_response(response)),
                 ("status", status.as_ref().map_or(Json::Null, encode_status)),
+                ("spans", encode_spans(spans)),
             ],
         ),
         ShardReply::Stats(status) => envelope("stats", vec![("status", encode_status(status))]),
@@ -579,6 +641,10 @@ pub fn decode_reply(v: &Json) -> Result<ShardReply> {
             status: match v.get("status") {
                 None | Some(Json::Null) => None,
                 Some(status) => Some(decode_status(status)?),
+            },
+            spans: match v.get("spans") {
+                None | Some(Json::Null) => Vec::new(),
+                Some(spans) => decode_spans(spans)?,
             },
         },
         "stats" => {
@@ -620,6 +686,82 @@ mod tests {
         let svc = ServiceConfig { queue_depth: 7, epoch_quota: Some(3) };
         let back = decode_service_config(&encode_service_config(&svc)).unwrap();
         assert_eq!((back.queue_depth, back.epoch_quota), (7, Some(3)));
+    }
+
+    #[test]
+    fn trace_ctx_round_trips_bit_exactly() {
+        // both words above 2^53: a float codec would corrupt them
+        let ctx = TraceCtx { trace_id: u64::MAX - 7, parent: (1 << 60) + 3 };
+        let back = decode_trace_ctx(&encode_trace_ctx(&ctx)).unwrap();
+        assert_eq!(back, ctx);
+        // and through a full submit frame, including the None case
+        for trace in [Some(ctx), None] {
+            let msg = ShardMsg::Submit {
+                id: u64::MAX - 1,
+                problem: chain_problem(3, 6),
+                priority: Priority::High,
+                timeout: None,
+                resume: None,
+                trace,
+            };
+            let back = decode_msg(&encode_msg(&msg)).unwrap();
+            let ShardMsg::Submit { id, trace: back_trace, .. } = back else {
+                panic!("expected submit")
+            };
+            assert_eq!(id, u64::MAX - 1);
+            assert_eq!(back_trace, trace, "trace context must survive the wire bit-exactly");
+        }
+    }
+
+    #[test]
+    fn reply_spans_round_trip_and_default_empty() {
+        let spans = vec![
+            TraceEvent {
+                id: 42,
+                kind: SpanKind::Admit,
+                at_nanos: (1 << 62) + 9,
+                terminal: false,
+                remote: false,
+                detail: "evicted=0".to_string(),
+            },
+            TraceEvent {
+                id: 42,
+                kind: SpanKind::Slice,
+                at_nanos: (1 << 62) + 10,
+                terminal: false,
+                remote: false,
+                detail: "epochs=15".to_string(),
+            },
+        ];
+        let reply = ShardReply::Response {
+            response: MatchResponse {
+                id: 42,
+                mappings: vec![],
+                best_fitness: -1.0,
+                epochs_run: 15,
+                host_seconds: 0.25,
+                path: MatchPath::NativeEpoch,
+                resumed: false,
+                snapshot: None,
+            },
+            status: None,
+            spans: spans.clone(),
+        };
+        let back = decode_reply(&encode_reply(&reply)).unwrap();
+        let ShardReply::Response { spans: back_spans, .. } = back else {
+            panic!("expected response")
+        };
+        assert_eq!(back_spans, spans);
+        // a reply without the field decodes to no spans (lenient on
+        // absence, strict on malformation — the status precedent)
+        let mut doc = encode_reply(&reply);
+        if let Json::Obj(fields) = &mut doc {
+            fields.retain(|(k, _)| k != "spans");
+        }
+        let ShardReply::Response { spans: none, .. } = decode_reply(&doc).unwrap() else {
+            panic!("expected response")
+        };
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -34,6 +34,8 @@ use anyhow::Result;
 
 use crate::graph::{Csr, Dag};
 use crate::matcher::{build_bitmask, BitMask, Mapping, PsoConfig, SwarmSnapshot};
+use crate::obs::metrics::well;
+use crate::obs::trace::{span, span_with, SpanKind};
 use crate::scheduler::Priority;
 use crate::util::MatF;
 
@@ -561,6 +563,7 @@ impl MatchService {
         opts: SubmitOptions,
     ) -> Result<MatchTicket> {
         let id = opts.id.unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
+        span_with(id, SpanKind::Submit, || format!("priority={}", priority.name()));
         let cancel = CancelToken::new();
         let answered = Arc::new(AtomicBool::new(false));
         let (respond, rx) = mpsc::channel();
@@ -711,6 +714,8 @@ fn service_loop(
                     // shutdown raced the pop: shed instead of serving
                     *inflight.lock().unwrap() = None;
                     let id = sub.id;
+                    well::SERVICE_SHED.inc();
+                    span_with(id, SpanKind::Shed, || "reason=shutdown".to_string());
                     let snapshot = sub.resume.take();
                     answer(sub, MatchResponse::shed(id, snapshot));
                     continue;
@@ -747,6 +752,8 @@ fn admit_one(
         Admission::Shed => {
             stats.lock().unwrap().router = router.stats();
             let id = sub.id;
+            well::SERVICE_SHED.inc();
+            span_with(id, SpanKind::Shed, || "reason=admission".to_string());
             let snapshot = sub.resume.take();
             answer(sub, MatchResponse::shed(id, snapshot));
         }
@@ -754,8 +761,12 @@ fn admit_one(
             let id = sub.id;
             pending.insert(id, sub);
             stats.lock().unwrap().router = router.stats();
+            well::SERVICE_ADMITTED.inc();
+            span(id, SpanKind::Admit);
             if let Some(evicted_id) = evicted {
                 if let Some(mut victim) = pending.remove(&evicted_id) {
+                    well::SERVICE_SHED.inc();
+                    span_with(evicted_id, SpanKind::Shed, || "reason=evicted".to_string());
                     let snapshot = victim.resume.take();
                     answer(victim, MatchResponse::shed(evicted_id, snapshot));
                 }
@@ -772,8 +783,34 @@ fn shed_response(
 ) {
     stats.lock().unwrap().router = router.stats();
     if let Some(mut sub) = pending.remove(&id) {
+        well::SERVICE_SHED.inc();
+        span_with(id, SpanKind::Shed, || "reason=expired".to_string());
         let snapshot = sub.resume.take();
         answer(sub, MatchResponse::shed(id, snapshot));
+    }
+}
+
+/// Record an episode's lifecycle spans and hot-path counters from its
+/// final response — one place, shared by the serve and preempt paths,
+/// so the in-process and worker-hosted services emit identical
+/// timelines.
+fn record_episode_telemetry(resp: &MatchResponse) {
+    if resp.resumed {
+        well::SERVICE_RESUMED.inc();
+        span(resp.id, SpanKind::Resume);
+    }
+    well::MATCHER_EPOCHS.add(resp.epochs_run as u64);
+    span_with(resp.id, SpanKind::Slice, || {
+        format!("epochs={} path={}", resp.epochs_run, resp.path.name())
+    });
+    if resp.path == MatchPath::Cancelled {
+        well::SERVICE_PREEMPTED.inc();
+        span(resp.id, SpanKind::Preempt);
+        if resp.snapshot.is_some() {
+            span_with(resp.id, SpanKind::Snapshot, || {
+                format!("epochs_done={}", resp.epochs_run)
+            });
+        }
     }
 }
 
@@ -797,6 +834,7 @@ fn serve_one(
         let outcome = controller.serve(&req, &sub.cancel);
         MatchResponse::from_outcome(sub.id, outcome)
     };
+    record_episode_telemetry(&response);
     *inflight.lock().unwrap() = None;
     {
         let mut published = stats.lock().unwrap();

@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod graph;
 pub mod lint;
 pub mod matcher;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;

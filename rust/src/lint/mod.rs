@@ -3,7 +3,7 @@
 //! Everything this reproduction claims descends from one property —
 //! bit-exact determinism (serial ≡ threaded PSO epochs, bit-identical
 //! warm-start resume, a wire codec that survives a process hop).  The
-//! five rules in [`rules`] mechanize the invariants that property rests
+//! rules in [`rules`] mechanize the invariants that property rests
 //! on; this module turns them into a tier-1 gate: `tests/lint.rs` runs
 //! the linter over the live tree under plain `cargo test`, and the
 //! `lint` binary (`cargo run --release --bin lint`) walks `src/`,
@@ -43,7 +43,7 @@ use crate::util::json::Json;
 pub use lexer::{scrub, Pragma, Scrub};
 pub use rules::{
     NO_FLOAT_UNWRAP_ORD, NO_HASH_ITER_DETERMINISM, NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT,
-    NO_UNBOUNDED_RETRY, NO_WALLCLOCK_CORE, RULES,
+    NO_UNBOUNDED_RETRY, NO_WALLCLOCK_CORE, OBS_CLOCK_DISCIPLINE, RULES,
 };
 
 /// Schema tag carried by the JSON findings report.

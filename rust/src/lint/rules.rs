@@ -1,4 +1,4 @@
-//! The six `immsched-lint` rules and their module scopes.
+//! The seven `immsched-lint` rules and their module scopes.
 //!
 //! Every rule mechanizes one invariant the reproduction's claims rest
 //! on (see `rust/README.md`, "Invariants enforced by static analysis"):
@@ -45,14 +45,21 @@ pub const NO_LOSSY_WIRE_CAST: &str = "no-lossy-wire-cast";
 /// a `lint:allow` with the termination argument.
 pub const NO_UNBOUNDED_RETRY: &str = "no-unbounded-retry";
 
+/// Wall-clock reads (`Instant::now`/`SystemTime`) inside `src/obs/`
+/// anywhere but `src/obs/clock.rs` — every observability stamp must go
+/// through the `obs::clock` seam so the logical clock can make dumps
+/// and traces bit-exactly reproducible in tests.
+pub const OBS_CLOCK_DISCIPLINE: &str = "obs-clock-discipline";
+
 /// All real rules (pragma-hygiene findings use separate names).
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 7] = [
     NO_FLOAT_UNWRAP_ORD,
     NO_HASH_ITER_DETERMINISM,
     NO_WALLCLOCK_CORE,
     NO_PANIC_TRANSPORT,
     NO_LOSSY_WIRE_CAST,
     NO_UNBOUNDED_RETRY,
+    OBS_CLOCK_DISCIPLINE,
 ];
 
 /// Modules whose iteration order / float ordering reaches results or
@@ -60,6 +67,7 @@ pub const RULES: [&str; 6] = [
 const DETERMINISTIC_MODULES: &[&str] = &[
     "src/matcher/",
     "src/graph/",
+    "src/obs/",
     "src/cluster/wire.rs",
     "src/cluster/policy.rs",
     "src/scheduler/lts_policies.rs",
@@ -79,6 +87,7 @@ const WALLCLOCK_BOUNDARY: &[&str] = &[
     "src/cluster/driver.rs",
     "src/cluster/transport.rs",
     "src/cluster/net/",
+    "src/obs/clock.rs",
 ];
 
 /// The transport layer ([`NO_PANIC_TRANSPORT`]): the wire codec, the
@@ -91,6 +100,7 @@ const TRANSPORT_MODULES: &[&str] = &[
     "src/cluster/supervise.rs",
     "src/cluster/chaos.rs",
     "src/cluster/net/",
+    "src/obs/",
 ];
 
 /// The wire codec itself ([`NO_LOSSY_WIRE_CAST`]).
@@ -131,6 +141,9 @@ pub fn scan(rel: &str, scrub: &Scrub) -> Vec<RawFinding> {
     }
     if in_listed(rel, RETRY_MODULES) {
         unbounded_retry(scrub, &mut out);
+    }
+    if rel.starts_with("src/obs/") && rel != "src/obs/clock.rs" {
+        obs_clock(scrub, &mut out);
     }
     // one construct can trip a rule via several probes (e.g. a sort_by
     // whose callback also unwraps); collapse to one finding per line
@@ -425,4 +438,41 @@ fn has_bound_ident(span: &str) -> bool {
         }
     }
     false
+}
+
+// ---------------------------------------------------------------------------
+// rule 7: obs-clock-discipline
+// ---------------------------------------------------------------------------
+
+/// Same wall-clock token detection as rule 3, but scoped to the
+/// observability subtree and pointing at the `obs::clock` seam — the
+/// two rules stack there on purpose (an `obs/` wall-clock read is both
+/// unreplayable *and* a clock-seam bypass).
+fn obs_clock(scrub: &Scrub, out: &mut Vec<RawFinding>) {
+    let code = &scrub.code;
+    let bytes = code.as_bytes();
+    for at in find_ident(code, "Instant") {
+        let colon = skip_ws(bytes, at + "Instant".len());
+        if bytes.get(colon) == Some(&b':')
+            && bytes.get(colon + 1) == Some(&b':')
+            && ident_at(bytes, skip_ws(bytes, colon + 2)) == b"now"
+        {
+            out.push(RawFinding {
+                line: scrub.line_of(at),
+                rule: OBS_CLOCK_DISCIPLINE,
+                message: "Instant::now() in obs/ bypasses the obs::clock seam; stamp \
+                          through clock::now_nanos() so the logical clock stays honest"
+                    .into(),
+            });
+        }
+    }
+    for at in find_ident(code, "SystemTime") {
+        out.push(RawFinding {
+            line: scrub.line_of(at),
+            rule: OBS_CLOCK_DISCIPLINE,
+            message: "SystemTime in obs/ bypasses the obs::clock seam; stamp through \
+                      clock::now_nanos() so the logical clock stays honest"
+                .into(),
+        });
+    }
 }

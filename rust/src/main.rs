@@ -6,6 +6,7 @@
 //!   match --model M [...]         one interrupt episode on the coordinator
 //!   cluster [--shards N] [...]    open-loop trace against the sharded cluster
 //!   shard-listen [--addr A] [...] host shards behind a TCP/UDS socket
+//!   metrics [--watch MS|--in F]   observability plane: live registry or dump file
 //!   info                          platforms, workloads, artifact registry
 //!
 //! The argument parser is hand-rolled (no clap offline; DESIGN.md §4).
@@ -35,6 +36,7 @@ use immsched::scheduler::{
     build_trace, metrics, ArrivalProcess, FrameworkKind, Priority, SimConfig, Simulator,
     TraceConfig,
 };
+use immsched::util::json::{get_hex_u64, get_str, Json};
 use immsched::util::table::{fmt_time, Table};
 use immsched::workload::{build_model, tile_layer_graph, ModelId, TilingConfig, WorkloadClass};
 
@@ -59,6 +61,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("cluster") => cmd_cluster(&args[1..]),
         Some("shard-worker") => cmd_shard_worker(),
         Some("shard-listen") => cmd_shard_listen(&args[1..]),
+        Some("metrics") => cmd_metrics(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -83,12 +86,21 @@ fn print_help() {
            cluster [--shards N] [--policy round-robin|least-queue|deadline-aware]\n\
                    [--rate R] [--horizon S] [--class simple|middle|complex]\n\
                    [--process poisson|bursty] [--seed S] [--process-shards]\n\
-                   [--connect ADDR[,ADDR...]]\n\
+                   [--connect ADDR[,ADDR...]] [--obs-out FILE]\n\
                                             open-loop trace against a sharded cluster\n\
                                             (--process-shards: one shard-worker child\n\
                                              process per shard over the wire protocol;\n\
                                              --connect: dial running shard-listen\n\
-                                             workers, one shard per address)\n\
+                                             workers, one shard per address;\n\
+                                             --obs-out: enable the observability\n\
+                                             plane and write the flight-recorder\n\
+                                             dump to FILE)\n\
+           metrics [--watch MS] [--in FILE]\n\
+                                            observability plane: run a small demo\n\
+                                            workload and print the metric registry\n\
+                                            (--watch: re-render every MS ms while it\n\
+                                            runs; --in: render an immsched.obs/v1\n\
+                                            dump file instead)\n\
            shard-worker                     host one match-service shard over framed\n\
                                             stdio (spawned by --process-shards; see\n\
                                             rust/README.md for the wire contract)\n\
@@ -112,6 +124,8 @@ fn print_help() {
 
 fn init_logger() {
     immsched::util::logging::set_max_level(immsched::util::logging::Level::Info);
+    // IMMSCHED_LOG (error|warn|info|debug|off) wins over the default
+    immsched::util::logging::init_from_env();
 }
 
 /// Parse `--config F` and repeated `--set key=value` into a Config.
@@ -458,6 +472,7 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     let mut seed = 42u64;
     let mut process_shards = false;
     let mut connect: Vec<String> = Vec::new();
+    let mut obs_out: Option<PathBuf> = None;
     let mut i = 0;
     while i < args.len() {
         let value = |i: usize| args.get(i + 1).context("option needs a value");
@@ -468,6 +483,10 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
             }
             "--connect" => {
                 connect = value(i)?.split(',').map(str::to_string).collect();
+                i += 2;
+            }
+            "--obs-out" => {
+                obs_out = Some(PathBuf::from(value(i)?));
                 i += 2;
             }
             "--shards" => {
@@ -513,6 +532,10 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     let policy: Box<dyn RoutePolicy> = policy_by_name(&policy_name).with_context(|| {
         format!("unknown policy {policy_name:?} (round-robin|least-queue|deadline-aware)")
     })?;
+    if let Some(path) = &obs_out {
+        immsched::obs::enable_all();
+        immsched::obs::recorder::set_dump_path(Some(path.clone()));
+    }
 
     let dcfg = DriverConfig {
         class,
@@ -579,7 +602,157 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
         report.failover.replays,
         report.failover.shed_at_floor
     );
+    if let Some(path) = &obs_out {
+        // final dump so the file exists even on an incident-free run
+        immsched::obs::recorder::dump_to_disk("run-complete");
+        println!("obs: flight-recorder dump written to {}", path.display());
+        print!("{}", immsched::obs::registry().render_text());
+    }
     Ok(())
+}
+
+/// `immsched metrics`: the exposition surface of the observability
+/// plane.  With `--in FILE` it renders a flight-recorder dump; without,
+/// it enables the plane, runs a small in-process demo workload, and
+/// prints the metric registry (with `--watch MS`, re-rendered live at
+/// that cadence while the workload runs).
+fn cmd_metrics(args: &[String]) -> Result<()> {
+    let mut input: Option<PathBuf> = None;
+    let mut watch_ms: Option<u64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let value = |i: usize| args.get(i + 1).context("option needs a value");
+        match args[i].as_str() {
+            "--in" => {
+                input = Some(PathBuf::from(value(i)?));
+                i += 2;
+            }
+            "--watch" => {
+                watch_ms = Some(value(i)?.parse()?);
+                i += 2;
+            }
+            other => bail!("unknown option {other:?}"),
+        }
+    }
+    if let Some(path) = input {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading dump {}", path.display()))?;
+        let doc = Json::parse(&text).context("parsing dump JSON")?;
+        print!("{}", render_obs_dump(&doc)?);
+        return Ok(());
+    }
+
+    immsched::obs::enable_all();
+    let dcfg = DriverConfig {
+        class: WorkloadClass::Simple,
+        process: ArrivalProcess::bursty_default(),
+        arrival_rate: 150.0,
+        horizon: 0.05,
+        seed: 42,
+        ..Default::default()
+    };
+    let schedule = schedule_from_trace(&dcfg);
+    let policy = policy_by_name("deadline-aware").context("built-in policy missing")?;
+    let ccfg = ClusterConfig { shards: 2, ..Default::default() };
+    let cluster = Arc::new(MatchCluster::spawn(ccfg, policy)?);
+    let fleet = SupervisedFleet::new(cluster, SupervisorConfig::default());
+    println!("metrics: driving {} requests through 2 in-process shards", schedule.len());
+    let report = std::thread::scope(|s| {
+        let driver = s.spawn(|| run_open_loop(&fleet, &schedule, &dcfg));
+        if let Some(ms) = watch_ms {
+            while !driver.is_finished() {
+                std::thread::sleep(Duration::from_millis(ms));
+                println!("---- registry ----");
+                print!("{}", immsched::obs::registry().render_text());
+            }
+        }
+        driver.join()
+    });
+    let report = match report {
+        Ok(r) => r?,
+        Err(_) => bail!("driver thread panicked"),
+    };
+    fleet.drain()?;
+    println!(
+        "---- registry (final: {} submitted, {} served) ----",
+        report.submitted(),
+        report.served()
+    );
+    print!("{}", immsched::obs::registry().render_text());
+    Ok(())
+}
+
+/// Human rendering of an `immsched.obs/v1` dump document: the header,
+/// the incident ring, the metric registry, and one line per request
+/// timeline (`*` = terminal event, `~` = ingested from a worker).
+fn render_obs_dump(doc: &Json) -> Result<String> {
+    let schema = get_str(doc, "schema")?;
+    if schema != immsched::obs::OBS_DUMP_SCHEMA {
+        bail!(
+            "unsupported dump schema {schema:?} (this build reads {:?})",
+            immsched::obs::OBS_DUMP_SCHEMA
+        );
+    }
+    let mut out = format!(
+        "flight recorder dump: reason={:?} evicted={}\n",
+        get_str(doc, "reason")?,
+        get_hex_u64(doc, "evicted")?
+    );
+    let events = doc.get("events").and_then(Json::as_array).context("dump has no events")?;
+    let mut t = Table::new("incident ring (oldest first)").header(&["seq", "kind", "fields"]);
+    for ev in events {
+        let fields = match ev.get("fields") {
+            Some(Json::Obj(pairs)) => pairs
+                .iter()
+                .map(|(k, v)| format!("{k}={}", v.as_str().unwrap_or("?")))
+                .collect::<Vec<_>>()
+                .join(" "),
+            _ => String::new(),
+        };
+        t.row(vec![get_hex_u64(ev, "seq")?.to_string(), get_str(ev, "kind")?.into(), fields]);
+    }
+    out.push_str(&t.render());
+    let metrics = doc.get("metrics").context("dump has no metrics")?;
+    let mut t = Table::new("metric registry").header(&["name", "kind", "value"]);
+    if let Json::Obj(entries) = metrics {
+        for (name, m) in entries {
+            let kind = get_str(m, "kind")?;
+            let value = match kind {
+                "histogram" => format!(
+                    "count={} mean={:.1}us",
+                    m.get("count").and_then(Json::as_f64).unwrap_or(0.0),
+                    m.get("mean_us").and_then(Json::as_f64).unwrap_or(0.0)
+                ),
+                _ => format!("{}", m.get("value").and_then(Json::as_f64).unwrap_or(0.0)),
+            };
+            t.row(vec![name.clone(), kind.into(), value]);
+        }
+    }
+    out.push_str(&t.render());
+    if let Some(Json::Obj(timelines)) = doc.get("timelines") {
+        let mut t = Table::new("request timelines").header(&["request", "spans"]);
+        for (id, spans) in timelines {
+            let rendered = spans
+                .as_array()
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| {
+                    let name = get_str(s, "kind").unwrap_or("?");
+                    let remote = s.get("remote").and_then(Json::as_bool).unwrap_or(false);
+                    let terminal = s.get("terminal").and_then(Json::as_bool).unwrap_or(false);
+                    format!(
+                        "{}{name}{}",
+                        if remote { "~" } else { "" },
+                        if terminal { "*" } else { "" }
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(" ");
+            t.row(vec![id.clone(), rendered]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
 }
 
 fn cmd_info() -> Result<()> {

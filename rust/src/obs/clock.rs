@@ -1,0 +1,83 @@
+//! The observability clock seam — the **only** place in `obs/` allowed
+//! to touch the host clock (`immsched-lint` rule 7,
+//! `obs-clock-discipline`; this file sits on the wallclock boundary).
+//!
+//! Spans and recorder events stamp through [`now_nanos`].  In the
+//! default mode that is nanoseconds since the first observability
+//! probe of the process (monotonic, `Instant`-backed — never the
+//! system calendar, so a stamped timeline is immune to NTP steps).
+//! Deterministic tests flip to the *logical* mode, where every read
+//! ticks a counter: timestamps become a replayable total order, so two
+//! same-seed runs produce bit-identical dumps.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+/// Monotonic anchor: the first clock read of the process.
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// When set, [`now_nanos`] serves logical ticks instead of wall time.
+static LOGICAL: AtomicBool = AtomicBool::new(false);
+
+/// The logical tick counter (each read is one tick, so every stamp in
+/// a single-threaded replay is distinct and strictly increasing).
+static TICKS: AtomicU64 = AtomicU64::new(0);
+
+/// Current observability timestamp in nanoseconds.
+///
+/// Wall mode: monotonic nanos since process anchor (saturating at
+/// `u64::MAX` — ~584 years of uptime).  Logical mode: the next tick.
+pub fn now_nanos() -> u64 {
+    if LOGICAL.load(Ordering::Relaxed) {
+        TICKS.fetch_add(1, Ordering::Relaxed).saturating_add(1)
+    } else {
+        let nanos = START.elapsed().as_nanos();
+        u64::try_from(nanos).unwrap_or(u64::MAX)
+    }
+}
+
+/// Switch to the deterministic logical clock and reset it to zero
+/// (tests that compare dumps or timelines byte-for-byte).
+pub fn use_logical() {
+    TICKS.store(0, Ordering::Relaxed);
+    LOGICAL.store(true, Ordering::Relaxed);
+}
+
+/// Switch back to the monotonic wall clock (the default).
+pub fn use_wall() {
+    LOGICAL.store(false, Ordering::Relaxed);
+}
+
+/// Whether the logical clock is active.
+pub fn is_logical() -> bool {
+    LOGICAL.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logical_ticks_are_strictly_increasing() {
+        // tolerant of concurrent unit tests also reading the clock:
+        // assert strict monotonic progression, not absolute values
+        use_logical();
+        assert!(is_logical());
+        let a = now_nanos();
+        let b = now_nanos();
+        let c = now_nanos();
+        assert!(a >= 1 && b > a && c > b, "ticks must strictly increase: {a} {b} {c}");
+        use_wall();
+        assert!(!is_logical());
+    }
+
+    #[test]
+    fn wall_mode_is_monotonic() {
+        use_wall();
+        let a = now_nanos();
+        let b = now_nanos();
+        assert!(b >= a);
+    }
+}

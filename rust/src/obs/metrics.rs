@@ -1,0 +1,522 @@
+//! `obs::metrics`: a process-wide registry of named counters, gauges
+//! and fixed-bucket histograms.
+//!
+//! Design constraints (the same ones the matcher hot path lives
+//! under):
+//!
+//! * **Allocation-free hot path.**  A metric is registered once (one
+//!   lock + one allocation) and returns a cheap [`Counter`] /
+//!   [`Gauge`] / [`Histogram`] handle that is a bare `Arc<AtomicU64>`
+//!   op to touch.  Library call sites keep handles in `Lazy` statics
+//!   (see [`well`]), so steady-state instrumentation is one relaxed
+//!   atomic RMW.
+//! * **Deterministic iteration.**  The registry is a `BTreeMap`, so a
+//!   snapshot always lists metrics in name order — dumps diff cleanly
+//!   and the determinism lint scope covers this file.
+//! * **Namespaced names.**  `service.*` (per-shard admission/engine
+//!   counters), `cluster.*` (routing, failover, resume),
+//!   `net.*` (socket links, redials), `matcher.*` (episode work).
+//!   The pre-existing stats structs publish into these namespaces as
+//!   *views* via the `publish_*` helpers — one registry, one dump
+//!   format, no parallel bookkeeping to drift.
+//!
+//! The global registry records regardless of the enabled flag (the
+//! atomics are the cheap part); the flag gates the *publish* helpers
+//! and is what `--obs-out` flips.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use crate::util::json::Json;
+
+use super::obs_lock;
+
+/// What a registered metric is (drives rendering and dump layout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// A monotone event counter handle.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the value — how a stats-struct *view* publishes its
+    /// externally accumulated total into the registry.
+    pub fn store(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time level (queue depths, live shard counts).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds (inclusive) of the fixed latency buckets, in
+/// microseconds: eight powers of four from 1µs to ~16s, plus the
+/// implicit overflow bucket.  One fixed shape for every histogram
+/// keeps `observe` allocation-free and dumps comparable.
+pub const BUCKET_BOUNDS_US: [u64; 8] = [1, 4, 16, 64, 256, 1_024, 16_384, 262_144];
+
+/// A fixed-bucket histogram of microsecond durations.
+#[derive(Debug)]
+pub struct HistogramCore {
+    buckets: [AtomicU64; BUCKET_BOUNDS_US.len() + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for HistogramCore {
+    fn default() -> Self {
+        Self {
+            buckets: Default::default(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A histogram handle (shared core behind an `Arc`).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    /// Record one duration (microseconds).  Allocation-free: a linear
+    /// probe over eight fixed bounds plus three relaxed RMWs.
+    pub fn observe_us(&self, us: u64) {
+        let mut idx = BUCKET_BOUNDS_US.len();
+        for (i, bound) in BUCKET_BOUNDS_US.iter().enumerate() {
+            if us <= *bound {
+                idx = i;
+                break;
+            }
+        }
+        if let Some(slot) = self.0.buckets.get(idx) {
+            slot.fetch_add(1, Ordering::Relaxed);
+        }
+        self.0.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.0.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean observed duration in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / n as f64
+        }
+    }
+
+    fn bucket_counts(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    /// The registered kind (exposed for dump tooling / mismatch logs).
+    pub(crate) fn kind(&self) -> MetricKind {
+        match self {
+            Metric::Counter(_) => MetricKind::Counter,
+            Metric::Gauge(_) => MetricKind::Gauge,
+            Metric::Histogram(_) => MetricKind::Histogram,
+        }
+    }
+}
+
+/// The registry: name → metric, ordered.  Registration is idempotent
+/// (same name + same kind returns the existing handle), so every layer
+/// can `register` lazily without coordination.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or fetch) a counter.  A name already registered with
+    /// a different kind yields a fresh unregistered handle — the
+    /// mismatch is a bug, but telemetry must never panic a server.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = obs_lock(&self.metrics);
+        match map.entry(name.to_string()).or_insert_with(|| Metric::Counter(Counter::default()))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => {
+                crate::log_warn!("metric {name:?} re-registered with a different kind");
+                Counter::default()
+            }
+        }
+    }
+
+    /// Register (or fetch) a gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut map = obs_lock(&self.metrics);
+        match map.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g.clone(),
+            _ => {
+                crate::log_warn!("metric {name:?} re-registered with a different kind");
+                Gauge::default()
+            }
+        }
+    }
+
+    /// Register (or fetch) a histogram.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut map = obs_lock(&self.metrics);
+        match map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Histogram::default()))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => {
+                crate::log_warn!("metric {name:?} re-registered with a different kind");
+                Histogram::default()
+            }
+        }
+    }
+
+    /// The kind `name` was registered as, if it exists.
+    pub fn kind_of(&self, name: &str) -> Option<MetricKind> {
+        obs_lock(&self.metrics).get(name).map(Metric::kind)
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        obs_lock(&self.metrics).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deterministic JSON snapshot (name-ordered), the `metrics`
+    /// section of an `immsched.obs/v1` dump.
+    pub fn snapshot(&self) -> Json {
+        let map = obs_lock(&self.metrics);
+        let mut fields = Vec::with_capacity(map.len());
+        for (name, metric) in map.iter() {
+            let value = match metric {
+                Metric::Counter(c) => Json::obj(vec![
+                    ("kind", Json::from("counter")),
+                    ("value", Json::from(c.get())),
+                ]),
+                Metric::Gauge(g) => {
+                    let v = g.get();
+                    Json::obj(vec![("kind", Json::from("gauge")), ("value", Json::Num(v as f64))])
+                }
+                Metric::Histogram(h) => Json::obj(vec![
+                    ("kind", Json::from("histogram")),
+                    ("count", Json::from(h.count())),
+                    ("sum_us", Json::from(h.sum_us())),
+                    ("mean_us", Json::from(h.mean_us())),
+                    (
+                        "bounds_us",
+                        Json::Arr(BUCKET_BOUNDS_US.iter().map(|b| Json::from(*b)).collect()),
+                    ),
+                    (
+                        "buckets",
+                        Json::Arr(h.bucket_counts().into_iter().map(Json::from).collect()),
+                    ),
+                ]),
+            };
+            fields.push((name.clone(), value));
+        }
+        Json::Obj(fields)
+    }
+
+    /// Plain-text rendering, name-ordered — the `immsched metrics`
+    /// one-shot output.
+    pub fn render_text(&self) -> String {
+        let map = obs_lock(&self.metrics);
+        let mut out = String::new();
+        let width = map.keys().map(String::len).max().unwrap_or(0);
+        for (name, metric) in map.iter() {
+            let line = match metric {
+                Metric::Counter(c) => format!("{name:<width$}  counter    {}", c.get()),
+                Metric::Gauge(g) => format!("{name:<width$}  gauge      {}", g.get()),
+                Metric::Histogram(h) => format!(
+                    "{name:<width$}  histogram  count={} mean={:.1}us",
+                    h.count(),
+                    h.mean_us()
+                ),
+            };
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// The process-wide registry.
+static GLOBAL: Lazy<Registry> = Lazy::new(Registry::new);
+
+/// Whether the publish helpers are live (`--obs-out` flips this).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process-wide registry (register handles against this).
+pub fn registry() -> &'static Registry {
+    &GLOBAL
+}
+
+/// Well-known hot-path handles, registered once per process.  Call
+/// sites go through these `Lazy` statics so instrumenting a path costs
+/// one relaxed atomic op, never a name lookup.
+pub mod well {
+    use super::{registry, Counter, Histogram, Lazy};
+
+    macro_rules! well_counter {
+        ($(#[$doc:meta])* $ident:ident, $name:literal) => {
+            $(#[$doc])*
+            pub static $ident: Lazy<Counter> = Lazy::new(|| registry().counter($name));
+        };
+    }
+
+    well_counter!(
+        /// Requests admitted by a shard's admission router.
+        SERVICE_ADMITTED, "service.admitted");
+    well_counter!(
+        /// Requests shed at admission (expired or over capacity).
+        SERVICE_SHED, "service.shed");
+    well_counter!(
+        /// Episodes preempted/cancelled at an epoch barrier.
+        SERVICE_PREEMPTED, "service.preempted");
+    well_counter!(
+        /// Episodes that warm-started from a persisted snapshot.
+        SERVICE_RESUMED, "service.resumed");
+    well_counter!(
+        /// Requests routed by the cluster front router.
+        CLUSTER_ROUTED, "cluster.routed");
+    well_counter!(
+        /// Terminal outcomes recorded by the open-loop driver.
+        CLUSTER_TERMINAL, "cluster.terminal");
+    well_counter!(
+        /// In-flight requests replayed off a dead shard.
+        CLUSTER_REPLAYS, "cluster.failover.replays");
+    well_counter!(
+        /// Shards declared dead by the supervision heartbeat.
+        CLUSTER_SHARDS_FAILED, "cluster.failover.shards_failed");
+    well_counter!(
+        /// Requests shed at the capacity floor.
+        CLUSTER_SHED_AT_FLOOR, "cluster.failover.shed_at_floor");
+    well_counter!(
+        /// Severed socket links redialed.
+        NET_REDIALS, "net.redials");
+    well_counter!(
+        /// In-flight submits replayed over a healed link.
+        NET_RESUBMITS, "net.resubmits");
+    well_counter!(
+        /// Chaos faults injected (all kinds).
+        CHAOS_FAULTS, "net.chaos.faults");
+    well_counter!(
+        /// PSO epochs executed across all episodes.
+        MATCHER_EPOCHS, "matcher.epochs");
+
+    /// End-to-end request latency as observed by the driver.
+    pub static CLUSTER_LATENCY: Lazy<Histogram> =
+        Lazy::new(|| registry().histogram("cluster.request_latency_us"));
+}
+
+// ---------------------------------------------------------------------------
+// stats-struct views: publish the pre-existing aggregate structs into
+// the registry under their namespaces
+// ---------------------------------------------------------------------------
+
+/// Publish a [`crate::coordinator::ServiceStats`] snapshot for one
+/// shard (per-shard gauge/counter names under `service.shard<N>.*`).
+pub fn publish_service(shard: usize, stats: &crate::coordinator::ServiceStats) {
+    if !enabled() {
+        return;
+    }
+    let r = registry();
+    let base = format!("service.shard{shard}");
+    r.counter(&format!("{base}.requests")).store(stats.controller.requests);
+    r.counter(&format!("{base}.matched")).store(stats.controller.matched);
+    r.counter(&format!("{base}.cancelled")).store(stats.controller.cancelled);
+    r.counter(&format!("{base}.resumed")).store(stats.controller.resumed);
+    r.counter(&format!("{base}.rejected")).store(stats.controller.rejected);
+    r.counter(&format!("{base}.epochs")).store(stats.controller.epochs_total);
+    r.counter(&format!("{base}.admitted")).store(stats.router.admitted);
+    r.counter(&format!("{base}.shed_expired")).store(stats.router.shed_expired);
+    r.counter(&format!("{base}.shed_capacity")).store(stats.router.shed_capacity);
+    let depth = i64::try_from(stats.router.depth).unwrap_or(i64::MAX);
+    r.gauge(&format!("{base}.queue_depth")).set(depth);
+}
+
+/// Publish a [`crate::cluster::FailoverStats`] snapshot
+/// (`cluster.failover.*`).
+pub fn publish_failover(stats: &crate::cluster::FailoverStats) {
+    if !enabled() {
+        return;
+    }
+    let r = registry();
+    r.counter("cluster.failover.probes").store(stats.probes);
+    r.counter("cluster.failover.probe_failures").store(stats.probe_failures);
+    r.counter("cluster.failover.shards_failed").store(stats.shards_failed);
+    r.counter("cluster.failover.replays").store(stats.replays);
+    r.counter("cluster.failover.respawns").store(stats.respawns);
+    r.counter("cluster.failover.shed_at_floor").store(stats.shed_at_floor);
+}
+
+/// Publish a [`crate::cluster::net::ReconnectStats`] snapshot for one
+/// socket link (`net.*`).
+pub fn publish_reconnect(stats: &crate::cluster::net::ReconnectStats) {
+    if !enabled() {
+        return;
+    }
+    let r = registry();
+    r.counter("net.redials").store(stats.redials);
+    r.counter("net.resubmits").store(stats.resubmits);
+}
+
+/// Publish a [`crate::cluster::ChaosStats`] snapshot (`net.chaos.*`).
+pub fn publish_chaos(stats: &crate::cluster::ChaosStats) {
+    if !enabled() {
+        return;
+    }
+    let r = registry();
+    r.counter("net.chaos.delays").store(stats.delays);
+    r.counter("net.chaos.dropped_replies").store(stats.dropped_replies);
+    r.counter("net.chaos.garbage_frames").store(stats.garbage_frames);
+    r.counter("net.chaos.truncated_frames").store(stats.truncated_frames);
+    r.counter("net.chaos.kills").store(stats.kills);
+    r.counter("net.chaos.unsupported").store(stats.unsupported);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_round_trip() {
+        let r = Registry::new();
+        let c = r.counter("service.admitted");
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        // idempotent registration returns the same underlying cell
+        assert_eq!(r.counter("service.admitted").get(), 3);
+
+        let g = r.gauge("service.queue_depth");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+
+        let h = r.histogram("cluster.latency_us");
+        h.observe_us(3);
+        h.observe_us(100);
+        h.observe_us(10_000_000); // overflow bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum_us(), 10_000_103);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.kind_of("service.admitted"), Some(MetricKind::Counter));
+        assert_eq!(r.kind_of("service.queue_depth"), Some(MetricKind::Gauge));
+        assert_eq!(r.kind_of("cluster.latency_us"), Some(MetricKind::Histogram));
+        assert_eq!(r.kind_of("absent"), None);
+    }
+
+    #[test]
+    fn snapshot_is_name_ordered_and_valid_json() {
+        let r = Registry::new();
+        r.counter("z.last").inc();
+        r.counter("a.first").inc();
+        r.gauge("m.mid").set(-4);
+        let snap = snap_names(&r);
+        assert_eq!(snap, vec!["a.first", "m.mid", "z.last"]);
+        let text = r.snapshot().render();
+        let back = Json::parse(&text).expect("snapshot renders as valid JSON");
+        assert_eq!(
+            back.get("m.mid").and_then(|m| m.get("value")).and_then(Json::as_f64),
+            Some(-4.0)
+        );
+        assert!(r.render_text().lines().count() == 3);
+    }
+
+    fn snap_names(r: &Registry) -> Vec<String> {
+        match r.snapshot() {
+            Json::Obj(fields) => fields.into_iter().map(|(k, _)| k).collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    #[test]
+    fn kind_mismatch_degrades_instead_of_panicking() {
+        crate::util::logging::disable();
+        let r = Registry::new();
+        r.counter("dual");
+        let g = r.gauge("dual");
+        g.set(9);
+        assert_eq!(g.get(), 9, "the orphan handle still works");
+        assert_eq!(r.counter("dual").get(), 0, "the registered counter is untouched");
+        crate::util::logging::set_max_level(crate::util::logging::Level::Warn);
+    }
+
+    #[test]
+    fn histogram_buckets_partition_the_range() {
+        let h = Histogram::default();
+        for bound in BUCKET_BOUNDS_US {
+            h.observe_us(bound);
+        }
+        h.observe_us(BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] + 1);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), BUCKET_BOUNDS_US.len() + 1);
+        assert!(counts.iter().all(|&c| c == 1), "{counts:?}");
+    }
+}

@@ -1,0 +1,88 @@
+//! `obs/`: the unified observability plane — metrics, traces, and a
+//! failure flight recorder, wired through every serving layer.
+//!
+//! The paper's global controller schedules from *observed* runtime
+//! state; the ROADMAP's next directions (predictive preemption,
+//! sparsity-aware routing) both need a measurement plane the ad-hoc
+//! stats structs could not provide.  This module is that plane, built
+//! dependency-free in the `util::json` idiom:
+//!
+//! * [`metrics`] — a process-wide registry of named counters, gauges
+//!   and fixed-bucket histograms.  Handles are pre-registered atomics,
+//!   so the hot path is an `AtomicU64` op with no allocation and no
+//!   lock; iteration is deterministic (ordered maps) per the lint
+//!   rules.  The five pre-existing stats structs (`ControllerStats`,
+//!   `ServiceStats`, `FailoverStats`, `ReconnectStats`, `ChaosStats`)
+//!   publish into it as namespaced views (`service.*`, `cluster.*`,
+//!   `net.*`, `matcher.*`).
+//! * [`trace`] — per-request span timelines covering the full
+//!   lifecycle (submit → admit/shed → route → epoch slices →
+//!   preempt/snapshot/resume → replay/redial → terminal outcome).  A
+//!   [`trace::TraceCtx`] travels in the wire protocol (schema v4), so
+//!   worker-side spans ride back on replies and a multi-host request
+//!   stitches into one timeline.
+//! * [`recorder`] — a bounded ring buffer of recent structured events
+//!   that `SupervisedFleet` dumps as versioned `immsched.obs/v1` JSON
+//!   on dead-shard declaration, shed-at-floor, and chaos-induced
+//!   faults, making every failover postmortem-able.
+//! * [`clock`] — the *only* file in this subtree allowed to read the
+//!   host clock (`immsched-lint` rule 7, `obs-clock-discipline`).
+//!   Everything above stamps through [`clock::now_nanos`], and tests
+//!   flip it to a logical clock for deterministic timelines.
+//!
+//! Everything is off by default and costs one relaxed atomic load per
+//! probe when disabled — the `obs_overhead` block in
+//! `BENCH_cluster.json` tracks the enabled cost as a measured number.
+
+pub mod clock;
+pub mod metrics;
+pub mod recorder;
+pub mod trace;
+
+use std::sync::{Mutex, MutexGuard};
+
+pub use metrics::{registry, MetricKind, Registry};
+pub use recorder::{recorder, FlightRecorder, OBS_DUMP_SCHEMA};
+pub use trace::{tracer, SpanKind, TraceCtx, TraceEvent, Tracer};
+
+/// Enable the whole plane (metrics + tracing + recorder) in one call —
+/// what `--obs-out` and `immsched metrics` flip on.
+pub fn enable_all() {
+    metrics::set_enabled(true);
+    trace::set_enabled(true);
+    recorder::set_enabled(true);
+}
+
+/// Disable the whole plane (the default state).
+pub fn disable_all() {
+    metrics::set_enabled(false);
+    trace::set_enabled(false);
+    recorder::set_enabled(false);
+}
+
+/// Poison-recovering lock acquisition, local to the observability
+/// plane: a panicked writer elsewhere must never take telemetry down
+/// with it (and the no-panic lint scope covers this subtree).
+pub(crate) fn obs_lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enable_toggles_every_layer() {
+        enable_all();
+        assert!(metrics::enabled());
+        assert!(trace::enabled());
+        assert!(recorder::enabled());
+        disable_all();
+        assert!(!metrics::enabled());
+        assert!(!trace::enabled());
+        assert!(!recorder::enabled());
+    }
+}

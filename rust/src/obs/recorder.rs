@@ -1,0 +1,240 @@
+//! `obs::recorder`: a bounded ring-buffer flight recorder.
+//!
+//! The supervision and chaos layers feed it structured events
+//! (heartbeat probe failures, dead-shard declarations, replays,
+//! shed-at-floor decisions, injected faults).  When something goes
+//! wrong — a shard is declared dead, admission hits the capacity
+//! floor, a chaos fault fires — the fleet asks for a [`dump`]: one
+//! versioned `immsched.obs/v1` JSON document carrying the dump reason,
+//! the recent event ring, a full metrics snapshot, and every stitched
+//! request timeline.  That document is what a postmortem reads; the
+//! README's "Observability" section walks through one.
+//!
+//! Like the rest of the plane, the recorder is bounded (old events
+//! fall off the ring; the drop count is part of the dump) and off by
+//! default.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::util::json::{hex_u64, Json};
+
+use super::{clock, metrics, obs_lock, trace};
+
+/// Schema tag of a flight-recorder dump document.
+pub const OBS_DUMP_SCHEMA: &str = "immsched.obs/v1";
+
+/// Default ring capacity (events retained; older ones fall off).
+const DEFAULT_RING_CAP: usize = 1 << 12;
+
+/// One recorded incident event: a kind tag plus ordered key=value
+/// fields, stamped with a sequence number and an `obs::clock` time.
+#[derive(Clone, Debug)]
+pub struct RecorderEvent {
+    /// Monotonic per-recorder sequence number (survives ring
+    /// eviction, so gaps in a dump reveal how much history was lost).
+    pub seq: u64,
+    pub at_nanos: u64,
+    /// Event kind, e.g. `"shard-dead"`, `"replay"`, `"shed-floor"`,
+    /// `"chaos-fault"`, `"redial"`.
+    pub kind: String,
+    /// Ordered key=value detail fields.
+    pub fields: Vec<(String, String)>,
+}
+
+impl RecorderEvent {
+    fn to_json(&self) -> Json {
+        let mut obj = vec![
+            ("seq", hex_u64(self.seq)),
+            ("at_ns", hex_u64(self.at_nanos)),
+            ("kind", Json::from(self.kind.as_str())),
+        ];
+        let mut fields = Vec::with_capacity(self.fields.len());
+        for (k, v) in &self.fields {
+            fields.push((k.clone(), Json::from(v.as_str())));
+        }
+        obj.push(("fields", Json::Obj(fields)));
+        Json::obj(obj)
+    }
+}
+
+/// The bounded ring of recent incident events.
+pub struct FlightRecorder {
+    ring: Mutex<VecDeque<RecorderEvent>>,
+    cap: usize,
+    next_seq: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_RING_CAP)
+    }
+}
+
+impl FlightRecorder {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            ring: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+            next_seq: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    /// Append one event, evicting the oldest past capacity.
+    pub fn record(&self, kind: &str, fields: Vec<(String, String)>) {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let ev = RecorderEvent { seq, at_nanos: clock::now_nanos(), kind: kind.to_string(), fields };
+        let mut ring = obs_lock(&self.ring);
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        obs_lock(&self.ring).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events that fell off the ring.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the retained events, oldest first.
+    pub fn events(&self) -> Vec<RecorderEvent> {
+        obs_lock(&self.ring).iter().cloned().collect()
+    }
+
+    /// Forget everything (tests; paired bench runs).
+    pub fn clear(&self) {
+        obs_lock(&self.ring).clear();
+        self.next_seq.store(0, Ordering::Relaxed);
+        self.evicted.store(0, Ordering::Relaxed);
+    }
+
+    /// Build one `immsched.obs/v1` dump document: the reason, this
+    /// ring, a metrics snapshot, and every request timeline.
+    pub fn dump(&self, reason: &str) -> Json {
+        Json::obj(vec![
+            ("schema", Json::from(OBS_DUMP_SCHEMA)),
+            ("reason", Json::from(reason)),
+            ("at_ns", hex_u64(clock::now_nanos())),
+            ("evicted", hex_u64(self.evicted())),
+            (
+                "events",
+                Json::Arr(obs_lock(&self.ring).iter().map(RecorderEvent::to_json).collect()),
+            ),
+            ("metrics", metrics::registry().snapshot()),
+            ("timelines", trace::tracer().timelines_json()),
+        ])
+    }
+}
+
+/// The process flight recorder.
+static GLOBAL: Lazy<FlightRecorder> = Lazy::new(FlightRecorder::default);
+
+/// Gate for [`record`]: disabled recording costs one relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Where [`dump_to_disk`] writes (set by `--obs-out`); empty = nowhere.
+static DUMP_PATH: Lazy<Mutex<Option<PathBuf>>> = Lazy::new(|| Mutex::new(None));
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process flight recorder (dump tooling and tests).
+pub fn recorder() -> &'static FlightRecorder {
+    &GLOBAL
+}
+
+/// Record an incident event (when the recorder is enabled).  Fields
+/// are `(key, value)` pairs; build them lazily at the call site with
+/// `vec![...]` only after checking nothing — this function gates.
+pub fn record(kind: &str, fields: Vec<(String, String)>) {
+    if enabled() {
+        GLOBAL.record(kind, fields);
+    }
+}
+
+/// Set (or clear) the on-disk dump destination.
+pub fn set_dump_path(path: Option<PathBuf>) {
+    *obs_lock(&DUMP_PATH) = path;
+}
+
+/// The configured dump destination, if any.
+pub fn dump_path() -> Option<PathBuf> {
+    obs_lock(&DUMP_PATH).clone()
+}
+
+/// Write a dump document for `reason` to the configured path (latest
+/// dump wins — one file, always the most recent incident).  No-op
+/// without a path; IO failures are logged, never fatal: telemetry
+/// must not take the serving path down.
+pub fn dump_to_disk(reason: &str) {
+    let Some(path) = dump_path() else { return };
+    write_dump(&path, reason);
+}
+
+fn write_dump(path: &Path, reason: &str) {
+    let doc = GLOBAL.dump(reason).render();
+    if let Err(err) = std::fs::write(path, doc) {
+        crate::log_warn!("obs: failed to write dump to {}: {err}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts() {
+        let r = FlightRecorder::with_capacity(2);
+        r.record("a", vec![]);
+        r.record("b", vec![("shard".into(), "1".into())]);
+        r.record("c", vec![]);
+        let events = r.events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, "b");
+        assert_eq!(events[1].kind, "c");
+        assert_eq!(events[1].seq, 2);
+        assert_eq!(r.evicted(), 1);
+        r.clear();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn dump_is_versioned_and_parses() {
+        let r = FlightRecorder::with_capacity(8);
+        r.record("shard-dead", vec![("shard".into(), "0".into()), ("why".into(), "probe".into())]);
+        let doc = r.dump("test-incident").render();
+        let back = Json::parse(&doc).expect("valid JSON");
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(OBS_DUMP_SCHEMA));
+        assert_eq!(back.get("reason").and_then(Json::as_str), Some("test-incident"));
+        let events = back.get("events").and_then(Json::as_array).expect("events");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("kind").and_then(Json::as_str), Some("shard-dead"));
+        assert_eq!(
+            events[0].get("fields").and_then(|f| f.get("shard")).and_then(Json::as_str),
+            Some("0")
+        );
+        assert!(back.get("metrics").is_some());
+        assert!(back.get("timelines").is_some());
+    }
+}

@@ -1,0 +1,434 @@
+//! `obs::trace`: per-request span timelines across hosts.
+//!
+//! Every layer a request passes through appends one [`TraceEvent`] to
+//! the process tracer: submit → admit/shed → route → epoch slices →
+//! preempt/snapshot/resume → replay/redial → terminal outcome.  The
+//! request id is the correlation key (cluster ids are globally unique,
+//! and the wire protocol echoes them on every reply).
+//!
+//! Across a process or host boundary a [`TraceCtx`] travels inside the
+//! `submit` frame (wire schema v4) and the worker's own spans ride
+//! back on the `response` frame, where the router ingests them with
+//! the `remote` flag set — one request, one stitched timeline, no
+//! clock agreement required (worker stamps are worker-local; ordering
+//! within a side is what matters, and the slice/admit structure is
+//! what postmortems read).
+//!
+//! Terminal accounting is the *driver's* job: a preempted slice is not
+//! the end of a request's life (the driver resubmits it), so only
+//! [`terminal`] marks an event terminal, and the conservation property
+//! (`tests/obs.rs`) is "every submitted id has exactly one terminal
+//! event".
+//!
+//! All stamps go through [`super::clock`] (lint rule 7 bans any other
+//! clock in this subtree).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::util::json::{hex_u64, Json};
+
+use super::{clock, obs_lock};
+
+/// One step of a request's lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// The request entered a service's submission path.
+    Submit,
+    /// Admission accepted it into the queue.
+    Admit,
+    /// Admission (or the fleet's capacity floor) shed it.
+    Shed,
+    /// The cluster router picked a shard.
+    Route,
+    /// One epoch slice executed (detail carries the epoch count).
+    Slice,
+    /// The episode was interrupted at an epoch barrier.
+    Preempt,
+    /// A warm-start snapshot was captured with the response.
+    Snapshot,
+    /// The episode warm-started from a persisted snapshot.
+    Resume,
+    /// Supervision replayed the request off a dead shard.
+    Replay,
+    /// A severed socket link was redialed.
+    Redial,
+    /// An in-flight submit was resubmitted over a healed link.
+    Resubmit,
+    /// A chaos fault was injected into this request's submission.
+    Fault,
+    /// Terminal: answered with a match / exhausted budget.
+    Done,
+    /// Terminal: the request ended cancelled.
+    Cancelled,
+    /// Terminal: the request could not be served (transport error).
+    Failed,
+}
+
+impl SpanKind {
+    /// Stable wire / dump name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Submit => "submit",
+            SpanKind::Admit => "admit",
+            SpanKind::Shed => "shed",
+            SpanKind::Route => "route",
+            SpanKind::Slice => "slice",
+            SpanKind::Preempt => "preempt",
+            SpanKind::Snapshot => "snapshot",
+            SpanKind::Resume => "resume",
+            SpanKind::Replay => "replay",
+            SpanKind::Redial => "redial",
+            SpanKind::Resubmit => "resubmit",
+            SpanKind::Fault => "fault",
+            SpanKind::Done => "done",
+            SpanKind::Cancelled => "cancelled",
+            SpanKind::Failed => "failed",
+        }
+    }
+
+    /// Inverse of [`Self::name`] (wire decode).
+    pub fn from_name(name: &str) -> Option<SpanKind> {
+        Some(match name {
+            "submit" => SpanKind::Submit,
+            "admit" => SpanKind::Admit,
+            "shed" => SpanKind::Shed,
+            "route" => SpanKind::Route,
+            "slice" => SpanKind::Slice,
+            "preempt" => SpanKind::Preempt,
+            "snapshot" => SpanKind::Snapshot,
+            "resume" => SpanKind::Resume,
+            "replay" => SpanKind::Replay,
+            "redial" => SpanKind::Redial,
+            "resubmit" => SpanKind::Resubmit,
+            "fault" => SpanKind::Fault,
+            "done" => SpanKind::Done,
+            "cancelled" => SpanKind::Cancelled,
+            "failed" => SpanKind::Failed,
+            _ => return None,
+        })
+    }
+}
+
+/// The trace context that crosses the wire inside a `submit` frame.
+/// Both words are full u64s and travel as 16-digit hex, so the context
+/// round-trips bit-exactly (ids and random trace words may exceed
+/// 2^53).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// The timeline this request belongs to (the cluster uses the
+    /// globally unique request id).
+    pub trace_id: u64,
+    /// The span that caused this hop (0 = root).
+    pub parent: u64,
+}
+
+/// One recorded lifecycle event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Request id (the correlation key).
+    pub id: u64,
+    pub kind: SpanKind,
+    /// Stamp from [`clock::now_nanos`] — monotonic process-local
+    /// nanos, or logical ticks under the deterministic clock.
+    pub at_nanos: u64,
+    /// Exactly one terminal event per request (driver-recorded).
+    pub terminal: bool,
+    /// Ingested from a worker reply rather than recorded locally.
+    pub remote: bool,
+    /// Free-form `key=value` detail (shard, epoch counts, reasons).
+    pub detail: String,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::from(self.kind.name())),
+            ("at_ns", hex_u64(self.at_nanos)),
+            ("terminal", Json::from(self.terminal)),
+            ("remote", Json::from(self.remote)),
+            ("detail", Json::from(self.detail.as_str())),
+        ])
+    }
+}
+
+/// A bounded event store: per-request timelines in insertion order.
+pub struct Tracer {
+    events: Mutex<Vec<TraceEvent>>,
+    cap: usize,
+    dropped: AtomicU64,
+}
+
+/// Default capacity of the process tracer (events, not requests).
+const DEFAULT_TRACER_CAP: usize = 1 << 16;
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_TRACER_CAP)
+    }
+}
+
+impl Tracer {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { events: Mutex::new(Vec::new()), cap: cap.max(1), dropped: AtomicU64::new(0) }
+    }
+
+    /// Append one event (dropped, and counted, past the capacity cap —
+    /// telemetry must never grow without bound in a long-lived server).
+    pub fn push(&self, ev: TraceEvent) {
+        let mut events = obs_lock(&self.events);
+        if events.len() >= self.cap {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        events.push(ev);
+    }
+
+    /// Record a local event now.
+    pub fn record(&self, id: u64, kind: SpanKind, terminal: bool, detail: String) {
+        self.push(TraceEvent {
+            id,
+            kind,
+            at_nanos: clock::now_nanos(),
+            terminal,
+            remote: false,
+            detail,
+        });
+    }
+
+    /// Ingest worker-side events for `id` from a reply (stamps are
+    /// worker-local; the `remote` flag marks them as such).
+    pub fn ingest_remote(&self, events: Vec<TraceEvent>) {
+        for mut ev in events {
+            ev.remote = true;
+            self.push(ev);
+        }
+    }
+
+    /// Drain and return every event for `id` — the worker side of the
+    /// reply piggyback (events leave the worker tracer so a long-lived
+    /// worker does not re-ship or accumulate them).
+    pub fn take_for(&self, id: u64) -> Vec<TraceEvent> {
+        let mut events = obs_lock(&self.events);
+        let mut taken = Vec::new();
+        let mut kept = Vec::with_capacity(events.len());
+        for ev in events.drain(..) {
+            if ev.id == id {
+                taken.push(ev);
+            } else {
+                kept.push(ev);
+            }
+        }
+        *events = kept;
+        taken
+    }
+
+    /// The timeline of one request, in insertion order.
+    pub fn timeline(&self, id: u64) -> Vec<TraceEvent> {
+        obs_lock(&self.events).iter().filter(|e| e.id == id).cloned().collect()
+    }
+
+    /// Every timeline, keyed by request id (deterministic order).
+    pub fn timelines(&self) -> BTreeMap<u64, Vec<TraceEvent>> {
+        let mut out: BTreeMap<u64, Vec<TraceEvent>> = BTreeMap::new();
+        for ev in obs_lock(&self.events).iter() {
+            out.entry(ev.id).or_default().push(ev.clone());
+        }
+        out
+    }
+
+    /// Terminal events per request id (the conservation property
+    /// counts these — exactly one per submitted id).
+    pub fn terminal_counts(&self) -> BTreeMap<u64, usize> {
+        let mut out: BTreeMap<u64, usize> = BTreeMap::new();
+        for ev in obs_lock(&self.events).iter() {
+            if ev.terminal {
+                *out.entry(ev.id).or_default() += 1;
+            }
+        }
+        out
+    }
+
+    /// Events recorded (and retained) so far.
+    pub fn len(&self) -> usize {
+        obs_lock(&self.events).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events discarded past the capacity cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Forget everything (tests; the bench's paired overhead runs).
+    pub fn clear(&self) {
+        obs_lock(&self.events).clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// The `timelines` section of an `immsched.obs/v1` dump: request
+    /// id (hex) → event array, id-ordered.
+    pub fn timelines_json(&self) -> Json {
+        let mut fields = Vec::new();
+        for (id, events) in self.timelines() {
+            fields.push((
+                format!("{id:016x}"),
+                Json::Arr(events.iter().map(TraceEvent::to_json).collect()),
+            ));
+        }
+        Json::Obj(fields)
+    }
+}
+
+/// The process tracer.
+static GLOBAL: Lazy<Tracer> = Lazy::new(Tracer::default);
+
+/// Gate for the convenience recorders below: disabled tracing costs
+/// one relaxed atomic load per probe, no lock, no allocation.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process tracer (direct access for dump tooling and tests).
+pub fn tracer() -> &'static Tracer {
+    &GLOBAL
+}
+
+/// Record a span with no detail (when tracing is enabled).
+pub fn span(id: u64, kind: SpanKind) {
+    if enabled() {
+        GLOBAL.record(id, kind, false, String::new());
+    }
+}
+
+/// Record a span with lazily built detail — the closure only runs (and
+/// allocates) when tracing is enabled.
+pub fn span_with(id: u64, kind: SpanKind, detail: impl FnOnce() -> String) {
+    if enabled() {
+        GLOBAL.record(id, kind, false, detail());
+    }
+}
+
+/// Record the *terminal* event of a request (driver / fleet-shed
+/// paths only — exactly one per request life).
+pub fn terminal(id: u64, kind: SpanKind, detail: impl FnOnce() -> String) {
+    if enabled() {
+        GLOBAL.record(id, kind, true, detail());
+    }
+}
+
+/// Ingest worker-side spans from a reply into the process tracer.
+pub fn ingest_remote(events: Vec<TraceEvent>) {
+    if enabled() && !events.is_empty() {
+        GLOBAL.ingest_remote(events);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_names_round_trip() {
+        for kind in [
+            SpanKind::Submit,
+            SpanKind::Admit,
+            SpanKind::Shed,
+            SpanKind::Route,
+            SpanKind::Slice,
+            SpanKind::Preempt,
+            SpanKind::Snapshot,
+            SpanKind::Resume,
+            SpanKind::Replay,
+            SpanKind::Redial,
+            SpanKind::Resubmit,
+            SpanKind::Fault,
+            SpanKind::Done,
+            SpanKind::Cancelled,
+            SpanKind::Failed,
+        ] {
+            assert_eq!(SpanKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(SpanKind::from_name("not-a-kind"), None);
+    }
+
+    #[test]
+    fn timelines_group_by_id_and_keep_order() {
+        let t = Tracer::with_capacity(64);
+        t.record(2, SpanKind::Submit, false, String::new());
+        t.record(1, SpanKind::Submit, false, String::new());
+        t.record(2, SpanKind::Admit, false, "evicted=0".into());
+        t.record(1, SpanKind::Done, true, String::new());
+        let lines = t.timelines();
+        assert_eq!(lines.keys().copied().collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(
+            lines[&2].iter().map(|e| e.kind).collect::<Vec<_>>(),
+            vec![SpanKind::Submit, SpanKind::Admit]
+        );
+        assert_eq!(t.terminal_counts().get(&1), Some(&1));
+        assert_eq!(t.terminal_counts().get(&2), None);
+    }
+
+    #[test]
+    fn take_for_drains_only_that_request() {
+        let t = Tracer::with_capacity(64);
+        t.record(5, SpanKind::Submit, false, String::new());
+        t.record(6, SpanKind::Submit, false, String::new());
+        t.record(5, SpanKind::Done, true, String::new());
+        let taken = t.take_for(5);
+        assert_eq!(taken.len(), 2);
+        assert_eq!(t.len(), 1);
+        assert!(t.timeline(5).is_empty());
+        assert_eq!(t.timeline(6).len(), 1);
+    }
+
+    #[test]
+    fn capacity_cap_drops_and_counts() {
+        let t = Tracer::with_capacity(2);
+        for i in 0..5u64 {
+            t.record(i, SpanKind::Submit, false, String::new());
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ingest_marks_events_remote() {
+        let t = Tracer::with_capacity(8);
+        t.ingest_remote(vec![TraceEvent {
+            id: 9,
+            kind: SpanKind::Admit,
+            at_nanos: 1,
+            terminal: false,
+            remote: false,
+            detail: String::new(),
+        }]);
+        assert!(t.timeline(9)[0].remote);
+    }
+
+    #[test]
+    fn timelines_json_is_hex_keyed_and_parses() {
+        let t = Tracer::with_capacity(8);
+        t.record(u64::MAX, SpanKind::Done, true, "shard=1".into());
+        let doc = t.timelines_json().render();
+        let back = Json::parse(&doc).expect("valid JSON");
+        let line = back.get("ffffffffffffffff").and_then(Json::as_array).expect("hex key");
+        assert_eq!(line[0].get("kind").and_then(Json::as_str), Some("done"));
+        assert_eq!(line[0].get("terminal").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -624,6 +624,45 @@ pub fn perf_trajectory(
     Ok((t, xs, vec![speedups, epoch_us]))
 }
 
+/// The observability table: per tracked cluster entry, what the
+/// measurement plane itself costs (the bench's paired-run
+/// `obs_overhead` block) next to the incident counters it exists to
+/// explain.  Entries from before the plane existed render as `-`.
+pub fn obs_trajectory(cluster_text: &str) -> anyhow::Result<Table> {
+    use crate::util::json::Json;
+    let entries = load_bench_entries(cluster_text, CLUSTER_BENCH_SCHEMA)?;
+    let mut t = Table::new("observability plane (per tracked cluster entry)").header(&[
+        "entry",
+        "label",
+        "transport",
+        "mean lat (obs off)",
+        "mean lat (obs on)",
+        "overhead",
+        "shard failures",
+        "replays",
+        "sheds at floor",
+    ]);
+    for (i, e) in entries.iter().enumerate() {
+        let obs = e.get("obs_overhead");
+        let failover = e.get("failover");
+        let onum = |k: &str| obs.and_then(|o| o.get(k)).and_then(Json::as_f64);
+        let fnum = |k: &str| failover.and_then(|f| f.get(k)).and_then(Json::as_f64);
+        let count = |v: Option<f64>| v.map_or("-".into(), |x| format!("{x}"));
+        t.row(vec![
+            i.to_string(),
+            e.get("label").and_then(Json::as_str).unwrap_or("?").into(),
+            e.get("transport").and_then(Json::as_str).unwrap_or("?").into(),
+            onum("mean_latency_off_s").map_or("-".into(), fmt_time),
+            onum("mean_latency_on_s").map_or("-".into(), fmt_time),
+            onum("overhead_pct").map_or("-".into(), |p| format!("{p:+.2}%")),
+            count(fnum("shard_failures")),
+            count(fnum("replays")),
+            count(fnum("shed_at_floor")),
+        ]);
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -731,6 +770,27 @@ mod tests {
         assert_eq!(entries.len(), 1);
         assert_eq!(entries[0].get("label").and_then(Json::as_str), Some("real-run"));
         std::fs::remove_file(path).ok();
+    }
+
+    /// The observability table renders overhead + incident counters,
+    /// and degrades to `-` on entries that predate the plane.
+    #[test]
+    fn obs_trajectory_renders_overhead_and_incidents() {
+        let cluster = r#"{"schema": "immsched.bench_cluster/v1", "entries": [
+            {"label": "pre-obs", "transport": "in-process"},
+            {"label": "with-obs", "transport": "socket",
+             "obs_overhead": {"mean_latency_off_s": 0.0100,
+                              "mean_latency_on_s": 0.0101,
+                              "overhead_pct": 1.0},
+             "failover": {"shard_failures": 1, "replays": 3, "shed_at_floor": 0}}
+        ]}"#;
+        let text = obs_trajectory(cluster).expect("obs table").render();
+        assert!(text.contains("with-obs"), "{text}");
+        assert!(text.contains("+1.00%"), "{text}");
+        assert!(text.contains("socket"), "{text}");
+        // the pre-plane entry renders placeholders, not garbage
+        let pre = text.lines().find(|l| l.contains("pre-obs")).expect("pre-obs row");
+        assert!(pre.contains('-'), "{pre}");
     }
 
     /// The retired single-run v1 layout must fail loudly, never merge.

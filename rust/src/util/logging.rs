@@ -4,9 +4,23 @@
 //!
 //! Library code emits through the [`crate::log_error!`],
 //! [`crate::log_warn!`], [`crate::log_info!`] and [`crate::log_debug!`]
-//! macros; binaries pick the verbosity with [`set_max_level`]. The
-//! default level is [`Level::Warn`] so degradation messages (missing
-//! artifacts, fallback paths) stay visible without any setup.
+//! macros; binaries pick the verbosity with [`set_max_level`] (or let
+//! the user override it via the `IMMSCHED_LOG` environment variable —
+//! see [`init_from_env`]). The default level is [`Level::Warn`] so
+//! degradation messages (missing artifacts, fallback paths) stay
+//! visible without any setup.
+//!
+//! Every macro also takes a structured form — a leading brace block of
+//! `key = value` fields rendered as trailing `key=value` pairs:
+//!
+//! ```text
+//! crate::log_warn!({ shard = shard, attempt = n }, "redial failed: {e:#}");
+//! // → [WARN] redial failed: ... shard=2 attempt=3
+//! ```
+//!
+//! Fields are greppable and machine-splittable (the flight-recorder
+//! dump uses the same `key=value` convention), and the field
+//! expressions only evaluate when the level is enabled.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -29,6 +43,17 @@ impl Level {
             Level::Debug => "DEBUG",
         }
     }
+
+    /// Parse a level name (the `IMMSCHED_LOG` vocabulary).
+    pub fn from_name(name: &str) -> Option<Level> {
+        Some(match name {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            _ => return None,
+        })
+    }
 }
 
 /// 0 = everything off; otherwise the numeric value of the max [`Level`].
@@ -49,6 +74,23 @@ pub fn enabled(level: Level) -> bool {
     level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
+/// Apply the `IMMSCHED_LOG` environment override, if set: one of
+/// `error`, `warn`, `info`, `debug`, or `off` (case-insensitive).
+/// Binaries call this once at startup; an unknown value is itself
+/// worth a warning rather than a silent default.
+pub fn init_from_env() {
+    let Ok(val) = std::env::var("IMMSCHED_LOG") else { return };
+    match val.to_ascii_lowercase().as_str() {
+        "off" | "none" | "0" => disable(),
+        other => match Level::from_name(other) {
+            Some(level) => set_max_level(level),
+            None => {
+                eprintln!("[WARN] IMMSCHED_LOG={val:?} is not error|warn|info|debug|off; ignored");
+            }
+        },
+    }
+}
+
 /// Emit one record to stderr (use the macros instead of calling this
 /// directly).
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
@@ -57,32 +99,63 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Emit one structured record: the message, then ordered `key=value`
+/// fields (use the macros' brace form instead of calling this
+/// directly).
+pub fn log_kv(level: Level, args: std::fmt::Arguments<'_>, fields: &[(&str, String)]) {
+    if enabled(level) {
+        let mut line = format!("[{}] {}", level.tag(), args);
+        for (key, value) in fields {
+            line.push(' ');
+            line.push_str(key);
+            line.push('=');
+            line.push_str(value);
+        }
+        eprintln!("{line}");
+    }
+}
+
+/// Shared expansion for the four leveled macros: plain form forwards
+/// `format_args!`; brace form evaluates fields only when the level is
+/// enabled, then emits through [`log_kv`].
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __log_at {
+    ($level:ident, { $($k:ident = $v:expr),+ $(,)? }, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::$level) {
+            $crate::util::logging::log_kv(
+                $crate::util::logging::Level::$level,
+                format_args!($($arg)*),
+                &[$((stringify!($k), format!("{}", $v))),+],
+            );
+        }
+    };
+    ($level:ident, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::$level,
+            format_args!($($arg)*),
+        )
+    };
+}
+
 #[macro_export]
 macro_rules! log_error {
-    ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*))
-    };
+    ($($arg:tt)*) => { $crate::__log_at!(Error, $($arg)*) };
 }
 
 #[macro_export]
 macro_rules! log_warn {
-    ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*))
-    };
+    ($($arg:tt)*) => { $crate::__log_at!(Warn, $($arg)*) };
 }
 
 #[macro_export]
 macro_rules! log_info {
-    ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*))
-    };
+    ($($arg:tt)*) => { $crate::__log_at!(Info, $($arg)*) };
 }
 
 #[macro_export]
 macro_rules! log_debug {
-    ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*))
-    };
+    ($($arg:tt)*) => { $crate::__log_at!(Debug, $($arg)*) };
 }
 
 #[cfg(test)]
@@ -94,6 +167,50 @@ mod tests {
         assert!(Level::Error < Level::Warn);
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn level_names_round_trip() {
+        for (name, level) in [
+            ("error", Level::Error),
+            ("warn", Level::Warn),
+            ("info", Level::Info),
+            ("debug", Level::Debug),
+        ] {
+            assert_eq!(Level::from_name(name), Some(level));
+        }
+        assert_eq!(Level::from_name("trace"), None);
+        assert_eq!(Level::from_name("WARN"), None); // callers lowercase first
+    }
+
+    #[test]
+    fn structured_arm_renders_trailing_fields() {
+        // the macros print to stderr, so exercise the rendering path
+        // that log_kv uses directly
+        let shard = 2usize;
+        let fields: &[(&str, String)] =
+            &[("shard", format!("{shard}")), ("attempt", format!("{}", 3))];
+        let mut line = format!("[{}] {}", Level::Warn.tag(), format_args!("redial failed"));
+        for (key, value) in fields {
+            line.push(' ');
+            line.push_str(key);
+            line.push('=');
+            line.push_str(value);
+        }
+        assert_eq!(line, "[WARN] redial failed shard=2 attempt=3");
+    }
+
+    #[test]
+    fn structured_arm_compiles_against_every_level() {
+        // typecheck-only: the branch never runs, so the global level is
+        // untouched and parallel tests see no cross-talk
+        if false {
+            crate::log_error!({ code = 7 }, "boom");
+            crate::log_warn!({ shard = 1, attempt = 2 }, "redial failed");
+            crate::log_info!({ addr = "127.0.0.1:0" }, "listening");
+            crate::log_debug!({ id = 42u64 }, "span {}", "open");
+            crate::log_warn!("plain form still works: {}", 1);
+        }
     }
 
     #[test]

@@ -8,7 +8,8 @@ use std::path::Path;
 
 use immsched::lint::{
     lint_source, lint_tree, Finding, BAD_PRAGMA, NO_FLOAT_UNWRAP_ORD, NO_HASH_ITER_DETERMINISM,
-    NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT, NO_UNBOUNDED_RETRY, NO_WALLCLOCK_CORE, UNUSED_PRAGMA,
+    NO_LOSSY_WIRE_CAST, NO_PANIC_TRANSPORT, NO_UNBOUNDED_RETRY, NO_WALLCLOCK_CORE,
+    OBS_CLOCK_DISCIPLINE, UNUSED_PRAGMA,
 };
 
 fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
@@ -365,6 +366,71 @@ fn age() -> f64 {
 }
 "#;
     assert!(lint_source("src/cluster/net/registry_fixture.rs", clocky).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// rule 7: obs-clock-discipline (src/obs/ minus the clock seam itself)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn obs_wallclock_trips_both_the_core_and_clock_discipline_rules() {
+    let clocky = r#"
+fn stamp() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}
+"#;
+    // an obs/ file (other than clock.rs) reading the wall clock is both
+    // unreplayable (rule 3) and a clock-seam bypass (rule 7)
+    for path in ["src/obs/trace.rs", "src/obs/recorder.rs", "src/obs/fixture.rs"] {
+        let mut rules = rules_of(&lint_source(path, clocky));
+        rules.sort_unstable();
+        assert_eq!(rules, vec![NO_WALLCLOCK_CORE, OBS_CLOCK_DISCIPLINE], "{path}");
+    }
+    let systime = r#"use std::time::SystemTime;"#;
+    let mut rules = rules_of(&lint_source("src/obs/metrics.rs", systime));
+    rules.sort_unstable();
+    assert_eq!(rules, vec![NO_WALLCLOCK_CORE, OBS_CLOCK_DISCIPLINE]);
+}
+
+#[test]
+fn obs_clock_seam_owns_the_host_clock() {
+    let clocky = r#"
+fn anchor() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"#;
+    // clock.rs IS the seam: on the wallclock boundary and outside the
+    // discipline scope, so neither rule fires there
+    assert!(lint_source("src/obs/clock.rs", clocky).is_empty());
+}
+
+#[test]
+fn obs_subtree_joins_the_panic_and_determinism_scopes() {
+    let panicky = r#"
+fn render(fields: &Vec<u8>, i: usize) -> u8 {
+    fields[i]
+}
+"#;
+    let found = lint_source("src/obs/metrics.rs", panicky);
+    assert_eq!(rules_of(&found), vec![NO_PANIC_TRANSPORT], "{found:?}");
+
+    let hashy = r#"use std::collections::HashMap;"#;
+    let found = lint_source("src/obs/trace.rs", hashy);
+    assert_eq!(rules_of(&found), vec![NO_HASH_ITER_DETERMINISM], "{found:?}");
+}
+
+#[test]
+fn obs_clock_discipline_pragma_is_honored() {
+    let pledged = r#"
+fn stamp() -> u64 {
+    // lint:allow(obs-clock-discipline): fixture proves the pragma routes to rule 7
+    // lint:allow(no-wallclock-core): same site, the stacked rule 3 finding
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}
+"#;
+    assert!(lint_source("src/obs/fixture.rs", pledged).is_empty());
 }
 
 // ---------------------------------------------------------------------------

@@ -396,3 +396,67 @@ fn registry_routes_only_to_heartbeat_live_workers() {
     assert_eq!(registry.evict_stale(), 1, "the silent worker is garbage-collected");
     assert!(!registry.heartbeat(silent_id), "an evicted worker cannot heartbeat back");
 }
+
+/// Observability acceptance: one request over a real process hop
+/// (SocketShard → spawned `immsched shard-listen` worker) stitches
+/// into a single timeline — the router's local spans plus the worker's
+/// own spans riding back on the reply with the `remote` flag set — and
+/// the trace context survives the wire bit-exactly even for ids above
+/// 2^53 (where an f64 round-trip would corrupt them).
+#[test]
+fn socket_request_stitches_one_timeline_with_remote_worker_spans() {
+    // the obs plane is process-global; this is the only test in this
+    // binary that touches it, and it restores the disabled default
+    immsched::obs::disable_all();
+    immsched::obs::tracer().clear();
+    immsched::obs::enable_all();
+
+    let child = spawn_shard_listener(
+        Path::new(WORKER_BIN),
+        "127.0.0.1:0",
+        &[],
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    let pso = PsoConfig { seed: 17, epochs: 20_000, repair_budget: 1_000, ..Default::default() };
+
+    // routed path: the cluster stamps a local Route span, the worker's
+    // spans come back remote, and both land on the same request id
+    let shard: Arc<dyn ShardTransport> = Arc::new(
+        SocketShard::connect(child.addr().clone(), ServiceConfig::default(), pso).unwrap(),
+    );
+    let cluster =
+        MatchCluster::with_transports(vec![Arc::clone(&shard)], Box::<RoundRobin>::default(), 64);
+    let ticket = cluster.submit(chain_problem(4, 8), Priority::Normal, Some(60.0)).unwrap();
+    let routed_id = ticket.id;
+    assert!(ticket.wait().unwrap().matched());
+    let timeline = immsched::obs::tracer().timeline(routed_id);
+    assert!(
+        timeline.iter().any(|e| !e.remote && e.kind == immsched::obs::SpanKind::Route),
+        "the router's local Route span must be in the stitched timeline: {timeline:?}"
+    );
+    assert!(
+        timeline.iter().any(|e| e.remote && e.kind == immsched::obs::SpanKind::Submit),
+        "the worker's spans must ride back on the reply as remote: {timeline:?}"
+    );
+
+    // bit-exactness: submit directly with an id no f64 can represent;
+    // every span the worker ships back must carry it verbatim
+    let id: RequestId = (1u64 << 60) | 0x000f_ffff_ffff_fff1;
+    shard.submit(id, chain_problem(4, 8), Priority::Normal, Some(60.0), None).unwrap();
+    assert!(shard.wait_response(id).unwrap().matched());
+    let remote: Vec<_> = immsched::obs::tracer()
+        .timeline(id)
+        .into_iter()
+        .filter(|e| e.remote)
+        .collect();
+    assert!(!remote.is_empty(), "the traced submit must bring worker spans home");
+    assert!(
+        remote.iter().all(|e| e.id == id),
+        "the trace context must round-trip bit-exactly: {remote:?}"
+    );
+
+    cluster.drain().expect("the worker session drains cleanly");
+    immsched::obs::disable_all();
+    immsched::obs::tracer().clear();
+}

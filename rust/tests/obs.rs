@@ -1,0 +1,208 @@
+//! Observability-plane acceptance: the conservation property (every
+//! submitted request id ends with exactly one terminal span, even when
+//! seeded chaos forces replays and warm-start resubmissions), same-seed
+//! determinism under the logical clock, and the versioned
+//! flight-recorder dump document.
+//!
+//! The plane is process-global state (registry, tracer, recorder,
+//! clock), so every test here serializes on [`OBS_GUARD`] and restores
+//! the disabled default before releasing it.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig, DriverReport};
+use immsched::cluster::transport::{InProcessShard, ShardTransport};
+use immsched::cluster::{
+    ChaosFault, ChaosSchedule, ClusterConfig, FaultInjectingTransport, MatchCluster, RoundRobin,
+    SupervisedFleet, SupervisorConfig,
+};
+use immsched::matcher::PsoConfig;
+use immsched::obs;
+use immsched::scheduler::ArrivalProcess;
+use immsched::util::json::Json;
+use immsched::workload::WorkloadClass;
+
+/// Serializes tests that toggle the process-global observability state.
+static OBS_GUARD: Mutex<()> = Mutex::new(());
+
+fn obs_guard() -> MutexGuard<'static, ()> {
+    match OBS_GUARD.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Fresh plane: everything cleared, logical clock, all layers on.
+fn reset_plane_logical() {
+    obs::disable_all();
+    obs::tracer().clear();
+    obs::recorder().clear();
+    obs::clock::use_logical();
+    obs::enable_all();
+}
+
+/// Leave the plane as other tests (and the library default) expect it.
+fn teardown_plane() {
+    obs::disable_all();
+    obs::tracer().clear();
+    obs::recorder().clear();
+    obs::clock::use_wall();
+}
+
+/// One open-loop driver run against a supervised fleet of in-process
+/// shards behind seeded fault injectors: a dropped reply on each shard
+/// (forcing heartbeat-failover replays) plus a delay, all scripted.
+fn chaos_run(seed: u64) -> (DriverReport, BTreeMap<u64, usize>) {
+    reset_plane_logical();
+
+    let pso = PsoConfig { seed, epochs: 20, repair_budget: 1_000, ..Default::default() };
+    let svc = immsched::coordinator::ServiceConfig::default();
+    let schedules = [
+        ChaosSchedule::default()
+            .at(0, ChaosFault::Delay(Duration::from_millis(2)))
+            .at(1, ChaosFault::DropReply),
+        ChaosSchedule::default().at(2, ChaosFault::DropReply),
+    ];
+    let transports: Vec<Arc<dyn ShardTransport>> = schedules
+        .iter()
+        .enumerate()
+        .map(|(shard, schedule)| {
+            let inner: Arc<dyn ShardTransport> =
+                Arc::new(InProcessShard::spawn(svc, pso).unwrap());
+            Arc::new(FaultInjectingTransport::new(inner, schedule.clone(), seed ^ shard as u64))
+                as Arc<dyn ShardTransport>
+        })
+        .collect();
+    let ccfg = ClusterConfig { shards: 2, pso, ..Default::default() };
+    let cluster = Arc::new(MatchCluster::with_transports(
+        transports,
+        Box::<RoundRobin>::default(),
+        ccfg.resume_capacity,
+    ));
+    let fleet = SupervisedFleet::new(
+        cluster,
+        SupervisorConfig {
+            heartbeat_interval: Duration::from_millis(10),
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(20),
+            max_replays: 6,
+            ..Default::default()
+        },
+    );
+    let dcfg = DriverConfig {
+        class: WorkloadClass::Simple,
+        process: ArrivalProcess::bursty_default(),
+        arrival_rate: 200.0,
+        horizon: 0.03,
+        seed,
+        time_scale: 0.0,
+        resubmit_cancelled: true,
+        ..Default::default()
+    };
+    let schedule = schedule_from_trace(&dcfg);
+    assert!(schedule.len() >= 3, "trace too small to trip the scripted faults");
+    let report = run_open_loop(&fleet, &schedule, &dcfg).unwrap();
+    let _ = fleet.drain();
+    let counts = obs::tracer().terminal_counts();
+    obs::disable_all();
+    (report, counts)
+}
+
+/// Conservation: chaos may drop replies, force replays, and trigger
+/// warm-start resubmissions, but every submitted request id ends its
+/// life with exactly one terminal span — no request vanishes, none is
+/// double-terminated.  And because request ids and the logical clock
+/// are both deterministic, two same-seed runs conserve identically.
+#[test]
+fn every_submitted_id_gets_exactly_one_terminal_span_under_chaos() {
+    let _guard = obs_guard();
+    let (report, counts) = chaos_run(0xB0B);
+
+    let mut submitted: Vec<u64> = report.outcomes.iter().map(|o| o.id).collect();
+    submitted.sort_unstable();
+    assert_eq!(submitted.len(), report.submitted());
+    for id in &submitted {
+        assert_eq!(
+            counts.get(id),
+            Some(&1),
+            "request {id} must have exactly one terminal span: {counts:?}"
+        );
+    }
+    assert_eq!(
+        counts.len(),
+        submitted.len(),
+        "terminal spans for ids the driver never settled: {counts:?}"
+    );
+    assert_eq!(obs::tracer().dropped(), 0, "tracer capacity must hold the whole run");
+
+    let (report2, counts2) = chaos_run(0xB0B);
+    let mut submitted2: Vec<u64> = report2.outcomes.iter().map(|o| o.id).collect();
+    submitted2.sort_unstable();
+    assert_eq!(submitted, submitted2, "same seed must submit the same request ids");
+    assert_eq!(counts, counts2, "same seed must conserve identically");
+
+    teardown_plane();
+}
+
+/// The dump document: versioned schema, the incident ring, a metrics
+/// snapshot, and the request timelines — parseable by `util::json` (the
+/// same parser `immsched metrics --in` uses).
+#[test]
+fn flight_recorder_dump_round_trips_through_the_json_parser() {
+    let _guard = obs_guard();
+    reset_plane_logical();
+
+    obs::trace::span(7, obs::SpanKind::Submit);
+    obs::trace::terminal(7, obs::SpanKind::Done, || "path=native-epoch".into());
+    obs::recorder::record(
+        "shard-dead",
+        vec![("shard".into(), "1".into()), ("healthy".into(), "0".into())],
+    );
+
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("immsched-obs-dump-{}.json", std::process::id()));
+    obs::recorder::set_dump_path(Some(path.clone()));
+    obs::recorder::dump_to_disk("shard-dead");
+    obs::recorder::set_dump_path(None);
+
+    let text = std::fs::read_to_string(&path).expect("dump file written");
+    std::fs::remove_file(&path).ok();
+    let doc = Json::parse(&text).expect("dump parses");
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some(obs::OBS_DUMP_SCHEMA));
+    assert_eq!(doc.get("reason").and_then(Json::as_str), Some("shard-dead"));
+    let events = doc.get("events").and_then(Json::as_array).expect("events array");
+    assert!(
+        events.iter().any(|e| e.get("kind").and_then(Json::as_str) == Some("shard-dead")),
+        "the recorded incident must appear in the ring"
+    );
+    assert!(doc.get("metrics").is_some(), "dump carries a metrics snapshot");
+    let timelines = doc.get("timelines").expect("dump carries timelines");
+    let spans = timelines
+        .get(&format!("{:016x}", 7u64))
+        .and_then(Json::as_array)
+        .expect("request 7 timeline");
+    assert_eq!(spans.len(), 2);
+    assert_eq!(
+        spans[1].get("terminal").and_then(Json::as_bool),
+        Some(true),
+        "the Done span is terminal"
+    );
+
+    teardown_plane();
+}
+
+/// Disabled-plane discipline: with everything off (the default), the
+/// convenience probes record nothing — the hot path stays empty.
+#[test]
+fn disabled_plane_records_nothing() {
+    let _guard = obs_guard();
+    teardown_plane();
+
+    obs::trace::span(99, obs::SpanKind::Submit);
+    obs::trace::terminal(99, obs::SpanKind::Done, || unreachable!("detail must stay lazy"));
+    obs::recorder::record("never", vec![]);
+    assert!(obs::tracer().timeline(99).is_empty());
+    assert_eq!(obs::recorder().events().iter().filter(|e| e.kind == "never").count(), 0);
+}

@@ -14,6 +14,7 @@ use immsched::coordinator::{
 };
 use immsched::graph::{gen_chain, gen_random_dag, NodeKind};
 use immsched::matcher::{PsoConfig, SwarmSnapshot};
+use immsched::obs::TraceCtx;
 use immsched::scheduler::Priority;
 use immsched::util::json::Json;
 use immsched::util::Rng;
@@ -157,6 +158,7 @@ fn framed_messages_round_trip() {
             priority: Priority::Urgent,
             timeout: Some(1.5),
             resume: Some(random_snapshot(4, 8, &mut rng)),
+            trace: Some(TraceCtx { trace_id: (1 << 60) + 77, parent: u64::MAX - 2 }),
         },
         ShardMsg::Cancel { id: 77 },
         ShardMsg::Stats,
@@ -177,14 +179,22 @@ fn framed_messages_round_trip() {
                 assert_eq!(pso.seed, p2.seed);
             }
             (
-                ShardMsg::Submit { id, priority, timeout, resume, problem },
-                ShardMsg::Submit { id: i2, priority: p2, timeout: t2, resume: r2, problem: pr2 },
+                ShardMsg::Submit { id, priority, timeout, resume, problem, trace },
+                ShardMsg::Submit {
+                    id: i2,
+                    priority: p2,
+                    timeout: t2,
+                    resume: r2,
+                    problem: pr2,
+                    trace: tr2,
+                },
             ) => {
                 assert_eq!(id, i2);
                 assert_eq!(priority, p2);
                 assert_eq!(timeout, t2);
                 assert_eq!(resume, r2);
                 assert_eq!(problem.mask, pr2.mask);
+                assert_eq!(trace, tr2, "trace context must survive the frame bit-exactly");
             }
             (ShardMsg::Cancel { id }, ShardMsg::Cancel { id: i2 }) => assert_eq!(id, i2),
             (ShardMsg::Stats, ShardMsg::Stats) | (ShardMsg::Drain, ShardMsg::Drain) => {}
@@ -255,6 +265,7 @@ fn truncated_frames_fail_at_every_cut() {
             priority: Priority::Normal,
             timeout: None,
             resume: None,
+            trace: None,
         }),
     )
     .unwrap();
@@ -404,6 +415,7 @@ fn split_frames_survive_byte_dribble_reads() {
             priority: Priority::Normal,
             timeout: Some(2.5),
             resume: Some(random_snapshot(4, 8, &mut rng)),
+            trace: None,
         },
         ShardMsg::Stats,
         ShardMsg::Drain,
@@ -481,11 +493,15 @@ fn response_reply_piggybacks_status() {
         },
     };
     for carried in [Some(status), None] {
-        let reply =
-            ShardReply::Response { response: resp.clone(), status: carried.clone() };
+        let reply = ShardReply::Response {
+            response: resp.clone(),
+            status: carried.clone(),
+            spans: vec![],
+        };
         let doc = Json::parse(&encode_reply(&reply).render()).unwrap();
         match decode_reply(&doc).unwrap() {
-            ShardReply::Response { response, status } => {
+            ShardReply::Response { response, status, spans } => {
+                assert!(spans.is_empty());
                 assert_eq!(response.id, resp.id);
                 assert_eq!(response.snapshot, resp.snapshot);
                 match (&carried, &status) {
