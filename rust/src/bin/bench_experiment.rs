@@ -1,0 +1,171 @@
+//! `bench_experiment` — replicated sweep campaigns over the serving
+//! stack, tracked in `BENCH_experiment.json`.
+//!
+//! One run executes a full [`ExperimentGrid`] campaign — every
+//! λ × shape × policy × shards × quota cell, N seeded replications per
+//! cell on a bounded worker pool — plus the per-policy LBT search, and
+//! appends the canonical summary document to the trajectory (schema
+//! `immsched.bench_experiment/v1`).
+//!
+//! Campaign numbers come from the deterministic modeled-cluster
+//! evaluator, so the summary is bit-identical for the same grid and
+//! campaign seed regardless of machine or worker count; `--smoke`
+//! re-runs the campaign once and asserts exactly that, along with the
+//! quota tournament's adaptive-dominance acceptance property.
+//!
+//! `--live` additionally replays the first grid cell on the *real*
+//! cluster (wall clock, `run_open_loop`) and records the cross-check
+//! outside the deterministic summary.  `--report-out FILE` writes the
+//! rendered LBT / tournament / per-cell report for CI artifacts.
+
+use anyhow::Result;
+
+use immsched::cluster::experiment::{
+    live::run_live_cell, replication_seed, run_campaign, summary_json, ExperimentGrid,
+};
+use immsched::report::figures::{append_bench_entry, experiment_report, EXPERIMENT_BENCH_SCHEMA};
+use immsched::util::json::{hex_u64, Json};
+
+struct Args {
+    smoke: bool,
+    fresh: bool,
+    live: bool,
+    seed: u64,
+    reps: Option<usize>,
+    workers: usize,
+    label: String,
+    out: String,
+    report_out: Option<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1));
+    let default_workers =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    Ok(Args {
+        smoke: argv.iter().any(|a| a == "--smoke"),
+        fresh: argv.iter().any(|a| a == "--fresh"),
+        live: argv.iter().any(|a| a == "--live"),
+        seed: flag("--seed").map(|s| s.parse()).transpose()?.unwrap_or(42),
+        reps: flag("--reps").map(|s| s.parse()).transpose()?,
+        workers: flag("--workers")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(default_workers)
+            .max(1),
+        label: flag("--label").cloned().unwrap_or_else(|| "local".into()),
+        out: flag("--out").cloned().unwrap_or_else(|| {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_experiment.json").into()
+        }),
+        report_out: flag("--report-out").cloned(),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    immsched::util::logging::init_from_env();
+
+    let mut grid = if args.smoke {
+        ExperimentGrid::smoke(args.seed)
+    } else {
+        ExperimentGrid::standard(args.seed)
+    };
+    if let Some(reps) = args.reps {
+        grid.replications = reps.max(1);
+    }
+    let cells = grid.cells().len();
+    println!(
+        "[bench_experiment] smoke={} campaign_seed={} cells={cells} reps={} workers={}",
+        args.smoke, args.seed, grid.replications, args.workers
+    );
+
+    let result = run_campaign(&grid, args.workers)?;
+    let summary = summary_json(&grid, &result);
+
+    let tables = experiment_report(&summary);
+    for t in &tables {
+        print!("{}", t.render());
+    }
+    if let Some(path) = &args.report_out {
+        let mut report = String::new();
+        for t in &tables {
+            report.push_str(&t.render());
+            report.push('\n');
+        }
+        std::fs::write(path, &report)?;
+        println!("[bench_experiment] report written to {path}");
+    }
+
+    // ---- acceptance (smoke) -------------------------------------------
+    if args.smoke {
+        // determinism: the same grid re-runs byte-identically on a
+        // different pool width
+        let again = run_campaign(&grid, 1)?;
+        let replay = summary_json(&grid, &again).render();
+        assert_eq!(summary.render(), replay, "campaign summary is not deterministic across runs");
+
+        // an LBT value per route policy
+        let lbt = summary.get("lbt").and_then(Json::as_array).unwrap_or(&[]);
+        assert_eq!(lbt.len(), grid.policies.len(), "missing LBT point for some policy");
+        for p in lbt {
+            assert!(p.get("lbt_rate").and_then(Json::as_f64).is_some(), "LBT point without a rate");
+        }
+
+        // a populated row per grid cell
+        let rows = summary.get("cells").and_then(Json::as_array).unwrap_or(&[]).len();
+        assert_eq!(rows, cells, "summary rows ({rows}) != grid cells ({cells})");
+
+        // the adaptive quota wins or ties every static quota on SLO miss
+        let tournament = summary.get("tournament").and_then(Json::as_array).unwrap_or(&[]);
+        let miss_of = |name: &str| -> f64 {
+            tournament
+                .iter()
+                .find(|q| q.get("quota").and_then(Json::as_str) == Some(name))
+                .and_then(|q| q.get("slo_miss_rate").and_then(Json::as_f64))
+                .unwrap_or(f64::NAN)
+        };
+        let adaptive = miss_of("adaptive");
+        assert!(adaptive.is_finite(), "tournament has no adaptive row");
+        for q in tournament {
+            let name = q.get("quota").and_then(Json::as_str).unwrap_or("?");
+            let miss = q.get("slo_miss_rate").and_then(Json::as_f64).unwrap_or(f64::NAN);
+            assert!(
+                adaptive <= miss + 1e-9,
+                "adaptive quota (miss {adaptive:.4}) loses to {name} (miss {miss:.4})"
+            );
+        }
+        println!("[bench_experiment] SMOKE OK");
+    }
+
+    // ---- optional live cross-check ------------------------------------
+    let live = if args.live {
+        let cell = grid.cells().into_iter().next().expect("grid has cells");
+        let seed = replication_seed(grid.campaign_seed, cell.index, 0);
+        let out = run_live_cell(&cell, seed)?;
+        println!(
+            "[bench_experiment] live cross-check: cell {} served {} / {} (wall)",
+            cell.id(),
+            out.get("served").and_then(Json::as_f64).unwrap_or(0.0),
+            out.get("submitted").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+        out
+    } else {
+        Json::Null
+    };
+
+    // ---- trajectory entry ---------------------------------------------
+    let entry = Json::obj(vec![
+        ("label", Json::from(args.label.as_str())),
+        ("smoke", Json::from(args.smoke)),
+        ("measured", Json::from(true)),
+        ("campaign_seed", hex_u64(args.seed)),
+        ("cells", Json::from(cells)),
+        ("replications", Json::from(grid.replications)),
+        ("summary", summary),
+        ("live", live),
+    ]);
+    let count = append_bench_entry(&args.out, EXPERIMENT_BENCH_SCHEMA, entry, args.fresh)?;
+    println!("[bench_experiment] wrote {} ({count} trajectory entries)", args.out);
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Declarative experiment grids: the cartesian product of
+//! λ × arrival shape × route policy × shard count × epoch quota, plus
+//! the campaign seed and replication count.
+//!
+//! Cells are enumerated in one fixed nested order (rate, shape, policy,
+//! shards, quota) and every replication seed is derived from the
+//! campaign seed through the same forked-RNG chain, so a grid is a
+//! *complete* description of a campaign: two runs of the same grid are
+//! bit-identical regardless of worker-pool interleaving.
+
+use crate::accel::{Platform, PlatformKind};
+use crate::scheduler::exec_model::ExecModel;
+use crate::scheduler::{ArrivalProcess, Priority, Task};
+use crate::util::Rng;
+use crate::workload::{TilingConfig, WorkloadClass};
+
+use super::lbt::LbtConfig;
+use super::quota::QuotaSpec;
+
+/// Route policies every shipped grid sweeps (the `policy_by_name`
+/// vocabulary).
+pub const ALL_POLICIES: [&str; 3] = ["round-robin", "least-queue", "deadline-aware"];
+
+/// One campaign's full parameter space.
+#[derive(Clone, Debug)]
+pub struct ExperimentGrid {
+    pub class: WorkloadClass,
+    pub platform: PlatformKind,
+    /// Trace horizon per replication (s of modeled time).
+    pub horizon: f64,
+    /// Urgent deadline = arrival + factor × isolated exec estimate.
+    pub deadline_factor: f64,
+    /// Concurrent background streams per replication.
+    pub background_tasks: usize,
+    /// λ axis (urgent arrivals/s).
+    pub rates: Vec<f64>,
+    /// Arrival-shape axis.
+    pub shapes: Vec<ArrivalProcess>,
+    /// Route-policy axis (`policy_by_name` names).
+    pub policies: Vec<String>,
+    /// Shard-count axis.
+    pub shard_counts: Vec<usize>,
+    /// Epoch-quota axis.
+    pub quotas: Vec<QuotaSpec>,
+    /// Seeded replications per cell.
+    pub replications: usize,
+    /// Root seed every replication seed derives from.
+    pub campaign_seed: u64,
+    /// LBT search budget (shared by every per-policy bisection).
+    pub lbt: LbtConfig,
+}
+
+/// One point of the grid, fully self-describing (carries the shared
+/// trace parameters so the evaluator needs nothing but the cell).
+#[derive(Clone, Debug)]
+pub struct CellConfig {
+    /// Position in grid enumeration order; namespaces the cell's
+    /// replication seeds.
+    pub index: usize,
+    pub rate: f64,
+    pub process: ArrivalProcess,
+    pub policy: String,
+    pub shards: usize,
+    pub quota: QuotaSpec,
+    pub class: WorkloadClass,
+    pub platform: PlatformKind,
+    pub horizon: f64,
+    pub deadline_factor: f64,
+    pub background_tasks: usize,
+}
+
+impl CellConfig {
+    /// Stable human-readable cell id used in reports and summaries.
+    pub fn id(&self) -> String {
+        format!(
+            "r{:.1}/{}/{}/s{}/{}",
+            self.rate,
+            self.process.name(),
+            self.policy,
+            self.shards,
+            self.quota.name()
+        )
+    }
+}
+
+impl ExperimentGrid {
+    /// Enumerate all cells in the canonical nested order.
+    pub fn cells(&self) -> Vec<CellConfig> {
+        let mut out = Vec::new();
+        let mut index = 0;
+        for &rate in &self.rates {
+            for &process in &self.shapes {
+                for policy in &self.policies {
+                    for &shards in &self.shard_counts {
+                        for &quota in &self.quotas {
+                            out.push(CellConfig {
+                                index,
+                                rate,
+                                process,
+                                policy: policy.clone(),
+                                shards,
+                                quota,
+                                class: self.class,
+                                platform: self.platform,
+                                horizon: self.horizon,
+                                deadline_factor: self.deadline_factor,
+                                background_tasks: self.background_tasks,
+                            });
+                            index += 1;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Tiny CI-speed grid: two calibrated load levels (comfortable vs
+    /// overloaded) × two shapes × all policies × {no quota, short static
+    /// quota, adaptive}, 2 replications.  Small enough for `--smoke` and
+    /// the test suite, rich enough that the quota tournament has both a
+    /// regime where slicing hurts and one where it saves the SLO.
+    pub fn smoke(campaign_seed: u64) -> Self {
+        let class = WorkloadClass::Simple;
+        let platform = PlatformKind::Edge;
+        let shards = 2;
+        let r_low = rate_for_load(class, platform, shards, 0.25);
+        let r_high = rate_for_load(class, platform, shards, 1.6);
+        Self {
+            class,
+            platform,
+            horizon: 40.0 / r_low,
+            deadline_factor: 3.0,
+            background_tasks: 2,
+            rates: vec![r_low, r_high],
+            shapes: vec![ArrivalProcess::Poisson, ArrivalProcess::bursty_default()],
+            policies: ALL_POLICIES.iter().map(|p| p.to_string()).collect(),
+            shard_counts: vec![shards],
+            quotas: vec![
+                QuotaSpec::Static(None),
+                QuotaSpec::Static(Some(8)),
+                QuotaSpec::Adaptive {
+                    low_rate: r_low * 2.5,
+                    high_rate: r_high * 0.6,
+                    min_quota: 8,
+                    max_quota: 32,
+                },
+            ],
+            replications: 2,
+            campaign_seed,
+            lbt: LbtConfig { hi0: r_high, ..LbtConfig::smoke() },
+        }
+    }
+
+    /// The full campaign grid: three load levels × three shapes × all
+    /// policies × {2, 4} shards × four quotas, 5 replications.
+    pub fn standard(campaign_seed: u64) -> Self {
+        let class = WorkloadClass::Simple;
+        let platform = PlatformKind::Edge;
+        let r1 = rate_for_load(class, platform, 2, 0.5);
+        let r2 = rate_for_load(class, platform, 2, 1.0);
+        let r3 = rate_for_load(class, platform, 2, 1.6);
+        Self {
+            class,
+            platform,
+            horizon: 120.0 / r1,
+            deadline_factor: 3.0,
+            background_tasks: 2,
+            rates: vec![r1, r2, r3],
+            shapes: vec![
+                ArrivalProcess::Poisson,
+                ArrivalProcess::bursty_default(),
+                ArrivalProcess::diurnal_default(),
+            ],
+            policies: ALL_POLICIES.iter().map(|p| p.to_string()).collect(),
+            shard_counts: vec![2, 4],
+            quotas: vec![
+                QuotaSpec::Static(None),
+                QuotaSpec::Static(Some(8)),
+                QuotaSpec::Static(Some(16)),
+                QuotaSpec::Adaptive {
+                    low_rate: r1 * 1.25,
+                    high_rate: r3 * 0.6,
+                    min_quota: 8,
+                    max_quota: 32,
+                },
+            ],
+            replications: 5,
+            campaign_seed,
+            lbt: LbtConfig { hi0: r3, ..LbtConfig::default() },
+        }
+    }
+}
+
+/// Replication-seed derivation: campaign seed → per-cell stream → per-
+/// replication stream.  Pure function of its arguments, so workers can
+/// compute seeds independently in any order and two runs of the same
+/// grid use identical randomness everywhere.
+pub fn replication_seed(campaign_seed: u64, cell_index: usize, replication: usize) -> u64 {
+    let mut root = Rng::new(campaign_seed);
+    let mut cell = root.fork(cell_index as u64);
+    cell.fork(replication as u64).next_u64()
+}
+
+/// Seed namespace offset for LBT probe evaluations, disjoint from any
+/// realistic grid's cell indices.
+pub const LBT_SEED_SPACE: usize = 1 << 32;
+
+/// λ that offers `load` erlangs of urgent work per shard: the mean
+/// isolated service time of the class's members (at the trace's default
+/// batch of 16) inverted and scaled by shard count.  Grids calibrated
+/// through this hit the same utilization regimes on every platform
+/// model, rather than hard-coding rates that saturate one platform and
+/// idle another.
+pub fn rate_for_load(
+    class: WorkloadClass,
+    platform: PlatformKind,
+    shards: usize,
+    load: f64,
+) -> f64 {
+    let p = Platform::get(platform);
+    let exec = ExecModel::new(p);
+    let models = class.models();
+    let mut total = 0.0;
+    for (i, model) in models.iter().enumerate() {
+        let task =
+            Task::new(i, *model, Priority::Urgent, 0.0, TilingConfig::default()).with_batch(16);
+        let claim = task.tiles.len().clamp(1, p.engines);
+        total += exec.tss(&task, claim).seconds;
+    }
+    let mean_service = (total / models.len() as f64).max(1e-9);
+    load * shards.max(1) as f64 / mean_service
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_enumerate_in_stable_order_with_dense_indices() {
+        let grid = ExperimentGrid::smoke(7);
+        let cells = grid.cells();
+        let expected = grid.rates.len()
+            * grid.shapes.len()
+            * grid.policies.len()
+            * grid.shard_counts.len()
+            * grid.quotas.len();
+        assert_eq!(cells.len(), expected);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // quota is the innermost axis: the first cells differ only by quota
+        assert_eq!(cells[0].rate.to_bits(), cells[1].rate.to_bits());
+        assert_eq!(cells[0].policy, cells[1].policy);
+        assert_ne!(cells[0].quota, cells[1].quota);
+    }
+
+    #[test]
+    fn replication_seeds_are_deterministic_and_distinct() {
+        assert_eq!(replication_seed(42, 3, 1), replication_seed(42, 3, 1));
+        let mut seeds = vec![];
+        for cell in 0..8 {
+            for rep in 0..4 {
+                seeds.push(replication_seed(42, cell, rep));
+            }
+        }
+        seeds.sort_unstable();
+        let len_before = seeds.len();
+        seeds.dedup();
+        assert_eq!(seeds.len(), len_before, "seed collision across cells/reps");
+        assert_ne!(replication_seed(42, 0, 0), replication_seed(43, 0, 0));
+    }
+
+    #[test]
+    fn rate_for_load_scales_with_shards_and_rho() {
+        let base = rate_for_load(WorkloadClass::Simple, PlatformKind::Edge, 2, 0.5);
+        assert!(base > 0.0 && base.is_finite());
+        let doubled = rate_for_load(WorkloadClass::Simple, PlatformKind::Edge, 4, 0.5);
+        assert!((doubled / base - 2.0).abs() < 1e-9);
+        let hotter = rate_for_load(WorkloadClass::Simple, PlatformKind::Edge, 2, 1.0);
+        assert!((hotter / base - 2.0).abs() < 1e-9);
+    }
+}

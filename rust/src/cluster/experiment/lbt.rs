@@ -1,0 +1,205 @@
+//! LBT (load-bearing throughput) search: the maximum sustainable
+//! arrival rate per route policy at a configurable SLO-miss threshold —
+//! the experiment-harness analogue of the paper's Fig. 7 curve.
+//!
+//! Unlike `scheduler::metrics::lbt_sweep` (which probes the single-node
+//! simulator), this search drives the deterministic modeled cluster and
+//! carries an explicit, *accounted* iteration budget: every probe is
+//! counted and the total is bounded by `doublings + bisections + 1`,
+//! which `tests/experiment.rs` asserts on a synthetic monotone curve.
+
+use crate::Result;
+
+use super::grid::{replication_seed, CellConfig, ExperimentGrid, LBT_SEED_SPACE};
+use super::model::evaluate_cell;
+use super::quota::QuotaSpec;
+
+/// Search budget and target for one LBT bisection.
+#[derive(Clone, Copy, Debug)]
+pub struct LbtConfig {
+    /// SLO-miss rate the sustained load may not exceed.
+    pub target_miss: f64,
+    /// Initial upper probe rate (arrivals/s); doubled while sustainable.
+    pub hi0: f64,
+    /// Maximum bracket doublings before the search gives up growing.
+    pub max_doublings: u32,
+    /// Bisection refinements once the bracket is established.
+    pub bisections: u32,
+}
+
+impl Default for LbtConfig {
+    fn default() -> Self {
+        Self { target_miss: 0.1, hi0: 100.0, max_doublings: 4, bisections: 10 }
+    }
+}
+
+impl LbtConfig {
+    /// Reduced-budget search for `--smoke` and tests.
+    pub fn smoke() -> Self {
+        Self { bisections: 5, ..Self::default() }
+    }
+
+    /// The hard probe-count ceiling this budget implies.
+    pub fn probe_budget(&self) -> usize {
+        (self.max_doublings + self.bisections + 1) as usize
+    }
+}
+
+/// Outcome of one bounded search.
+#[derive(Clone, Debug)]
+pub struct LbtOutcome {
+    /// Highest rate confirmed sustainable (miss ≤ target).  0.0 when
+    /// even the first probe missed its SLO target.
+    pub rate: f64,
+    /// Probes actually spent (≤ `LbtConfig::probe_budget()`).
+    pub probes: usize,
+    /// Whether the search hit the doubling cap while still sustainable
+    /// (the true LBT lies above `rate`).
+    pub saturated_budget: bool,
+}
+
+/// One policy's point on the LBT curve.
+#[derive(Clone, Debug)]
+pub struct LbtPoint {
+    pub policy: String,
+    pub outcome: LbtOutcome,
+    pub target_miss: f64,
+}
+
+/// Bounded bracket-then-bisect search for the largest `x` with
+/// `probe(x) <= target`, assuming `probe` is (noisily) monotone
+/// non-decreasing.  Spends at most `cfg.probe_budget()` probe calls.
+pub fn bisect_max_rate(mut probe: impl FnMut(f64) -> f64, cfg: &LbtConfig) -> LbtOutcome {
+    let mut probes = 0usize;
+    let mut lo = 0.0_f64; // highest rate confirmed sustainable
+    let mut hi = cfg.hi0.max(1e-9);
+
+    // grow the bracket while the upper probe is still sustainable
+    let mut bracketed = false;
+    for _ in 0..=cfg.max_doublings {
+        probes += 1;
+        if probe(hi) <= cfg.target_miss {
+            lo = hi;
+            hi *= 2.0;
+        } else {
+            bracketed = true;
+            break;
+        }
+    }
+    if !bracketed {
+        // sustainable all the way to the doubling cap: report the last
+        // confirmed rate and flag that the budget, not the system,
+        // stopped the search
+        return LbtOutcome { rate: lo, probes, saturated_budget: true };
+    }
+
+    for _ in 0..cfg.bisections {
+        let mid = 0.5 * (lo + hi);
+        probes += 1;
+        if probe(mid) <= cfg.target_miss {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    LbtOutcome { rate: lo, probes, saturated_budget: false }
+}
+
+/// The per-policy LBT curve for a grid: Poisson arrivals (the paper's
+/// LBT definition), the grid's first shard count, and its adaptive
+/// quota if one is present (else the first quota), with each probe
+/// averaging the SLO-miss rate over the grid's replication count.
+pub fn lbt_curve(grid: &ExperimentGrid) -> Result<Vec<LbtPoint>> {
+    let shards = grid.shard_counts.first().copied().unwrap_or(2);
+    let quota = grid
+        .quotas
+        .iter()
+        .find(|q| matches!(q, QuotaSpec::Adaptive { .. }))
+        .or_else(|| grid.quotas.first())
+        .copied()
+        .unwrap_or(QuotaSpec::Static(None));
+    let reps = grid.replications.max(1);
+
+    let mut curve = Vec::new();
+    for (pi, policy) in grid.policies.iter().enumerate() {
+        let mut error: Option<String> = None;
+        let outcome = bisect_max_rate(
+            |rate| {
+                let cell = CellConfig {
+                    index: LBT_SEED_SPACE + pi,
+                    rate,
+                    process: crate::scheduler::ArrivalProcess::Poisson,
+                    policy: policy.clone(),
+                    shards,
+                    quota,
+                    class: grid.class,
+                    platform: grid.platform,
+                    horizon: grid.horizon,
+                    deadline_factor: grid.deadline_factor,
+                    background_tasks: grid.background_tasks,
+                };
+                let mut miss_sum = 0.0;
+                for rep in 0..reps {
+                    let seed = replication_seed(grid.campaign_seed, cell.index, rep);
+                    match evaluate_cell(&cell, seed) {
+                        Ok(run) => miss_sum += run.slo_miss_rate(),
+                        Err(e) => {
+                            error.get_or_insert_with(|| e.to_string());
+                            // treat a failed probe as unsustainable so the
+                            // search still terminates within budget
+                            miss_sum += 1.0;
+                        }
+                    }
+                }
+                miss_sum / reps as f64
+            },
+            &grid.lbt,
+        );
+        if let Some(e) = error {
+            anyhow::bail!("LBT probe failed for policy {policy}: {e}");
+        }
+        curve.push(LbtPoint { policy: policy.clone(), outcome, target_miss: grid.lbt.target_miss });
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisection_converges_on_a_monotone_curve_within_budget() {
+        let cfg = LbtConfig { target_miss: 0.1, hi0: 10.0, max_doublings: 6, bisections: 20 };
+        // miss rate ramps through the target at rate 130
+        let mut calls = 0usize;
+        let out = bisect_max_rate(
+            |r| {
+                calls += 1;
+                (r / 1300.0).min(1.0)
+            },
+            &cfg,
+        );
+        assert_eq!(calls, out.probes);
+        assert!(out.probes <= cfg.probe_budget(), "{} probes > budget", out.probes);
+        assert!(!out.saturated_budget);
+        assert!((out.rate - 130.0).abs() < 1.0, "LBT {} should be ~130", out.rate);
+    }
+
+    #[test]
+    fn always_sustainable_curve_saturates_the_doubling_budget() {
+        let cfg = LbtConfig { target_miss: 0.5, hi0: 1.0, max_doublings: 3, bisections: 8 };
+        let out = bisect_max_rate(|_| 0.0, &cfg);
+        assert!(out.saturated_budget);
+        assert_eq!(out.probes, cfg.max_doublings as usize + 1);
+        // last confirmed rate: hi0 · 2^max_doublings
+        assert!((out.rate - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_sustainable_curve_reports_zero() {
+        let cfg = LbtConfig::smoke();
+        let out = bisect_max_rate(|_| 1.0, &cfg);
+        assert_eq!(out.rate, 0.0);
+        assert!(out.probes <= cfg.probe_budget());
+    }
+}

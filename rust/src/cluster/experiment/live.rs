@@ -1,0 +1,75 @@
+//! Wall-clock validation of a grid cell against the *real* serving
+//! stack.
+//!
+//! The canonical campaign numbers come from the modeled evaluator
+//! (`model`), which is bit-deterministic.  This module cross-checks a
+//! cell on the live path — real `MatchCluster` shards behind a
+//! `SupervisedFleet`, driven by `cluster::driver::run_open_loop` — so
+//! the harness's claims stay anchored to the system it models.  Wall
+//! results are machine-dependent by nature and are therefore reported
+//! *outside* the deterministic summary document (a separate `live`
+//! field on the bench entry), never merged into it.
+
+use std::sync::Arc;
+
+use crate::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
+use crate::cluster::policy::policy_by_name;
+use crate::cluster::{ClusterConfig, MatchCluster, SupervisedFleet, SupervisorConfig};
+use crate::coordinator::ServiceConfig;
+use crate::matcher::PsoConfig;
+use crate::util::json::Json;
+use crate::workload::TilingConfig;
+use crate::Result;
+
+use super::grid::CellConfig;
+
+/// Run one live replication of `cell` and report its wall-clock
+/// outcomes as a JSON fragment.
+pub fn run_live_cell(cell: &CellConfig, seed: u64) -> Result<Json> {
+    let driver_cfg = DriverConfig {
+        class: cell.class,
+        platform: cell.platform,
+        process: cell.process,
+        arrival_rate: cell.rate,
+        horizon: cell.horizon,
+        background_tasks: cell.background_tasks,
+        deadline_factor: cell.deadline_factor,
+        tiling: TilingConfig::default(),
+        seed,
+        time_scale: 0.0,
+        resubmit_cancelled: true,
+    };
+    let schedule = schedule_from_trace(&driver_cfg);
+
+    let pso = PsoConfig { seed, ..PsoConfig::default() };
+    // the quota seam in action on the live stack: size the service's
+    // epoch quota from the cell's offered rate
+    let epoch_quota = cell.quota.service_quota(cell.rate, pso.epochs);
+    let policy = policy_by_name(&cell.policy)
+        .ok_or_else(|| anyhow::anyhow!("unknown route policy {:?}", cell.policy))?;
+    let cluster = MatchCluster::spawn(
+        ClusterConfig {
+            shards: cell.shards,
+            service: ServiceConfig { epoch_quota, ..ServiceConfig::default() },
+            pso,
+            resume_capacity: 1024,
+        },
+        policy,
+    )?;
+    let fleet = SupervisedFleet::new(Arc::new(cluster), SupervisorConfig::default());
+    let report = run_open_loop(&fleet, &schedule, &driver_cfg)?;
+    fleet.drain()?;
+
+    Ok(Json::obj(vec![
+        ("cell", Json::from(cell.id().as_str())),
+        ("epoch_quota", epoch_quota.map_or(Json::Null, Json::from)),
+        ("submitted", Json::from(report.submitted())),
+        ("served", Json::from(report.served())),
+        ("resumed", Json::from(report.resumed())),
+        ("slo_misses", Json::from(report.slo_misses())),
+        ("mean_latency_s", Json::from(report.mean_latency())),
+        ("p95_latency_s", Json::from(report.latency_percentile(95.0))),
+        ("preemptions", Json::from(report.cluster.preemptions())),
+        ("wall_seconds", Json::from(report.wall_seconds)),
+    ]))
+}

@@ -1,0 +1,45 @@
+//! `cluster::experiment` — replicated sweep campaigns, policy
+//! tournaments, and LBT search over the serving stack.
+//!
+//! The serving cluster can run one trace at one arrival rate; every
+//! production question is comparative ("which route policy sustains the
+//! highest load at <1% SLO miss?", "which epoch quota minimizes
+//! preemption waste?").  This subsystem answers them reproducibly:
+//!
+//! * [`ExperimentGrid`] declares a campaign as the cartesian product
+//!   λ × arrival shape × route policy × shard count × epoch quota, with
+//!   N seeded replications per cell derived deterministically from one
+//!   campaign seed;
+//! * [`run_campaign`] executes every (cell × replication) on a bounded
+//!   worker pool and merges results in deterministic cell order, so the
+//!   campaign is a pure function of the grid — bit-identical across
+//!   runs, machines, and pool widths;
+//! * [`lbt::bisect_max_rate`] finds each policy's maximum sustainable
+//!   load at a configurable SLO-miss threshold within an explicit probe
+//!   budget (the paper's Fig. 7 LBT curve);
+//! * [`QuotaSpec`] is the epoch-quota seam: static quotas plus the
+//!   rate-adaptive policy that the tournament demonstrates dominates
+//!   every static choice;
+//! * [`summary_json`] renders the whole campaign into one canonical
+//!   document consumed by `report::figures` and the tracked
+//!   `BENCH_experiment.json` trajectory.
+//!
+//! Evaluation runs in *modeled* time (see [`model`]) so wall-clock
+//! never contaminates campaign numbers; [`live::run_live_cell`] keeps a
+//! wall-clock cross-check against the real stack available for
+//! validation.
+
+pub mod grid;
+pub mod lbt;
+pub mod live;
+pub mod model;
+pub mod quota;
+pub mod replicate;
+pub mod summary;
+
+pub use grid::{rate_for_load, replication_seed, CellConfig, ExperimentGrid, ALL_POLICIES};
+pub use lbt::{bisect_max_rate, LbtConfig, LbtOutcome, LbtPoint};
+pub use model::{evaluate_cell, CellRun};
+pub use quota::{QuotaPolicy, QuotaSpec, RateWindow, EPISODE_EPOCHS};
+pub use replicate::{agg, run_campaign, tournament, AggStat, CampaignResult, CellSummary};
+pub use summary::summary_json;

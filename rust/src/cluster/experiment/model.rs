@@ -1,0 +1,442 @@
+//! Deterministic modeled-cluster evaluation of one grid cell.
+//!
+//! The live open-loop driver (`cluster::driver`) measures wall-clock
+//! latencies, which makes every run machine- and load-dependent — fine
+//! for validation, useless for a campaign that must be bit-identical
+//! across runs and machines.  This evaluator instead advances *modeled*
+//! time through a small discrete-event simulation of the sharded
+//! cluster while reusing the real building blocks everywhere behavior
+//! matters:
+//!
+//! * arrivals come from the real trace generator ([`build_trace`]);
+//! * per-task service demand comes from the real execution model
+//!   ([`ExecModel::tss`]) on the engine share the matcher would claim;
+//! * routing decisions are made by the *real* [`RoutePolicy`]
+//!   implementations over synthesized [`ShardView`]s;
+//! * slicing follows the epoch-quota semantics of the live service:
+//!   episodes run in epoch-quantized slices, preemption lands on epoch
+//!   barriers, and every warm-start resume pays a fixed epoch overhead
+//!   (mirroring snapshot restore).
+//!
+//! Every quantity is a pure function of the cell config and seed, so a
+//! campaign is replayable bit-for-bit.
+
+use crate::accel::Platform;
+use crate::cluster::policy::{policy_by_name, ShardView};
+use crate::coordinator::ServiceStats;
+use crate::scheduler::exec_model::ExecModel;
+use crate::scheduler::{build_trace, Priority, TraceConfig};
+use crate::util::Summary;
+use crate::Result;
+
+use super::grid::CellConfig;
+use super::quota::{QuotaPolicy, RateWindow, EPISODE_EPOCHS};
+
+/// Epochs charged to every warm-start resume (snapshot restore +
+/// re-freeze), mirroring the live service's resume tax.
+const RESUME_OVERHEAD_EPOCHS: u32 = 2;
+
+/// Per-shard admission queue capacity; arrivals routed to a full shard
+/// are shed.  Mirrors `ServiceConfig::queue_depth`'s default.
+const QUEUE_CAP: usize = 64;
+
+/// Aggregate counters from one replication of one cell.
+#[derive(Clone, Debug, Default)]
+pub struct CellRun {
+    pub submitted: usize,
+    pub served: usize,
+    pub shed: usize,
+    /// Shed requests plus completions past their deadline.
+    pub slo_misses: usize,
+    pub preemptions: u64,
+    pub resumes: u64,
+    /// Epochs burned on warm-start restores (work that served no
+    /// request).
+    pub waste_epochs: u64,
+    /// Productive epochs retired.
+    pub work_epochs: u64,
+    /// Modeled sojourn times of completed requests (s).
+    pub latencies: Summary,
+}
+
+impl CellRun {
+    /// Fraction of submitted requests that missed their SLO (shed or
+    /// late).  NaN when nothing was submitted.
+    pub fn slo_miss_rate(&self) -> f64 {
+        self.slo_misses as f64 / self.submitted as f64
+    }
+
+    /// Fraction of all retired epochs that were resume overhead.
+    pub fn preempt_waste(&self) -> f64 {
+        let total = self.work_epochs + self.waste_epochs;
+        if total == 0 {
+            return 0.0;
+        }
+        self.waste_epochs as f64 / total as f64
+    }
+}
+
+/// One admitted request's modeled state.
+struct Job {
+    arrival: f64,
+    deadline: Option<f64>,
+    priority: Priority,
+    /// Modeled seconds per epoch for this task (isolated service time
+    /// spread over [`EPISODE_EPOCHS`]).
+    epoch_secs: f64,
+    /// Epochs still to retire.
+    remaining: u32,
+    /// Warm-start resumes so far (drives the per-slice overhead).
+    resumes: u32,
+}
+
+/// A slice in flight on one shard.
+#[derive(Clone, Copy)]
+struct Running {
+    job: usize,
+    /// Epochs of resume overhead charged to this slice.
+    overhead: u32,
+    /// Productive epochs this slice will retire (unless truncated).
+    epochs: u32,
+    started: f64,
+    done_at: f64,
+    /// Whether a preemption shortened the slice below its plan.
+    truncated: bool,
+}
+
+#[derive(Default)]
+struct Shard {
+    queue: Vec<usize>,
+    running: Option<Running>,
+}
+
+struct Sim {
+    jobs: Vec<Job>,
+    shards: Vec<Shard>,
+    policy: Box<dyn crate::cluster::RoutePolicy>,
+    quota: Box<dyn QuotaPolicy>,
+    window: RateWindow,
+    out: CellRun,
+}
+
+/// Run one seeded replication of `cell` to completion in modeled time.
+pub fn evaluate_cell(cell: &CellConfig, seed: u64) -> Result<CellRun> {
+    let platform = Platform::get(cell.platform);
+    let trace_cfg = TraceConfig {
+        class: cell.class,
+        background_tasks: cell.background_tasks,
+        arrival_rate: cell.rate,
+        process: cell.process,
+        horizon: cell.horizon,
+        deadline_factor: cell.deadline_factor,
+        seed,
+        ..TraceConfig::default()
+    };
+    let tasks = build_trace(&trace_cfg, &platform);
+    let exec = ExecModel::new(platform);
+
+    let jobs: Vec<Job> = tasks
+        .iter()
+        .map(|t| {
+            let claim = t.tiles.len().clamp(1, platform.engines);
+            let service = exec.tss(t, claim).seconds.max(1e-9);
+            Job {
+                arrival: t.arrival,
+                deadline: t.deadline,
+                priority: t.priority,
+                epoch_secs: service / EPISODE_EPOCHS as f64,
+                remaining: EPISODE_EPOCHS,
+                resumes: 0,
+            }
+        })
+        .collect();
+
+    let policy = policy_by_name(&cell.policy)
+        .ok_or_else(|| anyhow::anyhow!("unknown route policy {:?}", cell.policy))?;
+
+    let mut sim = Sim {
+        shards: (0..cell.shards.max(1)).map(|_| Shard::default()).collect(),
+        policy,
+        quota: cell.quota.policy(),
+        // the offered base rate is the prior until enough urgent
+        // arrivals have been observed
+        window: RateWindow::new(cell.rate),
+        out: CellRun { submitted: jobs.len(), ..CellRun::default() },
+        jobs,
+    };
+    sim.run()?;
+    Ok(sim.out)
+}
+
+impl Sim {
+    fn run(&mut self) -> Result<()> {
+        let total_epochs: u64 = self.jobs.iter().map(|j| u64::from(j.remaining)).sum();
+        // Every iteration either admits one arrival or retires ≥1 epoch
+        // of a running slice, so this budget is a generous upper bound;
+        // exceeding it means the event loop stopped making progress.
+        let overhead = u64::from(RESUME_OVERHEAD_EPOCHS);
+        let mut step_budget = self.jobs.len() as u64 * 4 + total_epochs * (2 + overhead) + 64;
+        let mut next_arrival = 0usize;
+        loop {
+            step_budget = step_budget.saturating_sub(1);
+            if step_budget == 0 {
+                anyhow::bail!("modeled cell evaluation exceeded its step budget");
+            }
+            let arrival = if next_arrival < self.jobs.len() {
+                Some(self.jobs[next_arrival].arrival)
+            } else {
+                None
+            };
+            let completion = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter_map(|(s, sh)| sh.running.map(|r| (r.done_at, s)))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            match (arrival, completion) {
+                (None, None) => break,
+                (Some(at), Some((ct, shard))) => {
+                    // completions at the same instant run first so the
+                    // freed shard is visible to the arrival's router
+                    if ct <= at {
+                        self.complete(shard);
+                    } else {
+                        self.admit(next_arrival, at);
+                        next_arrival += 1;
+                    }
+                }
+                (Some(at), None) => {
+                    self.admit(next_arrival, at);
+                    next_arrival += 1;
+                }
+                (None, Some((_, shard))) => self.complete(shard),
+            }
+        }
+        Ok(())
+    }
+
+    /// Route one fresh arrival at modeled time `t`.
+    fn admit(&mut self, job: usize, t: f64) {
+        if self.jobs[job].priority == Priority::Urgent {
+            self.window.observe(t);
+        }
+        self.route(job, t);
+    }
+
+    /// Route `job` (fresh or resumed) through the real policy.
+    fn route(&mut self, job: usize, t: f64) {
+        let views: Vec<ShardView> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, sh)| ShardView {
+                shard: s,
+                queue_depth: sh.queue.len(),
+                in_flight: sh.running.map(|r| self.jobs[r.job].priority),
+                stats: ServiceStats::default(),
+            })
+            .collect();
+        let target = self
+            .policy
+            .route(self.jobs[job].priority, self.jobs[job].deadline, &views)
+            .min(self.shards.len() - 1);
+
+        if self.shards[target].queue.len() >= QUEUE_CAP {
+            self.out.shed += 1;
+            self.out.slo_misses += 1;
+            return;
+        }
+        self.shards[target].queue.push(job);
+
+        // epoch-barrier preemption: a strictly lower-priority slice in
+        // flight on the chosen shard is truncated to its next barrier
+        if let Some(r) = self.shards[target].running {
+            if self.jobs[r.job].priority < self.jobs[job].priority {
+                self.truncate(target, t);
+            }
+        } else {
+            self.start_next(target, t);
+        }
+    }
+
+    /// Shorten the running slice on `shard` to the next epoch barrier
+    /// at or after modeled time `t` (at least one epoch always retires,
+    /// matching the engine's zero-budget→one-epoch convention).
+    fn truncate(&mut self, shard: usize, t: f64) {
+        let Some(r) = self.shards[shard].running.as_mut() else { return };
+        let epoch = self.jobs[r.job].epoch_secs;
+        let overhead_secs = f64::from(r.overhead) * epoch;
+        let body_elapsed = (t - r.started - overhead_secs).max(0.0);
+        let barrier = (body_elapsed / epoch).ceil() as u32;
+        let barrier = barrier.clamp(1, r.epochs);
+        if barrier < r.epochs {
+            r.epochs = barrier;
+            r.done_at = r.started + overhead_secs + f64::from(barrier) * epoch;
+            r.truncated = true;
+        }
+    }
+
+    /// Retire the slice running on `shard`; complete or re-route its
+    /// job, then refill the shard.
+    fn complete(&mut self, shard: usize) {
+        let Some(r) = self.shards[shard].running.take() else { return };
+        let t = r.done_at;
+        self.out.work_epochs += u64::from(r.epochs);
+        self.out.waste_epochs += u64::from(r.overhead);
+        if r.truncated {
+            self.out.preemptions += 1;
+        }
+        let job = &mut self.jobs[r.job];
+        job.remaining = job.remaining.saturating_sub(r.epochs);
+        if job.remaining == 0 {
+            self.out.served += 1;
+            let latency = t - job.arrival;
+            self.out.latencies.add(latency);
+            if job.deadline.is_some_and(|d| t > d) {
+                self.out.slo_misses += 1;
+            }
+        } else {
+            job.resumes += 1;
+            self.out.resumes += 1;
+            self.route(r.job, t);
+        }
+        if self.shards[shard].running.is_none() {
+            self.start_next(shard, t);
+        }
+    }
+
+    /// Pop the best queued request (highest priority, then earliest
+    /// arrival, then lowest id) and start its next slice; expired
+    /// requests are shed on pop, exactly like live admission.
+    fn start_next(&mut self, shard: usize, t: f64) {
+        let cap = self.shards[shard].queue.len();
+        // each pass either sheds one expired request or starts a slice,
+        // so `cap` passes always drain or occupy the shard
+        for _ in 0..cap {
+            let queue = &self.shards[shard].queue;
+            let Some(pick) = queue
+                .iter()
+                .enumerate()
+                .min_by(|(_, &a), (_, &b)| {
+                    let ja = &self.jobs[a];
+                    let jb = &self.jobs[b];
+                    jb.priority
+                        .cmp(&ja.priority)
+                        .then(ja.arrival.total_cmp(&jb.arrival))
+                        .then(a.cmp(&b))
+                })
+                .map(|(i, _)| i)
+            else {
+                return;
+            };
+            let job_idx = self.shards[shard].queue.remove(pick);
+            let job = &self.jobs[job_idx];
+            if job.deadline.is_some_and(|d| d < t) {
+                self.out.shed += 1;
+                self.out.slo_misses += 1;
+                continue;
+            }
+            let quota = self.quota.episode_quota(self.window.rate()).map(|q| q.max(1));
+            let epochs = quota.map_or(job.remaining, |q| q.min(job.remaining));
+            let overhead = if job.resumes > 0 { RESUME_OVERHEAD_EPOCHS } else { 0 };
+            let done_at = t + f64::from(epochs + overhead) * job.epoch_secs;
+            self.shards[shard].running = Some(Running {
+                job: job_idx,
+                overhead,
+                epochs,
+                started: t,
+                done_at,
+                truncated: false,
+            });
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::PlatformKind;
+    use crate::cluster::experiment::grid::ExperimentGrid;
+    use crate::cluster::experiment::QuotaSpec;
+    use crate::scheduler::ArrivalProcess;
+    use crate::workload::WorkloadClass;
+
+    fn cell(rate: f64, quota: QuotaSpec) -> CellConfig {
+        CellConfig {
+            index: 0,
+            rate,
+            process: ArrivalProcess::Poisson,
+            policy: "least-queue".to_string(),
+            shards: 2,
+            quota,
+            class: WorkloadClass::Simple,
+            platform: PlatformKind::Edge,
+            horizon: 0.2,
+            deadline_factor: 3.0,
+            background_tasks: 2,
+        }
+    }
+
+    #[test]
+    fn every_submission_terminates_exactly_once() {
+        let run = evaluate_cell(&cell(200.0, QuotaSpec::Static(Some(8))), 7).expect("evaluates");
+        assert!(run.submitted > 0);
+        assert_eq!(run.served + run.shed, run.submitted);
+        assert_eq!(run.latencies.count(), run.served);
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_and_seeds_differ() {
+        let c = cell(300.0, QuotaSpec::Static(Some(8)));
+        let a = evaluate_cell(&c, 11).expect("evaluates");
+        let b = evaluate_cell(&c, 11).expect("evaluates");
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.slo_misses, b.slo_misses);
+        assert_eq!(a.work_epochs, b.work_epochs);
+        assert_eq!(a.latencies.sum().to_bits(), b.latencies.sum().to_bits());
+        let c2 = evaluate_cell(&c, 12).expect("evaluates");
+        assert!(
+            a.latencies.sum().to_bits() != c2.latencies.sum().to_bits()
+                || a.submitted != c2.submitted,
+            "different seeds should differ somewhere"
+        );
+    }
+
+    #[test]
+    fn overload_drives_misses_up() {
+        let grid_rate =
+            super::super::grid::rate_for_load(WorkloadClass::Simple, PlatformKind::Edge, 2, 1.0);
+        let light = evaluate_cell(&cell(grid_rate * 0.2, QuotaSpec::Static(None)), 5)
+            .expect("evaluates");
+        let heavy = evaluate_cell(&cell(grid_rate * 3.0, QuotaSpec::Static(None)), 5)
+            .expect("evaluates");
+        assert!(
+            heavy.slo_miss_rate() > light.slo_miss_rate(),
+            "3× overload ({}) should miss more than 0.2× load ({})",
+            heavy.slo_miss_rate(),
+            light.slo_miss_rate()
+        );
+    }
+
+    #[test]
+    fn slicing_pays_resume_overhead() {
+        let unsliced =
+            evaluate_cell(&cell(250.0, QuotaSpec::Static(None)), 9).expect("evaluates");
+        assert_eq!(unsliced.resumes, 0, "no quota, no resumes");
+        assert_eq!(unsliced.waste_epochs, 0);
+        let sliced =
+            evaluate_cell(&cell(250.0, QuotaSpec::Static(Some(4))), 9).expect("evaluates");
+        assert!(sliced.resumes > 0, "a 4-epoch quota must slice 64-epoch episodes");
+        assert!(sliced.preempt_waste() > 0.0);
+    }
+
+    #[test]
+    fn smoke_grid_cells_all_evaluate() {
+        let grid = ExperimentGrid::smoke(42);
+        for c in grid.cells().iter().take(6) {
+            let run = evaluate_cell(c, 1).expect("cell evaluates");
+            assert!(run.submitted > 0);
+        }
+    }
+}

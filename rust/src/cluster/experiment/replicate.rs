@@ -1,0 +1,185 @@
+//! Campaign execution: run every (cell × replication) job of a grid on
+//! a bounded worker pool, then merge and aggregate in deterministic
+//! cell order.
+//!
+//! Workers claim jobs from an atomic counter and write each result into
+//! its pre-assigned slot, so thread interleaving affects only *when* a
+//! result lands, never *where* — the merged campaign is a pure function
+//! of the grid.  `tests/experiment.rs` proves it by running the same
+//! grid with different pool widths and asserting byte-identical
+//! summaries.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{ci95, mean, stddev};
+use crate::Result;
+
+use super::grid::{replication_seed, CellConfig, ExperimentGrid};
+use super::lbt::{lbt_curve, LbtPoint};
+use super::model::{evaluate_cell, CellRun};
+
+/// Mean ± spread of one metric across a cell's replications.
+#[derive(Clone, Copy, Debug)]
+pub struct AggStat {
+    pub mean: f64,
+    pub stddev: f64,
+    pub ci95: f64,
+}
+
+/// NaN-safe aggregation of replication samples.
+pub fn agg(samples: &[f64]) -> AggStat {
+    AggStat { mean: mean(samples), stddev: stddev(samples), ci95: ci95(samples) }
+}
+
+/// One cell's replication-aggregated results.
+#[derive(Clone, Debug)]
+pub struct CellSummary {
+    pub cell: CellConfig,
+    pub reps: usize,
+    pub slo_miss_rate: AggStat,
+    /// Mean per-replication latency percentiles (s); NaN when no
+    /// replication completed anything.
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    /// Mean fraction of retired epochs burned on resume overhead.
+    pub preempt_waste: AggStat,
+    pub submitted_mean: f64,
+    pub served_mean: f64,
+    pub shed_mean: f64,
+    pub preemptions_mean: f64,
+    pub resumes_mean: f64,
+}
+
+/// A fully executed campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub cells: Vec<CellSummary>,
+    pub lbt: Vec<LbtPoint>,
+}
+
+/// Execute the full campaign: every grid cell × replication on a pool
+/// of `workers` threads, then the per-policy LBT search.
+pub fn run_campaign(grid: &ExperimentGrid, workers: usize) -> Result<CampaignResult> {
+    let cells = grid.cells();
+    let reps = grid.replications.max(1);
+    let job_cap = cells.len() * reps;
+    let runs: Mutex<Vec<Option<CellRun>>> = Mutex::new((0..job_cap).map(|_| None).collect());
+    let first_error: Mutex<Option<String>> = Mutex::new(None);
+    let next = AtomicUsize::new(0);
+    let pool = workers.clamp(1, job_cap.max(1));
+
+    std::thread::scope(|scope| {
+        for _ in 0..pool {
+            scope.spawn(|| {
+                // claim-loop: bounded by job_cap, one claim per pass
+                loop {
+                    let slot = next.fetch_add(1, Ordering::Relaxed);
+                    if slot >= job_cap {
+                        break;
+                    }
+                    let cell = &cells[slot / reps];
+                    let rep = slot % reps;
+                    let seed = replication_seed(grid.campaign_seed, cell.index, rep);
+                    match evaluate_cell(cell, seed) {
+                        Ok(run) => {
+                            let mut guard =
+                                runs.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                            guard[slot] = Some(run);
+                        }
+                        Err(e) => {
+                            let mut guard = first_error
+                                .lock()
+                                .unwrap_or_else(std::sync::PoisonError::into_inner);
+                            guard.get_or_insert_with(|| format!("cell {}: {e}", cell.id()));
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let error = first_error.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+    if let Some(e) = error {
+        anyhow::bail!("campaign replication failed: {e}");
+    }
+    let runs = runs.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+
+    // merge in deterministic cell order: slot layout is cell-major
+    let mut summaries = Vec::with_capacity(cells.len());
+    for (ci, cell) in cells.iter().enumerate() {
+        let cell_runs: Vec<&CellRun> = runs[ci * reps..(ci + 1) * reps]
+            .iter()
+            .map(|r| r.as_ref().expect("all replications completed or we bailed"))
+            .collect();
+        summaries.push(summarize_cell(cell.clone(), &cell_runs));
+    }
+
+    let lbt = lbt_curve(grid)?;
+    Ok(CampaignResult { cells: summaries, lbt })
+}
+
+fn summarize_cell(cell: CellConfig, runs: &[&CellRun]) -> CellSummary {
+    let metric = |f: &dyn Fn(&CellRun) -> f64| -> Vec<f64> {
+        runs.iter().map(|&r| f(r)).collect()
+    };
+    let pct = |q: f64| -> f64 {
+        let per_rep: Vec<f64> = runs
+            .iter()
+            .map(|r| {
+                let mut s = r.latencies.clone();
+                s.percentile(q)
+            })
+            .collect();
+        mean(&per_rep)
+    };
+    CellSummary {
+        reps: runs.len(),
+        slo_miss_rate: agg(&metric(&|r| r.slo_miss_rate())),
+        p50_s: pct(50.0),
+        p95_s: pct(95.0),
+        p99_s: pct(99.0),
+        preempt_waste: agg(&metric(&|r| r.preempt_waste())),
+        submitted_mean: mean(&metric(&|r| r.submitted as f64)),
+        served_mean: mean(&metric(&|r| r.served as f64)),
+        shed_mean: mean(&metric(&|r| r.shed as f64)),
+        preemptions_mean: mean(&metric(&|r| r.preemptions as f64)),
+        resumes_mean: mean(&metric(&|r| r.resumes as f64)),
+        cell,
+    }
+}
+
+/// The quota tournament: mean SLO-miss rate per quota spec across every
+/// cell that used it, in grid quota order.  Returns
+/// `(quota name, mean miss rate, cells)` rows.
+pub fn tournament(grid: &ExperimentGrid, result: &CampaignResult) -> Vec<(String, f64, usize)> {
+    grid.quotas
+        .iter()
+        .map(|q| {
+            let name = q.name();
+            let misses: Vec<f64> = result
+                .cells
+                .iter()
+                .filter(|c| c.cell.quota.name() == name)
+                .map(|c| c.slo_miss_rate.mean)
+                .collect();
+            (name, mean(&misses), misses.len())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agg_handles_degenerate_inputs() {
+        let a = agg(&[]);
+        assert!(a.mean.is_nan());
+        assert_eq!(a.stddev, 0.0);
+        let b = agg(&[0.25, 0.35]);
+        assert!((b.mean - 0.3).abs() < 1e-12);
+        assert!(b.ci95 > 0.0);
+    }
+}

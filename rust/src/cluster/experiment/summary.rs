@@ -1,0 +1,110 @@
+//! Canonical campaign summary document.
+//!
+//! One deterministic [`Json`] object per campaign: grid description,
+//! per-cell aggregates in grid order, the per-policy LBT curve, and the
+//! quota tournament.  Field order is fixed and every number is a pure
+//! function of (grid, campaign seed), so two runs of the same campaign
+//! render byte-identical text — the property `tests/experiment.rs`
+//! asserts and CI's smoke step re-proves on every push.
+
+use crate::util::json::{hex_u64, Json};
+
+use super::grid::ExperimentGrid;
+use super::replicate::{tournament, AggStat, CampaignResult};
+
+/// Non-finite metrics (empty-cell percentiles, 0/0 rates) become JSON
+/// `null` explicitly rather than relying on the renderer's last-resort
+/// degradation.
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::from(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn agg_json(a: &AggStat) -> Json {
+    Json::obj(vec![("mean", num(a.mean)), ("stddev", num(a.stddev)), ("ci95", num(a.ci95))])
+}
+
+/// Render the full campaign into its canonical summary document.
+pub fn summary_json(grid: &ExperimentGrid, result: &CampaignResult) -> Json {
+    let grid_json = Json::obj(vec![
+        ("class", Json::from(grid.class.name())),
+        ("platform", Json::from(grid.platform.name())),
+        ("horizon_s", num(grid.horizon)),
+        ("deadline_factor", num(grid.deadline_factor)),
+        ("background_tasks", Json::from(grid.background_tasks)),
+        ("rates", Json::Arr(grid.rates.iter().map(|&r| num(r)).collect())),
+        ("shapes", Json::Arr(grid.shapes.iter().map(|s| Json::from(s.name())).collect())),
+        ("policies", Json::Arr(grid.policies.iter().map(|p| Json::from(p.as_str())).collect())),
+        ("shard_counts", Json::Arr(grid.shard_counts.iter().map(|&s| Json::from(s)).collect())),
+        ("quotas", Json::Arr(grid.quotas.iter().map(|q| Json::from(q.name().as_str())).collect())),
+    ]);
+
+    let cells: Vec<Json> = result
+        .cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("id", Json::from(c.cell.id().as_str())),
+                ("rate", num(c.cell.rate)),
+                ("shape", Json::from(c.cell.process.name())),
+                ("policy", Json::from(c.cell.policy.as_str())),
+                ("shards", Json::from(c.cell.shards)),
+                ("quota", Json::from(c.cell.quota.name().as_str())),
+                ("reps", Json::from(c.reps)),
+                ("submitted_mean", num(c.submitted_mean)),
+                ("served_mean", num(c.served_mean)),
+                ("shed_mean", num(c.shed_mean)),
+                ("slo_miss_rate", agg_json(&c.slo_miss_rate)),
+                ("p50_s", num(c.p50_s)),
+                ("p95_s", num(c.p95_s)),
+                ("p99_s", num(c.p99_s)),
+                ("preempt_waste", agg_json(&c.preempt_waste)),
+                ("preemptions_mean", num(c.preemptions_mean)),
+                ("resumes_mean", num(c.resumes_mean)),
+            ])
+        })
+        .collect();
+
+    let lbt: Vec<Json> = result
+        .lbt
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("policy", Json::from(p.policy.as_str())),
+                ("lbt_rate", num(p.outcome.rate)),
+                ("target_miss", num(p.target_miss)),
+                ("probes", Json::from(p.outcome.probes)),
+                ("saturated_budget", Json::from(p.outcome.saturated_budget)),
+            ])
+        })
+        .collect();
+
+    let rows = tournament(grid, result);
+    let best = rows
+        .iter()
+        .map(|(_, miss, _)| *miss)
+        .fold(f64::INFINITY, |a, b| if b.is_nan() { a } else { a.min(b) });
+    let tournament_json: Vec<Json> = rows
+        .iter()
+        .map(|(name, miss, cells)| {
+            Json::obj(vec![
+                ("quota", Json::from(name.as_str())),
+                ("slo_miss_rate", num(*miss)),
+                ("cells", Json::from(*cells)),
+                ("best", Json::from(!miss.is_nan() && *miss <= best + 1e-12)),
+            ])
+        })
+        .collect();
+
+    Json::obj(vec![
+        ("campaign_seed", hex_u64(grid.campaign_seed)),
+        ("replications", Json::from(grid.replications)),
+        ("grid", grid_json),
+        ("cells", Json::Arr(cells)),
+        ("lbt", Json::Arr(lbt)),
+        ("tournament", Json::Arr(tournament_json)),
+    ])
+}

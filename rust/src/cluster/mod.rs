@@ -40,6 +40,11 @@
 //!   speaks the `immsched.fleet-wire/v1` join/heartbeat/leave protocol
 //!   so the router *discovers* workers, and [`ElasticScaler`] grows
 //!   and retires shard slots against the observed queue depth.
+//! * [`experiment`] — replicated sweep campaigns over the stack:
+//!   declarative parameter grids, seeded replications merged in
+//!   deterministic cell order, per-policy LBT search, and the quota
+//!   tournament that sizes epoch slices adaptively from the observed
+//!   arrival rate.
 //!
 //! Request lifecycle: **route → submit (transport) → admit → engine
 //! chain → outcome**, with `Cancelled` outcomes feeding the resume
@@ -47,6 +52,7 @@
 
 pub mod chaos;
 pub mod driver;
+pub mod experiment;
 pub mod net;
 pub mod policy;
 pub mod resume;

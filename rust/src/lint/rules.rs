@@ -70,6 +70,7 @@ const DETERMINISTIC_MODULES: &[&str] = &[
     "src/obs/",
     "src/cluster/wire.rs",
     "src/cluster/policy.rs",
+    "src/cluster/experiment/",
     "src/scheduler/lts_policies.rs",
 ];
 
@@ -107,9 +108,15 @@ const TRANSPORT_MODULES: &[&str] = &[
 const WIRE_MODULES: &[&str] = &["src/cluster/wire.rs"];
 
 /// The fault-recovery layer ([`NO_UNBOUNDED_RETRY`]): supervision,
-/// chaos, and the socket subsystem's reconnect/accept/heartbeat loops.
-const RETRY_MODULES: &[&str] =
-    &["src/cluster/supervise.rs", "src/cluster/chaos.rs", "src/cluster/net/"];
+/// chaos, the socket subsystem's reconnect/accept/heartbeat loops, and
+/// the experiment harness's event/claim loops (a campaign that spins
+/// forever is as dead as a worker that never reconnects).
+const RETRY_MODULES: &[&str] = &[
+    "src/cluster/supervise.rs",
+    "src/cluster/chaos.rs",
+    "src/cluster/net/",
+    "src/cluster/experiment/",
+];
 
 fn in_listed(rel: &str, list: &[&str]) -> bool {
     list.iter().any(|m| if m.ends_with('/') { rel.starts_with(m) } else { rel == *m })

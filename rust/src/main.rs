@@ -5,6 +5,7 @@
 //!   run [--config F] [--set K=V]  one simulation run, summary to stdout
 //!   match --model M [...]         one interrupt episode on the coordinator
 //!   cluster [--shards N] [...]    open-loop trace against the sharded cluster
+//!   experiment [--smoke] [...]    replicated sweep campaign + LBT search
 //!   shard-listen [--addr A] [...] host shards behind a TCP/UDS socket
 //!   metrics [--watch MS|--in F]   observability plane: live registry or dump file
 //!   info                          platforms, workloads, artifact registry
@@ -20,6 +21,7 @@ use std::time::Duration;
 
 use immsched::accel::{build_target_graph, Platform};
 use immsched::cluster::driver::{run_open_loop, schedule_from_trace, DriverConfig};
+use immsched::cluster::experiment::{run_campaign, summary_json, ExperimentGrid};
 use immsched::cluster::net::{announce, ListenConfig, NetAddr, ShardListener, SocketShard};
 use immsched::cluster::{
     policy_by_name, ClusterConfig, MatchCluster, RoutePolicy, ShardTransport, SupervisedFleet,
@@ -31,6 +33,7 @@ use immsched::coordinator::{
     ServiceConfig, ServiceStats, UllmannEngine, Vf2Engine,
 };
 use immsched::matcher::PsoConfig;
+use immsched::report::figures::experiment_report;
 use immsched::runtime::ArtifactRegistry;
 use immsched::scheduler::{
     build_trace, metrics, ArrivalProcess, FrameworkKind, Priority, SimConfig, Simulator,
@@ -59,6 +62,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("match") => cmd_match(&args[1..]),
         Some("cluster") => cmd_cluster(&args[1..]),
+        Some("experiment") => cmd_experiment(&args[1..]),
         Some("shard-worker") => cmd_shard_worker(),
         Some("shard-listen") => cmd_shard_listen(&args[1..]),
         Some("metrics") => cmd_metrics(&args[1..]),
@@ -95,6 +99,12 @@ fn print_help() {
                                              --obs-out: enable the observability\n\
                                              plane and write the flight-recorder\n\
                                              dump to FILE)\n\
+           experiment [--smoke] [--seed S] [--reps N] [--workers N] [--out FILE]\n\
+                                            replicated sweep campaign on the modeled\n\
+                                            cluster: every rate x shape x policy x\n\
+                                            shards x quota cell, the quota tournament,\n\
+                                            and the per-policy LBT search (--out:\n\
+                                            write the canonical summary JSON)\n\
            metrics [--watch MS] [--in FILE]\n\
                                             observability plane: run a small demo\n\
                                             workload and print the metric registry\n\
@@ -607,6 +617,70 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
         immsched::obs::recorder::dump_to_disk("run-complete");
         println!("obs: flight-recorder dump written to {}", path.display());
         print!("{}", immsched::obs::registry().render_text());
+    }
+    Ok(())
+}
+
+/// `immsched experiment`: run a replicated sweep campaign — every grid
+/// cell × seeded replications on a bounded worker pool, the quota
+/// tournament, and the per-policy LBT search — on the deterministic
+/// modeled cluster, then print the rendered report.  `--out FILE`
+/// additionally writes the canonical summary JSON (byte-identical for
+/// the same grid and campaign seed).
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let mut smoke = false;
+    let mut seed = 42u64;
+    let mut reps: Option<usize> = None;
+    let mut workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let mut out: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let value = |i: usize| args.get(i + 1).context("option needs a value");
+        match args[i].as_str() {
+            "--smoke" => {
+                smoke = true;
+                i += 1;
+            }
+            "--seed" => {
+                seed = value(i)?.parse()?;
+                i += 2;
+            }
+            "--reps" => {
+                reps = Some(value(i)?.parse()?);
+                i += 2;
+            }
+            "--workers" => {
+                workers = value(i)?.parse::<usize>()?.max(1);
+                i += 2;
+            }
+            "--out" => {
+                out = Some(PathBuf::from(value(i)?));
+                i += 2;
+            }
+            other => bail!("unknown option {other:?}"),
+        }
+    }
+    let mut grid = if smoke {
+        ExperimentGrid::smoke(seed)
+    } else {
+        ExperimentGrid::standard(seed)
+    };
+    if let Some(r) = reps {
+        grid.replications = r.max(1);
+    }
+    println!(
+        "experiment: {} cells x {} replications (campaign seed {seed}, {workers} workers)",
+        grid.cells().len(),
+        grid.replications
+    );
+    let result = run_campaign(&grid, workers)?;
+    let summary = summary_json(&grid, &result);
+    for t in &experiment_report(&summary) {
+        print!("{}", t.render());
+    }
+    if let Some(path) = &out {
+        std::fs::write(path, summary.render())?;
+        println!("experiment: summary written to {}", path.display());
     }
     Ok(())
 }

@@ -441,6 +441,7 @@ pub fn fig8(grid: &GridResults) -> Table {
 /// Current schema tags of the tracked bench trajectory files.
 pub const MATCHER_BENCH_SCHEMA: &str = "immsched.bench_matcher/v2";
 pub const CLUSTER_BENCH_SCHEMA: &str = "immsched.bench_cluster/v1";
+pub const EXPERIMENT_BENCH_SCHEMA: &str = "immsched.bench_experiment/v1";
 
 /// Default locations of the tracked trajectories (repo root).
 pub fn default_trajectory_paths() -> (std::path::PathBuf, std::path::PathBuf) {
@@ -661,6 +662,87 @@ pub fn obs_trajectory(cluster_text: &str) -> anyhow::Result<Table> {
         ]);
     }
     Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Experiment-campaign report (cluster::experiment summaries)
+// ---------------------------------------------------------------------------
+
+/// The campaign's LBT curve: max sustainable arrival rate per route
+/// policy at the configured SLO-miss threshold (the paper's Fig. 7
+/// analogue over the modeled cluster).
+pub fn experiment_lbt_table(summary: &crate::util::json::Json) -> Table {
+    use crate::util::json::Json;
+    let mut t = Table::new("LBT: max sustainable λ per route policy")
+        .header(&["policy", "LBT (req/s)", "miss target", "probes", "note"]);
+    for p in summary.get("lbt").and_then(Json::as_array).unwrap_or(&[]) {
+        let num = |k: &str| p.get(k).and_then(Json::as_f64);
+        let saturated = p.get("saturated_budget").and_then(Json::as_bool).unwrap_or(false);
+        t.row(vec![
+            p.get("policy").and_then(Json::as_str).unwrap_or("?").into(),
+            num("lbt_rate").map_or("-".into(), |r| format!("{r:.1}")),
+            num("target_miss").map_or("-".into(), fmt_ratio),
+            num("probes").map_or("-".into(), |n| format!("{n}")),
+            if saturated { "≥ (budget-capped)".into() } else { String::new() },
+        ]);
+    }
+    t
+}
+
+/// Per-cell tail-latency / SLO-miss / preemption-waste table, one row
+/// per grid cell in canonical cell order.
+pub fn experiment_cells_table(summary: &crate::util::json::Json) -> Table {
+    use crate::util::json::Json;
+    const COLS: [&str; 9] =
+        ["cell", "reps", "submitted", "SLO miss ±ci95", "p50", "p95", "p99", "waste", "resumes"];
+    let mut t = Table::new("grid cells: tail latency, SLO miss, preemption waste").header(&COLS);
+    for c in summary.get("cells").and_then(Json::as_array).unwrap_or(&[]) {
+        let num = |k: &str| c.get(k).and_then(Json::as_f64);
+        let agg = |k: &str, f: &str| c.get(k).and_then(|a| a.get(f)).and_then(Json::as_f64);
+        let miss = agg("slo_miss_rate", "mean");
+        let ci = agg("slo_miss_rate", "ci95").unwrap_or(0.0);
+        t.row(vec![
+            c.get("id").and_then(Json::as_str).unwrap_or("?").into(),
+            num("reps").map_or("-".into(), |n| format!("{n}")),
+            num("submitted_mean").map_or("-".into(), |n| format!("{n:.1}")),
+            miss.map_or("-".into(), |m| format!("{} ±{:.3}", fmt_ratio(m), ci)),
+            num("p50_s").map_or("-".into(), fmt_time),
+            num("p95_s").map_or("-".into(), fmt_time),
+            num("p99_s").map_or("-".into(), fmt_time),
+            agg("preempt_waste", "mean").map_or("-".into(), fmt_ratio),
+            num("resumes_mean").map_or("-".into(), |n| format!("{n:.1}")),
+        ]);
+    }
+    t
+}
+
+/// The quota tournament: mean SLO-miss rate per epoch-quota spec across
+/// every cell that used it, winner(s) flagged.
+pub fn experiment_tournament_table(summary: &crate::util::json::Json) -> Table {
+    use crate::util::json::Json;
+    let mut t = Table::new("quota tournament: SLO-miss rate per epoch-quota policy")
+        .header(&["quota", "mean SLO miss", "cells", "verdict"]);
+    for q in summary.get("tournament").and_then(Json::as_array).unwrap_or(&[]) {
+        let best = q.get("best").and_then(Json::as_bool).unwrap_or(false);
+        t.row(vec![
+            q.get("quota").and_then(Json::as_str).unwrap_or("?").into(),
+            q.get("slo_miss_rate").and_then(Json::as_f64).map_or("-".into(), fmt_ratio),
+            q.get("cells").and_then(Json::as_f64).map_or("-".into(), |n| format!("{n}")),
+            if best { "wins/ties".into() } else { String::new() },
+        ]);
+    }
+    t
+}
+
+/// The full rendered campaign report (LBT curve, quota tournament,
+/// per-cell tables) — what `bench_experiment --report-out` writes and
+/// CI uploads next to the trajectory.
+pub fn experiment_report(summary: &crate::util::json::Json) -> Vec<Table> {
+    vec![
+        experiment_lbt_table(summary),
+        experiment_tournament_table(summary),
+        experiment_cells_table(summary),
+    ]
 }
 
 #[cfg(test)]

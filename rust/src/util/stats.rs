@@ -89,6 +89,56 @@ impl Summary {
     }
 }
 
+// ---------------------------------------------------------------------------
+// NaN-safe replication aggregators
+// ---------------------------------------------------------------------------
+//
+// The experiment harness aggregates per-replication metrics where a
+// degenerate cell (zero completions, zero submissions) legitimately
+// produces NaN for one replication.  These helpers skip NaN samples so
+// one poisoned replication narrows the sample instead of poisoning the
+// whole cell summary.  ±inf samples are *kept* — an infinite latency is
+// a real (terrible) observation, not a hole in the data.
+
+/// Mean of the non-NaN samples; NaN when none remain.
+pub fn mean(values: &[f64]) -> f64 {
+    let mut n = 0usize;
+    let mut sum = 0.0;
+    for v in values.iter().filter(|v| !v.is_nan()) {
+        n += 1;
+        sum += v;
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Sample standard deviation of the non-NaN samples; 0.0 when fewer
+/// than two remain (a single replication has no spread to report).
+pub fn stddev(values: &[f64]) -> f64 {
+    let clean: Vec<f64> = values.iter().copied().filter(|v| !v.is_nan()).collect();
+    if clean.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(&clean);
+    let var =
+        clean.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (clean.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Half-width of the normal-approximation 95% confidence interval on the
+/// mean (1.96·s/√n over the non-NaN samples).  NaN when no samples
+/// remain; 0.0 for a single sample, matching [`stddev`].
+pub fn ci95(values: &[f64]) -> f64 {
+    let n = values.iter().filter(|v| !v.is_nan()).count();
+    if n == 0 {
+        return f64::NAN;
+    }
+    1.96 * stddev(values) / (n as f64).sqrt()
+}
+
 /// Geometric mean — the paper reports normalized speedups averaged across
 /// workloads; geo-mean is the standard aggregator for ratios.
 pub fn geomean(values: &[f64]) -> f64 {
@@ -128,6 +178,33 @@ mod tests {
     #[test]
     fn empty_summary_is_nan() {
         assert!(Summary::new().mean().is_nan());
+    }
+
+    #[test]
+    fn nan_safe_aggregators_on_empty_input() {
+        assert!(mean(&[]).is_nan());
+        assert_eq!(stddev(&[]), 0.0);
+        assert!(ci95(&[]).is_nan());
+    }
+
+    #[test]
+    fn nan_safe_aggregators_on_single_sample() {
+        assert_eq!(mean(&[3.5]), 3.5);
+        assert_eq!(stddev(&[3.5]), 0.0);
+        assert_eq!(ci95(&[3.5]), 0.0);
+    }
+
+    #[test]
+    fn nan_safe_aggregators_skip_nan_samples() {
+        let dirty = [2.0, f64::NAN, 4.0, f64::NAN, 6.0];
+        assert!((mean(&dirty) - 4.0).abs() < 1e-12);
+        assert!((stddev(&dirty) - 2.0).abs() < 1e-12);
+        // n = 3 non-NaN samples: 1.96 · 2 / √3
+        assert!((ci95(&dirty) - 1.96 * 2.0 / 3.0_f64.sqrt()).abs() < 1e-12);
+        // all-NaN degrades like empty
+        assert!(mean(&[f64::NAN, f64::NAN]).is_nan());
+        assert_eq!(stddev(&[f64::NAN]), 0.0);
+        assert!(ci95(&[f64::NAN]).is_nan());
     }
 
     #[test]

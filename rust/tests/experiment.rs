@@ -1,0 +1,95 @@
+//! Integration gates for `cluster::experiment`: the campaign summary
+//! is a pure function of (grid, campaign seed) regardless of worker
+//! pool width, the LBT search spends a bounded and fully accounted
+//! probe budget, the quota tournament shows the adaptive policy
+//! winning or tying every static quota, and the rendered report covers
+//! every policy and every grid cell.
+
+use immsched::cluster::experiment::{
+    bisect_max_rate, run_campaign, summary_json, ExperimentGrid, LbtConfig,
+};
+use immsched::report::figures::experiment_report;
+use immsched::util::json::Json;
+
+#[test]
+fn campaign_summary_is_byte_identical_across_runs_and_pool_widths() {
+    let grid = ExperimentGrid::smoke(7);
+    let wide = run_campaign(&grid, 3).expect("campaign on 3 workers");
+    let narrow = run_campaign(&grid, 1).expect("campaign on 1 worker");
+    let a = summary_json(&grid, &wide).render();
+    let b = summary_json(&grid, &narrow).render();
+    assert_eq!(a, b, "summary must be a pure function of (grid, campaign seed)");
+
+    // a different campaign seed must actually change the numbers
+    let other = ExperimentGrid::smoke(8);
+    let c = summary_json(&other, &run_campaign(&other, 2).expect("campaign")).render();
+    assert_ne!(a, c, "campaign seed must reach the replication RNGs");
+}
+
+#[test]
+fn lbt_bisection_terminates_within_its_accounted_probe_budget() {
+    let cfg = LbtConfig { target_miss: 0.1, hi0: 50.0, max_doublings: 5, bisections: 12 };
+    // synthetic monotone SLO-miss ramp crossing the target at rate 130
+    let mut calls = 0usize;
+    let out = bisect_max_rate(
+        |rate| {
+            calls += 1;
+            assert!(calls <= cfg.probe_budget(), "probe #{calls} exceeds the budget");
+            (rate / 1300.0).min(1.0)
+        },
+        &cfg,
+    );
+    assert_eq!(out.probes, calls, "every probe must be accounted");
+    assert!(!out.saturated_budget);
+    assert!((out.rate - 130.0).abs() < 2.0, "LBT {} should be ~130", out.rate);
+}
+
+#[test]
+fn smoke_tournament_adaptive_quota_dominates_and_report_covers_the_grid() {
+    let grid = ExperimentGrid::smoke(42);
+    let result = run_campaign(&grid, 4).expect("smoke campaign");
+    let summary = summary_json(&grid, &result);
+
+    // every route policy got an LBT point with a concrete rate
+    let lbt = summary.get("lbt").and_then(Json::as_array).expect("lbt array");
+    assert_eq!(lbt.len(), grid.policies.len());
+    for p in lbt {
+        assert!(p.get("lbt_rate").and_then(Json::as_f64).is_some(), "{p:?} has no rate");
+    }
+
+    // every grid cell got a summary row
+    let cells = summary.get("cells").and_then(Json::as_array).expect("cells array");
+    assert_eq!(cells.len(), grid.cells().len());
+
+    // the adaptive quota wins or ties every static quota on mean SLO miss
+    let tournament = summary.get("tournament").and_then(Json::as_array).expect("tournament");
+    let adaptive = tournament
+        .iter()
+        .find(|q| q.get("quota").and_then(Json::as_str) == Some("adaptive"))
+        .expect("adaptive tournament row");
+    let adaptive_miss = adaptive
+        .get("slo_miss_rate")
+        .and_then(Json::as_f64)
+        .expect("adaptive row has a finite miss rate");
+    for q in tournament {
+        let name = q.get("quota").and_then(Json::as_str).unwrap_or("?");
+        let miss = q.get("slo_miss_rate").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        assert!(
+            adaptive_miss <= miss + 1e-9,
+            "adaptive ({adaptive_miss:.4}) loses to {name} ({miss:.4})"
+        );
+    }
+    assert_eq!(
+        adaptive.get("best").and_then(Json::as_bool),
+        Some(true),
+        "the adaptive row must carry the best flag"
+    );
+
+    // the rendered report: LBT + tournament + per-cell tables, all populated
+    let tables = experiment_report(&summary);
+    assert_eq!(tables.len(), 3);
+    for t in &tables {
+        let text = t.render();
+        assert!(text.lines().count() > 3, "table renders with rows:\n{text}");
+    }
+}

@@ -369,6 +369,72 @@ fn age() -> f64 {
 }
 
 // ---------------------------------------------------------------------------
+// the cluster::experiment subtree: determinism + retry + wallclock scopes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn experiment_subtree_joins_the_determinism_scope() {
+    // a hash container anywhere in the harness would let process-random
+    // iteration order reach the campaign summary bytes
+    let hashy = r#"
+use std::collections::HashMap;
+fn tally() -> HashMap<u32, f64> { HashMap::new() }
+"#;
+    for path in ["src/cluster/experiment/model.rs", "src/cluster/experiment/deep/fixture.rs"] {
+        let found = lint_source(path, hashy);
+        assert!(
+            found.iter().all(|f| f.rule == NO_HASH_ITER_DETERMINISM) && !found.is_empty(),
+            "{path}: {found:?}"
+        );
+    }
+}
+
+#[test]
+fn experiment_subtree_must_not_read_the_wall_clock() {
+    // campaign numbers must be a pure function of (grid, seed): the
+    // harness is NOT on the wallclock boundary, unlike the live driver
+    let clocky = r#"
+fn stamp() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}
+"#;
+    let found = lint_source("src/cluster/experiment/model_fixture.rs", clocky);
+    assert_eq!(rules_of(&found), vec![NO_WALLCLOCK_CORE], "{found:?}");
+}
+
+#[test]
+fn experiment_subtree_event_loops_must_be_bounded() {
+    // an event/claim loop with no bound word spins a campaign forever
+    let spinny = r#"
+fn drain(mut backlog: u32) {
+    loop {
+        backlog = backlog.wrapping_add(1);
+        if backlog == 0 { break; }
+    }
+}
+"#;
+    let found = lint_source("src/cluster/experiment/replicate_fixture.rs", spinny);
+    assert_eq!(rules_of(&found), vec![NO_UNBOUNDED_RETRY], "{found:?}");
+
+    // the real shapes: step_budget / job_cap identifiers are the proof
+    let bounded = r#"
+fn run(mut step_budget: u64) -> bool {
+    loop {
+        if step_budget == 0 { return false; }
+        step_budget -= 1;
+    }
+}
+fn claim(next: &mut usize, job_cap: usize) {
+    while *next < job_cap {
+        *next += 1;
+    }
+}
+"#;
+    assert!(lint_source("src/cluster/experiment/model_fixture.rs", bounded).is_empty());
+}
+
+// ---------------------------------------------------------------------------
 // rule 7: obs-clock-discipline (src/obs/ minus the clock seam itself)
 // ---------------------------------------------------------------------------
 
